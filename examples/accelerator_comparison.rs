@@ -1,0 +1,64 @@
+//! Accelerator comparison: DIAMOND vs SIGMA / Flexagon-OP / Gustavson
+//! across benchmark families (the Fig. 10 / Fig. 11 workflow as a
+//! library example).
+//!
+//! ```sh
+//! cargo run --release --example accelerator_comparison [max_qubits]
+//! ```
+
+use diamond::bench_harness::workload::{run_suite, WorkloadResult};
+use diamond::bench_harness::{fmt_ratio, fmt_u64, Table};
+use diamond::ham::hamlib_suite;
+
+fn main() {
+    let max_qubits: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("max_qubits"))
+        .unwrap_or(10);
+
+    let specs: Vec<_> = hamlib_suite()
+        .into_iter()
+        .filter(|s| s.qubits <= max_qubits)
+        .collect();
+    println!(
+        "running {} workloads up to {max_qubits} qubits on 4 accelerator models...\n",
+        specs.len()
+    );
+    let results: Vec<WorkloadResult> = run_suite(specs);
+
+    let mut t = Table::new(&[
+        "Workload",
+        "DIAMOND cyc",
+        "vs SIGMA",
+        "vs OP",
+        "vs Gustavson",
+        "energy vs SIGMA",
+    ]);
+    for r in &results {
+        let e = r.sigma.energy_joules() / r.diamond.energy_joules();
+        t.row(vec![
+            r.spec.name(),
+            fmt_u64(r.diamond.total_cycles()),
+            fmt_ratio(r.speedup_vs(&r.sigma)),
+            fmt_ratio(r.speedup_vs(&r.outer)),
+            fmt_ratio(r.speedup_vs(&r.gustavson)),
+            fmt_ratio(e),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mean = |name: &str| {
+        results
+            .iter()
+            .map(|r| r.speedup_vs(r.baseline_by_name(name)))
+            .sum::<f64>()
+            / results.len() as f64
+    };
+    println!(
+        "mean speedups: {} vs SIGMA, {} vs OP, {} vs Gustavson",
+        fmt_ratio(mean("SIGMA")),
+        fmt_ratio(mean("OP")),
+        fmt_ratio(mean("Gustavson"))
+    );
+    println!("(paper: 10.26x, 33.58x, 53.15x — shape target, not absolute)");
+}

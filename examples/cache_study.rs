@@ -1,0 +1,57 @@
+//! Cache/blocking design-space study (extends Fig. 13 into an ablation).
+//!
+//! ```sh
+//! cargo run --release --example cache_study
+//! ```
+//!
+//! Sweeps cache geometry and blocking group size on a multi-diagonal
+//! workload and shows how the paper's 2-set x 2-way choice interacts
+//! with group-per-line blocking.
+
+use diamond::bench_harness::{fmt_u64, Table};
+use diamond::coordinator::Coordinator;
+use diamond::ham::{build, Family};
+use diamond::sim::SimConfig;
+use diamond::taylor;
+
+fn main() {
+    let h = build(Family::Heisenberg, 8).matrix;
+    let t = taylor::DEFAULT_T.min(taylor::normalized_t(&h));
+    let coord = Coordinator::oracle();
+
+    println!(
+        "Heisenberg-8: {} diagonals, dim {}\n",
+        h.nnzd(),
+        h.dim()
+    );
+
+    let mut table = Table::new(&[
+        "cache (sets x ways)",
+        "group size",
+        "hit rate",
+        "mem cycles",
+        "total cycles",
+    ]);
+    for (sets, ways) in [(1usize, 1usize), (2, 2), (4, 2), (8, 4)] {
+        for group in [4usize, 8, 16, 32] {
+            let cfg = SimConfig {
+                cache_sets: sets,
+                cache_ways: ways,
+                group_size: group,
+                max_rows: group,
+                max_cols: group,
+                ..SimConfig::default()
+            };
+            let rep = coord.evolve(&h, t, 4, cfg).expect("evolve");
+            table.row(vec![
+                format!("{sets} x {ways}"),
+                group.to_string(),
+                format!("{:.1}%", rep.total.mem.hit_rate() * 100.0),
+                fmt_u64(rep.total.mem.cycles),
+                fmt_u64(rep.total.total_cycles()),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("paper design point: 2-set x 2-way, one diagonal block group per line");
+}

@@ -1,0 +1,74 @@
+"""L1 — the Pallas diagonal-convolution kernel.
+
+The paper's DPE grid multiplies every diagonal of A against every diagonal
+of B, aligning indices with a per-DPE comparator. On TPU-shaped hardware
+(DESIGN.md §Hardware-Adaptation) the alignment is *static* once the offset
+pair is known, so the comparator becomes a dynamic slice into a pre-padded
+B plane and the grid becomes the Pallas program grid over (i, j) diagonal
+pairs:
+
+    P[i, j, r] = A[i, r] * Bpad[j, N + r + off_A[i]]
+
+with row-aligned diagonal planes (`A[i, r]` = value of A's i-th stored
+diagonal at matrix row `r`, zero outside its range; `Bpad` carries N zeros
+of padding either side so the shifted load never leaves the block).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+and the BlockSpec structure documents the intended VMEM schedule
+(one (1, N) A-plane + one (1, 3N) B-plane per program ≈ 16 KiB at N=1024,
+far under VMEM; the (i, j) grid double-buffers planes exactly like the
+paper's staggered diagonal feeding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _diag_conv_kernel(offs_ref, a_ref, b_ref, o_ref, *, n: int):
+    """One (i, j) program: align B's plane against A's and multiply."""
+    # offs_ref block is (1, 1): this program's A diagonal offset.
+    off = offs_ref[0, 0]
+    a = a_ref[0, :]  # (N,) row-aligned A diagonal
+    # B rows are indexed by k = r + off_A; the plane is padded by N on
+    # each side so start = N + off stays in [1, 2N-1].
+    b = b_ref[0, pl.ds(n + off, n)]
+    o_ref[0, 0, :] = a * b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def diag_conv(a_planes, a_offsets, b_padded, *, interpret: bool = True):
+    """Partial-product tensor of the diagonal convolution.
+
+    Args:
+      a_planes:  (dA, N) float32, row-aligned diagonals of A.
+      a_offsets: (dA, 1) int32, offset of each A diagonal.
+      b_padded:  (dB, 3N) float32, row-aligned diagonals of B padded with
+                 N zeros on both sides.
+
+    Returns:
+      (dA, dB, N) float32 with P[i, j] the aligned element-wise product —
+      the DPE grid's raw output before diagonal accumulation.
+    """
+    d_a, n = a_planes.shape
+    d_b, padded = b_padded.shape
+    assert padded == 3 * n, f"B must be padded to 3N, got {padded} vs N={n}"
+    assert a_offsets.shape == (d_a, 1)
+
+    return pl.pallas_call(
+        functools.partial(_diag_conv_kernel, n=n),
+        grid=(d_a, d_b),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 3 * n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_a, d_b, n), jnp.float32),
+        interpret=interpret,
+    )(a_offsets, a_planes, b_padded)

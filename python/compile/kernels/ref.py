@@ -1,0 +1,129 @@
+"""Pure-numpy / pure-jnp correctness oracles for the diagonal kernel.
+
+Two reference implementations:
+
+* :func:`diag_conv_ref` — the row-aligned plane formulation the Pallas
+  kernel implements (same shapes, float64 accumulation).
+* :func:`diag_mul_dict` — an offset-dict diagonal SpMSpM mirroring the
+  Rust ``linalg::diag_mul`` oracle, used to validate the plane math
+  end-to-end against an independent formulation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def diag_conv_ref(a_planes, a_offsets, b_padded):
+    """NumPy reference of the kernel contract (float64).
+
+    P[i, j, r] = A[i, r] * Bpad[j, N + r + off_A[i]].
+    """
+    a = np.asarray(a_planes, dtype=np.float64)
+    offs = np.asarray(a_offsets, dtype=np.int64).reshape(-1)
+    b = np.asarray(b_padded, dtype=np.float64)
+    d_a, n = a.shape
+    d_b = b.shape[0]
+    assert b.shape[1] == 3 * n
+    out = np.zeros((d_a, d_b, n), dtype=np.float64)
+    r = np.arange(n)
+    for i in range(d_a):
+        src = n + r + offs[i]
+        for j in range(d_b):
+            out[i, j] = a[i] * b[j, src]
+    return out
+
+
+def to_row_aligned(n: int, diags: dict[int, np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Offset-dict (DiaQ storage, k-indexed) → row-aligned planes.
+
+    Diagonal ``d`` element ``k`` sits at row ``k + max(0, -d)``.
+    Returns (planes (d, n) complex128, offsets (d, 1) int32) in ascending
+    offset order.
+    """
+    offs = sorted(diags.keys())
+    planes = np.zeros((max(len(offs), 1), n), dtype=np.complex128)
+    for i, d in enumerate(offs):
+        v = np.asarray(diags[d])
+        assert len(v) == n - abs(d), f"diag {d}: {len(v)} != {n - abs(d)}"
+        r0 = max(0, -d)
+        planes[i, r0 : r0 + len(v)] = v
+    out_offs = np.array(offs or [0], dtype=np.int32).reshape(-1, 1)
+    return planes, out_offs
+
+
+def from_row_aligned(n: int, planes: np.ndarray, offsets: np.ndarray) -> dict[int, np.ndarray]:
+    """Row-aligned planes → offset-dict, dropping all-zero diagonals.
+
+    Sentinel offsets (int64 min / anything with |d| >= n) are skipped —
+    the scatter matrix leaves surplus slots unused.
+    """
+    out: dict[int, np.ndarray] = {}
+    for plane, d in zip(planes, np.asarray(offsets).reshape(-1)):
+        d = int(d)
+        if abs(d) >= n:
+            continue
+        r0 = max(0, -d)
+        v = plane[r0 : r0 + (n - abs(d))]
+        if np.any(v != 0):
+            out[d] = out.get(d, np.zeros_like(v)) + v
+    return out
+
+
+def diag_mul_dict(
+    n: int, a: dict[int, np.ndarray], b: dict[int, np.ndarray]
+) -> dict[int, np.ndarray]:
+    """Offset-dict diagonal SpMSpM (the offset-sum rule, paper Eq. 8)."""
+    out: dict[int, np.ndarray] = {}
+    for da, va in a.items():
+        for db, vb in b.items():
+            dc = da + db
+            if abs(dc) >= n:
+                continue
+            lo = max(0, -da, -dc)
+            hi = min(n, n - da, n - dc)
+            if lo >= hi:
+                continue
+            ka = lo - max(0, -da)
+            kb = (lo + da) - max(0, -db)
+            kc = lo - max(0, -dc)
+            ln = hi - lo
+            dst = out.setdefault(dc, np.zeros(n - abs(dc), dtype=np.complex128))
+            dst[kc : kc + ln] += np.asarray(va)[ka : ka + ln] * np.asarray(vb)[kb : kb + ln]
+    return {d: v for d, v in out.items() if np.any(v != 0)}
+
+
+def pad_b(planes: np.ndarray) -> np.ndarray:
+    """Pad row-aligned B planes with N zeros each side (kernel contract)."""
+    d, n = planes.shape
+    out = np.zeros((d, 3 * n), dtype=planes.dtype)
+    out[:, n : 2 * n] = planes
+    return out
+
+
+SENTINEL_OFFSET = np.iinfo(np.int64).min
+
+
+def scatter_matrix(a_offsets, b_offsets) -> tuple[np.ndarray, np.ndarray]:
+    """One-hot scatter: product (i, j) → output diagonal slot.
+
+    Returns (S (dA·dB, dO) float32 with dO = dA·dB, out_offsets (dO,)).
+    Distinct offset sums get slots in ascending order; surplus slots stay
+    all-zero with sentinel offsets. This is the software image of the
+    paper's per-diagonal accumulators (the reduction is one matmul,
+    MXU-shaped on real hardware).
+    """
+    a_offs = np.asarray(a_offsets).reshape(-1)
+    b_offs = np.asarray(b_offsets).reshape(-1)
+    d_a, d_b = len(a_offs), len(b_offs)
+    sums = sorted({int(x + y) for x in a_offs for y in b_offs})
+    d_o = d_a * d_b
+    assert len(sums) <= d_o
+    slot = {s: k for k, s in enumerate(sums)}
+    s = np.zeros((d_o, d_o), dtype=np.float32)
+    for i, x in enumerate(a_offs):
+        for j, y in enumerate(b_offs):
+            s[i * d_b + j, slot[int(x + y)]] = 1.0
+    out_offsets = np.full(d_o, SENTINEL_OFFSET, dtype=np.int64)
+    out_offsets[: len(sums)] = sums
+    return s, out_offsets

@@ -1,0 +1,79 @@
+"""L2 — the JAX diagonal-SpMSpM compute graph (build-time only).
+
+Composes the L1 Pallas kernel into the complete complex diagonal
+multiplication the Rust runtime executes through PJRT:
+
+* four real kernel invocations implement the complex product
+  (re·re − im·im, re·im + im·re);
+* a one-hot **scatter matmul** reduces the (dA·dB, N) partial-product
+  planes onto output-diagonal slots — the software analog of the paper's
+  per-diagonal accumulators, expressed as a single matmul so the MXU
+  performs the reduction on real hardware.
+
+Offsets and the scatter matrix are runtime *inputs*: one AOT artifact per
+(N, dA, dB) shape bucket serves every offset pattern of that bucket.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.diag_conv import diag_conv
+
+
+def diag_spmspm_real(a_planes, a_offsets, b_padded, scatter, *, interpret=True):
+    """Real diagonal SpMSpM: kernel partial products + scatter reduction.
+
+    Shapes: a_planes (dA, N), a_offsets (dA, 1) int32, b_padded (dB, 3N),
+    scatter (dA·dB, dO). Returns (dO, N).
+    """
+    d_a, n = a_planes.shape
+    d_b = b_padded.shape[0]
+    p = diag_conv(a_planes, a_offsets, b_padded, interpret=interpret)
+    p_flat = p.reshape(d_a * d_b, n)
+    # The diagonal accumulators: one matmul, MXU-shaped.
+    return scatter.T @ p_flat
+
+
+def diag_spmspm_complex(
+    a_re, a_im, a_offsets, b_re_pad, b_im_pad, scatter, *, interpret=True
+):
+    """Complex diagonal SpMSpM from four real kernel passes.
+
+    Returns (c_re, c_im), each (dO, N).
+    """
+    p_rr = diag_conv(a_re, a_offsets, b_re_pad, interpret=interpret)
+    p_ii = diag_conv(a_im, a_offsets, b_im_pad, interpret=interpret)
+    p_ri = diag_conv(a_re, a_offsets, b_im_pad, interpret=interpret)
+    p_ir = diag_conv(a_im, a_offsets, b_re_pad, interpret=interpret)
+    d_a, _, n = p_rr.shape
+    d_b = p_rr.shape[1]
+    flat = lambda t: t.reshape(d_a * d_b, n)  # noqa: E731
+    c_re = scatter.T @ (flat(p_rr) - flat(p_ii))
+    c_im = scatter.T @ (flat(p_ri) + flat(p_ir))
+    return c_re, c_im
+
+
+def make_artifact_fn(interpret=True):
+    """The jitted entry point lowered by aot.py (tuple output)."""
+
+    def fn(a_re, a_im, a_offsets, b_re_pad, b_im_pad, scatter):
+        return diag_spmspm_complex(
+            a_re, a_im, a_offsets, b_re_pad, b_im_pad, scatter, interpret=interpret
+        )
+
+    return fn
+
+
+def artifact_arg_shapes(n: int, d_a: int, d_b: int):
+    """ShapeDtypeStructs of the artifact inputs for one bucket."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((d_a, n), f32),  # a_re
+        jax.ShapeDtypeStruct((d_a, n), f32),  # a_im
+        jax.ShapeDtypeStruct((d_a, 1), jnp.int32),  # a_offsets
+        jax.ShapeDtypeStruct((d_b, 3 * n), f32),  # b_re_pad
+        jax.ShapeDtypeStruct((d_b, 3 * n), f32),  # b_im_pad
+        jax.ShapeDtypeStruct((d_a * d_b, d_a * d_b), f32),  # scatter
+    )

@@ -1,0 +1,87 @@
+"""VMEM / MXU structure analyzer for the L1 kernel (DESIGN.md §Perf L1).
+
+Interpret-mode Pallas gives no TPU wallclock, so per the repo's perf
+method the kernel is optimized *structurally*: this module computes, for
+each artifact shape bucket, the per-program VMEM residency of the
+BlockSpec schedule and the MXU utilization of the scatter-matmul
+reduction. Run as:
+
+    python -m compile.vmem
+
+The numbers feed DESIGN.md §Perf and EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# TPU-class machine parameters (v4-lite-ish; ratios matter, not absolutes).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128  # systolic tile
+F32 = 4
+
+
+@dataclass
+class BucketProfile:
+    n: int
+    d_a: int
+    d_b: int
+    # Per-program (one (i, j) grid point) VMEM residency in bytes.
+    program_vmem: int
+    # Whole-bucket working set if everything stayed resident.
+    full_working_set: int
+    # Fraction of the scatter matmul's MACs that are useful (one-hot rows).
+    scatter_mxu_utilization: float
+    # Arithmetic intensity of the kernel stage (flops per HBM byte).
+    kernel_intensity: float
+
+    @property
+    def fits_vmem(self) -> bool:
+        # Double-buffered: two programs resident while one computes.
+        return 2 * self.program_vmem <= VMEM_BYTES
+
+
+def profile_bucket(n: int, d_a: int, d_b: int) -> BucketProfile:
+    # Per-program blocks (diag_conv BlockSpecs): one (1, N) A plane, one
+    # (1, 3N) padded B plane, one (1, 1, N) output pane, plus the offset.
+    program_vmem = (n + 3 * n + n + 1) * F32
+    d_o = d_a * d_b
+    full = (d_a * n + d_b * 3 * n + d_a * d_b * n + d_o * d_o) * F32
+
+    # Scatter matmul: (dO, dO) @ (dO, N). One-hot rows → exactly dO·N
+    # useful MACs out of dO·dO·N issued.
+    scatter_util = 1.0 / d_o if d_o > 0 else 0.0
+    # But the MXU tiles in 128×128 blocks; utilization of issued tiles:
+    tiles = max(1, (d_o + MXU_DIM - 1) // MXU_DIM)
+    scatter_util = max(scatter_util, 1.0 / (tiles * MXU_DIM))
+
+    # Kernel stage: N mults per program; bytes moved per program = vmem.
+    intensity = n / program_vmem
+
+    return BucketProfile(
+        n=n,
+        d_a=d_a,
+        d_b=d_b,
+        program_vmem=program_vmem,
+        full_working_set=full,
+        scatter_mxu_utilization=scatter_util,
+        kernel_intensity=intensity,
+    )
+
+
+def main() -> None:
+    from .aot import DEFAULT_BUCKETS
+
+    print(f"{'bucket':>24} {'prog VMEM':>10} {'2x fits?':>8} {'full set':>12} "
+          f"{'scatter util':>12} {'flops/B':>8}")
+    for n, d_a, d_b in DEFAULT_BUCKETS:
+        p = profile_bucket(n, d_a, d_b)
+        print(
+            f"  n={n:<6} {d_a:>2}x{d_b:<10} {p.program_vmem:>10,} "
+            f"{str(p.fits_vmem):>8} {p.full_working_set:>12,} "
+            f"{p.scatter_mxu_utilization:>12.4f} {p.kernel_intensity:>8.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""L2 model correctness: complex diag SpMSpM vs the offset-dict oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import diag_spmspm_complex, diag_spmspm_real
+
+
+def random_diag_dict(rng, n, max_diags, complex_vals=True):
+    d = rng.integers(1, max_diags + 1)
+    offs = rng.choice(np.arange(-(n - 1), n), size=d, replace=False)
+    out = {}
+    for off in offs:
+        ln = n - abs(int(off))
+        v = rng.standard_normal(ln)
+        if complex_vals:
+            v = v + 1j * rng.standard_normal(ln)
+        out[int(off)] = v
+    return out
+
+
+def run_complex(n, a_dict, b_dict):
+    """Drive the L2 graph the way the Rust runtime does."""
+    a_planes, a_offs = ref.to_row_aligned(n, a_dict)
+    b_planes, b_offs = ref.to_row_aligned(n, b_dict)
+    scatter, out_offs = ref.scatter_matrix(a_offs, b_offs)
+    c_re, c_im = diag_spmspm_complex(
+        a_planes.real.astype(np.float32),
+        a_planes.imag.astype(np.float32),
+        a_offs,
+        ref.pad_b(b_planes.real.astype(np.float32)),
+        ref.pad_b(b_planes.imag.astype(np.float32)),
+        scatter,
+    )
+    planes = np.asarray(c_re) + 1j * np.asarray(c_im)
+    return ref.from_row_aligned(n, planes, out_offs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_complex_spmspm_matches_dict_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    a = random_diag_dict(rng, n, 5)
+    b = random_diag_dict(rng, n, 5)
+    got = run_complex(n, a, b)
+    want = ref.diag_mul_dict(n, a, b)
+    assert set(got) == set(want), f"offsets {sorted(got)} vs {sorted(want)}"
+    for d in want:
+        np.testing.assert_allclose(got[d], want[d], rtol=1e-4, atol=1e-4)
+
+
+def test_identity_product():
+    n = 16
+    eye = {0: np.ones(n, dtype=np.complex128)}
+    got = run_complex(n, eye, eye)
+    assert list(got) == [0]
+    np.testing.assert_allclose(got[0], np.ones(n), atol=1e-6)
+
+
+def test_offset_sum_rule_single_diagonals():
+    n = 12
+    a = {3: np.arange(1, n - 2, dtype=np.complex128)}
+    b = {-5: (1j * np.ones(n - 5)).astype(np.complex128)}
+    got = run_complex(n, a, b)
+    want = ref.diag_mul_dict(n, a, b)
+    assert list(got) == [-2]
+    np.testing.assert_allclose(got[-2], want[-2], rtol=1e-5)
+
+
+def test_real_path_matches_dense_oracle():
+    n = 10
+    rng = np.random.default_rng(7)
+    a = random_diag_dict(rng, n, 4, complex_vals=False)
+    b = random_diag_dict(rng, n, 4, complex_vals=False)
+    a_planes, a_offs = ref.to_row_aligned(n, a)
+    b_planes, b_offs = ref.to_row_aligned(n, b)
+    scatter, out_offs = ref.scatter_matrix(a_offs, b_offs)
+    c = diag_spmspm_real(
+        a_planes.real.astype(np.float32),
+        a_offs,
+        ref.pad_b(b_planes.real.astype(np.float32)),
+        scatter,
+    )
+    got = ref.from_row_aligned(n, np.asarray(c).astype(np.complex128), out_offs)
+
+    # Dense oracle.
+    def densify(dct):
+        m = np.zeros((n, n))
+        for d, v in dct.items():
+            r0, c0 = max(0, -d), max(0, d)
+            for k in range(n - abs(d)):
+                m[r0 + k, c0 + k] = v[k].real
+        return m
+
+    dense = densify(a) @ densify(b)
+    got_dense = densify({d: v.real for d, v in got.items()})
+    np.testing.assert_allclose(got_dense, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_hermitian_product_of_hermitian_squares():
+    # H·H of a Hermitian matrix is Hermitian: (H²)† = H².
+    n = 8
+    h = {
+        0: np.arange(n, dtype=np.complex128),
+        2: (1 + 2j) * np.ones(n - 2),
+        -2: (1 - 2j) * np.ones(n - 2),
+    }
+    got = run_complex(n, h, h)
+    for d in got:
+        assert -d in got
+        np.testing.assert_allclose(got[d], np.conj(got[-d]), rtol=1e-5)

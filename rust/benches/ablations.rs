@@ -1,0 +1,5 @@
+//! Design-choice ablations (DESIGN.md experiment A1): feeding orders,
+//! blocking granularity, cache geometry.
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::ablations());
+}

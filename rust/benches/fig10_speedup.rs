@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 10 (performance vs SIGMA / Flexagon-OP /
+//! Flexagon-Gustavson across the seven quantum workloads).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::fig10().0);
+}

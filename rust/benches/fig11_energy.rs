@@ -1,0 +1,4 @@
+//! Regenerates paper Fig. 11 (energy vs SIGMA).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::fig11().0);
+}

@@ -1,0 +1,4 @@
+//! Regenerates paper Fig. 12 (storage saving across the Taylor chain).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::fig12());
+}

@@ -1,0 +1,4 @@
+//! Regenerates paper Fig. 13 (cache hit rate, 2-set 2-way cache).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::fig13().0);
+}

@@ -1,0 +1,4 @@
+//! Regenerates paper Fig. 6 (nonzero-diagonal growth, Heisenberg-10).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::fig6());
+}

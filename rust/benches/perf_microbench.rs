@@ -1,0 +1,82 @@
+//! Performance microbenchmarks of the simulator and runtime hot paths
+//! (feeds EXPERIMENTS.md §Perf). No criterion offline — a simple
+//! monotonic-clock harness with warmup and repetition.
+
+use diamond::format::DiagMatrix;
+use diamond::linalg::diag_mul;
+use diamond::num::Complex;
+use diamond::sim::grid::grid_spmspm;
+use diamond::sim::FeedOrder;
+use std::time::Instant;
+
+fn banded(n: usize, half_width: i64) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    for d in -half_width..=half_width {
+        let len = DiagMatrix::diag_len(n, d);
+        m.set_diag(d, (0..len).map(|k| Complex::new(0.1 + k as f64 * 1e-4, -0.2)).collect());
+    }
+    m
+}
+
+fn time<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
+    f(); // warmup
+    let t0 = Instant::now();
+    let mut units = 0u64;
+    for _ in 0..reps {
+        units += f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:44} {:>9.3} ms/rep  {:>10.1} Munits/s",
+        dt * 1e3 / reps as f64,
+        units as f64 / dt / 1e6
+    );
+}
+
+fn main() {
+    println!("perf microbench — units noted per case\n");
+
+    // L3 hot path 1: stepped grid simulation (DPE-cycle events/s).
+    for (n, w) in [(1024usize, 9i64), (4096, 13)] {
+        let a = banded(n, w);
+        let b = banded(n, w);
+        let d = (2 * w + 1) as u64;
+        time(
+            &format!("grid sim n={n} {d}x{d} (DPE-cycle events)"),
+            3,
+            || {
+                let res = grid_spmspm(&a, &b, FeedOrder::Ascending, FeedOrder::Descending);
+                res.stats.cycles * d * d
+            },
+        );
+    }
+
+    // L3 hot path 2: reference diagonal convolution (mult/s).
+    for n in [1024usize, 8192] {
+        let a = banded(n, 9);
+        let b = banded(n, 9);
+        time(&format!("diag_mul oracle n={n} (mults)"), 5, || {
+            let (_, s) = diamond::linalg::diag_mul_counted(&a, &b);
+            s.mults as u64
+        });
+    }
+
+    // L3 hot path 3: Pauli expansion (entries/s).
+    time("hamiltonian build heisenberg-12 (entries)", 3, || {
+        let h = diamond::ham::heisenberg::heisenberg(12, 1.0);
+        h.matrix.stored_elements() as u64
+    });
+
+    // Functional path: PJRT executable throughput (when artifacts exist).
+    if diamond::runtime::Runtime::default_dir().join("manifest.txt").exists() {
+        let engine = diamond::runtime::engine::DiagEngine::load_default().expect("engine");
+        let a = banded(1024, 7);
+        let b = banded(1024, 7);
+        time("pjrt spmspm n=1024 15x15 diags (mults)", 3, || {
+            let (_c, _s) = engine.spmspm(&a, &b).expect("exec");
+            diag_mul(&a, &b).stored_elements() as u64
+        });
+    } else {
+        println!("pjrt bench skipped (run `make artifacts`)");
+    }
+}

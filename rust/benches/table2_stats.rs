@@ -1,0 +1,4 @@
+//! Regenerates paper Table II (benchmark matrix statistics).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::table2());
+}

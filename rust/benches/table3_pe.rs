@@ -1,0 +1,4 @@
+//! Regenerates paper Table III (PE power/area evaluation).
+fn main() {
+    println!("{}", diamond::bench_harness::experiments::table3());
+}

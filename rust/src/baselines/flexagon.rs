@@ -1,0 +1,212 @@
+//! Flexagon (ASPLOS'23) Outer-Product and Gustavson dataflow cycle
+//! models, as used for the paper's comparison.
+//!
+//! Both walk CSR/CSC fibers. At >99% sparsity their costs are dominated
+//! by *fiber traversal latency*, not MACs:
+//!
+//! * **Outer-Product**: for each inner index `k`, fetch A's column `k`
+//!   and B's row `k` (sequential over `k`, so prefetch overlaps some
+//!   latency), produce `nnzA(:,k)·nnzB(k,:)` partial elements that must
+//!   be spilled and later merged — the partial-matrix traffic is the
+//!   classic OP weakness.
+//! * **Gustavson**: for each row `i`, every nonzero `A(i,k)` triggers a
+//!   *data-dependent* fetch of B row `k`; the indirection defeats
+//!   prefetching, so each visit pays (amortized) DRAM latency.
+
+use super::{Accelerator, BaselineReport};
+use crate::format::convert::{coo_to_diag, csr_to_coo, diag_to_csr};
+use crate::format::DiagMatrix;
+use crate::linalg::{gustavson_mul, outer_mul};
+
+/// Shared model constants (calibration notes in EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug)]
+pub struct FlexagonParams {
+    /// DRAM latency per fiber fetch (cycles), matching the DIAMOND memory
+    /// model's 50-cycle DRAM.
+    pub dram_latency: u64,
+    /// Outstanding-request overlap for *sequential* fiber walks (OP).
+    pub mlp_sequential: u64,
+    /// Outstanding-request overlap for *indirect* walks (Gustavson).
+    pub mlp_indirect: u64,
+    /// Merger throughput (elements per cycle).
+    pub merge_bw: u64,
+}
+
+impl Default for FlexagonParams {
+    fn default() -> Self {
+        FlexagonParams {
+            dram_latency: 50,
+            mlp_sequential: 2,
+            mlp_indirect: 1,
+            merge_bw: 1,
+        }
+    }
+}
+
+/// Flexagon configured for the Outer-Product dataflow.
+pub struct FlexagonOuter {
+    pub pes: usize,
+    pub params: FlexagonParams,
+}
+
+/// Flexagon configured for the Gustavson dataflow.
+pub struct FlexagonGustavson {
+    pub pes: usize,
+    pub params: FlexagonParams,
+}
+
+impl FlexagonOuter {
+    pub fn for_dim(n: usize) -> Self {
+        FlexagonOuter {
+            pes: n.min(1024),
+            params: FlexagonParams::default(),
+        }
+    }
+}
+
+impl FlexagonGustavson {
+    pub fn for_dim(n: usize) -> Self {
+        FlexagonGustavson {
+            pes: n.min(1024),
+            params: FlexagonParams::default(),
+        }
+    }
+}
+
+impl Accelerator for FlexagonOuter {
+    fn name(&self) -> &'static str {
+        "Flexagon-OP"
+    }
+
+    fn spmspm(&mut self, a: &DiagMatrix, b: &DiagMatrix) -> (DiagMatrix, BaselineReport) {
+        let n = a.dim();
+        let a_csr = diag_to_csr(a);
+        let a_t = a_csr.transpose(); // A by columns
+        let b_csr = diag_to_csr(b);
+        let (c_csr, stats) = outer_mul(&a_t, &b_csr);
+        let c = coo_to_diag(&csr_to_coo(&c_csr));
+
+        let p = &self.params;
+        // Fiber fetches: one A-column + one B-row per productive k,
+        // sequential over k → overlapped by mlp_sequential.
+        let productive_k =
+            (0..n).filter(|&k| a_t.row_nnz(k) > 0 && b_csr.row_nnz(k) > 0).count() as u64;
+        let fetch = (2 * productive_k * p.dram_latency).div_ceil(p.mlp_sequential);
+        // k-scan of the row-pointer arrays.
+        let scan = n as u64;
+        // Compute overlapped across PEs.
+        let mac = (stats.mults as u64).div_ceil(self.pes.max(1) as u64);
+        // Partial-matrix spill + merge sweep (write every partial, read it
+        // back, merge).
+        let partials = stats.writes as u64;
+        let merge = (2 * partials + stats.merge_adds as u64).div_ceil(p.merge_bw);
+
+        let report = BaselineReport {
+            cycles: scan + fetch + mac + merge,
+            mults: stats.mults as u64,
+            dram_elements: a_csr.nnz() as u64
+                + b_csr.nnz() as u64
+                + 2 * partials
+                + c_csr.nnz() as u64,
+            pe_count: self.pes,
+        };
+        (c, report)
+    }
+}
+
+impl Accelerator for FlexagonGustavson {
+    fn name(&self) -> &'static str {
+        "Flexagon-Gustavson"
+    }
+
+    fn spmspm(&mut self, a: &DiagMatrix, b: &DiagMatrix) -> (DiagMatrix, BaselineReport) {
+        let n = a.dim();
+        let a_csr = diag_to_csr(a);
+        let b_csr = diag_to_csr(b);
+        let (c_csr, stats) = gustavson_mul(&a_csr, &b_csr);
+        let c = coo_to_diag(&csr_to_coo(&c_csr));
+
+        let p = &self.params;
+        // Row scan + A-row fetches (sequential) …
+        let a_rows = (0..n).filter(|&i| a_csr.row_nnz(i) > 0).count() as u64;
+        let seq_fetch = (a_rows * p.dram_latency).div_ceil(p.mlp_sequential);
+        // … and data-dependent B-row fetches (indirect, poorly overlapped).
+        let b_visits: u64 = (0..n).map(|i| a_csr.row_nnz(i) as u64).sum();
+        let ind_fetch = (b_visits * p.dram_latency).div_ceil(p.mlp_indirect);
+        let scan = n as u64;
+        let mac = (stats.mults as u64).div_ceil(self.pes.max(1) as u64);
+        let merge = (stats.merge_adds as u64 + c_csr.nnz() as u64).div_ceil(p.merge_bw);
+
+        let report = BaselineReport {
+            cycles: scan + seq_fetch + ind_fetch + mac + merge,
+            mults: stats.mults as u64,
+            dram_elements: a_csr.nnz() as u64
+                + b_visits // re-reads of B rows
+                + c_csr.nnz() as u64,
+            pe_count: self.pes,
+        };
+        (c, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::diag_mul;
+    use crate::num::Complex;
+    use crate::testutil::XorShift64;
+
+    fn random_diag(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+        let mut m = DiagMatrix::zeros(n);
+        for _ in 0..rng.gen_range(1, max_diags + 1) {
+            let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+            let len = DiagMatrix::diag_len(n, d);
+            m.set_diag(
+                d,
+                (0..len).map(|_| Complex::real(rng.gen_f64() - 0.5)).collect(),
+            );
+        }
+        m
+    }
+
+    #[test]
+    fn both_dataflows_match_oracle() {
+        let mut rng = XorShift64::new(5);
+        let a = random_diag(&mut rng, 20, 4);
+        let b = random_diag(&mut rng, 20, 4);
+        let mut oracle = diag_mul(&a, &b);
+        oracle.prune(1e-13);
+        for (name, c) in [
+            ("op", FlexagonOuter::for_dim(20).spmspm(&a, &b).0),
+            ("gus", FlexagonGustavson::for_dim(20).spmspm(&a, &b).0),
+        ] {
+            let mut got = c;
+            got.prune(1e-13);
+            assert!(got.max_abs_diff(&oracle) < 1e-12, "{name}");
+        }
+    }
+
+    #[test]
+    fn gustavson_pays_for_indirection() {
+        // On a diagonal-structured operand pair, the Gustavson walk's
+        // per-row indirection should cost more than OP's sequential walk
+        // (the paper's Fig. 10 ordering: Gustavson slowest).
+        let h = crate::ham::heisenberg::heisenberg(8, 1.0).matrix;
+        let (_, op) = FlexagonOuter::for_dim(256).spmspm(&h, &h);
+        let (_, gus) = FlexagonGustavson::for_dim(256).spmspm(&h, &h);
+        assert!(
+            gus.cycles > op.cycles,
+            "gustavson {} !> op {}",
+            gus.cycles,
+            op.cycles
+        );
+    }
+
+    #[test]
+    fn op_pays_partial_traffic() {
+        let h = crate::ham::heisenberg::heisenberg(8, 1.0).matrix;
+        let (_, op) = FlexagonOuter::for_dim(256).spmspm(&h, &h);
+        // partial elements spilled = mults; traffic ≥ 2× that
+        assert!(op.dram_elements as f64 >= 2.0 * op.mults as f64);
+    }
+}

@@ -1,0 +1,109 @@
+//! Regenerates every table and figure of the paper's evaluation section
+//! (the per-experiment index lives in DESIGN.md §4).
+//!
+//! Each function returns the formatted report it prints, so the bench
+//! binaries, the CLI and the tests share one implementation.
+
+pub mod experiments;
+pub mod workload;
+
+use std::fmt::Write as _;
+
+/// Simple fixed-width table formatter.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:w$} ", c, w = widths[i]);
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.header);
+        for (i, w) in widths.iter().enumerate() {
+            let _ = write!(out, "|{:-<w$}", "", w = w + 2);
+            if i == cols - 1 {
+                out.push_str("|\n");
+            }
+        }
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// `12345678` → `12,345,678` (readability in cycle columns).
+pub fn fmt_u64(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// `1234.5678` with engineering-style precision.
+pub fn fmt_ratio(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}×")
+    } else if v >= 10.0 {
+        format!("{v:.1}×")
+    } else {
+        format!("{v:.2}×")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "cycles"]);
+        t.row(vec!["a".into(), "10".into()]);
+        t.row(vec!["long-name".into(), "1,000".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | cycles |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fmt_u64(1234567), "1,234,567");
+        assert_eq!(fmt_u64(42), "42");
+        assert_eq!(fmt_ratio(127.03), "127×");
+        assert_eq!(fmt_ratio(10.26), "10.3×");
+        assert_eq!(fmt_ratio(1.4), "1.40×");
+    }
+}

@@ -1,0 +1,161 @@
+//! Shared workload driver: one benchmark Hamiltonian through the full
+//! Taylor chain on DIAMOND and on each baseline, with the paper's
+//! time-step and PE-budget conventions.
+
+use crate::baselines::flexagon::{FlexagonGustavson, FlexagonOuter};
+use crate::baselines::sigma::Sigma;
+use crate::baselines::BaselineReport;
+use crate::coordinator::{BaselineEvolution, Coordinator, EvolutionReport};
+use crate::ham::{build, BenchSpec};
+use crate::sim::SimConfig;
+use crate::taylor;
+
+/// Evolution time-step convention (EXPERIMENTS.md §Table II): the fixed
+/// short step, normalized when the one-norm is large (QUBO penalties).
+pub fn bench_t(h: &crate::format::DiagMatrix) -> f64 {
+    taylor::DEFAULT_T.min(taylor::normalized_t(h))
+}
+
+/// Full result of one workload on all four accelerators.
+pub struct WorkloadResult {
+    pub spec: BenchSpec,
+    pub dim: usize,
+    pub nnzd: usize,
+    pub nnze: usize,
+    pub iters: usize,
+    pub diamond: EvolutionReport,
+    pub sigma: BaselineEvolution,
+    pub outer: BaselineEvolution,
+    pub gustavson: BaselineEvolution,
+}
+
+impl WorkloadResult {
+    pub fn speedup_vs(&self, baseline: &BaselineEvolution) -> f64 {
+        baseline.total.cycles as f64 / self.diamond.total_cycles() as f64
+    }
+
+    pub fn baseline_by_name(&self, name: &str) -> &BaselineEvolution {
+        match name {
+            "SIGMA" => &self.sigma,
+            "OP" => &self.outer,
+            "Gustavson" => &self.gustavson,
+            other => panic!("unknown baseline {other}"),
+        }
+    }
+}
+
+/// Run one benchmark spec end to end (timing models; oracle values).
+pub fn run_workload(spec: BenchSpec) -> WorkloadResult {
+    let ham = build(spec.family, spec.qubits);
+    let h = &ham.matrix;
+    let dim = h.dim();
+    let t = bench_t(h);
+    let iters = taylor::iters_for(h, t, taylor::DEFAULT_TOL);
+
+    let cfg = SimConfig::for_workload(dim, h.nnzd(), h.nnzd());
+    let coord = Coordinator::oracle();
+    let diamond = coord.evolve(h, t, iters, cfg).expect("oracle evolve");
+
+    let mut sigma = Sigma::for_dim(dim);
+    let mut outer = FlexagonOuter::for_dim(dim);
+    let mut gustavson = FlexagonGustavson::for_dim(dim);
+    let sigma_ev = Coordinator::evolve_baseline(h, t, iters, &mut sigma);
+    let outer_ev = Coordinator::evolve_baseline(h, t, iters, &mut outer);
+    let gustavson_ev = Coordinator::evolve_baseline(h, t, iters, &mut gustavson);
+
+    WorkloadResult {
+        dim,
+        nnzd: h.nnzd(),
+        nnze: h.nnz(),
+        iters,
+        spec,
+        diamond,
+        sigma: sigma_ev,
+        outer: outer_ev,
+        gustavson: gustavson_ev,
+    }
+}
+
+/// Run a suite in parallel across worker threads.
+pub fn run_suite(specs: Vec<BenchSpec>) -> Vec<WorkloadResult> {
+    crate::coordinator::pool::parallel_map(
+        specs,
+        crate::coordinator::pool::default_workers(),
+        run_workload,
+    )
+}
+
+/// Aggregate: geometric-mean speedup of DIAMOND over a baseline.
+pub fn geomean_speedup(results: &[WorkloadResult], baseline: &str) -> f64 {
+    let logs: f64 = results
+        .iter()
+        .map(|r| r.speedup_vs(r.baseline_by_name(baseline)).ln())
+        .sum();
+    (logs / results.len() as f64).exp()
+}
+
+/// Aggregate used by the paper's headline ("average speedup"):
+/// arithmetic mean of per-workload ratios.
+pub fn mean_speedup(results: &[WorkloadResult], baseline: &str) -> f64 {
+    results
+        .iter()
+        .map(|r| r.speedup_vs(r.baseline_by_name(baseline)))
+        .sum::<f64>()
+        / results.len() as f64
+}
+
+/// Baseline totals are filled per step; convenience accessor.
+pub fn baseline_cycles(ev: &BaselineEvolution) -> u64 {
+    ev.total.cycles
+}
+
+#[allow(dead_code)]
+fn _assert_traits(r: BaselineReport) -> BaselineReport {
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ham::Family;
+
+    fn spec(family: Family, qubits: usize) -> BenchSpec {
+        BenchSpec {
+            family,
+            qubits,
+            paper_nnze: None,
+            paper_nnzd: None,
+            paper_iter: None,
+        }
+    }
+
+    #[test]
+    fn small_workload_end_to_end() {
+        let r = run_workload(spec(Family::Tfim, 5));
+        assert!(r.diamond.total_cycles() > 0);
+        assert!(r.sigma.total.cycles > 0);
+        assert!(r.speedup_vs(&r.sigma) > 0.0);
+        assert_eq!(r.dim, 32);
+    }
+
+    #[test]
+    fn single_diagonal_workload_wins_big() {
+        // Max-Cut: DIAMOND's compact grid vs SIGMA's full-bitmap scan.
+        let r = run_workload(spec(Family::MaxCut, 8));
+        assert!(
+            r.speedup_vs(&r.sigma) > 2.0,
+            "speedup {}",
+            r.speedup_vs(&r.sigma)
+        );
+        // Gustavson must be the slowest (paper Fig. 10 ordering).
+        assert!(r.gustavson.total.cycles >= r.outer.total.cycles);
+    }
+
+    #[test]
+    fn suite_runs_in_parallel() {
+        let out = run_suite(vec![spec(Family::Tfim, 4), spec(Family::MaxCut, 4)]);
+        assert_eq!(out.len(), 2);
+        assert!(geomean_speedup(&out, "SIGMA") > 0.0);
+        assert!(mean_speedup(&out, "Gustavson") > 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! The `diamond` CLI (hand-rolled parsing; offline build has no clap).
+//!
+//! ```text
+//! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations
+//! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
+//! diamond bench-all
+//! ```
+
+use crate::bench_harness::experiments;
+use crate::coordinator::Coordinator;
+use crate::ham::Family;
+use crate::sim::SimConfig;
+
+fn parse_family(s: &str) -> Option<Family> {
+    let k = s.to_ascii_lowercase();
+    Some(match k.as_str() {
+        "maxcut" | "max-cut" => Family::MaxCut,
+        "heisenberg" => Family::Heisenberg,
+        "tsp" => Family::Tsp,
+        "tfim" => Family::Tfim,
+        "fermi-hubbard" | "fermihubbard" => Family::FermiHubbard,
+        "qmaxcut" | "q-max-cut" => Family::QMaxCut,
+        "bose-hubbard" | "bosehubbard" => Family::BoseHubbard,
+        _ => return None,
+    })
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn cmd_evolve(args: &[String]) -> Result<(), String> {
+    let family = flag_value(args, "--family")
+        .and_then(|f| parse_family(&f))
+        .ok_or("evolve requires --family <maxcut|heisenberg|tsp|tfim|fermi-hubbard|qmaxcut|bose-hubbard>")?;
+    let qubits: usize = flag_value(args, "--qubits")
+        .ok_or("evolve requires --qubits <n>")?
+        .parse()
+        .map_err(|e| format!("--qubits: {e}"))?;
+    let iters: usize = flag_value(args, "--iters")
+        .map(|v| v.parse().map_err(|e| format!("--iters: {e}")))
+        .transpose()?
+        .unwrap_or(0);
+    let use_pjrt = args.iter().any(|a| a == "--pjrt");
+
+    let ham = crate::ham::build(family, qubits);
+    let h = &ham.matrix;
+    let t: f64 = flag_value(args, "--t")
+        .map(|v| v.parse().map_err(|e| format!("--t: {e}")))
+        .transpose()?
+        .unwrap_or_else(|| crate::bench_harness::workload::bench_t(h));
+
+    let coord = if use_pjrt {
+        Coordinator::with_pjrt().map_err(|e| format!("loading PJRT runtime: {e:#}"))?
+    } else {
+        Coordinator::oracle()
+    };
+    let cfg = SimConfig::for_workload(h.dim(), h.nnzd(), h.nnzd());
+    let rep = coord
+        .evolve(h, t, iters, cfg)
+        .map_err(|e| format!("evolve: {e:#}"))?;
+
+    println!(
+        "{}: dim {}, {} diagonals, t={t:.4}, {} Taylor iterations [{} values]",
+        ham.name,
+        h.dim(),
+        h.nnzd(),
+        rep.iters,
+        coord.functional.name(),
+    );
+    println!(
+        "cycles: {} grid + {} memory = {} total",
+        crate::bench_harness::fmt_u64(rep.total.grid.cycles),
+        crate::bench_harness::fmt_u64(rep.total.mem.cycles),
+        crate::bench_harness::fmt_u64(rep.total_cycles()),
+    );
+    println!(
+        "energy: {:.3e} J | mults {} | cache hit rate {:.1}% | peak active PEs {}",
+        rep.energy_joules(),
+        crate::bench_harness::fmt_u64(rep.total.grid.mults),
+        rep.total.mem.hit_rate() * 100.0,
+        rep.total.peak_active_pes,
+    );
+    for s in &rep.steps {
+        println!(
+            "  iter {}: term {} diagonals, sum {} diagonals, storage saving {:.1}%",
+            s.k,
+            s.term_nnzd,
+            s.sum_nnzd,
+            s.sum_storage_saving * 100.0
+        );
+    }
+    if rep.engine.calls > 0 {
+        println!(
+            "pjrt: {} calls on bucket n={} d={} ({:.1} ms execute)",
+            rep.engine.calls,
+            rep.engine.bucket_n,
+            rep.engine.bucket_d,
+            rep.engine.exec_nanos as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn run_with_args(args: Vec<String>) -> i32 {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[] } else { &args[1..] };
+    let result: Result<(), String> = match cmd {
+        "table2" => {
+            println!("{}", experiments::table2());
+            Ok(())
+        }
+        "table3" => {
+            println!("{}", experiments::table3());
+            Ok(())
+        }
+        "fig6" => {
+            println!("{}", experiments::fig6());
+            Ok(())
+        }
+        "fig10" => {
+            println!("{}", experiments::fig10().0);
+            Ok(())
+        }
+        "fig11" => {
+            println!("{}", experiments::fig11().0);
+            Ok(())
+        }
+        "fig12" => {
+            println!("{}", experiments::fig12());
+            Ok(())
+        }
+        "fig13" => {
+            println!("{}", experiments::fig13().0);
+            Ok(())
+        }
+        "ablations" => {
+            println!("{}", experiments::ablations());
+            Ok(())
+        }
+        "bench-all" => {
+            println!("{}", experiments::table2());
+            println!("{}", experiments::table3());
+            println!("{}", experiments::fig6());
+            println!("{}", experiments::fig10().0);
+            println!("{}", experiments::fig11().0);
+            println!("{}", experiments::fig12());
+            println!("{}", experiments::fig13().0);
+            println!("{}", experiments::ablations());
+            Ok(())
+        }
+        "evolve" => cmd_evolve(rest),
+        "help" | "--help" | "-h" => {
+            println!(
+                "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
+                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
+                 evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]"
+            );
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}` (try `diamond help`)")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            2
+        }
+    }
+}
+
+/// Binary entry.
+pub fn run() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(run_with_args(args));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_parsing() {
+        assert_eq!(parse_family("Heisenberg"), Some(Family::Heisenberg));
+        assert_eq!(parse_family("max-cut"), Some(Family::MaxCut));
+        assert_eq!(parse_family("bogus"), None);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run_with_args(vec!["nope".into()]), 2);
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(run_with_args(vec!["help".into()]), 0);
+    }
+}

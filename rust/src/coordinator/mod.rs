@@ -1,0 +1,303 @@
+//! L3 coordinator: the system layer that owns process topology, routing
+//! and state for Hamiltonian-simulation jobs.
+//!
+//! The coordinator pairs two resources per job:
+//!
+//! * a **timing device** — the cycle-accurate [`DiamondDevice`]
+//!   (or a baseline accelerator model) that decides *how long* and *how
+//!   much energy* each SpMSpM costs;
+//! * the **functional engine** — the PJRT runtime executing the
+//!   AOT-compiled diagonal-convolution artifacts, producing the *values*.
+//!
+//! The Taylor evolution driver chains SpMSpMs (`term_k = term_{k−1}·A/k`),
+//! keeping matrix content ids stable so the device's cache model sees the
+//! same reuse pattern the paper describes (Sec. IV-D4). A scoped worker
+//! pool fans benchmark suites out across threads.
+
+pub mod pool;
+pub mod server;
+
+use crate::baselines::{Accelerator, BaselineReport};
+use crate::format::DiagMatrix;
+use crate::num::ONE;
+use crate::runtime::engine::{DiagEngine, EngineStats};
+use crate::sim::{DiamondDevice, SimConfig, SimReport};
+use crate::taylor;
+use anyhow::Result;
+
+/// Where SpMSpM *values* come from.
+pub enum FunctionalMode {
+    /// AOT artifacts through PJRT (the production path).
+    Pjrt(Box<DiagEngine>),
+    /// The in-process reference oracle (`linalg::diag_mul`) — used when
+    /// artifacts are unavailable (pure-timing benchmarks) and as the
+    /// cross-check in tests.
+    Oracle,
+}
+
+impl FunctionalMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FunctionalMode::Pjrt(_) => "pjrt",
+            FunctionalMode::Oracle => "oracle",
+        }
+    }
+}
+
+/// Per-Taylor-step record (feeds Figs. 6 and 12 and the energy model).
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    pub k: usize,
+    pub term_nnzd: usize,
+    pub sum_nnzd: usize,
+    pub sum_storage_saving: f64,
+    pub sim: SimReport,
+}
+
+/// Full evolution result.
+pub struct EvolutionReport {
+    /// The operator approximation of `exp(−iHt)`.
+    pub op: DiagMatrix,
+    pub steps: Vec<StepReport>,
+    /// Accumulated device activity.
+    pub total: SimReport,
+    pub engine: EngineStats,
+    pub iters: usize,
+    pub t: f64,
+}
+
+impl EvolutionReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.total.total_cycles()
+    }
+
+    pub fn energy_joules(&self) -> f64 {
+        crate::energy::diamond_energy(&self.total)
+    }
+}
+
+/// Baseline evolution result (timing model only; values from the
+/// baseline's own functional path).
+pub struct BaselineEvolution {
+    pub total: BaselineReport,
+    pub per_step: Vec<BaselineReport>,
+}
+
+impl BaselineEvolution {
+    pub fn energy_joules(&self) -> f64 {
+        crate::energy::baseline_energy(&self.total)
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub functional: FunctionalMode,
+}
+
+impl Coordinator {
+    /// Coordinator with the PJRT functional engine (requires artifacts).
+    pub fn with_pjrt() -> Result<Self> {
+        Ok(Coordinator {
+            functional: FunctionalMode::Pjrt(Box::new(DiagEngine::load_default()?)),
+        })
+    }
+
+    /// Timing-only coordinator (oracle functional path).
+    pub fn oracle() -> Self {
+        Coordinator {
+            functional: FunctionalMode::Oracle,
+        }
+    }
+
+    /// Compute values for `A·B` through the configured functional path.
+    pub fn values(&self, a: &DiagMatrix, b: &DiagMatrix) -> Result<(DiagMatrix, EngineStats)> {
+        match &self.functional {
+            FunctionalMode::Pjrt(engine) => engine.spmspm(a, b),
+            FunctionalMode::Oracle => {
+                let c = crate::linalg::diag_mul(a, b);
+                Ok((c, EngineStats::default()))
+            }
+        }
+    }
+
+    /// One coordinated SpMSpM: timing from the device, values from the
+    /// functional path.
+    pub fn spmspm(
+        &self,
+        device: &mut DiamondDevice,
+        a: &DiagMatrix,
+        b: &DiagMatrix,
+    ) -> Result<(DiagMatrix, SimReport)> {
+        let (ia, ib, ic) = (
+            device.register_matrix(),
+            device.register_matrix(),
+            device.register_matrix(),
+        );
+        let (_timed_c, report) = device.spmspm(a, a_id_of(ia), b, a_id_of(ib), a_id_of(ic));
+        let (c, _) = self.values(a, b)?;
+        Ok((c, report))
+    }
+
+    /// Taylor-series Hamiltonian evolution on a DIAMOND device.
+    ///
+    /// `iters == 0` derives the depth from the one-norm (Table II "Iter").
+    pub fn evolve(
+        &self,
+        h: &DiagMatrix,
+        t: f64,
+        iters: usize,
+        cfg: SimConfig,
+    ) -> Result<EvolutionReport> {
+        let n = h.dim();
+        let iters = if iters == 0 {
+            taylor::iters_for(h, t, taylor::DEFAULT_TOL)
+        } else {
+            iters
+        };
+        let a = h.scaled(-crate::num::I * t);
+
+        let mut device = DiamondDevice::new(cfg);
+        let a_id = device.register_matrix();
+        let mut term = a.clone();
+        let mut term_id = a_id;
+        let mut sum = DiagMatrix::identity(n);
+        sum.add_assign_scaled(&term, ONE);
+
+        let mut steps = Vec::with_capacity(iters);
+        let mut total = SimReport::default();
+        let mut engine_total = EngineStats::default();
+
+        // k = 1 is `A` itself; chained SpMSpMs start at k = 2.
+        steps.push(StepReport {
+            k: 1,
+            term_nnzd: term.nnzd(),
+            sum_nnzd: sum.nnzd(),
+            sum_storage_saving: sum.storage_saving(),
+            sim: SimReport::default(),
+        });
+
+        for k in 2..=iters {
+            let c_id = device.register_matrix();
+            // Timing: the device executes term · A with stable ids so the
+            // cache sees the algorithmic reuse (B = A every step).
+            let (_timed, report) = device.spmspm(&term, term_id, &a, a_id, c_id);
+            total.accumulate(&report);
+
+            // Values: the functional path.
+            let (mut next, es) = self.values(&term, &a)?;
+            engine_total.calls += es.calls;
+            engine_total.exec_nanos += es.exec_nanos;
+            engine_total.bucket_n = es.bucket_n.max(engine_total.bucket_n);
+            engine_total.bucket_d = es.bucket_d.max(engine_total.bucket_d);
+
+            next = next.scaled(ONE / k as f64);
+            next.prune(crate::format::diag::ZERO_TOL);
+            term = next;
+            term_id = c_id;
+            sum.add_assign_scaled(&term, ONE);
+
+            steps.push(StepReport {
+                k,
+                term_nnzd: term.nnzd(),
+                sum_nnzd: sum.nnzd(),
+                sum_storage_saving: sum.storage_saving(),
+                sim: report,
+            });
+        }
+
+        Ok(EvolutionReport {
+            op: sum,
+            steps,
+            total,
+            engine: engine_total,
+            iters,
+            t,
+        })
+    }
+
+    /// The same Taylor chain on a baseline accelerator model.
+    pub fn evolve_baseline(
+        h: &DiagMatrix,
+        t: f64,
+        iters: usize,
+        accel: &mut dyn Accelerator,
+    ) -> BaselineEvolution {
+        let iters = if iters == 0 {
+            taylor::iters_for(h, t, taylor::DEFAULT_TOL)
+        } else {
+            iters
+        };
+        let a = h.scaled(-crate::num::I * t);
+        let mut term = a.clone();
+        let mut total = BaselineReport::default();
+        let mut per_step = Vec::new();
+        for k in 2..=iters {
+            let (mut next, report) = accel.spmspm(&term, &a);
+            total.accumulate(&report);
+            per_step.push(report);
+            next = next.scaled(ONE / k as f64);
+            next.prune(crate::format::diag::ZERO_TOL);
+            term = next;
+        }
+        BaselineEvolution { total, per_step }
+    }
+}
+
+// DiamondDevice takes MatrixId directly; tiny helper for readability.
+fn a_id_of(id: crate::sim::device::MatrixId) -> crate::sim::device::MatrixId {
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::convert::diag_to_dense;
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn oracle_evolution_matches_taylor_module() {
+        let h = crate::ham::tfim::tfim(4, 1.0, 0.8).matrix;
+        let t = 0.05;
+        let coord = Coordinator::oracle();
+        let rep = coord.evolve(&h, t, 5, SimConfig::default()).unwrap();
+        let oracle = taylor::expm_diag(&h, t, 5).op;
+        assert!(
+            diag_to_dense(&rep.op).max_abs_diff(&diag_to_dense(&oracle)) < 1e-12
+        );
+        assert_eq!(rep.steps.len(), 5);
+        assert!(rep.total.grid.mults > 0);
+    }
+
+    #[test]
+    fn evolution_tracks_diagonal_growth() {
+        let h = crate::ham::heisenberg::heisenberg(5, 1.0).matrix;
+        let coord = Coordinator::oracle();
+        let rep = coord.evolve(&h, 0.05, 4, SimConfig::default()).unwrap();
+        // Fig. 6: the running term's diagonal count grows.
+        assert!(rep.steps.last().unwrap().term_nnzd >= rep.steps[0].term_nnzd);
+        // Fig. 12: storage saving decreases as diagonals accumulate.
+        assert!(
+            rep.steps.last().unwrap().sum_storage_saving
+                <= rep.steps[0].sum_storage_saving + 1e-12
+        );
+    }
+
+    #[test]
+    fn baseline_evolution_runs_all_steps() {
+        let h = crate::ham::tfim::tfim(4, 1.0, 1.0).matrix;
+        let mut sigma = crate::baselines::sigma::Sigma::for_dim(16);
+        let rep = Coordinator::evolve_baseline(&h, 0.05, 4, &mut sigma);
+        assert_eq!(rep.per_step.len(), 3); // k = 2..=4
+        assert!(rep.total.cycles > 0);
+        assert!(rep.energy_joules() > 0.0);
+    }
+
+    #[test]
+    fn iter_zero_uses_one_norm() {
+        let h = crate::ham::tfim::tfim(4, 1.0, 1.0).matrix;
+        let coord = Coordinator::oracle();
+        let t = taylor::normalized_t(&h);
+        let rep = coord.evolve(&h, t, 0, SimConfig::default()).unwrap();
+        assert_eq!(rep.iters, taylor::iters_for(&h, t, taylor::DEFAULT_TOL));
+    }
+}

@@ -1,0 +1,123 @@
+//! Energy and area model (paper Sec. V-A3, Table III).
+//!
+//! The paper synthesizes the DPE and the STONNE PE in 28 nm at 700 MHz
+//! (Synopsys Design Compiler) and reports Table III:
+//!
+//! | component          | power (mW)        | area (µm²)        |
+//! |--------------------|-------------------|-------------------|
+//! | DPE                | 4.3877 (130.77%)  | 7 585.20 (105.10%)|
+//! | — multiplier       | 1.6354            |                   |
+//! | — comparator       | 0.3247            |                   |
+//! | — FIFOs            | 0.7568            |                   |
+//! | — control & others | 1.6708            |                   |
+//! | STONNE PE          | 3.3554 (100%)     | 7 214.26 (100%)   |
+//!
+//! We cannot re-run ASIC synthesis offline, so the published numbers are
+//! taken as model constants (substitution documented in DESIGN.md).
+//! Power at 700 MHz converts to per-cycle energy; the energy of a run is
+//! `active-PE-cycles × E_pe + memory traffic × E_mem`. DIAMOND activates
+//! only the DPEs its diagonal structure needs (selective activation);
+//! SIGMA/Flexagon switch their full provisioned array every cycle — the
+//! source of the paper's Fig. 11 gap.
+
+/// Clock frequency both designs are synthesized for (Hz).
+pub const CLOCK_HZ: f64 = 700e6;
+
+/// Table III powers (W).
+pub const DPE_POWER_W: f64 = 4.3877e-3;
+pub const DPE_MULT_POWER_W: f64 = 1.6354e-3;
+pub const DPE_COMPARATOR_POWER_W: f64 = 0.3247e-3;
+pub const DPE_FIFO_POWER_W: f64 = 0.7568e-3;
+pub const DPE_CTRL_POWER_W: f64 = 1.6708e-3;
+pub const STONNE_PE_POWER_W: f64 = 3.3554e-3;
+
+/// Table III areas (µm²).
+pub const DPE_AREA_UM2: f64 = 7585.20;
+pub const STONNE_PE_AREA_UM2: f64 = 7214.26;
+
+/// Memory energy constants (standard CMOS estimates at 28 nm; only the
+/// *ratio* between on-chip and DRAM access matters for Fig. 11's shape).
+pub const CACHE_ACCESS_PJ: f64 = 1.0;
+/// Energy per 8-byte element moved to/from DRAM.
+pub const DRAM_ELEMENT_PJ: f64 = 50.0;
+
+/// Per-cycle energy of one active DPE (J).
+pub fn dpe_cycle_energy() -> f64 {
+    DPE_POWER_W / CLOCK_HZ
+}
+
+/// Per-cycle energy of one STONNE PE (J).
+pub fn stonne_pe_cycle_energy() -> f64 {
+    STONNE_PE_POWER_W / CLOCK_HZ
+}
+
+/// Energy of a DIAMOND execution (J).
+///
+/// `pe_cycle_product` is Σ(active PEs × task cycles) — idle provisioned
+/// DPEs are clock-gated (selective activation, Sec. V-B2); memory energy
+/// covers cache accesses and DRAM elements.
+pub fn diamond_energy(report: &crate::sim::SimReport) -> f64 {
+    let pe = report.pe_cycle_product as f64 * dpe_cycle_energy();
+    let cache = report.mem.accesses() as f64 * CACHE_ACCESS_PJ * 1e-12;
+    let dram = report.mem.dram_elements as f64 * DRAM_ELEMENT_PJ * 1e-12;
+    pe + cache + dram
+}
+
+/// Energy of a baseline execution (J): the whole provisioned array
+/// switches every cycle (bitmap scans / fiber walks keep the metadata and
+/// distribution networks live even when MACs idle).
+pub fn baseline_energy(report: &crate::baselines::BaselineReport) -> f64 {
+    let pe = report.pe_count as f64 * report.cycles as f64 * stonne_pe_cycle_energy();
+    let dram = report.dram_elements as f64 * DRAM_ELEMENT_PJ * 1e-12;
+    pe + dram
+}
+
+/// Table III relative rows (for the table3 bench).
+pub fn dpe_power_overhead() -> f64 {
+    DPE_POWER_W / STONNE_PE_POWER_W
+}
+
+pub fn dpe_area_overhead() -> f64 {
+    DPE_AREA_UM2 / STONNE_PE_AREA_UM2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_overheads() {
+        // Paper: 1.30× power, 1.05× area overhead for the DPE.
+        assert!((dpe_power_overhead() - 1.3077).abs() < 1e-3);
+        assert!((dpe_area_overhead() - 1.0510).abs() < 5e-4);
+    }
+
+    #[test]
+    fn component_powers_sum_to_dpe() {
+        let sum = DPE_MULT_POWER_W + DPE_COMPARATOR_POWER_W + DPE_FIFO_POWER_W + DPE_CTRL_POWER_W;
+        assert!((sum - DPE_POWER_W).abs() < 1e-7, "sum {sum}");
+    }
+
+    #[test]
+    fn per_cycle_energies() {
+        // 4.3877 mW / 700 MHz ≈ 6.27 pJ per active DPE cycle.
+        assert!((dpe_cycle_energy() * 1e12 - 6.268).abs() < 0.01);
+        assert!((stonne_pe_cycle_energy() * 1e12 - 4.793).abs() < 0.01);
+    }
+
+    #[test]
+    fn selective_activation_saves_energy() {
+        // A 4-PE DIAMOND run vs a 1024-PE baseline of equal cycle count
+        // must be orders of magnitude cheaper.
+        let mut rep = crate::sim::SimReport::default();
+        rep.pe_cycle_product = 4 * 1000;
+        let base = crate::baselines::BaselineReport {
+            cycles: 1000,
+            mults: 0,
+            dram_elements: 0,
+            pe_count: 1024,
+        };
+        let ratio = baseline_energy(&base) / diamond_energy(&rep);
+        assert!(ratio > 100.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Conversions between the storage formats.
+
+use super::{CooMatrix, CsrMatrix, DenseMatrix, DiagMatrix};
+use crate::format::diag::ZERO_TOL;
+use crate::num::Complex;
+
+/// Diagonal → COO (only numerically nonzero entries are emitted).
+pub fn diag_to_coo(m: &DiagMatrix) -> CooMatrix {
+    let n = m.dim();
+    let mut out = CooMatrix::new(n, n);
+    for (d, vals) in m.iter() {
+        for (k, &v) in vals.iter().enumerate() {
+            if !v.is_zero(ZERO_TOL) {
+                out.push(DiagMatrix::row_of(d, k), DiagMatrix::col_of(d, k), v);
+            }
+        }
+    }
+    out
+}
+
+/// COO → diagonal (duplicates are summed).
+pub fn coo_to_diag(m: &CooMatrix) -> DiagMatrix {
+    assert_eq!(m.rows, m.cols, "diagonal format requires a square matrix");
+    let mut out = DiagMatrix::zeros(m.rows);
+    for &(r, c, v) in &m.entries {
+        out.add_at(r, c, v);
+    }
+    out
+}
+
+/// COO → CSR (coalesces in the process).
+pub fn coo_to_csr(m: &CooMatrix) -> CsrMatrix {
+    let mut sorted = m.clone();
+    sorted.coalesce();
+    CsrMatrix::from_sorted_triplets(m.rows, m.cols, &sorted.entries)
+}
+
+/// Diagonal → CSR.
+pub fn diag_to_csr(m: &DiagMatrix) -> CsrMatrix {
+    coo_to_csr(&diag_to_coo(m))
+}
+
+/// Diagonal → dense.
+pub fn diag_to_dense(m: &DiagMatrix) -> DenseMatrix {
+    let n = m.dim();
+    let mut out = DenseMatrix::zeros(n, n);
+    for (d, vals) in m.iter() {
+        for (k, &v) in vals.iter().enumerate() {
+            out[(DiagMatrix::row_of(d, k), DiagMatrix::col_of(d, k))] += v;
+        }
+    }
+    out
+}
+
+/// Dense → diagonal (entries below `tol` dropped; all-zero diagonals are
+/// not materialized).
+pub fn dense_to_diag(m: &DenseMatrix, tol: f64) -> DiagMatrix {
+    assert_eq!(m.rows, m.cols);
+    let mut out = DiagMatrix::zeros(m.rows);
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            let v = m.get(r, c);
+            if !v.is_zero(tol) {
+                out.add_at(r, c, v);
+            }
+        }
+    }
+    out
+}
+
+/// CSR → dense.
+pub fn csr_to_dense(m: &CsrMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let (cols, vals) = m.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            out[(r, c)] += v;
+        }
+    }
+    out
+}
+
+/// CSR → COO.
+pub fn csr_to_coo(m: &CsrMatrix) -> CooMatrix {
+    let mut out = CooMatrix::new(m.rows, m.cols);
+    for r in 0..m.rows {
+        let (cols, vals) = m.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            out.push(r, c, v);
+        }
+    }
+    out
+}
+
+/// Dense complex vector pair split for the PJRT f32 plane marshalling.
+pub fn split_planes_f32(vals: &[Complex]) -> (Vec<f32>, Vec<f32>) {
+    (
+        vals.iter().map(|z| z.re as f32).collect(),
+        vals.iter().map(|z| z.im as f32).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::{Complex, I, ONE};
+    use crate::testutil::XorShift64;
+
+    fn random_diag(n: usize, ndiags: usize, seed: u64) -> DiagMatrix {
+        let mut rng = XorShift64::new(seed);
+        let mut m = DiagMatrix::zeros(n);
+        for _ in 0..ndiags {
+            let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+            let len = DiagMatrix::diag_len(n, d);
+            let vals: Vec<Complex> = (0..len)
+                .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                .collect();
+            m.set_diag(d, vals);
+        }
+        m
+    }
+
+    #[test]
+    fn diag_dense_roundtrip() {
+        for seed in 0..8 {
+            let m = random_diag(9, 4, 1000 + seed);
+            let d = diag_to_dense(&m);
+            let back = dense_to_diag(&d, 0.0);
+            assert!(m.max_abs_diff(&back) < 1e-15, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn diag_csr_dense_agree() {
+        let m = random_diag(8, 3, 42);
+        let via_csr = csr_to_dense(&diag_to_csr(&m));
+        let direct = diag_to_dense(&m);
+        assert!(via_csr.max_abs_diff(&direct) < 1e-15);
+    }
+
+    #[test]
+    fn coo_roundtrip_sums_duplicates() {
+        let mut coo = CooMatrix::new(4, 4);
+        coo.push(1, 2, ONE);
+        coo.push(1, 2, I);
+        let d = coo_to_diag(&coo);
+        assert_eq!(d.get(1, 2), Complex::new(1.0, 1.0));
+        let back = diag_to_coo(&d);
+        assert_eq!(back.nnz(), 1);
+    }
+
+    #[test]
+    fn split_planes() {
+        let (re, im) = split_planes_f32(&[ONE, I, Complex::new(2.0, -3.0)]);
+        assert_eq!(re, vec![1.0, 0.0, 2.0]);
+        assert_eq!(im, vec![0.0, 1.0, -3.0]);
+    }
+}

@@ -1,0 +1,61 @@
+//! COO (triplet) format — the neutral interchange format.
+
+use crate::num::Complex;
+
+/// Coordinate-format sparse matrix: unordered `(row, col, value)` triplets.
+#[derive(Clone, Debug, Default)]
+pub struct CooMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, Complex)>,
+}
+
+impl CooMatrix {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        CooMatrix {
+            rows,
+            cols,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: Complex) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.entries.push((r, c, v));
+    }
+
+    /// Sort by (row, col) and merge duplicate coordinates by summation.
+    pub fn coalesce(&mut self) {
+        self.entries.sort_by_key(|&(r, c, _)| (r, c));
+        let mut out: Vec<(usize, usize, Complex)> = Vec::with_capacity(self.entries.len());
+        for &(r, c, v) in &self.entries {
+            match out.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => out.push((r, c, v)),
+            }
+        }
+        self.entries = out;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::{Complex, ONE};
+
+    #[test]
+    fn coalesce_merges_duplicates() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push(1, 2, ONE);
+        m.push(0, 0, Complex::real(2.0));
+        m.push(1, 2, Complex::real(3.0));
+        m.coalesce();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.entries[0], (0, 0, Complex::real(2.0)));
+        assert_eq!(m.entries[1], (1, 2, Complex::real(4.0)));
+    }
+}

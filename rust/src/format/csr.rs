@@ -1,0 +1,111 @@
+//! CSR / CSC formats used by the baseline accelerator models
+//! (Gustavson walks A rows / B rows; outer-product walks A columns).
+
+use crate::num::Complex;
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug, Default)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` row pointers into `col_idx` / `values`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<Complex>,
+}
+
+impl CsrMatrix {
+    /// Build from coalesced, (row, col)-sorted triplets.
+    pub fn from_sorted_triplets(
+        rows: usize,
+        cols: usize,
+        entries: &[(usize, usize, Complex)],
+    ) -> Self {
+        let mut row_ptr = vec![0usize; rows + 1];
+        for &(r, _, _) in entries {
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr,
+            col_idx: entries.iter().map(|&(_, c, _)| c).collect(),
+            values: entries.iter().map(|&(_, _, v)| v).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Column indices + values of row `r`.
+    pub fn row(&self, r: usize) -> (&[usize], &[Complex]) {
+        let (lo, hi) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        (&self.col_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Nonzero count of row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Transpose (yields the CSC view of the original as a CSR of Aᵀ).
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut triplets: Vec<(usize, usize, Complex)> = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                triplets.push((c, r, v));
+            }
+        }
+        triplets.sort_by_key(|&(r, c, _)| (r, c));
+        CsrMatrix::from_sorted_triplets(self.cols, self.rows, &triplets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::{Complex, ONE};
+
+    fn sample() -> CsrMatrix {
+        // [[1 0 2]
+        //  [0 0 0]
+        //  [0 3 0]]
+        CsrMatrix::from_sorted_triplets(
+            3,
+            3,
+            &[
+                (0, 0, ONE),
+                (0, 2, Complex::real(2.0)),
+                (2, 1, Complex::real(3.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn row_access() {
+        let m = sample();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals[1], Complex::real(2.0));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.row_nnz(2), 1);
+        let (cols, _) = t.row(2);
+        assert_eq!(cols, &[0]);
+        let back = t.transpose();
+        assert_eq!(back.row_ptr, m.row_ptr);
+        assert_eq!(back.col_idx, m.col_idx);
+    }
+}

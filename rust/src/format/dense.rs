@@ -1,0 +1,152 @@
+//! Dense row-major matrix — the ground-truth oracle format.
+
+use crate::num::{Complex, ZERO};
+
+/// A dense row-major `rows × cols` complex matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Complex>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix {
+            rows,
+            cols,
+            data: vec![ZERO; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = crate::num::ONE;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<Complex>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c));
+        DenseMatrix {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> Complex {
+        self.data[r * self.cols + c]
+    }
+
+    /// Dense matrix product (O(n³) oracle).
+    pub fn matmul(&self, rhs: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, rhs.rows);
+        let mut out = DenseMatrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a.is_zero(0.0) {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out[(i, j)] += a * rhs.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[Complex]) -> Vec<Complex> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| (0..self.cols).map(|j| self.get(i, j) * x[j]).sum())
+            .collect()
+    }
+
+    /// Kronecker product `self ⊗ rhs`.
+    pub fn kron(&self, rhs: &DenseMatrix) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows * rhs.rows, self.cols * rhs.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let a = self.get(i, j);
+                if a.is_zero(0.0) {
+                    continue;
+                }
+                for p in 0..rhs.rows {
+                    for q in 0..rhs.cols {
+                        out[(i * rhs.rows + p, j * rhs.cols + q)] = a * rhs.get(p, q);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, rhs: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        self.data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMatrix {
+    type Output = Complex;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &Complex {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMatrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut Complex {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::{Complex, I, ONE};
+
+    #[test]
+    fn matmul_small() {
+        let a = DenseMatrix::from_rows(vec![
+            vec![ONE, Complex::real(2.0)],
+            vec![Complex::real(3.0), Complex::real(4.0)],
+        ]);
+        let b = DenseMatrix::identity(2);
+        assert_eq!(a.matmul(&b), a);
+        let sq = a.matmul(&a);
+        assert_eq!(sq.get(0, 0), Complex::real(7.0));
+        assert_eq!(sq.get(1, 1), Complex::real(22.0));
+    }
+
+    #[test]
+    fn kron_dimensions_and_values() {
+        let x = DenseMatrix::from_rows(vec![vec![crate::num::ZERO, ONE], vec![ONE, crate::num::ZERO]]);
+        let i2 = DenseMatrix::identity(2);
+        let xi = x.kron(&i2);
+        assert_eq!((xi.rows, xi.cols), (4, 4));
+        // X ⊗ I swaps the high bit: |00> -> |10>
+        assert_eq!(xi.get(2, 0), ONE);
+        assert_eq!(xi.get(0, 2), ONE);
+        assert_eq!(xi.get(0, 0), crate::num::ZERO);
+    }
+
+    #[test]
+    fn matvec_with_phase() {
+        let m = DenseMatrix::from_rows(vec![vec![I, crate::num::ZERO], vec![crate::num::ZERO, I]]);
+        let y = m.matvec(&[ONE, I]);
+        assert_eq!(y[0], I);
+        assert_eq!(y[1], I * I);
+    }
+}

@@ -1,0 +1,17 @@
+//! Sparse matrix storage formats.
+//!
+//! [`diag`] is the DiaQ-style diagonal format the paper builds on
+//! (offset-indexed, unpadded diagonals — Fig. 1 of the paper). [`csr`],
+//! [`coo`] and [`dense`] are conventional formats used by the baseline
+//! accelerators and as correctness oracles; [`convert`] moves between them.
+
+pub mod convert;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod diag;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;
+pub use diag::DiagMatrix;

@@ -1,0 +1,247 @@
+//! Bose-Hubbard model with truncated local Fock spaces, binary- or
+//! Gray-encoded onto qubits.
+//!
+//! ```text
+//!   H = −t Σ_i (b†_i b_{i+1} + h.c.) + (U/2) Σ_i n_i (n_i − 1) − μ Σ_i n_i
+//! ```
+//!
+//! Each site keeps `L = 2^bits` boson levels; a site's occupation is
+//! stored in `bits` qubits. The encoding determines the diagonal
+//! structure: standard binary encoding gives `b†` a single local
+//! sub-diagonal (global offsets `±3·4^i` for 2-bit sites), while **Gray
+//! encoding** spreads the raising operator over several local offsets,
+//! yielding the richer multi-diagonal structure HamLib's instances show
+//! (Table II: Bose-Hubbard-8 → 19 NNZD). We default to Gray.
+
+use super::Hamiltonian;
+use crate::format::{DenseMatrix, DiagMatrix};
+use crate::num::{Complex, ZERO};
+
+/// Occupation-to-code mapping for a site register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    /// occupation n ↔ code n.
+    Binary,
+    /// occupation n ↔ code n ^ (n >> 1) (reflected Gray code).
+    Gray,
+}
+
+impl Encoding {
+    #[inline]
+    fn code(self, n: usize) -> usize {
+        match self {
+            Encoding::Binary => n,
+            Encoding::Gray => n ^ (n >> 1),
+        }
+    }
+}
+
+/// Dense `L×L` matrix of an operator in the *encoded* local basis.
+fn encoded_site_op<F: Fn(usize, usize) -> Complex>(
+    levels: usize,
+    enc: Encoding,
+    f: F,
+) -> DenseMatrix {
+    let mut m = DenseMatrix::zeros(levels, levels);
+    for r in 0..levels {
+        for c in 0..levels {
+            let v = f(r, c);
+            if !v.is_zero(0.0) {
+                m[(enc.code(r), enc.code(c))] = v;
+            }
+        }
+    }
+    m
+}
+
+/// Raising operator `b†` on a truncated `levels`-dimensional Fock space.
+fn bdag(levels: usize, enc: Encoding) -> DenseMatrix {
+    encoded_site_op(levels, enc, |r, c| {
+        if r == c + 1 {
+            Complex::real(((c + 1) as f64).sqrt())
+        } else {
+            ZERO
+        }
+    })
+}
+
+/// Number operator `n`.
+fn num_op(levels: usize, enc: Encoding) -> DenseMatrix {
+    encoded_site_op(levels, enc, |r, c| {
+        if r == c {
+            Complex::real(r as f64)
+        } else {
+            ZERO
+        }
+    })
+}
+
+/// `n(n−1)` operator.
+fn num_num_minus_one(levels: usize, enc: Encoding) -> DenseMatrix {
+    encoded_site_op(levels, enc, |r, c| {
+        if r == c {
+            Complex::real((r * r.saturating_sub(1)) as f64)
+        } else {
+            ZERO
+        }
+    })
+}
+
+/// Accumulate `coeff · op_a(site_a) ⊗ op_b(site_b)` (identity elsewhere)
+/// into `m`. `bits` = qubits per site; site 0 holds the least-significant
+/// digit. `site_b == usize::MAX` means a one-site term.
+fn add_site_product(
+    m: &mut DiagMatrix,
+    n_sites: usize,
+    bits: usize,
+    site_a: usize,
+    op_a: &DenseMatrix,
+    site_b: usize,
+    op_b: Option<&DenseMatrix>,
+    coeff: Complex,
+) {
+    let levels = 1usize << bits;
+    let dim = 1usize << (n_sites * bits);
+    let mask = levels - 1;
+    for col in 0..dim {
+        let ca = (col >> (site_a * bits)) & mask;
+        let cb = if op_b.is_some() {
+            (col >> (site_b * bits)) & mask
+        } else {
+            0
+        };
+        for ra in 0..levels {
+            let va = op_a.get(ra, ca);
+            if va.is_zero(0.0) {
+                continue;
+            }
+            match op_b {
+                None => {
+                    let row = (col & !(mask << (site_a * bits))) | (ra << (site_a * bits));
+                    m.add_at(row, col, va * coeff);
+                }
+                Some(ob) => {
+                    for rb in 0..levels {
+                        let vb = ob.get(rb, cb);
+                        if vb.is_zero(0.0) {
+                            continue;
+                        }
+                        let row = (col
+                            & !(mask << (site_a * bits))
+                            & !(mask << (site_b * bits)))
+                            | (ra << (site_a * bits))
+                            | (rb << (site_b * bits));
+                        m.add_at(row, col, va * vb * coeff);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build the Bose-Hubbard chain.
+///
+/// `n_qubits` must be divisible by `bits_per_site`; the chain has
+/// `n_qubits / bits_per_site` sites of `2^bits_per_site` levels.
+pub fn bose_hubbard_with(
+    n_qubits: usize,
+    bits_per_site: usize,
+    t: f64,
+    u: f64,
+    mu: f64,
+    enc: Encoding,
+) -> Hamiltonian {
+    assert!(n_qubits % bits_per_site == 0);
+    let n_sites = n_qubits / bits_per_site;
+    let levels = 1usize << bits_per_site;
+    let dim = 1usize << n_qubits;
+    let mut m = DiagMatrix::zeros(dim);
+
+    let bd = bdag(levels, enc);
+    let b = {
+        // annihilation = b†ᵀ (real entries)
+        let mut t_ = DenseMatrix::zeros(levels, levels);
+        for r in 0..levels {
+            for c in 0..levels {
+                t_[(r, c)] = bd.get(c, r);
+            }
+        }
+        t_
+    };
+    let nop = num_op(levels, enc);
+    let nnm1 = num_num_minus_one(levels, enc);
+
+    for s in 0..n_sites - 1 {
+        // −t (b†_s b_{s+1} + b_s b†_{s+1})
+        add_site_product(&mut m, n_sites, bits_per_site, s, &bd, s + 1, Some(&b), Complex::real(-t));
+        add_site_product(&mut m, n_sites, bits_per_site, s, &b, s + 1, Some(&bd), Complex::real(-t));
+    }
+    for s in 0..n_sites {
+        add_site_product(&mut m, n_sites, bits_per_site, s, &nnm1, usize::MAX, None, Complex::real(0.5 * u));
+        add_site_product(&mut m, n_sites, bits_per_site, s, &nop, usize::MAX, None, Complex::real(-mu));
+    }
+    m.prune(crate::format::diag::ZERO_TOL);
+    Hamiltonian::new(format!("Bose-Hubbard-{n_qubits}"), n_qubits, m)
+}
+
+/// Registry instance: 2 bits (4 levels) per site, Gray encoding.
+pub fn bose_hubbard(n_qubits: usize) -> Hamiltonian {
+    bose_hubbard_with(n_qubits, 2, 1.0, 2.0, 0.5, Encoding::Gray)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::convert::diag_to_dense;
+
+    #[test]
+    fn hermitian_both_encodings() {
+        for enc in [Encoding::Binary, Encoding::Gray] {
+            let h = bose_hubbard_with(6, 2, 1.0, 2.0, 0.5, enc);
+            assert!(h.matrix.is_hermitian(1e-12), "{enc:?}");
+        }
+    }
+
+    #[test]
+    fn encodings_are_similar_matrices() {
+        // Same spectrum ⇒ same trace and same Frobenius norm.
+        let hb = bose_hubbard_with(4, 2, 1.0, 2.0, 0.5, Encoding::Binary);
+        let hg = bose_hubbard_with(4, 2, 1.0, 2.0, 0.5, Encoding::Gray);
+        let db = diag_to_dense(&hb.matrix);
+        let dg = diag_to_dense(&hg.matrix);
+        let tr = |m: &crate::format::DenseMatrix| -> Complex {
+            (0..m.rows).map(|i| m.get(i, i)).sum()
+        };
+        assert!(tr(&db).approx_eq(tr(&dg), 1e-9));
+        let frob = |m: &crate::format::DenseMatrix| -> f64 {
+            m.data.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt()
+        };
+        assert!((frob(&db) - frob(&dg)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gray_encoding_spreads_diagonals() {
+        let hb = bose_hubbard_with(8, 2, 1.0, 2.0, 0.5, Encoding::Binary);
+        let hg = bose_hubbard_with(8, 2, 1.0, 2.0, 0.5, Encoding::Gray);
+        // Binary: hops land on ±3·4^s only → 7 diagonals for 4 sites.
+        assert_eq!(hb.matrix.nnzd(), 7);
+        // Gray must expose strictly more structure (HamLib-like).
+        assert!(hg.matrix.nnzd() > hb.matrix.nnzd());
+    }
+
+    #[test]
+    fn zero_hopping_is_diagonal() {
+        let h = bose_hubbard_with(6, 2, 0.0, 2.0, 0.5, Encoding::Gray);
+        assert_eq!(h.matrix.offsets(), vec![0]);
+    }
+
+    #[test]
+    fn interaction_energy_of_fock_states() {
+        // t=0, μ=0: E = (U/2) Σ n_s (n_s − 1). Binary code = occupation.
+        let h = bose_hubbard_with(4, 2, 0.0, 2.0, 0.0, Encoding::Binary);
+        // site0 = 3 bosons, site1 = 0: E = 1.0 * 3*2 = 6
+        assert!(h.matrix.get(0b0011, 0b0011).approx_eq(Complex::real(6.0), 1e-12));
+        // both sites 2 bosons: E = 2·(2·1) = 4? (U/2)(2·1)·2 = 4? per site 1.0*2 = 2, ×2 sites = 4
+        assert!(h.matrix.get(0b1010, 0b1010).approx_eq(Complex::real(4.0), 1e-12));
+    }
+}

@@ -1,0 +1,132 @@
+//! Fermi-Hubbard model on an open chain, Jordan–Wigner transformed.
+//!
+//! ```text
+//!   H = −t Σ_{s,σ} (c†_{s,σ} c_{s+1,σ} + h.c.)  +  U Σ_s n_{s,↑} n_{s,↓}
+//! ```
+//!
+//! Qubit layout is spin-major (up chain on qubits `0..S`, down chain on
+//! `S..2S`), so every hop is between *adjacent* qubits and the JW string
+//! vanishes:
+//!
+//! ```text
+//!   c†_p c_{p+1} + h.c.  =  (X_p X_{p+1} + Y_p Y_{p+1}) / 2
+//! ```
+//!
+//! Each hop contributes the offset pair `±2^p`; with `S` sites the model
+//! has `2(S−1)` hops → `4(S−1)` off-diagonals plus the interaction
+//! diagonal: Fermi-Hubbard-8 (S=4) → 13 NNZD, -10 (S=5) → 17 NNZD,
+//! matching Table II exactly.
+
+use super::Hamiltonian;
+use crate::num::Complex;
+use crate::pauli::{Pauli, PauliSum, PauliTerm};
+
+/// Build the Fermi-Hubbard chain on `n_qubits = 2·sites` qubits.
+pub fn fermi_hubbard(n_qubits: usize, t: f64, u: f64) -> Hamiltonian {
+    assert!(n_qubits % 2 == 0, "spin-major layout needs an even qubit count");
+    let sites = n_qubits / 2;
+    let mut sum = PauliSum::new(n_qubits);
+
+    // Hopping within each spin chain: qubits (p, p+1), skipping the
+    // boundary between the up and down chains.
+    for spin in 0..2usize {
+        for s in 0..sites - 1 {
+            let p = spin * sites + s;
+            for pauli in [Pauli::X, Pauli::Y] {
+                sum.push(PauliTerm::pair(
+                    n_qubits,
+                    p,
+                    pauli,
+                    p + 1,
+                    pauli,
+                    Complex::real(-0.5 * t),
+                ));
+            }
+        }
+    }
+
+    // On-site interaction: U n_up n_down = U/4 (I − Z_u)(I − Z_d).
+    for s in 0..sites {
+        let (qu, qd) = (s, sites + s);
+        sum.push(PauliTerm::from_ops(
+            &vec![Pauli::I; n_qubits],
+            Complex::real(0.25 * u),
+        ));
+        sum.push(PauliTerm::single(n_qubits, qu, Pauli::Z, Complex::real(-0.25 * u)));
+        sum.push(PauliTerm::single(n_qubits, qd, Pauli::Z, Complex::real(-0.25 * u)));
+        sum.push(PauliTerm::pair(
+            n_qubits,
+            qu,
+            Pauli::Z,
+            qd,
+            Pauli::Z,
+            Complex::real(0.25 * u),
+        ));
+    }
+
+    Hamiltonian::new(
+        format!("Fermi-Hubbard-{n_qubits}"),
+        n_qubits,
+        sum.to_diag_matrix(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_row_fermi_hubbard8() {
+        // Paper Table II: Fermi-Hubbard-8 → dim 256, NNZD 13.
+        let h = fermi_hubbard(8, 1.0, 4.0);
+        assert_eq!(h.dim(), 256);
+        assert_eq!(h.matrix.nnzd(), 13);
+        assert!(h.matrix.is_hermitian(1e-12));
+    }
+
+    #[test]
+    fn table2_row_fermi_hubbard10() {
+        // Paper Table II: Fermi-Hubbard-10 → dim 1024, NNZD 17.
+        let h = fermi_hubbard(10, 1.0, 4.0);
+        assert_eq!(h.matrix.nnzd(), 17);
+    }
+
+    #[test]
+    fn hop_offsets_within_chains() {
+        let h = fermi_hubbard(8, 1.0, 0.0);
+        // S=4: hops at qubits (0,1),(1,2),(2,3) and (4,5),(5,6),(6,7)
+        // → offsets ±{1,2,4, 16,32,64}; U=0 leaves no main diagonal.
+        let mut offs = h.matrix.offsets();
+        offs.retain(|&d| d != 0);
+        let expect: Vec<i64> = vec![-64, -32, -16, -4, -2, -1, 1, 2, 4, 16, 32, 64];
+        assert_eq!(offs, expect);
+    }
+
+    #[test]
+    fn interaction_counts_double_occupancy() {
+        // t=0: H is diagonal, eigenvalue U per doubly-occupied site.
+        let h = fermi_hubbard(4, 0.0, 4.0); // 2 sites
+        // basis b = (down1 down0 up1 up0); site 0 doubly occupied: b=0b0101
+        assert!(h.matrix.get(0b0101, 0b0101).approx_eq(Complex::real(4.0), 1e-12));
+        assert!(h.matrix.get(0b1111, 0b1111).approx_eq(Complex::real(8.0), 1e-12));
+        assert!(h.matrix.get(0b0011, 0b0011).approx_eq(Complex::real(0.0), 1e-12));
+    }
+
+    #[test]
+    fn hopping_conserves_particle_number() {
+        let h = fermi_hubbard(6, 1.0, 2.0);
+        for (d, vals) in h.matrix.iter() {
+            if d == 0 {
+                continue;
+            }
+            for (k, v) in vals.iter().enumerate() {
+                if v.is_zero(1e-14) {
+                    continue;
+                }
+                let r = crate::format::DiagMatrix::row_of(d, k) as u64;
+                let c = crate::format::DiagMatrix::col_of(d, k) as u64;
+                assert_eq!(r.count_ones(), c.count_ones(), "hop changed N");
+            }
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Max-Cut problem Hamiltonian (binary optimization domain):
+//!
+//! ```text
+//!   H = Σ_{(u,v) ∈ E} w_uv · (I − Z_u Z_v) / 2
+//! ```
+//!
+//! Entirely diagonal in the computational basis — the single-diagonal
+//! extreme the paper highlights (Table II: NNZD = 1, and DIAMOND runs it
+//! on a compact 1×4 pipelined grid).
+//!
+//! HamLib instances come from a graph collection; we substitute a seeded
+//! Erdős–Rényi graph, which preserves the structural property the
+//! accelerator sees (one dense principal diagonal).
+
+use super::Hamiltonian;
+use crate::format::DiagMatrix;
+use crate::num::Complex;
+use crate::testutil::XorShift64;
+
+/// A weighted undirected graph on `n` vertices.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    pub edges: Vec<(usize, usize, f64)>,
+}
+
+impl Graph {
+    /// Seeded Erdős–Rényi graph `G(n, p)` with unit weights.
+    pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+        let mut rng = XorShift64::new(seed);
+        let mut edges = Vec::new();
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if rng.gen_bool(p) {
+                    edges.push((u, v, 1.0));
+                }
+            }
+        }
+        Graph { n, edges }
+    }
+
+    /// Path graph 0-1-2-…-(n−1).
+    pub fn path(n: usize) -> Graph {
+        Graph {
+            n,
+            edges: (0..n - 1).map(|i| (i, i + 1, 1.0)).collect(),
+        }
+    }
+}
+
+/// Cut value of partition `bits` (bit u = side of vertex u).
+pub fn cut_value(g: &Graph, bits: u64) -> f64 {
+    g.edges
+        .iter()
+        .map(|&(u, v, w)| {
+            if ((bits >> u) ^ (bits >> v)) & 1 == 1 {
+                w
+            } else {
+                0.0
+            }
+        })
+        .sum()
+}
+
+/// Build the Max-Cut Hamiltonian for `g` on `n_qubits ≥ g.n` qubits.
+pub fn maxcut_from_graph(n_qubits: usize, g: &Graph) -> Hamiltonian {
+    assert!(g.n <= n_qubits);
+    let dim = 1usize << n_qubits;
+    let mut m = DiagMatrix::zeros(dim);
+    let diag = m.diag_mut(0);
+    for b in 0..dim as u64 {
+        diag[b as usize] = Complex::real(cut_value(g, b));
+    }
+    m.prune(crate::format::diag::ZERO_TOL);
+    Hamiltonian::new(format!("Max-Cut-{n_qubits}"), n_qubits, m)
+}
+
+/// The registry instance: seeded Erdős–Rényi at p = 0.5.
+pub fn maxcut(n_qubits: usize) -> Hamiltonian {
+    let g = Graph::erdos_renyi(n_qubits, 0.5, 0xC0FFEE ^ n_qubits as u64);
+    maxcut_from_graph(n_qubits, &g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_diagonal() {
+        let h = maxcut(8);
+        assert_eq!(h.matrix.nnzd(), 1);
+        assert_eq!(h.matrix.offsets(), vec![0]);
+        assert!(h.matrix.is_hermitian(0.0));
+    }
+
+    #[test]
+    fn cut_symmetry() {
+        // Complement partitions have identical cut value.
+        let g = Graph::erdos_renyi(6, 0.5, 7);
+        let h = maxcut_from_graph(6, &g);
+        let mask = (1u64 << 6) - 1;
+        for b in 0..(1u64 << 6) {
+            assert_eq!(h.matrix.get(b as usize, b as usize), {
+                let c = (b ^ mask) as usize;
+                h.matrix.get(c, c)
+            });
+        }
+    }
+
+    #[test]
+    fn path_graph_cuts() {
+        let g = Graph::path(3);
+        assert_eq!(cut_value(&g, 0b000), 0.0);
+        assert_eq!(cut_value(&g, 0b010), 2.0);
+        assert_eq!(cut_value(&g, 0b001), 1.0);
+    }
+
+    #[test]
+    fn table2_shape_maxcut10() {
+        // Paper: Max-Cut-10 → dim 1024, NNZD 1, NNZE 1024 (dense diagonal,
+        // modulo the two zero-cut states of our instance).
+        let h = maxcut(10);
+        assert_eq!(h.dim(), 1024);
+        assert_eq!(h.matrix.nnzd(), 1);
+        let nnz = h.matrix.nnz();
+        assert!(nnz >= 1022, "nnz={nnz}");
+        assert!(h.matrix.sparsity() > 0.999);
+    }
+}

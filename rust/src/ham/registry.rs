@@ -1,0 +1,171 @@
+//! The benchmark registry — the 16 Table II configurations.
+
+use super::{bose_hubbard, fermi_hubbard, heisenberg, maxcut, qmaxcut, tfim, tsp, Hamiltonian};
+
+/// Benchmark family (paper Sec. V-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    MaxCut,
+    Heisenberg,
+    Tsp,
+    Tfim,
+    FermiHubbard,
+    QMaxCut,
+    BoseHubbard,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::MaxCut => "Max-Cut",
+            Family::Heisenberg => "Heisenberg",
+            Family::Tsp => "TSP",
+            Family::Tfim => "TFIM",
+            Family::FermiHubbard => "Fermi-Hubbard",
+            Family::QMaxCut => "Q-Max-Cut",
+            Family::BoseHubbard => "Bose-Hubbard",
+        }
+    }
+
+    pub fn all() -> [Family; 7] {
+        [
+            Family::MaxCut,
+            Family::Heisenberg,
+            Family::Tsp,
+            Family::Tfim,
+            Family::FermiHubbard,
+            Family::QMaxCut,
+            Family::BoseHubbard,
+        ]
+    }
+}
+
+/// One Table II row: a family at a qubit count, with the paper's reported
+/// statistics for comparison in the bench harness.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSpec {
+    pub family: Family,
+    pub qubits: usize,
+    /// Paper-reported NNZE / NNZD / Iter (None where not listed).
+    pub paper_nnze: Option<usize>,
+    pub paper_nnzd: Option<usize>,
+    pub paper_iter: Option<usize>,
+}
+
+impl BenchSpec {
+    pub fn name(&self) -> String {
+        format!("{}-{}", self.family.name(), self.qubits)
+    }
+}
+
+/// Build a benchmark Hamiltonian.
+pub fn build(family: Family, qubits: usize) -> Hamiltonian {
+    match family {
+        Family::MaxCut => maxcut::maxcut(qubits),
+        Family::Heisenberg => heisenberg::heisenberg(qubits, 1.0),
+        Family::Tsp => tsp::tsp(qubits),
+        Family::Tfim => tfim::tfim(qubits, 1.0, 1.0),
+        Family::FermiHubbard => fermi_hubbard::fermi_hubbard(qubits, 1.0, 4.0),
+        Family::QMaxCut => qmaxcut::qmaxcut(qubits),
+        Family::BoseHubbard => bose_hubbard::bose_hubbard(qubits),
+    }
+}
+
+/// The full Table II suite in paper order.
+pub fn hamlib_suite() -> Vec<BenchSpec> {
+    use Family::*;
+    let row = |family, qubits, nnze, nnzd, iter| BenchSpec {
+        family,
+        qubits,
+        paper_nnze: Some(nnze),
+        paper_nnzd: Some(nnzd),
+        paper_iter: Some(iter),
+    };
+    vec![
+        row(MaxCut, 10, 1024, 1, 4),
+        row(MaxCut, 12, 1936, 1, 4),
+        row(MaxCut, 14, 16384, 1, 5),
+        row(Heisenberg, 10, 5632, 19, 4),
+        row(Heisenberg, 12, 26624, 23, 4),
+        row(Heisenberg, 14, 122880, 27, 4),
+        row(Tsp, 8, 256, 1, 4),
+        row(Tsp, 15, 32768, 1, 4),
+        row(Tfim, 8, 2240, 17, 4),
+        row(Tfim, 10, 11264, 21, 4),
+        row(FermiHubbard, 8, 916, 13, 4),
+        row(FermiHubbard, 10, 5120, 17, 4),
+        row(QMaxCut, 8, 1152, 15, 3),
+        row(QMaxCut, 10, 5632, 19, 3),
+        row(BoseHubbard, 8, 480, 19, 4),
+        row(BoseHubbard, 10, 6663, 33, 5),
+    ]
+}
+
+/// The seven-family subset at the paper's headline qubit counts used in
+/// Figs. 10/11 (workloads small enough for every baseline to finish).
+pub fn fig10_suite() -> Vec<BenchSpec> {
+    hamlib_suite()
+        .into_iter()
+        .filter(|s| s.qubits <= 10)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_sixteen_rows() {
+        assert_eq!(hamlib_suite().len(), 16);
+    }
+
+    #[test]
+    fn all_small_benchmarks_build_and_are_hermitian() {
+        for spec in hamlib_suite() {
+            if spec.qubits > 10 {
+                continue; // bigger ones exercised in integration tests
+            }
+            let h = build(spec.family, spec.qubits);
+            assert_eq!(h.dim(), 1 << spec.qubits, "{}", spec.name());
+            assert!(h.matrix.is_hermitian(1e-9), "{}", spec.name());
+            assert!(h.matrix.nnzd() >= 1);
+        }
+    }
+
+    #[test]
+    fn exact_nnzd_matches_paper_where_derived() {
+        // Families whose diagonal structure is analytically fixed must
+        // match Table II exactly.
+        let exact = [
+            (Family::MaxCut, 10usize, 1usize),
+            (Family::Heisenberg, 10, 19),
+            (Family::Tsp, 8, 1),
+            (Family::Tfim, 8, 17),
+            (Family::Tfim, 10, 21),
+            (Family::FermiHubbard, 8, 13),
+            (Family::FermiHubbard, 10, 17),
+            (Family::QMaxCut, 10, 19),
+        ];
+        for (family, qubits, nnzd) in exact {
+            let h = build(family, qubits);
+            assert_eq!(h.matrix.nnzd(), nnzd, "{}-{}", family.name(), qubits);
+        }
+    }
+
+    #[test]
+    fn sparsity_exceeds_96_percent_everywhere() {
+        // Table II: every benchmark is ≥96.28% sparse.
+        for spec in hamlib_suite() {
+            if spec.qubits > 10 {
+                continue;
+            }
+            let h = build(spec.family, spec.qubits);
+            assert!(
+                h.matrix.sparsity() > 0.96,
+                "{} sparsity {}",
+                spec.name(),
+                h.matrix.sparsity()
+            );
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Traveling Salesman Problem QUBO Hamiltonian (discrete optimization).
+//!
+//! The standard one-hot QUBO encodes "city c visited at position p" into
+//! qubit `x_{c,p}`; tour-validity penalties and tour length are all
+//! products of `Z`s, so the Hamiltonian is **fully diagonal**
+//! (Table II: NNZD = 1, NNZE = 2^n — every basis state carries a penalty
+//! or tour cost).
+//!
+//! With `n` qubits we encode `m` cities such that `(m−1)² ≤ n` (city 0 is
+//! fixed at position 0, removing the rotation symmetry); surplus qubits
+//! get a small linear penalty so the diagonal stays fully dense, mirroring
+//! HamLib's padded instances.
+
+use super::Hamiltonian;
+use crate::format::DiagMatrix;
+use crate::num::Complex;
+use crate::testutil::XorShift64;
+
+/// A seeded TSP instance: symmetric distance matrix on `m` cities.
+#[derive(Clone, Debug)]
+pub struct TspInstance {
+    pub m: usize,
+    pub dist: Vec<Vec<f64>>,
+}
+
+impl TspInstance {
+    pub fn random(m: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let mut dist = vec![vec![0.0; m]; m];
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let d = 1.0 + (9.0 * rng.gen_f64()).round();
+                dist[i][j] = d;
+                dist[j][i] = d;
+            }
+        }
+        TspInstance { m, dist }
+    }
+}
+
+/// QUBO energy of bit assignment `bits` for instance `inst`.
+///
+/// Qubit `(c−1)·(m−1) + (p−1)` ⇔ "city c at position p" for
+/// `c, p ∈ [1, m)`; city 0 is fixed at position 0. `penalty` weights the
+/// one-hot constraints; `eps` is the per-surplus-qubit linear penalty.
+pub fn tsp_energy(inst: &TspInstance, n_qubits: usize, bits: u64, penalty: f64, eps: f64) -> f64 {
+    let m = inst.m;
+    let k = m - 1; // free cities / positions
+    let x = |c: usize, p: usize| -> f64 {
+        ((bits >> ((c - 1) * k + (p - 1))) & 1) as f64
+    };
+    let mut e = 0.0;
+
+    // One-hot constraints: each city once, each position once.
+    for c in 1..m {
+        let s: f64 = (1..m).map(|p| x(c, p)).sum();
+        e += penalty * (s - 1.0) * (s - 1.0);
+    }
+    for p in 1..m {
+        let s: f64 = (1..m).map(|c| x(c, p)).sum();
+        e += penalty * (s - 1.0) * (s - 1.0);
+    }
+
+    // Tour length: position 0 is city 0.
+    // leg 0→p1, legs p→p+1, leg p_{m-1}→0.
+    for c in 1..m {
+        e += inst.dist[0][c] * x(c, 1);
+        e += inst.dist[c][0] * x(c, m - 1);
+    }
+    for p in 1..(m - 1) {
+        for c1 in 1..m {
+            for c2 in 1..m {
+                if c1 != c2 {
+                    e += inst.dist[c1][c2] * x(c1, p) * x(c2, p + 1);
+                }
+            }
+        }
+    }
+
+    // Surplus qubits: small linear penalty keeps the diagonal fully dense.
+    for q in (k * k)..n_qubits {
+        e += eps * (((bits >> q) & 1) as f64 + 1.0);
+    }
+    e + eps // constant offset: no basis state has exactly zero energy
+}
+
+/// Build the TSP Hamiltonian on `n_qubits` qubits.
+pub fn tsp(n_qubits: usize) -> Hamiltonian {
+    // Largest m with (m-1)^2 <= n_qubits.
+    let m = (1..).take_while(|&m| (m - 1) * (m - 1) <= n_qubits).last().unwrap();
+    let inst = TspInstance::random(m.max(2), 0x7515 ^ n_qubits as u64);
+    let dim = 1usize << n_qubits;
+    let mut matrix = DiagMatrix::zeros(dim);
+    let diag = matrix.diag_mut(0);
+    for b in 0..dim as u64 {
+        diag[b as usize] = Complex::real(tsp_energy(&inst, n_qubits, b, 10.0, 0.25));
+    }
+    Hamiltonian::new(format!("TSP-{n_qubits}"), n_qubits, matrix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_dense_single_diagonal() {
+        // Paper Table II: TSP-8 → dim 256, NNZD 1, NNZE 256.
+        let h = tsp(8);
+        assert_eq!(h.dim(), 256);
+        assert_eq!(h.matrix.nnzd(), 1);
+        assert_eq!(h.matrix.nnz(), 256);
+    }
+
+    #[test]
+    fn valid_tours_beat_invalid_assignments() {
+        let inst = TspInstance::random(3, 1);
+        // valid: city1@pos1, city2@pos2 → bits 0b1001 (k=2)
+        let valid = tsp_energy(&inst, 4, 0b1001, 10.0, 0.0);
+        // invalid: nothing assigned
+        let invalid = tsp_energy(&inst, 4, 0b0000, 10.0, 0.0);
+        assert!(valid < invalid, "valid {valid} !< invalid {invalid}");
+    }
+
+    #[test]
+    fn symmetric_distances() {
+        let inst = TspInstance::random(4, 9);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(inst.dist[i][j], inst.dist[j][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn city_count_fits_qubits() {
+        // n=8 → m=3 uses 4 qubits; n=15 → m=4 uses 9 qubits.
+        let h8 = tsp(8);
+        assert_eq!(h8.dim(), 256);
+        let h10 = tsp(10);
+        assert_eq!(h10.matrix.nnz(), 1024);
+    }
+}

@@ -1,0 +1,49 @@
+//! # DIAMOND — diagonal-optimized SpMSpM acceleration for quantum simulation
+//!
+//! Reproduction of *"Systolic Array Acceleration of Diagonal-Optimized
+//! Sparse-Sparse Matrix Multiplication for Efficient Quantum Simulation"*
+//! (Su, Chundury, Li, Mueller — CS.AR 2025).
+//!
+//! The crate is organized as the paper's full system stack:
+//!
+//! * [`num`] — complex scalar arithmetic (no external crates; offline build).
+//! * [`format`] — the DiaQ-style diagonal sparse format plus CSR/COO/dense
+//!   oracles and conversions.
+//! * [`pauli`] — Pauli-string algebra used to synthesize Hamiltonians.
+//! * [`ham`] — HamLib-substitute Hamiltonian generators (TFIM, Heisenberg,
+//!   Fermi-/Bose-Hubbard, Max-Cut, Q-Max-Cut, TSP).
+//! * [`linalg`] — reference SpMSpM algorithms (diagonal convolution,
+//!   Gustavson, outer-product, dense) with operation counting.
+//! * [`taylor`] — Taylor-series matrix exponentiation driver for
+//!   Hamiltonian simulation (`exp(-iHt)`).
+//! * [`sim`] — the cycle-accurate DIAMOND simulator: DPE grid, diagonal
+//!   accumulators, NoC, two-level memory, blocking.
+//! * [`baselines`] — SIGMA / Flexagon-OuterProduct / Flexagon-Gustavson
+//!   cycle models under a shared PE budget.
+//! * [`energy`] — power/area/energy model built on the paper's Table III.
+//! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts (built by
+//!   `python/compile/aot.py`) and executes them from the Rust hot path.
+//! * [`coordinator`] — the L3 system layer: blocking planner, job queue,
+//!   worker pool, request batching and the simulation ledger.
+//! * [`bench_harness`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+//! * [`testutil`] — seeded PRNG + mini property-testing harness (offline
+//!   substitute for proptest).
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod energy;
+pub mod format;
+pub mod ham;
+pub mod linalg;
+pub mod num;
+pub mod pauli;
+pub mod runtime;
+pub mod sim;
+pub mod taylor;
+pub mod testutil;
+
+pub use format::diag::DiagMatrix;
+pub use num::Complex;

@@ -1,0 +1,210 @@
+//! Diagonal-convolution SpMSpM (paper Sec. III).
+//!
+//! `C = A·B` in diagonal space: every pair of stored diagonals
+//! `(d_A, d_B)` contributes one aligned element-wise product to the output
+//! diagonal at `d_C = d_A + d_B` (the offset-sum rule, Eq. 7); the set of
+//! output offsets is the Minkowski sum `D_A ⊕ D_B` (Eq. 9).
+//!
+//! This is the exact computation the DIAMOND DPE grid performs in
+//! hardware, so it doubles as the simulator's functional oracle.
+
+use super::OpStats;
+use crate::format::DiagMatrix;
+
+/// Row range `[lo, hi)` over which diagonals `d_a` (from A) and `d_b`
+/// (from B) overlap in an `n × n` product. The A element in row `r` is
+/// `A[r, r + d_a]`; it meets `B[r + d_a, r + d_a + d_b]`; the product
+/// lands in `C[r, r + d_a + d_b]`.
+#[inline]
+pub fn overlap_rows(n: usize, d_a: i64, d_b: i64) -> (i64, i64) {
+    let n = n as i64;
+    let lo = 0i64.max(-d_a).max(-d_a - d_b);
+    let hi = n.min(n - d_a).min(n - d_a - d_b);
+    (lo, hi)
+}
+
+/// Multiply two diagonal matrices; also return operation statistics.
+pub fn diag_mul_counted(a: &DiagMatrix, b: &DiagMatrix) -> (DiagMatrix, OpStats) {
+    assert_eq!(a.dim(), b.dim(), "dimension mismatch");
+    let n = a.dim();
+    let mut c = DiagMatrix::zeros(n);
+    let mut stats = OpStats::default();
+
+    for (d_a, va) in a.iter() {
+        for (d_b, vb) in b.iter() {
+            let (lo, hi) = overlap_rows(n, d_a, d_b);
+            if lo >= hi {
+                continue;
+            }
+            let d_c = d_a + d_b;
+            let len = (hi - lo) as usize;
+            // Storage index of row `lo` within each diagonal's own frame.
+            let ka0 = DiagMatrix::idx_of_row(d_a, lo as usize);
+            let kb0 = DiagMatrix::idx_of_row(d_b, (lo + d_a) as usize);
+            let kc0 = DiagMatrix::idx_of_row(d_c, lo as usize);
+            let vc = c.diag_mut(d_c);
+            for k in 0..len {
+                vc[kc0 + k] += va[ka0 + k] * vb[kb0 + k];
+            }
+            stats.mults += len;
+            stats.merge_adds += len;
+            stats.reads += 2 * len;
+        }
+    }
+    stats.writes = c.stored_elements();
+    (c, stats)
+}
+
+/// Multiply two diagonal matrices (no stats).
+pub fn diag_mul(a: &DiagMatrix, b: &DiagMatrix) -> DiagMatrix {
+    diag_mul_counted(a, b).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::convert::{dense_to_diag, diag_to_dense};
+    use crate::format::DenseMatrix;
+    use crate::num::{Complex, I, ONE};
+    use crate::testutil::{prop_check, XorShift64};
+
+    fn random_diag(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+        let mut m = DiagMatrix::zeros(n);
+        let ndiags = rng.gen_range(1, max_diags + 1);
+        for _ in 0..ndiags {
+            let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+            let len = DiagMatrix::diag_len(n, d);
+            let vals: Vec<Complex> = (0..len)
+                .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                .collect();
+            m.set_diag(d, vals);
+        }
+        m
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = XorShift64::new(5);
+        let a = random_diag(&mut rng, 12, 5);
+        let id = DiagMatrix::identity(12);
+        assert!(diag_mul(&a, &id).max_abs_diff(&a) < 1e-14);
+        assert!(diag_mul(&id, &a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn offset_sum_rule() {
+        // Single diagonals: product has exactly the summed offset.
+        let n = 8;
+        let mut a = DiagMatrix::zeros(n);
+        a.set_diag(2, vec![ONE; 6]);
+        let mut b = DiagMatrix::zeros(n);
+        b.set_diag(-3, vec![I; 5]);
+        let c = diag_mul(&a, &b);
+        assert_eq!(c.offsets(), vec![-1]);
+        // A[r, r+2] * B[r+2, r-1] lands at C[r, r-1]; valid r: 1..8 ∧ r+2<8 → r∈[1,6)
+        let (lo, hi) = overlap_rows(n, 2, -3);
+        assert_eq!((lo, hi), (1, 6));
+        let vals = c.diag(-1).unwrap();
+        // C rows 1..6 nonzero (k = r-1 ∈ 0..5), k=5,6 zero
+        assert_eq!(vals.len(), 7);
+        for (k, v) in vals.iter().enumerate() {
+            let expect = if (0..5).contains(&k) { I } else { crate::num::ZERO };
+            assert!(v.approx_eq(expect, 1e-15), "k={k} v={v:?}");
+        }
+    }
+
+    #[test]
+    fn matches_dense_oracle_property() {
+        prop_check("diag_mul == dense matmul", 24, |rng| {
+            let n = rng.gen_range(2, 24);
+            let a = random_diag(rng, n, 6);
+            let b = random_diag(rng, n, 6);
+            let c = diag_mul(&a, &b);
+            let dense_c = diag_to_dense(&a).matmul(&diag_to_dense(&b));
+            let diff = diag_to_dense(&c).max_abs_diff(&dense_c);
+            if diff > 1e-12 {
+                return Err(format!("n={n} diff={diff}"));
+            }
+            // And converting the dense result back must agree too.
+            let back = dense_to_diag(&dense_c, 0.0);
+            if c.max_abs_diff(&back) > 1e-12 {
+                return Err(format!("n={n} diag mismatch"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn op_counts_match_overlap_lengths() {
+        let n = 10;
+        let mut a = DiagMatrix::zeros(n);
+        a.set_diag(0, vec![ONE; 10]);
+        a.set_diag(4, vec![ONE; 6]);
+        let mut b = DiagMatrix::zeros(n);
+        b.set_diag(-2, vec![ONE; 8]);
+        let (_, stats) = diag_mul_counted(&a, &b);
+        // (0,-2): overlap rows [2,10) → 8; (4,-2): r∈[0,10)∩r+4<10∩r+2<10 → [0,6) → 6
+        assert_eq!(stats.mults, 8 + 6);
+        assert_eq!(stats.reads, 2 * (8 + 6));
+    }
+
+    #[test]
+    fn minkowski_sum_of_offsets() {
+        let n = 16;
+        let mut a = DiagMatrix::zeros(n);
+        for d in [-4i64, 0, 3] {
+            a.set_diag(d, vec![ONE; DiagMatrix::diag_len(n, d)]);
+        }
+        let mut b = DiagMatrix::zeros(n);
+        for d in [-1i64, 2] {
+            b.set_diag(d, vec![ONE; DiagMatrix::diag_len(n, d)]);
+        }
+        let c = diag_mul(&a, &b);
+        let expect: std::collections::BTreeSet<i64> =
+            [-5, -2, -1, 2, 5].into_iter().collect();
+        assert_eq!(
+            c.offsets().into_iter().collect::<std::collections::BTreeSet<i64>>(),
+            expect
+        );
+    }
+
+    #[test]
+    fn empty_operands_yield_empty() {
+        let a = DiagMatrix::zeros(6);
+        let b = DiagMatrix::identity(6);
+        let (c, stats) = diag_mul_counted(&a, &b);
+        assert_eq!(c.nnzd(), 0);
+        assert_eq!(stats.mults, 0);
+    }
+
+    #[test]
+    fn corner_diagonals_no_overlap() {
+        // Extreme corner diagonals whose product falls entirely outside.
+        let n = 5;
+        let mut a = DiagMatrix::zeros(n);
+        a.set_diag(4, vec![ONE; 1]);
+        let mut b = DiagMatrix::zeros(n);
+        b.set_diag(4, vec![ONE; 1]);
+        let c = diag_mul(&a, &b); // offset 8 > n-1: no valid rows
+        assert_eq!(c.nnzd(), 0);
+
+        let mut b2 = DiagMatrix::zeros(n);
+        b2.set_diag(-4, vec![ONE; 1]);
+        let c2 = diag_mul(&a, &b2); // A[0,4]*B[4,0] → C[0,0]
+        assert_eq!(c2.offsets(), vec![0]);
+        assert_eq!(c2.get(0, 0), ONE);
+    }
+
+    #[test]
+    fn dense_band_oracle() {
+        let d = DenseMatrix::from_rows(vec![
+            vec![ONE, Complex::real(2.0), crate::num::ZERO],
+            vec![crate::num::ZERO, ONE, Complex::real(3.0)],
+            vec![Complex::real(4.0), crate::num::ZERO, ONE],
+        ]);
+        let a = dense_to_diag(&d, 0.0);
+        let c = diag_mul(&a, &a);
+        let oracle = d.matmul(&d);
+        assert!(diag_to_dense(&c).max_abs_diff(&oracle) < 1e-14);
+    }
+}

@@ -1,0 +1,36 @@
+//! Reference SpMSpM algorithms.
+//!
+//! These are the *software oracles*: they establish numerical ground truth
+//! for the simulator and provide the exact operation counts (multiplies,
+//! merges, traffic) that the baseline accelerator cycle models consume.
+
+pub mod diag_mul;
+pub mod gustavson;
+pub mod outer;
+
+pub use diag_mul::{diag_mul, diag_mul_counted};
+pub use gustavson::gustavson_mul;
+pub use outer::outer_mul;
+
+/// Operation statistics collected by a reference SpMSpM execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpStats {
+    /// Scalar multiply–accumulate operations actually performed.
+    pub mults: usize,
+    /// Additions performed during partial-sum merging.
+    pub merge_adds: usize,
+    /// Elements read from the operand matrices.
+    pub reads: usize,
+    /// Elements written to the output (including partial products that a
+    /// dataflow must spill — outer-product pays these).
+    pub writes: usize,
+}
+
+impl OpStats {
+    pub fn accumulate(&mut self, other: OpStats) {
+        self.mults += other.mults;
+        self.merge_adds += other.merge_adds;
+        self.reads += other.reads;
+        self.writes += other.writes;
+    }
+}

@@ -1,0 +1,102 @@
+//! Outer-product SpMSpM — the dataflow of Flexagon's OP configuration and
+//! of OuterSPACE: for every inner index `k`, form the outer product of
+//! A's column `k` with B's row `k`, then merge all partial matrices.
+
+use super::OpStats;
+use crate::format::CsrMatrix;
+use crate::num::Complex;
+use std::collections::BTreeMap;
+
+/// Outer-product `C = A·B`. `a_t` must be Aᵀ in CSR (i.e. A by columns).
+///
+/// `writes` counts every partial-product element produced — the off-chip
+/// partial-matrix traffic that makes outer-product designs struggle, and
+/// the quantity the Flexagon-OP cycle model charges for merging.
+pub fn outer_mul(a_t: &CsrMatrix, b: &CsrMatrix) -> (CsrMatrix, OpStats) {
+    assert_eq!(a_t.rows, b.rows, "inner dimensions must match (Aᵀ rows == B rows)");
+    let mut stats = OpStats::default();
+    // Merge tree over (row, col) — models the multi-way merger.
+    let mut acc: BTreeMap<(usize, usize), Complex> = BTreeMap::new();
+
+    for k in 0..a_t.rows {
+        let (a_rows, a_vals) = a_t.row(k); // column k of A
+        let (b_cols, b_vals) = b.row(k);
+        stats.reads += a_rows.len() + b_cols.len();
+        for (&i, &a_ik) in a_rows.iter().zip(a_vals) {
+            for (&j, &b_kj) in b_cols.iter().zip(b_vals) {
+                stats.mults += 1;
+                stats.writes += 1; // a partial-product element is spilled
+                match acc.entry((i, j)) {
+                    std::collections::btree_map::Entry::Occupied(mut e) => {
+                        *e.get_mut() += a_ik * b_kj;
+                        stats.merge_adds += 1;
+                    }
+                    std::collections::btree_map::Entry::Vacant(e) => {
+                        e.insert(a_ik * b_kj);
+                    }
+                }
+            }
+        }
+    }
+
+    let triplets: Vec<(usize, usize, Complex)> =
+        acc.into_iter().map(|((i, j), v)| (i, j, v)).collect();
+    (
+        CsrMatrix::from_sorted_triplets(a_t.cols, b.cols, &triplets),
+        stats,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::convert::csr_to_dense;
+    use crate::num::Complex;
+    use crate::testutil::{prop_check, XorShift64};
+
+    fn random_csr(rng: &mut XorShift64, n: usize, density: f64) -> CsrMatrix {
+        let mut trip = Vec::new();
+        for r in 0..n {
+            for c in 0..n {
+                if rng.gen_bool(density) {
+                    trip.push((r, c, Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5)));
+                }
+            }
+        }
+        CsrMatrix::from_sorted_triplets(n, n, &trip)
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        prop_check("outer == dense", 16, |rng| {
+            let n = rng.gen_range(2, 20);
+            let a = random_csr(rng, n, 0.3);
+            let b = random_csr(rng, n, 0.3);
+            let (c, stats) = outer_mul(&a.transpose(), &b);
+            let oracle = csr_to_dense(&a).matmul(&csr_to_dense(&b));
+            let diff = csr_to_dense(&c).max_abs_diff(&oracle);
+            if diff > 1e-12 {
+                return Err(format!("n={n} diff={diff}"));
+            }
+            // mults must equal Σ_k nnz(A(:,k)) · nnz(B(k,:))
+            let at = a.transpose();
+            let expect: usize = (0..n).map(|k| at.row_nnz(k) * b.row_nnz(k)).sum();
+            if stats.mults != expect || stats.writes != expect {
+                return Err(format!("op counts off: {stats:?} vs {expect}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn agrees_with_gustavson() {
+        let mut rng = XorShift64::new(99);
+        let a = random_csr(&mut rng, 12, 0.25);
+        let b = random_csr(&mut rng, 12, 0.25);
+        let (c_outer, _) = outer_mul(&a.transpose(), &b);
+        let (c_gust, _) = super::super::gustavson::gustavson_mul(&a, &b);
+        assert!(
+            csr_to_dense(&c_outer).max_abs_diff(&csr_to_dense(&c_gust)) < 1e-13
+        );
+    }
+}

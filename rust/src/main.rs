@@ -1,0 +1,1 @@
+fn main() { diamond::cli::run(); }

@@ -1,0 +1,248 @@
+//! Complex scalar arithmetic.
+//!
+//! The build environment is offline (no `num-complex` crate), so the crate
+//! carries its own minimal `Complex` type. Values in the oracle / reference
+//! path are `f64`; the PJRT functional path marshals to `f32` planes (the
+//! paper's PEs are float32).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A double-precision complex number.
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+pub const ONE: Complex = Complex { re: 1.0, im: 0.0 };
+/// The imaginary unit `i`.
+pub const I: Complex = Complex { re: 0.0, im: 1.0 };
+
+impl Complex {
+    #[inline]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    /// Real number as a complex value.
+    #[inline]
+    pub const fn real(re: f64) -> Self {
+        Complex { re, im: 0.0 }
+    }
+
+    /// Complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex::new(self.re, -self.im)
+    }
+
+    /// Modulus `|z|`.
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Squared modulus `|z|^2` (cheaper than [`Complex::abs`]).
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Multiplication by a real scalar.
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    /// `i^k` for integer `k` (used by Pauli phase bookkeeping).
+    pub fn i_pow(k: u32) -> Self {
+        match k % 4 {
+            0 => ONE,
+            1 => I,
+            2 => Complex::new(-1.0, 0.0),
+            _ => Complex::new(0.0, -1.0),
+        }
+    }
+
+    /// True when `self` is within `tol` of `other` (absolute, per part).
+    #[inline]
+    pub fn approx_eq(self, other: Complex, tol: f64) -> bool {
+        (self.re - other.re).abs() <= tol && (self.im - other.im).abs() <= tol
+    }
+
+    /// True when the value is (numerically) zero.
+    #[inline]
+    pub fn is_zero(self, tol: f64) -> bool {
+        self.re.abs() <= tol && self.im.abs() <= tol
+    }
+}
+
+impl Add for Complex {
+    type Output = Complex;
+    #[inline]
+    fn add(self, rhs: Complex) -> Complex {
+        Complex::new(self.re + rhs.re, self.im + rhs.im)
+    }
+}
+
+impl AddAssign for Complex {
+    #[inline]
+    fn add_assign(&mut self, rhs: Complex) {
+        self.re += rhs.re;
+        self.im += rhs.im;
+    }
+}
+
+impl Sub for Complex {
+    type Output = Complex;
+    #[inline]
+    fn sub(self, rhs: Complex) -> Complex {
+        Complex::new(self.re - rhs.re, self.im - rhs.im)
+    }
+}
+
+impl SubAssign for Complex {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Complex) {
+        self.re -= rhs.re;
+        self.im -= rhs.im;
+    }
+}
+
+impl Mul for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, rhs: Complex) -> Complex {
+        Complex::new(
+            self.re * rhs.re - self.im * rhs.im,
+            self.re * rhs.im + self.im * rhs.re,
+        )
+    }
+}
+
+impl MulAssign for Complex {
+    #[inline]
+    fn mul_assign(&mut self, rhs: Complex) {
+        *self = *self * rhs;
+    }
+}
+
+impl Mul<f64> for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, rhs: f64) -> Complex {
+        self.scale(rhs)
+    }
+}
+
+impl Div<f64> for Complex {
+    type Output = Complex;
+    #[inline]
+    fn div(self, rhs: f64) -> Complex {
+        self.scale(1.0 / rhs)
+    }
+}
+
+impl Div for Complex {
+    type Output = Complex;
+    #[inline]
+    fn div(self, rhs: Complex) -> Complex {
+        let d = rhs.norm_sqr();
+        Complex::new(
+            (self.re * rhs.re + self.im * rhs.im) / d,
+            (self.im * rhs.re - self.re * rhs.im) / d,
+        )
+    }
+}
+
+impl Neg for Complex {
+    type Output = Complex;
+    #[inline]
+    fn neg(self) -> Complex {
+        Complex::new(-self.re, -self.im)
+    }
+}
+
+impl Sum for Complex {
+    fn sum<It: Iterator<Item = Complex>>(iter: It) -> Complex {
+        iter.fold(ZERO, |a, b| a + b)
+    }
+}
+
+impl From<f64> for Complex {
+    fn from(re: f64) -> Self {
+        Complex::real(re)
+    }
+}
+
+impl fmt::Debug for Complex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{}+{}i", self.re, self.im)
+        } else {
+            write!(f, "{}{}i", self.re, self.im)
+        }
+    }
+}
+
+impl fmt::Display for Complex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_matches_expansion() {
+        let a = Complex::new(1.0, 2.0);
+        let b = Complex::new(3.0, -4.0);
+        let c = a * b;
+        assert_eq!(c, Complex::new(11.0, 2.0));
+    }
+
+    #[test]
+    fn i_squared_is_minus_one() {
+        assert_eq!(I * I, Complex::new(-1.0, 0.0));
+        assert_eq!(Complex::i_pow(2), Complex::new(-1.0, 0.0));
+        assert_eq!(Complex::i_pow(3), Complex::new(0.0, -1.0));
+        assert_eq!(Complex::i_pow(4), ONE);
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let z = Complex::new(3.0, 4.0);
+        assert_eq!(z.abs(), 5.0);
+        assert_eq!(z.norm_sqr(), 25.0);
+        assert_eq!((z * z.conj()).re, 25.0);
+        assert_eq!((z * z.conj()).im, 0.0);
+    }
+
+    #[test]
+    fn div_roundtrips() {
+        let a = Complex::new(1.5, -2.5);
+        let b = Complex::new(0.5, 3.0);
+        let q = a / b;
+        assert!((q * b).approx_eq(a, 1e-12));
+    }
+
+    #[test]
+    fn sum_and_scale() {
+        let s: Complex = vec![ONE, I, ONE].into_iter().sum();
+        assert_eq!(s, Complex::new(2.0, 1.0));
+        assert_eq!(s.scale(2.0), Complex::new(4.0, 2.0));
+        assert_eq!(s / 2.0, Complex::new(1.0, 0.5));
+    }
+
+    #[test]
+    fn approx_and_zero() {
+        assert!(Complex::new(1e-13, -1e-13).is_zero(1e-12));
+        assert!(!Complex::new(1e-3, 0.0).is_zero(1e-12));
+        assert!(ONE.approx_eq(Complex::new(1.0 + 1e-13, 0.0), 1e-12));
+    }
+}

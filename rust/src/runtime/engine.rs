@@ -1,0 +1,225 @@
+//! The functional engine: complex diagonal SpMSpM over the PJRT
+//! executables, with chunking onto shape buckets.
+//!
+//! This is the value-producing half of the functional/timing split: the
+//! cycle simulator decides *when*, this engine computes *what* — through
+//! the same diagonal-convolution computation, AOT-compiled from JAX.
+
+use super::{Bucket, Runtime, SpmspmCall};
+use crate::format::DiagMatrix;
+use crate::num::Complex;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Statistics of one engine-level SpMSpM.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// PJRT executable invocations.
+    pub calls: u64,
+    /// Bucket used for the bulk of the calls.
+    pub bucket_n: usize,
+    pub bucket_d: usize,
+    /// Wall time spent inside PJRT execute.
+    pub exec_nanos: u128,
+}
+
+/// Row-aligned f32 planes of a chunk of diagonals.
+struct Planes {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    offsets: Vec<i32>,
+    count: usize,
+}
+
+fn chunk_planes(m: &DiagMatrix, offsets: &[i64], n_bucket: usize, pad_to: usize, padded3: bool) -> Planes {
+    let width = if padded3 { 3 * n_bucket } else { n_bucket };
+    let base = if padded3 { n_bucket } else { 0 };
+    let mut re = vec![0f32; pad_to * width];
+    let mut im = vec![0f32; pad_to * width];
+    let mut offs = Vec::with_capacity(pad_to);
+    for (slot, &d) in offsets.iter().enumerate() {
+        let vals = m.diag(d).expect("offset must exist");
+        let r0 = DiagMatrix::row_of(d, 0);
+        for (k, v) in vals.iter().enumerate() {
+            let idx = slot * width + base + r0 + k;
+            re[idx] = v.re as f32;
+            im[idx] = v.im as f32;
+        }
+        offs.push(d as i32);
+    }
+    // Surplus slots: zero planes at offset 0 contribute nothing.
+    offs.resize(pad_to, 0);
+    Planes {
+        re,
+        im,
+        offsets: offs,
+        count: offsets.len(),
+    }
+}
+
+/// Build the one-hot scatter for (padded) offset chunks. Returns the
+/// row-major (dO, dO) matrix and the output offset of each slot
+/// (slots beyond the distinct sums stay unused).
+fn scatter_matrix(a_offs: &[i32], b_offs: &[i32], a_used: usize, b_used: usize) -> (Vec<f32>, Vec<i64>) {
+    let d_a = a_offs.len();
+    let d_b = b_offs.len();
+    let d_o = d_a * d_b;
+    let mut sums: Vec<i64> = Vec::new();
+    {
+        let mut set = std::collections::BTreeSet::new();
+        for &x in &a_offs[..a_used] {
+            for &y in &b_offs[..b_used] {
+                set.insert(x as i64 + y as i64);
+            }
+        }
+        sums.extend(set);
+    }
+    assert!(sums.len() <= d_o);
+    let slot: BTreeMap<i64, usize> = sums.iter().enumerate().map(|(k, &s)| (s, k)).collect();
+    let mut scatter = vec![0f32; d_o * d_o];
+    for (i, &x) in a_offs[..a_used].iter().enumerate() {
+        for (j, &y) in b_offs[..b_used].iter().enumerate() {
+            let k = slot[&(x as i64 + y as i64)];
+            scatter[(i * d_b + j) * d_o + k] = 1.0;
+        }
+    }
+    (scatter, sums)
+}
+
+/// The functional engine over a loaded [`Runtime`].
+pub struct DiagEngine {
+    pub runtime: Runtime,
+}
+
+impl DiagEngine {
+    pub fn new(runtime: Runtime) -> Self {
+        DiagEngine { runtime }
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Self> {
+        Ok(Self::new(Runtime::load(Runtime::default_dir())?))
+    }
+
+    /// Complex diagonal SpMSpM through the PJRT executables.
+    pub fn spmspm(&self, a: &DiagMatrix, b: &DiagMatrix) -> Result<(DiagMatrix, EngineStats)> {
+        let n = a.dim();
+        assert_eq!(n, b.dim());
+        let mut c = DiagMatrix::zeros(n);
+        let mut stats = EngineStats::default();
+        if a.nnzd() == 0 || b.nnzd() == 0 {
+            return Ok((c, stats));
+        }
+
+        // Prefer the smallest bucket that takes both operands whole (the
+        // single-diagonal fast path for QUBO workloads); otherwise chunk
+        // through the largest bucket at this dimension.
+        let bucket: Bucket = self
+            .runtime
+            .best_bucket(n, a.nnzd(), b.nnzd())
+            .or_else(|| self.runtime.max_bucket_for_dim(n))
+            .ok_or_else(|| anyhow::anyhow!("no bucket for dim {n} (run `make artifacts`)"))?;
+        stats.bucket_n = bucket.n;
+        stats.bucket_d = bucket.d_a;
+
+        let a_offsets = a.offsets();
+        let b_offsets = b.offsets();
+        for a_chunk in a_offsets.chunks(bucket.d_a) {
+            let ap = chunk_planes(a, a_chunk, bucket.n, bucket.d_a, false);
+            for b_chunk in b_offsets.chunks(bucket.d_b) {
+                let bp = chunk_planes(b, b_chunk, bucket.n, bucket.d_b, true);
+                let (scatter, sums) =
+                    scatter_matrix(&ap.offsets, &bp.offsets, ap.count, bp.count);
+                let call = SpmspmCall {
+                    a_re: &ap.re,
+                    a_im: &ap.im,
+                    a_offsets: &ap.offsets,
+                    b_re_pad: &bp.re,
+                    b_im_pad: &bp.im,
+                    scatter: &scatter,
+                };
+                let t0 = std::time::Instant::now();
+                let (c_re, c_im) = self.runtime.exec(bucket, &call)?;
+                stats.exec_nanos += t0.elapsed().as_nanos();
+                stats.calls += 1;
+
+                // Read back: slot k holds output diagonal sums[k],
+                // row-aligned over the bucket's N.
+                for (k, &d) in sums.iter().enumerate() {
+                    if d.unsigned_abs() as usize >= n {
+                        continue; // falls outside the matrix
+                    }
+                    let row0 = DiagMatrix::row_of(d, 0);
+                    let len = DiagMatrix::diag_len(n, d);
+                    let base = k * bucket.n + row0;
+                    let dst = c.diag_mut(d);
+                    let mut nonzero = false;
+                    for (t, dst_v) in dst.iter_mut().enumerate().take(len) {
+                        let re = c_re[base + t] as f64;
+                        let im = c_im[base + t] as f64;
+                        if re != 0.0 || im != 0.0 {
+                            nonzero = true;
+                        }
+                        *dst_v += Complex::new(re, im);
+                    }
+                    let _ = nonzero;
+                }
+            }
+        }
+        c.prune(1e-12);
+        Ok((c, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/runtime_pjrt.rs; here we
+    // test the pure marshalling helpers.
+    use super::*;
+    use crate::num::ONE;
+
+    #[test]
+    fn chunk_planes_row_alignment() {
+        let mut m = DiagMatrix::zeros(4);
+        m.set_diag(-2, vec![ONE, Complex::new(2.0, -1.0)]);
+        let p = chunk_planes(&m, &[-2], 8, 2, false);
+        // row-aligned: diagonal −2 starts at row 2.
+        assert_eq!(p.re[2], 1.0);
+        assert_eq!(p.re[3], 2.0);
+        assert_eq!(p.im[3], -1.0);
+        assert_eq!(p.offsets, vec![-2, 0]);
+        // padded second slot all zero
+        assert!(p.re[8..16].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn chunk_planes_b_padding() {
+        let m = DiagMatrix::identity(4);
+        let p = chunk_planes(&m, &[0], 4, 1, true);
+        assert_eq!(p.re.len(), 12);
+        assert_eq!(&p.re[4..8], &[1.0, 1.0, 1.0, 1.0]);
+        assert!(p.re[..4].iter().all(|&x| x == 0.0));
+        assert!(p.re[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_merges_duplicate_sums() {
+        // offsets a = [0, 1], b = [1, 2] → sums {1, 2, 3}; (0,2) and (1,1)
+        // share slot for 2.
+        let (s, sums) = scatter_matrix(&[0, 1], &[1, 2], 2, 2);
+        assert_eq!(sums, vec![1, 2, 3]);
+        let d_o = 4;
+        // product (i=0,j=0) → sum 1 → slot 0
+        assert_eq!(s[0 * d_o + 0], 1.0);
+        // product (0,1) → sum 2 → slot 1; product (1,0) → sum 2 → slot 1
+        assert_eq!(s[1 * d_o + 1], 1.0);
+        assert_eq!(s[2 * d_o + 1], 1.0);
+        // product (1,1) → sum 3 → slot 2
+        assert_eq!(s[3 * d_o + 2], 1.0);
+        // each row one-hot
+        for row in 0..4 {
+            let ones: f32 = s[row * d_o..(row + 1) * d_o].iter().sum();
+            assert_eq!(ones, 1.0);
+        }
+    }
+}

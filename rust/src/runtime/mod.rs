@@ -1,0 +1,178 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! graph (with the L1 Pallas kernel inlined) to HLO *text* once; this
+//! module compiles each artifact on the PJRT CPU client at startup and
+//! serves execute calls thereafter.
+
+pub mod engine;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's shape bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Bucket {
+    pub n: usize,
+    pub d_a: usize,
+    pub d_b: usize,
+}
+
+impl Bucket {
+    pub fn d_o(&self) -> usize {
+        self.d_a * self.d_b
+    }
+}
+
+/// The PJRT runtime: one compiled executable per shape bucket.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<Bucket, xla::PjRtLoadedExecutable>,
+    buckets: Vec<Bucket>,
+}
+
+/// Raw inputs of one artifact call (row-aligned f32 planes).
+pub struct SpmspmCall<'a> {
+    pub a_re: &'a [f32],
+    pub a_im: &'a [f32],
+    /// (dA) i32 offsets.
+    pub a_offsets: &'a [i32],
+    /// (dB, 3N) padded planes.
+    pub b_re_pad: &'a [f32],
+    pub b_im_pad: &'a [f32],
+    /// (dO, dO) one-hot scatter.
+    pub scatter: &'a [f32],
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        let mut buckets = Vec::new();
+        for line in manifest.lines() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                continue;
+            }
+            let bucket = Bucket {
+                n: parts[1].parse()?,
+                d_a: parts[2].parse()?,
+                d_b: parts[3].parse()?,
+            };
+            let path: PathBuf = dir.join(parts[0]);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            executables.insert(bucket, exe);
+            buckets.push(bucket);
+        }
+        if buckets.is_empty() {
+            return Err(anyhow!("no artifacts in {}", dir.display()));
+        }
+        buckets.sort();
+        Ok(Runtime {
+            client,
+            executables,
+            buckets,
+        })
+    }
+
+    /// The artifact directory used by tests/examples: `$DIAMOND_ARTIFACTS`
+    /// or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DIAMOND_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest bucket with `n ≥ dim`, `d_a ≥ need_a`, `d_b ≥ need_b`.
+    pub fn best_bucket(&self, dim: usize, need_a: usize, need_b: usize) -> Option<Bucket> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|b| b.n >= dim && b.d_a >= need_a && b.d_b >= need_b)
+            .min_by_key(|b| (b.n, b.d_a * b.d_b))
+    }
+
+    /// Largest diagonal capacity available at `dim` (for chunk sizing).
+    pub fn max_bucket_for_dim(&self, dim: usize) -> Option<Bucket> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|b| b.n >= dim)
+            .min_by_key(|b| (b.n, std::cmp::Reverse(b.d_a * b.d_b)))
+            .and_then(|chosen_n| {
+                self.buckets
+                    .iter()
+                    .copied()
+                    .filter(|b| b.n == chosen_n.n)
+                    .max_by_key(|b| b.d_a * b.d_b)
+            })
+    }
+
+    /// Execute one bucket call: returns (c_re, c_im), each `d_o × n`
+    /// row-major.
+    pub fn exec(&self, bucket: Bucket, call: &SpmspmCall) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .executables
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no executable for bucket {bucket:?}"))?;
+        let (n, d_a, d_b, d_o) = (
+            bucket.n as i64,
+            bucket.d_a as i64,
+            bucket.d_b as i64,
+            bucket.d_o() as i64,
+        );
+        debug_assert_eq!(call.a_re.len(), (d_a * n) as usize);
+        debug_assert_eq!(call.b_re_pad.len(), (d_b * 3 * n) as usize);
+        debug_assert_eq!(call.scatter.len(), (d_o * d_o) as usize);
+
+        let args = [
+            xla::Literal::vec1(call.a_re).reshape(&[d_a, n])?,
+            xla::Literal::vec1(call.a_im).reshape(&[d_a, n])?,
+            xla::Literal::vec1(call.a_offsets).reshape(&[d_a, 1])?,
+            xla::Literal::vec1(call.b_re_pad).reshape(&[d_b, 3 * n])?,
+            xla::Literal::vec1(call.b_im_pad).reshape(&[d_b, 3 * n])?,
+            xla::Literal::vec1(call.scatter).reshape(&[d_o, d_o])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (re, im) = result.to_tuple2()?;
+        Ok((re.to_vec::<f32>()?, im.to_vec::<f32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_dims() {
+        let b = Bucket {
+            n: 1024,
+            d_a: 16,
+            d_b: 16,
+        };
+        assert_eq!(b.d_o(), 256);
+    }
+
+    // Runtime-dependent tests live in rust/tests/runtime_pjrt.rs (they
+    // need `make artifacts` to have run).
+}

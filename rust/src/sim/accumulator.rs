@@ -1,0 +1,169 @@
+//! Per-output-diagonal accumulators (paper Sec. IV-B).
+//!
+//! The Minkowski-sum mapping guarantees every DPE on a grid (anti-)diagonal
+//! contributes to the same output diagonal, so DIAMOND attaches one
+//! accumulator per output offset behind the NoC. Output diagonals are
+//! mutually independent, making accumulation embarrassingly parallel; the
+//! model charges one add per delivered partial product and tracks NoC
+//! transfer counts for the energy model.
+//!
+//! Because a DPE's output offset is *fixed* for a whole group-pair
+//! execution, the grid resolves each DPE's bank once ([`bank_handle`])
+//! and delivers through the index thereafter — the software image of the
+//! dedicated accumulator wiring (and the #1 hot-path optimization, see
+//! EXPERIMENTS.md §Perf).
+//!
+//! [`bank_handle`]: AccumulatorBank::bank_handle
+
+use crate::format::DiagMatrix;
+use crate::num::Complex;
+use std::collections::BTreeMap;
+
+/// Index of a resolved accumulator bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankHandle(usize);
+
+/// The bank of diagonal accumulators attached to a DPE grid.
+#[derive(Clone, Debug)]
+pub struct AccumulatorBank {
+    n: usize,
+    /// offset → index into `banks`.
+    index: BTreeMap<i64, usize>,
+    banks: Vec<(i64, Vec<Complex>)>,
+    /// Partial products delivered over the NoC.
+    pub noc_transfers: u64,
+    /// Accumulation adds performed.
+    pub adds: u64,
+    /// Peak number of live accumulators (grid-size planning statistic).
+    pub peak_banks: usize,
+}
+
+impl AccumulatorBank {
+    pub fn new(n: usize) -> Self {
+        AccumulatorBank {
+            n,
+            index: BTreeMap::new(),
+            banks: Vec::new(),
+            noc_transfers: 0,
+            adds: 0,
+            peak_banks: 0,
+        }
+    }
+
+    /// Resolve (allocating if needed) the accumulator for offset `d`.
+    pub fn bank_handle(&mut self, d: i64) -> BankHandle {
+        if let Some(&i) = self.index.get(&d) {
+            return BankHandle(i);
+        }
+        let len = DiagMatrix::diag_len(self.n, d);
+        let i = self.banks.len();
+        self.banks.push((d, vec![crate::num::ZERO; len]));
+        self.index.insert(d, i);
+        self.peak_banks = self.peak_banks.max(self.banks.len());
+        BankHandle(i)
+    }
+
+    /// Deliver a partial product for output row `i` through a resolved
+    /// handle (the grid's hot path — no map lookup).
+    #[inline]
+    pub fn deliver_to(&mut self, h: BankHandle, i: u32, v: Complex) {
+        let (d, bank) = &mut self.banks[h.0];
+        bank[DiagMatrix::idx_of_row(*d, i as usize)] += v;
+        self.noc_transfers += 1;
+        self.adds += 1;
+    }
+
+    /// Deliver one partial product for output element `C[i, j]`
+    /// (convenience path; resolves the bank each call).
+    pub fn deliver(&mut self, i: u32, j: u32, v: Complex) {
+        let h = self.bank_handle(j as i64 - i as i64);
+        self.deliver_to(h, i, v);
+    }
+
+    /// Number of active output diagonals.
+    pub fn active_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Drain the accumulated diagonals into a [`DiagMatrix`].
+    pub fn into_matrix(self) -> DiagMatrix {
+        let mut m = DiagMatrix::zeros(self.n);
+        for (d, vals) in self.banks {
+            m.set_diag(d, vals);
+        }
+        m
+    }
+
+    /// Accumulate into an existing matrix (used across block tasks).
+    pub fn drain_into(&mut self, m: &mut DiagMatrix) {
+        self.index.clear();
+        for (d, vals) in std::mem::take(&mut self.banks) {
+            let dst = m.diag_mut(d);
+            for (dst_v, src_v) in dst.iter_mut().zip(vals) {
+                *dst_v += src_v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::{Complex, ONE};
+
+    #[test]
+    fn delivers_by_offset() {
+        let mut acc = AccumulatorBank::new(5);
+        acc.deliver(1, 3, ONE); // offset +2
+        acc.deliver(2, 4, Complex::real(2.0)); // offset +2
+        acc.deliver(1, 3, Complex::real(3.0)); // same slot again
+        assert_eq!(acc.active_banks(), 1);
+        assert_eq!(acc.adds, 3);
+        let m = acc.into_matrix();
+        assert_eq!(m.get(1, 3), Complex::real(4.0));
+        assert_eq!(m.get(2, 4), Complex::real(2.0));
+    }
+
+    #[test]
+    fn handle_path_equals_convenience_path() {
+        let mut a = AccumulatorBank::new(6);
+        let h = a.bank_handle(-1);
+        a.deliver_to(h, 3, ONE);
+        a.deliver_to(h, 4, Complex::real(2.0));
+        let mut b = AccumulatorBank::new(6);
+        b.deliver(3, 2, ONE);
+        b.deliver(4, 3, Complex::real(2.0));
+        assert_eq!(a.into_matrix(), b.into_matrix());
+    }
+
+    #[test]
+    fn handles_are_stable_across_new_banks() {
+        let mut acc = AccumulatorBank::new(8);
+        let h0 = acc.bank_handle(0);
+        acc.deliver_to(h0, 0, ONE);
+        let _h1 = acc.bank_handle(3);
+        let _h2 = acc.bank_handle(-5);
+        acc.deliver_to(h0, 1, ONE); // still bank for offset 0
+        let m = acc.into_matrix();
+        assert_eq!(m.get(0, 0), ONE);
+        assert_eq!(m.get(1, 1), ONE);
+        assert_eq!(acc_len(), 0);
+        fn acc_len() -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn drain_into_accumulates_across_tasks() {
+        let mut m = DiagMatrix::zeros(4);
+        let mut acc = AccumulatorBank::new(4);
+        acc.deliver(0, 0, ONE);
+        acc.drain_into(&mut m);
+        acc.deliver(0, 0, Complex::real(2.0));
+        acc.deliver(3, 1, ONE);
+        acc.drain_into(&mut m);
+        assert_eq!(m.get(0, 0), Complex::real(3.0));
+        assert_eq!(m.get(3, 1), ONE);
+        assert_eq!(acc.active_banks(), 0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Blocking strategies (paper Sec. IV-C).
+//!
+//! * **Diagonal blocking** partitions each operand's diagonal *set* into
+//!   groups that bound the DPE grid; A and B may be partitioned
+//!   independently, and every A group multiplies every B group.
+//! * **Row/col-wise blocking** partitions the diagonals' *index ranges* at
+//!   shared row/column boundaries, bounding buffer (and cache line)
+//!   length; only aligned window pairs interact.
+
+use crate::format::DiagMatrix;
+
+/// A diagonal group: offsets assigned to grid rows/columns in feed order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DiagGroup {
+    pub offsets: Vec<i64>,
+}
+
+/// Partition `offsets` (already in the desired feed order) into groups of
+/// at most `group_size`.
+pub fn diagonal_blocking(offsets: &[i64], group_size: usize) -> Vec<DiagGroup> {
+    assert!(group_size > 0);
+    offsets
+        .chunks(group_size)
+        .map(|c| DiagGroup {
+            offsets: c.to_vec(),
+        })
+        .collect()
+}
+
+/// A row/col-wise blocking window: element rows `[row_lo, row_hi)` of the
+/// product's inner dimension.
+///
+/// Partitioning A column-wise and B row-wise at the same indices produces
+/// aligned pairs; a window is identified by its position in the shared
+/// partition of `0..n`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Window {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// Split `0..n` into windows of at most `segment_len`.
+pub fn rowcol_blocking(n: usize, segment_len: usize) -> Vec<Window> {
+    assert!(segment_len > 0);
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + segment_len).min(n);
+        out.push(Window { lo, hi });
+        lo = hi;
+    }
+    out
+}
+
+/// Number of elements of diagonal `d` of an `n × n` matrix whose *inner*
+/// index (A's column / B's row) falls in `w`.
+///
+/// For A (partitioned column-wise) the inner index of element `k` is its
+/// column; for B (row-wise) it is its row. Used for cache-line sizing.
+pub fn elements_in_window_a(n: usize, d: i64, w: Window) -> usize {
+    // A's columns on diagonal d span [max(0,d), n + min(0,d)).
+    let col_lo = d.max(0) as usize;
+    let col_hi = (n as i64 + d.min(0)) as usize;
+    let lo = col_lo.max(w.lo);
+    let hi = col_hi.min(w.hi);
+    hi.saturating_sub(lo)
+}
+
+/// Same for B, whose inner index is the row.
+pub fn elements_in_window_b(n: usize, d: i64, w: Window) -> usize {
+    let row_lo = (-d).max(0) as usize;
+    let row_hi = (n as i64 - d.max(0)) as usize;
+    let lo = row_lo.max(w.lo);
+    let hi = row_hi.min(w.hi);
+    hi.saturating_sub(lo)
+}
+
+/// The full blocking plan for one SpMSpM: the grid executes
+/// `a_groups × b_groups × windows` tasks.
+#[derive(Clone, Debug)]
+pub struct BlockPlan {
+    pub a_groups: Vec<DiagGroup>,
+    pub b_groups: Vec<DiagGroup>,
+    pub windows: Vec<Window>,
+    /// Grid dimensions required (max group sizes).
+    pub grid_cols: usize,
+    pub grid_rows: usize,
+}
+
+impl BlockPlan {
+    /// Plan a multiplication under `cfg`, with feed orders applied.
+    pub fn plan(a: &DiagMatrix, b: &DiagMatrix, cfg: &super::config::SimConfig) -> BlockPlan {
+        let mut a_off = a.offsets();
+        let mut b_off = b.offsets();
+        match cfg.a_order {
+            super::config::FeedOrder::Ascending => {}
+            super::config::FeedOrder::Descending => a_off.reverse(),
+        }
+        match cfg.b_order {
+            super::config::FeedOrder::Ascending => {}
+            super::config::FeedOrder::Descending => b_off.reverse(),
+        }
+        let a_groups = diagonal_blocking(&a_off, cfg.group_size.min(cfg.max_cols));
+        let b_groups = diagonal_blocking(&b_off, cfg.group_size.min(cfg.max_rows));
+        let windows = if cfg.segment_len == usize::MAX {
+            vec![Window {
+                lo: 0,
+                hi: a.dim(),
+            }]
+        } else {
+            rowcol_blocking(a.dim(), cfg.segment_len)
+        };
+        let grid_cols = a_groups.iter().map(|g| g.offsets.len()).max().unwrap_or(1);
+        let grid_rows = b_groups.iter().map(|g| g.offsets.len()).max().unwrap_or(1);
+        BlockPlan {
+            a_groups,
+            b_groups,
+            windows,
+            grid_cols: grid_cols.max(1),
+            grid_rows: grid_rows.max(1),
+        }
+    }
+
+    /// Total group-pair tasks (windows included).
+    pub fn task_count(&self) -> usize {
+        self.a_groups.len() * self.b_groups.len() * self.windows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::ONE;
+    use crate::sim::config::SimConfig;
+
+    #[test]
+    fn diagonal_blocking_chunks() {
+        let offs: Vec<i64> = (-5..=5).collect();
+        let groups = diagonal_blocking(&offs, 4);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].offsets, vec![-5, -4, -3, -2]);
+        assert_eq!(groups[2].offsets, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn rowcol_windows_cover_everything() {
+        let ws = rowcol_blocking(10, 3);
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws[0], Window { lo: 0, hi: 3 });
+        assert_eq!(ws[3], Window { lo: 9, hi: 10 });
+        assert_eq!(ws.iter().map(|w| w.hi - w.lo).sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn window_element_counts() {
+        // Paper Fig. 7a: n=5 split at column 3 (1-based) → windows
+        // [0,3) and [3,5).
+        let n = 5;
+        // A diagonal +1: columns 1..5. Window [0,3): columns 1,2 → 2.
+        assert_eq!(elements_in_window_a(n, 1, Window { lo: 0, hi: 3 }), 2);
+        assert_eq!(elements_in_window_a(n, 1, Window { lo: 3, hi: 5 }), 2);
+        // B diagonal -2: rows 2..5. Window [0,3): row 2 → 1.
+        assert_eq!(elements_in_window_b(n, -2, Window { lo: 0, hi: 3 }), 1);
+        assert_eq!(elements_in_window_b(n, -2, Window { lo: 3, hi: 5 }), 2);
+    }
+
+    #[test]
+    fn plan_respects_grid_bounds() {
+        let mut a = DiagMatrix::zeros(32);
+        let mut b = DiagMatrix::zeros(32);
+        for d in -10i64..=10 {
+            a.set_diag(d, vec![ONE; DiagMatrix::diag_len(32, d)]);
+            b.set_diag(d, vec![ONE; DiagMatrix::diag_len(32, d)]);
+        }
+        let cfg = SimConfig {
+            max_rows: 8,
+            max_cols: 4,
+            group_size: 8,
+            ..SimConfig::default()
+        };
+        let plan = BlockPlan::plan(&a, &b, &cfg);
+        assert!(plan.grid_cols <= 4);
+        assert!(plan.grid_rows <= 8);
+        assert_eq!(plan.a_groups.len(), 6); // 21 diagonals / 4
+        assert_eq!(plan.b_groups.len(), 3); // 21 / 8
+        assert_eq!(plan.task_count(), 18);
+    }
+
+    #[test]
+    fn independent_partitioning_of_a_and_b() {
+        // Paper: A and B may be grouped independently (A grows during the
+        // Taylor chain, B stays fixed).
+        let a_off: Vec<i64> = (-20..=20).collect();
+        let b_off: Vec<i64> = (-3..=3).collect();
+        let ag = diagonal_blocking(&a_off, 16);
+        let bg = diagonal_blocking(&b_off, 16);
+        assert_eq!(ag.len(), 3);
+        assert_eq!(bg.len(), 1);
+    }
+}

@@ -1,0 +1,121 @@
+//! Simulator configuration.
+
+/// Order in which a matrix's diagonals are fed into the grid (Fig. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeedOrder {
+    /// Ascending diagonal offset.
+    Ascending,
+    /// Descending diagonal offset.
+    Descending,
+}
+
+/// DIAMOND device configuration.
+///
+/// Defaults follow the paper's evaluation setup: a PE budget equal to the
+/// matrix dimension capped at 1024 (32×32 grid), a 2-set 2-way cache whose
+/// lines each hold one diagonal block group, 1-cycle hits, a 5-cycle LRU
+/// miss penalty, and 50-cycle DRAM accesses (Sec. IV-D, V-A).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Maximum grid rows (one per B diagonal in the active group).
+    pub max_rows: usize,
+    /// Maximum grid columns (one per A diagonal in the active group).
+    pub max_cols: usize,
+    /// Feeding order for A (top) — paper default: ascending.
+    pub a_order: FeedOrder,
+    /// Feeding order for B (left) — paper default: descending (Fig. 5b).
+    pub b_order: FeedOrder,
+    /// Cache sets.
+    pub cache_sets: usize,
+    /// Cache ways per set.
+    pub cache_ways: usize,
+    /// Cycles for a cache hit.
+    pub cache_hit_cycles: u64,
+    /// Extra cycles charged on a miss (LRU handling).
+    pub cache_miss_penalty: u64,
+    /// Cycles for a DRAM read or write.
+    pub dram_cycles: u64,
+    /// Row/col-wise blocking segment length (diagonal elements per
+    /// segment); bounds the per-diagonal buffer. `usize::MAX` disables.
+    pub segment_len: usize,
+    /// Diagonal blocking group size (diagonals per group); bounds the
+    /// grid. Groups of A are capped at `max_cols`, B at `max_rows`.
+    pub group_size: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            max_rows: 32,
+            max_cols: 32,
+            a_order: FeedOrder::Ascending,
+            b_order: FeedOrder::Descending,
+            cache_sets: 2,
+            cache_ways: 2,
+            cache_hit_cycles: 1,
+            cache_miss_penalty: 5,
+            dram_cycles: 50,
+            segment_len: usize::MAX,
+            group_size: 32,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Paper's fairness rule: total PE budget equals the matrix dimension
+    /// (capped at 1024 → a 32×32 grid); single-diagonal workloads use the
+    /// compact 1×4 pipelined grid (Sec. V-A2).
+    pub fn for_workload(dim: usize, nnzd_a: usize, nnzd_b: usize) -> SimConfig {
+        let budget = dim.min(1024);
+        if nnzd_a == 1 && nnzd_b == 1 {
+            return SimConfig {
+                max_rows: 1,
+                max_cols: 4,
+                group_size: 4,
+                ..SimConfig::default()
+            };
+        }
+        // Balanced grid within the budget.
+        let side = (budget as f64).sqrt() as usize;
+        let side = side.max(1);
+        SimConfig {
+            max_rows: side.min(nnzd_b.next_power_of_two()).max(1),
+            max_cols: side.min(nnzd_a.next_power_of_two()).max(1),
+            group_size: side,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Total PEs the configuration can activate.
+    pub fn pe_budget(&self) -> usize {
+        self.max_rows * self.max_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_cache() {
+        let c = SimConfig::default();
+        assert_eq!(c.cache_sets, 2);
+        assert_eq!(c.cache_ways, 2);
+        assert_eq!(c.dram_cycles, 50);
+        assert_eq!(c.cache_miss_penalty, 5);
+    }
+
+    #[test]
+    fn single_diagonal_uses_compact_grid() {
+        let c = SimConfig::for_workload(1024, 1, 1);
+        assert_eq!((c.max_rows, c.max_cols), (1, 4));
+        assert_eq!(c.pe_budget(), 4);
+    }
+
+    #[test]
+    fn budget_capped_at_1024() {
+        let c = SimConfig::for_workload(16384, 40, 40);
+        assert!(c.pe_budget() <= 1024);
+        assert!(c.max_rows >= 1 && c.max_cols >= 1);
+    }
+}

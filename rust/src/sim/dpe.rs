@@ -1,0 +1,176 @@
+//! The Diagonal Processing Element (paper Sec. IV-A, Fig. 4).
+//!
+//! Each DPE holds one operand from A (streamed down its column) and one
+//! from B (streamed right along its row) in size-1 slots, and applies the
+//! comparator logic of Table I:
+//!
+//! | condition        | action                                   |
+//! |------------------|------------------------------------------|
+//! | `j_A == i_B`     | multiply, then forward both              |
+//! | `j_A != i_B`     | hold the larger index, forward the other |
+//! | missing one      | forward the existing operand*            |
+//! | missing both     | wait                                     |
+//!
+//! *The "missing one → forward" rule is lossless because the grid feeds
+//! streams index-aligned (see [`super::grid`]): an operand's unique
+//! potential match arrives in the same cycle or never. The hold path for
+//! mismatched pairs is kept as defensive logic for externally-fed streams
+//! and never fires under the aligned schedule.
+
+use crate::num::Complex;
+
+/// A matrix element in flight: original coordinates plus value
+/// (the paper's index-builder metadata, Fig. 9b).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Elem {
+    pub i: u32,
+    pub j: u32,
+    pub v: Complex,
+}
+
+/// A token on a stream: data or end-of-stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Token {
+    Data(Elem),
+    Eos,
+}
+
+/// Operand slot: the held element plus a `done` mark (already multiplied
+/// here, awaiting forwarding bandwidth).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Slot {
+    pub elem: Option<Elem>,
+    pub done: bool,
+}
+
+/// What the comparator decides this cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Multiply and forward both operands.
+    Multiply,
+    /// Forward the A operand (it can no longer match here).
+    ForwardA,
+    /// Forward the B operand.
+    ForwardB,
+    /// Forward both (both already consumed by a multiply).
+    ForwardBoth,
+    /// Nothing can happen.
+    Wait,
+}
+
+/// One DPE's architectural state.
+#[derive(Clone, Debug, Default)]
+pub struct Dpe {
+    pub a: Slot,
+    pub b: Slot,
+    /// EOS observed on the A (top) / B (left) stream.
+    pub a_eos_seen: bool,
+    pub b_eos_seen: bool,
+    /// EOS still needs forwarding to the neighbour.
+    pub a_eos_pending: bool,
+    pub b_eos_pending: bool,
+    // --- statistics ---
+    pub mults: u64,
+    pub active_cycles: u64,
+    pub stall_cycles: u64,
+}
+
+impl Dpe {
+    /// The comparator (Table I), pure over the two slots.
+    pub fn decide(&self) -> Action {
+        match (self.a.elem, self.b.elem) {
+            (Some(a), Some(b)) => match (self.a.done, self.b.done) {
+                (true, true) => Action::ForwardBoth,
+                (true, false) => Action::ForwardA,
+                (false, true) => Action::ForwardB,
+                (false, false) => {
+                    if a.j == b.i {
+                        Action::Multiply
+                    } else if a.j < b.i {
+                        // A is behind: B indices only increase, no match left.
+                        Action::ForwardA
+                    } else {
+                        Action::ForwardB
+                    }
+                }
+            },
+            // Table I "missing one → forward the existing operand".
+            // Under the grid's index-aligned feed schedule a matching
+            // token always arrives in the *same* cycle as its partner, so
+            // a lone operand provably has no future match and forwarding
+            // immediately is lossless (grid tests cross-check every
+            // product against the diag_mul oracle).
+            (Some(_), None) => Action::ForwardA,
+            (None, Some(_)) => Action::ForwardB,
+            (None, None) => Action::Wait,
+        }
+    }
+
+    /// True when the DPE holds no state at all (for quiescence checks).
+    pub fn is_empty(&self) -> bool {
+        self.a.elem.is_none()
+            && self.b.elem.is_none()
+            && !self.a_eos_pending
+            && !self.b_eos_pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::ONE;
+
+    fn el(i: u32, j: u32) -> Elem {
+        Elem { i, j, v: ONE }
+    }
+
+    #[test]
+    fn match_multiplies() {
+        let mut d = Dpe::default();
+        d.a.elem = Some(el(0, 3));
+        d.b.elem = Some(el(3, 5));
+        assert_eq!(d.decide(), Action::Multiply);
+    }
+
+    #[test]
+    fn smaller_index_is_forwarded() {
+        let mut d = Dpe::default();
+        d.a.elem = Some(el(0, 2)); // j_A = 2
+        d.b.elem = Some(el(4, 5)); // i_B = 4 → A behind, forward A
+        assert_eq!(d.decide(), Action::ForwardA);
+
+        d.a.elem = Some(el(0, 7));
+        assert_eq!(d.decide(), Action::ForwardB);
+    }
+
+    #[test]
+    fn lone_operand_forwards() {
+        // Table I row 3: under index-aligned feeding a lone operand has
+        // provably missed its only possible match.
+        let mut d = Dpe::default();
+        d.a.elem = Some(el(0, 2));
+        assert_eq!(d.decide(), Action::ForwardA);
+        d.a.elem = None;
+        d.b.elem = Some(el(1, 4));
+        assert_eq!(d.decide(), Action::ForwardB);
+    }
+
+    #[test]
+    fn done_operands_only_forward() {
+        let mut d = Dpe::default();
+        d.a.elem = Some(el(0, 3));
+        d.b.elem = Some(el(3, 5));
+        d.a.done = true;
+        d.b.done = true;
+        assert_eq!(d.decide(), Action::ForwardBoth);
+        d.b.done = false;
+        assert_eq!(d.decide(), Action::ForwardA);
+    }
+
+    #[test]
+    fn empty_waits() {
+        let d = Dpe::default();
+        assert_eq!(d.decide(), Action::Wait);
+        assert!(d.is_empty());
+    }
+}

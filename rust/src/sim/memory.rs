@@ -1,0 +1,249 @@
+//! Two-level memory system (paper Sec. IV-D).
+//!
+//! A set-associative LRU cache fronts a fixed-latency DRAM. Each cache
+//! line holds one *diagonal block group* (the paper's blocking maps each
+//! group to a dedicated line). Hits cost 1 cycle; misses add a 5-cycle LRU
+//! penalty and a 50-cycle DRAM access. The model's purpose — exactly as
+//! the paper frames it — is to expose how blocking changes locality, not
+//! to reproduce DRAM microarchitecture.
+
+use std::collections::HashMap;
+
+/// Identifies one cacheable unit: a diagonal block group of one matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LineId {
+    /// Which matrix the group belongs to (0 = A, 1 = B, 2 = C/output,
+    /// higher values for chained intermediates).
+    pub matrix: u32,
+    /// Group index within the matrix.
+    pub group: u32,
+    /// Row/col-blocking segment index within the group.
+    pub segment: u32,
+}
+
+/// Result of one cache access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    Miss,
+}
+
+/// Cache + DRAM statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    /// Total memory cycles charged (hits + miss penalties + DRAM).
+    pub cycles: u64,
+    /// Elements moved to/from DRAM (for the energy model).
+    pub dram_elements: u64,
+}
+
+impl MemStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.accesses() as f64
+    }
+
+    pub fn accumulate(&mut self, o: &MemStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.dram_reads += o.dram_reads;
+        self.dram_writes += o.dram_writes;
+        self.cycles += o.cycles;
+        self.dram_elements += o.dram_elements;
+    }
+}
+
+/// A set-associative LRU cache over diagonal block groups.
+#[derive(Clone, Debug)]
+pub struct GroupCache {
+    sets: usize,
+    ways: usize,
+    hit_cycles: u64,
+    miss_penalty: u64,
+    dram_cycles: u64,
+    /// Per set: (line, last-use stamp), at most `ways` entries.
+    lines: Vec<Vec<(LineId, u64)>>,
+    clock: u64,
+    pub stats: MemStats,
+}
+
+impl GroupCache {
+    pub fn new(sets: usize, ways: usize, hit_cycles: u64, miss_penalty: u64, dram_cycles: u64) -> Self {
+        assert!(sets > 0 && ways > 0);
+        GroupCache {
+            sets,
+            ways,
+            hit_cycles,
+            miss_penalty,
+            dram_cycles,
+            lines: vec![Vec::new(); sets],
+            clock: 0,
+            stats: MemStats::default(),
+        }
+    }
+
+    pub fn from_config(cfg: &super::config::SimConfig) -> Self {
+        Self::new(
+            cfg.cache_sets,
+            cfg.cache_ways,
+            cfg.cache_hit_cycles,
+            cfg.cache_miss_penalty,
+            cfg.dram_cycles,
+        )
+    }
+
+    fn set_of(&self, id: LineId) -> usize {
+        // Simple mix of the id fields.
+        let h = (id.matrix as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((id.group as u64).wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(id.segment as u64);
+        (h % self.sets as u64) as usize
+    }
+
+    /// Read access: returns hit/miss and charges cycles. `elements` is the
+    /// group's element count (charged to DRAM traffic on a miss).
+    pub fn read(&mut self, id: LineId, elements: u64) -> Access {
+        self.clock += 1;
+        let set = self.set_of(id);
+        let ways = self.ways;
+        let entry = self.lines[set].iter_mut().find(|(l, _)| *l == id);
+        match entry {
+            Some((_, stamp)) => {
+                *stamp = self.clock;
+                self.stats.hits += 1;
+                self.stats.cycles += self.hit_cycles;
+                Access::Hit
+            }
+            None => {
+                self.stats.misses += 1;
+                self.stats.dram_reads += 1;
+                self.stats.dram_elements += elements;
+                self.stats.cycles += self.hit_cycles + self.miss_penalty + self.dram_cycles;
+                if self.lines[set].len() >= ways {
+                    // Evict LRU.
+                    let lru = self.lines[set]
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, (_, s))| *s)
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    self.lines[set].swap_remove(lru);
+                }
+                let clock = self.clock;
+                self.lines[set].push((id, clock));
+                Access::Miss
+            }
+        }
+    }
+
+    /// Write access (accumulator write-back): write-allocate; the DRAM
+    /// drain itself is asynchronous (off the critical path) but counted
+    /// in the traffic ledger for the energy model.
+    pub fn write(&mut self, id: LineId, elements: u64) -> Access {
+        let acc = self.read(id, 0);
+        self.stats.dram_writes += 1;
+        self.stats.dram_elements += elements;
+        acc
+    }
+
+    /// Currently resident line count (for tests).
+    pub fn resident(&self) -> usize {
+        self.lines.iter().map(Vec::len).sum()
+    }
+}
+
+/// Bytes-level DRAM traffic ledger used by baseline models that bypass the
+/// group cache (SIGMA's bitmap streaming, OP/Gustavson fiber walks).
+#[derive(Clone, Debug, Default)]
+pub struct TrafficLedger {
+    pub reads_by_tag: HashMap<&'static str, u64>,
+    pub writes_by_tag: HashMap<&'static str, u64>,
+}
+
+impl TrafficLedger {
+    pub fn read(&mut self, tag: &'static str, elements: u64) {
+        *self.reads_by_tag.entry(tag).or_insert(0) += elements;
+    }
+
+    pub fn write(&mut self, tag: &'static str, elements: u64) {
+        *self.writes_by_tag.entry(tag).or_insert(0) += elements;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.reads_by_tag.values().sum::<u64>() + self.writes_by_tag.values().sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(m: u32, g: u32) -> LineId {
+        LineId {
+            matrix: m,
+            group: g,
+            segment: 0,
+        }
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = GroupCache::new(2, 2, 1, 5, 50);
+        assert_eq!(c.read(id(0, 0), 10), Access::Miss);
+        assert_eq!(c.read(id(0, 0), 10), Access::Hit);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.dram_elements, 10);
+        // miss: 1 + 5 + 50; hit: 1
+        assert_eq!(c.stats.cycles, 57);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 1 set, 2 ways: third distinct line evicts the least recent.
+        let mut c = GroupCache::new(1, 2, 1, 5, 50);
+        c.read(id(0, 0), 1);
+        c.read(id(0, 1), 1);
+        c.read(id(0, 0), 1); // refresh line 0
+        c.read(id(0, 2), 1); // evicts line 1
+        assert_eq!(c.read(id(0, 0), 1), Access::Hit);
+        assert_eq!(c.read(id(0, 1), 1), Access::Miss);
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let mut c = GroupCache::new(2, 2, 1, 5, 50);
+        for g in 0..100 {
+            c.read(id(0, g), 1);
+        }
+        assert!(c.resident() <= 4);
+    }
+
+    #[test]
+    fn write_counts_dram_traffic() {
+        let mut c = GroupCache::new(2, 2, 1, 5, 50);
+        c.write(id(2, 0), 64);
+        assert_eq!(c.stats.dram_writes, 1);
+        assert_eq!(c.stats.dram_elements, 64);
+    }
+
+    #[test]
+    fn hit_rate_reporting() {
+        let mut c = GroupCache::new(2, 2, 1, 5, 50);
+        c.read(id(0, 0), 1);
+        c.read(id(0, 0), 1);
+        c.read(id(0, 0), 1);
+        assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

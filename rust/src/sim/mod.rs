@@ -1,0 +1,30 @@
+//! The cycle-accurate DIAMOND simulator (paper Sec. IV).
+//!
+//! The simulator is split the way the microarchitecture is:
+//!
+//! * [`config`] — grid/cache/DRAM parameters.
+//! * [`dpe`] — one Diagonal Processing Element: comparator, multiplier,
+//!   size-1 FIFOs, and the Table I hold/forward control.
+//! * [`grid`] — the systolic DPE grid with staggered diagonal feeding
+//!   (Fig. 5 orders) and cycle stepping.
+//! * [`accumulator`] — per-output-diagonal accumulators fed over the NoC.
+//! * [`memory`] — the two-level memory system: set-associative LRU cache
+//!   (hit 1 cy, miss +5 cy) over a fixed-latency DRAM (50 cy).
+//! * [`blocking`] — row/col-wise and diagonal blocking (Sec. IV-C).
+//! * [`cycle_model`] — the analytic stage equations (Eqs. 10–18), cross-
+//!   validated against the stepped grid in tests.
+//! * [`device`] — a full DIAMOND device: blocking planner + grid + cache,
+//!   executing a complete SpMSpM and reporting cycles/energy activity.
+
+pub mod accumulator;
+pub mod blocking;
+pub mod config;
+pub mod cycle_model;
+pub mod device;
+pub mod dpe;
+pub mod grid;
+pub mod memory;
+
+pub use config::{FeedOrder, SimConfig};
+pub use device::{DiamondDevice, SimReport};
+pub use grid::{GridResult, GridSim};

@@ -1,0 +1,120 @@
+//! Test utilities: a seeded PRNG and a tiny property-testing harness.
+//!
+//! The build environment is offline, so `proptest`/`rand` are unavailable;
+//! `XorShift64` + [`prop_check`] give deterministic, seed-reporting
+//! randomized tests with the same spirit.
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        XorShift64 {
+            state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform usize in `[lo, hi)`. Panics when `lo >= hi`.
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi)`.
+    pub fn gen_range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi);
+        lo + (self.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    /// Bernoulli(p).
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(0, xs.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Run `cases` seeded property cases; on failure report the seed so the
+/// case can be replayed. `f` receives a fresh PRNG per case.
+pub fn prop_check<F: Fn(&mut XorShift64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0x00D1_A40D ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = XorShift64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut rng = XorShift64::new(11);
+        for _ in 0..1000 {
+            let x = rng.gen_range(3, 10);
+            assert!((3..10).contains(&x));
+            let y = rng.gen_range_i64(-5, 6);
+            assert!((-5..6).contains(&y));
+            let f = rng.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = XorShift64::new(3);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn prop_check_reports_seed() {
+        prop_check("always-fails", 1, |_| Err("nope".into()));
+    }
+}

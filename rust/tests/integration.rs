@@ -1,0 +1,242 @@
+//! Cross-module integration: Hamiltonian generators → simulator →
+//! coordinator → energy, all without PJRT (oracle functional path).
+
+use diamond::coordinator::Coordinator;
+use diamond::format::convert::diag_to_dense;
+use diamond::ham::{build, Family};
+use diamond::linalg::diag_mul;
+use diamond::sim::grid::grid_spmspm;
+use diamond::sim::{DiamondDevice, FeedOrder, SimConfig};
+use diamond::taylor;
+
+#[test]
+fn grid_sim_reproduces_hamiltonian_square() {
+    // H^2 on the stepped grid == reference diagonal convolution,
+    // for every benchmark family at a small size.
+    for family in Family::all() {
+        let qubits = if family == Family::FermiHubbard || family == Family::BoseHubbard {
+            6
+        } else {
+            5
+        };
+        let h = build(family, qubits).matrix;
+        let res = grid_spmspm(&h, &h, FeedOrder::Ascending, FeedOrder::Descending);
+        let mut want = diag_mul(&h, &h);
+        want.prune(1e-13);
+        let mut got = res.c;
+        got.prune(1e-13);
+        assert!(
+            got.max_abs_diff(&want) < 1e-9,
+            "{} mismatch",
+            family.name()
+        );
+    }
+}
+
+#[test]
+fn device_blocking_preserves_values_on_real_workload() {
+    let h = build(Family::Heisenberg, 7).matrix;
+    let cfg = SimConfig {
+        max_rows: 4,
+        max_cols: 4,
+        group_size: 4,
+        segment_len: 32,
+        ..SimConfig::default()
+    };
+    let mut dev = DiamondDevice::new(cfg);
+    let (ia, ib, ic) = (
+        dev.register_matrix(),
+        dev.register_matrix(),
+        dev.register_matrix(),
+    );
+    let (c, report) = dev.spmspm(&h, ia, &h, ib, ic);
+    let mut want = diag_mul(&h, &h);
+    want.prune(1e-13);
+    let mut got = c;
+    got.prune(1e-13);
+    assert!(got.max_abs_diff(&want) < 1e-9);
+    assert!(report.tasks > 1, "blocking must split the work");
+}
+
+#[test]
+fn evolution_operator_is_unitary_for_all_families() {
+    for family in Family::all() {
+        let qubits = if family == Family::FermiHubbard || family == Family::BoseHubbard {
+            4
+        } else {
+            4
+        };
+        let h = build(family, qubits).matrix;
+        let t = taylor::normalized_t(&h).min(0.05);
+        let iters = taylor::iters_for(&h, t, 1e-10);
+        let coord = Coordinator::oracle();
+        let cfg = SimConfig::for_workload(h.dim(), h.nnzd(), h.nnzd());
+        let rep = coord.evolve(&h, t, iters, cfg).unwrap();
+        // U U-dagger == I within Taylor tolerance.
+        let u = diag_to_dense(&rep.op);
+        let n = u.rows;
+        let mut err: f64 = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = diamond::num::ZERO;
+                for k in 0..n {
+                    s += u.get(i, k) * u.get(j, k).conj();
+                }
+                let expect = if i == j { diamond::num::ONE } else { diamond::num::ZERO };
+                err = err.max((s - expect).abs());
+            }
+        }
+        assert!(err < 1e-6, "{}: unitarity error {err}", family.name());
+    }
+}
+
+#[test]
+fn cycle_counts_scale_with_diagonals_not_dimension() {
+    // The paper's central claim: DIAMOND decouples from matrix dimension.
+    // Same diagonal count, 4x the dimension -> cycles grow ~linearly with
+    // the diagonal LENGTH (N), not N^2.
+    let h5 = build(Family::Tfim, 5).matrix;
+    let h7 = build(Family::Tfim, 7).matrix;
+    let coord = Coordinator::oracle();
+    let r5 = coord
+        .evolve(&h5, 0.05, 3, SimConfig::for_workload(h5.dim(), h5.nnzd(), h5.nnzd()))
+        .unwrap();
+    let r7 = coord
+        .evolve(&h7, 0.05, 3, SimConfig::for_workload(h7.dim(), h7.nnzd(), h7.nnzd()))
+        .unwrap();
+    let ratio = r7.total.grid.cycles as f64 / r5.total.grid.cycles as f64;
+    // dimension grew 4x; diagonal-space work grows ~4x (length), never ~16x
+    assert!(ratio < 8.0, "cycles ratio {ratio}");
+}
+
+#[test]
+fn energy_ordering_diamond_vs_sigma() {
+    let h = build(Family::MaxCut, 8).matrix;
+    let coord = Coordinator::oracle();
+    let cfg = SimConfig::for_workload(h.dim(), h.nnzd(), h.nnzd());
+    let rep = coord.evolve(&h, taylor::normalized_t(&h), 4, cfg).unwrap();
+    let mut sigma = diamond::baselines::sigma::Sigma::for_dim(h.dim());
+    let base = Coordinator::evolve_baseline(&h, taylor::normalized_t(&h), 4, &mut sigma);
+    let e_d = rep.energy_joules();
+    let e_s = base.energy_joules();
+    assert!(
+        e_s / e_d > 10.0,
+        "energy saving only {:.1}x (DIAMOND {e_d:.3e} J vs SIGMA {e_s:.3e} J)",
+        e_s / e_d
+    );
+}
+
+#[test]
+fn cli_experiments_run() {
+    assert_eq!(diamond::cli::run_with_args(vec!["table3".into()]), 0);
+    assert_eq!(diamond::cli::run_with_args(vec!["help".into()]), 0);
+    assert_eq!(
+        diamond::cli::run_with_args(vec![
+            "evolve".into(),
+            "--family".into(),
+            "tfim".into(),
+            "--qubits".into(),
+            "5".into(),
+        ]),
+        0
+    );
+}
+
+// --- failure injection -------------------------------------------------
+
+#[test]
+fn runtime_rejects_missing_artifact_dir() {
+    let err = diamond::runtime::Runtime::load("/nonexistent/path/xyz");
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("manifest"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn runtime_rejects_corrupt_manifest_and_hlo() {
+    let dir = std::env::temp_dir().join(format!("diamond-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Manifest referencing a garbage HLO file.
+    std::fs::write(dir.join("manifest.txt"), "bad.hlo.txt 16 1 1\n").unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO").unwrap();
+    let err = diamond::runtime::Runtime::load(&dir);
+    assert!(err.is_err(), "corrupt HLO must fail to compile");
+    // Manifest with malformed rows only -> no artifacts.
+    std::fs::write(dir.join("manifest.txt"), "too few fields\n").unwrap();
+    let err = diamond::runtime::Runtime::load(&dir);
+    assert!(err.is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn device_handles_degenerate_inputs() {
+    use diamond::sim::DiamondDevice;
+    let mut dev = DiamondDevice::new(SimConfig::default());
+    let (ia, ib, ic) = (
+        dev.register_matrix(),
+        dev.register_matrix(),
+        dev.register_matrix(),
+    );
+    // Empty x identity.
+    let empty = diamond::format::DiagMatrix::zeros(8);
+    let id = diamond::format::DiagMatrix::identity(8);
+    let (c, rep) = dev.spmspm(&empty, ia, &id, ib, ic);
+    assert_eq!(c.nnzd(), 0);
+    assert_eq!(rep.tasks, 0);
+    // 1x1 matrices.
+    let one = diamond::format::DiagMatrix::identity(1);
+    let (i1, i2, i3) = (
+        dev.register_matrix(),
+        dev.register_matrix(),
+        dev.register_matrix(),
+    );
+    let (c, rep) = dev.spmspm(&one, i1, &one, i2, i3);
+    assert_eq!(c.get(0, 0), diamond::num::ONE);
+    assert!(rep.grid.mults >= 1);
+}
+
+#[test]
+fn grid_with_bounded_fifo_still_correct_on_banded_input() {
+    // The paper's size-1 FIFOs: on dense-banded (aligned) workloads the
+    // bounded grid must finish and agree with the oracle.
+    use diamond::sim::grid::{DiagStream, GridSim};
+    let n = 32;
+    let mut a = diamond::format::DiagMatrix::zeros(n);
+    let mut b = diamond::format::DiagMatrix::zeros(n);
+    for d in -2i64..=2 {
+        let len = diamond::format::DiagMatrix::diag_len(n, d);
+        a.set_diag(d, vec![diamond::num::ONE; len]);
+        b.set_diag(d, vec![diamond::num::Complex::new(0.5, -0.5); len]);
+    }
+    let a_streams: Vec<DiagStream> = a.offsets().iter().map(|&d| DiagStream::full(&a, d)).collect();
+    let mut b_off = b.offsets();
+    b_off.reverse();
+    let b_streams: Vec<DiagStream> = b_off.iter().map(|&d| DiagStream::full(&b, d)).collect();
+    let mut grid = GridSim::with_fifo_cap(n, 5, 5, 1);
+    let res = grid.run(&a_streams, &b_streams);
+    let mut want = diag_mul(&a, &b);
+    want.prune(1e-13);
+    let mut got = res.c;
+    got.prune(1e-13);
+    assert!(got.max_abs_diff(&want) < 1e-12);
+    assert_eq!(res.stats.peak_fifo_depth, 1);
+}
+
+#[test]
+fn batch_server_survives_empty_and_huge_batches() {
+    use diamond::coordinator::server::{BatchServer, SpmspmRequest};
+    let mut server = BatchServer::oracle(2);
+    let out = server.serve(Vec::new()).unwrap();
+    assert!(out.is_empty());
+    let id = diamond::format::DiagMatrix::identity(4);
+    let jobs: Vec<SpmspmRequest> = (0..9)
+        .map(|i| SpmspmRequest {
+            id: i,
+            a: id.clone(),
+            b: id.clone(),
+        })
+        .collect();
+    let out = server.serve(jobs).unwrap();
+    assert_eq!(out.len(), 9);
+    assert!(server.stats.batches >= 5); // ceil(9/2)
+}

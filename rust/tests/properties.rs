@@ -1,0 +1,188 @@
+//! Repo-level property tests: invariants that tie the layers together.
+
+use diamond::format::convert::{diag_to_dense, dense_to_diag};
+use diamond::format::DiagMatrix;
+use diamond::linalg::{diag_mul, diag_mul_counted};
+use diamond::num::{Complex, ONE};
+use diamond::sim::grid::grid_spmspm;
+use diamond::sim::{FeedOrder, SimConfig};
+use diamond::testutil::{prop_check, XorShift64};
+
+fn random_diag(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    for _ in 0..rng.gen_range(1, max_diags + 1) {
+        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+        let len = DiagMatrix::diag_len(n, d);
+        let vals: Vec<Complex> = (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
+#[test]
+fn associativity_of_diag_mul() {
+    prop_check("(AB)C == A(BC)", 12, |rng| {
+        let n = rng.gen_range(3, 20);
+        let a = random_diag(rng, n, 4);
+        let b = random_diag(rng, n, 4);
+        let c = random_diag(rng, n, 4);
+        let lhs = diag_mul(&diag_mul(&a, &b), &c);
+        let rhs = diag_mul(&a, &diag_mul(&b, &c));
+        let diff = lhs.max_abs_diff(&rhs);
+        if diff > 1e-10 {
+            return Err(format!("n={n} diff={diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn distributivity_over_addition() {
+    prop_check("A(B+C) == AB + AC", 12, |rng| {
+        let n = rng.gen_range(3, 20);
+        let a = random_diag(rng, n, 4);
+        let b = random_diag(rng, n, 4);
+        let c = random_diag(rng, n, 4);
+        let lhs = diag_mul(&a, &b.add(&c));
+        let mut rhs = diag_mul(&a, &b);
+        rhs.add_assign_scaled(&diag_mul(&a, &c), ONE);
+        let diff = lhs.max_abs_diff(&rhs);
+        if diff > 1e-10 {
+            return Err(format!("n={n} diff={diff}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transpose_like_symmetry_of_offsets() {
+    // offsets(C) is a subset of the Minkowski sum of the operand offsets
+    prop_check("offsets(AB) subset of D_A (+) D_B", 16, |rng| {
+        let n = rng.gen_range(3, 24);
+        let a = random_diag(rng, n, 5);
+        let b = random_diag(rng, n, 5);
+        let c = diag_mul(&a, &b);
+        let sums: std::collections::BTreeSet<i64> = a
+            .offsets()
+            .iter()
+            .flat_map(|&x| b.offsets().into_iter().map(move |y| x + y))
+            .collect();
+        for d in c.offsets() {
+            if !sums.contains(&d) {
+                return Err(format!("offset {d} not in Minkowski sum"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mult_count_invariant_under_feed_order() {
+    prop_check("grid mults independent of feed order", 8, |rng| {
+        let n = rng.gen_range(4, 20);
+        let a = random_diag(rng, n, 4);
+        let b = random_diag(rng, n, 4);
+        let (_, stats) = diag_mul_counted(&a, &b);
+        for ao in [FeedOrder::Ascending, FeedOrder::Descending] {
+            for bo in [FeedOrder::Ascending, FeedOrder::Descending] {
+                let res = grid_spmspm(&a, &b, ao, bo);
+                if res.stats.mults as usize != stats.mults {
+                    return Err(format!(
+                        "order {ao:?}/{bo:?}: {} != {}",
+                        res.stats.mults, stats.mults
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grid_cycles_bounded_by_complexity_eq18() {
+    // O(|D_A| + |D_B| + N) with a reasonable constant (stalls included).
+    prop_check("cycles within constant of Eq. 18", 10, |rng| {
+        let n = rng.gen_range(8, 48);
+        let a = random_diag(rng, n, 5);
+        let b = random_diag(rng, n, 5);
+        let res = grid_spmspm(&a, &b, FeedOrder::Ascending, FeedOrder::Descending);
+        let bound = 6 * diamond::sim::cycle_model::complexity_bound(a.nnzd(), b.nnzd(), n);
+        if res.stats.cycles > bound {
+            return Err(format!("cycles {} > 6x bound {bound}", res.stats.cycles));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dense_roundtrip_is_lossless() {
+    prop_check("diag -> dense -> diag", 16, |rng| {
+        let n = rng.gen_range(2, 24);
+        let m = random_diag(rng, n, 6);
+        let back = dense_to_diag(&diag_to_dense(&m), 0.0);
+        if m.max_abs_diff(&back) > 1e-15 {
+            return Err("roundtrip loss".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn device_report_invariants() {
+    // mults == NoC transfers == accumulator adds; popouts == fed tokens.
+    prop_check("conservation of tokens and products", 8, |rng| {
+        let n = rng.gen_range(6, 32);
+        let a = random_diag(rng, n, 5);
+        let b = random_diag(rng, n, 5);
+        let res = grid_spmspm(&a, &b, FeedOrder::Ascending, FeedOrder::Descending);
+        if res.stats.mults != res.stats.noc_transfers {
+            return Err("mults != noc".into());
+        }
+        if res.stats.mults != res.stats.acc_adds {
+            return Err("mults != adds".into());
+        }
+        if res.stats.popouts != res.stats.fed_a + res.stats.fed_b {
+            return Err(format!(
+                "popouts {} != fed {}",
+                res.stats.popouts,
+                res.stats.fed_a + res.stats.fed_b
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blocking_equivalence_under_any_geometry() {
+    use diamond::sim::DiamondDevice;
+    prop_check("any blocking geometry preserves the product", 8, |rng| {
+        let n = rng.gen_range(8, 32);
+        let a = random_diag(rng, n, 6);
+        let b = random_diag(rng, n, 6);
+        let cfg = SimConfig {
+            max_rows: rng.gen_range(1, 5),
+            max_cols: rng.gen_range(1, 5),
+            group_size: rng.gen_range(1, 6),
+            segment_len: rng.gen_range(2, n + 4),
+            ..SimConfig::default()
+        };
+        let mut dev = DiamondDevice::new(cfg);
+        let (ia, ib, ic) = (
+            dev.register_matrix(),
+            dev.register_matrix(),
+            dev.register_matrix(),
+        );
+        let (c, _) = dev.spmspm(&a, ia, &b, ib, ic);
+        let mut want = diag_mul(&a, &b);
+        want.prune(1e-13);
+        let mut got = c;
+        got.prune(1e-13);
+        let diff = got.max_abs_diff(&want);
+        if diff > 1e-10 {
+            return Err(format!("n={n} diff={diff}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,135 @@
+//! PJRT integration: load the AOT artifacts (built by `make artifacts`)
+//! and verify the functional path end to end against the Rust oracle.
+//!
+//! These tests require `artifacts/manifest.txt`; they are skipped (with a
+//! loud message) when artifacts are missing so `cargo test` stays usable
+//! before the first `make artifacts`.
+
+use diamond::coordinator::Coordinator;
+use diamond::format::DiagMatrix;
+use diamond::linalg::diag_mul;
+use diamond::num::Complex;
+use diamond::runtime::engine::DiagEngine;
+use diamond::runtime::Runtime;
+use diamond::sim::SimConfig;
+use diamond::testutil::XorShift64;
+
+fn artifacts_available() -> bool {
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.txt").exists() {
+        true
+    } else {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+        false
+    }
+}
+
+fn random_diag(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    for _ in 0..rng.gen_range(1, max_diags + 1) {
+        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+        let len = DiagMatrix::diag_len(n, d);
+        let vals: Vec<Complex> = (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
+#[test]
+fn runtime_loads_all_buckets() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::load(Runtime::default_dir()).expect("load artifacts");
+    assert_eq!(rt.platform(), "cpu");
+    assert!(rt.buckets().len() >= 6, "buckets: {:?}", rt.buckets());
+    // Bucket selection: a 10-qubit, 19-diagonal workload fits n=1024 d=16
+    // with chunking (chunks of <=16 diagonals).
+    let b = rt.max_bucket_for_dim(1024).unwrap();
+    assert_eq!(b.n, 1024);
+    assert!(b.d_a >= 16);
+}
+
+#[test]
+fn engine_matches_oracle_randomized() {
+    if !artifacts_available() {
+        return;
+    }
+    let engine = DiagEngine::load_default().expect("engine");
+    let mut rng = XorShift64::new(2024);
+    for case in 0..6 {
+        let n = [16, 100, 256][case % 3];
+        let a = random_diag(&mut rng, n, 12);
+        let b = random_diag(&mut rng, n, 12);
+        let (got, stats) = engine.spmspm(&a, &b).expect("engine spmspm");
+        let mut want = diag_mul(&a, &b);
+        want.prune(1e-12);
+        let diff = got.max_abs_diff(&want);
+        // f32 planes: tolerance scales with the product magnitude.
+        assert!(diff < 1e-4, "case {case}: diff {diff}");
+        assert!(stats.calls >= 1);
+    }
+}
+
+#[test]
+fn engine_handles_chunked_operands() {
+    if !artifacts_available() {
+        return;
+    }
+    // More diagonals than any bucket's d_a forces multi-chunk execution.
+    let engine = DiagEngine::load_default().expect("engine");
+    let n = 64;
+    let mut a = DiagMatrix::zeros(n);
+    let mut b = DiagMatrix::zeros(n);
+    for d in -20i64..=20 {
+        let len = DiagMatrix::diag_len(n, d);
+        a.set_diag(d, vec![Complex::new(0.1 * d as f64, 0.3); len]);
+        if d % 2 == 0 {
+            b.set_diag(d, vec![Complex::new(1.0, -0.2 * d as f64); len]);
+        }
+    }
+    let (got, stats) = engine.spmspm(&a, &b).expect("spmspm");
+    assert!(stats.calls > 1, "expected chunking, got {} call(s)", stats.calls);
+    let mut want = diag_mul(&a, &b);
+    want.prune(1e-12);
+    assert!(got.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn pjrt_evolution_matches_oracle_evolution() {
+    if !artifacts_available() {
+        return;
+    }
+    let h = diamond::ham::heisenberg::heisenberg(6, 1.0).matrix;
+    let t = 0.05;
+    let pjrt = Coordinator::with_pjrt().expect("pjrt coordinator");
+    let oracle = Coordinator::oracle();
+    let cfg = SimConfig::for_workload(h.dim(), h.nnzd(), h.nnzd());
+    let rep_p = pjrt.evolve(&h, t, 4, cfg.clone()).expect("pjrt evolve");
+    let rep_o = oracle.evolve(&h, t, 4, cfg).expect("oracle evolve");
+    let diff = rep_p.op.max_abs_diff(&rep_o.op);
+    assert!(diff < 1e-5, "operator diff {diff}");
+    // Timing is identical regardless of the functional path.
+    assert_eq!(rep_p.total.grid.cycles, rep_o.total.grid.cycles);
+    assert!(rep_p.engine.calls > 0);
+}
+
+#[test]
+fn single_diagonal_fast_bucket() {
+    if !artifacts_available() {
+        return;
+    }
+    // Max-Cut stays single-diagonal: must use an (n,1,1) bucket, 1 call.
+    let engine = DiagEngine::load_default().expect("engine");
+    let h = diamond::ham::maxcut::maxcut(8).matrix;
+    let (got, stats) = engine.spmspm(&h, &h).expect("spmspm");
+    assert_eq!(stats.calls, 1);
+    assert_eq!(stats.bucket_d, 1);
+    let want = diag_mul(&h, &h);
+    assert!(got.max_abs_diff(&want) < 1e-2); // f32 on O(10^2) values
+}
