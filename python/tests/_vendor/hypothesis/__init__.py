@@ -1,0 +1,101 @@
+"""Minimal offline stand-in for the `hypothesis` property-testing API.
+
+The test environment has no network access to install the real package, so
+`conftest.py` falls back to this shim when `import hypothesis` fails. It
+implements the tiny surface these tests use — `given`, `settings`,
+`strategies.sampled_from`, `strategies.integers` — with a deterministic
+seeded RNG per test (seed derived from the test name), so property sweeps
+still run their full `max_examples` cases and failures are reproducible.
+
+The shim intentionally does NOT shrink failing examples; it reports the
+drawn values of the failing case instead.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    """A value source: ``example(rng)`` draws one value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class _StrategiesModule:
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        if not seq:
+            raise ValueError("sampled_from requires a non-empty collection")
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = 0 if min_value is None else int(min_value)
+        hi = (1 << 31) - 1 if max_value is None else int(max_value)
+        if lo > hi:
+            raise ValueError(f"integers({lo}, {hi}): empty range")
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+strategies = _StrategiesModule()
+
+
+class settings:
+    """Decorator recording run options (only ``max_examples`` is used)."""
+
+    def __init__(self, max_examples: int = 100, deadline=None, **_ignored):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, test_fn):
+        test_fn._shim_settings = self
+        return test_fn
+
+
+def given(**param_strategies):
+    """Run the wrapped test over deterministic pseudo-random examples."""
+
+    def decorate(test_fn):
+        def runner():
+            # @settings may sit outside @given (sets the attribute on
+            # `runner`) or inside it (sets it on the raw test function).
+            cfg = getattr(runner, "_shim_settings", None) or getattr(
+                test_fn, "_shim_settings", None
+            )
+            max_examples = cfg.max_examples if cfg is not None else 100
+            seed = zlib.crc32(test_fn.__qualname__.encode("utf-8"))
+            rng = random.Random(seed)
+            for case in range(max_examples):
+                drawn = {name: s.example(rng) for name, s in param_strategies.items()}
+                try:
+                    test_fn(**drawn)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"property {test_fn.__name__} failed at case {case} "
+                        f"(seed {seed}) with arguments {drawn!r}: {exc}"
+                    ) from exc
+
+        # Keep pytest's collection happy: report the original name but a
+        # zero-argument signature (no fixtures to resolve).
+        runner.__name__ = test_fn.__name__
+        runner.__doc__ = test_fn.__doc__
+        runner.__module__ = test_fn.__module__
+        return runner
+
+    return decorate

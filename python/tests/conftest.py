@@ -1,0 +1,20 @@
+"""Test bootstrap: import paths + the vendored `hypothesis` fallback.
+
+* Puts ``python/`` on ``sys.path`` so ``from compile import ...`` works
+  no matter which directory pytest is invoked from.
+* Prefers the real `hypothesis`; the offline image does not ship it, so
+  the vendored shim under ``_vendor/`` provides the same decorator API
+  with deterministic seeding and the property sweeps still execute (see
+  _vendor/hypothesis/__init__.py).
+"""
+
+import pathlib
+import sys
+
+_HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(_HERE.parent))  # python/ → `compile` package
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(_HERE / "_vendor"))

@@ -36,6 +36,18 @@ fn time<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
 fn main() {
     println!("perf microbench — units noted per case\n");
 
+    // Kernel shoot-out: seed BTreeMap kernel vs packed serial vs packed
+    // parallel on the exponential-offset workload; recorded as
+    // BENCH_kernel.json at the repo root for the perf trajectory.
+    let cases = diamond::bench_harness::kernel::run_suite();
+    println!("{}", diamond::bench_harness::kernel::render_table(&cases));
+    let json = diamond::bench_harness::kernel::to_json(&cases);
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernel.json");
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path}\n"),
+        Err(e) => eprintln!("could not write {json_path}: {e}\n"),
+    }
+
     // L3 hot path 1: stepped grid simulation (DPE-cycle events/s).
     for (n, w) in [(1024usize, 9i64), (4096, 13)] {
         let a = banded(n, w);

@@ -1,0 +1,209 @@
+//! Kernel microbenchmark: seed BTreeMap kernel vs packed serial vs
+//! packed parallel, on the exponential-offset workload (`±2^q`
+//! diagonals — the problem-Hamiltonian structure of paper Table II).
+//!
+//! `perf_microbench` writes the result as `BENCH_kernel.json` at the repo
+//! root so successive PRs have a comparable perf trajectory.
+
+use super::Table;
+use crate::coordinator::pool;
+use crate::format::DiagMatrix;
+use crate::num::Complex;
+use std::time::Instant;
+
+/// One benchmarked configuration (times are ns per multiply call).
+pub struct KernelCase {
+    pub n: usize,
+    pub diags: usize,
+    pub workers: usize,
+    pub btreemap_ns: f64,
+    pub packed_serial_ns: f64,
+    pub packed_parallel_ns: f64,
+}
+
+impl KernelCase {
+    /// Packed serial speedup over the seed BTreeMap kernel.
+    pub fn speedup_packed(&self) -> f64 {
+        self.btreemap_ns / self.packed_serial_ns
+    }
+
+    /// Packed parallel speedup over the seed BTreeMap kernel.
+    pub fn speedup_parallel(&self) -> f64 {
+        self.btreemap_ns / self.packed_parallel_ns
+    }
+}
+
+/// Matrix with the main diagonal plus `±2^q` offsets for `q ≤ qmax`
+/// (exponentially-distant diagonals, unpadded DiaQ storage).
+pub fn exp_offset_matrix(n: usize, qmax: u32) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    let mut offsets = vec![0i64];
+    for q in 0..=qmax {
+        offsets.push(1i64 << q);
+        offsets.push(-(1i64 << q));
+    }
+    for d in offsets {
+        let len = DiagMatrix::diag_len(n, d);
+        if len == 0 {
+            continue;
+        }
+        let vals: Vec<Complex> = (0..len)
+            .map(|k| Complex::new(0.25 + (k % 17) as f64 * 1e-3, -0.1))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
+/// Time `reps` calls of `f` (after one warmup), returning ns per call.
+/// `f` returns a token routed through `black_box` so the work can't be
+/// elided.
+fn time_ns<F: FnMut() -> usize>(reps: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    let mut sink = 0usize;
+    for _ in 0..reps {
+        sink = sink.wrapping_add(f());
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps.max(1) as f64;
+    std::hint::black_box(sink);
+    ns
+}
+
+/// Benchmark one `(n, qmax)` configuration with `reps` timed calls per
+/// kernel variant. Also cross-checks that all three paths agree.
+pub fn run_case(n: usize, qmax: u32, reps: usize) -> KernelCase {
+    let workers = pool::default_workers();
+    let a = exp_offset_matrix(n, qmax);
+    let b = exp_offset_matrix(n, qmax);
+    let ap = a.freeze();
+    let bp = b.freeze();
+
+    let (serial_c, _) = crate::linalg::packed_diag_mul_counted(&ap, &bp);
+    let (parallel_c, _) = crate::linalg::packed_diag_mul_parallel(&ap, &bp, workers);
+    assert_eq!(
+        serial_c.arena(),
+        parallel_c.arena(),
+        "parallel kernel must be bit-identical to serial"
+    );
+    let reference = crate::linalg::diag_mul_reference(&a, &b);
+    assert!(
+        serial_c.thaw().max_abs_diff(&reference) < 1e-12,
+        "packed kernel must agree with the seed kernel"
+    );
+
+    let btreemap_ns = time_ns(reps, || crate::linalg::diag_mul_reference(&a, &b).nnzd());
+    let packed_serial_ns = time_ns(reps, || {
+        crate::linalg::packed_diag_mul_counted(&ap, &bp).0.nnzd()
+    });
+    let packed_parallel_ns = time_ns(reps, || {
+        crate::linalg::packed_diag_mul_parallel(&ap, &bp, workers)
+            .0
+            .nnzd()
+    });
+
+    KernelCase {
+        n,
+        diags: a.nnzd(),
+        workers,
+        btreemap_ns,
+        packed_serial_ns,
+        packed_parallel_ns,
+    }
+}
+
+/// The standard suite: exponential-offset workloads at `n ≥ 2^12`.
+pub fn run_suite() -> Vec<KernelCase> {
+    vec![run_case(1 << 12, 11, 5), run_case(1 << 14, 13, 3)]
+}
+
+/// Render the human-readable comparison table.
+pub fn render_table(cases: &[KernelCase]) -> String {
+    let mut t = Table::new(&[
+        "n", "diags", "workers", "btreemap ms", "packed ms", "parallel ms",
+        "packed vs seed", "parallel vs seed",
+    ]);
+    for c in cases {
+        t.row(vec![
+            c.n.to_string(),
+            c.diags.to_string(),
+            c.workers.to_string(),
+            format!("{:.3}", c.btreemap_ns / 1e6),
+            format!("{:.3}", c.packed_serial_ns / 1e6),
+            format!("{:.3}", c.packed_parallel_ns / 1e6),
+            super::fmt_ratio(c.speedup_packed()),
+            super::fmt_ratio(c.speedup_parallel()),
+        ]);
+    }
+    format!(
+        "Kernel microbench — diagonal SpMSpM, exponential-offset workload\n{}",
+        t.render()
+    )
+}
+
+/// Serialize cases as the `BENCH_kernel.json` payload (no serde offline —
+/// hand-rolled, stable field order).
+pub fn to_json(cases: &[KernelCase]) -> String {
+    let mut out = String::from(
+        "{\n  \"bench\": \"diag_mul_kernel\",\n  \"workload\": \"exponential-offset\",\n  \"unit\": \"ns_per_op\",\n  \"cases\": [\n",
+    );
+    for (i, c) in cases.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"n\": {}, \"diags\": {}, \"workers\": {}, \"serial_btreemap_ns\": {:.0}, \"packed_serial_ns\": {:.0}, \"packed_parallel_ns\": {:.0}, \"speedup_packed_vs_seed\": {:.3}, \"speedup_parallel_vs_seed\": {:.3}}}{}\n",
+            c.n,
+            c.diags,
+            c.workers,
+            c.btreemap_ns,
+            c.packed_serial_ns,
+            c.packed_parallel_ns,
+            c.speedup_packed(),
+            c.speedup_parallel(),
+            if i + 1 < cases.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_offset_structure() {
+        let m = exp_offset_matrix(64, 3);
+        // 0, ±1, ±2, ±4, ±8 → 9 diagonals.
+        assert_eq!(m.nnzd(), 9);
+        assert_eq!(m.offsets(), vec![-8, -4, -2, -1, 0, 1, 2, 4, 8]);
+        // Out-of-range offsets are skipped, duplicates collapse.
+        let tiny = exp_offset_matrix(3, 4);
+        assert!(tiny.offsets().iter().all(|d| d.unsigned_abs() < 3));
+    }
+
+    #[test]
+    fn small_case_runs_and_agrees() {
+        let c = run_case(64, 3, 1);
+        assert_eq!(c.n, 64);
+        assert_eq!(c.diags, 9);
+        assert!(c.btreemap_ns > 0.0);
+        assert!(c.packed_serial_ns > 0.0);
+        assert!(c.packed_parallel_ns > 0.0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let cases = vec![KernelCase {
+            n: 4096,
+            diags: 25,
+            workers: 4,
+            btreemap_ns: 2e6,
+            packed_serial_ns: 1e6,
+            packed_parallel_ns: 5e5,
+        }];
+        let j = to_json(&cases);
+        assert!(j.contains("\"bench\": \"diag_mul_kernel\""));
+        assert!(j.contains("\"n\": 4096"));
+        assert!(j.contains("\"speedup_parallel_vs_seed\": 4.000"));
+        assert!(render_table(&cases).contains("4096"));
+    }
+}

@@ -5,6 +5,7 @@
 //! binaries, the CLI and the tests share one implementation.
 
 pub mod experiments;
+pub mod kernel;
 pub mod workload;
 
 use std::fmt::Write as _;

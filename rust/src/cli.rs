@@ -1,7 +1,7 @@
 //! The `diamond` CLI (hand-rolled parsing; offline build has no clap).
 //!
 //! ```text
-//! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations
+//! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations | kernel
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
 //! diamond bench-all
 //! ```
@@ -141,6 +141,11 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             println!("{}", experiments::ablations());
             Ok(())
         }
+        "kernel" => {
+            let cases = crate::bench_harness::kernel::run_suite();
+            println!("{}", crate::bench_harness::kernel::render_table(&cases));
+            Ok(())
+        }
         "bench-all" => {
             println!("{}", experiments::table2());
             println!("{}", experiments::table3());
@@ -156,7 +161,7 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
         "help" | "--help" | "-h" => {
             println!(
                 "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
-                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
+                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations kernel bench-all\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]"
             );
             Ok(())

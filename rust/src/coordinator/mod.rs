@@ -110,11 +110,15 @@ impl Coordinator {
     }
 
     /// Compute values for `A·B` through the configured functional path.
+    /// The oracle path runs the Minkowski-planned packed kernel across
+    /// the worker pool; parallel execution is bit-identical to serial,
+    /// so job results stay deterministic.
     pub fn values(&self, a: &DiagMatrix, b: &DiagMatrix) -> Result<(DiagMatrix, EngineStats)> {
         match &self.functional {
             FunctionalMode::Pjrt(engine) => engine.spmspm(a, b),
             FunctionalMode::Oracle => {
-                let c = crate::linalg::diag_mul(a, b);
+                let workers = pool::default_workers();
+                let (c, _stats) = crate::linalg::diag_mul_parallel(a, b, workers);
                 Ok((c, EngineStats::default()))
             }
         }

@@ -14,6 +14,33 @@
 //! element in row `k` of the diagonal's own frame. This is the convention
 //! the walk-through example of the paper (Fig. 9b) reconstructs with its
 //! "first element + self-increment" index builder.
+//!
+//! ## Two representations: builder and packed arena
+//!
+//! [`DiagMatrix`] is the *mutable builder*: a `BTreeMap<i64, Vec<Complex>>`
+//! supporting random insertion (`add_at`, `set_diag`, `diag_mut`) — the
+//! right shape for Hamiltonian synthesis and format conversions, but every
+//! access pays a tree lookup and each diagonal is its own heap allocation.
+//!
+//! [`PackedDiagMatrix`] is the *frozen compute snapshot* the SpMSpM hot
+//! path consumes: a sorted offset table plus **one contiguous value
+//! arena**, with diagonal `i` occupying the half-open arena slice
+//! `starts[i] .. starts[i + 1]` (so `(start, len)` per diagonal, lengths
+//! staying the natural unpadded `n − |d|`). Lookups are a binary search
+//! over a flat `i64` table; iteration walks the arena linearly; and the
+//! diagonal-convolution kernel can hand each output diagonal its own
+//! disjoint slice, which is what makes the parallel execution in
+//! [`crate::linalg::diag_mul`] lock-free and deterministic.
+//!
+//! ### Freeze / thaw lifecycle
+//!
+//! ```text
+//!   build (BTreeMap)  --freeze()-->  compute (flat arena)  --thaw()-->  build
+//! ```
+//!
+//! Both moves are one `O(elements)` copy. The Taylor chain freezes its
+//! operand once, keeps the running term packed across every chained
+//! product, and only thaws at API boundaries that want the builder.
 
 use crate::num::{Complex, ZERO};
 use std::collections::BTreeMap;
@@ -300,6 +327,275 @@ impl DiagMatrix {
         }
         true
     }
+
+    /// Snapshot into the packed flat-arena representation (one
+    /// `O(elements)` copy). See the module docs for the layout.
+    pub fn freeze(&self) -> PackedDiagMatrix {
+        let mut offsets = Vec::with_capacity(self.diags.len());
+        let mut starts = Vec::with_capacity(self.diags.len() + 1);
+        let mut arena = Vec::with_capacity(self.stored_elements());
+        starts.push(0);
+        for (&d, vals) in &self.diags {
+            offsets.push(d);
+            arena.extend_from_slice(vals);
+            starts.push(arena.len());
+        }
+        PackedDiagMatrix {
+            n: self.n,
+            offsets,
+            starts,
+            arena,
+        }
+    }
+
+    /// `self += s · rhs` with a packed right-hand side — the Taylor
+    /// accumulation primitive on the hot path (no thaw needed).
+    pub fn add_assign_scaled_packed(&mut self, rhs: &PackedDiagMatrix, s: Complex) {
+        assert_eq!(self.n, rhs.dim(), "dimension mismatch");
+        for (d, vals) in rhs.iter() {
+            let dst = self.diag_mut(d);
+            for (dst_v, &src_v) in dst.iter_mut().zip(vals.iter()) {
+                *dst_v += src_v * s;
+            }
+        }
+    }
+}
+
+/// A packed, immutable-structure snapshot of a [`DiagMatrix`]: sorted
+/// offset table + one contiguous value arena, diagonal `i` living in
+/// `arena[starts[i] .. starts[i + 1]]` with its natural unpadded length
+/// `n − |offsets[i]|`. Produced by [`DiagMatrix::freeze`]; this is the
+/// representation the diagonal-convolution kernel and the Taylor chain
+/// operate on (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedDiagMatrix {
+    n: usize,
+    /// Stored diagonal offsets, strictly ascending.
+    offsets: Vec<i64>,
+    /// Prefix table: diagonal `i` spans `starts[i] .. starts[i + 1]` in
+    /// the arena; `starts.len() == offsets.len() + 1`.
+    starts: Vec<usize>,
+    /// All diagonal values, concatenated in offset order.
+    arena: Vec<Complex>,
+}
+
+impl PackedDiagMatrix {
+    /// An empty (all-zero) packed `n × n` matrix.
+    pub fn zeros(n: usize) -> Self {
+        PackedDiagMatrix {
+            n,
+            offsets: Vec::new(),
+            starts: vec![0],
+            arena: Vec::new(),
+        }
+    }
+
+    /// The packed `n × n` identity.
+    pub fn identity(n: usize) -> Self {
+        PackedDiagMatrix {
+            n,
+            offsets: vec![0],
+            starts: vec![0, n],
+            arena: vec![crate::num::ONE; n],
+        }
+    }
+
+    /// Assemble from raw parts. `offsets` must be strictly ascending and
+    /// each `values[i].len()` must equal `n − |offsets[i]|`; used by the
+    /// SpMSpM executor which produces per-diagonal slices independently.
+    pub fn from_diagonals(n: usize, offsets: Vec<i64>, values: Vec<Vec<Complex>>) -> Self {
+        assert_eq!(offsets.len(), values.len());
+        let total: usize = values.iter().map(Vec::len).sum();
+        let mut starts = Vec::with_capacity(offsets.len() + 1);
+        let mut arena = Vec::with_capacity(total);
+        starts.push(0);
+        for (i, vals) in values.iter().enumerate() {
+            if i > 0 {
+                assert!(offsets[i - 1] < offsets[i], "offsets must be ascending");
+            }
+            assert_eq!(
+                vals.len(),
+                DiagMatrix::diag_len(n, offsets[i]),
+                "diagonal {} must have length n - |offset|",
+                offsets[i]
+            );
+            arena.extend_from_slice(vals);
+            starts.push(arena.len());
+        }
+        PackedDiagMatrix {
+            n,
+            offsets,
+            starts,
+            arena,
+        }
+    }
+
+    /// Crate-internal: assemble directly from a pre-built arena — the
+    /// SpMSpM executor fills one contiguous arena with disjoint writers
+    /// and hands it over without re-copying. Invariants are the same as
+    /// [`PackedDiagMatrix::from_diagonals`]; debug-checked only.
+    pub(crate) fn from_raw_parts(
+        n: usize,
+        offsets: Vec<i64>,
+        starts: Vec<usize>,
+        arena: Vec<Complex>,
+    ) -> Self {
+        debug_assert_eq!(starts.len(), offsets.len() + 1);
+        debug_assert_eq!(*starts.last().unwrap_or(&0), arena.len());
+        debug_assert!(offsets.windows(2).all(|w| w[0] < w[1]));
+        PackedDiagMatrix {
+            n,
+            offsets,
+            starts,
+            arena,
+        }
+    }
+
+    /// Matrix dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored diagonals (NNZD).
+    #[inline]
+    pub fn nnzd(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Stored diagonal offsets, ascending.
+    #[inline]
+    pub fn offsets(&self) -> &[i64] {
+        &self.offsets
+    }
+
+    /// Total stored elements (the arena length).
+    #[inline]
+    pub fn stored_elements(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// The raw arena — exposed so tests can assert bit-identical results
+    /// between serial and parallel kernel execution.
+    #[inline]
+    pub fn arena(&self) -> &[Complex] {
+        &self.arena
+    }
+
+    /// Index of `offset` in the offset table, if stored. O(log nnzd).
+    #[inline]
+    pub fn index_of(&self, offset: i64) -> Option<usize> {
+        self.offsets.binary_search(&offset).ok()
+    }
+
+    /// Values of the `i`-th stored diagonal.
+    #[inline]
+    pub fn values_at(&self, i: usize) -> &[Complex] {
+        &self.arena[self.starts[i]..self.starts[i + 1]]
+    }
+
+    /// Offset of the `i`-th stored diagonal.
+    #[inline]
+    pub fn offset_at(&self, i: usize) -> i64 {
+        self.offsets[i]
+    }
+
+    /// Borrow a diagonal by offset, if stored.
+    pub fn diag(&self, offset: i64) -> Option<&[Complex]> {
+        self.index_of(offset).map(|i| self.values_at(i))
+    }
+
+    /// Iterate `(offset, values)` in ascending offset order.
+    pub fn iter(&self) -> impl Iterator<Item = (i64, &[Complex])> {
+        (0..self.offsets.len()).map(move |i| (self.offsets[i], self.values_at(i)))
+    }
+
+    /// Random access. O(log nnzd).
+    pub fn get(&self, row: usize, col: usize) -> Complex {
+        debug_assert!(row < self.n && col < self.n);
+        let d = col as i64 - row as i64;
+        match self.diag(d) {
+            Some(v) => v[DiagMatrix::idx_of_row(d, row)],
+            None => ZERO,
+        }
+    }
+
+    /// Number of numerically nonzero elements.
+    pub fn nnz(&self) -> usize {
+        self.arena
+            .iter()
+            .filter(|z| !z.is_zero(ZERO_TOL))
+            .count()
+    }
+
+    /// Scale every stored value by `s` in place.
+    pub fn scale(&mut self, s: Complex) {
+        for z in self.arena.iter_mut() {
+            *z *= s;
+        }
+    }
+
+    /// Drop diagonals whose every entry is below `tol`, compacting the
+    /// arena in place.
+    pub fn prune(&mut self, tol: f64) {
+        let keep: Vec<usize> = (0..self.offsets.len())
+            .filter(|&i| self.values_at(i).iter().any(|z| !z.is_zero(tol)))
+            .collect();
+        if keep.len() == self.offsets.len() {
+            return;
+        }
+        let mut offsets = Vec::with_capacity(keep.len());
+        let mut starts = Vec::with_capacity(keep.len() + 1);
+        let mut arena = Vec::new();
+        starts.push(0);
+        for &i in &keep {
+            offsets.push(self.offsets[i]);
+            arena.extend_from_slice(self.values_at(i));
+            starts.push(arena.len());
+        }
+        self.offsets = offsets;
+        self.starts = starts;
+        self.arena = arena;
+    }
+
+    /// DiaQ storage footprint in bytes (offset table + arena), matching
+    /// [`DiagMatrix::storage_bytes`].
+    pub fn storage_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.arena.len() * 16
+    }
+
+    /// Copy back into the mutable builder representation.
+    pub fn thaw(&self) -> DiagMatrix {
+        let mut out = DiagMatrix::zeros(self.n);
+        for (d, vals) in self.iter() {
+            out.set_diag(d, vals.to_vec());
+        }
+        out
+    }
+
+    /// Max absolute entry difference against another packed matrix
+    /// (union of supports).
+    pub fn max_abs_diff(&self, rhs: &PackedDiagMatrix) -> f64 {
+        assert_eq!(self.n, rhs.n);
+        let mut worst = 0.0f64;
+        let offs: std::collections::BTreeSet<i64> = self
+            .offsets
+            .iter()
+            .chain(rhs.offsets.iter())
+            .copied()
+            .collect();
+        for d in offs {
+            let len = DiagMatrix::diag_len(self.n, d);
+            let a = self.diag(d);
+            let b = rhs.diag(d);
+            for k in 0..len {
+                let av = a.map_or(ZERO, |v| v[k]);
+                let bv = b.map_or(ZERO, |v| v[k]);
+                worst = worst.max((av - bv).abs());
+            }
+        }
+        worst
+    }
 }
 
 #[cfg(test)]
@@ -412,5 +708,94 @@ mod tests {
     fn set_diag_length_checked() {
         let mut m = DiagMatrix::zeros(4);
         m.set_diag(1, vec![ONE; 4]); // must be 3
+    }
+
+    #[test]
+    fn freeze_thaw_roundtrip() {
+        let mut m = DiagMatrix::zeros(6);
+        m.add_at(0, 3, c(2.0));
+        m.add_at(4, 1, I);
+        m.add_at(2, 2, c(-1.5));
+        let packed = m.freeze();
+        assert_eq!(packed.dim(), 6);
+        assert_eq!(packed.nnzd(), m.nnzd());
+        assert_eq!(packed.stored_elements(), m.stored_elements());
+        assert_eq!(packed.offsets(), &[-3, 0, 3]);
+        assert_eq!(packed.get(0, 3), c(2.0));
+        assert_eq!(packed.get(4, 1), I);
+        assert_eq!(packed.get(5, 5), crate::num::ZERO);
+        let back = packed.thaw();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn packed_arena_is_contiguous_and_sorted() {
+        let mut m = DiagMatrix::zeros(5);
+        m.set_diag(2, vec![ONE; 3]);
+        m.set_diag(-1, vec![I; 4]);
+        let p = m.freeze();
+        // Arena holds offset −1's 4 values then offset 2's 3 values.
+        assert_eq!(p.arena().len(), 7);
+        assert_eq!(p.values_at(0), &[I, I, I, I]);
+        assert_eq!(p.values_at(1), &[ONE, ONE, ONE]);
+        assert_eq!(p.offset_at(0), -1);
+        assert_eq!(p.index_of(2), Some(1));
+        assert_eq!(p.index_of(0), None);
+        assert_eq!(p.storage_bytes(), m.storage_bytes());
+    }
+
+    #[test]
+    fn packed_scale_and_prune() {
+        let mut m = DiagMatrix::zeros(4);
+        m.set_diag(0, vec![ONE; 4]);
+        m.set_diag(1, vec![crate::num::ZERO; 3]); // structurally zero
+        let mut p = m.freeze();
+        assert_eq!(p.nnzd(), 2);
+        p.prune(ZERO_TOL);
+        assert_eq!(p.nnzd(), 1);
+        assert_eq!(p.stored_elements(), 4);
+        p.scale(Complex::new(0.0, 2.0));
+        assert_eq!(p.get(1, 1), Complex::new(0.0, 2.0));
+        // Pruning to empty leaves a valid zero matrix.
+        p.prune(10.0);
+        assert_eq!(p.nnzd(), 0);
+        assert_eq!(p.stored_elements(), 0);
+        assert!(p.max_abs_diff(&PackedDiagMatrix::zeros(4)) == 0.0);
+    }
+
+    #[test]
+    fn packed_identity_and_from_diagonals() {
+        let id = PackedDiagMatrix::identity(5);
+        assert_eq!(id.nnzd(), 1);
+        assert_eq!(id.get(3, 3), ONE);
+        assert!(id.thaw().max_abs_diff(&DiagMatrix::identity(5)) == 0.0);
+        let p = PackedDiagMatrix::from_diagonals(
+            4,
+            vec![-2, 1],
+            vec![vec![ONE, I], vec![c(3.0); 3]],
+        );
+        assert_eq!(p.get(2, 0), ONE);
+        assert_eq!(p.get(3, 1), I);
+        assert_eq!(p.get(0, 1), c(3.0));
+        assert_eq!(p.nnz(), 5);
+    }
+
+    #[test]
+    fn add_assign_scaled_packed_matches_builder_path() {
+        let mut rhs = DiagMatrix::zeros(4);
+        rhs.add_at(0, 2, c(2.0));
+        rhs.add_at(3, 3, I);
+        let packed = rhs.freeze();
+        let mut via_builder = DiagMatrix::identity(4);
+        via_builder.add_assign_scaled(&rhs, I);
+        let mut via_packed = DiagMatrix::identity(4);
+        via_packed.add_assign_scaled_packed(&packed, I);
+        assert_eq!(via_builder, via_packed);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_diagonals_rejects_unsorted() {
+        PackedDiagMatrix::from_diagonals(4, vec![1, -1], vec![vec![ONE; 3], vec![ONE; 3]]);
     }
 }

@@ -14,4 +14,4 @@ pub mod diag;
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
 pub use dense::DenseMatrix;
-pub use diag::DiagMatrix;
+pub use diag::{DiagMatrix, PackedDiagMatrix};

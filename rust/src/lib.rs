@@ -8,12 +8,20 @@
 //!
 //! * [`num`] — complex scalar arithmetic (no external crates; offline build).
 //! * [`format`] — the DiaQ-style diagonal sparse format plus CSR/COO/dense
-//!   oracles and conversions.
+//!   oracles and conversions. Two faces of the diagonal format: the
+//!   `BTreeMap` builder ([`DiagMatrix`]) for construction, and the packed
+//!   flat-arena snapshot ([`format::PackedDiagMatrix`], via
+//!   `freeze()`/`thaw()`) the SpMSpM hot path consumes.
 //! * [`pauli`] — Pauli-string algebra used to synthesize Hamiltonians.
 //! * [`ham`] — HamLib-substitute Hamiltonian generators (TFIM, Heisenberg,
 //!   Fermi-/Bose-Hubbard, Max-Cut, Q-Max-Cut, TSP).
 //! * [`linalg`] — reference SpMSpM algorithms (diagonal convolution,
-//!   Gustavson, outer-product, dense) with operation counting.
+//!   Gustavson, outer-product, dense) with operation counting. The
+//!   diagonal-convolution kernel is a two-phase plan/execute design:
+//!   the Minkowski sum `D_A ⊕ D_B` is planned once into per-output-
+//!   diagonal contribution lists, then executed with one independent
+//!   writer per output diagonal — serially or across the worker pool
+//!   with bit-identical results.
 //! * [`taylor`] — Taylor-series matrix exponentiation driver for
 //!   Hamiltonian simulation (`exp(-iHt)`).
 //! * [`sim`] — the cycle-accurate DIAMOND simulator: DPE grid, diagonal
@@ -45,5 +53,5 @@ pub mod sim;
 pub mod taylor;
 pub mod testutil;
 
-pub use format::diag::DiagMatrix;
+pub use format::diag::{DiagMatrix, PackedDiagMatrix};
 pub use num::Complex;

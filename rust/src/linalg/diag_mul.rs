@@ -1,15 +1,38 @@
-//! Diagonal-convolution SpMSpM (paper Sec. III).
+//! Diagonal-convolution SpMSpM (paper Sec. III), as a two-phase
+//! plan/execute kernel over the packed flat-arena format.
 //!
 //! `C = A·B` in diagonal space: every pair of stored diagonals
 //! `(d_A, d_B)` contributes one aligned element-wise product to the output
 //! diagonal at `d_C = d_A + d_B` (the offset-sum rule, Eq. 7); the set of
 //! output offsets is the Minkowski sum `D_A ⊕ D_B` (Eq. 9).
 //!
+//! **Phase 1 — plan** ([`plan_diag_mul`]): walk `D_A × D_B` once and
+//! group the contribution list of every output diagonal, precomputing the
+//! overlap window and the three storage-frame base indices per
+//! contribution, plus the exact (interval-merged) count of output
+//! elements that will be written.
+//!
+//! **Phase 2 — execute** ([`execute_plan`]): each output diagonal owns a
+//! disjoint, pre-sized slice of one contiguous output arena and is
+//! computed independently — serially or fanned across
+//! [`crate::coordinator::pool::parallel_map`]. One writer per diagonal
+//! means no locks, and because every diagonal accumulates its
+//! contributions in the same planned order, parallel execution is
+//! **bit-identical** to serial. All-zero output diagonals (partial
+//! coverage or cancellation) are pruned at kernel exit so NNZD reflects
+//! the true band structure.
+//!
 //! This is the exact computation the DIAMOND DPE grid performs in
-//! hardware, so it doubles as the simulator's functional oracle.
+//! hardware, so it doubles as the simulator's functional oracle. The
+//! seed's direct BTreeMap formulation is retained as
+//! [`diag_mul_reference`] — an independent oracle for tests and the
+//! baseline for the kernel microbenchmarks.
 
 use super::OpStats;
-use crate::format::DiagMatrix;
+use crate::format::diag::ZERO_TOL;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
+use crate::num::ZERO;
+use std::collections::BTreeMap;
 
 /// Row range `[lo, hi)` over which diagonals `d_a` (from A) and `d_b`
 /// (from B) overlap in an `n × n` product. The A element in row `r` is
@@ -23,13 +46,265 @@ pub fn overlap_rows(n: usize, d_a: i64, d_b: i64) -> (i64, i64) {
     (lo, hi)
 }
 
-/// Multiply two diagonal matrices; also return operation statistics.
+/// One aligned element-wise product feeding an output diagonal: operand
+/// diagonal indices plus the storage-frame base index of the overlap
+/// window in each diagonal's own frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Contribution {
+    /// Index of the A diagonal in `a.offsets()`.
+    pub a_idx: usize,
+    /// Index of the B diagonal in `b.offsets()`.
+    pub b_idx: usize,
+    /// Start of the overlap window within the A diagonal's storage.
+    pub ka0: usize,
+    /// Start of the overlap window within the B diagonal's storage.
+    pub kb0: usize,
+    /// Start of the overlap window within the output diagonal's storage.
+    pub kc0: usize,
+    /// Overlap length (number of multiply-accumulates).
+    pub len: usize,
+}
+
+/// Plan for one output diagonal: its offset, natural (unpadded) length,
+/// ordered contribution list, and the exact number of distinct elements
+/// the contributions cover (merged intervals — the true write count).
+#[derive(Clone, Debug)]
+pub struct OutDiagPlan {
+    pub offset: i64,
+    /// Natural stored length `n − |offset|`.
+    pub len: usize,
+    /// Distinct output elements receiving at least one contribution.
+    pub written: usize,
+    /// Contributions in deterministic `(d_a asc, d_b asc)` order.
+    pub contribs: Vec<Contribution>,
+}
+
+/// The planned Minkowski sum `D_A ⊕ D_B` with per-output-diagonal
+/// contribution lists. Build once with [`plan_diag_mul`], execute with
+/// [`execute_plan`] (a plan can be replayed against any operands with the
+/// same offset structure, e.g. every step of a Taylor chain re-plans only
+/// because the term's offsets grow).
+#[derive(Clone, Debug)]
+pub struct MulPlan {
+    pub n: usize,
+    /// Output diagonals in ascending offset order.
+    pub outs: Vec<OutDiagPlan>,
+    /// Total multiply-accumulates across all contributions.
+    pub mults: usize,
+    /// Total distinct output elements written (sum of `written`).
+    pub writes: usize,
+}
+
+impl MulPlan {
+    /// Output offsets (the Minkowski sum restricted to in-range overlaps).
+    pub fn offsets(&self) -> Vec<i64> {
+        self.outs.iter().map(|o| o.offset).collect()
+    }
+}
+
+/// Count the distinct elements covered by `[start, start + len)` windows
+/// (classic merged-interval sweep; windows arrive unsorted).
+fn merged_coverage(mut windows: Vec<(usize, usize)>) -> usize {
+    windows.sort_unstable();
+    let mut covered = 0usize;
+    let mut current: Option<(usize, usize)> = None;
+    for (s, e) in windows {
+        match current {
+            None => current = Some((s, e)),
+            Some((cs, ce)) => {
+                if s > ce {
+                    covered += ce - cs;
+                    current = Some((s, e));
+                } else if e > ce {
+                    current = Some((cs, e));
+                }
+            }
+        }
+    }
+    if let Some((cs, ce)) = current {
+        covered += ce - cs;
+    }
+    covered
+}
+
+/// Phase 1: plan the Minkowski sum `D_A ⊕ D_B` once.
+pub fn plan_diag_mul(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> MulPlan {
+    assert_eq!(a.dim(), b.dim(), "dimension mismatch");
+    let n = a.dim();
+    // BTreeMap keys the grouping by output offset and yields ascending
+    // order for free; per-offset push order is (d_a asc, d_b asc), which
+    // fixes the accumulation order the executors replay.
+    let mut grouped: BTreeMap<i64, Vec<Contribution>> = BTreeMap::new();
+    for (a_idx, &d_a) in a.offsets().iter().enumerate() {
+        for (b_idx, &d_b) in b.offsets().iter().enumerate() {
+            let (lo, hi) = overlap_rows(n, d_a, d_b);
+            if lo >= hi {
+                continue;
+            }
+            let d_c = d_a + d_b;
+            grouped.entry(d_c).or_default().push(Contribution {
+                a_idx,
+                b_idx,
+                ka0: DiagMatrix::idx_of_row(d_a, lo as usize),
+                kb0: DiagMatrix::idx_of_row(d_b, (lo + d_a) as usize),
+                kc0: DiagMatrix::idx_of_row(d_c, lo as usize),
+                len: (hi - lo) as usize,
+            });
+        }
+    }
+
+    let mut outs = Vec::with_capacity(grouped.len());
+    let mut mults = 0usize;
+    let mut writes = 0usize;
+    for (offset, contribs) in grouped {
+        mults += contribs.iter().map(|c| c.len).sum::<usize>();
+        let written =
+            merged_coverage(contribs.iter().map(|c| (c.kc0, c.kc0 + c.len)).collect());
+        writes += written;
+        outs.push(OutDiagPlan {
+            offset,
+            len: DiagMatrix::diag_len(n, offset),
+            written,
+            contribs,
+        });
+    }
+    MulPlan {
+        n,
+        outs,
+        mults,
+        writes,
+    }
+}
+
+/// Compute one output diagonal into its pre-sized slice, accumulating
+/// contributions in plan order (the determinism contract).
+fn fill_out_diag(
+    out: &OutDiagPlan,
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    dst: &mut [crate::num::Complex],
+) {
+    debug_assert_eq!(dst.len(), out.len);
+    for c in &out.contribs {
+        let va = &a.values_at(c.a_idx)[c.ka0..c.ka0 + c.len];
+        let vb = &b.values_at(c.b_idx)[c.kb0..c.kb0 + c.len];
+        let window = &mut dst[c.kc0..c.kc0 + c.len];
+        for (w, (&x, &y)) in window.iter_mut().zip(va.iter().zip(vb.iter())) {
+            *w += x * y;
+        }
+    }
+}
+
+/// Below this many multiply-accumulates the thread spawn/join cost of
+/// the pool dominates; such plans execute serially even when `workers`
+/// allows fan-out (output is bit-identical either way, so the switch is
+/// unobservable except in wall-clock).
+pub const PARALLEL_MULTS_THRESHOLD: usize = 16 * 1024;
+
+/// Phase 2: execute a plan. Each output diagonal is written by exactly
+/// one worker into its disjoint arena slice, so `workers > 1` fans out
+/// across [`crate::coordinator::pool::parallel_map`] with bit-identical
+/// results to `workers == 1`. Small plans (under
+/// [`PARALLEL_MULTS_THRESHOLD`] multiplies, or fewer than two output
+/// diagonals) skip the pool entirely. All-zero output diagonals are
+/// pruned at exit (within [`ZERO_TOL`]).
+pub fn execute_plan(
+    plan: &MulPlan,
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    workers: usize,
+) -> (PackedDiagMatrix, OpStats) {
+    let stats = OpStats {
+        mults: plan.mults,
+        merge_adds: plan.mults,
+        reads: 2 * plan.mults,
+        writes: plan.writes,
+    };
+
+    let fan_out = workers > 1 && plan.outs.len() > 1 && plan.mults >= PARALLEL_MULTS_THRESHOLD;
+    let total: usize = plan.outs.iter().map(|o| o.len).sum();
+    let mut arena = vec![ZERO; total];
+    {
+        // Carve the arena into one disjoint mutable slice per diagonal.
+        let mut rest: &mut [crate::num::Complex] = &mut arena;
+        let mut slices = Vec::with_capacity(plan.outs.len());
+        for out in &plan.outs {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(out.len);
+            slices.push(head);
+            rest = tail;
+        }
+        let items: Vec<(usize, &mut [crate::num::Complex])> =
+            slices.into_iter().enumerate().collect();
+        if fan_out {
+            crate::coordinator::pool::parallel_map(items, workers, |(i, dst)| {
+                fill_out_diag(&plan.outs[i], a, b, dst);
+            });
+        } else {
+            for (i, dst) in items {
+                fill_out_diag(&plan.outs[i], a, b, dst);
+            }
+        }
+    }
+
+    let offsets: Vec<i64> = plan.outs.iter().map(|o| o.offset).collect();
+    let mut starts = Vec::with_capacity(plan.outs.len() + 1);
+    starts.push(0usize);
+    for out in &plan.outs {
+        starts.push(starts.last().unwrap() + out.len);
+    }
+    let mut c = PackedDiagMatrix::from_raw_parts(plan.n, offsets, starts, arena);
+    c.prune(ZERO_TOL);
+    (c, stats)
+}
+
+/// Packed serial multiply: plan + execute on one worker.
+pub fn packed_diag_mul_counted(
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+) -> (PackedDiagMatrix, OpStats) {
+    let plan = plan_diag_mul(a, b);
+    execute_plan(&plan, a, b, 1)
+}
+
+/// Packed parallel multiply: plan once, execute across `workers` threads
+/// (bit-identical to the serial path).
+pub fn packed_diag_mul_parallel(
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    workers: usize,
+) -> (PackedDiagMatrix, OpStats) {
+    let plan = plan_diag_mul(a, b);
+    execute_plan(&plan, a, b, workers)
+}
+
+/// Multiply two builder-format matrices through the packed kernel; also
+/// return operation statistics. `stats.writes` counts only elements the
+/// kernel actually writes (merged contribution windows), not zero-filled
+/// diagonal tails.
 pub fn diag_mul_counted(a: &DiagMatrix, b: &DiagMatrix) -> (DiagMatrix, OpStats) {
+    let (c, stats) = packed_diag_mul_counted(&a.freeze(), &b.freeze());
+    (c.thaw(), stats)
+}
+
+/// Builder-format convenience over [`packed_diag_mul_parallel`].
+pub fn diag_mul_parallel(a: &DiagMatrix, b: &DiagMatrix, workers: usize) -> (DiagMatrix, OpStats) {
+    let (c, stats) = packed_diag_mul_parallel(&a.freeze(), &b.freeze(), workers);
+    (c.thaw(), stats)
+}
+
+/// Multiply two diagonal matrices (no stats).
+pub fn diag_mul(a: &DiagMatrix, b: &DiagMatrix) -> DiagMatrix {
+    diag_mul_counted(a, b).0
+}
+
+/// The seed's direct BTreeMap kernel, kept verbatim as an independent
+/// oracle for the packed path and as the microbenchmark baseline. Output
+/// diagonals materialize at full length through `diag_mut` and all-zero
+/// diagonals are *not* pruned — exactly the seed semantics.
+pub fn diag_mul_reference(a: &DiagMatrix, b: &DiagMatrix) -> DiagMatrix {
     assert_eq!(a.dim(), b.dim(), "dimension mismatch");
     let n = a.dim();
     let mut c = DiagMatrix::zeros(n);
-    let mut stats = OpStats::default();
-
     for (d_a, va) in a.iter() {
         for (d_b, vb) in b.iter() {
             let (lo, hi) = overlap_rows(n, d_a, d_b);
@@ -38,7 +313,6 @@ pub fn diag_mul_counted(a: &DiagMatrix, b: &DiagMatrix) -> (DiagMatrix, OpStats)
             }
             let d_c = d_a + d_b;
             let len = (hi - lo) as usize;
-            // Storage index of row `lo` within each diagonal's own frame.
             let ka0 = DiagMatrix::idx_of_row(d_a, lo as usize);
             let kb0 = DiagMatrix::idx_of_row(d_b, (lo + d_a) as usize);
             let kc0 = DiagMatrix::idx_of_row(d_c, lo as usize);
@@ -46,18 +320,9 @@ pub fn diag_mul_counted(a: &DiagMatrix, b: &DiagMatrix) -> (DiagMatrix, OpStats)
             for k in 0..len {
                 vc[kc0 + k] += va[ka0 + k] * vb[kb0 + k];
             }
-            stats.mults += len;
-            stats.merge_adds += len;
-            stats.reads += 2 * len;
         }
     }
-    stats.writes = c.stored_elements();
-    (c, stats)
-}
-
-/// Multiply two diagonal matrices (no stats).
-pub fn diag_mul(a: &DiagMatrix, b: &DiagMatrix) -> DiagMatrix {
-    diag_mul_counted(a, b).0
+    c
 }
 
 #[cfg(test)]
@@ -99,7 +364,7 @@ mod tests {
         a.set_diag(2, vec![ONE; 6]);
         let mut b = DiagMatrix::zeros(n);
         b.set_diag(-3, vec![I; 5]);
-        let c = diag_mul(&a, &b);
+        let (c, stats) = diag_mul_counted(&a, &b);
         assert_eq!(c.offsets(), vec![-1]);
         // A[r, r+2] * B[r+2, r-1] lands at C[r, r-1]; valid r: 1..8 ∧ r+2<8 → r∈[1,6)
         let (lo, hi) = overlap_rows(n, 2, -3);
@@ -111,6 +376,9 @@ mod tests {
             let expect = if (0..5).contains(&k) { I } else { crate::num::ZERO };
             assert!(v.approx_eq(expect, 1e-15), "k={k} v={v:?}");
         }
+        // Exact write accounting: 5 covered elements, not the stored 7.
+        assert_eq!(stats.writes, 5);
+        assert_eq!(stats.mults, 5);
     }
 
     #[test]
@@ -132,6 +400,70 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parallel_fan_out_above_threshold_is_bit_identical() {
+        // A workload guaranteed to cross PARALLEL_MULTS_THRESHOLD so the
+        // pool path (not the serial fallback) is what's compared.
+        let a = crate::bench_harness::kernel::exp_offset_matrix(2048, 8).freeze();
+        let b = crate::bench_harness::kernel::exp_offset_matrix(2048, 8).freeze();
+        let plan = plan_diag_mul(&a, &b);
+        assert!(
+            plan.mults >= PARALLEL_MULTS_THRESHOLD,
+            "workload too small to exercise fan-out: {} mults",
+            plan.mults
+        );
+        let (serial, s_stats) = execute_plan(&plan, &a, &b, 1);
+        for workers in [2usize, 4, 7] {
+            let (par, p_stats) = execute_plan(&plan, &a, &b, workers);
+            assert_eq!(par.offsets(), serial.offsets(), "workers={workers}");
+            assert_eq!(par.arena(), serial.arena(), "workers={workers}");
+            assert_eq!(p_stats, s_stats, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn cancellation_prunes_zero_diagonals() {
+        // A0·B2 and A2·B0 cancel exactly on output offset 2; the packed
+        // kernel must drop the all-zero diagonal (the reference keeps it).
+        let n = 6;
+        let mut a = DiagMatrix::zeros(n);
+        a.set_diag(0, vec![ONE; 6]);
+        a.set_diag(2, vec![ONE; 4]);
+        let mut b = DiagMatrix::zeros(n);
+        b.set_diag(0, vec![-ONE; 6]);
+        b.set_diag(2, vec![ONE; 4]);
+        let c = diag_mul(&a, &b);
+        assert_eq!(c.offsets(), vec![0, 4], "cancelled offset 2 must be pruned");
+        let reference = diag_mul_reference(&a, &b);
+        assert!(reference.offsets().contains(&2), "reference keeps the zeros");
+        assert!(c.max_abs_diff(&reference) < 1e-15);
+    }
+
+    #[test]
+    fn plan_structure_is_exact() {
+        let n = 10;
+        let mut a = DiagMatrix::zeros(n);
+        a.set_diag(0, vec![ONE; 10]);
+        a.set_diag(4, vec![ONE; 6]);
+        let mut b = DiagMatrix::zeros(n);
+        b.set_diag(-2, vec![ONE; 8]);
+        b.set_diag(2, vec![ONE; 8]);
+        let plan = plan_diag_mul(&a.freeze(), &b.freeze());
+        // Output offsets: {0-2, 0+2, 4-2, 4+2} = {-2, 2, 2, 6} → 3 diagonals.
+        assert_eq!(plan.offsets(), vec![-2, 2, 6]);
+        let at = |off: i64| plan.outs.iter().find(|o| o.offset == off).unwrap();
+        assert_eq!(at(-2).contribs.len(), 1);
+        assert_eq!(at(2).contribs.len(), 2);
+        assert_eq!(at(6).contribs.len(), 1);
+        // (0,-2): rows [2,10) → 8 mults; (0,2): rows [0,8) → 8;
+        // (4,-2): rows [0,6) → 6; (4,2): rows [0,4) → 4.
+        assert_eq!(plan.mults, 8 + 8 + 6 + 4);
+        // Offset 2 coverage: windows [0,8) from (0,2) and [0,6) from
+        // (4,-2) merge to 8 distinct elements — coverage, not a sum.
+        assert_eq!(at(2).written, 8);
+        assert_eq!(plan.writes, plan.outs.iter().map(|o| o.written).sum::<usize>());
     }
 
     #[test]
@@ -175,6 +507,7 @@ mod tests {
         let (c, stats) = diag_mul_counted(&a, &b);
         assert_eq!(c.nnzd(), 0);
         assert_eq!(stats.mults, 0);
+        assert_eq!(stats.writes, 0);
     }
 
     #[test]
@@ -206,5 +539,15 @@ mod tests {
         let c = diag_mul(&a, &a);
         let oracle = d.matmul(&d);
         assert!(diag_to_dense(&c).max_abs_diff(&oracle) < 1e-14);
+    }
+
+    #[test]
+    fn merged_coverage_cases() {
+        assert_eq!(merged_coverage(vec![]), 0);
+        assert_eq!(merged_coverage(vec![(0, 5)]), 5);
+        assert_eq!(merged_coverage(vec![(0, 5), (5, 8)]), 8);
+        assert_eq!(merged_coverage(vec![(2, 6), (0, 4)]), 6);
+        assert_eq!(merged_coverage(vec![(0, 3), (7, 9)]), 5);
+        assert_eq!(merged_coverage(vec![(0, 9), (2, 4)]), 9);
     }
 }

@@ -8,7 +8,10 @@ pub mod diag_mul;
 pub mod gustavson;
 pub mod outer;
 
-pub use diag_mul::{diag_mul, diag_mul_counted};
+pub use diag_mul::{
+    diag_mul, diag_mul_counted, diag_mul_parallel, diag_mul_reference, execute_plan,
+    packed_diag_mul_counted, packed_diag_mul_parallel, plan_diag_mul, MulPlan,
+};
 pub use gustavson::gustavson_mul;
 pub use outer::outer_mul;
 

@@ -76,21 +76,30 @@ pub struct TaylorResult {
 /// The chained multiplications `term · A` are exactly the products the
 /// accelerator executes; callers wanting cycle/energy accounting run the
 /// same schedule through [`crate::coordinator`].
+///
+/// The hot path runs on the packed flat-arena representation: `A` is
+/// frozen once, the running term stays packed across every chained
+/// product, and each product executes the Minkowski-planned kernel
+/// across the worker pool (bit-identical to serial execution, so results
+/// are deterministic regardless of thread count). Only the accumulated
+/// sum lives in the builder representation, fed by
+/// [`DiagMatrix::add_assign_scaled_packed`].
 pub fn expm_diag(h: &DiagMatrix, t: f64, iters: usize) -> TaylorResult {
     let n = h.dim();
-    // A = −iHt
-    let a = h.scaled(-I * t);
+    // A = −iHt, frozen once for the whole chain.
+    let a = h.scaled(-I * t).freeze();
     let mut sum = DiagMatrix::identity(n);
-    let mut term = DiagMatrix::identity(n);
+    let mut term = crate::format::PackedDiagMatrix::identity(n);
+    let workers = crate::coordinator::pool::default_workers();
     let mut steps = Vec::with_capacity(iters);
 
     for k in 1..=iters {
-        let (mut next, stats) = crate::linalg::diag_mul_counted(&term, &a);
         // term_k = term_{k-1} · A / k
-        next = next.scaled(ONE / k as f64);
+        let (mut next, stats) = crate::linalg::packed_diag_mul_parallel(&term, &a, workers);
+        next.scale(ONE / k as f64);
         next.prune(crate::format::diag::ZERO_TOL);
         term = next;
-        sum.add_assign_scaled(&term, ONE);
+        sum.add_assign_scaled_packed(&term, ONE);
         steps.push(TaylorStep {
             k,
             term_nnzd: term.nnzd(),

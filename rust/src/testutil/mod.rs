@@ -1,8 +1,12 @@
-//! Test utilities: a seeded PRNG and a tiny property-testing harness.
+//! Test utilities: a seeded PRNG, a tiny property-testing harness, and
+//! shared random-matrix generators.
 //!
 //! The build environment is offline, so `proptest`/`rand` are unavailable;
 //! `XorShift64` + [`prop_check`] give deterministic, seed-reporting
 //! randomized tests with the same spirit.
+
+use crate::format::DiagMatrix;
+use crate::num::Complex;
 
 /// xorshift64* PRNG — deterministic, seedable, no dependencies.
 #[derive(Clone, Debug)]
@@ -64,6 +68,29 @@ impl XorShift64 {
     }
 }
 
+/// Random DiaQ matrix whose offsets are exponentially distant (`±2^q`,
+/// `2^q < n`) — the problem-Hamiltonian structure of paper Table II. Up
+/// to `max_diags` draws; colliding offsets overwrite, so the result may
+/// hold fewer diagonals. Requires `n ≥ 2`.
+pub fn random_exp_offset_matrix(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+    assert!(n >= 2, "need n >= 2 for an off-diagonal");
+    let mut qmax = 0u32;
+    while (1usize << (qmax + 1)) < n {
+        qmax += 1;
+    }
+    let mut m = DiagMatrix::zeros(n);
+    for _ in 0..rng.gen_range(1, max_diags + 1) {
+        let mag = 1i64 << rng.gen_range(0, qmax as usize + 1);
+        let d = if rng.gen_bool(0.5) { mag } else { -mag };
+        let len = DiagMatrix::diag_len(n, d);
+        let vals: Vec<Complex> = (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
 /// Run `cases` seeded property cases; on failure report the seed so the
 /// case can be replayed. `f` receives a fresh PRNG per case.
 pub fn prop_check<F: Fn(&mut XorShift64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
@@ -116,5 +143,18 @@ mod tests {
     #[should_panic(expected = "property `always-fails`")]
     fn prop_check_reports_seed() {
         prop_check("always-fails", 1, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn exp_offset_generator_structure() {
+        let mut rng = XorShift64::new(9);
+        for _ in 0..50 {
+            let m = random_exp_offset_matrix(&mut rng, 33, 6);
+            assert!(m.nnzd() >= 1);
+            for d in m.offsets() {
+                let mag = d.unsigned_abs();
+                assert!(mag.is_power_of_two() && mag < 33, "offset {d}");
+            }
+        }
     }
 }

@@ -1,8 +1,11 @@
 //! Repo-level property tests: invariants that tie the layers together.
 
 use diamond::format::convert::{diag_to_dense, dense_to_diag};
-use diamond::format::DiagMatrix;
-use diamond::linalg::{diag_mul, diag_mul_counted};
+use diamond::format::{DiagMatrix, PackedDiagMatrix};
+use diamond::linalg::{
+    diag_mul, diag_mul_counted, diag_mul_reference, packed_diag_mul_counted,
+    packed_diag_mul_parallel,
+};
 use diamond::num::{Complex, ONE};
 use diamond::sim::grid::grid_spmspm;
 use diamond::sim::{FeedOrder, SimConfig};
@@ -20,6 +23,8 @@ fn random_diag(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
     }
     m
 }
+
+use diamond::testutil::random_exp_offset_matrix;
 
 #[test]
 fn associativity_of_diag_mul() {
@@ -111,6 +116,103 @@ fn grid_cycles_bounded_by_complexity_eq18() {
         let bound = 6 * diamond::sim::cycle_model::complexity_bound(a.nnzd(), b.nnzd(), n);
         if res.stats.cycles > bound {
             return Err(format!("cycles {} > 6x bound {bound}", res.stats.cycles));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_kernel_agrees_with_reference_and_dense() {
+    // The three formulations — packed plan/execute, the seed BTreeMap
+    // kernel, and the dense oracle — must agree on band and
+    // exponential-offset structures alike.
+    prop_check("packed == seed kernel == dense", 20, |rng| {
+        let n = rng.gen_range(2, 48);
+        let (a, b) = if rng.gen_bool(0.5) {
+            (
+                random_exp_offset_matrix(rng, n, 6),
+                random_exp_offset_matrix(rng, n, 6),
+            )
+        } else {
+            (random_diag(rng, n, 6), random_diag(rng, n, 6))
+        };
+        let c = diag_mul(&a, &b);
+        let reference = diag_mul_reference(&a, &b);
+        if c.max_abs_diff(&reference) > 1e-13 {
+            return Err(format!("n={n}: packed vs seed kernel"));
+        }
+        let dense = diag_to_dense(&a).matmul(&diag_to_dense(&b));
+        if diag_to_dense(&c).max_abs_diff(&dense) > 1e-12 {
+            return Err(format!("n={n}: packed vs dense"));
+        }
+        // NNZD reflects the dense band structure (all-zero diagonals
+        // pruned at kernel exit).
+        let band = dense_to_diag(&dense, diamond::format::diag::ZERO_TOL).nnzd();
+        if c.nnzd() != band {
+            return Err(format!("n={n}: nnzd {} != band {band}", c.nnzd()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_kernel_is_bit_identical_to_serial() {
+    // n is large enough that most cases cross the kernel's
+    // PARALLEL_MULTS_THRESHOLD and genuinely exercise the worker pool
+    // (cases below it take the serial fallback — equality still holds).
+    prop_check("parallel == serial, bitwise", 10, |rng| {
+        let n = rng.gen_range(512, 1536);
+        let a = random_diag(rng, n, 8).freeze();
+        let b = random_exp_offset_matrix(rng, n, 6).freeze();
+        let (serial, s_stats) = packed_diag_mul_counted(&a, &b);
+        for workers in [2usize, 3, 8] {
+            let (parallel, p_stats) = packed_diag_mul_parallel(&a, &b, workers);
+            if parallel.offsets() != serial.offsets() || parallel.arena() != serial.arena() {
+                return Err(format!("workers={workers}: output differs"));
+            }
+            if p_stats != s_stats {
+                return Err(format!("workers={workers}: stats differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn freeze_thaw_roundtrip_property() {
+    prop_check("freeze . thaw == id", 16, |rng| {
+        let n = rng.gen_range(2, 40);
+        let m = random_diag(rng, n, 6);
+        let packed = m.freeze();
+        if packed.nnzd() != m.nnzd() || packed.stored_elements() != m.stored_elements() {
+            return Err("structure changed".into());
+        }
+        if packed.thaw() != m {
+            return Err("values changed".into());
+        }
+        // Identity freeze is well-formed too.
+        let id = PackedDiagMatrix::identity(n);
+        if id.thaw() != DiagMatrix::identity(n) {
+            return Err("identity mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn write_stats_never_exceed_stored_elements() {
+    // The op-stat bugfix: `writes` counts covered elements only, so it is
+    // bounded by the (pre-prune) stored size and by mults.
+    prop_check("writes <= mults and <= natural storage", 16, |rng| {
+        let n = rng.gen_range(2, 40);
+        let a = random_diag(rng, n, 6);
+        let b = random_diag(rng, n, 6);
+        let (_, stats) = diag_mul_counted(&a, &b);
+        if stats.writes > stats.mults {
+            return Err(format!("writes {} > mults {}", stats.writes, stats.mults));
+        }
+        if stats.merge_adds != stats.mults || stats.reads != 2 * stats.mults {
+            return Err("read/merge accounting broken".into());
         }
         Ok(())
     });

@@ -1,0 +1,167 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the small API surface the `diamond` crate uses: [`Error`],
+//! [`Result`], the [`anyhow!`] macro and the [`Context`] extension trait.
+//! Semantics match the real crate where it matters here:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (the source chain is captured);
+//! * `context`/`with_context` prepend an outer message;
+//! * `Display` shows the outermost message, `{:#}` the full chain
+//!   joined with `: ` (the format the CLI and tests rely on).
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus its cause chain.
+pub struct Error {
+    /// Outermost message first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// An error from a plain message (what `anyhow!` expands to).
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error {
+            chain: vec![message.into()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, message: impl Into<String>) -> Error {
+        self.chain.insert(0, message.into());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, `outer: inner: root`.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real crate: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Construct-and-return-early, mirroring the real crate.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "));
+        assert!(full.len() > "reading config: ".len());
+    }
+
+    #[test]
+    fn macro_and_question_mark() {
+        fn inner() -> Result<()> {
+            let _n: usize = "not-a-number".parse()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+        let e = anyhow!("bucket {} missing", 42);
+        assert_eq!(format!("{e}"), "bucket 42 missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("empty").unwrap_err();
+        assert_eq!(format!("{err}"), "empty");
+    }
+}
