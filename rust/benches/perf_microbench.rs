@@ -34,18 +34,34 @@ fn time<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
 }
 
 fn main() {
+    // `--smoke` (the CI bench smoke-job): only the n = 2^12 kernel
+    // shoot-out, then write BENCH_kernel.json and exit.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!("perf microbench — units noted per case\n");
 
-    // Kernel shoot-out: seed BTreeMap kernel vs packed serial vs packed
-    // parallel on the exponential-offset workload; recorded as
-    // BENCH_kernel.json at the repo root for the perf trajectory.
-    let cases = diamond::bench_harness::kernel::run_suite();
+    // Kernel shoot-out: seed BTreeMap kernel vs the SoA engine (serial /
+    // tiled-parallel / plan-cached) on the exponential-offset workload;
+    // recorded as BENCH_kernel.json at the repo root for the perf
+    // trajectory (CI gates on the soa-vs-seed column).
+    let opts = diamond::bench_harness::kernel::KernelOptions::default();
+    let cases = diamond::bench_harness::kernel::run_suite_with(&opts, smoke);
     println!("{}", diamond::bench_harness::kernel::render_table(&cases));
     let json = diamond::bench_harness::kernel::to_json(&cases);
     let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernel.json");
     match std::fs::write(json_path, &json) {
         Ok(()) => println!("wrote {json_path}\n"),
-        Err(e) => eprintln!("could not write {json_path}: {e}\n"),
+        Err(e) => {
+            eprintln!("could not write {json_path}: {e}\n");
+            if smoke {
+                // In the CI smoke-job, producing the JSON is the whole
+                // point: fail loudly instead of letting the gate step
+                // die on a missing file.
+                std::process::exit(1);
+            }
+        }
+    }
+    if smoke {
+        return;
     }
 
     // L3 hot path 1: stepped grid simulation (DPE-cycle events/s).

@@ -1,35 +1,69 @@
-//! Kernel microbenchmark: seed BTreeMap kernel vs packed serial vs
-//! packed parallel, on the exponential-offset workload (`±2^q`
-//! diagonals — the problem-Hamiltonian structure of paper Table II).
+//! Kernel microbenchmark: seed BTreeMap kernel vs the SoA kernel engine
+//! (serial, tiled-parallel, and plan-cached), on the exponential-offset
+//! workload (`±2^q` diagonals — the problem-Hamiltonian structure of
+//! paper Table II).
 //!
 //! `perf_microbench` writes the result as `BENCH_kernel.json` at the repo
-//! root so successive PRs have a comparable perf trajectory.
+//! root so successive PRs have a comparable perf trajectory; CI diffs the
+//! SoA kernel against the seed baseline and fails loudly on regression.
 
 use super::Table;
 use crate::coordinator::pool;
 use crate::format::DiagMatrix;
+use crate::linalg::engine::{self, EngineConfig, KernelEngine};
 use crate::num::Complex;
 use std::time::Instant;
+
+/// Benchmark knobs surfaced on the CLI (`diamond kernel --tile N
+/// [--no-plan-cache]`).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelOptions {
+    /// Tile length for the tiled variants.
+    pub tile: usize,
+    /// Whether the "cached" variant may reuse plans (off = ablation:
+    /// the cached column re-plans every call, like the tiled column).
+    pub plan_cache: bool,
+}
+
+impl Default for KernelOptions {
+    fn default() -> Self {
+        KernelOptions {
+            tile: engine::DEFAULT_TILE,
+            plan_cache: true,
+        }
+    }
+}
 
 /// One benchmarked configuration (times are ns per multiply call).
 pub struct KernelCase {
     pub n: usize,
     pub diags: usize,
     pub workers: usize,
+    pub tile: usize,
+    /// Seed BTreeMap kernel (the baseline every PR is diffed against).
     pub btreemap_ns: f64,
-    pub packed_serial_ns: f64,
-    pub packed_parallel_ns: f64,
+    /// SoA plan/execute, one worker, untiled.
+    pub soa_serial_ns: f64,
+    /// SoA tiled execution across the worker pool (re-plans per call).
+    pub tiled_parallel_ns: f64,
+    /// Tiled parallel execution through a warm plan cache.
+    pub plan_cached_ns: f64,
 }
 
 impl KernelCase {
-    /// Packed serial speedup over the seed BTreeMap kernel.
-    pub fn speedup_packed(&self) -> f64 {
-        self.btreemap_ns / self.packed_serial_ns
+    /// SoA serial speedup over the seed BTreeMap kernel.
+    pub fn speedup_soa(&self) -> f64 {
+        self.btreemap_ns / self.soa_serial_ns
     }
 
-    /// Packed parallel speedup over the seed BTreeMap kernel.
-    pub fn speedup_parallel(&self) -> f64 {
-        self.btreemap_ns / self.packed_parallel_ns
+    /// Tiled-parallel speedup over the seed BTreeMap kernel.
+    pub fn speedup_tiled(&self) -> f64 {
+        self.btreemap_ns / self.tiled_parallel_ns
+    }
+
+    /// Plan-cached speedup over the seed BTreeMap kernel.
+    pub fn speedup_cached(&self) -> f64 {
+        self.btreemap_ns / self.plan_cached_ns
     }
 }
 
@@ -71,21 +105,51 @@ fn time_ns<F: FnMut() -> usize>(reps: usize, mut f: F) -> f64 {
 }
 
 /// Benchmark one `(n, qmax)` configuration with `reps` timed calls per
-/// kernel variant. Also cross-checks that all three paths agree.
-pub fn run_case(n: usize, qmax: u32, reps: usize) -> KernelCase {
+/// kernel variant. Also cross-checks that every path agrees (the tiled
+/// and cached variants bit-identically with the serial one).
+pub fn run_case(n: usize, qmax: u32, reps: usize, opts: &KernelOptions) -> KernelCase {
     let workers = pool::default_workers();
     let a = exp_offset_matrix(n, qmax);
     let b = exp_offset_matrix(n, qmax);
     let ap = a.freeze();
     let bp = b.freeze();
 
+    let mut tiled_engine = KernelEngine::new(EngineConfig {
+        tile: opts.tile,
+        workers,
+        cache_plans: false,
+        ..EngineConfig::default()
+    });
+    let mut cached_engine = KernelEngine::new(EngineConfig {
+        tile: opts.tile,
+        workers,
+        cache_plans: opts.plan_cache,
+        ..EngineConfig::default()
+    });
+
+    // Cross-checks before timing: all engine paths must agree with the
+    // serial kernel bitwise, and with the seed kernel numerically.
     let (serial_c, _) = crate::linalg::packed_diag_mul_counted(&ap, &bp);
-    let (parallel_c, _) = crate::linalg::packed_diag_mul_parallel(&ap, &bp, workers);
+    let (tiled_c, _) = tiled_engine.multiply(&ap, &bp);
     assert_eq!(
         serial_c.arena(),
-        parallel_c.arena(),
-        "parallel kernel must be bit-identical to serial"
+        tiled_c.arena(),
+        "tiled-parallel kernel must be bit-identical to serial"
     );
+    let (cached_c1, _) = cached_engine.multiply(&ap, &bp);
+    let (cached_c2, _) = cached_engine.multiply(&ap, &bp);
+    assert_eq!(
+        cached_c1.arena(),
+        cached_c2.arena(),
+        "a plan-cache hit must be bit-identical to a fresh plan"
+    );
+    assert_eq!(serial_c.arena(), cached_c2.arena());
+    if opts.plan_cache {
+        assert!(
+            cached_engine.stats().plan_cache_hits >= 1,
+            "warm cache expected a hit"
+        );
+    }
     let reference = crate::linalg::diag_mul_reference(&a, &b);
     assert!(
         serial_c.thaw().max_abs_diff(&reference) < 1e-12,
@@ -93,46 +157,55 @@ pub fn run_case(n: usize, qmax: u32, reps: usize) -> KernelCase {
     );
 
     let btreemap_ns = time_ns(reps, || crate::linalg::diag_mul_reference(&a, &b).nnzd());
-    let packed_serial_ns = time_ns(reps, || {
+    let soa_serial_ns = time_ns(reps, || {
         crate::linalg::packed_diag_mul_counted(&ap, &bp).0.nnzd()
     });
-    let packed_parallel_ns = time_ns(reps, || {
-        crate::linalg::packed_diag_mul_parallel(&ap, &bp, workers)
-            .0
-            .nnzd()
-    });
+    let tiled_parallel_ns = time_ns(reps, || tiled_engine.multiply(&ap, &bp).0.nnzd());
+    // The cached engine is warm from the cross-check above, so this
+    // measures plan-reuse + tiled execution (the Taylor steady state).
+    let plan_cached_ns = time_ns(reps, || cached_engine.multiply(&ap, &bp).0.nnzd());
 
     KernelCase {
         n,
         diags: a.nnzd(),
         workers,
+        tile: opts.tile,
         btreemap_ns,
-        packed_serial_ns,
-        packed_parallel_ns,
+        soa_serial_ns,
+        tiled_parallel_ns,
+        plan_cached_ns,
     }
 }
 
-/// The standard suite: exponential-offset workloads at `n ≥ 2^12`.
-pub fn run_suite() -> Vec<KernelCase> {
-    vec![run_case(1 << 12, 11, 5), run_case(1 << 14, 13, 3)]
+/// The standard suite: exponential-offset workloads at `n ≥ 2^12`;
+/// `smoke` runs only the `n = 2^12` case (the CI bench smoke-job).
+pub fn run_suite_with(opts: &KernelOptions, smoke: bool) -> Vec<KernelCase> {
+    if smoke {
+        vec![run_case(1 << 12, 11, 5, opts)]
+    } else {
+        vec![run_case(1 << 12, 11, 5, opts), run_case(1 << 14, 13, 3, opts)]
+    }
 }
 
 /// Render the human-readable comparison table.
 pub fn render_table(cases: &[KernelCase]) -> String {
     let mut t = Table::new(&[
-        "n", "diags", "workers", "btreemap ms", "packed ms", "parallel ms",
-        "packed vs seed", "parallel vs seed",
+        "n", "diags", "workers", "tile", "btreemap ms", "soa ms", "tiled ms", "cached ms",
+        "soa vs seed", "tiled vs seed", "cached vs seed",
     ]);
     for c in cases {
         t.row(vec![
             c.n.to_string(),
             c.diags.to_string(),
             c.workers.to_string(),
+            c.tile.to_string(),
             format!("{:.3}", c.btreemap_ns / 1e6),
-            format!("{:.3}", c.packed_serial_ns / 1e6),
-            format!("{:.3}", c.packed_parallel_ns / 1e6),
-            super::fmt_ratio(c.speedup_packed()),
-            super::fmt_ratio(c.speedup_parallel()),
+            format!("{:.3}", c.soa_serial_ns / 1e6),
+            format!("{:.3}", c.tiled_parallel_ns / 1e6),
+            format!("{:.3}", c.plan_cached_ns / 1e6),
+            super::fmt_ratio(c.speedup_soa()),
+            super::fmt_ratio(c.speedup_tiled()),
+            super::fmt_ratio(c.speedup_cached()),
         ]);
     }
     format!(
@@ -149,15 +222,18 @@ pub fn to_json(cases: &[KernelCase]) -> String {
     );
     for (i, c) in cases.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"n\": {}, \"diags\": {}, \"workers\": {}, \"serial_btreemap_ns\": {:.0}, \"packed_serial_ns\": {:.0}, \"packed_parallel_ns\": {:.0}, \"speedup_packed_vs_seed\": {:.3}, \"speedup_parallel_vs_seed\": {:.3}}}{}\n",
+            "    {{\"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}}}{}\n",
             c.n,
             c.diags,
             c.workers,
+            c.tile,
             c.btreemap_ns,
-            c.packed_serial_ns,
-            c.packed_parallel_ns,
-            c.speedup_packed(),
-            c.speedup_parallel(),
+            c.soa_serial_ns,
+            c.tiled_parallel_ns,
+            c.plan_cached_ns,
+            c.speedup_soa(),
+            c.speedup_tiled(),
+            c.speedup_cached(),
             if i + 1 < cases.len() { "," } else { "" },
         ));
     }
@@ -182,12 +258,28 @@ mod tests {
 
     #[test]
     fn small_case_runs_and_agrees() {
-        let c = run_case(64, 3, 1);
+        let opts = KernelOptions {
+            tile: 16,
+            plan_cache: true,
+        };
+        let c = run_case(64, 3, 1, &opts);
         assert_eq!(c.n, 64);
         assert_eq!(c.diags, 9);
+        assert_eq!(c.tile, 16);
         assert!(c.btreemap_ns > 0.0);
-        assert!(c.packed_serial_ns > 0.0);
-        assert!(c.packed_parallel_ns > 0.0);
+        assert!(c.soa_serial_ns > 0.0);
+        assert!(c.tiled_parallel_ns > 0.0);
+        assert!(c.plan_cached_ns > 0.0);
+    }
+
+    #[test]
+    fn no_plan_cache_ablation_runs() {
+        let opts = KernelOptions {
+            tile: 32,
+            plan_cache: false,
+        };
+        let c = run_case(64, 2, 1, &opts);
+        assert!(c.plan_cached_ns > 0.0);
     }
 
     #[test]
@@ -196,14 +288,19 @@ mod tests {
             n: 4096,
             diags: 25,
             workers: 4,
+            tile: 8192,
             btreemap_ns: 2e6,
-            packed_serial_ns: 1e6,
-            packed_parallel_ns: 5e5,
+            soa_serial_ns: 1e6,
+            tiled_parallel_ns: 5e5,
+            plan_cached_ns: 4e5,
         }];
         let j = to_json(&cases);
         assert!(j.contains("\"bench\": \"diag_mul_kernel\""));
         assert!(j.contains("\"n\": 4096"));
-        assert!(j.contains("\"speedup_parallel_vs_seed\": 4.000"));
+        assert!(j.contains("\"tile\": 8192"));
+        assert!(j.contains("\"speedup_soa_vs_seed\": 2.000"));
+        assert!(j.contains("\"speedup_tiled_vs_seed\": 4.000"));
+        assert!(j.contains("\"speedup_cached_vs_seed\": 5.000"));
         assert!(render_table(&cases).contains("4096"));
     }
 }

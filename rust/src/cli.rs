@@ -1,7 +1,8 @@
 //! The `diamond` CLI (hand-rolled parsing; offline build has no clap).
 //!
 //! ```text
-//! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations | kernel
+//! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations
+//! diamond kernel [--tile <elems>] [--no-plan-cache] [--smoke]
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
 //! diamond bench-all
 //! ```
@@ -101,6 +102,31 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             rep.engine.exec_nanos as f64 / 1e6
         );
     }
+    if rep.engine.plan_cache_hits > 0 {
+        println!(
+            "plan cache: {} reuse hit(s) across the Taylor chain (offsets stabilized)",
+            rep.engine.plan_cache_hits
+        );
+    }
+    Ok(())
+}
+
+/// `diamond kernel [--tile <elems>] [--no-plan-cache] [--smoke]` — the
+/// kernel microbenchmark with engine knobs exposed.
+fn cmd_kernel(args: &[String]) -> Result<(), String> {
+    let mut opts = crate::bench_harness::kernel::KernelOptions::default();
+    if let Some(t) = flag_value(args, "--tile") {
+        opts.tile = t
+            .parse::<usize>()
+            .map_err(|e| format!("--tile: {e}"))?
+            .max(1);
+    }
+    if args.iter().any(|a| a == "--no-plan-cache") {
+        opts.plan_cache = false;
+    }
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let cases = crate::bench_harness::kernel::run_suite_with(&opts, smoke);
+    println!("{}", crate::bench_harness::kernel::render_table(&cases));
     Ok(())
 }
 
@@ -141,11 +167,7 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             println!("{}", experiments::ablations());
             Ok(())
         }
-        "kernel" => {
-            let cases = crate::bench_harness::kernel::run_suite();
-            println!("{}", crate::bench_harness::kernel::render_table(&cases));
-            Ok(())
-        }
+        "kernel" => cmd_kernel(rest),
         "bench-all" => {
             println!("{}", experiments::table2());
             println!("{}", experiments::table3());
@@ -161,7 +183,8 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
         "help" | "--help" | "-h" => {
             println!(
                 "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
-                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations kernel bench-all\n  \
+                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
+                 kernel [--tile <elems>] [--no-plan-cache] [--smoke]\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]"
             );
             Ok(())
@@ -202,5 +225,14 @@ mod tests {
     #[test]
     fn help_succeeds() {
         assert_eq!(run_with_args(vec!["help".into()]), 0);
+    }
+
+    #[test]
+    fn kernel_rejects_malformed_tile() {
+        // Parse error surfaces before any benchmarking starts.
+        assert_eq!(
+            run_with_args(vec!["kernel".into(), "--tile".into(), "bogus".into()]),
+            2
+        );
     }
 }

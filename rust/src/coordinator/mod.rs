@@ -92,6 +92,11 @@ impl BaselineEvolution {
 /// The coordinator.
 pub struct Coordinator {
     pub functional: FunctionalMode,
+    /// Shared diagonal kernel engine backing the oracle functional path:
+    /// tiled execution plus a plan cache that persists across the jobs a
+    /// coordinator serves (Taylor chains with stabilized offsets reuse
+    /// plans). Behind a mutex so `values` stays `&self`.
+    kernel: std::sync::Mutex<crate::linalg::KernelEngine>,
 }
 
 impl Coordinator {
@@ -99,6 +104,7 @@ impl Coordinator {
     pub fn with_pjrt() -> Result<Self> {
         Ok(Coordinator {
             functional: FunctionalMode::Pjrt(Box::new(DiagEngine::load_default()?)),
+            kernel: std::sync::Mutex::new(crate::linalg::KernelEngine::with_defaults()),
         })
     }
 
@@ -106,20 +112,33 @@ impl Coordinator {
     pub fn oracle() -> Self {
         Coordinator {
             functional: FunctionalMode::Oracle,
+            kernel: std::sync::Mutex::new(crate::linalg::KernelEngine::with_defaults()),
         }
     }
 
     /// Compute values for `A·B` through the configured functional path.
-    /// The oracle path runs the Minkowski-planned packed kernel across
-    /// the worker pool; parallel execution is bit-identical to serial,
-    /// so job results stay deterministic.
+    /// The oracle path runs the Minkowski-planned, tiled packed kernel
+    /// across the worker pool; parallel execution is bit-identical to
+    /// serial, so job results stay deterministic. Plan-cache reuse is
+    /// surfaced through [`EngineStats::plan_cache_hits`] on both paths.
+    ///
+    /// Each call freezes both builder operands and thaws the result
+    /// (O(elements), same as before the engine refactor — the multiply
+    /// itself is O(mults) and dominates). A packed-operand coordinator
+    /// path that keeps the Taylor term frozen across `evolve` like
+    /// `taylor::expm_diag` does is a ROADMAP item.
     pub fn values(&self, a: &DiagMatrix, b: &DiagMatrix) -> Result<(DiagMatrix, EngineStats)> {
         match &self.functional {
             FunctionalMode::Pjrt(engine) => engine.spmspm(a, b),
             FunctionalMode::Oracle => {
-                let workers = pool::default_workers();
-                let (c, _stats) = crate::linalg::diag_mul_parallel(a, b, workers);
-                Ok((c, EngineStats::default()))
+                let mut engine = self.kernel.lock().unwrap();
+                let hits_before = engine.stats().plan_cache_hits;
+                let (c, _stats) = engine.multiply(&a.freeze(), &b.freeze());
+                let stats = EngineStats {
+                    plan_cache_hits: engine.stats().plan_cache_hits - hits_before,
+                    ..EngineStats::default()
+                };
+                Ok((c.thaw(), stats))
             }
         }
     }
@@ -193,6 +212,7 @@ impl Coordinator {
             engine_total.exec_nanos += es.exec_nanos;
             engine_total.bucket_n = es.bucket_n.max(engine_total.bucket_n);
             engine_total.bucket_d = es.bucket_d.max(engine_total.bucket_d);
+            engine_total.plan_cache_hits += es.plan_cache_hits;
 
             next = next.scaled(ONE / k as f64);
             next.prune(crate::format::diag::ZERO_TOL);
@@ -303,5 +323,25 @@ mod tests {
         let t = taylor::normalized_t(&h);
         let rep = coord.evolve(&h, t, 0, SimConfig::default()).unwrap();
         assert_eq!(rep.iters, taylor::iters_for(&h, t, taylor::DEFAULT_TOL));
+    }
+
+    #[test]
+    fn oracle_evolution_reports_plan_cache_hits() {
+        // Band Hamiltonian whose Taylor term saturates the offset set
+        // after a few products: later oracle SpMSpMs must reuse the
+        // coordinator's cached plan and say so in EngineStats.
+        let n = 10;
+        let mut h = DiagMatrix::zeros(n);
+        for d in -2i64..=2 {
+            let len = DiagMatrix::diag_len(n, d);
+            h.set_diag(d, vec![crate::num::Complex::new(1.0, 0.1 * d as f64); len]);
+        }
+        let coord = Coordinator::oracle();
+        let rep = coord.evolve(&h, 0.4, 10, SimConfig::default()).unwrap();
+        assert!(
+            rep.engine.plan_cache_hits >= 1,
+            "stabilized offsets must hit the plan cache, got {:?}",
+            rep.engine
+        );
     }
 }

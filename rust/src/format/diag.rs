@@ -23,19 +23,31 @@
 //! access pays a tree lookup and each diagonal is its own heap allocation.
 //!
 //! [`PackedDiagMatrix`] is the *frozen compute snapshot* the SpMSpM hot
-//! path consumes: a sorted offset table plus **one contiguous value
-//! arena**, with diagonal `i` occupying the half-open arena slice
-//! `starts[i] .. starts[i + 1]` (so `(start, len)` per diagonal, lengths
-//! staying the natural unpadded `n − |d|`). Lookups are a binary search
-//! over a flat `i64` table; iteration walks the arena linearly; and the
-//! diagonal-convolution kernel can hand each output diagonal its own
-//! disjoint slice, which is what makes the parallel execution in
-//! [`crate::linalg::diag_mul`] lock-free and deterministic.
+//! path consumes: a sorted offset table plus **two contiguous value
+//! planes** — all real parts in one `f64` arena, all imaginary parts in
+//! another (structure-of-arrays, the DiaQ layout that unlocks SIMD on the
+//! per-diagonal multiply-accumulate). Diagonal `i` occupies the half-open
+//! slice `starts[i] .. starts[i + 1]` *of both planes* (lengths staying
+//! the natural unpadded `n − |d|`). Lookups are a binary search over a
+//! flat `i64` table; the kernel reads four `f64` streams and writes two,
+//! so the inner loop is plain `fused = r·r − i·i / r·i + i·r` over
+//! contiguous memory with no interleaved-`Complex` stride — exactly what
+//! autovectorizes. The diagonal-convolution kernel hands each output
+//! diagonal (or cache-sized tile of one) its own disjoint plane slices,
+//! which is what makes parallel execution in [`crate::linalg::diag_mul`]
+//! and [`crate::linalg::engine`] lock-free and deterministic.
+//!
+//! The interleaved [`Complex`] layout remains the **API face**: accessor
+//! shims ([`PackedDiagMatrix::values_at`], [`PackedDiagMatrix::arena`],
+//! [`PackedDiagMatrix::iter`]) materialize interleaved views on demand,
+//! and the `freeze`/`thaw` round-trip is unchanged. Hot paths use the
+//! plane accessors ([`PackedDiagMatrix::re_at`] /
+//! [`PackedDiagMatrix::im_at`]) instead.
 //!
 //! ### Freeze / thaw lifecycle
 //!
 //! ```text
-//!   build (BTreeMap)  --freeze()-->  compute (flat arena)  --thaw()-->  build
+//!   build (BTreeMap)  --freeze()-->  compute (re/im planes)  --thaw()-->  build
 //! ```
 //!
 //! Both moves are one `O(elements)` copy. The Taylor chain freezes its
@@ -328,55 +340,68 @@ impl DiagMatrix {
         true
     }
 
-    /// Snapshot into the packed flat-arena representation (one
+    /// Snapshot into the packed split-plane (SoA) representation (one
     /// `O(elements)` copy). See the module docs for the layout.
     pub fn freeze(&self) -> PackedDiagMatrix {
+        let total = self.stored_elements();
         let mut offsets = Vec::with_capacity(self.diags.len());
         let mut starts = Vec::with_capacity(self.diags.len() + 1);
-        let mut arena = Vec::with_capacity(self.stored_elements());
+        let mut re = Vec::with_capacity(total);
+        let mut im = Vec::with_capacity(total);
         starts.push(0);
         for (&d, vals) in &self.diags {
             offsets.push(d);
-            arena.extend_from_slice(vals);
-            starts.push(arena.len());
+            for v in vals {
+                re.push(v.re);
+                im.push(v.im);
+            }
+            starts.push(re.len());
         }
         PackedDiagMatrix {
             n: self.n,
             offsets,
             starts,
-            arena,
+            re,
+            im,
         }
     }
 
     /// `self += s · rhs` with a packed right-hand side — the Taylor
-    /// accumulation primitive on the hot path (no thaw needed).
+    /// accumulation primitive on the hot path (no thaw needed). Reads the
+    /// SoA planes directly.
     pub fn add_assign_scaled_packed(&mut self, rhs: &PackedDiagMatrix, s: Complex) {
         assert_eq!(self.n, rhs.dim(), "dimension mismatch");
-        for (d, vals) in rhs.iter() {
+        for i in 0..rhs.nnzd() {
+            let d = rhs.offset_at(i);
+            let (sre, sim) = (rhs.re_at(i), rhs.im_at(i));
             let dst = self.diag_mut(d);
-            for (dst_v, &src_v) in dst.iter_mut().zip(vals.iter()) {
-                *dst_v += src_v * s;
+            for (k, dst_v) in dst.iter_mut().enumerate() {
+                *dst_v += Complex::new(sre[k], sim[k]) * s;
             }
         }
     }
 }
 
 /// A packed, immutable-structure snapshot of a [`DiagMatrix`]: sorted
-/// offset table + one contiguous value arena, diagonal `i` living in
-/// `arena[starts[i] .. starts[i + 1]]` with its natural unpadded length
+/// offset table + two contiguous value planes (split re/im, SoA),
+/// diagonal `i` living in `re[starts[i] .. starts[i + 1]]` /
+/// `im[starts[i] .. starts[i + 1]]` with its natural unpadded length
 /// `n − |offsets[i]|`. Produced by [`DiagMatrix::freeze`]; this is the
-/// representation the diagonal-convolution kernel and the Taylor chain
-/// operate on (see the module docs).
+/// representation the diagonal-convolution kernel engine and the Taylor
+/// chain operate on (see the module docs). Interleaved-[`Complex`]
+/// accessors remain as shims over the planes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedDiagMatrix {
     n: usize,
     /// Stored diagonal offsets, strictly ascending.
     offsets: Vec<i64>,
     /// Prefix table: diagonal `i` spans `starts[i] .. starts[i + 1]` in
-    /// the arena; `starts.len() == offsets.len() + 1`.
+    /// both planes; `starts.len() == offsets.len() + 1`.
     starts: Vec<usize>,
-    /// All diagonal values, concatenated in offset order.
-    arena: Vec<Complex>,
+    /// Real parts of all diagonal values, concatenated in offset order.
+    re: Vec<f64>,
+    /// Imaginary parts, same layout as `re`.
+    im: Vec<f64>,
 }
 
 impl PackedDiagMatrix {
@@ -386,7 +411,8 @@ impl PackedDiagMatrix {
             n,
             offsets: Vec::new(),
             starts: vec![0],
-            arena: Vec::new(),
+            re: Vec::new(),
+            im: Vec::new(),
         }
     }
 
@@ -396,7 +422,8 @@ impl PackedDiagMatrix {
             n,
             offsets: vec![0],
             starts: vec![0, n],
-            arena: vec![crate::num::ONE; n],
+            re: vec![1.0; n],
+            im: vec![0.0; n],
         }
     }
 
@@ -407,7 +434,8 @@ impl PackedDiagMatrix {
         assert_eq!(offsets.len(), values.len());
         let total: usize = values.iter().map(Vec::len).sum();
         let mut starts = Vec::with_capacity(offsets.len() + 1);
-        let mut arena = Vec::with_capacity(total);
+        let mut re = Vec::with_capacity(total);
+        let mut im = Vec::with_capacity(total);
         starts.push(0);
         for (i, vals) in values.iter().enumerate() {
             if i > 0 {
@@ -419,35 +447,42 @@ impl PackedDiagMatrix {
                 "diagonal {} must have length n - |offset|",
                 offsets[i]
             );
-            arena.extend_from_slice(vals);
-            starts.push(arena.len());
+            for v in vals {
+                re.push(v.re);
+                im.push(v.im);
+            }
+            starts.push(re.len());
         }
         PackedDiagMatrix {
             n,
             offsets,
             starts,
-            arena,
+            re,
+            im,
         }
     }
 
-    /// Crate-internal: assemble directly from a pre-built arena — the
-    /// SpMSpM executor fills one contiguous arena with disjoint writers
-    /// and hands it over without re-copying. Invariants are the same as
-    /// [`PackedDiagMatrix::from_diagonals`]; debug-checked only.
+    /// Crate-internal: assemble directly from pre-built planes — the
+    /// SpMSpM executor fills contiguous re/im planes with disjoint
+    /// writers and hands them over without re-copying. Invariants are the
+    /// same as [`PackedDiagMatrix::from_diagonals`]; debug-checked only.
     pub(crate) fn from_raw_parts(
         n: usize,
         offsets: Vec<i64>,
         starts: Vec<usize>,
-        arena: Vec<Complex>,
+        re: Vec<f64>,
+        im: Vec<f64>,
     ) -> Self {
         debug_assert_eq!(starts.len(), offsets.len() + 1);
-        debug_assert_eq!(*starts.last().unwrap_or(&0), arena.len());
+        debug_assert_eq!(*starts.last().unwrap_or(&0), re.len());
+        debug_assert_eq!(re.len(), im.len());
         debug_assert!(offsets.windows(2).all(|w| w[0] < w[1]));
         PackedDiagMatrix {
             n,
             offsets,
             starts,
-            arena,
+            re,
+            im,
         }
     }
 
@@ -469,17 +504,59 @@ impl PackedDiagMatrix {
         &self.offsets
     }
 
-    /// Total stored elements (the arena length).
+    /// Total stored elements (the per-plane length).
     #[inline]
     pub fn stored_elements(&self) -> usize {
-        self.arena.len()
+        self.re.len()
     }
 
-    /// The raw arena — exposed so tests can assert bit-identical results
-    /// between serial and parallel kernel execution.
+    /// Interleaved view of the whole value arena — a shim over the SoA
+    /// planes, materialized on call. Kept so tests can assert
+    /// bit-identical results between serial, tiled and parallel kernel
+    /// execution through the stable interleaved face.
+    pub fn arena(&self) -> Vec<Complex> {
+        self.re
+            .iter()
+            .zip(self.im.iter())
+            .map(|(&r, &i)| Complex::new(r, i))
+            .collect()
+    }
+
+    /// The full real plane (SoA hot-path accessor).
     #[inline]
-    pub fn arena(&self) -> &[Complex] {
-        &self.arena
+    pub fn re_plane(&self) -> &[f64] {
+        &self.re
+    }
+
+    /// The full imaginary plane (SoA hot-path accessor).
+    #[inline]
+    pub fn im_plane(&self) -> &[f64] {
+        &self.im
+    }
+
+    /// Real parts of the `i`-th stored diagonal (SoA hot-path accessor).
+    #[inline]
+    pub fn re_at(&self, i: usize) -> &[f64] {
+        &self.re[self.starts[i]..self.starts[i + 1]]
+    }
+
+    /// Imaginary parts of the `i`-th stored diagonal.
+    #[inline]
+    pub fn im_at(&self, i: usize) -> &[f64] {
+        &self.im[self.starts[i]..self.starts[i + 1]]
+    }
+
+    /// Plane index where the `i`-th stored diagonal begins.
+    #[inline]
+    pub fn start_of(&self, i: usize) -> usize {
+        self.starts[i]
+    }
+
+    /// Element `k` of the `i`-th stored diagonal, as interleaved complex.
+    #[inline]
+    pub fn value_at(&self, i: usize, k: usize) -> Complex {
+        let idx = self.starts[i] + k;
+        Complex::new(self.re[idx], self.im[idx])
     }
 
     /// Index of `offset` in the offset table, if stored. O(log nnzd).
@@ -488,10 +565,15 @@ impl PackedDiagMatrix {
         self.offsets.binary_search(&offset).ok()
     }
 
-    /// Values of the `i`-th stored diagonal.
-    #[inline]
-    pub fn values_at(&self, i: usize) -> &[Complex] {
-        &self.arena[self.starts[i]..self.starts[i + 1]]
+    /// Values of the `i`-th stored diagonal, materialized interleaved
+    /// (API-face shim; hot paths use [`PackedDiagMatrix::re_at`] /
+    /// [`PackedDiagMatrix::im_at`]).
+    pub fn values_at(&self, i: usize) -> Vec<Complex> {
+        self.re_at(i)
+            .iter()
+            .zip(self.im_at(i).iter())
+            .map(|(&r, &im)| Complex::new(r, im))
+            .collect()
     }
 
     /// Offset of the `i`-th stored diagonal.
@@ -500,13 +582,14 @@ impl PackedDiagMatrix {
         self.offsets[i]
     }
 
-    /// Borrow a diagonal by offset, if stored.
-    pub fn diag(&self, offset: i64) -> Option<&[Complex]> {
+    /// A diagonal by offset, materialized interleaved, if stored.
+    pub fn diag(&self, offset: i64) -> Option<Vec<Complex>> {
         self.index_of(offset).map(|i| self.values_at(i))
     }
 
-    /// Iterate `(offset, values)` in ascending offset order.
-    pub fn iter(&self) -> impl Iterator<Item = (i64, &[Complex])> {
+    /// Iterate `(offset, values)` in ascending offset order (interleaved
+    /// shim; each diagonal is materialized on yield).
+    pub fn iter(&self) -> impl Iterator<Item = (i64, Vec<Complex>)> + '_ {
         (0..self.offsets.len()).map(move |i| (self.offsets[i], self.values_at(i)))
     }
 
@@ -514,61 +597,74 @@ impl PackedDiagMatrix {
     pub fn get(&self, row: usize, col: usize) -> Complex {
         debug_assert!(row < self.n && col < self.n);
         let d = col as i64 - row as i64;
-        match self.diag(d) {
-            Some(v) => v[DiagMatrix::idx_of_row(d, row)],
+        match self.index_of(d) {
+            Some(i) => self.value_at(i, DiagMatrix::idx_of_row(d, row)),
             None => ZERO,
         }
     }
 
     /// Number of numerically nonzero elements.
     pub fn nnz(&self) -> usize {
-        self.arena
+        self.re
             .iter()
-            .filter(|z| !z.is_zero(ZERO_TOL))
+            .zip(self.im.iter())
+            .filter(|&(&r, &i)| r.abs() > ZERO_TOL || i.abs() > ZERO_TOL)
             .count()
     }
 
-    /// Scale every stored value by `s` in place.
+    /// Scale every stored value by `s` in place (complex multiply over
+    /// the planes; same operation order as interleaved `*=`).
     pub fn scale(&mut self, s: Complex) {
-        for z in self.arena.iter_mut() {
-            *z *= s;
+        for k in 0..self.re.len() {
+            let r = self.re[k];
+            let i = self.im[k];
+            self.re[k] = r * s.re - i * s.im;
+            self.im[k] = r * s.im + i * s.re;
         }
     }
 
-    /// Drop diagonals whose every entry is below `tol`, compacting the
-    /// arena in place.
+    /// Drop diagonals whose every entry is below `tol`, compacting both
+    /// planes in place.
     pub fn prune(&mut self, tol: f64) {
         let keep: Vec<usize> = (0..self.offsets.len())
-            .filter(|&i| self.values_at(i).iter().any(|z| !z.is_zero(tol)))
+            .filter(|&i| {
+                self.re_at(i)
+                    .iter()
+                    .zip(self.im_at(i).iter())
+                    .any(|(&r, &im)| r.abs() > tol || im.abs() > tol)
+            })
             .collect();
         if keep.len() == self.offsets.len() {
             return;
         }
         let mut offsets = Vec::with_capacity(keep.len());
         let mut starts = Vec::with_capacity(keep.len() + 1);
-        let mut arena = Vec::new();
+        let mut re = Vec::new();
+        let mut im = Vec::new();
         starts.push(0);
         for &i in &keep {
             offsets.push(self.offsets[i]);
-            arena.extend_from_slice(self.values_at(i));
-            starts.push(arena.len());
+            re.extend_from_slice(self.re_at(i));
+            im.extend_from_slice(self.im_at(i));
+            starts.push(re.len());
         }
         self.offsets = offsets;
         self.starts = starts;
-        self.arena = arena;
+        self.re = re;
+        self.im = im;
     }
 
-    /// DiaQ storage footprint in bytes (offset table + arena), matching
+    /// DiaQ storage footprint in bytes (offset table + planes), matching
     /// [`DiagMatrix::storage_bytes`].
     pub fn storage_bytes(&self) -> usize {
-        self.offsets.len() * 8 + self.arena.len() * 16
+        self.offsets.len() * 8 + self.re.len() * 16
     }
 
     /// Copy back into the mutable builder representation.
     pub fn thaw(&self) -> DiagMatrix {
         let mut out = DiagMatrix::zeros(self.n);
-        for (d, vals) in self.iter() {
-            out.set_diag(d, vals.to_vec());
+        for i in 0..self.offsets.len() {
+            out.set_diag(self.offsets[i], self.values_at(i));
         }
         out
     }
@@ -586,11 +682,11 @@ impl PackedDiagMatrix {
             .collect();
         for d in offs {
             let len = DiagMatrix::diag_len(self.n, d);
-            let a = self.diag(d);
-            let b = rhs.diag(d);
+            let a = self.index_of(d);
+            let b = rhs.index_of(d);
             for k in 0..len {
-                let av = a.map_or(ZERO, |v| v[k]);
-                let bv = b.map_or(ZERO, |v| v[k]);
+                let av = a.map_or(ZERO, |i| self.value_at(i, k));
+                let bv = b.map_or(ZERO, |i| rhs.value_at(i, k));
                 worst = worst.max((av - bv).abs());
             }
         }
@@ -797,5 +893,32 @@ mod tests {
     #[should_panic]
     fn from_diagonals_rejects_unsorted() {
         PackedDiagMatrix::from_diagonals(4, vec![1, -1], vec![vec![ONE; 3], vec![ONE; 3]]);
+    }
+
+    #[test]
+    fn soa_planes_align_with_interleaved_shims() {
+        let mut m = DiagMatrix::zeros(6);
+        m.set_diag(-2, vec![Complex::new(1.0, -3.0); 4]);
+        m.set_diag(1, vec![Complex::new(0.5, 2.0); 5]);
+        let p = m.freeze();
+        // Planes are contiguous per diagonal and share the starts table.
+        assert_eq!(p.re_plane().len(), 9);
+        assert_eq!(p.im_plane().len(), 9);
+        assert_eq!(p.re_at(0), &[1.0; 4]);
+        assert_eq!(p.im_at(0), &[-3.0; 4]);
+        assert_eq!(p.re_at(1), &[0.5; 5]);
+        assert_eq!(p.im_at(1), &[2.0; 5]);
+        assert_eq!(p.start_of(0), 0);
+        assert_eq!(p.start_of(1), 4);
+        // Interleaved shims reconstruct the same values element-wise.
+        let arena = p.arena();
+        for (k, z) in arena.iter().enumerate() {
+            assert_eq!(z.re, p.re_plane()[k]);
+            assert_eq!(z.im, p.im_plane()[k]);
+        }
+        assert_eq!(p.value_at(1, 2), Complex::new(0.5, 2.0));
+        assert_eq!(p.diag(1).unwrap(), p.values_at(1));
+        // freeze . thaw stays the identity over the SoA layout.
+        assert_eq!(p.thaw(), m);
     }
 }

@@ -10,18 +10,22 @@
 //! * [`format`] — the DiaQ-style diagonal sparse format plus CSR/COO/dense
 //!   oracles and conversions. Two faces of the diagonal format: the
 //!   `BTreeMap` builder ([`DiagMatrix`]) for construction, and the packed
-//!   flat-arena snapshot ([`format::PackedDiagMatrix`], via
-//!   `freeze()`/`thaw()`) the SpMSpM hot path consumes.
+//!   split-plane SoA snapshot ([`format::PackedDiagMatrix`], via
+//!   `freeze()`/`thaw()`; interleaved `Complex` accessors remain as
+//!   shims) the SpMSpM hot path consumes.
 //! * [`pauli`] — Pauli-string algebra used to synthesize Hamiltonians.
 //! * [`ham`] — HamLib-substitute Hamiltonian generators (TFIM, Heisenberg,
 //!   Fermi-/Bose-Hubbard, Max-Cut, Q-Max-Cut, TSP).
 //! * [`linalg`] — reference SpMSpM algorithms (diagonal convolution,
 //!   Gustavson, outer-product, dense) with operation counting. The
-//!   diagonal-convolution kernel is a two-phase plan/execute design:
-//!   the Minkowski sum `D_A ⊕ D_B` is planned once into per-output-
-//!   diagonal contribution lists, then executed with one independent
-//!   writer per output diagonal — serially or across the worker pool
-//!   with bit-identical results.
+//!   diagonal-convolution path is a layered **kernel engine**
+//!   (`rust/src/linalg/README.md`): the Minkowski sum `D_A ⊕ D_B` is
+//!   planned once into per-output-diagonal contribution lists
+//!   ([`linalg::diag_mul`]), cut into cache-sized tiles and executed
+//!   with one independent writer per tile across the worker pool
+//!   ([`linalg::engine`]) — bit-identical to serial — and plans are
+//!   cached across multiplications with identical offset structure
+//!   (the Taylor-chain steady state).
 //! * [`taylor`] — Taylor-series matrix exponentiation driver for
 //!   Hamiltonian simulation (`exp(-iHt)`).
 //! * [`sim`] — the cycle-accurate DIAMOND simulator: DPE grid, diagonal

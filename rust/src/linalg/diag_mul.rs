@@ -13,14 +13,21 @@
 //! elements that will be written.
 //!
 //! **Phase 2 — execute** ([`execute_plan`]): each output diagonal owns a
-//! disjoint, pre-sized slice of one contiguous output arena and is
-//! computed independently — serially or fanned across
+//! disjoint, pre-sized slice of the contiguous output re/im planes
+//! (split SoA layout — see [`crate::format::diag`]) and is computed
+//! independently — serially or fanned across
 //! [`crate::coordinator::pool::parallel_map`]. One writer per diagonal
 //! means no locks, and because every diagonal accumulates its
 //! contributions in the same planned order, parallel execution is
 //! **bit-identical** to serial. All-zero output diagonals (partial
 //! coverage or cancellation) are pruned at kernel exit so NNZD reflects
 //! the true band structure.
+//!
+//! The layered kernel *engine* ([`crate::linalg::engine`]) builds on
+//! these two phases: it tiles long output diagonals into cache-sized
+//! segments (several workers share one very long diagonal, still one
+//! writer per tile) and caches plans across Taylor iterations whose
+//! offset structure has stabilized.
 //!
 //! This is the exact computation the DIAMOND DPE grid performs in
 //! hardware, so it doubles as the simulator's functional oracle. The
@@ -29,9 +36,7 @@
 //! baseline for the kernel microbenchmarks.
 
 use super::OpStats;
-use crate::format::diag::ZERO_TOL;
 use crate::format::{DiagMatrix, PackedDiagMatrix};
-use crate::num::ZERO;
 use std::collections::BTreeMap;
 
 /// Row range `[lo, hi)` over which diagonals `d_a` (from A) and `d_b`
@@ -89,6 +94,10 @@ pub struct MulPlan {
     pub n: usize,
     /// Output diagonals in ascending offset order.
     pub outs: Vec<OutDiagPlan>,
+    /// Cached `outs[i].offset` table (ascending), so
+    /// [`MulPlan::offsets`] can hand out a borrow instead of
+    /// re-collecting per call.
+    out_offsets: Vec<i64>,
     /// Total multiply-accumulates across all contributions.
     pub mults: usize,
     /// Total distinct output elements written (sum of `written`).
@@ -96,9 +105,11 @@ pub struct MulPlan {
 }
 
 impl MulPlan {
-    /// Output offsets (the Minkowski sum restricted to in-range overlaps).
-    pub fn offsets(&self) -> Vec<i64> {
-        self.outs.iter().map(|o| o.offset).collect()
+    /// Output offsets (the Minkowski sum restricted to in-range
+    /// overlaps). Borrowed from the plan — computed once at plan time so
+    /// Taylor-chain callers don't re-allocate per query.
+    pub fn offsets(&self) -> &[i64] {
+        &self.out_offsets
     }
 }
 
@@ -154,13 +165,17 @@ pub fn plan_diag_mul(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> MulPlan {
     }
 
     let mut outs = Vec::with_capacity(grouped.len());
+    let mut out_offsets = Vec::with_capacity(grouped.len());
     let mut mults = 0usize;
     let mut writes = 0usize;
     for (offset, contribs) in grouped {
-        mults += contribs.iter().map(|c| c.len).sum::<usize>();
+        // Saturating accumulation: totals stay well-defined on extreme
+        // n sweeps instead of wrapping in release builds.
+        mults = mults.saturating_add(contribs.iter().map(|c| c.len).sum::<usize>());
         let written =
             merged_coverage(contribs.iter().map(|c| (c.kc0, c.kc0 + c.len)).collect());
-        writes += written;
+        writes = writes.saturating_add(written);
+        out_offsets.push(offset);
         outs.push(OutDiagPlan {
             offset,
             len: DiagMatrix::diag_len(n, offset),
@@ -171,26 +186,42 @@ pub fn plan_diag_mul(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> MulPlan {
     MulPlan {
         n,
         outs,
+        out_offsets,
         mults,
         writes,
     }
 }
 
-/// Compute one output diagonal into its pre-sized slice, accumulating
-/// contributions in plan order (the determinism contract).
-fn fill_out_diag(
-    out: &OutDiagPlan,
+/// Accumulate `contribs` into the destination plane window starting at
+/// storage index `base` of the output diagonal's frame, in plan order
+/// (the determinism contract). This is the SoA hot loop: four contiguous
+/// `f64` input streams, two contiguous output streams, no interleaved
+/// stride — the shape that autovectorizes. The complex product expands in
+/// the same operation order as interleaved `Complex` mul/add, so results
+/// are bit-identical to the pre-SoA kernel.
+///
+/// Shared by the whole-diagonal executor ([`execute_plan`]) and the tiled
+/// executor ([`crate::linalg::engine`]), whose tasks pass `base > 0`.
+pub(crate) fn fill_window(
+    contribs: &[Contribution],
+    base: usize,
     a: &PackedDiagMatrix,
     b: &PackedDiagMatrix,
-    dst: &mut [crate::num::Complex],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
 ) {
-    debug_assert_eq!(dst.len(), out.len);
-    for c in &out.contribs {
-        let va = &a.values_at(c.a_idx)[c.ka0..c.ka0 + c.len];
-        let vb = &b.values_at(c.b_idx)[c.kb0..c.kb0 + c.len];
-        let window = &mut dst[c.kc0..c.kc0 + c.len];
-        for (w, (&x, &y)) in window.iter_mut().zip(va.iter().zip(vb.iter())) {
-            *w += x * y;
+    debug_assert_eq!(dst_re.len(), dst_im.len());
+    for c in contribs {
+        let ar = &a.re_at(c.a_idx)[c.ka0..c.ka0 + c.len];
+        let ai = &a.im_at(c.a_idx)[c.ka0..c.ka0 + c.len];
+        let br = &b.re_at(c.b_idx)[c.kb0..c.kb0 + c.len];
+        let bi = &b.im_at(c.b_idx)[c.kb0..c.kb0 + c.len];
+        let o = c.kc0 - base;
+        let wr = &mut dst_re[o..o + c.len];
+        let wi = &mut dst_im[o..o + c.len];
+        for k in 0..c.len {
+            wr[k] += ar[k] * br[k] - ai[k] * bi[k];
+            wi[k] += ar[k] * bi[k] + ai[k] * br[k];
         }
     }
 }
@@ -202,59 +233,24 @@ fn fill_out_diag(
 pub const PARALLEL_MULTS_THRESHOLD: usize = 16 * 1024;
 
 /// Phase 2: execute a plan. Each output diagonal is written by exactly
-/// one worker into its disjoint arena slice, so `workers > 1` fans out
+/// one worker into its disjoint plane slice, so `workers > 1` fans out
 /// across [`crate::coordinator::pool::parallel_map`] with bit-identical
 /// results to `workers == 1`. Small plans (under
 /// [`PARALLEL_MULTS_THRESHOLD`] multiplies, or fewer than two output
 /// diagonals) skip the pool entirely. All-zero output diagonals are
-/// pruned at exit (within [`ZERO_TOL`]).
+/// pruned at exit (within [`crate::format::diag::ZERO_TOL`]).
+///
+/// Implemented as the degenerate case of the tiled executor
+/// ([`crate::linalg::engine::execute_tiled`]) with one tile per output
+/// diagonal — one code path, one carve/assemble implementation.
 pub fn execute_plan(
     plan: &MulPlan,
     a: &PackedDiagMatrix,
     b: &PackedDiagMatrix,
     workers: usize,
 ) -> (PackedDiagMatrix, OpStats) {
-    let stats = OpStats {
-        mults: plan.mults,
-        merge_adds: plan.mults,
-        reads: 2 * plan.mults,
-        writes: plan.writes,
-    };
-
-    let fan_out = workers > 1 && plan.outs.len() > 1 && plan.mults >= PARALLEL_MULTS_THRESHOLD;
-    let total: usize = plan.outs.iter().map(|o| o.len).sum();
-    let mut arena = vec![ZERO; total];
-    {
-        // Carve the arena into one disjoint mutable slice per diagonal.
-        let mut rest: &mut [crate::num::Complex] = &mut arena;
-        let mut slices = Vec::with_capacity(plan.outs.len());
-        for out in &plan.outs {
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(out.len);
-            slices.push(head);
-            rest = tail;
-        }
-        let items: Vec<(usize, &mut [crate::num::Complex])> =
-            slices.into_iter().enumerate().collect();
-        if fan_out {
-            crate::coordinator::pool::parallel_map(items, workers, |(i, dst)| {
-                fill_out_diag(&plan.outs[i], a, b, dst);
-            });
-        } else {
-            for (i, dst) in items {
-                fill_out_diag(&plan.outs[i], a, b, dst);
-            }
-        }
-    }
-
-    let offsets: Vec<i64> = plan.outs.iter().map(|o| o.offset).collect();
-    let mut starts = Vec::with_capacity(plan.outs.len() + 1);
-    starts.push(0usize);
-    for out in &plan.outs {
-        starts.push(starts.last().unwrap() + out.len);
-    }
-    let mut c = PackedDiagMatrix::from_raw_parts(plan.n, offsets, starts, arena);
-    c.prune(ZERO_TOL);
-    (c, stats)
+    let whole = crate::linalg::engine::tile_plan(plan, usize::MAX);
+    crate::linalg::engine::execute_tiled(plan, &whole, a, b, workers)
 }
 
 /// Packed serial multiply: plan + execute on one worker.

@@ -1,0 +1,500 @@
+//! The layered diagonal-SpMSpM **kernel engine**: tiled execution of
+//! Minkowski plans plus cross-multiplication plan caching.
+//!
+//! The engine stacks three layers (see `rust/src/linalg/README.md` for a
+//! diagram):
+//!
+//! 1. **Format layer** — [`crate::format::PackedDiagMatrix`] stores its
+//!    values as split re/im planes (structure-of-arrays), so the
+//!    per-diagonal multiply-accumulate ([`diag_mul::fill_window`]) runs
+//!    over contiguous `f64` streams and autovectorizes. The interleaved
+//!    `Complex` layout stays the API face via accessor shims.
+//! 2. **Execution layer** — [`tile_plan`] splits every output diagonal of
+//!    a [`MulPlan`] into cache-sized tiles using the
+//!    [`crate::sim::blocking`] row/col geometry ([`rowcol_blocking`] →
+//!    [`Window`]s), so several workers from
+//!    [`crate::coordinator::pool`] can share one very long output
+//!    diagonal. Each tile still has **exactly one writer**, and every
+//!    output element accumulates its contributions in plan order, so
+//!    tiled-parallel execution is bit-identical to serial (asserted by
+//!    the repo property tests).
+//! 3. **Caching layer** — [`KernelEngine`] owns a keyed [`PlanCache`]:
+//!    plans are memoized on `(D_A offsets, D_B offsets, n)`. A Taylor
+//!    chain whose term offset structure has stabilized (the common case
+//!    after a few iterations — the Minkowski sum saturates at the matrix
+//!    bandwidth) reuses the previous plan *and* its tiling instead of
+//!    re-planning; hits are reported through [`KernelStats`].
+//!
+//! Correctness contract: for identical operands, every path — untiled
+//! serial ([`diag_mul::execute_plan`] with one worker), tiled serial,
+//! tiled parallel at any worker count and any tile size, and a
+//! cache-hit replay — produces **bit-identical** output planes.
+
+use super::diag_mul::{
+    self, plan_diag_mul, Contribution, MulPlan, PARALLEL_MULTS_THRESHOLD,
+};
+use super::OpStats;
+use crate::format::diag::ZERO_TOL;
+use crate::format::PackedDiagMatrix;
+use crate::sim::blocking::{rowcol_blocking, Window};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Default tile length (elements per tile). At 16 bytes per complex
+/// element across one output and two operand streams, an 8 Ki-element
+/// tile keeps a task's working set comfortably inside a per-core L2
+/// while leaving enough tiles to load-balance long diagonals.
+pub const DEFAULT_TILE: usize = 8 * 1024;
+
+/// Upper bound on cached plans before the cache is dropped wholesale
+/// (Taylor chains need a handful of entries; this is a leak guard, not a
+/// working-set tuning knob).
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 32;
+
+/// One tile of one output diagonal: the window `[lo, hi)` of the
+/// diagonal's storage frame plus the plan contributions clipped to it
+/// (window-rebased operand/output base indices, plan order preserved).
+#[derive(Clone, Debug)]
+pub struct TileTask {
+    /// Index of the output diagonal in `MulPlan::outs`.
+    pub out_idx: usize,
+    /// Tile start within the diagonal's storage frame.
+    pub lo: usize,
+    /// Tile end (exclusive).
+    pub hi: usize,
+    /// Contributions overlapping this tile, clipped to `[lo, hi)`,
+    /// in the plan's deterministic order.
+    pub contribs: Vec<Contribution>,
+}
+
+/// A [`MulPlan`] cut into cache-sized tile tasks; the executable form the
+/// engine fans out across the worker pool.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    /// Tile length the plan was cut with.
+    pub tile: usize,
+    /// Tasks in arena order: output diagonals ascending, tiles ascending
+    /// within each diagonal (so the executor can carve the output planes
+    /// sequentially).
+    pub tasks: Vec<TileTask>,
+}
+
+/// Clip a contribution to the tile window `[lo, hi)` of its output
+/// diagonal, shifting all three storage-frame bases together.
+fn clip_contribution(c: &Contribution, lo: usize, hi: usize) -> Option<Contribution> {
+    let start = c.kc0.max(lo);
+    let end = (c.kc0 + c.len).min(hi);
+    if start >= end {
+        return None;
+    }
+    let shift = start - c.kc0;
+    Some(Contribution {
+        a_idx: c.a_idx,
+        b_idx: c.b_idx,
+        ka0: c.ka0 + shift,
+        kb0: c.kb0 + shift,
+        kc0: start,
+        len: end - start,
+    })
+}
+
+/// Cut a plan into tiles of at most `tile` elements per task, using the
+/// same row/col blocking geometry as the simulated device
+/// ([`crate::sim::blocking::rowcol_blocking`]).
+pub fn tile_plan(plan: &MulPlan, tile: usize) -> TilePlan {
+    let tile = tile.max(1);
+    let mut tasks = Vec::new();
+    for (out_idx, out) in plan.outs.iter().enumerate() {
+        for Window { lo, hi } in rowcol_blocking(out.len.max(1), tile) {
+            let hi = hi.min(out.len);
+            if lo >= hi {
+                continue;
+            }
+            let contribs: Vec<Contribution> = out
+                .contribs
+                .iter()
+                .filter_map(|c| clip_contribution(c, lo, hi))
+                .collect();
+            tasks.push(TileTask {
+                out_idx,
+                lo,
+                hi,
+                contribs,
+            });
+        }
+    }
+    TilePlan { tile, tasks }
+}
+
+/// Execute a tiled plan: every tile is written by exactly one worker into
+/// its disjoint slice of the output re/im planes, so any worker count and
+/// any tile size produce bit-identical results (each output element's
+/// contributions land in plan order regardless of how the diagonal was
+/// cut). Plans under [`PARALLEL_MULTS_THRESHOLD`] multiplies run the
+/// tiles serially, skipping thread spawn cost.
+pub fn execute_tiled(
+    plan: &MulPlan,
+    tiles: &TilePlan,
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    workers: usize,
+) -> (PackedDiagMatrix, OpStats) {
+    let stats = OpStats {
+        mults: plan.mults,
+        merge_adds: plan.mults,
+        reads: 2usize.saturating_mul(plan.mults),
+        writes: plan.writes,
+    };
+
+    let fan_out =
+        workers > 1 && tiles.tasks.len() > 1 && plan.mults >= PARALLEL_MULTS_THRESHOLD;
+    let total: usize = plan.outs.iter().map(|o| o.len).sum();
+    let mut re = vec![0f64; total];
+    let mut im = vec![0f64; total];
+    {
+        // Carve both planes into one disjoint mutable slice per tile
+        // (tasks are in arena order and jointly cover every diagonal).
+        let mut rest_re: &mut [f64] = &mut re;
+        let mut rest_im: &mut [f64] = &mut im;
+        let mut items: Vec<(usize, &mut [f64], &mut [f64])> =
+            Vec::with_capacity(tiles.tasks.len());
+        for (t, task) in tiles.tasks.iter().enumerate() {
+            let len = task.hi - task.lo;
+            let (head_re, tail_re) = std::mem::take(&mut rest_re).split_at_mut(len);
+            let (head_im, tail_im) = std::mem::take(&mut rest_im).split_at_mut(len);
+            items.push((t, head_re, head_im));
+            rest_re = tail_re;
+            rest_im = tail_im;
+        }
+        debug_assert!(rest_re.is_empty() && rest_im.is_empty());
+        if fan_out {
+            crate::coordinator::pool::parallel_map(items, workers, |(t, dst_re, dst_im)| {
+                let task = &tiles.tasks[t];
+                diag_mul::fill_window(&task.contribs, task.lo, a, b, dst_re, dst_im);
+            });
+        } else {
+            for (t, dst_re, dst_im) in items {
+                let task = &tiles.tasks[t];
+                diag_mul::fill_window(&task.contribs, task.lo, a, b, dst_re, dst_im);
+            }
+        }
+    }
+
+    let offsets: Vec<i64> = plan.offsets().to_vec();
+    let mut starts = Vec::with_capacity(plan.outs.len() + 1);
+    starts.push(0usize);
+    for out in &plan.outs {
+        starts.push(starts.last().unwrap() + out.len);
+    }
+    let mut c = PackedDiagMatrix::from_raw_parts(plan.n, offsets, starts, re, im);
+    c.prune(ZERO_TOL);
+    (c, stats)
+}
+
+/// Engine configuration: tile geometry, fan-out width, plan caching.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Tile length in elements (see [`DEFAULT_TILE`]).
+    pub tile: usize,
+    /// Worker fan-out for tile execution (1 = serial).
+    pub workers: usize,
+    /// Reuse plans across multiplications with identical offset
+    /// structure (the Taylor-chain fast path).
+    pub cache_plans: bool,
+    /// Plan-cache entry bound (cache is cleared when full).
+    pub cache_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            tile: DEFAULT_TILE,
+            workers: crate::coordinator::pool::default_workers(),
+            cache_plans: true,
+            cache_capacity: DEFAULT_PLAN_CACHE_CAPACITY,
+        }
+    }
+}
+
+/// Cumulative engine counters (saturating; reported up through
+/// `taylor::expm_diag` and the coordinator).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Multiplications executed through the engine.
+    pub multiplies: u64,
+    /// Plans built from scratch ([`plan_diag_mul`] + [`tile_plan`]).
+    pub plans_built: u64,
+    /// Multiplications served by a cached plan.
+    pub plan_cache_hits: u64,
+    /// Cache lookups that missed (caching enabled, no entry).
+    pub plan_cache_misses: u64,
+    /// Tile tasks executed.
+    pub tiles_executed: u64,
+}
+
+/// Cache key: a plan is fully determined by the operand offset sets and
+/// the dimension.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct PlanKey {
+    n: usize,
+    a_offsets: Vec<i64>,
+    b_offsets: Vec<i64>,
+}
+
+/// A memoized plan plus its tiling (both depend only on the key and the
+/// engine's tile length).
+#[derive(Debug)]
+pub struct PlannedProduct {
+    pub plan: MulPlan,
+    pub tiles: TilePlan,
+}
+
+/// Keyed plan memo — the engine's caching layer.
+type PlanCache = HashMap<PlanKey, Arc<PlannedProduct>>;
+
+/// The reusable kernel engine: plan (with cache) + tiled execute.
+///
+/// One engine instance per logical multiplication stream (a Taylor chain,
+/// a coordinator); it is `Send`, so callers that share one across threads
+/// wrap it in a `Mutex` (planning is cheap relative to execution).
+pub struct KernelEngine {
+    cfg: EngineConfig,
+    cache: PlanCache,
+    stats: KernelStats,
+}
+
+impl KernelEngine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        KernelEngine {
+            cfg,
+            cache: HashMap::new(),
+            stats: KernelStats::default(),
+        }
+    }
+
+    /// Engine with [`EngineConfig::default`] (pool-wide workers, default
+    /// tile, caching on).
+    pub fn with_defaults() -> Self {
+        Self::new(EngineConfig::default())
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &KernelStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = KernelStats::default();
+    }
+
+    /// Plan `a · b`, serving from the cache when the offset structure has
+    /// been seen before (bit-identical products either way — a plan is a
+    /// pure function of the key).
+    pub fn plan(&mut self, a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Arc<PlannedProduct> {
+        // Checked here, not just in plan_diag_mul: a cache hit must fail
+        // on mismatched operands exactly like a fresh plan (the key's
+        // `n` is only A's dimension).
+        assert_eq!(a.dim(), b.dim(), "dimension mismatch");
+        if self.cfg.cache_plans {
+            let key = PlanKey {
+                n: a.dim(),
+                a_offsets: a.offsets().to_vec(),
+                b_offsets: b.offsets().to_vec(),
+            };
+            if let Some(hit) = self.cache.get(&key) {
+                self.stats.plan_cache_hits = self.stats.plan_cache_hits.saturating_add(1);
+                return Arc::clone(hit);
+            }
+            self.stats.plan_cache_misses = self.stats.plan_cache_misses.saturating_add(1);
+            let planned = self.build(a, b);
+            if self.cache.len() >= self.cfg.cache_capacity.max(1) {
+                self.cache.clear();
+            }
+            self.cache.insert(key, Arc::clone(&planned));
+            planned
+        } else {
+            self.build(a, b)
+        }
+    }
+
+    fn build(&mut self, a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Arc<PlannedProduct> {
+        let plan = plan_diag_mul(a, b);
+        let tiles = tile_plan(&plan, self.cfg.tile);
+        self.stats.plans_built = self.stats.plans_built.saturating_add(1);
+        Arc::new(PlannedProduct { plan, tiles })
+    }
+
+    /// Multiply through the full engine stack: cached plan → tiled
+    /// execution across the worker pool.
+    pub fn multiply(
+        &mut self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> (PackedDiagMatrix, OpStats) {
+        let planned = self.plan(a, b);
+        self.stats.multiplies = self.stats.multiplies.saturating_add(1);
+        self.stats.tiles_executed = self
+            .stats
+            .tiles_executed
+            .saturating_add(planned.tiles.tasks.len() as u64);
+        execute_tiled(&planned.plan, &planned.tiles, a, b, self.cfg.workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::DiagMatrix;
+    use crate::linalg::packed_diag_mul_counted;
+    use crate::num::{Complex, ONE};
+
+    fn band(n: usize, half_width: i64) -> PackedDiagMatrix {
+        let mut m = DiagMatrix::zeros(n);
+        for d in -half_width..=half_width {
+            let len = DiagMatrix::diag_len(n, d);
+            m.set_diag(
+                d,
+                (0..len)
+                    .map(|k| Complex::new(0.3 + (k % 7) as f64 * 0.01, -0.2 + d as f64 * 0.05))
+                    .collect(),
+            );
+        }
+        m.freeze()
+    }
+
+    #[test]
+    fn tile_plan_covers_every_diagonal_exactly() {
+        let a = band(64, 3);
+        let b = band(64, 2);
+        let plan = plan_diag_mul(&a, &b);
+        for tile in [1usize, 5, 16, 1024] {
+            let tp = tile_plan(&plan, tile);
+            // Per diagonal: tiles are contiguous, disjoint, cover [0, len).
+            let mut cursor: Option<(usize, usize)> = None; // (out_idx, next lo)
+            for t in &tp.tasks {
+                match cursor {
+                    Some((idx, next)) if idx == t.out_idx => assert_eq!(t.lo, next),
+                    _ => {
+                        if let Some((idx, next)) = cursor {
+                            assert_eq!(next, plan.outs[idx].len, "diagonal {idx} not covered");
+                        }
+                        assert_eq!(t.lo, 0);
+                    }
+                }
+                assert!(t.hi <= plan.outs[t.out_idx].len);
+                assert!(t.hi - t.lo <= tile.max(1));
+                cursor = Some((t.out_idx, t.hi));
+            }
+            if let Some((idx, next)) = cursor {
+                assert_eq!(next, plan.outs[idx].len);
+            }
+            // Clipped multiply work is conserved.
+            let tiled_mults: usize = tp
+                .tasks
+                .iter()
+                .flat_map(|t| t.contribs.iter())
+                .map(|c| c.len)
+                .sum();
+            assert_eq!(tiled_mults, plan.mults, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn tiled_execution_matches_untiled_bitwise() {
+        let a = band(300, 4);
+        let b = band(300, 3);
+        let (want, want_stats) = packed_diag_mul_counted(&a, &b);
+        let plan = plan_diag_mul(&a, &b);
+        for tile in [1usize, 17, 64, 100_000] {
+            for workers in [1usize, 3] {
+                let tp = tile_plan(&plan, tile);
+                let (got, stats) = execute_tiled(&plan, &tp, &a, &b, workers);
+                assert_eq!(got.offsets(), want.offsets(), "tile={tile}");
+                assert_eq!(got.arena(), want.arena(), "tile={tile} workers={workers}");
+                assert_eq!(stats, want_stats);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_and_stays_bit_identical() {
+        let a = band(96, 3);
+        let b = band(96, 2);
+        let mut eng = KernelEngine::new(EngineConfig {
+            tile: 40,
+            workers: 1,
+            ..EngineConfig::default()
+        });
+        let (c1, s1) = eng.multiply(&a, &b);
+        assert_eq!(eng.stats().plan_cache_hits, 0);
+        assert_eq!(eng.stats().plans_built, 1);
+        let (c2, s2) = eng.multiply(&a, &b);
+        assert_eq!(eng.stats().plan_cache_hits, 1);
+        assert_eq!(eng.stats().plans_built, 1, "hit must not re-plan");
+        assert_eq!(c1.arena(), c2.arena(), "cache hit must be bit-identical");
+        assert_eq!(s1, s2);
+        // Same offsets, different values: the cached plan still applies
+        // (a plan depends only on the offset structure).
+        let mut b2m = b.thaw();
+        b2m.add_assign_scaled(&DiagMatrix::identity(96), Complex::new(0.5, 0.0));
+        let b2 = b2m.freeze();
+        assert_eq!(b2.offsets(), b.offsets());
+        let (c3, _) = eng.multiply(&a, &b2);
+        assert_eq!(eng.stats().plan_cache_hits, 2);
+        let (want, _) = packed_diag_mul_counted(&a, &b2);
+        assert_eq!(c3.arena(), want.arena());
+    }
+
+    #[test]
+    fn cache_distinguishes_structures_and_caching_can_be_disabled() {
+        let a = band(48, 2);
+        let b = band(48, 1);
+        let c = band(48, 3);
+        let mut eng = KernelEngine::with_defaults();
+        eng.multiply(&a, &b);
+        eng.multiply(&a, &c); // different B offsets → miss
+        assert_eq!(eng.stats().plan_cache_hits, 0);
+        assert_eq!(eng.stats().plans_built, 2);
+
+        let mut off = KernelEngine::new(EngineConfig {
+            cache_plans: false,
+            workers: 1,
+            ..EngineConfig::default()
+        });
+        off.multiply(&a, &b);
+        off.multiply(&a, &b);
+        assert_eq!(off.stats().plan_cache_hits, 0);
+        assert_eq!(off.stats().plans_built, 2, "caching off must re-plan");
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn cache_hit_still_checks_dimensions() {
+        // A warm cache entry with the same offset sets must not let a
+        // dimension-mismatched multiply through.
+        let a8 = band(8, 1);
+        let b8 = band(8, 1);
+        let mut eng = KernelEngine::with_defaults();
+        eng.multiply(&a8, &b8);
+        let b16 = band(16, 1); // same offsets {-1, 0, 1}, larger dim
+        eng.multiply(&a8, &b16);
+    }
+
+    #[test]
+    fn empty_and_identity_edges() {
+        let zero = PackedDiagMatrix::zeros(8);
+        let id = PackedDiagMatrix::identity(8);
+        let mut eng = KernelEngine::with_defaults();
+        let (c, stats) = eng.multiply(&zero, &id);
+        assert_eq!(c.nnzd(), 0);
+        assert_eq!(stats.mults, 0);
+        let a = band(8, 1);
+        let (c2, _) = eng.multiply(&a, &id);
+        assert!(c2.max_abs_diff(&a) < 1e-14);
+        // ONE sanity so the import is used in all cfg combinations.
+        assert_eq!(id.get(3, 3), ONE);
+    }
+}

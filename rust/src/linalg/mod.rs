@@ -1,10 +1,17 @@
-//! Reference SpMSpM algorithms.
+//! Reference SpMSpM algorithms and the diagonal kernel engine.
 //!
 //! These are the *software oracles*: they establish numerical ground truth
 //! for the simulator and provide the exact operation counts (multiplies,
 //! merges, traffic) that the baseline accelerator cycle models consume.
+//!
+//! The diagonal-convolution path is layered as a reusable **kernel
+//! engine** (see `rust/src/linalg/README.md`): [`diag_mul`] holds the
+//! plan/execute phases over the SoA packed format, [`engine`] adds tiled
+//! execution of long output diagonals and cross-multiplication plan
+//! caching.
 
 pub mod diag_mul;
+pub mod engine;
 pub mod gustavson;
 pub mod outer;
 
@@ -12,6 +19,7 @@ pub use diag_mul::{
     diag_mul, diag_mul_counted, diag_mul_parallel, diag_mul_reference, execute_plan,
     packed_diag_mul_counted, packed_diag_mul_parallel, plan_diag_mul, MulPlan,
 };
+pub use engine::{EngineConfig, KernelEngine, KernelStats};
 pub use gustavson::gustavson_mul;
 pub use outer::outer_mul;
 
@@ -30,10 +38,38 @@ pub struct OpStats {
 }
 
 impl OpStats {
+    /// Accumulate counters from another execution. Saturating: large-n
+    /// sweeps that would overflow `usize` clamp at `usize::MAX` instead
+    /// of wrapping silently in release builds.
     pub fn accumulate(&mut self, other: OpStats) {
-        self.mults += other.mults;
-        self.merge_adds += other.merge_adds;
-        self.reads += other.reads;
-        self.writes += other.writes;
+        self.mults = self.mults.saturating_add(other.mults);
+        self.merge_adds = self.merge_adds.saturating_add(other.merge_adds);
+        self.reads = self.reads.saturating_add(other.reads);
+        self.writes = self.writes.saturating_add(other.writes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::OpStats;
+
+    #[test]
+    fn opstats_accumulation_saturates() {
+        let mut s = OpStats {
+            mults: usize::MAX - 1,
+            merge_adds: 5,
+            reads: usize::MAX,
+            writes: 0,
+        };
+        s.accumulate(OpStats {
+            mults: 10,
+            merge_adds: 7,
+            reads: 1,
+            writes: 3,
+        });
+        assert_eq!(s.mults, usize::MAX);
+        assert_eq!(s.merge_adds, 12);
+        assert_eq!(s.reads, usize::MAX);
+        assert_eq!(s.writes, 3);
     }
 }

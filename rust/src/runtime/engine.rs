@@ -21,6 +21,12 @@ pub struct EngineStats {
     pub bucket_d: usize,
     /// Wall time spent inside PJRT execute.
     pub exec_nanos: u128,
+    /// Plan reuse across calls: on the PJRT path, scatter plans served
+    /// from the offset-keyed cache instead of being rebuilt; on the
+    /// oracle path, `MulPlan`s served from the kernel engine's plan
+    /// cache. Taylor chains whose offset structure has stabilized hit on
+    /// every late iteration.
+    pub plan_cache_hits: u64,
 }
 
 /// Row-aligned f32 planes of a chunk of diagonals.
@@ -86,14 +92,69 @@ fn scatter_matrix(a_offs: &[i32], b_offs: &[i32], a_used: usize, b_used: usize) 
     (scatter, sums)
 }
 
+/// Cache key for a scatter plan: the (padded) chunk offsets plus how
+/// many slots are actually used — exactly the inputs of
+/// [`scatter_matrix`].
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct ScatterKey {
+    a: Vec<i32>,
+    b: Vec<i32>,
+    a_used: usize,
+    b_used: usize,
+}
+
+/// A memoized scatter plan (one-hot matrix + output offset of each slot).
+struct ScatterPlan {
+    scatter: Vec<f32>,
+    sums: Vec<i64>,
+}
+
+/// Scatter-plan cache bound; cleared wholesale when full (a Taylor chain
+/// touches a handful of chunk shapes).
+const SCATTER_CACHE_CAPACITY: usize = 64;
+
 /// The functional engine over a loaded [`Runtime`].
 pub struct DiagEngine {
     pub runtime: Runtime,
+    /// Offset-keyed scatter-plan cache, shared across `spmspm` calls —
+    /// the PJRT-side analogue of the kernel engine's `MulPlan` cache.
+    scatter_cache: std::sync::Mutex<std::collections::HashMap<ScatterKey, std::sync::Arc<ScatterPlan>>>,
 }
 
 impl DiagEngine {
     pub fn new(runtime: Runtime) -> Self {
-        DiagEngine { runtime }
+        DiagEngine {
+            runtime,
+            scatter_cache: std::sync::Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Fetch (or build and memoize) the scatter plan for one chunk pair,
+    /// counting reuse into `stats.plan_cache_hits`.
+    fn scatter_plan(
+        &self,
+        ap: &Planes,
+        bp: &Planes,
+        stats: &mut EngineStats,
+    ) -> std::sync::Arc<ScatterPlan> {
+        let key = ScatterKey {
+            a: ap.offsets.clone(),
+            b: bp.offsets.clone(),
+            a_used: ap.count,
+            b_used: bp.count,
+        };
+        let mut cache = self.scatter_cache.lock().unwrap();
+        if let Some(hit) = cache.get(&key) {
+            stats.plan_cache_hits += 1;
+            return std::sync::Arc::clone(hit);
+        }
+        let (scatter, sums) = scatter_matrix(&ap.offsets, &bp.offsets, ap.count, bp.count);
+        let plan = std::sync::Arc::new(ScatterPlan { scatter, sums });
+        if cache.len() >= SCATTER_CACHE_CAPACITY {
+            cache.clear();
+        }
+        cache.insert(key, std::sync::Arc::clone(&plan));
+        plan
     }
 
     /// Load from the default artifact directory.
@@ -128,15 +189,15 @@ impl DiagEngine {
             let ap = chunk_planes(a, a_chunk, bucket.n, bucket.d_a, false);
             for b_chunk in b_offsets.chunks(bucket.d_b) {
                 let bp = chunk_planes(b, b_chunk, bucket.n, bucket.d_b, true);
-                let (scatter, sums) =
-                    scatter_matrix(&ap.offsets, &bp.offsets, ap.count, bp.count);
+                let plan = self.scatter_plan(&ap, &bp, &mut stats);
+                let sums = &plan.sums;
                 let call = SpmspmCall {
                     a_re: &ap.re,
                     a_im: &ap.im,
                     a_offsets: &ap.offsets,
                     b_re_pad: &bp.re,
                     b_im_pad: &bp.im,
-                    scatter: &scatter,
+                    scatter: &plan.scatter,
                 };
                 let t0 = std::time::Instant::now();
                 let (c_re, c_im) = self.runtime.exec(bucket, &call)?;

@@ -159,6 +159,16 @@ impl Runtime {
     }
 }
 
+/// Which `xla` backend this binary was built against: `"stub"` on the
+/// default (offline) feature set, a `"real…"` description under
+/// `--features xla-real` (see `rust/vendor/xla-stub/src/lib.rs` for the
+/// wiring steps). The stub embeds the same string in every
+/// "unavailable" error it returns, so failed PJRT paths already name
+/// their backend; this accessor exposes it to status/CLI surfaces.
+pub fn xla_backend() -> &'static str {
+    xla::backend()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +181,17 @@ mod tests {
             d_b: 16,
         };
         assert_eq!(b.d_o(), 256);
+    }
+
+    #[test]
+    fn backend_is_reported() {
+        // "stub" on the default feature set; a "real…" description when
+        // built with --features xla-real. Either way it is non-empty.
+        let b = xla_backend();
+        assert!(!b.is_empty());
+        if cfg!(not(feature = "xla-real")) {
+            assert_eq!(b, "stub");
+        }
     }
 
     // Runtime-dependent tests live in rust/tests/runtime_pjrt.rs (they

@@ -257,6 +257,97 @@ fn device_report_invariants() {
 }
 
 #[test]
+fn soa_engine_matches_interleaved_and_dense_oracle() {
+    // The SoA tiled engine, the seed interleaved BTreeMap kernel, and
+    // the dense oracle agree on band and ±2^q structures at any tile
+    // size and worker count.
+    use diamond::linalg::{EngineConfig, KernelEngine};
+    prop_check("SoA engine == interleaved == dense", 16, |rng| {
+        let n = rng.gen_range(2, 48);
+        let (a, b) = if rng.gen_bool(0.5) {
+            (
+                random_exp_offset_matrix(rng, n, 6),
+                random_exp_offset_matrix(rng, n, 6),
+            )
+        } else {
+            (random_diag(rng, n, 6), random_diag(rng, n, 6))
+        };
+        let mut eng = KernelEngine::new(EngineConfig {
+            tile: rng.gen_range(1, 64),
+            workers: rng.gen_range(1, 5),
+            ..EngineConfig::default()
+        });
+        let (c, _) = eng.multiply(&a.freeze(), &b.freeze());
+        let c = c.thaw();
+        let interleaved = diag_mul_reference(&a, &b);
+        if c.max_abs_diff(&interleaved) > 1e-13 {
+            return Err(format!("n={n}: SoA engine vs seed kernel"));
+        }
+        let dense = diag_to_dense(&a).matmul(&diag_to_dense(&b));
+        if diag_to_dense(&c).max_abs_diff(&dense) > 1e-12 {
+            return Err(format!("n={n}: SoA engine vs dense"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_parallel_execution_is_bit_identical_to_serial() {
+    // Determinism of the execution layer: any tile size × any worker
+    // count reproduces the untiled serial kernel bitwise (n large enough
+    // that most cases cross the fan-out threshold).
+    use diamond::linalg::{EngineConfig, KernelEngine};
+    prop_check("tiled parallel == serial, bitwise", 8, |rng| {
+        let n = rng.gen_range(512, 1536);
+        let a = random_diag(rng, n, 8).freeze();
+        let b = random_exp_offset_matrix(rng, n, 6).freeze();
+        let (serial, s_stats) = packed_diag_mul_counted(&a, &b);
+        for tile in [1usize, 63, 1024, 1 << 20] {
+            let mut eng = KernelEngine::new(EngineConfig {
+                tile,
+                workers: rng.gen_range(2, 9),
+                ..EngineConfig::default()
+            });
+            let (tiled, t_stats) = eng.multiply(&a, &b);
+            if tiled.offsets() != serial.offsets() || tiled.arena() != serial.arena() {
+                return Err(format!("tile={tile}: output differs"));
+            }
+            if t_stats != s_stats {
+                return Err(format!("tile={tile}: stats differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_cache_hit_is_bit_identical_to_fresh_plan() {
+    use diamond::linalg::{EngineConfig, KernelEngine};
+    prop_check("plan-cache hit == fresh plan, bitwise", 12, |rng| {
+        let n = rng.gen_range(4, 96);
+        let a = random_diag(rng, n, 6).freeze();
+        let b = random_diag(rng, n, 6).freeze();
+        let mut eng = KernelEngine::new(EngineConfig {
+            tile: rng.gen_range(1, 128),
+            workers: rng.gen_range(1, 4),
+            ..EngineConfig::default()
+        });
+        let (fresh, f_stats) = eng.multiply(&a, &b);
+        let (replay, r_stats) = eng.multiply(&a, &b);
+        if eng.stats().plan_cache_hits != 1 || eng.stats().plans_built != 1 {
+            return Err(format!("cache accounting wrong: {:?}", eng.stats()));
+        }
+        if replay.offsets() != fresh.offsets() || replay.arena() != fresh.arena() {
+            return Err("cache-hit product differs from fresh plan".into());
+        }
+        if r_stats != f_stats {
+            return Err("cache-hit stats differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn blocking_equivalence_under_any_geometry() {
     use diamond::sim::DiamondDevice;
     prop_check("any blocking geometry preserves the product", 8, |rng| {

@@ -1,0 +1,21 @@
+//! Feature plumbing for the `real` backend (see Cargo.toml).
+//!
+//! Default build: does nothing beyond recording the backend name. With
+//! `--features real`: honors `XLA_EXTENSION_DIR`, emitting the native
+//! link-search path a real `xla_extension` install would need. No
+//! `rustc-link-lib` is emitted, so the build never fails on machines
+//! without the toolchain — CI builds the plumbing without running it.
+
+fn main() {
+    println!("cargo:rerun-if-env-changed=XLA_EXTENSION_DIR");
+    let real_requested = std::env::var_os("CARGO_FEATURE_REAL").is_some();
+    let backend = if !real_requested {
+        "stub".to_string()
+    } else if let Ok(dir) = std::env::var("XLA_EXTENSION_DIR") {
+        println!("cargo:rustc-link-search=native={dir}/lib");
+        format!("real (xla_extension at {dir})")
+    } else {
+        "real requested (XLA_EXTENSION_DIR unset; stub behavior)".to_string()
+    };
+    println!("cargo:rustc-env=XLA_STUB_BACKEND={backend}");
+}

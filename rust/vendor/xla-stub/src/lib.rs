@@ -5,9 +5,35 @@
 //! against while failing fast at runtime: [`PjRtClient::cpu`] returns an
 //! error, so every PJRT code path reports "unavailable" instead of
 //! executing. The oracle functional path (`linalg::diag_mul`) remains the
-//! value producer; swap this stub for the real crate to light up PJRT.
+//! value producer.
+//!
+//! ## Lighting up a real backend
+//!
+//! The crate carries feature plumbing for machines with the
+//! `xla_extension` toolchain, gated behind the `real` cargo feature
+//! (exposed downstream as diamond's `xla-real`):
+//!
+//! 1. `cargo build -p diamond --features xla-real` — builds the wiring;
+//!    [`backend`] then reports a `real…` variant instead of `"stub"`.
+//! 2. set `XLA_EXTENSION_DIR=/path/to/xla_extension` — build.rs emits
+//!    the native link-search path for `$XLA_EXTENSION_DIR/lib`.
+//! 3. replace this vendored stub with the real `xla` crate (same
+//!    package name, same type surface) to make the PJRT entry points
+//!    actually execute; until then they keep returning errors.
+//!
+//! CI builds step 1 (no toolchain required, nothing is linked or run).
 
 use std::fmt;
+
+/// Which backend this build of the crate represents: `"stub"` by
+/// default, a `"real…"` description under `--features real` (recorded by
+/// build.rs, including whether `XLA_EXTENSION_DIR` was found).
+pub fn backend() -> &'static str {
+    match option_env!("XLA_STUB_BACKEND") {
+        Some(b) => b,
+        None => "stub",
+    }
+}
 
 /// Stub error: every fallible entry point returns this.
 #[derive(Debug)]
@@ -25,8 +51,9 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 fn unavailable<T>(what: &str) -> Result<T> {
     Err(Error(format!(
-        "xla stub: {what} unavailable (offline build without xla_extension; \
-         PJRT execution requires the real `xla` crate)"
+        "xla stub: {what} unavailable (backend: {}; \
+         PJRT execution requires the real `xla` crate)",
+        backend()
     )))
 }
 
