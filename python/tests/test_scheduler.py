@@ -1,0 +1,346 @@
+"""Transliteration checks of the Rust kernel-engine scheduler.
+
+The build container has no Rust toolchain, so the engine's pure index
+math — Minkowski planning, tile clipping, work-unit coalescing, adaptive
+tile derivation — is mirrored here 1:1 (same names, same arithmetic,
+same accumulation order as ``rust/src/linalg/engine.rs`` /
+``diag_mul.rs``) and property-checked: tiles partition every output
+diagonal, units partition the tile list, grouped execution reproduces
+per-diagonal execution bit-for-bit, and the mixed band-length workload's
+pool-task reduction clears the >= 8x acceptance gate at every plausible
+worker count.
+"""
+
+import random
+
+import numpy as np
+
+# --- mirrors of rust/src/format/diag.rs -----------------------------------
+
+
+def diag_len(n, d):
+    return max(0, n - abs(d))
+
+
+def idx_of_row(d, row):
+    return row - max(0, -d)
+
+
+# --- mirrors of rust/src/linalg/diag_mul.rs -------------------------------
+
+
+def overlap_rows(n, d_a, d_b):
+    lo = max(0, -d_a, -d_a - d_b)
+    hi = min(n, n - d_a, n - d_a - d_b)
+    return lo, hi
+
+
+def plan_diag_mul(n, a_offsets, b_offsets):
+    """Grouped contribution lists per output offset, (d_a asc, d_b asc)."""
+    grouped = {}
+    for ai, d_a in enumerate(sorted(a_offsets)):
+        for bi, d_b in enumerate(sorted(b_offsets)):
+            lo, hi = overlap_rows(n, d_a, d_b)
+            if lo >= hi:
+                continue
+            d_c = d_a + d_b
+            grouped.setdefault(d_c, []).append(
+                dict(
+                    a_idx=ai,
+                    b_idx=bi,
+                    ka0=idx_of_row(d_a, lo),
+                    kb0=idx_of_row(d_b, lo + d_a),
+                    kc0=idx_of_row(d_c, lo),
+                    length=hi - lo,
+                )
+            )
+    return [
+        dict(offset=d_c, length=diag_len(n, d_c), contribs=grouped[d_c])
+        for d_c in sorted(grouped)
+    ]
+
+
+# --- mirrors of rust/src/linalg/engine.rs ---------------------------------
+
+KERNEL_BYTES_PER_ELEM = 6 * 8
+MIN_AUTO_TILE = 1024
+AUTO_TILES_PER_WORKER = 4
+DEFAULT_TILE = 8 * 1024
+MIN_GROUP_BUDGET = DEFAULT_TILE
+
+
+def rowcol_blocking(n, segment_len):
+    out, lo = [], 0
+    while lo < n:
+        hi = min(lo + segment_len, n)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def clip_contribution(c, lo, hi):
+    start = max(c["kc0"], lo)
+    end = min(c["kc0"] + c["length"], hi)
+    if start >= end:
+        return None
+    shift = start - c["kc0"]
+    return dict(
+        a_idx=c["a_idx"],
+        b_idx=c["b_idx"],
+        ka0=c["ka0"] + shift,
+        kb0=c["kb0"] + shift,
+        kc0=start,
+        length=end - start,
+    )
+
+
+def tile_plan(outs, tile):
+    tile = max(1, tile)
+    tasks = []
+    for out_idx, out in enumerate(outs):
+        for lo, hi in rowcol_blocking(max(1, out["length"]), tile):
+            hi = min(hi, out["length"])
+            if lo >= hi:
+                continue
+            contribs = [
+                cc
+                for cc in (clip_contribution(c, lo, hi) for c in out["contribs"])
+                if cc is not None
+            ]
+            tasks.append(dict(out_idx=out_idx, lo=lo, hi=hi, contribs=contribs))
+    return tasks
+
+
+def schedule_work(tasks, budget):
+    budget = max(1, budget)
+    units, lo, acc = [], 0, 0
+    for t, task in enumerate(tasks):
+        length = task["hi"] - task["lo"]
+        if t > lo and acc + length > budget:
+            units.append(dict(task_lo=lo, task_hi=t, elems=acc))
+            lo, acc = t, 0
+        acc += length
+    if lo < len(tasks):
+        units.append(dict(task_lo=lo, task_hi=len(tasks), elems=acc))
+    return units
+
+
+def auto_tile(total_elems, workers, cache_bytes):
+    cache_tile = max(cache_bytes // KERNEL_BYTES_PER_ELEM, MIN_AUTO_TILE)
+    spread = max(1, workers) * AUTO_TILES_PER_WORKER
+    balance_tile = max(total_elems // max(1, spread), MIN_AUTO_TILE)
+    return min(cache_tile, balance_tile)
+
+
+def group_budget(tile, total_elems, workers):
+    workers = max(1, workers)
+    spread = workers * AUTO_TILES_PER_WORKER
+    budget = max(tile, total_elems // spread, MIN_GROUP_BUDGET)
+    # Parallelism guard: never coalesce below one unit per worker when
+    # the plan has that much work to give out.
+    return min(budget, max(total_elems // workers, tile, 1))
+
+
+# --- executions (fill_window operation order) -----------------------------
+
+
+def fill_window(contribs, base, a_planes, b_planes, dst_re, dst_im):
+    """Exact mirror of diag_mul::fill_window's f64 operation order."""
+    for c in contribs:
+        ar, ai = a_planes[c["a_idx"]]
+        br, bi = b_planes[c["b_idx"]]
+        o = c["kc0"] - base
+        for k in range(c["length"]):
+            x, y = c["ka0"] + k, c["kb0"] + k
+            dst_re[o + k] += ar[x] * br[y] - ai[x] * bi[y]
+            dst_im[o + k] += ar[x] * bi[y] + ai[x] * br[y]
+
+
+def execute_per_diagonal(outs, a_planes, b_planes):
+    planes = []
+    for out in outs:
+        re = np.zeros(out["length"])
+        im = np.zeros(out["length"])
+        fill_window(out["contribs"], 0, a_planes, b_planes, re, im)
+        planes.append((re, im))
+    return planes
+
+
+def execute_scheduled(outs, tasks, units, a_planes, b_planes):
+    total = sum(o["length"] for o in outs)
+    re = np.zeros(total)
+    im = np.zeros(total)
+    starts = np.cumsum([0] + [o["length"] for o in outs])
+    carve = 0
+    for u in units:
+        u_re = re[carve : carve + u["elems"]]
+        u_im = im[carve : carve + u["elems"]]
+        off = 0
+        for task in tasks[u["task_lo"] : u["task_hi"]]:
+            length = task["hi"] - task["lo"]
+            fill_window(
+                task["contribs"],
+                task["lo"],
+                a_planes,
+                b_planes,
+                u_re[off : off + length],
+                u_im[off : off + length],
+            )
+            off += length
+        assert off == u["elems"]
+        carve += u["elems"]
+    assert carve == total
+    return [
+        (re[starts[i] : starts[i + 1]], im[starts[i] : starts[i + 1]])
+        for i in range(len(outs))
+    ]
+
+
+# --- the tests ------------------------------------------------------------
+
+
+def random_operand(rng, n, style):
+    if style == "mixed":
+        offsets = {0}
+        for k in range(1, min(17, n)):
+            for sign in (1, -1):
+                if rng.random() < 0.6:
+                    offsets.add(sign * (n - k))
+    else:
+        offsets = {0}
+        q = 1
+        while q < n:
+            offsets.add(q)
+            offsets.add(-q)
+            q *= 2
+        offsets = {d for d in offsets if rng.random() < 0.7}
+        offsets.add(0)
+    offsets = sorted(offsets)
+    planes = [
+        (np.random.default_rng(rng.randrange(2**31)).standard_normal(diag_len(n, d)),
+         np.random.default_rng(rng.randrange(2**31)).standard_normal(diag_len(n, d)))
+        for d in offsets
+    ]
+    return offsets, planes
+
+
+def test_tiles_partition_and_conserve_mults():
+    rng = random.Random(7)
+    for _ in range(40):
+        n = rng.randrange(8, 96)
+        a_off, _ = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        b_off, _ = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        outs = plan_diag_mul(n, a_off, b_off)
+        mults = sum(c["length"] for o in outs for c in o["contribs"])
+        for tile in (1, 3, 16, 10**6):
+            tasks = tile_plan(outs, tile)
+            # tiles contiguous per diagonal, cover [0, length)
+            cursor = {}
+            for t in tasks:
+                assert t["lo"] == cursor.get(t["out_idx"], 0)
+                assert t["hi"] - t["lo"] <= tile
+                cursor[t["out_idx"]] = t["hi"]
+            for i, o in enumerate(outs):
+                assert cursor[i] == o["length"]
+            assert (
+                sum(c["length"] for t in tasks for c in t["contribs"]) == mults
+            ), "clipping must conserve multiply work"
+
+
+def test_units_partition_tasks_respect_budget_and_are_maximal():
+    rng = random.Random(21)
+    for _ in range(40):
+        n = rng.randrange(8, 96)
+        a_off, _ = random_operand(rng, n, "mixed")
+        b_off, _ = random_operand(rng, n, "exp")
+        outs = plan_diag_mul(n, a_off, b_off)
+        for tile in (1, 8, 64):
+            tasks = tile_plan(outs, tile)
+            for budget in (1, 5, 40, 10**6):
+                units = schedule_work(tasks, budget)
+                nxt = 0
+                for u in units:
+                    assert u["task_lo"] == nxt
+                    elems = sum(
+                        t["hi"] - t["lo"] for t in tasks[u["task_lo"] : u["task_hi"]]
+                    )
+                    assert elems == u["elems"]
+                    assert u["elems"] <= budget or u["task_hi"] - u["task_lo"] == 1
+                    nxt = u["task_hi"]
+                assert nxt == len(tasks)
+                # greedy maximality
+                for u, v in zip(units, units[1:]):
+                    first_next = tasks[v["task_lo"]]
+                    assert u["elems"] + (first_next["hi"] - first_next["lo"]) > budget
+
+
+def test_grouped_execution_is_bit_identical_to_per_diagonal():
+    rng = random.Random(1234)
+    for _ in range(25):
+        n = rng.randrange(8, 80)
+        a_off, a_planes = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        b_off, b_planes = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        outs = plan_diag_mul(n, a_off, b_off)
+        want = execute_per_diagonal(outs, a_planes, b_planes)
+        for tile in (1, 7, 33, 10**6):
+            tasks = tile_plan(outs, tile)
+            for budget in (1, 29, 10**6):
+                units = schedule_work(tasks, budget)
+                got = execute_scheduled(outs, tasks, units, a_planes, b_planes)
+                for (wr, wi), (gr, gi) in zip(want, got):
+                    # bitwise: identical accumulation order per element
+                    assert np.array_equal(wr, gr)
+                    assert np.array_equal(wi, gi)
+
+
+def test_mixed_band_workload_clears_the_8x_task_gate():
+    # Mirror of bench_harness::kernel::mixed_band_workload(4096, 512, 4)
+    # and of KernelEngine::build's tile/budget derivation: the grouped
+    # schedule must submit <= 1/8 the pool tasks of per-diagonal
+    # scheduling at every plausible worker count and cache size.
+    n, shorts, band = 4096, 512, 4
+    a_off = [0] + [n - k for k in range(1, shorts + 1)]
+    b_off = list(range(-band, band + 1))
+    outs = plan_diag_mul(n, a_off, b_off)
+    per_diagonal = len(outs)
+    total = sum(o["length"] for o in outs)
+    assert per_diagonal > 400
+    for workers in (1, 3, 7, 15, 31):
+        for cache in (128 * 1024, 256 * 1024, 512 * 1024, 1024 * 1024):
+            tile = auto_tile(total, workers, cache)
+            tasks = tile_plan(outs, tile)
+            units = schedule_work(tasks, group_budget(tile, total, workers))
+            assert per_diagonal >= 8 * len(units), (
+                f"workers={workers} cache={cache}: "
+                f"{per_diagonal} diagonals vs {len(units)} units"
+            )
+
+
+def test_auto_tile_bounds():
+    assert auto_tile(2**40, 1, 256 * 1024) == 256 * 1024 // KERNEL_BYTES_PER_ELEM
+    assert auto_tile(100, 4, 256 * 1024) == MIN_AUTO_TILE
+    assert auto_tile(2**20, 4, 2**30) == 2**20 // (4 * AUTO_TILES_PER_WORKER)
+    assert auto_tile(0, 0, 0) >= MIN_AUTO_TILE
+    assert group_budget(2**20, 100, 2) == 2**20
+    assert group_budget(16, 100, 2) == max(16, 100 // 2)
+    # Parallelism guard: the budget is capped at total/workers (floored
+    # at one tile) so coalescing never leaves workers idle.
+    b = group_budget(1281, 41_000, 8)
+    assert 1281 <= b <= 41_000 // 8
+
+
+def test_group_budget_preserves_parallelism():
+    # A contribution-heavy plan with modest output (n=1024, band ±20):
+    # the schedule must yield at least `workers` units so the pool stays
+    # busy, while the mixed workload still clears the 8x reduction.
+    n = 1024
+    offs = list(range(-20, 21))
+    outs = plan_diag_mul(n, offs, offs)
+    total = sum(o["length"] for o in outs)
+    for workers in (2, 4, 8, 16):
+        tile = auto_tile(total, workers, 256 * 1024)
+        tasks = tile_plan(outs, tile)
+        units = schedule_work(tasks, group_budget(tile, total, workers))
+        assert len(units) >= min(workers, len(tasks)), (
+            f"workers={workers}: only {len(units)} units"
+        )

@@ -35,14 +35,17 @@ fn time<F: FnMut() -> u64>(name: &str, reps: usize, mut f: F) {
 
 fn main() {
     // `--smoke` (the CI bench smoke-job): only the n = 2^12 kernel
-    // shoot-out, then write BENCH_kernel.json and exit.
+    // shoot-out (exp-offset + mixed band-length), then write
+    // BENCH_kernel.json and exit.
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!("perf microbench — units noted per case\n");
 
     // Kernel shoot-out: seed BTreeMap kernel vs the SoA engine (serial /
-    // tiled-parallel / plan-cached) on the exponential-offset workload;
-    // recorded as BENCH_kernel.json at the repo root for the perf
-    // trajectory (CI gates on the soa-vs-seed column).
+    // tiled-parallel / plan-cached / grouped-auto) on the
+    // exponential-offset and mixed band-length workloads; recorded as
+    // BENCH_kernel.json at the repo root for the perf trajectory (CI
+    // gates on the soa-vs-seed column and on the mixed workload's
+    // pool-task reduction).
     let opts = diamond::bench_harness::kernel::KernelOptions::default();
     let cases = diamond::bench_harness::kernel::run_suite_with(&opts, smoke);
     println!("{}", diamond::bench_harness::kernel::render_table(&cases));

@@ -1,7 +1,14 @@
 //! Kernel microbenchmark: seed BTreeMap kernel vs the SoA kernel engine
-//! (serial, tiled-parallel, and plan-cached), on the exponential-offset
-//! workload (`±2^q` diagonals — the problem-Hamiltonian structure of
-//! paper Table II).
+//! (serial, tiled-parallel, plan-cached, and grouped-auto — the full
+//! adaptive scheduler), on two workloads:
+//!
+//! * the **exponential-offset** workload (`±2^q` diagonals — the
+//!   problem-Hamiltonian structure of paper Table II), and
+//! * the **mixed band-length** workload (one full band next to a corner
+//!   fan of short diagonals), whose thousands of short output diagonals
+//!   are what the coalescing scheduler exists for. The per-case pool-task
+//!   counts (`tasks_per_diagonal` vs `tasks_grouped`) quantify the
+//!   reduction directly in `BENCH_kernel.json`.
 //!
 //! `perf_microbench` writes the result as `BENCH_kernel.json` at the repo
 //! root so successive PRs have a comparable perf trajectory; CI diffs the
@@ -10,25 +17,26 @@
 use super::Table;
 use crate::coordinator::pool;
 use crate::format::DiagMatrix;
-use crate::linalg::engine::{self, EngineConfig, KernelEngine};
+use crate::linalg::engine::{self, EngineConfig, KernelEngine, TileMode};
 use crate::num::Complex;
 use std::time::Instant;
 
-/// Benchmark knobs surfaced on the CLI (`diamond kernel --tile N
+/// Benchmark knobs surfaced on the CLI (`diamond kernel --tile <N|auto>
 /// [--no-plan-cache]`).
 #[derive(Clone, Copy, Debug)]
 pub struct KernelOptions {
-    /// Tile length for the tiled variants.
-    pub tile: usize,
-    /// Whether the "cached" variant may reuse plans (off = ablation:
-    /// the cached column re-plans every call, like the tiled column).
+    /// Tile mode for the tiled/cached variants (`--tile auto` switches
+    /// to adaptive derivation and prints the tile sweep).
+    pub tile: TileMode,
+    /// Whether the "cached"/"grouped" variants may reuse plans (off =
+    /// ablation: they re-plan every call, like the tiled column).
     pub plan_cache: bool,
 }
 
 impl Default for KernelOptions {
     fn default() -> Self {
         KernelOptions {
-            tile: engine::DEFAULT_TILE,
+            tile: TileMode::Fixed(engine::DEFAULT_TILE),
             plan_cache: true,
         }
     }
@@ -36,10 +44,15 @@ impl Default for KernelOptions {
 
 /// One benchmarked configuration (times are ns per multiply call).
 pub struct KernelCase {
+    /// Workload family (`"exp-offset"` or `"mixed-band"`).
+    pub workload: &'static str,
     pub n: usize,
     pub diags: usize,
     pub workers: usize,
+    /// Resolved tile length used by the tiled/cached columns.
     pub tile: usize,
+    /// `"fixed"` or `"auto"` — how that tile was derived.
+    pub tile_mode: &'static str,
     /// Seed BTreeMap kernel (the baseline every PR is diffed against).
     pub btreemap_ns: f64,
     /// SoA plan/execute, one worker, untiled.
@@ -48,6 +61,16 @@ pub struct KernelCase {
     pub tiled_parallel_ns: f64,
     /// Tiled parallel execution through a warm plan cache.
     pub plan_cached_ns: f64,
+    /// The full adaptive stack: auto tile + coalesced work schedule +
+    /// plan cache, across the worker pool.
+    pub grouped_auto_ns: f64,
+    /// Tile length [`TileMode::Auto`] resolved to for this plan.
+    pub grouped_auto_tile: usize,
+    /// Pool tasks under per-diagonal scheduling (one per output
+    /// diagonal — the pre-scheduler policy).
+    pub tasks_per_diagonal: usize,
+    /// Pool tasks under the coalesced schedule (work units).
+    pub tasks_grouped: usize,
 }
 
 impl KernelCase {
@@ -64,6 +87,18 @@ impl KernelCase {
     /// Plan-cached speedup over the seed BTreeMap kernel.
     pub fn speedup_cached(&self) -> f64 {
         self.btreemap_ns / self.plan_cached_ns
+    }
+
+    /// Grouped-auto speedup over the seed BTreeMap kernel.
+    pub fn speedup_grouped(&self) -> f64 {
+        self.btreemap_ns / self.grouped_auto_ns
+    }
+
+    /// Pool-task reduction of the coalesced schedule vs per-diagonal
+    /// scheduling (the acceptance metric: ≥ 8× on mixed band-length
+    /// workloads).
+    pub fn task_reduction(&self) -> f64 {
+        self.tasks_per_diagonal as f64 / self.tasks_grouped.max(1) as f64
     }
 }
 
@@ -89,6 +124,42 @@ pub fn exp_offset_matrix(n: usize, qmax: u32) -> DiagMatrix {
     m
 }
 
+/// The mixed band-length workload: `A` carries the main diagonal plus a
+/// corner fan of `shorts` short diagonals (offsets `n − k`, lengths
+/// `k = 1..=shorts`), `B` a narrow band of half-width `band`. Their
+/// product has a few full-length output diagonals next to hundreds of
+/// short ones — the band-length distribution (DiaQ's observation, arXiv
+/// 2405.01250) that per-diagonal pool scheduling handles worst and the
+/// coalescing scheduler exists for.
+pub fn mixed_band_workload(n: usize, shorts: usize, band: i64) -> (DiagMatrix, DiagMatrix) {
+    assert!(shorts < n && (band as usize) < n);
+    let mut a = DiagMatrix::zeros(n);
+    a.set_diag(
+        0,
+        (0..n)
+            .map(|k| Complex::new(0.2 + (k % 13) as f64 * 1e-3, 0.05))
+            .collect(),
+    );
+    for k in 1..=shorts {
+        let d = (n - k) as i64;
+        a.set_diag(
+            d,
+            (0..k).map(|j| Complex::new(0.1 + j as f64 * 1e-3, -0.04)).collect(),
+        );
+    }
+    let mut b = DiagMatrix::zeros(n);
+    for d in -band..=band {
+        let len = DiagMatrix::diag_len(n, d);
+        b.set_diag(
+            d,
+            (0..len)
+                .map(|k| Complex::new(0.3 - (k % 11) as f64 * 1e-3, 0.02 * d as f64))
+                .collect(),
+        );
+    }
+    (a, b)
+}
+
 /// Time `reps` calls of `f` (after one warmup), returning ns per call.
 /// `f` returns a token routed through `black_box` so the work can't be
 /// elided.
@@ -104,28 +175,49 @@ fn time_ns<F: FnMut() -> usize>(reps: usize, mut f: F) -> f64 {
     ns
 }
 
-/// Benchmark one `(n, qmax)` configuration with `reps` timed calls per
-/// kernel variant. Also cross-checks that every path agrees (the tiled
-/// and cached variants bit-identically with the serial one).
-pub fn run_case(n: usize, qmax: u32, reps: usize, opts: &KernelOptions) -> KernelCase {
+/// Benchmark one operand pair with `reps` timed calls per kernel
+/// variant. Also cross-checks that every path agrees (the tiled, cached
+/// and grouped variants bit-identically with the serial one).
+pub fn run_case_on(
+    workload: &'static str,
+    a: &DiagMatrix,
+    b: &DiagMatrix,
+    reps: usize,
+    opts: &KernelOptions,
+) -> KernelCase {
     let workers = pool::default_workers();
-    let a = exp_offset_matrix(n, qmax);
-    let b = exp_offset_matrix(n, qmax);
     let ap = a.freeze();
     let bp = b.freeze();
 
     let mut tiled_engine = KernelEngine::new(EngineConfig {
         tile: opts.tile,
         workers,
+        coalesce: false,
         cache_plans: false,
         ..EngineConfig::default()
     });
     let mut cached_engine = KernelEngine::new(EngineConfig {
         tile: opts.tile,
         workers,
+        coalesce: false,
         cache_plans: opts.plan_cache,
         ..EngineConfig::default()
     });
+    let mut grouped_engine = KernelEngine::new(EngineConfig {
+        tile: TileMode::Auto,
+        workers,
+        coalesce: true,
+        cache_plans: opts.plan_cache,
+        ..EngineConfig::default()
+    });
+
+    // Structural facts from the planned products (no timing involved).
+    let planned_fixed = tiled_engine.plan(&ap, &bp);
+    let tile = planned_fixed.tiles.tile;
+    let planned_grouped = grouped_engine.plan(&ap, &bp);
+    let grouped_auto_tile = planned_grouped.tiles.tile;
+    let tasks_per_diagonal = planned_grouped.plan.outs.len();
+    let tasks_grouped = planned_grouped.schedule.units.len();
 
     // Cross-checks before timing: all engine paths must agree with the
     // serial kernel bitwise, and with the seed kernel numerically.
@@ -135,6 +227,12 @@ pub fn run_case(n: usize, qmax: u32, reps: usize, opts: &KernelOptions) -> Kerne
         serial_c.arena(),
         tiled_c.arena(),
         "tiled-parallel kernel must be bit-identical to serial"
+    );
+    let (grouped_c, _) = grouped_engine.multiply(&ap, &bp);
+    assert_eq!(
+        serial_c.arena(),
+        grouped_c.arena(),
+        "grouped auto-tiled kernel must be bit-identical to serial"
     );
     let (cached_c1, _) = cached_engine.multiply(&ap, &bp);
     let (cached_c2, _) = cached_engine.multiply(&ap, &bp);
@@ -150,51 +248,138 @@ pub fn run_case(n: usize, qmax: u32, reps: usize, opts: &KernelOptions) -> Kerne
             "warm cache expected a hit"
         );
     }
-    let reference = crate::linalg::diag_mul_reference(&a, &b);
+    let reference = crate::linalg::diag_mul_reference(a, b);
     assert!(
         serial_c.thaw().max_abs_diff(&reference) < 1e-12,
         "packed kernel must agree with the seed kernel"
     );
 
-    let btreemap_ns = time_ns(reps, || crate::linalg::diag_mul_reference(&a, &b).nnzd());
+    let btreemap_ns = time_ns(reps, || crate::linalg::diag_mul_reference(a, b).nnzd());
     let soa_serial_ns = time_ns(reps, || {
         crate::linalg::packed_diag_mul_counted(&ap, &bp).0.nnzd()
     });
     let tiled_parallel_ns = time_ns(reps, || tiled_engine.multiply(&ap, &bp).0.nnzd());
-    // The cached engine is warm from the cross-check above, so this
-    // measures plan-reuse + tiled execution (the Taylor steady state).
+    // The cached/grouped engines are warm from the cross-checks above,
+    // so these measure plan-reuse + scheduled execution (the Taylor
+    // steady state).
     let plan_cached_ns = time_ns(reps, || cached_engine.multiply(&ap, &bp).0.nnzd());
+    let grouped_auto_ns = time_ns(reps, || grouped_engine.multiply(&ap, &bp).0.nnzd());
 
     KernelCase {
-        n,
+        workload,
+        n: a.dim(),
         diags: a.nnzd(),
         workers,
-        tile: opts.tile,
+        tile,
+        tile_mode: match opts.tile {
+            TileMode::Fixed(_) => "fixed",
+            TileMode::Auto => "auto",
+        },
         btreemap_ns,
         soa_serial_ns,
         tiled_parallel_ns,
         plan_cached_ns,
+        grouped_auto_ns,
+        grouped_auto_tile,
+        tasks_per_diagonal,
+        tasks_grouped,
     }
 }
 
-/// The standard suite: exponential-offset workloads at `n ≥ 2^12`;
-/// `smoke` runs only the `n = 2^12` case (the CI bench smoke-job).
+/// Benchmark one `(n, qmax)` exponential-offset configuration.
+pub fn run_case(n: usize, qmax: u32, reps: usize, opts: &KernelOptions) -> KernelCase {
+    let a = exp_offset_matrix(n, qmax);
+    let b = exp_offset_matrix(n, qmax);
+    run_case_on("exp-offset", &a, &b, reps, opts)
+}
+
+/// Benchmark one mixed band-length configuration.
+pub fn run_mixed_case(n: usize, shorts: usize, band: i64, reps: usize, opts: &KernelOptions) -> KernelCase {
+    let (a, b) = mixed_band_workload(n, shorts, band);
+    run_case_on("mixed-band", &a, &b, reps, opts)
+}
+
+/// The standard suite: the exponential-offset workload at `n ≥ 2^12`
+/// plus the mixed band-length workload; `smoke` (the CI bench
+/// smoke-job) runs the `n = 2^12` exponential case and the mixed case
+/// only.
 pub fn run_suite_with(opts: &KernelOptions, smoke: bool) -> Vec<KernelCase> {
-    if smoke {
-        vec![run_case(1 << 12, 11, 5, opts)]
-    } else {
-        vec![run_case(1 << 12, 11, 5, opts), run_case(1 << 14, 13, 3, opts)]
+    let mut cases = vec![
+        run_case(1 << 12, 11, 5, opts),
+        run_mixed_case(1 << 12, 512, 4, 5, opts),
+    ];
+    if !smoke {
+        cases.push(run_case(1 << 14, 13, 3, opts));
     }
+    cases
+}
+
+/// The tile sweep behind `diamond kernel --tile auto`: the same workload
+/// timed at several fixed tiles and at the adaptive tile, with the
+/// resolved length and pool-task count per row. Every row's product is
+/// asserted bit-identical to the serial kernel before timing.
+pub fn tile_sweep(n: usize, qmax: u32, reps: usize) -> String {
+    let workers = pool::default_workers();
+    let a = exp_offset_matrix(n, qmax);
+    let b = exp_offset_matrix(n, qmax);
+    let ap = a.freeze();
+    let bp = b.freeze();
+    let (serial_c, _) = crate::linalg::packed_diag_mul_counted(&ap, &bp);
+    let serial_ns = time_ns(reps, || {
+        crate::linalg::packed_diag_mul_counted(&ap, &bp).0.nnzd()
+    });
+
+    let modes: [(&str, TileMode); 6] = [
+        ("1Ki", TileMode::Fixed(1 << 10)),
+        ("4Ki", TileMode::Fixed(1 << 12)),
+        ("8Ki (default)", TileMode::Fixed(engine::DEFAULT_TILE)),
+        ("16Ki", TileMode::Fixed(1 << 14)),
+        ("64Ki", TileMode::Fixed(1 << 16)),
+        ("auto", TileMode::Auto),
+    ];
+    let mut t = Table::new(&[
+        "tile mode", "resolved", "units", "tiles", "ms/op", "vs serial",
+    ]);
+    for (label, mode) in modes {
+        let mut eng = KernelEngine::new(EngineConfig {
+            tile: mode,
+            workers,
+            ..EngineConfig::default()
+        });
+        let planned = eng.plan(&ap, &bp);
+        let (c, _) = eng.multiply(&ap, &bp);
+        assert_eq!(
+            c.arena(),
+            serial_c.arena(),
+            "tile sweep must stay bit-identical ({label})"
+        );
+        let ns = time_ns(reps, || eng.multiply(&ap, &bp).0.nnzd());
+        t.row(vec![
+            label.to_string(),
+            planned.tiles.tile.to_string(),
+            planned.schedule.units.len().to_string(),
+            planned.tiles.tasks.len().to_string(),
+            format!("{:.3}", ns / 1e6),
+            super::fmt_ratio(serial_ns / ns),
+        ]);
+    }
+    format!(
+        "Tile sweep — exp-offset n={n}, {workers} workers, cache {} KiB detected\n{}",
+        engine::detected_cache_bytes() / 1024,
+        t.render()
+    )
 }
 
 /// Render the human-readable comparison table.
 pub fn render_table(cases: &[KernelCase]) -> String {
     let mut t = Table::new(&[
-        "n", "diags", "workers", "tile", "btreemap ms", "soa ms", "tiled ms", "cached ms",
-        "soa vs seed", "tiled vs seed", "cached vs seed",
+        "workload", "n", "diags", "workers", "tile", "btreemap ms", "soa ms", "tiled ms",
+        "cached ms", "grouped ms", "soa x", "tiled x", "cached x", "grouped x", "tasks",
+        "grouped tasks",
     ]);
     for c in cases {
         t.row(vec![
+            c.workload.to_string(),
             c.n.to_string(),
             c.diags.to_string(),
             c.workers.to_string(),
@@ -203,13 +388,17 @@ pub fn render_table(cases: &[KernelCase]) -> String {
             format!("{:.3}", c.soa_serial_ns / 1e6),
             format!("{:.3}", c.tiled_parallel_ns / 1e6),
             format!("{:.3}", c.plan_cached_ns / 1e6),
+            format!("{:.3}", c.grouped_auto_ns / 1e6),
             super::fmt_ratio(c.speedup_soa()),
             super::fmt_ratio(c.speedup_tiled()),
             super::fmt_ratio(c.speedup_cached()),
+            super::fmt_ratio(c.speedup_grouped()),
+            c.tasks_per_diagonal.to_string(),
+            c.tasks_grouped.to_string(),
         ]);
     }
     format!(
-        "Kernel microbench — diagonal SpMSpM, exponential-offset workload\n{}",
+        "Kernel microbench — diagonal SpMSpM (speedups vs seed BTreeMap kernel)\n{}",
         t.render()
     )
 }
@@ -218,22 +407,30 @@ pub fn render_table(cases: &[KernelCase]) -> String {
 /// hand-rolled, stable field order).
 pub fn to_json(cases: &[KernelCase]) -> String {
     let mut out = String::from(
-        "{\n  \"bench\": \"diag_mul_kernel\",\n  \"workload\": \"exponential-offset\",\n  \"unit\": \"ns_per_op\",\n  \"cases\": [\n",
+        "{\n  \"bench\": \"diag_mul_kernel\",\n  \"workloads\": \"exponential-offset + mixed-band\",\n  \"unit\": \"ns_per_op\",\n  \"cases\": [\n",
     );
     for (i, c) in cases.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}}}{}\n",
+            "    {{\"workload\": \"{}\", \"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"tile_mode\": \"{}\", \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"grouped_auto_ns\": {:.0}, \"grouped_auto_tile\": {}, \"tasks_per_diagonal\": {}, \"tasks_grouped\": {}, \"task_reduction\": {:.3}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}, \"speedup_grouped_auto_vs_seed\": {:.3}}}{}\n",
+            c.workload,
             c.n,
             c.diags,
             c.workers,
             c.tile,
+            c.tile_mode,
             c.btreemap_ns,
             c.soa_serial_ns,
             c.tiled_parallel_ns,
             c.plan_cached_ns,
+            c.grouped_auto_ns,
+            c.grouped_auto_tile,
+            c.tasks_per_diagonal,
+            c.tasks_grouped,
+            c.task_reduction(),
             c.speedup_soa(),
             c.speedup_tiled(),
             c.speedup_cached(),
+            c.speedup_grouped(),
             if i + 1 < cases.len() { "," } else { "" },
         ));
     }
@@ -257,25 +454,76 @@ mod tests {
     }
 
     #[test]
+    fn mixed_band_structure() {
+        // One length-n diagonal plus `shorts` diagonals of lengths
+        // 1..=shorts in A; a (2·band+1)-wide band in B.
+        let (a, b) = mixed_band_workload(64, 12, 3);
+        assert_eq!(a.nnzd(), 13);
+        assert_eq!(a.diag(0).unwrap().len(), 64);
+        for k in 1..=12usize {
+            assert_eq!(a.diag((64 - k) as i64).unwrap().len(), k);
+        }
+        assert_eq!(b.nnzd(), 7);
+    }
+
+    #[test]
+    fn grouped_schedule_beats_per_diagonal_by_8x_on_mixed_workload() {
+        // The acceptance criterion, asserted structurally (no timing):
+        // on the mixed band-length workload the coalesced schedule
+        // submits at most 1/8 of the pool tasks per-diagonal scheduling
+        // submits. Worker count pinned so the budget derivation (and
+        // with it the unit count) is machine-independent; the Python
+        // transliteration sweeps workers 1..=31 on the same workload.
+        let (a, b) = mixed_band_workload(1 << 12, 512, 4);
+        let mut eng = KernelEngine::new(EngineConfig {
+            workers: 3,
+            ..EngineConfig::default()
+        });
+        let planned = eng.plan(&a.freeze(), &b.freeze());
+        let per_diagonal = planned.plan.outs.len();
+        let grouped = planned.schedule.units.len();
+        assert!(
+            per_diagonal >= 8 * grouped,
+            "grouping too weak: {per_diagonal} diagonals vs {grouped} units"
+        );
+        // The workload really is short-diagonal-heavy.
+        assert!(per_diagonal > 400, "outs = {per_diagonal}");
+    }
+
+    #[test]
     fn small_case_runs_and_agrees() {
         let opts = KernelOptions {
-            tile: 16,
+            tile: TileMode::Fixed(16),
             plan_cache: true,
         };
         let c = run_case(64, 3, 1, &opts);
+        assert_eq!(c.workload, "exp-offset");
         assert_eq!(c.n, 64);
         assert_eq!(c.diags, 9);
         assert_eq!(c.tile, 16);
+        assert_eq!(c.tile_mode, "fixed");
         assert!(c.btreemap_ns > 0.0);
         assert!(c.soa_serial_ns > 0.0);
         assert!(c.tiled_parallel_ns > 0.0);
         assert!(c.plan_cached_ns > 0.0);
+        assert!(c.grouped_auto_ns > 0.0);
+        assert!(c.grouped_auto_tile >= 1);
+        assert!(c.tasks_grouped >= 1);
+        assert!(c.tasks_grouped <= c.tasks_per_diagonal.max(1));
+    }
+
+    #[test]
+    fn small_mixed_case_runs_and_agrees() {
+        let c = run_mixed_case(96, 24, 2, 1, &KernelOptions::default());
+        assert_eq!(c.workload, "mixed-band");
+        assert_eq!(c.diags, 25);
+        assert!(c.grouped_auto_ns > 0.0);
     }
 
     #[test]
     fn no_plan_cache_ablation_runs() {
         let opts = KernelOptions {
-            tile: 32,
+            tile: TileMode::Fixed(32),
             plan_cache: false,
         };
         let c = run_case(64, 2, 1, &opts);
@@ -283,24 +531,45 @@ mod tests {
     }
 
     #[test]
+    fn tile_sweep_renders() {
+        let s = tile_sweep(64, 3, 1);
+        assert!(s.contains("auto"));
+        assert!(s.contains("8Ki (default)"));
+        assert!(s.contains("vs serial"));
+    }
+
+    #[test]
     fn json_shape() {
         let cases = vec![KernelCase {
+            workload: "exp-offset",
             n: 4096,
             diags: 25,
             workers: 4,
             tile: 8192,
+            tile_mode: "fixed",
             btreemap_ns: 2e6,
             soa_serial_ns: 1e6,
             tiled_parallel_ns: 5e5,
             plan_cached_ns: 4e5,
+            grouped_auto_ns: 25e4,
+            grouped_auto_tile: 5461,
+            tasks_per_diagonal: 525,
+            tasks_grouped: 21,
         }];
         let j = to_json(&cases);
         assert!(j.contains("\"bench\": \"diag_mul_kernel\""));
+        assert!(j.contains("\"workload\": \"exp-offset\""));
         assert!(j.contains("\"n\": 4096"));
         assert!(j.contains("\"tile\": 8192"));
+        assert!(j.contains("\"tile_mode\": \"fixed\""));
+        assert!(j.contains("\"grouped_auto_tile\": 5461"));
+        assert!(j.contains("\"tasks_per_diagonal\": 525"));
+        assert!(j.contains("\"tasks_grouped\": 21"));
+        assert!(j.contains("\"task_reduction\": 25.000"));
         assert!(j.contains("\"speedup_soa_vs_seed\": 2.000"));
         assert!(j.contains("\"speedup_tiled_vs_seed\": 4.000"));
         assert!(j.contains("\"speedup_cached_vs_seed\": 5.000"));
+        assert!(j.contains("\"speedup_grouped_auto_vs_seed\": 8.000"));
         assert!(render_table(&cases).contains("4096"));
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations
-//! diamond kernel [--tile <elems>] [--no-plan-cache] [--smoke]
+//! diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
 //! diamond bench-all
 //! ```
@@ -108,18 +108,35 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             rep.engine.plan_cache_hits
         );
     }
+    if rep.engine.operand_copies_avoided > 0 {
+        println!(
+            "packed-operand path: {} freeze/thaw copies performed, {} avoided vs the per-call path",
+            rep.engine.operand_copies,
+            rep.engine.operand_copies_avoided
+        );
+    }
     Ok(())
 }
 
-/// `diamond kernel [--tile <elems>] [--no-plan-cache] [--smoke]` — the
-/// kernel microbenchmark with engine knobs exposed.
+/// `diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]` —
+/// the kernel microbenchmark with engine knobs exposed. `--tile auto`
+/// switches the tiled/cached columns to adaptive tiling **and** prints
+/// the tile sweep (fixed lengths vs the cache-derived one).
 fn cmd_kernel(args: &[String]) -> Result<(), String> {
+    use crate::linalg::TileMode;
     let mut opts = crate::bench_harness::kernel::KernelOptions::default();
+    let mut sweep = false;
     if let Some(t) = flag_value(args, "--tile") {
-        opts.tile = t
-            .parse::<usize>()
-            .map_err(|e| format!("--tile: {e}"))?
-            .max(1);
+        if t.eq_ignore_ascii_case("auto") {
+            opts.tile = TileMode::Auto;
+            sweep = true;
+        } else {
+            opts.tile = TileMode::Fixed(
+                t.parse::<usize>()
+                    .map_err(|e| format!("--tile: {e}"))?
+                    .max(1),
+            );
+        }
     }
     if args.iter().any(|a| a == "--no-plan-cache") {
         opts.plan_cache = false;
@@ -127,6 +144,10 @@ fn cmd_kernel(args: &[String]) -> Result<(), String> {
     let smoke = args.iter().any(|a| a == "--smoke");
     let cases = crate::bench_harness::kernel::run_suite_with(&opts, smoke);
     println!("{}", crate::bench_harness::kernel::render_table(&cases));
+    if sweep {
+        println!();
+        println!("{}", crate::bench_harness::kernel::tile_sweep(1 << 12, 11, 3));
+    }
     Ok(())
 }
 
@@ -184,7 +205,7 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             println!(
                 "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
                  commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
-                 kernel [--tile <elems>] [--no-plan-cache] [--smoke]\n  \
+                 kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]"
             );
             Ok(())

@@ -18,7 +18,7 @@ pub mod pool;
 pub mod server;
 
 use crate::baselines::{Accelerator, BaselineReport};
-use crate::format::DiagMatrix;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
 use crate::num::ONE;
 use crate::runtime::engine::{DiagEngine, EngineStats};
 use crate::sim::{DiamondDevice, SimConfig, SimReport};
@@ -117,30 +117,71 @@ impl Coordinator {
     }
 
     /// Compute values for `A·B` through the configured functional path.
-    /// The oracle path runs the Minkowski-planned, tiled packed kernel
-    /// across the worker pool; parallel execution is bit-identical to
-    /// serial, so job results stay deterministic. Plan-cache reuse is
-    /// surfaced through [`EngineStats::plan_cache_hits`] on both paths.
+    /// The oracle path runs the Minkowski-planned, tiled-and-scheduled
+    /// packed kernel across the worker pool; parallel execution is
+    /// bit-identical to serial, so job results stay deterministic.
+    /// Plan-cache reuse is surfaced through
+    /// [`EngineStats::plan_cache_hits`] on both paths.
     ///
-    /// Each call freezes both builder operands and thaws the result
-    /// (O(elements), same as before the engine refactor — the multiply
-    /// itself is O(mults) and dominates). A packed-operand coordinator
-    /// path that keeps the Taylor term frozen across `evolve` like
-    /// `taylor::expm_diag` does is a ROADMAP item.
+    /// This builder-faced convenience freezes both operands and thaws
+    /// the result — 3 `O(elements)` copies, counted in
+    /// [`EngineStats::operand_copies`]. Chained callers (the Taylor
+    /// evolution) use [`Coordinator::values_packed`] instead, which
+    /// keeps the running term packed and performs **zero** copies per
+    /// call on the oracle path.
     pub fn values(&self, a: &DiagMatrix, b: &DiagMatrix) -> Result<(DiagMatrix, EngineStats)> {
         match &self.functional {
             FunctionalMode::Pjrt(engine) => engine.spmspm(a, b),
             FunctionalMode::Oracle => {
-                let mut engine = self.kernel.lock().unwrap();
-                let hits_before = engine.stats().plan_cache_hits;
-                let (c, _stats) = engine.multiply(&a.freeze(), &b.freeze());
-                let stats = EngineStats {
-                    plan_cache_hits: engine.stats().plan_cache_hits - hits_before,
-                    ..EngineStats::default()
-                };
+                let (c, mut stats) = self.oracle_multiply(&a.freeze(), &b.freeze());
+                stats.operand_copies += 3; // freeze A, freeze B, thaw C
                 Ok((c.thaw(), stats))
             }
         }
+    }
+
+    /// [`Coordinator::values`] over packed operands. On the oracle path
+    /// the multiply runs directly on the SoA planes — no freeze/thaw
+    /// copies at all, with the 3 copies the legacy path would have paid
+    /// recorded in [`EngineStats::operand_copies_avoided`]. On the PJRT
+    /// path the executables marshal from the builder face, so the
+    /// operands are thawed and the result frozen (3 copies, counted in
+    /// [`EngineStats::operand_copies`]).
+    pub fn values_packed(
+        &self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> Result<(PackedDiagMatrix, EngineStats)> {
+        match &self.functional {
+            FunctionalMode::Pjrt(engine) => {
+                let (c, mut stats) = engine.spmspm(&a.thaw(), &b.thaw())?;
+                stats.operand_copies += 3; // thaw A, thaw B, freeze C
+                Ok((c.freeze(), stats))
+            }
+            FunctionalMode::Oracle => {
+                let (c, mut stats) = self.oracle_multiply(a, b);
+                stats.operand_copies_avoided += 3;
+                Ok((c, stats))
+            }
+        }
+    }
+
+    /// Shared oracle body: one multiply through the coordinator's cached
+    /// kernel engine, with the call's plan-cache hits extracted from the
+    /// engine's cumulative counters.
+    fn oracle_multiply(
+        &self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> (PackedDiagMatrix, EngineStats) {
+        let mut engine = self.kernel.lock().unwrap();
+        let hits_before = engine.stats().plan_cache_hits;
+        let (c, _stats) = engine.multiply(a, b);
+        let stats = EngineStats {
+            plan_cache_hits: engine.stats().plan_cache_hits - hits_before,
+            ..EngineStats::default()
+        };
+        (c, stats)
     }
 
     /// One coordinated SpMSpM: timing from the device, values from the
@@ -164,6 +205,21 @@ impl Coordinator {
     /// Taylor-series Hamiltonian evolution on a DIAMOND device.
     ///
     /// `iters == 0` derives the depth from the one-norm (Table II "Iter").
+    ///
+    /// The running Taylor term lives in the face its functional path
+    /// consumes, and never converts between faces inside the loop:
+    ///
+    /// * **Oracle** — packed end to end, like `taylor::expm_diag`:
+    ///   `A = −iHt` is frozen once up front (the chain's only
+    ///   `O(elements)` copy), the cycle model streams the term straight
+    ///   from its SoA planes ([`DiamondDevice::spmspm_packed_a`]) and
+    ///   values come from [`Coordinator::values_packed`]. Zero
+    ///   freeze/thaw copies per iteration — asserted through
+    ///   [`EngineStats::operand_copies`] /
+    ///   [`EngineStats::operand_copies_avoided`] in the report.
+    /// * **PJRT** — builder end to end (the executables marshal from
+    ///   the builder face), so that path performs zero format copies
+    ///   too, exactly as before the packed-operand refactor.
     pub fn evolve(
         &self,
         h: &DiagMatrix,
@@ -171,29 +227,46 @@ impl Coordinator {
         iters: usize,
         cfg: SimConfig,
     ) -> Result<EvolutionReport> {
+        /// The running term: still `A` itself (k = 1), or the face the
+        /// functional path produced.
+        enum Term {
+            InitialA,
+            Packed(PackedDiagMatrix),
+            Builder(DiagMatrix),
+        }
+
         let n = h.dim();
         let iters = if iters == 0 {
             taylor::iters_for(h, t, taylor::DEFAULT_TOL)
         } else {
             iters
         };
+        // The builder face of A feeds the device's B-side streams (and
+        // the whole PJRT path); the oracle path additionally freezes it
+        // once for the kernel engine.
         let a = h.scaled(-crate::num::I * t);
+        let oracle = matches!(self.functional, FunctionalMode::Oracle);
+        let ap = if oracle { Some(a.freeze()) } else { None };
 
         let mut device = DiamondDevice::new(cfg);
         let a_id = device.register_matrix();
-        let mut term = a.clone();
+        let mut term = Term::InitialA;
         let mut term_id = a_id;
         let mut sum = DiagMatrix::identity(n);
-        sum.add_assign_scaled(&term, ONE);
+        sum.add_assign_scaled(&a, ONE);
 
         let mut steps = Vec::with_capacity(iters);
         let mut total = SimReport::default();
-        let mut engine_total = EngineStats::default();
+        let mut engine_total = EngineStats {
+            // The oracle chain's one up-front freeze of A.
+            operand_copies: u64::from(oracle),
+            ..EngineStats::default()
+        };
 
         // k = 1 is `A` itself; chained SpMSpMs start at k = 2.
         steps.push(StepReport {
             k: 1,
-            term_nnzd: term.nnzd(),
+            term_nnzd: a.nnzd(),
             sum_nnzd: sum.nnzd(),
             sum_storage_saving: sum.storage_saving(),
             sim: SimReport::default(),
@@ -201,28 +274,57 @@ impl Coordinator {
 
         for k in 2..=iters {
             let c_id = device.register_matrix();
-            // Timing: the device executes term · A with stable ids so the
-            // cache sees the algorithmic reuse (B = A every step).
-            let (_timed, report) = device.spmspm(&term, term_id, &a, a_id, c_id);
+            // Timing: the device executes term · A with stable ids so
+            // the cache sees the algorithmic reuse (B = A every step).
+            // Values: the functional path, in its native face.
+            let (report, es, next) = if oracle {
+                let apr = ap.as_ref().expect("oracle mode froze A up front");
+                let tp = match &term {
+                    Term::Packed(p) => p,
+                    _ => apr,
+                };
+                let (_timed, report) = device.spmspm_packed_a(tp, term_id, &a, a_id, c_id);
+                let (mut next, es) = self.values_packed(tp, apr)?;
+                next.scale(ONE / k as f64);
+                next.prune(crate::format::diag::ZERO_TOL);
+                (report, es, Term::Packed(next))
+            } else {
+                let tb = match &term {
+                    Term::Builder(b) => b,
+                    _ => &a,
+                };
+                let (_timed, report) = device.spmspm(tb, term_id, &a, a_id, c_id);
+                let (next, es) = self.values(tb, &a)?;
+                let mut next = next.scaled(ONE / k as f64);
+                next.prune(crate::format::diag::ZERO_TOL);
+                (report, es, Term::Builder(next))
+            };
+            term = next;
+            term_id = c_id;
             total.accumulate(&report);
-
-            // Values: the functional path.
-            let (mut next, es) = self.values(&term, &a)?;
             engine_total.calls += es.calls;
             engine_total.exec_nanos += es.exec_nanos;
             engine_total.bucket_n = es.bucket_n.max(engine_total.bucket_n);
             engine_total.bucket_d = es.bucket_d.max(engine_total.bucket_d);
             engine_total.plan_cache_hits += es.plan_cache_hits;
+            engine_total.operand_copies += es.operand_copies;
+            engine_total.operand_copies_avoided += es.operand_copies_avoided;
 
-            next = next.scaled(ONE / k as f64);
-            next.prune(crate::format::diag::ZERO_TOL);
-            term = next;
-            term_id = c_id;
-            sum.add_assign_scaled(&term, ONE);
+            let term_nnzd = match &term {
+                Term::Packed(p) => {
+                    sum.add_assign_scaled_packed(p, ONE);
+                    p.nnzd()
+                }
+                Term::Builder(b) => {
+                    sum.add_assign_scaled(b, ONE);
+                    b.nnzd()
+                }
+                Term::InitialA => unreachable!("loop always replaces the term"),
+            };
 
             steps.push(StepReport {
                 k,
-                term_nnzd: term.nnzd(),
+                term_nnzd,
                 sum_nnzd: sum.nnzd(),
                 sum_storage_saving: sum.storage_saving(),
                 sim: report,
@@ -323,6 +425,56 @@ mod tests {
         let t = taylor::normalized_t(&h);
         let rep = coord.evolve(&h, t, 0, SimConfig::default()).unwrap();
         assert_eq!(rep.iters, taylor::iters_for(&h, t, taylor::DEFAULT_TOL));
+    }
+
+    #[test]
+    fn packed_evolve_performs_zero_copies_per_iteration_after_the_first() {
+        // The ROADMAP "packed-operand coordinator path" criterion: after
+        // the single up-front freeze of A, no oracle iteration may
+        // freeze or thaw an operand — and every iteration banks the 3
+        // copies the legacy per-call path would have paid.
+        let h = crate::ham::heisenberg::heisenberg(4, 1.0).matrix;
+        let iters = 6;
+        let coord = Coordinator::oracle();
+        let rep = coord.evolve(&h, 0.05, iters, SimConfig::default()).unwrap();
+        assert_eq!(
+            rep.engine.operand_copies, 1,
+            "only the up-front freeze of A is allowed: {:?}",
+            rep.engine
+        );
+        assert_eq!(
+            rep.engine.operand_copies_avoided,
+            3 * (iters as u64 - 1),
+            "each of the {} chained multiplies avoids 3 copies: {:?}",
+            iters - 1,
+            rep.engine
+        );
+        // The legacy builder-faced convenience still counts its copies.
+        let (_, es) = coord.values(&h, &h).unwrap();
+        assert_eq!(es.operand_copies, 3);
+        assert_eq!(es.operand_copies_avoided, 0);
+        // And the packed entry point performs none.
+        let hp = h.freeze();
+        let (_, esp) = coord.values_packed(&hp, &hp).unwrap();
+        assert_eq!(esp.operand_copies, 0);
+        assert_eq!(esp.operand_copies_avoided, 3);
+    }
+
+    #[test]
+    fn packed_evolve_matches_legacy_values_path() {
+        // Keeping the term packed must not change a single value: the
+        // evolution operator equals the taylor-module oracle, which
+        // chains the same packed kernel.
+        let h = crate::ham::fermi_hubbard::fermi_hubbard(4, 1.0, 2.0).matrix;
+        let coord = Coordinator::oracle();
+        let rep = coord.evolve(&h, 0.05, 6, SimConfig::default()).unwrap();
+        let oracle = taylor::expm_diag(&h, 0.05, 6).op;
+        assert!(
+            diag_to_dense(&rep.op).max_abs_diff(&diag_to_dense(&oracle)) < 1e-12
+        );
+        // Device timing still accumulated over all chained steps.
+        assert!(rep.total.grid.mults > 0);
+        assert_eq!(rep.steps.len(), 6);
     }
 
     #[test]

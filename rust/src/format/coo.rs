@@ -5,12 +5,17 @@ use crate::num::Complex;
 /// Coordinate-format sparse matrix: unordered `(row, col, value)` triplets.
 #[derive(Clone, Debug, Default)]
 pub struct CooMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// `(row, col, value)` triplets, in insertion order until
+    /// [`CooMatrix::coalesce`] sorts them.
     pub entries: Vec<(usize, usize, Complex)>,
 }
 
 impl CooMatrix {
+    /// An empty `rows × cols` matrix.
     pub fn new(rows: usize, cols: usize) -> Self {
         CooMatrix {
             rows,
@@ -19,6 +24,7 @@ impl CooMatrix {
         }
     }
 
+    /// Append one triplet (duplicates allowed until coalescing).
     pub fn push(&mut self, r: usize, c: usize, v: Complex) {
         debug_assert!(r < self.rows && c < self.cols);
         self.entries.push((r, c, v));
@@ -37,6 +43,7 @@ impl CooMatrix {
         self.entries = out;
     }
 
+    /// Stored-triplet count (duplicates counted until coalescing).
     pub fn nnz(&self) -> usize {
         self.entries.len()
     }

@@ -6,11 +6,15 @@ use crate::num::Complex;
 /// Compressed sparse row matrix.
 #[derive(Clone, Debug, Default)]
 pub struct CsrMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
     /// `rows + 1` row pointers into `col_idx` / `values`.
     pub row_ptr: Vec<usize>,
+    /// Column index of each stored value, row-major.
     pub col_idx: Vec<usize>,
+    /// Stored values, aligned with `col_idx`.
     pub values: Vec<Complex>,
 }
 
@@ -37,6 +41,7 @@ impl CsrMatrix {
         }
     }
 
+    /// Stored-value count.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }

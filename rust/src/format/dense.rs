@@ -5,12 +5,16 @@ use crate::num::{Complex, ZERO};
 /// A dense row-major `rows × cols` complex matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DenseMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major value storage (`rows · cols` entries).
     pub data: Vec<Complex>,
 }
 
 impl DenseMatrix {
+    /// An all-zero `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         DenseMatrix {
             rows,
@@ -19,6 +23,7 @@ impl DenseMatrix {
         }
     }
 
+    /// The `n × n` identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -27,6 +32,7 @@ impl DenseMatrix {
         m
     }
 
+    /// Build from a list of equal-length rows.
     pub fn from_rows(rows: Vec<Vec<Complex>>) -> Self {
         let r = rows.len();
         let c = rows.first().map_or(0, |row| row.len());
@@ -38,6 +44,7 @@ impl DenseMatrix {
         }
     }
 
+    /// Random access (row-major).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> Complex {
         self.data[r * self.cols + c]
@@ -61,6 +68,7 @@ impl DenseMatrix {
         out
     }
 
+    /// Matrix–vector product `self · x`.
     pub fn matvec(&self, x: &[Complex]) -> Vec<Complex> {
         assert_eq!(x.len(), self.cols);
         (0..self.rows)
@@ -87,6 +95,7 @@ impl DenseMatrix {
         out
     }
 
+    /// Max absolute entry difference against `rhs`.
     pub fn max_abs_diff(&self, rhs: &DenseMatrix) -> f64 {
         assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
         self.data

@@ -342,6 +342,22 @@ impl DiagMatrix {
 
     /// Snapshot into the packed split-plane (SoA) representation (one
     /// `O(elements)` copy). See the module docs for the layout.
+    ///
+    /// ```
+    /// use diamond::format::DiagMatrix;
+    /// use diamond::num::Complex;
+    ///
+    /// let mut m = DiagMatrix::zeros(4);
+    /// m.add_at(0, 1, Complex::real(2.0)); // offset +1
+    /// m.add_at(3, 3, Complex::real(-1.0)); // offset 0
+    /// let packed = m.freeze();
+    /// assert_eq!(packed.offsets(), &[0, 1][..]); // sorted offset table
+    /// assert_eq!(packed.stored_elements(), m.stored_elements());
+    /// // The planes split the same values the builder holds…
+    /// assert_eq!(packed.re_at(1), &[2.0, 0.0, 0.0][..]);
+    /// // …and thaw() round-trips exactly.
+    /// assert_eq!(packed.thaw(), m);
+    /// ```
     pub fn freeze(&self) -> PackedDiagMatrix {
         let total = self.stored_elements();
         let mut offsets = Vec::with_capacity(self.diags.len());
@@ -660,7 +676,18 @@ impl PackedDiagMatrix {
         self.offsets.len() * 8 + self.re.len() * 16
     }
 
-    /// Copy back into the mutable builder representation.
+    /// Copy back into the mutable builder representation (one
+    /// `O(elements)` copy — the inverse of [`DiagMatrix::freeze`]).
+    ///
+    /// ```
+    /// use diamond::format::{DiagMatrix, PackedDiagMatrix};
+    ///
+    /// let packed = PackedDiagMatrix::identity(3);
+    /// let builder = packed.thaw();
+    /// assert_eq!(builder, DiagMatrix::identity(3));
+    /// // freeze . thaw is the identity in both directions.
+    /// assert_eq!(builder.freeze().thaw(), builder);
+    /// ```
     pub fn thaw(&self) -> DiagMatrix {
         let mut out = DiagMatrix::zeros(self.n);
         for i in 0..self.offsets.len() {

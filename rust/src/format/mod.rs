@@ -4,6 +4,7 @@
 //! (offset-indexed, unpadded diagonals — Fig. 1 of the paper). [`csr`],
 //! [`coo`] and [`dense`] are conventional formats used by the baseline
 //! accelerators and as correctness oracles; [`convert`] moves between them.
+#![warn(missing_docs)]
 
 pub mod convert;
 pub mod coo;

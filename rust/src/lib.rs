@@ -19,13 +19,17 @@
 //! * [`linalg`] — reference SpMSpM algorithms (diagonal convolution,
 //!   Gustavson, outer-product, dense) with operation counting. The
 //!   diagonal-convolution path is a layered **kernel engine**
-//!   (`rust/src/linalg/README.md`): the Minkowski sum `D_A ⊕ D_B` is
+//!   (`docs/ARCHITECTURE.md`): the Minkowski sum `D_A ⊕ D_B` is
 //!   planned once into per-output-diagonal contribution lists
-//!   ([`linalg::diag_mul`]), cut into cache-sized tiles and executed
-//!   with one independent writer per tile across the worker pool
-//!   ([`linalg::engine`]) — bit-identical to serial — and plans are
-//!   cached across multiplications with identical offset structure
-//!   (the Taylor-chain steady state).
+//!   ([`linalg::diag_mul`]), cut into cache-sized tiles whose length is
+//!   fixed or derived from the detected cache and worker count
+//!   ([`linalg::engine::TileMode`]), coalesced into balanced pool tasks
+//!   by the work scheduler ([`linalg::engine::schedule_work`] — short
+//!   diagonals share a task, long ones keep their tiles), executed with
+//!   one independent writer per unit across the worker pool —
+//!   bit-identical to serial — and the whole decision chain is cached
+//!   across multiplications with identical offset structure (the
+//!   Taylor-chain steady state).
 //! * [`taylor`] — Taylor-series matrix exponentiation driver for
 //!   Hamiltonian simulation (`exp(-iHt)`).
 //! * [`sim`] — the cycle-accurate DIAMOND simulator: DPE grid, diagonal
@@ -41,6 +45,33 @@
 //!   evaluation section.
 //! * [`testutil`] — seeded PRNG + mini property-testing harness (offline
 //!   substitute for proptest).
+//!
+//! Architecture documentation — the plan → tile → schedule → execute
+//! pipeline, the module-to-paper map, the determinism contract and the
+//! statistics glossary — lives in `docs/ARCHITECTURE.md`; the repo
+//! `README.md` has the build/run/bench quickstart.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use diamond::format::DiagMatrix;
+//! use diamond::linalg::KernelEngine;
+//! use diamond::num::Complex;
+//!
+//! // A small tridiagonal matrix, built then frozen to the packed face.
+//! let mut h = DiagMatrix::zeros(16);
+//! for d in [-1i64, 0, 1] {
+//!     let len = DiagMatrix::diag_len(16, d);
+//!     h.set_diag(d, vec![Complex::real(0.5); len]);
+//! }
+//! let hp = h.freeze();
+//!
+//! // Multiply through the engine: plan → tile → schedule → execute.
+//! let mut engine = KernelEngine::with_defaults();
+//! let (c, stats) = engine.multiply(&hp, &hp);
+//! assert_eq!(c.offsets(), &[-2, -1, 0, 1, 2][..]); // Minkowski sum
+//! assert!(stats.mults > 0);
+//! ```
 
 pub mod baselines;
 pub mod bench_harness;

@@ -26,8 +26,10 @@
 //! The layered kernel *engine* ([`crate::linalg::engine`]) builds on
 //! these two phases: it tiles long output diagonals into cache-sized
 //! segments (several workers share one very long diagonal, still one
-//! writer per tile) and caches plans across Taylor iterations whose
-//! offset structure has stabilized.
+//! writer per tile), coalesces runs of short output diagonals into
+//! shared pool tasks ([`crate::linalg::engine::schedule_work`]), and
+//! caches plans across Taylor iterations whose offset structure has
+//! stabilized.
 //!
 //! This is the exact computation the DIAMOND DPE grid performs in
 //! hardware, so it doubles as the simulator's functional oracle. The
@@ -75,6 +77,7 @@ pub struct Contribution {
 /// the contributions cover (merged intervals — the true write count).
 #[derive(Clone, Debug)]
 pub struct OutDiagPlan {
+    /// Output diagonal offset `d_C = d_A + d_B`.
     pub offset: i64,
     /// Natural stored length `n − |offset|`.
     pub len: usize,
@@ -91,6 +94,7 @@ pub struct OutDiagPlan {
 /// because the term's offsets grow).
 #[derive(Clone, Debug)]
 pub struct MulPlan {
+    /// Operand/output dimension (all three matrices are `n × n`).
     pub n: usize,
     /// Output diagonals in ascending offset order.
     pub outs: Vec<OutDiagPlan>,
@@ -202,7 +206,7 @@ pub fn plan_diag_mul(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> MulPlan {
 ///
 /// Shared by the whole-diagonal executor ([`execute_plan`]) and the tiled
 /// executor ([`crate::linalg::engine`]), whose tasks pass `base > 0`.
-pub(crate) fn fill_window(
+pub fn fill_window(
     contribs: &[Contribution],
     base: usize,
     a: &PackedDiagMatrix,
@@ -232,9 +236,10 @@ pub(crate) fn fill_window(
 /// unobservable except in wall-clock).
 pub const PARALLEL_MULTS_THRESHOLD: usize = 16 * 1024;
 
-/// Phase 2: execute a plan. Each output diagonal is written by exactly
-/// one worker into its disjoint plane slice, so `workers > 1` fans out
-/// across [`crate::coordinator::pool::parallel_map`] with bit-identical
+/// Phase 2: execute a plan at **per-diagonal scheduling**. Each output
+/// diagonal is one pool task written by exactly one worker into its
+/// disjoint plane slice, so `workers > 1` fans out across
+/// [`crate::coordinator::pool::parallel_map`] with bit-identical
 /// results to `workers == 1`. Small plans (under
 /// [`PARALLEL_MULTS_THRESHOLD`] multiplies, or fewer than two output
 /// diagonals) skip the pool entirely. All-zero output diagonals are
@@ -242,7 +247,10 @@ pub const PARALLEL_MULTS_THRESHOLD: usize = 16 * 1024;
 ///
 /// Implemented as the degenerate case of the tiled executor
 /// ([`crate::linalg::engine::execute_tiled`]) with one tile per output
-/// diagonal — one code path, one carve/assemble implementation.
+/// diagonal — one code path, one carve/assemble implementation. This is
+/// also the baseline the engine's coalescing scheduler
+/// ([`crate::linalg::engine::schedule_work`]) is measured against in
+/// `BENCH_kernel.json`.
 pub fn execute_plan(
     plan: &MulPlan,
     a: &PackedDiagMatrix,

@@ -1,34 +1,44 @@
-//! The layered diagonal-SpMSpM **kernel engine**: tiled execution of
-//! Minkowski plans plus cross-multiplication plan caching.
+//! The layered diagonal-SpMSpM **kernel engine**: adaptive tiling and
+//! work scheduling of Minkowski plans plus cross-multiplication plan
+//! caching.
 //!
-//! The engine stacks three layers (see `rust/src/linalg/README.md` for a
-//! diagram):
+//! The engine stacks four layers (see `docs/ARCHITECTURE.md` for the
+//! full diagram and the module-to-paper map):
 //!
 //! 1. **Format layer** — [`crate::format::PackedDiagMatrix`] stores its
 //!    values as split re/im planes (structure-of-arrays), so the
 //!    per-diagonal multiply-accumulate ([`diag_mul::fill_window`]) runs
 //!    over contiguous `f64` streams and autovectorizes. The interleaved
 //!    `Complex` layout stays the API face via accessor shims.
-//! 2. **Execution layer** — [`tile_plan`] splits every output diagonal of
+//! 2. **Tiling layer** — [`tile_plan`] splits every output diagonal of
 //!    a [`MulPlan`] into cache-sized tiles using the
 //!    [`crate::sim::blocking`] row/col geometry ([`rowcol_blocking`] →
 //!    [`Window`]s), so several workers from
 //!    [`crate::coordinator::pool`] can share one very long output
-//!    diagonal. Each tile still has **exactly one writer**, and every
-//!    output element accumulates its contributions in plan order, so
-//!    tiled-parallel execution is bit-identical to serial (asserted by
-//!    the repo property tests).
-//! 3. **Caching layer** — [`KernelEngine`] owns a keyed [`PlanCache`]:
-//!    plans are memoized on `(D_A offsets, D_B offsets, n)`. A Taylor
-//!    chain whose term offset structure has stabilized (the common case
-//!    after a few iterations — the Minkowski sum saturates at the matrix
-//!    bandwidth) reuses the previous plan *and* its tiling instead of
-//!    re-planning; hits are reported through [`KernelStats`].
+//!    diagonal. The tile length is either fixed or derived per plan from
+//!    the detected cache size and worker count ([`TileMode`]).
+//! 3. **Scheduling layer** — [`schedule_work`] coalesces runs of short
+//!    tile tasks into [`WorkUnit`]s (the pool-task granularity), the
+//!    software analogue of [`crate::sim::blocking::DiagGroup`] batching
+//!    on the simulated device: a plan with thousands of tiny output
+//!    diagonals submits one pool task per *group*, not per diagonal,
+//!    while long diagonals keep their cache-sized tiles. Each unit still
+//!    has **exactly one writer**, and every output element accumulates
+//!    its contributions in plan order, so grouped parallel execution is
+//!    bit-identical to serial (asserted by the repo property tests).
+//! 4. **Caching layer** — [`KernelEngine`] owns a keyed plan cache:
+//!    plans are memoized on `(D_A offsets, D_B offsets, n)` *together
+//!    with their tiling and schedule*. A Taylor chain whose term offset
+//!    structure has stabilized (the common case after a few iterations —
+//!    the Minkowski sum saturates at the matrix bandwidth) reuses the
+//!    previous plan, tiling and schedule instead of re-planning; hits
+//!    are reported through [`KernelStats`].
 //!
 //! Correctness contract: for identical operands, every path — untiled
 //! serial ([`diag_mul::execute_plan`] with one worker), tiled serial,
-//! tiled parallel at any worker count and any tile size, and a
-//! cache-hit replay — produces **bit-identical** output planes.
+//! tiled parallel at any worker count, any tile mode and any grouping
+//! budget, and a cache-hit replay — produces **bit-identical** output
+//! planes.
 
 use super::diag_mul::{
     self, plan_diag_mul, Contribution, MulPlan, PARALLEL_MULTS_THRESHOLD,
@@ -38,18 +48,133 @@ use crate::format::diag::ZERO_TOL;
 use crate::format::PackedDiagMatrix;
 use crate::sim::blocking::{rowcol_blocking, Window};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
-/// Default tile length (elements per tile). At 16 bytes per complex
+/// Default tile length (elements per tile) for [`TileMode::Fixed`]
+/// callers that want the historical knob. At 16 bytes per complex
 /// element across one output and two operand streams, an 8 Ki-element
 /// tile keeps a task's working set comfortably inside a per-core L2
 /// while leaving enough tiles to load-balance long diagonals.
+/// [`TileMode::Auto`] derives the equivalent number from the machine it
+/// runs on instead.
 pub const DEFAULT_TILE: usize = 8 * 1024;
 
 /// Upper bound on cached plans before the cache is dropped wholesale
 /// (Taylor chains need a handful of entries; this is a leak guard, not a
 /// working-set tuning knob).
 pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 32;
+
+/// Cache bytes assumed when the sysfs probe fails (a conventional
+/// per-core L2); see [`detected_cache_bytes`].
+pub const FALLBACK_CACHE_BYTES: usize = 256 * 1024;
+
+/// Bytes the SoA kernel streams per output element: four operand `f64`
+/// streams in ([`diag_mul::fill_window`]'s `ar/ai/br/bi`) and two output
+/// streams out (`wr/wi`).
+pub const KERNEL_BYTES_PER_ELEM: usize = 6 * 8;
+
+/// Smallest tile [`TileMode::Auto`] will pick: below this the per-tile
+/// bookkeeping (contribution clipping, slice carving) stops being
+/// amortized by the multiply-accumulate work inside the tile.
+pub const MIN_AUTO_TILE: usize = 1024;
+
+/// Tiles the auto mode aims to give every worker on a large plan, so
+/// the pool can rebalance when diagonals finish at different speeds.
+pub const AUTO_TILES_PER_WORKER: usize = 4;
+
+/// Smallest element budget [`group_budget`] will coalesce to: one pool
+/// task is only worth submitting if it carries at least a default
+/// tile's worth of work.
+pub const MIN_GROUP_BUDGET: usize = DEFAULT_TILE;
+
+/// How the engine derives the tile length a plan is cut with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileMode {
+    /// Cut tiles of exactly this many elements (the pre-scheduler
+    /// behavior; `Fixed(DEFAULT_TILE)` reproduces it bit-for-bit).
+    Fixed(usize),
+    /// Derive the tile per plan from the detected per-core cache size,
+    /// the engine's worker count and the plan's total output size (see
+    /// [`auto_tile`]). Results are bit-identical to any fixed tile —
+    /// only wall-clock changes.
+    Auto,
+}
+
+impl TileMode {
+    /// Resolve to a concrete tile length for a plan with `total_elems`
+    /// output elements executed across `workers` workers.
+    pub fn resolve(self, total_elems: usize, workers: usize) -> usize {
+        match self {
+            TileMode::Fixed(t) => t.max(1),
+            TileMode::Auto => auto_tile(total_elems, workers, detected_cache_bytes()),
+        }
+    }
+}
+
+/// Parse a sysfs cache-size string (`"512K"`, `"1M"`, `"32768"`).
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match *s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .map(|v| v.saturating_mul(mult))
+        .filter(|&v| v > 0)
+}
+
+/// Probe the per-core cache size from Linux sysfs (`index2` is the
+/// per-core L2 on x86 and most ARM parts).
+fn probe_cache_bytes() -> Option<usize> {
+    std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index2/size")
+        .ok()
+        .and_then(|s| parse_cache_size(&s))
+}
+
+/// Detected per-core cache size in bytes, probed once per process from
+/// sysfs and falling back to [`FALLBACK_CACHE_BYTES`] on non-Linux
+/// hosts (or restricted containers). This is the budget
+/// [`TileMode::Auto`] sizes a tile's working set against.
+pub fn detected_cache_bytes() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| probe_cache_bytes().unwrap_or(FALLBACK_CACHE_BYTES))
+}
+
+/// The adaptive tile length: the largest tile whose six-stream working
+/// set fits the cache budget, shrunk (down to [`MIN_AUTO_TILE`]) when
+/// the plan is small enough that cache-sized tiles would leave workers
+/// idle. Pure in its inputs, so a cached schedule replays identically.
+pub fn auto_tile(total_elems: usize, workers: usize, cache_bytes: usize) -> usize {
+    let cache_tile = (cache_bytes / KERNEL_BYTES_PER_ELEM).max(MIN_AUTO_TILE);
+    let spread = workers.max(1).saturating_mul(AUTO_TILES_PER_WORKER);
+    let balance_tile = (total_elems / spread.max(1)).max(MIN_AUTO_TILE);
+    cache_tile.min(balance_tile)
+}
+
+/// The element budget one [`WorkUnit`] coalesces up to: at least a tile
+/// (a unit must not split below its own tiles), at least
+/// [`MIN_GROUP_BUDGET`] (so thousands of tiny diagonals collapse into
+/// few pool tasks), and at least `total / (workers × 4)` — but capped
+/// at `total / workers` (floored at one tile) so coalescing never
+/// leaves the pool with fewer units than workers on a plan big enough
+/// to fan out.
+pub fn group_budget(tile: usize, total_elems: usize, workers: usize) -> usize {
+    let workers = workers.max(1);
+    let spread = workers.saturating_mul(AUTO_TILES_PER_WORKER);
+    let budget = tile
+        .max(total_elems / spread.max(1))
+        .max(MIN_GROUP_BUDGET);
+    // Parallelism guard: with the floor alone, a plan whose output is
+    // small relative to `workers × MIN_GROUP_BUDGET` (but whose
+    // multiply count still clears the fan-out threshold) would collapse
+    // into fewer units than workers. Cap the budget so every worker
+    // can hold a unit whenever the plan has that much work to give out.
+    budget.min((total_elems / workers).max(tile).max(1))
+}
 
 /// One tile of one output diagonal: the window `[lo, hi)` of the
 /// diagonal's storage frame plus the plan contributions clipped to it
@@ -67,16 +192,111 @@ pub struct TileTask {
     pub contribs: Vec<Contribution>,
 }
 
-/// A [`MulPlan`] cut into cache-sized tile tasks; the executable form the
-/// engine fans out across the worker pool.
+/// A [`MulPlan`] cut into cache-sized tile tasks; the unit-of-work pool
+/// the scheduling layer groups into [`WorkUnit`]s.
 #[derive(Clone, Debug)]
 pub struct TilePlan {
-    /// Tile length the plan was cut with.
+    /// Tile length the plan was cut with (already resolved from the
+    /// engine's [`TileMode`]).
     pub tile: usize,
     /// Tasks in arena order: output diagonals ascending, tiles ascending
     /// within each diagonal (so the executor can carve the output planes
     /// sequentially).
     pub tasks: Vec<TileTask>,
+}
+
+/// One pool task of a [`WorkSchedule`]: the contiguous run
+/// `tasks[task_lo .. task_hi]` of a [`TilePlan`], executed start to end
+/// by a single worker. Because tile tasks are in arena order, a unit
+/// owns one contiguous slice of the output planes — the one-writer
+/// determinism contract is preserved at any grouping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// First tile task of the unit (index into [`TilePlan::tasks`]).
+    pub task_lo: usize,
+    /// One past the last tile task of the unit.
+    pub task_hi: usize,
+    /// Total output elements the unit writes (the sum of its tasks'
+    /// window lengths — the carve width in the output planes).
+    pub elems: usize,
+}
+
+/// A balanced work schedule over a [`TilePlan`]: short tile tasks
+/// (typically whole short output diagonals) coalesced into shared
+/// [`WorkUnit`]s, long-diagonal tiles kept as their own units. Built by
+/// [`schedule_work`], cached next to the plan in [`KernelEngine`], and
+/// executed by [`execute_scheduled`].
+#[derive(Clone, Debug)]
+pub struct WorkSchedule {
+    /// Element budget the units were coalesced to (see [`group_budget`]).
+    pub budget: usize,
+    /// Units in arena order, jointly partitioning every tile task.
+    pub units: Vec<WorkUnit>,
+}
+
+impl WorkSchedule {
+    /// The degenerate schedule: one unit per tile task (the pre-scheduler
+    /// pool granularity — every output diagonal, or tile of one, is its
+    /// own pool task).
+    pub fn per_task(tiles: &TilePlan) -> WorkSchedule {
+        WorkSchedule {
+            budget: 0,
+            units: tiles
+                .tasks
+                .iter()
+                .enumerate()
+                .map(|(t, task)| WorkUnit {
+                    task_lo: t,
+                    task_hi: t + 1,
+                    elems: task.hi - task.lo,
+                })
+                .collect(),
+        }
+    }
+
+    /// Pool tasks this schedule submits (`units.len()`).
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    /// True when the schedule carries no work at all.
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+}
+
+/// Coalesce consecutive tile tasks into [`WorkUnit`]s of at most
+/// `budget` output elements (a single task larger than the budget keeps
+/// its own unit). Greedy and order-preserving: units partition
+/// `tiles.tasks` into contiguous runs, so the executor's plane carving
+/// and per-element accumulation order are exactly those of per-task
+/// execution — grouping is unobservable except in pool-task count.
+pub fn schedule_work(tiles: &TilePlan, budget: usize) -> WorkSchedule {
+    let budget = budget.max(1);
+    let mut units = Vec::new();
+    let mut lo = 0usize;
+    let mut acc = 0usize;
+    for (t, task) in tiles.tasks.iter().enumerate() {
+        let len = task.hi - task.lo;
+        if t > lo && acc + len > budget {
+            units.push(WorkUnit {
+                task_lo: lo,
+                task_hi: t,
+                elems: acc,
+            });
+            lo = t;
+            acc = 0;
+        }
+        acc += len;
+    }
+    if lo < tiles.tasks.len() {
+        units.push(WorkUnit {
+            task_lo: lo,
+            task_hi: tiles.tasks.len(),
+            elems: acc,
+        });
+    }
+    WorkSchedule { budget, units }
 }
 
 /// Clip a contribution to the tile window `[lo, hi)` of its output
@@ -126,15 +346,31 @@ pub fn tile_plan(plan: &MulPlan, tile: usize) -> TilePlan {
     TilePlan { tile, tasks }
 }
 
-/// Execute a tiled plan: every tile is written by exactly one worker into
-/// its disjoint slice of the output re/im planes, so any worker count and
-/// any tile size produce bit-identical results (each output element's
-/// contributions land in plan order regardless of how the diagonal was
-/// cut). Plans under [`PARALLEL_MULTS_THRESHOLD`] multiplies run the
-/// tiles serially, skipping thread spawn cost.
+/// Execute a tiled plan at per-task pool granularity (one pool task per
+/// tile — the pre-scheduler behavior, and the "per-diagonal" baseline
+/// when the plan was tiled with `tile = usize::MAX`). Bit-identical to
+/// [`execute_scheduled`] under any schedule.
 pub fn execute_tiled(
     plan: &MulPlan,
     tiles: &TilePlan,
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    workers: usize,
+) -> (PackedDiagMatrix, OpStats) {
+    execute_scheduled(plan, tiles, &WorkSchedule::per_task(tiles), a, b, workers)
+}
+
+/// Execute a tiled plan under a [`WorkSchedule`]: every unit is written
+/// by exactly one worker into its disjoint slice of the output re/im
+/// planes, so any worker count, any tile size and any grouping budget
+/// produce bit-identical results (each output element's contributions
+/// land in plan order regardless of how the diagonal was cut or the
+/// tasks were grouped). Plans under [`PARALLEL_MULTS_THRESHOLD`]
+/// multiplies run the units serially, skipping thread spawn cost.
+pub fn execute_scheduled(
+    plan: &MulPlan,
+    tiles: &TilePlan,
+    sched: &WorkSchedule,
     a: &PackedDiagMatrix,
     b: &PackedDiagMatrix,
     workers: usize,
@@ -147,35 +383,48 @@ pub fn execute_tiled(
     };
 
     let fan_out =
-        workers > 1 && tiles.tasks.len() > 1 && plan.mults >= PARALLEL_MULTS_THRESHOLD;
+        workers > 1 && sched.units.len() > 1 && plan.mults >= PARALLEL_MULTS_THRESHOLD;
     let total: usize = plan.outs.iter().map(|o| o.len).sum();
     let mut re = vec![0f64; total];
     let mut im = vec![0f64; total];
     {
-        // Carve both planes into one disjoint mutable slice per tile
-        // (tasks are in arena order and jointly cover every diagonal).
+        // Carve both planes into one disjoint mutable slice per unit
+        // (units are contiguous task runs in arena order and jointly
+        // cover every diagonal).
         let mut rest_re: &mut [f64] = &mut re;
         let mut rest_im: &mut [f64] = &mut im;
         let mut items: Vec<(usize, &mut [f64], &mut [f64])> =
-            Vec::with_capacity(tiles.tasks.len());
-        for (t, task) in tiles.tasks.iter().enumerate() {
-            let len = task.hi - task.lo;
-            let (head_re, tail_re) = std::mem::take(&mut rest_re).split_at_mut(len);
-            let (head_im, tail_im) = std::mem::take(&mut rest_im).split_at_mut(len);
-            items.push((t, head_re, head_im));
+            Vec::with_capacity(sched.units.len());
+        for (u, unit) in sched.units.iter().enumerate() {
+            let (head_re, tail_re) = std::mem::take(&mut rest_re).split_at_mut(unit.elems);
+            let (head_im, tail_im) = std::mem::take(&mut rest_im).split_at_mut(unit.elems);
+            items.push((u, head_re, head_im));
             rest_re = tail_re;
             rest_im = tail_im;
         }
         debug_assert!(rest_re.is_empty() && rest_im.is_empty());
+        let run_unit = |(u, dst_re, dst_im): (usize, &mut [f64], &mut [f64])| {
+            let unit = &sched.units[u];
+            let mut off = 0usize;
+            for task in &tiles.tasks[unit.task_lo..unit.task_hi] {
+                let len = task.hi - task.lo;
+                diag_mul::fill_window(
+                    &task.contribs,
+                    task.lo,
+                    a,
+                    b,
+                    &mut dst_re[off..off + len],
+                    &mut dst_im[off..off + len],
+                );
+                off += len;
+            }
+            debug_assert_eq!(off, unit.elems);
+        };
         if fan_out {
-            crate::coordinator::pool::parallel_map(items, workers, |(t, dst_re, dst_im)| {
-                let task = &tiles.tasks[t];
-                diag_mul::fill_window(&task.contribs, task.lo, a, b, dst_re, dst_im);
-            });
+            crate::coordinator::pool::parallel_map(items, workers, run_unit);
         } else {
-            for (t, dst_re, dst_im) in items {
-                let task = &tiles.tasks[t];
-                diag_mul::fill_window(&task.contribs, task.lo, a, b, dst_re, dst_im);
+            for item in items {
+                run_unit(item);
             }
         }
     }
@@ -191,15 +440,21 @@ pub fn execute_tiled(
     (c, stats)
 }
 
-/// Engine configuration: tile geometry, fan-out width, plan caching.
+/// Engine configuration: tile geometry, work coalescing, fan-out width,
+/// plan caching.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
-    /// Tile length in elements (see [`DEFAULT_TILE`]).
-    pub tile: usize,
-    /// Worker fan-out for tile execution (1 = serial).
+    /// Tile derivation mode (see [`TileMode`]; default [`TileMode::Auto`]).
+    pub tile: TileMode,
+    /// Worker fan-out for unit execution (1 = serial).
     pub workers: usize,
-    /// Reuse plans across multiplications with identical offset
-    /// structure (the Taylor-chain fast path).
+    /// Coalesce short tile tasks into shared [`WorkUnit`]s (default on;
+    /// off restores one pool task per tile — useful as an ablation,
+    /// results are bit-identical either way).
+    pub coalesce: bool,
+    /// Reuse plans (with their tiling and schedule) across
+    /// multiplications with identical offset structure (the Taylor-chain
+    /// fast path).
     pub cache_plans: bool,
     /// Plan-cache entry bound (cache is cleared when full).
     pub cache_capacity: usize,
@@ -208,8 +463,9 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            tile: DEFAULT_TILE,
+            tile: TileMode::Auto,
             workers: crate::coordinator::pool::default_workers(),
+            coalesce: true,
             cache_plans: true,
             cache_capacity: DEFAULT_PLAN_CACHE_CAPACITY,
         }
@@ -217,19 +473,26 @@ impl Default for EngineConfig {
 }
 
 /// Cumulative engine counters (saturating; reported up through
-/// `taylor::expm_diag` and the coordinator).
+/// `taylor::expm_diag` and the coordinator). What each counter counts —
+/// and how it relates to [`OpStats`](crate::linalg::OpStats) and the
+/// runtime's [`EngineStats`](crate::runtime::engine::EngineStats) — is
+/// documented in one place: `docs/ARCHITECTURE.md` §Statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct KernelStats {
     /// Multiplications executed through the engine.
     pub multiplies: u64,
-    /// Plans built from scratch ([`plan_diag_mul`] + [`tile_plan`]).
+    /// Plans built from scratch ([`plan_diag_mul`] + [`tile_plan`] +
+    /// [`schedule_work`]).
     pub plans_built: u64,
     /// Multiplications served by a cached plan.
     pub plan_cache_hits: u64,
     /// Cache lookups that missed (caching enabled, no entry).
     pub plan_cache_misses: u64,
-    /// Tile tasks executed.
+    /// Tile tasks executed (the tiling-layer granularity).
     pub tiles_executed: u64,
+    /// Work units scheduled (the pool-task granularity; with coalescing
+    /// off this equals `tiles_executed`).
+    pub units_scheduled: u64,
 }
 
 /// Cache key: a plan is fully determined by the operand offset sets and
@@ -241,22 +504,42 @@ struct PlanKey {
     b_offsets: Vec<i64>,
 }
 
-/// A memoized plan plus its tiling (both depend only on the key and the
-/// engine's tile length).
+/// A memoized plan plus its tiling and work schedule (all three depend
+/// only on the key and the engine configuration, so a cache hit replays
+/// the entire decision chain).
 #[derive(Debug)]
 pub struct PlannedProduct {
+    /// The Minkowski-sum contribution plan.
     pub plan: MulPlan,
+    /// The plan cut into cache-sized tiles.
     pub tiles: TilePlan,
+    /// The tiles coalesced into pool-task work units.
+    pub schedule: WorkSchedule,
 }
 
 /// Keyed plan memo — the engine's caching layer.
 type PlanCache = HashMap<PlanKey, Arc<PlannedProduct>>;
 
-/// The reusable kernel engine: plan (with cache) + tiled execute.
+/// The reusable kernel engine: plan (with cache) → tile → schedule →
+/// execute.
 ///
 /// One engine instance per logical multiplication stream (a Taylor chain,
 /// a coordinator); it is `Send`, so callers that share one across threads
 /// wrap it in a `Mutex` (planning is cheap relative to execution).
+///
+/// ```
+/// use diamond::format::DiagMatrix;
+/// use diamond::linalg::KernelEngine;
+///
+/// let a = DiagMatrix::identity(8).freeze();
+/// let mut engine = KernelEngine::with_defaults();
+/// let (c, stats) = engine.multiply(&a, &a);
+/// assert_eq!(c.offsets(), &[0][..]);
+/// assert_eq!(stats.mults, 8);
+/// // Same offset structure again: the plan cache serves the replay.
+/// engine.multiply(&a, &a);
+/// assert_eq!(engine.stats().plan_cache_hits, 1);
+/// ```
 pub struct KernelEngine {
     cfg: EngineConfig,
     cache: PlanCache,
@@ -264,6 +547,7 @@ pub struct KernelEngine {
 }
 
 impl KernelEngine {
+    /// Engine with an explicit configuration.
     pub fn new(cfg: EngineConfig) -> Self {
         KernelEngine {
             cfg,
@@ -272,27 +556,31 @@ impl KernelEngine {
         }
     }
 
-    /// Engine with [`EngineConfig::default`] (pool-wide workers, default
-    /// tile, caching on).
+    /// Engine with [`EngineConfig::default`] (pool-wide workers, auto
+    /// tile, coalescing and caching on).
     pub fn with_defaults() -> Self {
         Self::new(EngineConfig::default())
     }
 
+    /// The engine's configuration.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
     }
 
+    /// Cumulative counters since construction (or the last reset).
     pub fn stats(&self) -> &KernelStats {
         &self.stats
     }
 
+    /// Zero the cumulative counters (the plan cache is kept).
     pub fn reset_stats(&mut self) {
         self.stats = KernelStats::default();
     }
 
-    /// Plan `a · b`, serving from the cache when the offset structure has
-    /// been seen before (bit-identical products either way — a plan is a
-    /// pure function of the key).
+    /// Plan `a · b` — Minkowski plan, tiling and work schedule — serving
+    /// from the cache when the offset structure has been seen before
+    /// (bit-identical products either way: a planned product is a pure
+    /// function of the key and the engine configuration).
     pub fn plan(&mut self, a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Arc<PlannedProduct> {
         // Checked here, not just in plan_diag_mul: a cache hit must fail
         // on mismatched operands exactly like a fresh plan (the key's
@@ -322,13 +610,24 @@ impl KernelEngine {
 
     fn build(&mut self, a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Arc<PlannedProduct> {
         let plan = plan_diag_mul(a, b);
-        let tiles = tile_plan(&plan, self.cfg.tile);
+        let total: usize = plan.outs.iter().map(|o| o.len).sum();
+        let tile = self.cfg.tile.resolve(total, self.cfg.workers);
+        let tiles = tile_plan(&plan, tile);
+        let schedule = if self.cfg.coalesce {
+            schedule_work(&tiles, group_budget(tile, total, self.cfg.workers))
+        } else {
+            WorkSchedule::per_task(&tiles)
+        };
         self.stats.plans_built = self.stats.plans_built.saturating_add(1);
-        Arc::new(PlannedProduct { plan, tiles })
+        Arc::new(PlannedProduct {
+            plan,
+            tiles,
+            schedule,
+        })
     }
 
-    /// Multiply through the full engine stack: cached plan → tiled
-    /// execution across the worker pool.
+    /// Multiply through the full engine stack: cached plan → tiled,
+    /// scheduled execution across the worker pool.
     pub fn multiply(
         &mut self,
         a: &PackedDiagMatrix,
@@ -340,7 +639,18 @@ impl KernelEngine {
             .stats
             .tiles_executed
             .saturating_add(planned.tiles.tasks.len() as u64);
-        execute_tiled(&planned.plan, &planned.tiles, a, b, self.cfg.workers)
+        self.stats.units_scheduled = self
+            .stats
+            .units_scheduled
+            .saturating_add(planned.schedule.units.len() as u64);
+        execute_scheduled(
+            &planned.plan,
+            &planned.tiles,
+            &planned.schedule,
+            a,
+            b,
+            self.cfg.workers,
+        )
     }
 }
 
@@ -403,7 +713,46 @@ mod tests {
     }
 
     #[test]
-    fn tiled_execution_matches_untiled_bitwise() {
+    fn schedule_units_partition_tasks_and_respect_budget() {
+        let a = band(300, 4);
+        let b = band(300, 3);
+        let plan = plan_diag_mul(&a, &b);
+        for tile in [1usize, 17, 64, 100_000] {
+            let tp = tile_plan(&plan, tile);
+            for budget in [1usize, 7, 100, 1_000_000] {
+                let sched = schedule_work(&tp, budget);
+                // Units are contiguous, ordered and jointly cover every task.
+                let mut next = 0usize;
+                for u in &sched.units {
+                    assert_eq!(u.task_lo, next, "tile={tile} budget={budget}");
+                    assert!(u.task_hi > u.task_lo);
+                    let elems: usize = tp.tasks[u.task_lo..u.task_hi]
+                        .iter()
+                        .map(|t| t.hi - t.lo)
+                        .sum();
+                    assert_eq!(elems, u.elems);
+                    // A unit only exceeds the budget when a single task does.
+                    assert!(
+                        u.elems <= budget || u.task_hi - u.task_lo == 1,
+                        "tile={tile} budget={budget} unit {u:?}"
+                    );
+                    next = u.task_hi;
+                }
+                assert_eq!(next, tp.tasks.len());
+                // Greedy maximality: two adjacent units never fit one budget
+                // (otherwise the scheduler under-coalesced).
+                for w in sched.units.windows(2) {
+                    assert!(w[0].elems + (tp.tasks[w[1].task_lo].hi - tp.tasks[w[1].task_lo].lo) > budget);
+                }
+            }
+        }
+        // Empty plans schedule to nothing.
+        let empty = tile_plan(&plan_diag_mul(&PackedDiagMatrix::zeros(8), &band(8, 1)), 4);
+        assert!(schedule_work(&empty, 16).is_empty());
+    }
+
+    #[test]
+    fn scheduled_execution_matches_untiled_bitwise() {
         let a = band(300, 4);
         let b = band(300, 3);
         let (want, want_stats) = packed_diag_mul_counted(&a, &b);
@@ -415,8 +764,58 @@ mod tests {
                 assert_eq!(got.offsets(), want.offsets(), "tile={tile}");
                 assert_eq!(got.arena(), want.arena(), "tile={tile} workers={workers}");
                 assert_eq!(stats, want_stats);
+                for budget in [1usize, 100, 5_000] {
+                    let sched = schedule_work(&tp, budget);
+                    let (grouped, g_stats) =
+                        execute_scheduled(&plan, &tp, &sched, &a, &b, workers);
+                    assert_eq!(
+                        grouped.arena(),
+                        want.arena(),
+                        "tile={tile} budget={budget} workers={workers}"
+                    );
+                    assert_eq!(g_stats, want_stats);
+                }
             }
         }
+    }
+
+    #[test]
+    fn auto_tile_derivation_bounds() {
+        // Cache-bound on big plans…
+        assert_eq!(auto_tile(usize::MAX / 2, 1, 256 * 1024), 256 * 1024 / KERNEL_BYTES_PER_ELEM);
+        // …balance-bound on small plans, floored at MIN_AUTO_TILE.
+        assert_eq!(auto_tile(100, 4, 256 * 1024), MIN_AUTO_TILE);
+        let t = auto_tile(1 << 20, 4, 1 << 30);
+        assert_eq!(t, (1 << 20) / (4 * AUTO_TILES_PER_WORKER));
+        // Degenerate inputs stay sane.
+        assert!(auto_tile(0, 0, 0) >= MIN_AUTO_TILE);
+        // Resolution is pure: same inputs, same tile.
+        assert_eq!(
+            TileMode::Auto.resolve(1 << 22, 3),
+            TileMode::Auto.resolve(1 << 22, 3)
+        );
+        assert_eq!(TileMode::Fixed(40).resolve(1 << 22, 3), 40);
+        // The group budget never drops below the tile…
+        assert_eq!(group_budget(1 << 20, 100, 2), 1 << 20);
+        // …applies the coalescing floor on small plans (where fan-out
+        // would not trigger anyway)…
+        assert_eq!(group_budget(16, 100, 2), 16.max(100 / 2));
+        // …and on big plans is capped so the pool never gets fewer
+        // units than workers: 8 workers × 41k elements → ≤ total/8.
+        let b = group_budget(1281, 41_000, 8);
+        assert!(b <= 41_000 / 8, "budget {b} would starve the pool");
+        assert!(b >= 1281, "budget {b} must not split below a tile");
+    }
+
+    #[test]
+    fn cache_size_parsing() {
+        assert_eq!(parse_cache_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_cache_size(" 1M\n"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("32768"), Some(32768));
+        assert_eq!(parse_cache_size("0K"), None);
+        assert_eq!(parse_cache_size("bogus"), None);
+        assert_eq!(parse_cache_size(""), None);
+        assert!(detected_cache_bytes() > 0);
     }
 
     #[test]
@@ -424,7 +823,7 @@ mod tests {
         let a = band(96, 3);
         let b = band(96, 2);
         let mut eng = KernelEngine::new(EngineConfig {
-            tile: 40,
+            tile: TileMode::Fixed(40),
             workers: 1,
             ..EngineConfig::default()
         });
@@ -468,6 +867,48 @@ mod tests {
         off.multiply(&a, &b);
         assert_eq!(off.stats().plan_cache_hits, 0);
         assert_eq!(off.stats().plans_built, 2, "caching off must re-plan");
+    }
+
+    #[test]
+    fn coalescing_reduces_units_and_stays_bit_identical() {
+        // A short-diagonal-heavy workload: the grouped schedule must
+        // submit far fewer pool tasks than per-tile scheduling while
+        // reproducing its output bitwise.
+        let n = 256;
+        let mut am = DiagMatrix::zeros(n);
+        am.set_diag(0, vec![ONE; n]);
+        for k in 1..=(n as i64 - 1) {
+            if k % 2 == 1 {
+                let d = n as i64 - k;
+                let len = DiagMatrix::diag_len(n, d);
+                am.set_diag(d, vec![Complex::new(0.1, 0.2); len]);
+            }
+        }
+        let a = am.freeze();
+        let mut grouped = KernelEngine::new(EngineConfig {
+            workers: 1,
+            ..EngineConfig::default()
+        });
+        let mut per_tile = KernelEngine::new(EngineConfig {
+            workers: 1,
+            coalesce: false,
+            ..EngineConfig::default()
+        });
+        let (cg, _) = grouped.multiply(&a, &a);
+        let (cp, _) = per_tile.multiply(&a, &a);
+        assert_eq!(cg.offsets(), cp.offsets());
+        assert_eq!(cg.arena(), cp.arena(), "grouping must be unobservable");
+        assert!(
+            grouped.stats().units_scheduled < per_tile.stats().units_scheduled,
+            "grouped {} !< per-tile {}",
+            grouped.stats().units_scheduled,
+            per_tile.stats().units_scheduled
+        );
+        assert_eq!(
+            per_tile.stats().units_scheduled,
+            per_tile.stats().tiles_executed,
+            "coalescing off means one unit per tile"
+        );
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! merges, traffic) that the baseline accelerator cycle models consume.
 //!
 //! The diagonal-convolution path is layered as a reusable **kernel
-//! engine** (see `rust/src/linalg/README.md`): [`diag_mul`] holds the
-//! plan/execute phases over the SoA packed format, [`engine`] adds tiled
-//! execution of long output diagonals and cross-multiplication plan
-//! caching.
+//! engine** (see `docs/ARCHITECTURE.md`): [`diag_mul`] holds the
+//! plan/execute phases over the SoA packed format, [`engine`] adds
+//! adaptive tiling of long output diagonals ([`engine::TileMode`]),
+//! coalesced scheduling of short ones ([`engine::schedule_work`]) and
+//! cross-multiplication plan caching.
+#![warn(missing_docs)]
 
 pub mod diag_mul;
 pub mod engine;
@@ -19,11 +21,16 @@ pub use diag_mul::{
     diag_mul, diag_mul_counted, diag_mul_parallel, diag_mul_reference, execute_plan,
     packed_diag_mul_counted, packed_diag_mul_parallel, plan_diag_mul, MulPlan,
 };
-pub use engine::{EngineConfig, KernelEngine, KernelStats};
+pub use engine::{EngineConfig, KernelEngine, KernelStats, TileMode, WorkSchedule};
 pub use gustavson::gustavson_mul;
 pub use outer::outer_mul;
 
 /// Operation statistics collected by a reference SpMSpM execution.
+///
+/// Counter semantics (post-PR-1 merged-window accounting) are defined in
+/// one place, `docs/ARCHITECTURE.md` §Statistics, together with the
+/// engine-level [`KernelStats`] and the coordinator-level
+/// [`EngineStats`](crate::runtime::engine::EngineStats).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpStats {
     /// Scalar multiply–accumulate operations actually performed.
@@ -32,8 +39,10 @@ pub struct OpStats {
     pub merge_adds: usize,
     /// Elements read from the operand matrices.
     pub reads: usize,
-    /// Elements written to the output (including partial products that a
-    /// dataflow must spill — outer-product pays these).
+    /// Elements written to the output, counted as **merged contribution
+    /// windows** — distinct covered elements, not zero-filled diagonal
+    /// tails and not one write per contribution (outer-product baselines
+    /// additionally pay spilled partials here).
     pub writes: usize,
 }
 

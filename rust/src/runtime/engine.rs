@@ -11,13 +11,18 @@ use crate::num::Complex;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-/// Statistics of one engine-level SpMSpM.
+/// Statistics of one engine-level SpMSpM (or, accumulated, of a whole
+/// evolution). Counter semantics are defined in one place,
+/// `docs/ARCHITECTURE.md` §Statistics, next to the kernel-level
+/// [`KernelStats`](crate::linalg::KernelStats) and the operation-level
+/// [`OpStats`](crate::linalg::OpStats).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     /// PJRT executable invocations.
     pub calls: u64,
     /// Bucket used for the bulk of the calls.
     pub bucket_n: usize,
+    /// Diagonal capacity of that bucket.
     pub bucket_d: usize,
     /// Wall time spent inside PJRT execute.
     pub exec_nanos: u128,
@@ -27,6 +32,17 @@ pub struct EngineStats {
     /// cache. Taylor chains whose offset structure has stabilized hit on
     /// every late iteration.
     pub plan_cache_hits: u64,
+    /// `O(elements)` operand/result format copies (freeze or thaw) the
+    /// functional path actually performed around this call. The legacy
+    /// builder-faced path pays 3 per call (freeze A, freeze B, thaw C);
+    /// the packed-operand evolve path pays 1 up front for the whole
+    /// chain and 0 per iteration after that.
+    pub operand_copies: u64,
+    /// Freeze/thaw copies the legacy per-call path would have performed
+    /// but the packed-operand path avoided (3 per multiply served
+    /// entirely on packed operands) — the counter behind the ROADMAP
+    /// "packed-operand coordinator path" item.
+    pub operand_copies_avoided: u64,
 }
 
 /// Row-aligned f32 planes of a chunk of diagonals.

@@ -10,8 +10,15 @@
 use crate::format::DiagMatrix;
 
 /// A diagonal group: offsets assigned to grid rows/columns in feed order.
+///
+/// This batching idea — many short diagonals sharing one hardware task —
+/// is mirrored in software by the kernel engine's coalescing scheduler
+/// ([`crate::linalg::engine::schedule_work`]), which groups short output
+/// diagonals into shared pool tasks the same way the device groups
+/// operand diagonals onto its grid.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DiagGroup {
+    /// Offsets of the group, in feed order.
     pub offsets: Vec<i64>,
 }
 
@@ -90,8 +97,19 @@ pub struct BlockPlan {
 impl BlockPlan {
     /// Plan a multiplication under `cfg`, with feed orders applied.
     pub fn plan(a: &DiagMatrix, b: &DiagMatrix, cfg: &super::config::SimConfig) -> BlockPlan {
-        let mut a_off = a.offsets();
-        let mut b_off = b.offsets();
+        Self::plan_offsets(a.dim(), a.offsets(), b.offsets(), cfg)
+    }
+
+    /// Plan from the structural facts alone: the dimension and the two
+    /// offset sets (ascending). A block plan never inspects values, so
+    /// callers holding a packed operand (the Taylor chain's running
+    /// term) can plan without thawing it into a builder.
+    pub fn plan_offsets(
+        n: usize,
+        mut a_off: Vec<i64>,
+        mut b_off: Vec<i64>,
+        cfg: &super::config::SimConfig,
+    ) -> BlockPlan {
         match cfg.a_order {
             super::config::FeedOrder::Ascending => {}
             super::config::FeedOrder::Descending => a_off.reverse(),
@@ -103,12 +121,9 @@ impl BlockPlan {
         let a_groups = diagonal_blocking(&a_off, cfg.group_size.min(cfg.max_cols));
         let b_groups = diagonal_blocking(&b_off, cfg.group_size.min(cfg.max_rows));
         let windows = if cfg.segment_len == usize::MAX {
-            vec![Window {
-                lo: 0,
-                hi: a.dim(),
-            }]
+            vec![Window { lo: 0, hi: n }]
         } else {
-            rowcol_blocking(a.dim(), cfg.segment_len)
+            rowcol_blocking(n, cfg.segment_len)
         };
         let grid_cols = a_groups.iter().map(|g| g.offsets.len()).max().unwrap_or(1);
         let grid_rows = b_groups.iter().map(|g| g.offsets.len()).max().unwrap_or(1);
@@ -184,6 +199,33 @@ mod tests {
         assert_eq!(plan.a_groups.len(), 6); // 21 diagonals / 4
         assert_eq!(plan.b_groups.len(), 3); // 21 / 8
         assert_eq!(plan.task_count(), 18);
+    }
+
+    #[test]
+    fn plan_offsets_matches_builder_plan() {
+        // The packed-operand timing path plans from offsets alone; it
+        // must produce exactly the geometry the builder path produces.
+        let mut a = DiagMatrix::zeros(24);
+        let mut b = DiagMatrix::zeros(24);
+        for d in [-7i64, -1, 0, 3, 11] {
+            a.set_diag(d, vec![ONE; DiagMatrix::diag_len(24, d)]);
+        }
+        for d in [-2i64, 0, 5] {
+            b.set_diag(d, vec![ONE; DiagMatrix::diag_len(24, d)]);
+        }
+        let cfg = SimConfig {
+            max_rows: 2,
+            max_cols: 3,
+            group_size: 2,
+            segment_len: 7,
+            ..SimConfig::default()
+        };
+        let via_builder = BlockPlan::plan(&a, &b, &cfg);
+        let via_offsets = BlockPlan::plan_offsets(24, a.offsets(), b.offsets(), &cfg);
+        assert_eq!(via_builder.a_groups, via_offsets.a_groups);
+        assert_eq!(via_builder.b_groups, via_offsets.b_groups);
+        assert_eq!(via_builder.windows, via_offsets.windows);
+        assert_eq!(via_builder.task_count(), via_offsets.task_count());
     }
 
     #[test]

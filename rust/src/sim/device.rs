@@ -10,9 +10,9 @@
 
 use super::blocking::BlockPlan;
 use super::config::SimConfig;
-use super::grid::{DiagStream, GridSim, GridStats};
+use super::grid::{DiagOperand, GridSim, GridStats};
 use super::memory::{GroupCache, LineId, MemStats};
-use crate::format::DiagMatrix;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
 
 /// Stable identity of a matrix as cacheable content.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -84,9 +84,38 @@ impl DiamondDevice {
         b_id: MatrixId,
         c_id: MatrixId,
     ) -> (DiagMatrix, SimReport) {
+        self.spmspm_operands(a, a_id, b, b_id, c_id)
+    }
+
+    /// [`DiamondDevice::spmspm`] with a **packed** A operand: the Taylor
+    /// chain's running term feeds the timing model straight from its SoA
+    /// planes (streams are element-identical to the thawed equivalent,
+    /// so the report is too — asserted in tests). This is what lets
+    /// `Coordinator::evolve` keep the term packed across iterations.
+    pub fn spmspm_packed_a(
+        &mut self,
+        a: &PackedDiagMatrix,
+        a_id: MatrixId,
+        b: &DiagMatrix,
+        b_id: MatrixId,
+        c_id: MatrixId,
+    ) -> (DiagMatrix, SimReport) {
+        self.spmspm_operands(a, a_id, b, b_id, c_id)
+    }
+
+    /// The shared execution loop, generic over the operand faces (see
+    /// [`DiagOperand`]).
+    fn spmspm_operands<A: DiagOperand + ?Sized, B: DiagOperand + ?Sized>(
+        &mut self,
+        a: &A,
+        a_id: MatrixId,
+        b: &B,
+        b_id: MatrixId,
+        c_id: MatrixId,
+    ) -> (DiagMatrix, SimReport) {
         let n = a.dim();
         assert_eq!(n, b.dim());
-        let plan = BlockPlan::plan(a, b, &self.cfg);
+        let plan = BlockPlan::plan_offsets(n, a.offsets_vec(), b.offsets_vec(), &self.cfg);
         let mut c = DiagMatrix::zeros(n);
         let mut report = SimReport::default();
         let mem_before = self.cache.stats;
@@ -105,7 +134,7 @@ impl DiamondDevice {
                     // --- memory: per-diagonal reads through group lines ---
                     let mut a_streams = Vec::with_capacity(a_grp.offsets.len());
                     for &d in &a_grp.offsets {
-                        let s = DiagStream::from_matrix_cols(a, d, w.lo, w.hi);
+                        let s = a.stream_cols(d, w.lo, w.hi);
                         self.cache.read(
                             LineId {
                                 matrix: a_id.0,
@@ -118,7 +147,7 @@ impl DiamondDevice {
                     }
                     let mut b_streams = Vec::with_capacity(b_grp.offsets.len());
                     for &d in &b_grp.offsets {
-                        let s = DiagStream::from_matrix(b, d, w.lo, w.hi);
+                        let s = b.stream_rows(d, w.lo, w.hi);
                         self.cache.read(
                             LineId {
                                 matrix: b_id.0,
@@ -282,6 +311,55 @@ mod tests {
         // Second run: B=H is resident from the first run.
         assert!(rep2.mem.hit_rate() > 0.3, "rate {}", rep2.mem.hit_rate());
         let _ = n;
+    }
+
+    #[test]
+    fn packed_a_operand_times_identically() {
+        // Two fresh devices, same id sequence: the packed-A path must
+        // produce the same values and the same activity report as the
+        // builder path (streams are element-identical).
+        prop_check("spmspm_packed_a == spmspm", 8, |rng| {
+            let n = rng.gen_range(8, 40);
+            let a = random_diag(rng, n, 6);
+            let b = random_diag(rng, n, 6);
+            let cfg = SimConfig {
+                max_rows: 3,
+                max_cols: 2,
+                group_size: 3,
+                segment_len: rng.gen_range(3, 12),
+                ..SimConfig::default()
+            };
+            let mut dev_b = DiamondDevice::new(cfg.clone());
+            let ids_b = (
+                dev_b.register_matrix(),
+                dev_b.register_matrix(),
+                dev_b.register_matrix(),
+            );
+            let (c_b, rep_b) = dev_b.spmspm(&a, ids_b.0, &b, ids_b.1, ids_b.2);
+
+            let mut dev_p = DiamondDevice::new(cfg);
+            let ids_p = (
+                dev_p.register_matrix(),
+                dev_p.register_matrix(),
+                dev_p.register_matrix(),
+            );
+            let (c_p, rep_p) = dev_p.spmspm_packed_a(&a.freeze(), ids_p.0, &b, ids_p.1, ids_p.2);
+
+            if c_b.max_abs_diff(&c_p) > 0.0 {
+                return Err("values differ".into());
+            }
+            if rep_b.grid.cycles != rep_p.grid.cycles
+                || rep_b.grid.mults != rep_p.grid.mults
+                || rep_b.tasks != rep_p.tasks
+                || rep_b.peak_active_pes != rep_p.peak_active_pes
+                || rep_b.mem.hits != rep_p.mem.hits
+                || rep_b.mem.misses != rep_p.mem.misses
+                || rep_b.mem.cycles != rep_p.mem.cycles
+            {
+                return Err(format!("reports differ: {rep_b:?} vs {rep_p:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -10,7 +10,8 @@
 
 use super::accumulator::AccumulatorBank;
 use super::dpe::{Action, Dpe, Elem, Token};
-use crate::format::DiagMatrix;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
+use crate::num::Complex;
 use std::collections::VecDeque;
 
 /// An elastic FIFO whose hot path is the (almost always sufficient)
@@ -56,24 +57,54 @@ pub struct DiagStream {
     pub elems: Vec<Elem>,
 }
 
+/// Which element coordinate a blocking window filters on: rows for B
+/// operands, columns for A operands (the inner index of each side).
+#[derive(Clone, Copy)]
+enum WindowAxis {
+    Rows,
+    Cols,
+}
+
 impl DiagStream {
-    /// Build the stream for diagonal `offset` of `m`, restricted to
-    /// element rows `[row_lo, row_hi)` (row/col-wise blocking window).
-    pub fn from_matrix(m: &DiagMatrix, offset: i64, row_lo: usize, row_hi: usize) -> DiagStream {
-        let vals = m.diag(offset).expect("diagonal must exist");
+    /// The one stream builder behind all four public constructors:
+    /// expand diagonal `offset` (of length `len`, values supplied by
+    /// `value_at`) to explicit coordinates, keeping the elements whose
+    /// `axis` coordinate falls in `[lo, hi)`. Builder and packed
+    /// operands go through this same loop, so their streams are
+    /// element-for-element identical.
+    fn filtered(
+        offset: i64,
+        len: usize,
+        value_at: impl Fn(usize) -> Complex,
+        axis: WindowAxis,
+        lo: usize,
+        hi: usize,
+    ) -> DiagStream {
         let mut elems = Vec::new();
-        for (k, &v) in vals.iter().enumerate() {
+        for k in 0..len {
             let i = DiagMatrix::row_of(offset, k);
-            if i < row_lo || i >= row_hi {
+            let j = DiagMatrix::col_of(offset, k);
+            let key = match axis {
+                WindowAxis::Rows => i,
+                WindowAxis::Cols => j,
+            };
+            if key < lo || key >= hi {
                 continue;
             }
             elems.push(Elem {
                 i: i as u32,
-                j: DiagMatrix::col_of(offset, k) as u32,
-                v,
+                j: j as u32,
+                v: value_at(k),
             });
         }
         DiagStream { offset, elems }
+    }
+
+    /// Build the stream for diagonal `offset` of `m`, restricted to
+    /// element rows `[row_lo, row_hi)` (row/col-wise blocking window).
+    pub fn from_matrix(m: &DiagMatrix, offset: i64, row_lo: usize, row_hi: usize) -> DiagStream {
+        let vals = m.diag(offset).expect("diagonal must exist");
+        Self::filtered(offset, vals.len(), |k| vals[k], WindowAxis::Rows, row_lo, row_hi)
     }
 
     /// Build the stream restricted to element *columns* `[col_lo, col_hi)`
@@ -82,24 +113,114 @@ impl DiagStream {
     /// [`DiagStream::from_matrix`]).
     pub fn from_matrix_cols(m: &DiagMatrix, offset: i64, col_lo: usize, col_hi: usize) -> DiagStream {
         let vals = m.diag(offset).expect("diagonal must exist");
-        let mut elems = Vec::new();
-        for (k, &v) in vals.iter().enumerate() {
-            let j = DiagMatrix::col_of(offset, k);
-            if j < col_lo || j >= col_hi {
-                continue;
-            }
-            elems.push(Elem {
-                i: DiagMatrix::row_of(offset, k) as u32,
-                j: j as u32,
-                v,
-            });
-        }
-        DiagStream { offset, elems }
+        Self::filtered(offset, vals.len(), |k| vals[k], WindowAxis::Cols, col_lo, col_hi)
     }
 
     /// Full-diagonal stream.
     pub fn full(m: &DiagMatrix, offset: i64) -> DiagStream {
         Self::from_matrix(m, offset, 0, m.dim())
+    }
+
+    /// [`DiagStream::from_matrix`] for a packed operand: identical
+    /// elements (bit-for-bit — `freeze` copies values verbatim), read
+    /// straight from the SoA planes so the Taylor chain's running term
+    /// feeds the timing model without thawing.
+    pub fn from_packed(
+        m: &PackedDiagMatrix,
+        offset: i64,
+        row_lo: usize,
+        row_hi: usize,
+    ) -> DiagStream {
+        let i = m.index_of(offset).expect("diagonal must exist");
+        let (re, im) = (m.re_at(i), m.im_at(i));
+        Self::filtered(
+            offset,
+            re.len(),
+            |k| Complex::new(re[k], im[k]),
+            WindowAxis::Rows,
+            row_lo,
+            row_hi,
+        )
+    }
+
+    /// [`DiagStream::from_matrix_cols`] for a packed operand (column
+    /// window — the A-side filter under row/col-wise blocking).
+    pub fn from_packed_cols(
+        m: &PackedDiagMatrix,
+        offset: i64,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> DiagStream {
+        let i = m.index_of(offset).expect("diagonal must exist");
+        let (re, im) = (m.re_at(i), m.im_at(i));
+        Self::filtered(
+            offset,
+            re.len(),
+            |k| Complex::new(re[k], im[k]),
+            WindowAxis::Cols,
+            col_lo,
+            col_hi,
+        )
+    }
+}
+
+/// Operand representations the timing model can stream diagonals from.
+///
+/// Implemented by the builder [`DiagMatrix`] and the packed snapshot
+/// [`PackedDiagMatrix`], so [`crate::sim::DiamondDevice`] accepts either
+/// face — in particular, the Taylor chain's running term stays packed
+/// across `Coordinator::evolve` instead of being thawed once per
+/// iteration just to feed the cycle model. Streams built from the two
+/// faces of the same matrix are element-for-element identical, so the
+/// resulting [`SimReport`](super::device::SimReport)s are too.
+pub trait DiagOperand {
+    /// Matrix dimension.
+    fn dim(&self) -> usize;
+    /// Stored-diagonal count (NNZD).
+    fn nnzd(&self) -> usize;
+    /// Sorted stored offsets.
+    fn offsets_vec(&self) -> Vec<i64>;
+    /// Stream of diagonal `d` restricted to element rows `[lo, hi)`
+    /// (the B-side window filter).
+    fn stream_rows(&self, d: i64, lo: usize, hi: usize) -> DiagStream;
+    /// Stream of diagonal `d` restricted to element columns `[lo, hi)`
+    /// (the A-side window filter).
+    fn stream_cols(&self, d: i64, lo: usize, hi: usize) -> DiagStream;
+}
+
+impl DiagOperand for DiagMatrix {
+    fn dim(&self) -> usize {
+        DiagMatrix::dim(self)
+    }
+    fn nnzd(&self) -> usize {
+        DiagMatrix::nnzd(self)
+    }
+    fn offsets_vec(&self) -> Vec<i64> {
+        self.offsets()
+    }
+    fn stream_rows(&self, d: i64, lo: usize, hi: usize) -> DiagStream {
+        DiagStream::from_matrix(self, d, lo, hi)
+    }
+    fn stream_cols(&self, d: i64, lo: usize, hi: usize) -> DiagStream {
+        DiagStream::from_matrix_cols(self, d, lo, hi)
+    }
+}
+
+impl DiagOperand for PackedDiagMatrix {
+    fn dim(&self) -> usize {
+        PackedDiagMatrix::dim(self)
+    }
+    fn nnzd(&self) -> usize {
+        PackedDiagMatrix::nnzd(self)
+    }
+    fn offsets_vec(&self) -> Vec<i64> {
+        self.offsets().to_vec()
+    }
+    fn stream_rows(&self, d: i64, lo: usize, hi: usize) -> DiagStream {
+        DiagStream::from_packed(self, d, lo, hi)
+    }
+    fn stream_cols(&self, d: i64, lo: usize, hi: usize) -> DiagStream {
+        DiagStream::from_packed_cols(self, d, lo, hi)
     }
 }
 
@@ -698,6 +819,31 @@ mod tests {
             };
             assert!(res.c.get(i, i).approx_eq(expect, 1e-12), "i={i}");
         }
+    }
+
+    #[test]
+    fn packed_streams_match_builder_streams() {
+        // The packed-operand timing path must feed the grid the exact
+        // element sequences the builder path feeds.
+        let mut rng = XorShift64::new(9);
+        let m = random_diag(&mut rng, 14, 5);
+        let p = m.freeze();
+        for &d in &m.offsets() {
+            for (lo, hi) in [(0usize, 14usize), (3, 9), (13, 14), (5, 5)] {
+                let rows_b = DiagStream::from_matrix(&m, d, lo, hi);
+                let rows_p = DiagStream::from_packed(&p, d, lo, hi);
+                assert_eq!(rows_b.offset, rows_p.offset);
+                assert_eq!(rows_b.elems, rows_p.elems, "d={d} rows [{lo},{hi})");
+                let cols_b = DiagStream::from_matrix_cols(&m, d, lo, hi);
+                let cols_p = DiagStream::from_packed_cols(&p, d, lo, hi);
+                assert_eq!(cols_b.elems, cols_p.elems, "d={d} cols [{lo},{hi})");
+            }
+        }
+        // And through the trait face used by the device.
+        use super::DiagOperand;
+        assert_eq!(DiagOperand::offsets_vec(&m), DiagOperand::offsets_vec(&p));
+        assert_eq!(DiagOperand::dim(&m), DiagOperand::dim(&p));
+        assert_eq!(DiagOperand::nnzd(&m), DiagOperand::nnzd(&p));
     }
 
     #[test]

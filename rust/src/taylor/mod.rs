@@ -87,10 +87,21 @@ pub struct TaylorResult {
 /// kernel across the worker pool (bit-identical to serial execution, so
 /// results are deterministic regardless of thread count). Because the
 /// term's offset set saturates after a few iterations, later steps hit
-/// the engine's plan cache instead of re-planning — reported in
-/// [`TaylorResult::kernel`]. Only the accumulated sum lives in the
-/// builder representation, fed by
+/// the engine's plan cache instead of re-planning (and reuse its tiling
+/// and work schedule with it) — reported in [`TaylorResult::kernel`].
+/// Only the accumulated sum lives in the builder representation, fed by
 /// [`DiagMatrix::add_assign_scaled_packed`].
+///
+/// ```
+/// use diamond::format::DiagMatrix;
+/// use diamond::taylor::expm_diag;
+///
+/// // exp(0) == I at any truncation depth.
+/// let r = expm_diag(&DiagMatrix::zeros(4), 1.0, 3);
+/// assert!(r.op.max_abs_diff(&DiagMatrix::identity(4)) < 1e-15);
+/// // Every Taylor step ran through the kernel engine.
+/// assert_eq!(r.kernel.multiplies, 3);
+/// ```
 pub fn expm_diag(h: &DiagMatrix, t: f64, iters: usize) -> TaylorResult {
     let n = h.dim();
     // A = −iHt, frozen once for the whole chain.

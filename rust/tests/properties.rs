@@ -261,7 +261,7 @@ fn soa_engine_matches_interleaved_and_dense_oracle() {
     // The SoA tiled engine, the seed interleaved BTreeMap kernel, and
     // the dense oracle agree on band and ±2^q structures at any tile
     // size and worker count.
-    use diamond::linalg::{EngineConfig, KernelEngine};
+    use diamond::linalg::{EngineConfig, KernelEngine, TileMode};
     prop_check("SoA engine == interleaved == dense", 16, |rng| {
         let n = rng.gen_range(2, 48);
         let (a, b) = if rng.gen_bool(0.5) {
@@ -273,7 +273,7 @@ fn soa_engine_matches_interleaved_and_dense_oracle() {
             (random_diag(rng, n, 6), random_diag(rng, n, 6))
         };
         let mut eng = KernelEngine::new(EngineConfig {
-            tile: rng.gen_range(1, 64),
+            tile: TileMode::Fixed(rng.gen_range(1, 64)),
             workers: rng.gen_range(1, 5),
             ..EngineConfig::default()
         });
@@ -296,7 +296,7 @@ fn tiled_parallel_execution_is_bit_identical_to_serial() {
     // Determinism of the execution layer: any tile size × any worker
     // count reproduces the untiled serial kernel bitwise (n large enough
     // that most cases cross the fan-out threshold).
-    use diamond::linalg::{EngineConfig, KernelEngine};
+    use diamond::linalg::{EngineConfig, KernelEngine, TileMode};
     prop_check("tiled parallel == serial, bitwise", 8, |rng| {
         let n = rng.gen_range(512, 1536);
         let a = random_diag(rng, n, 8).freeze();
@@ -304,7 +304,7 @@ fn tiled_parallel_execution_is_bit_identical_to_serial() {
         let (serial, s_stats) = packed_diag_mul_counted(&a, &b);
         for tile in [1usize, 63, 1024, 1 << 20] {
             let mut eng = KernelEngine::new(EngineConfig {
-                tile,
+                tile: TileMode::Fixed(tile),
                 workers: rng.gen_range(2, 9),
                 ..EngineConfig::default()
             });
@@ -322,13 +322,13 @@ fn tiled_parallel_execution_is_bit_identical_to_serial() {
 
 #[test]
 fn plan_cache_hit_is_bit_identical_to_fresh_plan() {
-    use diamond::linalg::{EngineConfig, KernelEngine};
+    use diamond::linalg::{EngineConfig, KernelEngine, TileMode};
     prop_check("plan-cache hit == fresh plan, bitwise", 12, |rng| {
         let n = rng.gen_range(4, 96);
         let a = random_diag(rng, n, 6).freeze();
         let b = random_diag(rng, n, 6).freeze();
         let mut eng = KernelEngine::new(EngineConfig {
-            tile: rng.gen_range(1, 128),
+            tile: TileMode::Fixed(rng.gen_range(1, 128)),
             workers: rng.gen_range(1, 4),
             ..EngineConfig::default()
         });
@@ -342,6 +342,118 @@ fn plan_cache_hit_is_bit_identical_to_fresh_plan() {
         }
         if r_stats != f_stats {
             return Err("cache-hit stats differ".into());
+        }
+        Ok(())
+    });
+}
+
+/// Operands for the mixed band-length property tests: the full main
+/// diagonal plus a random subset of extreme offsets `±(n−16..n−1)` —
+/// i.e. many diagonals of length 1..16 next to one of length n, the
+/// band-length distribution the coalescing scheduler targets.
+fn random_mixed_band(rng: &mut XorShift64, n: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    let vals = |rng: &mut XorShift64, len: usize| -> Vec<Complex> {
+        (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect()
+    };
+    let v = vals(rng, n);
+    m.set_diag(0, v);
+    for k in 1..=16i64.min(n as i64 - 1) {
+        for sign in [1i64, -1] {
+            if rng.gen_bool(0.6) {
+                let d = sign * (n as i64 - k);
+                let len = DiagMatrix::diag_len(n, d);
+                let v = vals(rng, len);
+                m.set_diag(d, v);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn grouped_execution_equals_per_diagonal_and_seed_bitwise() {
+    // The scheduling-layer contract on its target workload: coalesced
+    // execution == per-diagonal execution == the seed BTreeMap kernel,
+    // compared BITWISE (all three accumulate in (d_A asc, d_B asc)
+    // order with the same f64 operation sequence).
+    use diamond::linalg::{EngineConfig, KernelEngine, TileMode};
+    prop_check("grouped == per-diagonal == seed, bitwise", 12, |rng| {
+        let n = rng.gen_range(24, 72);
+        let a = random_mixed_band(rng, n);
+        let b = random_mixed_band(rng, n);
+        let ap = a.freeze();
+        let bp = b.freeze();
+        // Per-diagonal scheduling (one pool task per output diagonal).
+        let (per_diag, pd_stats) = packed_diag_mul_counted(&ap, &bp);
+        // Grouped execution at several (tile mode × budget-shaping
+        // worker count) points, coalescing on.
+        for tile in [TileMode::Fixed(rng.gen_range(1, 32)), TileMode::Auto] {
+            let mut eng = KernelEngine::new(EngineConfig {
+                tile,
+                workers: rng.gen_range(1, 5),
+                ..EngineConfig::default()
+            });
+            let (grouped, g_stats) = eng.multiply(&ap, &bp);
+            if grouped.offsets() != per_diag.offsets() {
+                return Err(format!("n={n} {tile:?}: offsets differ"));
+            }
+            if grouped.arena() != per_diag.arena() {
+                return Err(format!("n={n} {tile:?}: grouped differs bitwise"));
+            }
+            if g_stats != pd_stats {
+                return Err(format!("n={n} {tile:?}: stats differ"));
+            }
+        }
+        // Seed BTreeMap kernel, bitwise per stored diagonal (the seed
+        // keeps all-zero diagonals and zero tails; compare on the
+        // packed result's support).
+        let seed = diag_mul_reference(&a, &b);
+        for (i, &d) in per_diag.offsets().iter().enumerate() {
+            let want = match seed.diag(d) {
+                Some(w) => w,
+                None => return Err(format!("n={n}: seed missing offset {d}")),
+            };
+            let got = per_diag.values_at(i);
+            for (k, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                if g.re.to_bits() != w.re.to_bits() || g.im.to_bits() != w.im.to_bits() {
+                    return Err(format!("n={n} d={d} k={k}: {g:?} != {w:?} bitwise"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn auto_tile_is_bit_identical_to_every_fixed_tile() {
+    // TileMode::Auto is a wall-clock decision only: at any worker
+    // count its product equals every fixed tile in the sweep, bitwise.
+    use diamond::linalg::{EngineConfig, KernelEngine, TileMode};
+    prop_check("auto tile == every fixed tile, bitwise", 6, |rng| {
+        let n = rng.gen_range(256, 1024);
+        let a = random_mixed_band(rng, n).freeze();
+        let b = random_exp_offset_matrix(rng, n, 5).freeze();
+        let workers = rng.gen_range(1, 6);
+        let run = |tile: TileMode| {
+            let mut eng = KernelEngine::new(EngineConfig {
+                tile,
+                workers,
+                ..EngineConfig::default()
+            });
+            eng.multiply(&a, &b)
+        };
+        let (auto_c, auto_stats) = run(TileMode::Auto);
+        for tile in [1usize, 63, 1024, 8192, 1 << 20] {
+            let (fixed_c, fixed_stats) = run(TileMode::Fixed(tile));
+            if auto_c.offsets() != fixed_c.offsets() || auto_c.arena() != fixed_c.arena() {
+                return Err(format!("n={n} tile={tile} workers={workers}: differs"));
+            }
+            if auto_stats != fixed_stats {
+                return Err(format!("n={n} tile={tile}: stats differ"));
+            }
         }
         Ok(())
     });
