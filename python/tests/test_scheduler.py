@@ -66,7 +66,7 @@ KERNEL_BYTES_PER_ELEM = 6 * 8
 MIN_AUTO_TILE = 1024
 AUTO_TILES_PER_WORKER = 4
 DEFAULT_TILE = 8 * 1024
-MIN_GROUP_BUDGET = DEFAULT_TILE
+MIN_GROUP_MULTS = 64 * 1024
 
 
 def rowcol_blocking(n, segment_len):
@@ -107,21 +107,33 @@ def tile_plan(outs, tile):
                 for cc in (clip_contribution(c, lo, hi) for c in out["contribs"])
                 if cc is not None
             ]
-            tasks.append(dict(out_idx=out_idx, lo=lo, hi=hi, contribs=contribs))
+            tasks.append(
+                dict(
+                    out_idx=out_idx,
+                    lo=lo,
+                    hi=hi,
+                    contribs=contribs,
+                    mults=sum(c["length"] for c in contribs),
+                )
+            )
     return tasks
 
 
 def schedule_work(tasks, budget):
+    """Greedy coalescing on the tasks' *multiply* weights (PR 4)."""
     budget = max(1, budget)
-    units, lo, acc = [], 0, 0
+    units, lo, acc_elems, acc_mults = [], 0, 0, 0
     for t, task in enumerate(tasks):
         length = task["hi"] - task["lo"]
-        if t > lo and acc + length > budget:
-            units.append(dict(task_lo=lo, task_hi=t, elems=acc))
-            lo, acc = t, 0
-        acc += length
+        if t > lo and acc_mults + task["mults"] > budget:
+            units.append(dict(task_lo=lo, task_hi=t, elems=acc_elems, mults=acc_mults))
+            lo, acc_elems, acc_mults = t, 0, 0
+        acc_elems += length
+        acc_mults += task["mults"]
     if lo < len(tasks):
-        units.append(dict(task_lo=lo, task_hi=len(tasks), elems=acc))
+        units.append(
+            dict(task_lo=lo, task_hi=len(tasks), elems=acc_elems, mults=acc_mults)
+        )
     return units
 
 
@@ -132,13 +144,14 @@ def auto_tile(total_elems, workers, cache_bytes):
     return min(cache_tile, balance_tile)
 
 
-def group_budget(tile, total_elems, workers):
+def group_budget(max_task_mults, total_mults, workers):
+    """Multiply budget per work unit (PR 4: mults, not elements)."""
     workers = max(1, workers)
     spread = workers * AUTO_TILES_PER_WORKER
-    budget = max(tile, total_elems // spread, MIN_GROUP_BUDGET)
+    budget = max(max_task_mults, total_mults // spread, MIN_GROUP_MULTS)
     # Parallelism guard: never coalesce below one unit per worker when
     # the plan has that much work to give out.
-    return min(budget, max(total_elems // workers, tile, 1))
+    return min(budget, max(total_mults // workers, max_task_mults, 1))
 
 
 # --- executions (fill_window operation order) -----------------------------
@@ -261,17 +274,17 @@ def test_units_partition_tasks_respect_budget_and_are_maximal():
                 nxt = 0
                 for u in units:
                     assert u["task_lo"] == nxt
-                    elems = sum(
-                        t["hi"] - t["lo"] for t in tasks[u["task_lo"] : u["task_hi"]]
-                    )
-                    assert elems == u["elems"]
-                    assert u["elems"] <= budget or u["task_hi"] - u["task_lo"] == 1
+                    run = tasks[u["task_lo"] : u["task_hi"]]
+                    assert sum(t["hi"] - t["lo"] for t in run) == u["elems"]
+                    assert sum(t["mults"] for t in run) == u["mults"]
+                    # A unit only exceeds the multiply budget when a
+                    # single task does.
+                    assert u["mults"] <= budget or u["task_hi"] - u["task_lo"] == 1
                     nxt = u["task_hi"]
                 assert nxt == len(tasks)
-                # greedy maximality
+                # greedy maximality (on the multiply weights)
                 for u, v in zip(units, units[1:]):
-                    first_next = tasks[v["task_lo"]]
-                    assert u["elems"] + (first_next["hi"] - first_next["lo"]) > budget
+                    assert u["mults"] + tasks[v["task_lo"]]["mults"] > budget
 
 
 def test_grouped_execution_is_bit_identical_to_per_diagonal():
@@ -295,21 +308,26 @@ def test_grouped_execution_is_bit_identical_to_per_diagonal():
 
 def test_mixed_band_workload_clears_the_8x_task_gate():
     # Mirror of bench_harness::kernel::mixed_band_workload(4096, 512, 4)
-    # and of KernelEngine::build's tile/budget derivation: the grouped
-    # schedule must submit <= 1/8 the pool tasks of per-diagonal
-    # scheduling at every plausible worker count and cache size.
+    # and of KernelEngine::build's tile/budget derivation (PR 4:
+    # multiply-balanced budgets): the grouped schedule must submit
+    # <= 1/8 the pool tasks of per-diagonal scheduling at every
+    # plausible worker count and cache size.
     n, shorts, band = 4096, 512, 4
     a_off = [0] + [n - k for k in range(1, shorts + 1)]
     b_off = list(range(-band, band + 1))
     outs = plan_diag_mul(n, a_off, b_off)
     per_diagonal = len(outs)
-    total = sum(o["length"] for o in outs)
+    total_elems = sum(o["length"] for o in outs)
     assert per_diagonal > 400
     for workers in (1, 3, 7, 15, 31):
         for cache in (128 * 1024, 256 * 1024, 512 * 1024, 1024 * 1024):
-            tile = auto_tile(total, workers, cache)
+            tile = auto_tile(total_elems, workers, cache)
             tasks = tile_plan(outs, tile)
-            units = schedule_work(tasks, group_budget(tile, total, workers))
+            total_mults = sum(t["mults"] for t in tasks)
+            max_task = max(t["mults"] for t in tasks)
+            units = schedule_work(
+                tasks, group_budget(max_task, total_mults, workers)
+            )
             assert per_diagonal >= 8 * len(units), (
                 f"workers={workers} cache={cache}: "
                 f"{per_diagonal} diagonals vs {len(units)} units"
@@ -321,10 +339,12 @@ def test_auto_tile_bounds():
     assert auto_tile(100, 4, 256 * 1024) == MIN_AUTO_TILE
     assert auto_tile(2**20, 4, 2**30) == 2**20 // (4 * AUTO_TILES_PER_WORKER)
     assert auto_tile(0, 0, 0) >= MIN_AUTO_TILE
+    # group_budget now works in multiplies: floored at the heaviest
+    # task, capped at total/workers.
     assert group_budget(2**20, 100, 2) == 2**20
     assert group_budget(16, 100, 2) == max(16, 100 // 2)
     # Parallelism guard: the budget is capped at total/workers (floored
-    # at one tile) so coalescing never leaves workers idle.
+    # at one task) so coalescing never leaves workers idle.
     b = group_budget(1281, 41_000, 8)
     assert 1281 <= b <= 41_000 // 8
 
@@ -336,11 +356,13 @@ def test_group_budget_preserves_parallelism():
     n = 1024
     offs = list(range(-20, 21))
     outs = plan_diag_mul(n, offs, offs)
-    total = sum(o["length"] for o in outs)
+    total_elems = sum(o["length"] for o in outs)
     for workers in (2, 4, 8, 16):
-        tile = auto_tile(total, workers, 256 * 1024)
+        tile = auto_tile(total_elems, workers, 256 * 1024)
         tasks = tile_plan(outs, tile)
-        units = schedule_work(tasks, group_budget(tile, total, workers))
+        total_mults = sum(t["mults"] for t in tasks)
+        max_task = max(t["mults"] for t in tasks)
+        units = schedule_work(tasks, group_budget(max_task, total_mults, workers))
         assert len(units) >= min(workers, len(tasks)), (
             f"workers={workers}: only {len(units)} units"
         )

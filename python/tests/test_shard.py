@@ -1,0 +1,221 @@
+"""Transliteration checks of the Rust shard layer's partition math.
+
+The build container has no Rust toolchain, so the pure index math of
+``rust/src/linalg/engine.rs``'s ``shard_plan`` (and the stitch step of
+``coordinator/shard.rs``) is mirrored here 1:1 — same names, same
+arithmetic, same greedy remaining-target rule — and property-checked:
+
+* a shard plan is exactly ``S`` contiguous ranges jointly covering every
+  tile task (trailing ranges empty when ``S`` exceeds the task count);
+* the greedy balance bound holds: no shard carries more than
+  ``ceil(total / S)`` plus one task's worth of multiplies;
+* stitched sharded execution (each range filled independently, slices
+  concatenated in order) is **bit-for-bit** identical to per-diagonal
+  execution for any shard count — the determinism contract the Rust
+  property tests and the CI ``shard-smoke`` job gate on;
+* zero-work plans fall back to balancing task counts.
+
+Execution mirrors (``plan_diag_mul``, ``tile_plan``, ``fill_window``,
+``execute_per_diagonal``) are imported from ``test_scheduler`` so the
+two transliterations cannot drift apart.
+"""
+
+import random
+
+import numpy as np
+
+from test_scheduler import (
+    execute_per_diagonal,
+    fill_window,
+    plan_diag_mul,
+    random_operand,
+    tile_plan,
+)
+
+# --- mirror of rust/src/linalg/engine.rs::shard_plan ----------------------
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def shard_plan(tasks, shards):
+    """Greedy multiply-balanced contiguous partition (exact mirror)."""
+    s = max(1, shards)
+    total_mults = sum(t["mults"] for t in tasks)
+
+    def weight(t):
+        return t["mults"] if total_mults > 0 else 1
+
+    remaining = sum(weight(t) for t in tasks)
+    ranges, lo = [], 0
+    for i in range(s):
+        left = s - i
+        hi = lo
+        if left == 1:
+            hi = len(tasks)
+        else:
+            target = ceil_div(remaining, left) if left else 0
+            acc = 0
+            while hi < len(tasks) and acc < target:
+                acc += weight(tasks[hi])
+                hi += 1
+        run = tasks[lo:hi]
+        ranges.append(
+            dict(
+                task_lo=lo,
+                task_hi=hi,
+                elems=sum(t["hi"] - t["lo"] for t in run),
+                mults=sum(t["mults"] for t in run),
+            )
+        )
+        remaining -= sum(weight(t) for t in run)
+        lo = hi
+    assert lo == len(tasks)
+    return ranges
+
+
+# --- mirror of the shard executor + stitch (coordinator/shard.rs) ---------
+
+
+def execute_shard_range(tasks, r, a_planes, b_planes):
+    """One worker's job: fill the range's contiguous plane slice."""
+    re = np.zeros(r["elems"])
+    im = np.zeros(r["elems"])
+    off = 0
+    for task in tasks[r["task_lo"] : r["task_hi"]]:
+        length = task["hi"] - task["lo"]
+        fill_window(
+            task["contribs"],
+            task["lo"],
+            a_planes,
+            b_planes,
+            re[off : off + length],
+            im[off : off + length],
+        )
+        off += length
+    assert off == r["elems"]
+    return re, im
+
+
+def execute_sharded(outs, tasks, ranges, a_planes, b_planes):
+    """Execute every range independently, stitch by concatenation."""
+    slices = [execute_shard_range(tasks, r, a_planes, b_planes) for r in ranges]
+    re = np.concatenate([s[0] for s in slices]) if slices else np.zeros(0)
+    im = np.concatenate([s[1] for s in slices]) if slices else np.zeros(0)
+    starts = np.cumsum([0] + [o["length"] for o in outs])
+    assert re.size == starts[-1], "stitched slices must cover the arena"
+    return [
+        (re[starts[i] : starts[i + 1]], im[starts[i] : starts[i + 1]])
+        for i in range(len(outs))
+    ]
+
+
+# --- the tests ------------------------------------------------------------
+
+
+def test_shard_plan_partitions_and_balances():
+    rng = random.Random(42)
+    for _ in range(40):
+        n = rng.randrange(8, 96)
+        a_off, _ = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        b_off, _ = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        outs = plan_diag_mul(n, a_off, b_off)
+        for tile in (1, 7, 64, 10**6):
+            tasks = tile_plan(outs, tile)
+            total = sum(t["mults"] for t in tasks)
+            max_task = max((t["mults"] for t in tasks), default=0)
+            for shards in range(1, 11):
+                ranges = shard_plan(tasks, shards)
+                assert len(ranges) == shards
+                # Contiguous joint cover, in order.
+                nxt = 0
+                for r in ranges:
+                    assert r["task_lo"] == nxt
+                    assert r["task_hi"] >= r["task_lo"]
+                    run = tasks[r["task_lo"] : r["task_hi"]]
+                    assert r["elems"] == sum(t["hi"] - t["lo"] for t in run)
+                    assert r["mults"] == sum(t["mults"] for t in run)
+                    nxt = r["task_hi"]
+                assert nxt == len(tasks)
+                assert sum(r["mults"] for r in ranges) == total
+                # Greedy balance bound: ideal share + one task of slop.
+                if total > 0:
+                    heaviest = max(r["mults"] for r in ranges)
+                    assert heaviest <= ceil_div(total, shards) + max_task, (
+                        f"n={n} tile={tile} shards={shards}: "
+                        f"{heaviest} > {ceil_div(total, shards)} + {max_task}"
+                    )
+
+
+def test_sharded_execution_is_bit_identical_to_per_diagonal():
+    rng = random.Random(777)
+    for _ in range(25):
+        n = rng.randrange(8, 80)
+        a_off, a_planes = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        b_off, b_planes = random_operand(rng, n, rng.choice(["mixed", "exp"]))
+        outs = plan_diag_mul(n, a_off, b_off)
+        want = execute_per_diagonal(outs, a_planes, b_planes)
+        for tile in (3, 17, 10**6):
+            tasks = tile_plan(outs, tile)
+            for shards in (1, 2, 3, 5, 8):
+                ranges = shard_plan(tasks, shards)
+                got = execute_sharded(outs, tasks, ranges, a_planes, b_planes)
+                for (wr, wi), (gr, gi) in zip(want, got):
+                    # bitwise: identical accumulation order per element
+                    assert np.array_equal(wr, gr)
+                    assert np.array_equal(wi, gi)
+
+
+def test_more_shards_than_tasks_leaves_trailing_empties():
+    outs = plan_diag_mul(16, [0], [0])  # one output diagonal
+    tasks = tile_plan(outs, 10**6)  # → exactly one task
+    assert len(tasks) == 1
+    ranges = shard_plan(tasks, 8)
+    assert len(ranges) == 8
+    non_empty = [r for r in ranges if r["task_hi"] > r["task_lo"]]
+    assert len(non_empty) == 1
+    assert non_empty[0]["task_lo"] == 0 and non_empty[0]["task_hi"] == 1
+    assert all(r["elems"] == 0 for r in ranges if r["task_hi"] == r["task_lo"])
+    # Empty task lists shard to all-empty ranges.
+    assert all(r["task_hi"] == r["task_lo"] for r in shard_plan([], 4))
+    # shards=0 clamps to one range.
+    assert len(shard_plan(tasks, 0)) == 1
+
+
+def test_zero_work_plans_balance_by_task_count():
+    # Tasks with no contributions (mults == 0 everywhere): the fallback
+    # weight of 1/task spreads them across the shards instead of
+    # dumping everything on the last one.
+    tasks = [
+        dict(out_idx=i, lo=0, hi=4, contribs=[], mults=0) for i in range(12)
+    ]
+    ranges = shard_plan(tasks, 4)
+    counts = [r["task_hi"] - r["task_lo"] for r in ranges]
+    assert sum(counts) == 12
+    assert max(counts) <= 4, f"zero-work fallback unbalanced: {counts}"
+
+
+def test_shard_ranges_align_with_stitch_offsets():
+    # The stitch is a plain concatenation: each range's slice begins at
+    # the prefix sum of the preceding ranges' elems — the invariant the
+    # Rust coordinator relies on to validate worker responses.
+    rng = random.Random(5)
+    n = 64
+    a_off, _ = random_operand(rng, n, "mixed")
+    b_off, _ = random_operand(rng, n, "exp")
+    outs = plan_diag_mul(n, a_off, b_off)
+    tasks = tile_plan(outs, 9)
+    total_elems = sum(t["hi"] - t["lo"] for t in tasks)
+    for shards in (2, 3, 7):
+        ranges = shard_plan(tasks, shards)
+        offset = 0
+        for r in ranges:
+            # Every task in the range starts exactly where the running
+            # stitch cursor is.
+            run_elems = sum(
+                t["hi"] - t["lo"] for t in tasks[r["task_lo"] : r["task_hi"]]
+            )
+            assert run_elems == r["elems"]
+            offset += r["elems"]
+        assert offset == total_elems

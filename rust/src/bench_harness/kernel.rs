@@ -16,6 +16,7 @@
 
 use super::Table;
 use crate::coordinator::pool;
+use crate::coordinator::shard::{ShardBackend, ShardCoordinator};
 use crate::format::DiagMatrix;
 use crate::linalg::engine::{self, EngineConfig, KernelEngine, TileMode};
 use crate::num::Complex;
@@ -64,6 +65,12 @@ pub struct KernelCase {
     /// The full adaptive stack: auto tile + coalesced work schedule +
     /// plan cache, across the worker pool.
     pub grouped_auto_ns: f64,
+    /// The shard layer at 2 ranges (in-process backend, warm shard-plan
+    /// memo) — cross-checked bitwise against the single engine before
+    /// timing.
+    pub sharded_x2_ns: f64,
+    /// The shard layer at 4 ranges (in-process backend).
+    pub sharded_x4_ns: f64,
     /// Tile length [`TileMode::Auto`] resolved to for this plan.
     pub grouped_auto_tile: usize,
     /// Pool tasks under per-diagonal scheduling (one per output
@@ -92,6 +99,16 @@ impl KernelCase {
     /// Grouped-auto speedup over the seed BTreeMap kernel.
     pub fn speedup_grouped(&self) -> f64 {
         self.btreemap_ns / self.grouped_auto_ns
+    }
+
+    /// 2-way-sharded speedup over the seed BTreeMap kernel.
+    pub fn speedup_sharded_x2(&self) -> f64 {
+        self.btreemap_ns / self.sharded_x2_ns
+    }
+
+    /// 4-way-sharded speedup over the seed BTreeMap kernel.
+    pub fn speedup_sharded_x4(&self) -> f64 {
+        self.btreemap_ns / self.sharded_x4_ns
     }
 
     /// Pool-task reduction of the coalesced schedule vs per-diagonal
@@ -253,17 +270,55 @@ pub fn run_case_on(
         serial_c.thaw().max_abs_diff(&reference) < 1e-12,
         "packed kernel must agree with the seed kernel"
     );
+    // Shard layer (in-process backend): stitched output must equal the
+    // single engine bitwise at both fan-outs before any timing.
+    let mut shard2 = ShardCoordinator::new(
+        EngineConfig {
+            workers,
+            ..EngineConfig::default()
+        },
+        2,
+        ShardBackend::InProc,
+    );
+    let mut shard4 = ShardCoordinator::new(
+        EngineConfig {
+            workers,
+            ..EngineConfig::default()
+        },
+        4,
+        ShardBackend::InProc,
+    );
+    let (s2, _) = shard2
+        .multiply(&ap, &bp)
+        .expect("in-process sharding cannot fail");
+    assert!(
+        s2.bit_eq(&serial_c),
+        "2-way sharded kernel must be bit-identical to single-engine"
+    );
+    let (s4, _) = shard4
+        .multiply(&ap, &bp)
+        .expect("in-process sharding cannot fail");
+    assert!(
+        s4.bit_eq(&serial_c),
+        "4-way sharded kernel must be bit-identical to single-engine"
+    );
 
     let btreemap_ns = time_ns(reps, || crate::linalg::diag_mul_reference(a, b).nnzd());
     let soa_serial_ns = time_ns(reps, || {
         crate::linalg::packed_diag_mul_counted(&ap, &bp).0.nnzd()
     });
     let tiled_parallel_ns = time_ns(reps, || tiled_engine.multiply(&ap, &bp).0.nnzd());
-    // The cached/grouped engines are warm from the cross-checks above,
-    // so these measure plan-reuse + scheduled execution (the Taylor
-    // steady state).
+    // The cached/grouped/sharded engines are warm from the cross-checks
+    // above, so these measure plan-reuse + scheduled execution (the
+    // Taylor steady state).
     let plan_cached_ns = time_ns(reps, || cached_engine.multiply(&ap, &bp).0.nnzd());
     let grouped_auto_ns = time_ns(reps, || grouped_engine.multiply(&ap, &bp).0.nnzd());
+    let sharded_x2_ns = time_ns(reps, || {
+        shard2.multiply(&ap, &bp).expect("inproc").0.nnzd()
+    });
+    let sharded_x4_ns = time_ns(reps, || {
+        shard4.multiply(&ap, &bp).expect("inproc").0.nnzd()
+    });
 
     KernelCase {
         workload,
@@ -280,6 +335,8 @@ pub fn run_case_on(
         tiled_parallel_ns,
         plan_cached_ns,
         grouped_auto_ns,
+        sharded_x2_ns,
+        sharded_x4_ns,
         grouped_auto_tile,
         tasks_per_diagonal,
         tasks_grouped,
@@ -370,12 +427,91 @@ pub fn tile_sweep(n: usize, qmax: u32, reps: usize) -> String {
     )
 }
 
+/// The `diamond kernel --shards N [--shard-backend B]` verification +
+/// mini-bench, and the body of the CI `shard-smoke` gate: for each
+/// smoke workload, execute single-engine and `N`-way sharded on the
+/// requested backend and **fail** (Err → CLI exit 2) unless the
+/// stitched output is bitwise identical (`f64::to_bits`); report
+/// wall-clock, stitch volume and the shard multiply-balance skew.
+pub fn shard_check(shards: usize, backend: ShardBackend, smoke: bool) -> Result<String, String> {
+    let mut pairs: Vec<(&'static str, DiagMatrix, DiagMatrix)> = vec![
+        (
+            "exp-offset",
+            exp_offset_matrix(1 << 12, 11),
+            exp_offset_matrix(1 << 12, 11),
+        ),
+        {
+            let (a, b) = mixed_band_workload(1 << 12, 512, 4);
+            ("mixed-band", a, b)
+        },
+    ];
+    if !smoke {
+        pairs.push((
+            "exp-offset",
+            exp_offset_matrix(1 << 14, 13),
+            exp_offset_matrix(1 << 14, 13),
+        ));
+    }
+    let mut t = Table::new(&[
+        "workload", "n", "shards", "backend", "single ms", "sharded ms", "vs single",
+        "stitch KiB", "skew %", "bitwise",
+    ]);
+    for (name, a, b) in &pairs {
+        let ap = a.freeze();
+        let bp = b.freeze();
+        let (single, _) = crate::linalg::packed_diag_mul_counted(&ap, &bp);
+        let mut sc = ShardCoordinator::new(EngineConfig::default(), shards, backend);
+        let (c, _) = sc
+            .multiply(&ap, &bp)
+            .map_err(|e| format!("{name} n={}: sharded execution failed: {e:#}", ap.dim()))?;
+        if !c.bit_eq(&single) {
+            return Err(format!(
+                "{name} n={}: {shards}-shard ({}) output is NOT bitwise identical to \
+                 single-engine execution",
+                ap.dim(),
+                backend.name()
+            ));
+        }
+        let stitch_kib = sc.stats().stitch_bytes / 1024;
+        // Shard balance of the partition the coordinator actually
+        // executed (shards == 1 runs unsharded → perfectly balanced).
+        let skew_pct = sc
+            .last_shard_plan()
+            .map(|sp| sp.mult_skew_pct())
+            .unwrap_or(100);
+        let single_ns = time_ns(2, || {
+            crate::linalg::packed_diag_mul_counted(&ap, &bp).0.nnzd()
+        });
+        let sharded_ns = time_ns(2, || {
+            sc.multiply(&ap, &bp).expect("verified above").0.nnzd()
+        });
+        t.row(vec![
+            name.to_string(),
+            ap.dim().to_string(),
+            shards.to_string(),
+            backend.name().to_string(),
+            format!("{:.3}", single_ns / 1e6),
+            format!("{:.3}", sharded_ns / 1e6),
+            super::fmt_ratio(single_ns / sharded_ns),
+            stitch_kib.to_string(),
+            skew_pct.to_string(),
+            "identical".to_string(),
+        ]);
+    }
+    Ok(format!(
+        "Shard check — {shards} shard(s), {} backend: stitched output bitwise-identical \
+         to single-engine on all workloads\n{}",
+        backend.name(),
+        t.render()
+    ))
+}
+
 /// Render the human-readable comparison table.
 pub fn render_table(cases: &[KernelCase]) -> String {
     let mut t = Table::new(&[
         "workload", "n", "diags", "workers", "tile", "btreemap ms", "soa ms", "tiled ms",
-        "cached ms", "grouped ms", "soa x", "tiled x", "cached x", "grouped x", "tasks",
-        "grouped tasks",
+        "cached ms", "grouped ms", "sh2 ms", "sh4 ms", "soa x", "tiled x", "cached x",
+        "grouped x", "tasks", "grouped tasks",
     ]);
     for c in cases {
         t.row(vec![
@@ -389,6 +525,8 @@ pub fn render_table(cases: &[KernelCase]) -> String {
             format!("{:.3}", c.tiled_parallel_ns / 1e6),
             format!("{:.3}", c.plan_cached_ns / 1e6),
             format!("{:.3}", c.grouped_auto_ns / 1e6),
+            format!("{:.3}", c.sharded_x2_ns / 1e6),
+            format!("{:.3}", c.sharded_x4_ns / 1e6),
             super::fmt_ratio(c.speedup_soa()),
             super::fmt_ratio(c.speedup_tiled()),
             super::fmt_ratio(c.speedup_cached()),
@@ -411,7 +549,7 @@ pub fn to_json(cases: &[KernelCase]) -> String {
     );
     for (i, c) in cases.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"workload\": \"{}\", \"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"tile_mode\": \"{}\", \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"grouped_auto_ns\": {:.0}, \"grouped_auto_tile\": {}, \"tasks_per_diagonal\": {}, \"tasks_grouped\": {}, \"task_reduction\": {:.3}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}, \"speedup_grouped_auto_vs_seed\": {:.3}}}{}\n",
+            "    {{\"workload\": \"{}\", \"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"tile_mode\": \"{}\", \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"grouped_auto_ns\": {:.0}, \"sharded_x2_ns\": {:.0}, \"sharded_x4_ns\": {:.0}, \"grouped_auto_tile\": {}, \"tasks_per_diagonal\": {}, \"tasks_grouped\": {}, \"task_reduction\": {:.3}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}, \"speedup_grouped_auto_vs_seed\": {:.3}, \"speedup_sharded_x2_vs_seed\": {:.3}, \"speedup_sharded_x4_vs_seed\": {:.3}}}{}\n",
             c.workload,
             c.n,
             c.diags,
@@ -423,6 +561,8 @@ pub fn to_json(cases: &[KernelCase]) -> String {
             c.tiled_parallel_ns,
             c.plan_cached_ns,
             c.grouped_auto_ns,
+            c.sharded_x2_ns,
+            c.sharded_x4_ns,
             c.grouped_auto_tile,
             c.tasks_per_diagonal,
             c.tasks_grouped,
@@ -431,6 +571,8 @@ pub fn to_json(cases: &[KernelCase]) -> String {
             c.speedup_tiled(),
             c.speedup_cached(),
             c.speedup_grouped(),
+            c.speedup_sharded_x2(),
+            c.speedup_sharded_x4(),
             if i + 1 < cases.len() { "," } else { "" },
         ));
     }
@@ -507,6 +649,8 @@ mod tests {
         assert!(c.tiled_parallel_ns > 0.0);
         assert!(c.plan_cached_ns > 0.0);
         assert!(c.grouped_auto_ns > 0.0);
+        assert!(c.sharded_x2_ns > 0.0);
+        assert!(c.sharded_x4_ns > 0.0);
         assert!(c.grouped_auto_tile >= 1);
         assert!(c.tasks_grouped >= 1);
         assert!(c.tasks_grouped <= c.tasks_per_diagonal.max(1));
@@ -552,6 +696,8 @@ mod tests {
             tiled_parallel_ns: 5e5,
             plan_cached_ns: 4e5,
             grouped_auto_ns: 25e4,
+            sharded_x2_ns: 2e5,
+            sharded_x4_ns: 1e5,
             grouped_auto_tile: 5461,
             tasks_per_diagonal: 525,
             tasks_grouped: 21,
@@ -570,6 +716,21 @@ mod tests {
         assert!(j.contains("\"speedup_tiled_vs_seed\": 4.000"));
         assert!(j.contains("\"speedup_cached_vs_seed\": 5.000"));
         assert!(j.contains("\"speedup_grouped_auto_vs_seed\": 8.000"));
+        assert!(j.contains("\"sharded_x2_ns\": 200000"));
+        assert!(j.contains("\"sharded_x4_ns\": 100000"));
+        assert!(j.contains("\"speedup_sharded_x2_vs_seed\": 10.000"));
+        assert!(j.contains("\"speedup_sharded_x4_vs_seed\": 20.000"));
         assert!(render_table(&cases).contains("4096"));
+    }
+
+    #[test]
+    fn shard_check_small_smoke() {
+        // The CLI gate body on a cheap in-process configuration: the
+        // real CI job runs this at n = 2^12 on both backends; here the
+        // same code path must verify and render.
+        let report = shard_check(2, ShardBackend::InProc, true).expect("inproc must verify");
+        assert!(report.contains("bitwise-identical"));
+        assert!(report.contains("inproc"));
+        assert!(report.contains("mixed-band"));
     }
 }

@@ -3,11 +3,15 @@
 //! ```text
 //! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations
 //! diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]
+//!                [--shards <n>] [--shard-backend <inproc|process>]
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
+//!                [--shards <n>] [--shard-backend <inproc|process>]
+//! diamond shard-worker        (internal: one shard job over stdin/stdout)
 //! diamond bench-all
 //! ```
 
 use crate::bench_harness::experiments;
+use crate::coordinator::shard::ShardBackend;
 use crate::coordinator::Coordinator;
 use crate::ham::Family;
 use crate::sim::SimConfig;
@@ -32,6 +36,22 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Parse the shared `--shards N [--shard-backend inproc|process]` pair.
+fn shard_flags(args: &[String]) -> Result<(Option<usize>, ShardBackend), String> {
+    let shards = flag_value(args, "--shards")
+        .map(|v| v.parse::<usize>().map_err(|e| format!("--shards: {e}")))
+        .transpose()?;
+    if shards == Some(0) {
+        return Err("--shards must be at least 1".into());
+    }
+    let backend = match flag_value(args, "--shard-backend") {
+        None => ShardBackend::InProc,
+        Some(s) => ShardBackend::parse(&s)
+            .ok_or_else(|| format!("--shard-backend must be inproc|process, got `{s}`"))?,
+    };
+    Ok((shards, backend))
+}
+
 fn cmd_evolve(args: &[String]) -> Result<(), String> {
     let family = flag_value(args, "--family")
         .and_then(|f| parse_family(&f))
@@ -45,6 +65,10 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         .transpose()?
         .unwrap_or(0);
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    let (shards, shard_backend) = shard_flags(args)?;
+    if use_pjrt && shards.is_some() {
+        return Err("--shards applies to the oracle path only (drop --pjrt)".into());
+    }
 
     let ham = crate::ham::build(family, qubits);
     let h = &ham.matrix;
@@ -55,6 +79,8 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
 
     let coord = if use_pjrt {
         Coordinator::with_pjrt().map_err(|e| format!("loading PJRT runtime: {e:#}"))?
+    } else if let Some(s) = shards {
+        Coordinator::oracle_sharded(s, shard_backend)
     } else {
         Coordinator::oracle()
     };
@@ -115,13 +141,24 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             rep.engine.operand_copies_avoided
         );
     }
+    if rep.engine.shards_used > 0 {
+        println!(
+            "shard layer: {} ranges executed across the chain, {} KiB of output planes stitched",
+            rep.engine.shards_used,
+            rep.engine.shard_stitch_bytes / 1024
+        );
+    }
     Ok(())
 }
 
-/// `diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]` —
-/// the kernel microbenchmark with engine knobs exposed. `--tile auto`
-/// switches the tiled/cached columns to adaptive tiling **and** prints
-/// the tile sweep (fixed lengths vs the cache-derived one).
+/// `diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]
+/// [--shards <n>] [--shard-backend <inproc|process>]` — the kernel
+/// microbenchmark with engine knobs exposed. `--tile auto` switches the
+/// tiled/cached columns to adaptive tiling **and** prints the tile
+/// sweep; `--shards` additionally runs the shard check (the CI
+/// `shard-smoke` gate): sharded execution on the requested backend must
+/// be **bitwise identical** to the single engine, or the command exits
+/// non-zero.
 fn cmd_kernel(args: &[String]) -> Result<(), String> {
     use crate::linalg::TileMode;
     let mut opts = crate::bench_harness::kernel::KernelOptions::default();
@@ -141,12 +178,20 @@ fn cmd_kernel(args: &[String]) -> Result<(), String> {
     if args.iter().any(|a| a == "--no-plan-cache") {
         opts.plan_cache = false;
     }
+    let (shards, shard_backend) = shard_flags(args)?;
     let smoke = args.iter().any(|a| a == "--smoke");
     let cases = crate::bench_harness::kernel::run_suite_with(&opts, smoke);
     println!("{}", crate::bench_harness::kernel::render_table(&cases));
     if sweep {
         println!();
         println!("{}", crate::bench_harness::kernel::tile_sweep(1 << 12, 11, 3));
+    }
+    if let Some(s) = shards {
+        println!();
+        println!(
+            "{}",
+            crate::bench_harness::kernel::shard_check(s, shard_backend, smoke)?
+        );
     }
     Ok(())
 }
@@ -189,6 +234,20 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             Ok(())
         }
         "kernel" => cmd_kernel(rest),
+        "shard-worker" => {
+            // Internal: executes one serialized (operands, shard range)
+            // job received on stdin and writes the output-plane slice to
+            // stdout — spawned by the shard layer's process backend (see
+            // coordinator::shard). Errors also go to stdout as a
+            // structured response; stderr carries the human-readable
+            // cause the parent surfaces.
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let mut input = stdin.lock();
+            let mut output = stdout.lock();
+            crate::coordinator::shard::run_worker(&mut input, &mut output)
+                .map_err(|e| format!("shard-worker: {e:#}"))
+        }
         "bench-all" => {
             println!("{}", experiments::table2());
             println!("{}", experiments::table3());
@@ -205,8 +264,11 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             println!(
                 "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
                  commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
-                 kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]\n  \
-                 evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]"
+                 kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]\n         \
+                 [--shards <n>] [--shard-backend <inproc|process>]\n  \
+                 evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]\n         \
+                 [--shards <n>] [--shard-backend <inproc|process>]\n  \
+                 shard-worker  (internal: one shard job over stdin/stdout)"
             );
             Ok(())
         }
@@ -253,6 +315,35 @@ mod tests {
         // Parse error surfaces before any benchmarking starts.
         assert_eq!(
             run_with_args(vec!["kernel".into(), "--tile".into(), "bogus".into()]),
+            2
+        );
+    }
+
+    #[test]
+    fn shard_flags_parse_and_reject() {
+        let ok = shard_flags(&["--shards".into(), "4".into()]).unwrap();
+        assert_eq!(ok, (Some(4), ShardBackend::InProc));
+        let ok = shard_flags(&[
+            "--shards".into(),
+            "2".into(),
+            "--shard-backend".into(),
+            "process".into(),
+        ])
+        .unwrap();
+        assert_eq!(ok, (Some(2), ShardBackend::Process));
+        assert_eq!(shard_flags(&[]).unwrap(), (None, ShardBackend::InProc));
+        assert!(shard_flags(&["--shards".into(), "0".into()]).is_err());
+        assert!(shard_flags(&["--shards".into(), "x".into()]).is_err());
+        assert!(shard_flags(&[
+            "--shards".into(),
+            "2".into(),
+            "--shard-backend".into(),
+            "tcp".into()
+        ])
+        .is_err());
+        // Malformed shard flags fail the kernel command up front.
+        assert_eq!(
+            run_with_args(vec!["kernel".into(), "--shards".into(), "zero".into()]),
             2
         );
     }

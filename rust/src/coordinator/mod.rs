@@ -16,6 +16,7 @@
 
 pub mod pool;
 pub mod server;
+pub mod shard;
 
 use crate::baselines::{Accelerator, BaselineReport};
 use crate::format::{DiagMatrix, PackedDiagMatrix};
@@ -92,11 +93,14 @@ impl BaselineEvolution {
 /// The coordinator.
 pub struct Coordinator {
     pub functional: FunctionalMode,
-    /// Shared diagonal kernel engine backing the oracle functional path:
-    /// tiled execution plus a plan cache that persists across the jobs a
-    /// coordinator serves (Taylor chains with stabilized offsets reuse
-    /// plans). Behind a mutex so `values` stays `&self`.
-    kernel: std::sync::Mutex<crate::linalg::KernelEngine>,
+    /// Shared shard coordinator backing the oracle functional path:
+    /// cached planning plus (optionally) multi-engine sharded execution
+    /// with output-plane stitching. With one shard it degenerates to the
+    /// plain kernel engine — tiled execution plus a plan cache that
+    /// persists across the jobs a coordinator serves (Taylor chains with
+    /// stabilized offsets reuse plans *and* shard partitions). Behind a
+    /// mutex so `values` stays `&self`.
+    kernel: std::sync::Mutex<shard::ShardCoordinator>,
 }
 
 impl Coordinator {
@@ -104,15 +108,31 @@ impl Coordinator {
     pub fn with_pjrt() -> Result<Self> {
         Ok(Coordinator {
             functional: FunctionalMode::Pjrt(Box::new(DiagEngine::load_default()?)),
-            kernel: std::sync::Mutex::new(crate::linalg::KernelEngine::with_defaults()),
+            kernel: std::sync::Mutex::new(shard::ShardCoordinator::single()),
         })
     }
 
-    /// Timing-only coordinator (oracle functional path).
+    /// Timing-only coordinator (oracle functional path, single engine).
     pub fn oracle() -> Self {
         Coordinator {
             functional: FunctionalMode::Oracle,
-            kernel: std::sync::Mutex::new(crate::linalg::KernelEngine::with_defaults()),
+            kernel: std::sync::Mutex::new(shard::ShardCoordinator::single()),
+        }
+    }
+
+    /// Timing-only coordinator whose oracle SpMSpMs execute as `shards`
+    /// multiply-balanced ranges on `backend` (in-process engines or
+    /// `diamond shard-worker` processes), stitched bitwise — fan-out is
+    /// surfaced through [`EngineStats::shards_used`] /
+    /// [`EngineStats::shard_stitch_bytes`].
+    pub fn oracle_sharded(shards: usize, backend: shard::ShardBackend) -> Self {
+        Coordinator {
+            functional: FunctionalMode::Oracle,
+            kernel: std::sync::Mutex::new(shard::ShardCoordinator::new(
+                crate::linalg::EngineConfig::default(),
+                shards,
+                backend,
+            )),
         }
     }
 
@@ -133,7 +153,7 @@ impl Coordinator {
         match &self.functional {
             FunctionalMode::Pjrt(engine) => engine.spmspm(a, b),
             FunctionalMode::Oracle => {
-                let (c, mut stats) = self.oracle_multiply(&a.freeze(), &b.freeze());
+                let (c, mut stats) = self.oracle_multiply(&a.freeze(), &b.freeze())?;
                 stats.operand_copies += 3; // freeze A, freeze B, thaw C
                 Ok((c.thaw(), stats))
             }
@@ -159,29 +179,34 @@ impl Coordinator {
                 Ok((c.freeze(), stats))
             }
             FunctionalMode::Oracle => {
-                let (c, mut stats) = self.oracle_multiply(a, b);
+                let (c, mut stats) = self.oracle_multiply(a, b)?;
                 stats.operand_copies_avoided += 3;
                 Ok((c, stats))
             }
         }
     }
 
-    /// Shared oracle body: one multiply through the coordinator's cached
-    /// kernel engine, with the call's plan-cache hits extracted from the
-    /// engine's cumulative counters.
+    /// Shared oracle body: one multiply through the coordinator's shard
+    /// coordinator (cached planning, optional sharded execution), with
+    /// the call's plan-cache hits and shard fan-out extracted from the
+    /// cumulative counters.
     fn oracle_multiply(
         &self,
         a: &PackedDiagMatrix,
         b: &PackedDiagMatrix,
-    ) -> (PackedDiagMatrix, EngineStats) {
-        let mut engine = self.kernel.lock().unwrap();
-        let hits_before = engine.stats().plan_cache_hits;
-        let (c, _stats) = engine.multiply(a, b);
+    ) -> Result<(PackedDiagMatrix, EngineStats)> {
+        let mut kernel = self.kernel.lock().unwrap();
+        let hits_before = kernel.kernel_stats().plan_cache_hits;
+        let shard_before = *kernel.stats();
+        let (c, _stats) = kernel.multiply(a, b)?;
+        let shard_after = *kernel.stats();
         let stats = EngineStats {
-            plan_cache_hits: engine.stats().plan_cache_hits - hits_before,
+            plan_cache_hits: kernel.kernel_stats().plan_cache_hits - hits_before,
+            shards_used: shard_after.shards_used - shard_before.shards_used,
+            shard_stitch_bytes: shard_after.stitch_bytes - shard_before.stitch_bytes,
             ..EngineStats::default()
         };
-        (c, stats)
+        Ok((c, stats))
     }
 
     /// One coordinated SpMSpM: timing from the device, values from the
@@ -309,6 +334,8 @@ impl Coordinator {
             engine_total.plan_cache_hits += es.plan_cache_hits;
             engine_total.operand_copies += es.operand_copies;
             engine_total.operand_copies_avoided += es.operand_copies_avoided;
+            engine_total.shards_used += es.shards_used;
+            engine_total.shard_stitch_bytes += es.shard_stitch_bytes;
 
             let term_nnzd = match &term {
                 Term::Packed(p) => {
@@ -475,6 +502,31 @@ mod tests {
         // Device timing still accumulated over all chained steps.
         assert!(rep.total.grid.mults > 0);
         assert_eq!(rep.steps.len(), 6);
+    }
+
+    #[test]
+    fn sharded_oracle_evolution_matches_single_engine_bitwise() {
+        // The shard-layer acceptance at the coordinator level: an
+        // evolution whose every oracle SpMSpM fans out across 3 shards
+        // produces the identical operator, and the fan-out is visible
+        // in EngineStats.
+        let h = crate::ham::heisenberg::heisenberg(5, 1.0).matrix;
+        let iters = 5;
+        let single = Coordinator::oracle()
+            .evolve(&h, 0.05, iters, SimConfig::default())
+            .unwrap();
+        let sharded = Coordinator::oracle_sharded(3, shard::ShardBackend::InProc)
+            .evolve(&h, 0.05, iters, SimConfig::default())
+            .unwrap();
+        assert_eq!(
+            sharded.op, single.op,
+            "sharded evolution must reproduce the single-engine operator exactly"
+        );
+        // k = 2..=iters chained multiplies, 3 ranges each.
+        assert_eq!(sharded.engine.shards_used, 3 * (iters as u64 - 1));
+        assert!(sharded.engine.shard_stitch_bytes > 0);
+        assert_eq!(single.engine.shards_used, 0);
+        assert_eq!(single.engine.shard_stitch_bytes, 0);
     }
 
     #[test]

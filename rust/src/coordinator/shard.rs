@@ -1,0 +1,1052 @@
+//! The SpMSpM **shard layer**: execute one multiplication's tile plan as
+//! `S` contiguous, multiply-balanced ranges on independent engines and
+//! stitch the disjoint output-plane slices back into one
+//! [`PackedDiagMatrix`] — bitwise identical to single-engine execution
+//! for any shard count.
+//!
+//! Three pieces (see `docs/ARCHITECTURE.md` §Shard layer for the
+//! diagram and the wire-format spec):
+//!
+//! * [`ShardCoordinator`] — plans through a cached [`KernelEngine`]
+//!   (plan → tile → schedule), partitions the tile list with
+//!   [`shard_plan`] (cached per offset structure, so a Taylor chain
+//!   shards once and replays), executes the ranges on the configured
+//!   [`ShardBackend`], and stitches with [`PackedDiagMatrix::stitch`].
+//! * the **wire format** — a serde-free little-endian encoding of one
+//!   `(operands, tile, shard range)` job and its `(re, im, mults)`
+//!   response. The same framing a multi-node transport would carry; here
+//!   it rides child-process stdin/stdout.
+//! * [`ProcessShardExecutor`] + [`run_worker`] — the process backend: the
+//!   parent spawns one `diamond shard-worker` per non-empty range, feeds
+//!   each its job, and collects the output slices with a hard timeout,
+//!   killing and reporting (with the worker's stderr) instead of hanging
+//!   when a worker dies mid-job.
+//!
+//! ## Determinism
+//!
+//! A worker re-derives the plan and tiling from the operand offsets and
+//! the parent's resolved tile length — both pure functions — so parent
+//! and workers agree on the exact task list. Each range is a contiguous
+//! run of arena-ordered tile tasks, every output element accumulates its
+//! contributions in plan order inside exactly one range, and stitching
+//! concatenates the disjoint slices in order: sharded output equals
+//! single-engine output **bitwise**, for any `S` and either backend
+//! (gated by the repo property tests and the CI `shard-smoke` job).
+
+use crate::format::diag::ZERO_TOL;
+use crate::format::PackedDiagMatrix;
+use crate::linalg::engine::{
+    execute_shard_ranges, fill_task_range, shard_plan, tile_plan, EngineConfig, KernelEngine,
+    KernelStats, PlannedProduct, ShardPlan,
+};
+use crate::linalg::{plan_diag_mul, OpStats};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Frame marker of a shard job (parent → worker stdin).
+pub const JOB_MAGIC: [u8; 4] = *b"DSJ1";
+/// Frame marker of a shard response (worker stdout → parent).
+pub const RESP_MAGIC: [u8; 4] = *b"DSR1";
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// Environment variable overriding the worker executable the process
+/// backend spawns (defaults to the current executable — the `diamond`
+/// binary re-entered as `diamond shard-worker`).
+pub const WORKER_EXE_ENV: &str = "DIAMOND_SHARD_WORKER";
+
+/// Wall-clock budget per worker before the parent declares it hung,
+/// kills it and fails the multiplication (generous: CI shard jobs at
+/// n = 2^12 finish in well under a second).
+pub const DEFAULT_WORKER_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// How long the parent waits for an already-responded worker to exit
+/// before killing it (reap-with-timeout — a worker wedged after writing
+/// its response must not hang the parent).
+const REAP_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Stderr bytes surfaced in error messages before truncation.
+const STDERR_NOTE_LIMIT: usize = 4096;
+
+// --- wire encoding (serde-free, little-endian) ---------------------------
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &PackedDiagMatrix) {
+    put_usize(buf, m.nnzd());
+    for &d in m.offsets() {
+        buf.extend_from_slice(&d.to_le_bytes());
+    }
+    for &v in m.re_plane() {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in m.im_plane() {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a received frame.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // Checked against the *remaining* bytes (no `pos + n` overflow):
+        // corrupt length fields must come back as Err, never a panic.
+        if n > self.buf.len() - self.pos {
+            bail!(
+                "truncated shard message: wanted {n} bytes at offset {}, frame holds {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        // Reject a wire-supplied count the frame cannot possibly hold
+        // *before* allocating for it — a corrupt length field must not
+        // reach Vec::with_capacity.
+        if n > (self.buf.len() - self.pos) / 8 {
+            bail!(
+                "truncated shard message: {n} f64 values claimed at offset {}, frame holds {} bytes",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "shard message has {} trailing bytes after offset {}",
+                self.buf.len() - self.pos,
+                self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+fn take_matrix(c: &mut Cursor<'_>, n: usize) -> Result<PackedDiagMatrix> {
+    let nnzd = c.usize()?;
+    // Both bounds pre-allocation: the structural one (a dimension-n
+    // matrix has at most 2n−1 diagonals) and the physical one (each
+    // offset costs 8 frame bytes), so a corrupt count cannot drive
+    // Vec::with_capacity.
+    if nnzd > 2 * n || nnzd > (c.buf.len() - c.pos) / 8 {
+        bail!("matrix claims {nnzd} diagonals for dimension {n}");
+    }
+    let mut offsets = Vec::with_capacity(nnzd);
+    let mut elems = 0usize;
+    for _ in 0..nnzd {
+        let d = c.i64()?;
+        if d.unsigned_abs() as usize >= n.max(1) {
+            bail!("offset {d} out of range for dimension {n}");
+        }
+        elems += n - d.unsigned_abs() as usize;
+        offsets.push(d);
+    }
+    let re = c.f64s(elems)?;
+    let im = c.f64s(elems)?;
+    if offsets.windows(2).any(|w| w[0] >= w[1]) {
+        bail!("matrix offsets not strictly ascending");
+    }
+    Ok(PackedDiagMatrix::from_planes(n, offsets, re, im))
+}
+
+/// One decoded shard job: operands, the parent's resolved tile length,
+/// and the half-open tile-task range the worker owns.
+pub struct ShardJob {
+    /// Left operand.
+    pub a: PackedDiagMatrix,
+    /// Right operand.
+    pub b: PackedDiagMatrix,
+    /// Tile length the parent cut the plan with (the worker re-tiles
+    /// with the same value, reproducing the identical task list).
+    pub tile: usize,
+    /// First tile task of the worker's range.
+    pub task_lo: usize,
+    /// One past the last tile task of the range.
+    pub task_hi: usize,
+}
+
+/// Serialize the shared operand payload `matrix(A) | matrix(B)` —
+/// identical for every shard of one multiplication, so the process
+/// executor encodes it once and shares it across the worker feeds.
+fn encode_operands(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Vec<u8> {
+    assert_eq!(a.dim(), b.dim(), "dimension mismatch");
+    let mut buf = Vec::with_capacity(
+        16 + 16 * (a.stored_elements() + b.stored_elements())
+            + 8 * (a.nnzd() + b.nnzd()),
+    );
+    put_matrix(&mut buf, a);
+    put_matrix(&mut buf, b);
+    buf
+}
+
+/// Serialize the per-shard job header (`JOB_MAGIC | n | tile | task_lo
+/// | task_hi`) — the only part of a job that differs between shards.
+fn encode_job_header(n: usize, tile: usize, task_lo: usize, task_hi: usize) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(36);
+    buf.extend_from_slice(&JOB_MAGIC);
+    put_usize(&mut buf, n);
+    put_usize(&mut buf, tile);
+    put_usize(&mut buf, task_lo);
+    put_usize(&mut buf, task_hi);
+    buf
+}
+
+/// Serialize one complete shard job. Layout (all integers little-endian
+/// u64 unless noted): `JOB_MAGIC | n | tile | task_lo | task_hi |
+/// matrix(A) | matrix(B)` with `matrix = nnzd | offsets (i64 × nnzd) |
+/// re (f64-bits × E) | im (f64-bits × E)` where `E = Σ (n − |d|)`.
+/// (Convenience single-buffer form; the executor streams header and
+/// shared operand payload separately.)
+pub fn encode_job(
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    tile: usize,
+    task_lo: usize,
+    task_hi: usize,
+) -> Vec<u8> {
+    let mut buf = encode_job_header(a.dim(), tile, task_lo, task_hi);
+    buf.extend_from_slice(&encode_operands(a, b));
+    buf
+}
+
+/// Decode one shard job (the inverse of [`encode_job`]).
+pub fn decode_job(bytes: &[u8]) -> Result<ShardJob> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &JOB_MAGIC[..] {
+        bail!("not a shard job (bad magic)");
+    }
+    let n = c.usize()?;
+    let tile = c.usize()?;
+    let task_lo = c.usize()?;
+    let task_hi = c.usize()?;
+    if task_lo > task_hi {
+        bail!("inverted shard range [{task_lo}, {task_hi})");
+    }
+    let a = take_matrix(&mut c, n).context("decoding operand A")?;
+    let b = take_matrix(&mut c, n).context("decoding operand B")?;
+    c.done()?;
+    Ok(ShardJob {
+        a,
+        b,
+        tile,
+        task_lo,
+        task_hi,
+    })
+}
+
+/// Serialize a successful response: `RESP_MAGIC | 0u8 | mults | elems |
+/// re (f64-bits × elems) | im (f64-bits × elems)`.
+pub fn encode_ok(re: &[f64], im: &[f64], mults: u64) -> Vec<u8> {
+    debug_assert_eq!(re.len(), im.len());
+    let mut buf = Vec::with_capacity(21 + 16 * re.len());
+    buf.extend_from_slice(&RESP_MAGIC);
+    buf.push(STATUS_OK);
+    put_u64(&mut buf, mults);
+    put_usize(&mut buf, re.len());
+    for &v in re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Serialize a worker-side failure: `RESP_MAGIC | 1u8 | len | utf8`.
+pub fn encode_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&RESP_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a response into the output slice and its multiply count; a
+/// worker-reported failure comes back as `Err`.
+pub fn decode_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &RESP_MAGIC[..] {
+        bail!(
+            "not a shard response (bad magic; got {} bytes)",
+            bytes.len()
+        );
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let mults = c.u64()?;
+            let elems = c.usize()?;
+            let re = c.f64s(elems)?;
+            let im = c.f64s(elems)?;
+            c.done()?;
+            Ok((re, im, mults))
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("worker reported: {msg}");
+        }
+        s => bail!("unknown shard response status {s}"),
+    }
+}
+
+// --- the worker side ------------------------------------------------------
+
+/// Execute one decoded job: replay the parent's plan → tile decisions
+/// (pure in the operands and tile length) and fill the owned range.
+fn execute_job(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+    let job = decode_job(bytes)?;
+    let plan = plan_diag_mul(&job.a, &job.b);
+    let tiles = tile_plan(&plan, job.tile);
+    if job.task_hi > tiles.tasks.len() {
+        bail!(
+            "shard range [{}, {}) out of bounds: plan has {} tile tasks",
+            job.task_lo,
+            job.task_hi,
+            tiles.tasks.len()
+        );
+    }
+    let run = &tiles.tasks[job.task_lo..job.task_hi];
+    let elems: usize = run.iter().map(|t| t.hi - t.lo).sum();
+    let mults: usize = run.iter().map(|t| t.mults).sum();
+    let mut re = vec![0f64; elems];
+    let mut im = vec![0f64; elems];
+    fill_task_range(&tiles, job.task_lo, job.task_hi, &job.a, &job.b, &mut re, &mut im);
+    Ok((re, im, mults as u64))
+}
+
+/// The `diamond shard-worker` body: read one serialized job from
+/// `input` to EOF, execute its tile range, write the response to
+/// `output`. On failure an error response is still written (so the
+/// parent gets a structured message even before it inspects stderr) and
+/// the error is returned for the CLI to exit non-zero with.
+pub fn run_worker(input: &mut impl Read, output: &mut impl Write) -> Result<()> {
+    let mut buf = Vec::new();
+    input
+        .read_to_end(&mut buf)
+        .context("reading shard job from stdin")?;
+    match execute_job(&buf) {
+        Ok((re, im, mults)) => {
+            output
+                .write_all(&encode_ok(&re, &im, mults))
+                .context("writing shard response")?;
+            output.flush().context("flushing shard response")?;
+            Ok(())
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = output.write_all(&encode_err(&msg));
+            let _ = output.flush();
+            Err(e)
+        }
+    }
+}
+
+// --- the process backend --------------------------------------------------
+
+/// Where the shard ranges of a [`ShardCoordinator`] execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardBackend {
+    /// Threads inside this process (zero transport overhead — the
+    /// default, and the baseline the process backend is checked
+    /// against).
+    InProc,
+    /// One `diamond shard-worker` child process per non-empty range,
+    /// over the stdin/stdout wire format — the same framing a future
+    /// multi-node transport reuses, with no network dependency.
+    Process,
+}
+
+impl ShardBackend {
+    /// Parse a CLI spelling (`inproc` | `process`).
+    pub fn parse(s: &str) -> Option<ShardBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "thread" | "threads" => Some(ShardBackend::InProc),
+            "process" | "proc" => Some(ShardBackend::Process),
+            _ => None,
+        }
+    }
+
+    /// Display name (the CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardBackend::InProc => "inproc",
+            ShardBackend::Process => "process",
+        }
+    }
+}
+
+/// Spawns, feeds and reaps one local `diamond shard-worker` process per
+/// non-empty shard range. Fail-fast by construction: a worker that dies
+/// mid-job or stops responding is killed and reported (with its stderr)
+/// within [`ProcessShardExecutor::timeout`] — never a hang.
+pub struct ProcessShardExecutor {
+    worker_exe: PathBuf,
+    worker_args: Vec<String>,
+    /// Per-worker response deadline (default
+    /// [`DEFAULT_WORKER_TIMEOUT`]).
+    pub timeout: Duration,
+}
+
+/// One in-flight worker: its child handle plus the channels the reader
+/// threads deliver stdout/stderr through.
+struct Running {
+    shard: usize,
+    child: Child,
+    out_rx: mpsc::Receiver<std::io::Result<Vec<u8>>>,
+    err_rx: mpsc::Receiver<Vec<u8>>,
+}
+
+impl ProcessShardExecutor {
+    /// Executor spawning `worker_exe shard-worker`.
+    pub fn new(worker_exe: PathBuf) -> Self {
+        ProcessShardExecutor {
+            worker_exe,
+            worker_args: vec!["shard-worker".to_string()],
+            timeout: DEFAULT_WORKER_TIMEOUT,
+        }
+    }
+
+    /// Executor for the current binary, overridable via
+    /// [`WORKER_EXE_ENV`] (how tests point the backend at the built
+    /// `diamond` binary).
+    pub fn from_env() -> Result<Self> {
+        let exe = match std::env::var_os(WORKER_EXE_ENV) {
+            Some(p) => PathBuf::from(p),
+            None => std::env::current_exe()
+                .context("resolving the shard-worker executable (set DIAMOND_SHARD_WORKER to override)")?,
+        };
+        Ok(Self::new(exe))
+    }
+
+    /// Replace the subcommand arguments (test hook for driving the
+    /// failure paths with a worker that cannot answer).
+    pub fn with_args(mut self, args: Vec<String>) -> Self {
+        self.worker_args = args;
+        self
+    }
+
+    /// Execute every range of `sp` on worker processes and return the
+    /// output-plane slices in shard order (empty ranges yield empty
+    /// slices without spawning). All non-empty workers run
+    /// concurrently; the first failure kills the stragglers and
+    /// surfaces the worker's stderr in the error.
+    pub fn execute(
+        &self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+        tile: usize,
+        sp: &ShardPlan,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
+            (0..sp.ranges.len()).map(|_| None).collect();
+        let mut running: Vec<Running> = Vec::new();
+        // Operands are identical for every shard: serialize once, share
+        // the buffer across the worker feeds.
+        let operands = Arc::new(encode_operands(a, b));
+
+        for (i, r) in sp.ranges.iter().enumerate() {
+            if r.task_lo == r.task_hi {
+                slots[i] = Some((Vec::new(), Vec::new()));
+                continue;
+            }
+            match self.spawn_worker(&operands, a.dim(), tile, r.task_lo, r.task_hi, i) {
+                Ok(run) => running.push(run),
+                Err(e) => {
+                    Self::kill_all(&mut running);
+                    return Err(e);
+                }
+            }
+        }
+
+        let mut failure: Option<anyhow::Error> = None;
+        for idx in 0..running.len() {
+            let shard = running[idx].shard;
+            if failure.is_some() {
+                // Fail-fast: one worker already failed; reap the rest.
+                let _ = running[idx].child.kill();
+                let _ = running[idx].child.wait();
+                continue;
+            }
+            match Self::collect(&mut running[idx], self.timeout) {
+                Ok((re, im, mults)) => {
+                    let r = &sp.ranges[shard];
+                    if re.len() != r.elems {
+                        failure = Some(anyhow!(
+                            "shard worker {shard} returned {} elements, parent planned {} — plans diverged",
+                            re.len(),
+                            r.elems
+                        ));
+                    } else if mults as usize != r.mults {
+                        failure = Some(anyhow!(
+                            "shard worker {shard} performed {mults} multiplies, parent planned {} — plans diverged",
+                            r.mults
+                        ));
+                    } else {
+                        slots[shard] = Some((re, im));
+                    }
+                }
+                Err(e) => failure = Some(e),
+            }
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every shard range collected"))
+            .collect())
+    }
+
+    fn spawn_worker(
+        &self,
+        operands: &Arc<Vec<u8>>,
+        n: usize,
+        tile: usize,
+        task_lo: usize,
+        task_hi: usize,
+        shard: usize,
+    ) -> Result<Running> {
+        let mut child = Command::new(&self.worker_exe)
+            .args(&self.worker_args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| {
+                format!(
+                    "spawning shard worker {shard} ({})",
+                    self.worker_exe.display()
+                )
+            })?;
+        let header = encode_job_header(n, tile, task_lo, task_hi);
+        let payload = Arc::clone(operands);
+        let mut stdin = child.stdin.take().expect("piped stdin");
+        // Feed on a thread: a worker that dies before draining its job
+        // must not wedge the parent on a full pipe (the write fails
+        // with EPIPE instead and the collect step reports the death).
+        std::thread::spawn(move || {
+            let _ = stdin
+                .write_all(&header)
+                .and_then(|()| stdin.write_all(&payload));
+            // stdin drops here → EOF, the worker's read_to_end returns.
+        });
+        let mut stdout = child.stdout.take().expect("piped stdout");
+        let (out_tx, out_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let res = stdout.read_to_end(&mut buf).map(|_| buf);
+            let _ = out_tx.send(res);
+        });
+        let mut stderr = child.stderr.take().expect("piped stderr");
+        let (err_tx, err_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let _ = stderr.read_to_end(&mut buf);
+            let _ = err_tx.send(buf);
+        });
+        Ok(Running {
+            shard,
+            child,
+            out_rx,
+            err_rx,
+        })
+    }
+
+    /// Wait for a worker's full stdout (bounded by `timeout`), reap it
+    /// (bounded by [`REAP_TIMEOUT`]), and decode the response. Every
+    /// failure path kills the child first and appends its stderr.
+    fn collect(run: &mut Running, timeout: Duration) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+        let shard = run.shard;
+        let out = match run.out_rx.recv_timeout(timeout) {
+            Ok(Ok(buf)) => buf,
+            Ok(Err(e)) => {
+                let _ = run.child.kill();
+                let _ = run.child.wait(); // no zombies: kill is always reaped
+                let note = Self::stderr_note(run);
+                bail!("shard worker {shard}: reading stdout failed: {e}{note}");
+            }
+            Err(_) => {
+                let _ = run.child.kill();
+                let _ = run.child.wait(); // no zombies: kill is always reaped
+                let note = Self::stderr_note(run);
+                bail!(
+                    "shard worker {shard}: no response within {timeout:?} — killed{note}"
+                );
+            }
+        };
+        let status = Self::reap(run)?;
+        match decode_resp(&out) {
+            Ok(resp) if status.success() => Ok(resp),
+            Ok(_) => {
+                let note = Self::stderr_note(run);
+                bail!("shard worker {shard}: exited {status} after a complete response{note}");
+            }
+            Err(e) => {
+                let note = Self::stderr_note(run);
+                Err(e.context(format!(
+                    "shard worker {shard} died mid-job (exit {status}, {} response bytes){note}",
+                    out.len()
+                )))
+            }
+        }
+    }
+
+    /// `wait` with a deadline (std has no `wait_timeout`): poll
+    /// `try_wait`, then kill on expiry so a wedged worker cannot hang
+    /// the parent.
+    fn reap(run: &mut Running) -> Result<std::process::ExitStatus> {
+        let deadline = Instant::now() + REAP_TIMEOUT;
+        loop {
+            if let Some(st) = run.child.try_wait().context("reaping shard worker")? {
+                return Ok(st);
+            }
+            if Instant::now() >= deadline {
+                let _ = run.child.kill();
+                return run.child.wait().context("reaping killed shard worker");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// The worker's collected stderr as an error-message suffix (empty
+    /// when the worker wrote nothing). The child is dead or dying by
+    /// the time this is called, so the pipe closes and the reader
+    /// thread delivers promptly; a short timeout guards the wait.
+    fn stderr_note(run: &Running) -> String {
+        match run.err_rx.recv_timeout(Duration::from_secs(2)) {
+            Ok(bytes) if !bytes.is_empty() => {
+                let mut s = String::from_utf8_lossy(&bytes).into_owned();
+                if s.len() > STDERR_NOTE_LIMIT {
+                    s.truncate(STDERR_NOTE_LIMIT);
+                    s.push_str("… [truncated]");
+                }
+                format!("; worker stderr: {}", s.trim_end())
+            }
+            _ => String::new(),
+        }
+    }
+
+    fn kill_all(running: &mut Vec<Running>) {
+        for r in running.iter_mut() {
+            let _ = r.child.kill();
+            let _ = r.child.wait();
+        }
+        running.clear();
+    }
+}
+
+// --- the coordinator ------------------------------------------------------
+
+/// Cumulative shard-layer counters (see `docs/ARCHITECTURE.md`
+/// §Statistics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Multiplications executed through the coordinator (sharded or
+    /// not).
+    pub multiplies: u64,
+    /// Multiplications that actually fanned out across shards
+    /// (coordinator shard count > 1).
+    pub sharded_multiplies: u64,
+    /// Shard ranges executed (`S` per sharded multiplication, empty
+    /// ranges included).
+    pub shards_used: u64,
+    /// Output-plane bytes stitched back from shard slices (16 bytes per
+    /// complex element, counted pre-prune).
+    pub stitch_bytes: u64,
+    /// Shard plans built from scratch.
+    pub shard_plans_built: u64,
+    /// Sharded multiplications served by a cached shard plan (the
+    /// Taylor-chain steady state: shard once per cached plan, replay
+    /// across iterations).
+    pub shard_plan_reuses: u64,
+}
+
+/// Key of the shard-plan memo: a shard plan is a pure function of the
+/// planned product, which is itself keyed by the operand offset sets and
+/// the dimension (the coordinator's shard count is fixed).
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct ShardKey {
+    n: usize,
+    a_offsets: Vec<i64>,
+    b_offsets: Vec<i64>,
+}
+
+/// Executes multiplications as `S` multiply-balanced shard ranges on
+/// independent engines — in-process or on `diamond shard-worker` child
+/// processes — and stitches the output-plane slices back together,
+/// bitwise identical to single-engine execution.
+///
+/// Owns a [`KernelEngine`] for planning (plan cache included) plus its
+/// own shard-plan memo, so a Taylor chain whose offset structure has
+/// stabilized replays both the plan *and* its shard partition. With
+/// `shards <= 1` it degenerates to the plain engine (same code path as
+/// [`KernelEngine::multiply`], no stitch).
+pub struct ShardCoordinator {
+    engine: KernelEngine,
+    shards: usize,
+    backend: ShardBackend,
+    executor: Option<ProcessShardExecutor>,
+    cache: HashMap<ShardKey, Arc<ShardPlan>>,
+    last_plan: Option<Arc<ShardPlan>>,
+    stats: ShardStats,
+}
+
+impl ShardCoordinator {
+    /// Coordinator with `shards` ranges on `backend` (shard count
+    /// clamped to ≥ 1). The process backend resolves its worker binary
+    /// lazily on first use ([`ProcessShardExecutor::from_env`]).
+    pub fn new(cfg: EngineConfig, shards: usize, backend: ShardBackend) -> Self {
+        ShardCoordinator {
+            engine: KernelEngine::new(cfg),
+            shards: shards.max(1),
+            backend,
+            executor: None,
+            cache: HashMap::new(),
+            last_plan: None,
+            stats: ShardStats::default(),
+        }
+    }
+
+    /// The unsharded degenerate: one engine, default configuration —
+    /// behaviourally identical to [`KernelEngine::with_defaults`].
+    pub fn single() -> Self {
+        Self::new(EngineConfig::default(), 1, ShardBackend::InProc)
+    }
+
+    /// Process-backed coordinator with an explicit executor (tests use
+    /// this to point at the built `diamond` binary).
+    pub fn with_executor(
+        cfg: EngineConfig,
+        shards: usize,
+        executor: ProcessShardExecutor,
+    ) -> Self {
+        ShardCoordinator {
+            engine: KernelEngine::new(cfg),
+            shards: shards.max(1),
+            backend: ShardBackend::Process,
+            executor: Some(executor),
+            cache: HashMap::new(),
+            last_plan: None,
+            stats: ShardStats::default(),
+        }
+    }
+
+    /// Configured shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Configured backend.
+    pub fn backend(&self) -> ShardBackend {
+        self.backend
+    }
+
+    /// Shard-layer counters.
+    pub fn stats(&self) -> &ShardStats {
+        &self.stats
+    }
+
+    /// The planning engine's counters (plan cache, tiles, units, skew).
+    pub fn kernel_stats(&self) -> &KernelStats {
+        self.engine.stats()
+    }
+
+    /// The shard partition the most recent sharded multiplication
+    /// actually executed (None before the first, or with `shards <= 1`)
+    /// — so callers report balance/skew for the real partition instead
+    /// of re-deriving one.
+    pub fn last_shard_plan(&self) -> Option<&ShardPlan> {
+        self.last_plan.as_deref()
+    }
+
+    /// Multiply `a · b` across the configured shards. Bitwise identical
+    /// to [`KernelEngine::multiply`] on the same engine configuration
+    /// for any shard count and either backend; `Err` only on process
+    /// transport failures (spawn, worker death, timeout, wire
+    /// corruption) — never on in-process execution.
+    pub fn multiply(
+        &mut self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> Result<(PackedDiagMatrix, OpStats)> {
+        self.stats.multiplies = self.stats.multiplies.saturating_add(1);
+        let planned = self.engine.plan(a, b);
+        if self.shards <= 1 {
+            return Ok(self.engine.execute_planned(&planned, a, b));
+        }
+        let sp = self.shard_plan_for(a, b, &planned);
+        self.last_plan = Some(Arc::clone(&sp));
+        self.engine.record_execution(&planned);
+
+        let slices = match self.backend {
+            ShardBackend::InProc => execute_shard_ranges(
+                &planned.tiles,
+                &sp,
+                a,
+                b,
+                self.engine.config().workers,
+            ),
+            ShardBackend::Process => {
+                if self.executor.is_none() {
+                    self.executor = Some(ProcessShardExecutor::from_env()?);
+                }
+                self.executor
+                    .as_ref()
+                    .expect("executor installed above")
+                    .execute(a, b, planned.tiles.tile, &sp)?
+            }
+        };
+
+        // Stitch: the slices are the disjoint, arena-ordered plane runs.
+        let offsets = planned.plan.offsets().to_vec();
+        let mut starts = Vec::with_capacity(planned.plan.outs.len() + 1);
+        starts.push(0usize);
+        for out in &planned.plan.outs {
+            starts.push(starts.last().unwrap() + out.len);
+        }
+        let mut c = PackedDiagMatrix::stitch(a.dim(), offsets, starts, &slices);
+        self.stats.sharded_multiplies = self.stats.sharded_multiplies.saturating_add(1);
+        self.stats.shards_used = self
+            .stats
+            .shards_used
+            .saturating_add(sp.ranges.len() as u64);
+        self.stats.stitch_bytes = self
+            .stats
+            .stitch_bytes
+            .saturating_add(16 * c.stored_elements() as u64);
+        c.prune(ZERO_TOL);
+        let stats = OpStats {
+            mults: planned.plan.mults,
+            merge_adds: planned.plan.mults,
+            reads: 2usize.saturating_mul(planned.plan.mults),
+            writes: planned.plan.writes,
+        };
+        Ok((c, stats))
+    }
+
+    /// The shard partition for this planned product, from the memo when
+    /// the offset structure has been seen before (counted in
+    /// [`ShardStats::shard_plan_reuses`]).
+    fn shard_plan_for(
+        &mut self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+        planned: &PlannedProduct,
+    ) -> Arc<ShardPlan> {
+        let key = ShardKey {
+            n: a.dim(),
+            a_offsets: a.offsets().to_vec(),
+            b_offsets: b.offsets().to_vec(),
+        };
+        if let Some(hit) = self.cache.get(&key) {
+            self.stats.shard_plan_reuses = self.stats.shard_plan_reuses.saturating_add(1);
+            return Arc::clone(hit);
+        }
+        let sp = Arc::new(shard_plan(&planned.tiles, self.shards));
+        self.stats.shard_plans_built = self.stats.shard_plans_built.saturating_add(1);
+        if self.cache.len() >= 32 {
+            self.cache.clear();
+        }
+        self.cache.insert(key, Arc::clone(&sp));
+        sp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::DiagMatrix;
+    use crate::linalg::packed_diag_mul_counted;
+    use crate::num::Complex;
+
+    fn band(n: usize, half_width: i64) -> PackedDiagMatrix {
+        let mut m = DiagMatrix::zeros(n);
+        for d in -half_width..=half_width {
+            let len = DiagMatrix::diag_len(n, d);
+            m.set_diag(
+                d,
+                (0..len)
+                    .map(|k| Complex::new(0.3 + (k % 7) as f64 * 0.01, -0.2 + d as f64 * 0.05))
+                    .collect(),
+            );
+        }
+        m.freeze()
+    }
+
+    #[test]
+    fn job_wire_roundtrip() {
+        let a = band(24, 2);
+        let b = band(24, 3);
+        let bytes = encode_job(&a, &b, 1000, 3, 9);
+        let job = decode_job(&bytes).unwrap();
+        assert!(job.a.bit_eq(&a));
+        assert!(job.b.bit_eq(&b));
+        assert_eq!((job.tile, job.task_lo, job.task_hi), (1000, 3, 9));
+        // Truncation and corruption fail loudly, never panic.
+        assert!(decode_job(&bytes[..bytes.len() - 5]).is_err());
+        assert!(decode_job(b"nope").is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(decode_job(&extra).is_err());
+    }
+
+    #[test]
+    fn response_wire_roundtrip() {
+        let re = vec![1.5, -0.0, f64::MIN_POSITIVE];
+        let im = vec![0.0, 2.0, -3.25];
+        let bytes = encode_ok(&re, &im, 42);
+        let (gre, gim, mults) = decode_resp(&bytes).unwrap();
+        assert_eq!(mults, 42);
+        assert!(gre.iter().zip(&re).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(gim.iter().zip(&im).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let err = decode_resp(&encode_err("boom: tile 3 missing")).unwrap_err();
+        assert!(format!("{err:#}").contains("boom: tile 3 missing"));
+        assert!(decode_resp(&bytes[..7]).is_err());
+    }
+
+    #[test]
+    fn run_worker_in_memory_matches_inproc_slice() {
+        // The worker body over in-memory IO: its slice must equal the
+        // parent-side range execution bitwise.
+        let a = band(64, 3);
+        let b = band(64, 2);
+        let plan = plan_diag_mul(&a, &b);
+        let tiles = tile_plan(&plan, 40);
+        let sp = shard_plan(&tiles, 3);
+        let r = sp.ranges[1];
+        assert!(r.task_hi > r.task_lo, "middle shard must hold work");
+        let job = encode_job(&a, &b, 40, r.task_lo, r.task_hi);
+        let mut out = Vec::new();
+        run_worker(&mut &job[..], &mut out).unwrap();
+        let (wre, wim, mults) = decode_resp(&out).unwrap();
+        assert_eq!(mults as usize, r.mults);
+        let mut ere = vec![0f64; r.elems];
+        let mut eim = vec![0f64; r.elems];
+        fill_task_range(&tiles, r.task_lo, r.task_hi, &a, &b, &mut ere, &mut eim);
+        assert!(wre.iter().zip(&ere).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(wim.iter().zip(&eim).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn run_worker_rejects_bad_jobs_with_error_response() {
+        let mut out = Vec::new();
+        assert!(run_worker(&mut &b"garbage"[..], &mut out).is_err());
+        let err = decode_resp(&out).unwrap_err();
+        assert!(format!("{err:#}").contains("worker reported"));
+        // Out-of-range shard range is caught before execution.
+        let a = band(16, 1);
+        let job = encode_job(&a, &a, 8, 0, 10_000);
+        let mut out = Vec::new();
+        assert!(run_worker(&mut &job[..], &mut out).is_err());
+        let err = format!("{:#}", decode_resp(&out).unwrap_err());
+        assert!(err.contains("out of bounds"), "{err}");
+    }
+
+    #[test]
+    fn inproc_coordinator_is_bit_identical_and_reuses_shard_plans() {
+        let a = band(96, 3);
+        let b = band(96, 2);
+        let (want, want_stats) = packed_diag_mul_counted(&a, &b);
+        for shards in [1usize, 2, 4, 8] {
+            let mut sc = ShardCoordinator::new(
+                EngineConfig {
+                    workers: 2,
+                    ..EngineConfig::default()
+                },
+                shards,
+                ShardBackend::InProc,
+            );
+            let (c, stats) = sc.multiply(&a, &b).unwrap();
+            assert!(c.bit_eq(&want), "shards={shards}");
+            assert_eq!(stats, want_stats, "shards={shards}");
+            // Replay: plan cache + shard-plan memo both hit.
+            let (c2, _) = sc.multiply(&a, &b).unwrap();
+            assert!(c2.bit_eq(&want));
+            assert_eq!(sc.kernel_stats().plan_cache_hits, 1);
+            assert_eq!(sc.kernel_stats().multiplies, 2);
+            if shards > 1 {
+                assert_eq!(sc.stats().shard_plans_built, 1);
+                assert_eq!(sc.stats().shard_plan_reuses, 1);
+                assert_eq!(sc.stats().shards_used, 2 * shards as u64);
+                assert!(sc.stats().stitch_bytes > 0);
+                assert_eq!(sc.last_shard_plan().unwrap().len(), shards);
+            } else {
+                assert_eq!(sc.stats().sharded_multiplies, 0);
+                assert_eq!(sc.stats().stitch_bytes, 0);
+                assert!(sc.last_shard_plan().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_more_ways_than_work_stays_identical() {
+        // 1 stored diagonal → a handful of tasks; 8 shards leaves most
+        // ranges empty, and the zero matrix shards to nothing at all.
+        let id = PackedDiagMatrix::identity(32);
+        let (want, _) = packed_diag_mul_counted(&id, &id);
+        let mut sc =
+            ShardCoordinator::new(EngineConfig::default(), 8, ShardBackend::InProc);
+        let (c, _) = sc.multiply(&id, &id).unwrap();
+        assert!(c.bit_eq(&want));
+        let zero = PackedDiagMatrix::zeros(32);
+        let (z, zs) = sc.multiply(&zero, &id).unwrap();
+        assert_eq!(z.nnzd(), 0);
+        assert_eq!(zs.mults, 0);
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!(ShardBackend::parse("inproc"), Some(ShardBackend::InProc));
+        assert_eq!(ShardBackend::parse("Process"), Some(ShardBackend::Process));
+        assert_eq!(ShardBackend::parse("tcp"), None);
+        assert_eq!(ShardBackend::InProc.name(), "inproc");
+        assert_eq!(ShardBackend::Process.name(), "process");
+    }
+}

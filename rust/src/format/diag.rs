@@ -696,6 +696,90 @@ impl PackedDiagMatrix {
         out
     }
 
+    /// Assemble a packed matrix directly from its split planes — the
+    /// wire face of the shard worker (`diamond shard-worker` receives
+    /// offsets + planes and reconstructs the operand with this). The
+    /// `starts` table is derived from the offsets' natural lengths;
+    /// offsets must be strictly ascending and both planes must hold
+    /// exactly `Σ (n − |offset|)` values.
+    pub fn from_planes(n: usize, offsets: Vec<i64>, re: Vec<f64>, im: Vec<f64>) -> Self {
+        let mut starts = Vec::with_capacity(offsets.len() + 1);
+        starts.push(0usize);
+        for (i, &d) in offsets.iter().enumerate() {
+            if i > 0 {
+                assert!(offsets[i - 1] < d, "offsets must be ascending");
+            }
+            let len = DiagMatrix::diag_len(n, d);
+            assert!(len > 0, "offset {d} out of range for n={n}");
+            starts.push(starts.last().unwrap() + len);
+        }
+        assert_eq!(
+            re.len(),
+            *starts.last().unwrap(),
+            "re plane length must match the offset table"
+        );
+        assert_eq!(im.len(), re.len(), "planes must have equal length");
+        PackedDiagMatrix {
+            n,
+            offsets,
+            starts,
+            re,
+            im,
+        }
+    }
+
+    /// Stitch disjoint output-plane slices (in arena order) back into
+    /// one packed matrix — the shard coordinator's reassembly step.
+    /// `parts` are `(re, im)` slice pairs whose concatenation must cover
+    /// the arena described by `starts` exactly; because every shard
+    /// writes a contiguous, disjoint run of the output planes in plan
+    /// order, this concatenation is **bitwise identical** to
+    /// single-engine execution (the stitch determinism contract —
+    /// `docs/ARCHITECTURE.md` §Shard layer).
+    pub fn stitch(
+        n: usize,
+        offsets: Vec<i64>,
+        starts: Vec<usize>,
+        parts: &[(Vec<f64>, Vec<f64>)],
+    ) -> Self {
+        let total = *starts.last().unwrap_or(&0);
+        let mut re = Vec::with_capacity(total);
+        let mut im = Vec::with_capacity(total);
+        for (pre, pim) in parts {
+            assert_eq!(pre.len(), pim.len(), "slice planes must align");
+            re.extend_from_slice(pre);
+            im.extend_from_slice(pim);
+        }
+        assert_eq!(
+            re.len(),
+            total,
+            "stitched slices must cover the output arena exactly"
+        );
+        Self::from_raw_parts(n, offsets, starts, re, im)
+    }
+
+    /// True when `rhs` stores exactly the same structure with
+    /// bit-identical planes (`f64::to_bits` equality — stricter than
+    /// `==`, which would let `0.0 == -0.0` pass). This is the
+    /// determinism-contract comparison the shard and scheduler tests
+    /// gate on.
+    pub fn bit_eq(&self, rhs: &PackedDiagMatrix) -> bool {
+        self.n == rhs.n
+            && self.offsets == rhs.offsets
+            && self.starts == rhs.starts
+            && self.re.len() == rhs.re.len()
+            && self
+                .re
+                .iter()
+                .zip(rhs.re.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+            && self
+                .im
+                .iter()
+                .zip(rhs.im.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
     /// Max absolute entry difference against another packed matrix
     /// (union of supports).
     pub fn max_abs_diff(&self, rhs: &PackedDiagMatrix) -> f64 {
@@ -920,6 +1004,49 @@ mod tests {
     #[should_panic]
     fn from_diagonals_rejects_unsorted() {
         PackedDiagMatrix::from_diagonals(4, vec![1, -1], vec![vec![ONE; 3], vec![ONE; 3]]);
+    }
+
+    #[test]
+    fn from_planes_and_stitch_roundtrip() {
+        let mut m = DiagMatrix::zeros(6);
+        m.set_diag(-2, vec![Complex::new(1.0, -3.0); 4]);
+        m.set_diag(1, vec![Complex::new(0.5, 2.0); 5]);
+        let p = m.freeze();
+        // from_planes rebuilds the identical matrix from offsets+planes
+        // (the shard-worker decode path).
+        let q = PackedDiagMatrix::from_planes(
+            6,
+            p.offsets().to_vec(),
+            p.re_plane().to_vec(),
+            p.im_plane().to_vec(),
+        );
+        assert!(q.bit_eq(&p));
+        // stitch reassembles from arbitrary contiguous slice cuts.
+        let (re, im) = (p.re_plane(), p.im_plane());
+        for cut in [0usize, 3, 4, 9] {
+            let parts = vec![
+                (re[..cut].to_vec(), im[..cut].to_vec()),
+                (re[cut..].to_vec(), im[cut..].to_vec()),
+            ];
+            let s = PackedDiagMatrix::stitch(
+                6,
+                p.offsets().to_vec(),
+                vec![0, 4, 9],
+                &parts,
+            );
+            assert!(s.bit_eq(&p), "cut={cut}");
+        }
+        // bit_eq is stricter than ==: -0.0 vs 0.0 differ.
+        let a = PackedDiagMatrix::from_planes(2, vec![0], vec![0.0, 1.0], vec![0.0; 2]);
+        let b = PackedDiagMatrix::from_planes(2, vec![0], vec![-0.0, 1.0], vec![0.0; 2]);
+        assert_eq!(a, b);
+        assert!(!a.bit_eq(&b));
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the output arena")]
+    fn stitch_rejects_short_slices() {
+        PackedDiagMatrix::stitch(3, vec![0], vec![0, 3], &[(vec![1.0], vec![0.0])]);
     }
 
     #[test]

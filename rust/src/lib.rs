@@ -40,7 +40,11 @@
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts (built by
 //!   `python/compile/aot.py`) and executes them from the Rust hot path.
 //! * [`coordinator`] — the L3 system layer: blocking planner, job queue,
-//!   worker pool, request batching and the simulation ledger.
+//!   worker pool, request batching, the simulation ledger, and the
+//!   **shard layer** ([`coordinator::shard`]): one SpMSpM split into
+//!   multiply-balanced tile ranges executed on independent engines —
+//!   in-process or `diamond shard-worker` child processes over a
+//!   serde-free wire format — and stitched back bitwise.
 //! * [`bench_harness`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //! * [`testutil`] — seeded PRNG + mini property-testing harness (offline

@@ -1,6 +1,6 @@
-//! The layered diagonal-SpMSpM **kernel engine**: adaptive tiling and
-//! work scheduling of Minkowski plans plus cross-multiplication plan
-//! caching.
+//! The layered diagonal-SpMSpM **kernel engine**: adaptive tiling,
+//! multiply-balanced work scheduling and shard partitioning of Minkowski
+//! plans plus cross-multiplication plan caching.
 //!
 //! The engine stacks four layers (see `docs/ARCHITECTURE.md` for the
 //! full diagram and the module-to-paper map):
@@ -22,10 +22,18 @@
 //!    software analogue of [`crate::sim::blocking::DiagGroup`] batching
 //!    on the simulated device: a plan with thousands of tiny output
 //!    diagonals submits one pool task per *group*, not per diagonal,
-//!    while long diagonals keep their cache-sized tiles. Each unit still
-//!    has **exactly one writer**, and every output element accumulates
+//!    while long diagonals keep their cache-sized tiles. Units are
+//!    balanced by **multiply count** (contribution overlap lengths are
+//!    known at plan time), not by element count, so contribution-heavy
+//!    diagonals don't skew the pool; the residual skew is reported in
+//!    [`KernelStats::unit_mult_skew_pct`]. Each unit still has
+//!    **exactly one writer**, and every output element accumulates
 //!    its contributions in plan order, so grouped parallel execution is
 //!    bit-identical to serial (asserted by the repo property tests).
+//!    The same multiply weights drive [`shard_plan`], which cuts the
+//!    tile list into `S` contiguous ranges for the shard layer
+//!    ([`crate::coordinator::shard`]) — one range per engine or worker
+//!    process, stitched back bitwise.
 //! 4. **Caching layer** — [`KernelEngine`] owns a keyed plan cache:
 //!    plans are memoized on `(D_A offsets, D_B offsets, n)` *together
 //!    with their tiling and schedule*. A Taylor chain whose term offset
@@ -82,10 +90,13 @@ pub const MIN_AUTO_TILE: usize = 1024;
 /// the pool can rebalance when diagonals finish at different speeds.
 pub const AUTO_TILES_PER_WORKER: usize = 4;
 
-/// Smallest element budget [`group_budget`] will coalesce to: one pool
-/// task is only worth submitting if it carries at least a default
-/// tile's worth of work.
-pub const MIN_GROUP_BUDGET: usize = DEFAULT_TILE;
+/// Smallest multiply budget [`group_budget`] will coalesce to: one pool
+/// task is only worth submitting if it carries enough multiply-accumulate
+/// work (~64 Ki complex MACs, tens of microseconds) to amortize its
+/// dispatch overhead. The parallelism cap inside [`group_budget`] still
+/// guarantees at least one unit per worker on plans big enough to fan
+/// out, so this floor only suppresses pointlessly tiny pool tasks.
+pub const MIN_GROUP_MULTS: usize = 64 * 1024;
 
 /// How the engine derives the tile length a plan is cut with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -155,25 +166,26 @@ pub fn auto_tile(total_elems: usize, workers: usize, cache_bytes: usize) -> usiz
     cache_tile.min(balance_tile)
 }
 
-/// The element budget one [`WorkUnit`] coalesces up to: at least a tile
-/// (a unit must not split below its own tiles), at least
-/// [`MIN_GROUP_BUDGET`] (so thousands of tiny diagonals collapse into
-/// few pool tasks), and at least `total / (workers × 4)` — but capped
-/// at `total / workers` (floored at one tile) so coalescing never
-/// leaves the pool with fewer units than workers on a plan big enough
-/// to fan out.
-pub fn group_budget(tile: usize, total_elems: usize, workers: usize) -> usize {
+/// The **multiply** budget one [`WorkUnit`] coalesces up to: at least
+/// the heaviest single tile task (a unit must not split below its own
+/// tiles), at least [`MIN_GROUP_MULTS`] (so thousands of tiny diagonals
+/// collapse into few pool tasks), and at least `total / (workers × 4)` —
+/// but capped at `total / workers` (floored at one task) so coalescing
+/// never leaves the pool with fewer units than workers on a plan big
+/// enough to fan out. All quantities are multiply counts, known exactly
+/// at plan time from the contribution overlap lengths.
+pub fn group_budget(max_task_mults: usize, total_mults: usize, workers: usize) -> usize {
     let workers = workers.max(1);
     let spread = workers.saturating_mul(AUTO_TILES_PER_WORKER);
-    let budget = tile
-        .max(total_elems / spread.max(1))
-        .max(MIN_GROUP_BUDGET);
-    // Parallelism guard: with the floor alone, a plan whose output is
-    // small relative to `workers × MIN_GROUP_BUDGET` (but whose
-    // multiply count still clears the fan-out threshold) would collapse
-    // into fewer units than workers. Cap the budget so every worker
-    // can hold a unit whenever the plan has that much work to give out.
-    budget.min((total_elems / workers).max(tile).max(1))
+    let budget = max_task_mults
+        .max(total_mults / spread.max(1))
+        .max(MIN_GROUP_MULTS);
+    // Parallelism guard: with the floors alone, a plan whose multiply
+    // total is small relative to `workers × MIN_GROUP_MULTS` (but still
+    // clears the fan-out threshold) would collapse into fewer units
+    // than workers. Cap the budget so every worker can hold a unit
+    // whenever the plan has that much work to give out.
+    budget.min((total_mults / workers).max(max_task_mults).max(1))
 }
 
 /// One tile of one output diagonal: the window `[lo, hi)` of the
@@ -190,6 +202,10 @@ pub struct TileTask {
     /// Contributions overlapping this tile, clipped to `[lo, hi)`,
     /// in the plan's deterministic order.
     pub contribs: Vec<Contribution>,
+    /// Multiply-accumulates this tile performs (sum of its clipped
+    /// contribution lengths) — the weight the scheduler and the shard
+    /// partitioner balance by.
+    pub mults: usize,
 }
 
 /// A [`MulPlan`] cut into cache-sized tile tasks; the unit-of-work pool
@@ -203,6 +219,20 @@ pub struct TilePlan {
     /// within each diagonal (so the executor can carve the output planes
     /// sequentially).
     pub tasks: Vec<TileTask>,
+}
+
+impl TilePlan {
+    /// Total multiply-accumulates across all tasks. Clipping conserves
+    /// multiply work, so this equals the source plan's `mults`.
+    pub fn total_mults(&self) -> usize {
+        self.tasks.iter().map(|t| t.mults).sum()
+    }
+
+    /// Multiply count of the heaviest single task (0 for empty plans) —
+    /// the irreducible granularity [`group_budget`] floors at.
+    pub fn max_task_mults(&self) -> usize {
+        self.tasks.iter().map(|t| t.mults).max().unwrap_or(0)
+    }
 }
 
 /// One pool task of a [`WorkSchedule`]: the contiguous run
@@ -219,6 +249,9 @@ pub struct WorkUnit {
     /// Total output elements the unit writes (the sum of its tasks'
     /// window lengths — the carve width in the output planes).
     pub elems: usize,
+    /// Total multiply-accumulates the unit performs (the balance
+    /// weight; the budget of [`schedule_work`] bounds this).
+    pub mults: usize,
 }
 
 /// A balanced work schedule over a [`TilePlan`]: short tile tasks
@@ -228,7 +261,7 @@ pub struct WorkUnit {
 /// executed by [`execute_scheduled`].
 #[derive(Clone, Debug)]
 pub struct WorkSchedule {
-    /// Element budget the units were coalesced to (see [`group_budget`]).
+    /// Multiply budget the units were coalesced to (see [`group_budget`]).
     pub budget: usize,
     /// Units in arena order, jointly partitioning every tile task.
     pub units: Vec<WorkUnit>,
@@ -249,6 +282,7 @@ impl WorkSchedule {
                     task_lo: t,
                     task_hi: t + 1,
                     elems: task.hi - task.lo,
+                    mults: task.mults,
                 })
                 .collect(),
         }
@@ -263,37 +297,58 @@ impl WorkSchedule {
     pub fn is_empty(&self) -> bool {
         self.units.is_empty()
     }
+
+    /// Per-unit multiply skew of this schedule, in percent: the heaviest
+    /// unit's multiply count over the mean unit load (100 = perfectly
+    /// balanced; empty or zero-work schedules report 100).
+    pub fn mult_skew_pct(&self) -> u64 {
+        let total: usize = self.units.iter().map(|u| u.mults).sum();
+        let max = self.units.iter().map(|u| u.mults).max().unwrap_or(0);
+        if total == 0 {
+            return 100;
+        }
+        let mean = total as f64 / self.units.len() as f64;
+        ((max as f64 / mean) * 100.0).round() as u64
+    }
 }
 
 /// Coalesce consecutive tile tasks into [`WorkUnit`]s of at most
-/// `budget` output elements (a single task larger than the budget keeps
-/// its own unit). Greedy and order-preserving: units partition
-/// `tiles.tasks` into contiguous runs, so the executor's plane carving
-/// and per-element accumulation order are exactly those of per-task
-/// execution — grouping is unobservable except in pool-task count.
+/// `budget` **multiply-accumulates** (a single task heavier than the
+/// budget keeps its own unit). Greedy and order-preserving: units
+/// partition `tiles.tasks` into contiguous runs, so the executor's
+/// plane carving and per-element accumulation order are exactly those
+/// of per-task execution — grouping is unobservable except in pool-task
+/// count. Balancing by multiplies (not elements) keeps
+/// contribution-heavy diagonals from hiding behind element-cheap ones;
+/// the weights are exact, known at plan time.
 pub fn schedule_work(tiles: &TilePlan, budget: usize) -> WorkSchedule {
     let budget = budget.max(1);
     let mut units = Vec::new();
     let mut lo = 0usize;
-    let mut acc = 0usize;
+    let mut acc_elems = 0usize;
+    let mut acc_mults = 0usize;
     for (t, task) in tiles.tasks.iter().enumerate() {
         let len = task.hi - task.lo;
-        if t > lo && acc + len > budget {
+        if t > lo && acc_mults + task.mults > budget {
             units.push(WorkUnit {
                 task_lo: lo,
                 task_hi: t,
-                elems: acc,
+                elems: acc_elems,
+                mults: acc_mults,
             });
             lo = t;
-            acc = 0;
+            acc_elems = 0;
+            acc_mults = 0;
         }
-        acc += len;
+        acc_elems += len;
+        acc_mults += task.mults;
     }
     if lo < tiles.tasks.len() {
         units.push(WorkUnit {
             task_lo: lo,
             task_hi: tiles.tasks.len(),
-            elems: acc,
+            elems: acc_elems,
+            mults: acc_mults,
         });
     }
     WorkSchedule { budget, units }
@@ -335,15 +390,185 @@ pub fn tile_plan(plan: &MulPlan, tile: usize) -> TilePlan {
                 .iter()
                 .filter_map(|c| clip_contribution(c, lo, hi))
                 .collect();
+            let mults = contribs.iter().map(|c| c.len).sum();
             tasks.push(TileTask {
                 out_idx,
                 lo,
                 hi,
                 contribs,
+                mults,
             });
         }
     }
     TilePlan { tile, tasks }
+}
+
+/// One shard's contiguous run of tile tasks: the half-open task range
+/// `[task_lo, task_hi)` plus its pre-computed output-plane width and
+/// multiply load. Because tasks are in arena order, every range owns
+/// one contiguous, disjoint slice of the output planes — the property
+/// that makes stitching a plain concatenation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
+    /// First tile task of the range (index into [`TilePlan::tasks`]).
+    pub task_lo: usize,
+    /// One past the last tile task of the range (`== task_lo` for an
+    /// empty shard, which arises when `S` exceeds the task count).
+    pub task_hi: usize,
+    /// Output elements the range writes (its slice width in the planes).
+    pub elems: usize,
+    /// Multiply-accumulates the range performs (the balance weight).
+    pub mults: usize,
+}
+
+/// A [`TilePlan`] partitioned into `S` contiguous, multiply-balanced
+/// tile ranges — the unit of distribution of the shard layer
+/// ([`crate::coordinator::shard`]). Built by [`shard_plan`]; pure in
+/// its inputs, so parent and worker processes derive identical ranges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Exactly the requested shard count of ranges, in arena order,
+    /// jointly covering every tile task (trailing ranges may be empty).
+    pub ranges: Vec<ShardRange>,
+}
+
+impl ShardPlan {
+    /// Number of shard ranges (the requested shard count).
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// True when the plan holds no ranges at all (never produced by
+    /// [`shard_plan`], which clamps the shard count to at least 1).
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Multiply-balance skew across the shards, in percent: the
+    /// heaviest range's multiply count over the mean per-shard load
+    /// (100 = perfectly balanced; zero-work plans report 100).
+    pub fn mult_skew_pct(&self) -> u64 {
+        let total: usize = self.ranges.iter().map(|r| r.mults).sum();
+        let max = self.ranges.iter().map(|r| r.mults).max().unwrap_or(0);
+        if total == 0 {
+            return 100;
+        }
+        let mean = total as f64 / self.ranges.len() as f64;
+        ((max as f64 / mean) * 100.0).round() as u64
+    }
+}
+
+/// Partition a tile plan into `shards` contiguous, multiply-balanced
+/// task ranges. Greedy with a remaining-work target: shard `i` of the
+/// `L` still to fill takes tasks until it reaches
+/// `ceil(remaining / L)` multiplies, the last shard takes the rest.
+/// Guarantees: exactly `shards` ranges (clamped to ≥ 1), contiguous and
+/// jointly covering every task, and — when the plan has any multiplies —
+/// every shard's load at most `ceil(total / shards)` plus one task's
+/// worth (the classic greedy bound). Zero-work plans fall back to
+/// balancing task counts so tasks still spread. Deterministic and pure,
+/// so a worker process re-deriving the partition from the same operands
+/// and tile length lands on identical ranges.
+pub fn shard_plan(tiles: &TilePlan, shards: usize) -> ShardPlan {
+    let s = shards.max(1);
+    let n_tasks = tiles.tasks.len();
+    let total_mults = tiles.total_mults();
+    // Weight: multiply count; one-per-task when the plan has no
+    // multiply work at all (so empty-work tasks still spread).
+    let weight =
+        |t: &TileTask| -> usize { if total_mults > 0 { t.mults } else { 1 } };
+    let mut remaining: usize = tiles.tasks.iter().map(weight).sum();
+    let mut ranges = Vec::with_capacity(s);
+    let mut lo = 0usize;
+    for i in 0..s {
+        let left = s - i;
+        let mut hi = lo;
+        if left == 1 {
+            hi = n_tasks;
+        } else {
+            let target = remaining.div_ceil(left);
+            let mut acc = 0usize;
+            while hi < n_tasks && acc < target {
+                acc += weight(&tiles.tasks[hi]);
+                hi += 1;
+            }
+        }
+        let run = &tiles.tasks[lo..hi];
+        let elems = run.iter().map(|t| t.hi - t.lo).sum();
+        let mults = run.iter().map(|t| t.mults).sum();
+        remaining -= run.iter().map(weight).sum::<usize>();
+        ranges.push(ShardRange {
+            task_lo: lo,
+            task_hi: hi,
+            elems,
+            mults,
+        });
+        lo = hi;
+    }
+    debug_assert_eq!(lo, n_tasks);
+    ShardPlan { ranges }
+}
+
+/// Execute the contiguous tile-task run `[task_lo, task_hi)` into the
+/// output-plane slice that run owns (`dst_re`/`dst_im` must be exactly
+/// the run's total window length). This is the one execution body shared
+/// by the scheduled executor (one [`WorkUnit`] per call), the in-process
+/// shard executor ([`execute_shard_ranges`]) and the process shard
+/// worker ([`crate::coordinator::shard::run_worker`]) — all three
+/// therefore produce identical `f64` streams for identical ranges.
+pub fn fill_task_range(
+    tiles: &TilePlan,
+    task_lo: usize,
+    task_hi: usize,
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) {
+    debug_assert_eq!(dst_re.len(), dst_im.len());
+    let mut off = 0usize;
+    for task in &tiles.tasks[task_lo..task_hi] {
+        let len = task.hi - task.lo;
+        diag_mul::fill_window(
+            &task.contribs,
+            task.lo,
+            a,
+            b,
+            &mut dst_re[off..off + len],
+            &mut dst_im[off..off + len],
+        );
+        off += len;
+    }
+    debug_assert_eq!(off, dst_re.len());
+}
+
+/// Execute every range of a [`ShardPlan`] in process, returning one
+/// `(re, im)` output-plane slice per range in shard order (empty ranges
+/// yield empty slices). Ranges fan out across the worker pool — at most
+/// one worker per shard — and each range's slice is written by exactly
+/// one worker in plan order, so concatenating the slices reproduces
+/// single-engine execution **bitwise** (this is what the shard
+/// coordinator stitches, and what the `diamond shard-worker` process
+/// computes remotely for one range at a time).
+pub fn execute_shard_ranges(
+    tiles: &TilePlan,
+    sp: &ShardPlan,
+    a: &PackedDiagMatrix,
+    b: &PackedDiagMatrix,
+    workers: usize,
+) -> Vec<(Vec<f64>, Vec<f64>)> {
+    let run = |r: ShardRange| {
+        let mut re = vec![0f64; r.elems];
+        let mut im = vec![0f64; r.elems];
+        fill_task_range(tiles, r.task_lo, r.task_hi, a, b, &mut re, &mut im);
+        (re, im)
+    };
+    let total_mults: usize = sp.ranges.iter().map(|r| r.mults).sum();
+    if workers > 1 && sp.ranges.len() > 1 && total_mults >= PARALLEL_MULTS_THRESHOLD {
+        crate::coordinator::pool::parallel_map(sp.ranges.clone(), workers, run)
+    } else {
+        sp.ranges.iter().copied().map(run).collect()
+    }
 }
 
 /// Execute a tiled plan at per-task pool granularity (one pool task per
@@ -405,20 +630,7 @@ pub fn execute_scheduled(
         debug_assert!(rest_re.is_empty() && rest_im.is_empty());
         let run_unit = |(u, dst_re, dst_im): (usize, &mut [f64], &mut [f64])| {
             let unit = &sched.units[u];
-            let mut off = 0usize;
-            for task in &tiles.tasks[unit.task_lo..unit.task_hi] {
-                let len = task.hi - task.lo;
-                diag_mul::fill_window(
-                    &task.contribs,
-                    task.lo,
-                    a,
-                    b,
-                    &mut dst_re[off..off + len],
-                    &mut dst_im[off..off + len],
-                );
-                off += len;
-            }
-            debug_assert_eq!(off, unit.elems);
+            fill_task_range(tiles, unit.task_lo, unit.task_hi, a, b, dst_re, dst_im);
         };
         if fan_out {
             crate::coordinator::pool::parallel_map(items, workers, run_unit);
@@ -493,6 +705,12 @@ pub struct KernelStats {
     /// Work units scheduled (the pool-task granularity; with coalescing
     /// off this equals `tiles_executed`).
     pub units_scheduled: u64,
+    /// Heaviest multiply load any scheduled work unit carried.
+    pub unit_mults_max: u64,
+    /// Worst per-unit multiply skew of any executed schedule, in
+    /// percent (heaviest unit over the schedule's mean unit load;
+    /// 100 = perfectly balanced — see [`WorkSchedule::mult_skew_pct`]).
+    pub unit_mult_skew_pct: u64,
 }
 
 /// Cache key: a plan is fully determined by the operand offset sets and
@@ -614,7 +832,10 @@ impl KernelEngine {
         let tile = self.cfg.tile.resolve(total, self.cfg.workers);
         let tiles = tile_plan(&plan, tile);
         let schedule = if self.cfg.coalesce {
-            schedule_work(&tiles, group_budget(tile, total, self.cfg.workers))
+            schedule_work(
+                &tiles,
+                group_budget(tiles.max_task_mults(), plan.mults, self.cfg.workers),
+            )
         } else {
             WorkSchedule::per_task(&tiles)
         };
@@ -626,14 +847,12 @@ impl KernelEngine {
         })
     }
 
-    /// Multiply through the full engine stack: cached plan → tiled,
-    /// scheduled execution across the worker pool.
-    pub fn multiply(
-        &mut self,
-        a: &PackedDiagMatrix,
-        b: &PackedDiagMatrix,
-    ) -> (PackedDiagMatrix, OpStats) {
-        let planned = self.plan(a, b);
+    /// Record the execution counters for `planned` (multiplies, tiles,
+    /// units, multiply skew). Called by [`KernelEngine::execute_planned`];
+    /// shard executors that run a planned product outside the engine
+    /// ([`crate::coordinator::shard::ShardCoordinator`]) call it directly
+    /// so [`KernelStats`] stays the single execution ledger.
+    pub fn record_execution(&mut self, planned: &PlannedProduct) {
         self.stats.multiplies = self.stats.multiplies.saturating_add(1);
         self.stats.tiles_executed = self
             .stats
@@ -643,6 +862,32 @@ impl KernelEngine {
             .stats
             .units_scheduled
             .saturating_add(planned.schedule.units.len() as u64);
+        let max_unit = planned
+            .schedule
+            .units
+            .iter()
+            .map(|u| u.mults as u64)
+            .max()
+            .unwrap_or(0);
+        self.stats.unit_mults_max = self.stats.unit_mults_max.max(max_unit);
+        self.stats.unit_mult_skew_pct = self
+            .stats
+            .unit_mult_skew_pct
+            .max(planned.schedule.mult_skew_pct());
+    }
+
+    /// Execute an already-planned product through the engine's
+    /// configured executor, updating the execution counters.
+    /// [`KernelEngine::multiply`] is [`KernelEngine::plan`] + this; the
+    /// shard coordinator calls `plan` itself and substitutes its own
+    /// (in-process or process-backed) range executor for this step.
+    pub fn execute_planned(
+        &mut self,
+        planned: &PlannedProduct,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> (PackedDiagMatrix, OpStats) {
+        self.record_execution(planned);
         execute_scheduled(
             &planned.plan,
             &planned.tiles,
@@ -651,6 +896,17 @@ impl KernelEngine {
             b,
             self.cfg.workers,
         )
+    }
+
+    /// Multiply through the full engine stack: cached plan → tiled,
+    /// scheduled execution across the worker pool.
+    pub fn multiply(
+        &mut self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> (PackedDiagMatrix, OpStats) {
+        let planned = self.plan(a, b);
+        self.execute_planned(&planned, a, b)
     }
 }
 
@@ -726,14 +982,15 @@ mod tests {
                 for u in &sched.units {
                     assert_eq!(u.task_lo, next, "tile={tile} budget={budget}");
                     assert!(u.task_hi > u.task_lo);
-                    let elems: usize = tp.tasks[u.task_lo..u.task_hi]
-                        .iter()
-                        .map(|t| t.hi - t.lo)
-                        .sum();
+                    let run = &tp.tasks[u.task_lo..u.task_hi];
+                    let elems: usize = run.iter().map(|t| t.hi - t.lo).sum();
+                    let mults: usize = run.iter().map(|t| t.mults).sum();
                     assert_eq!(elems, u.elems);
-                    // A unit only exceeds the budget when a single task does.
+                    assert_eq!(mults, u.mults);
+                    // A unit only exceeds the multiply budget when a
+                    // single task does.
                     assert!(
-                        u.elems <= budget || u.task_hi - u.task_lo == 1,
+                        u.mults <= budget || u.task_hi - u.task_lo == 1,
                         "tile={tile} budget={budget} unit {u:?}"
                     );
                     next = u.task_hi;
@@ -742,13 +999,100 @@ mod tests {
                 // Greedy maximality: two adjacent units never fit one budget
                 // (otherwise the scheduler under-coalesced).
                 for w in sched.units.windows(2) {
-                    assert!(w[0].elems + (tp.tasks[w[1].task_lo].hi - tp.tasks[w[1].task_lo].lo) > budget);
+                    assert!(w[0].mults + tp.tasks[w[1].task_lo].mults > budget);
                 }
             }
         }
         // Empty plans schedule to nothing.
         let empty = tile_plan(&plan_diag_mul(&PackedDiagMatrix::zeros(8), &band(8, 1)), 4);
         assert!(schedule_work(&empty, 16).is_empty());
+    }
+
+    #[test]
+    fn shard_plan_partitions_and_balances_by_mults() {
+        let a = band(300, 4);
+        let b = band(300, 3);
+        let plan = plan_diag_mul(&a, &b);
+        for tile in [1usize, 17, 64, 100_000] {
+            let tp = tile_plan(&plan, tile);
+            let total = tp.total_mults();
+            assert_eq!(total, plan.mults, "clipping conserves multiply work");
+            let max_task = tp.max_task_mults();
+            for shards in 1..=8usize {
+                let sp = shard_plan(&tp, shards);
+                assert_eq!(sp.len(), shards, "tile={tile}");
+                // Contiguous joint cover of every task, in order.
+                let mut next = 0usize;
+                for r in &sp.ranges {
+                    assert_eq!(r.task_lo, next, "tile={tile} shards={shards}");
+                    assert!(r.task_hi >= r.task_lo);
+                    let run = &tp.tasks[r.task_lo..r.task_hi];
+                    assert_eq!(r.elems, run.iter().map(|t| t.hi - t.lo).sum::<usize>());
+                    assert_eq!(r.mults, run.iter().map(|t| t.mults).sum::<usize>());
+                    next = r.task_hi;
+                }
+                assert_eq!(next, tp.tasks.len());
+                // Greedy balance bound: no shard exceeds the ideal share
+                // by more than one task's weight.
+                let heaviest = sp.ranges.iter().map(|r| r.mults).max().unwrap();
+                assert!(
+                    heaviest <= total.div_ceil(shards) + max_task,
+                    "tile={tile} shards={shards}: {heaviest} mults in one shard \
+                     (ideal {}, max task {max_task})",
+                    total.div_ceil(shards)
+                );
+                assert!(sp.mult_skew_pct() >= 100);
+            }
+        }
+        // S > tasks: trailing shards come back empty but the partition
+        // still covers everything exactly once.
+        let coarse = tile_plan(&plan, usize::MAX); // one task per diagonal
+        let sp = shard_plan(&coarse, coarse.tasks.len() + 5);
+        assert_eq!(sp.len(), coarse.tasks.len() + 5);
+        assert!(sp.ranges.iter().filter(|r| r.task_lo == r.task_hi).count() >= 5);
+        assert_eq!(sp.ranges.last().unwrap().task_hi, coarse.tasks.len());
+        // Empty plans shard to all-empty ranges; shards=0 clamps to 1.
+        let empty = tile_plan(&plan_diag_mul(&PackedDiagMatrix::zeros(8), &band(8, 1)), 4);
+        let sp = shard_plan(&empty, 3);
+        assert!(sp.ranges.iter().all(|r| r.task_lo == r.task_hi && r.elems == 0));
+        assert_eq!(shard_plan(&empty, 0).len(), 1);
+    }
+
+    #[test]
+    fn sharded_ranges_stitch_bitwise() {
+        // Concatenating execute_shard_ranges slices reproduces the
+        // single-engine planes bitwise at every shard count.
+        let a = band(300, 4);
+        let b = band(300, 3);
+        let plan = plan_diag_mul(&a, &b);
+        let (want, _) = crate::linalg::packed_diag_mul_counted(&a, &b);
+        for tile in [23usize, 100_000] {
+            let tp = tile_plan(&plan, tile);
+            for shards in [1usize, 2, 3, 5, 8] {
+                let sp = shard_plan(&tp, shards);
+                for workers in [1usize, 3] {
+                    let slices = execute_shard_ranges(&tp, &sp, &a, &b, workers);
+                    assert_eq!(slices.len(), shards);
+                    let mut re = Vec::new();
+                    let mut im = Vec::new();
+                    for (sre, sim) in &slices {
+                        re.extend_from_slice(sre);
+                        im.extend_from_slice(sim);
+                    }
+                    let offsets = plan.offsets().to_vec();
+                    let mut starts = vec![0usize];
+                    for out in &plan.outs {
+                        starts.push(starts.last().unwrap() + out.len);
+                    }
+                    let mut c = PackedDiagMatrix::from_raw_parts(plan.n, offsets, starts, re, im);
+                    c.prune(ZERO_TOL);
+                    assert!(
+                        c.bit_eq(&want),
+                        "tile={tile} shards={shards} workers={workers}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -795,16 +1139,16 @@ mod tests {
             TileMode::Auto.resolve(1 << 22, 3)
         );
         assert_eq!(TileMode::Fixed(40).resolve(1 << 22, 3), 40);
-        // The group budget never drops below the tile…
+        // The multiply budget never drops below the heaviest task…
         assert_eq!(group_budget(1 << 20, 100, 2), 1 << 20);
-        // …applies the coalescing floor on small plans (where fan-out
-        // would not trigger anyway)…
+        // …is capped at total/workers on small plans (where fan-out
+        // would not trigger anyway) despite the MIN_GROUP_MULTS floor…
         assert_eq!(group_budget(16, 100, 2), 16.max(100 / 2));
-        // …and on big plans is capped so the pool never gets fewer
-        // units than workers: 8 workers × 41k elements → ≤ total/8.
+        // …and on big plans the cap keeps the pool from getting fewer
+        // units than workers: 8 workers × 41k multiplies → ≤ total/8.
         let b = group_budget(1281, 41_000, 8);
         assert!(b <= 41_000 / 8, "budget {b} would starve the pool");
-        assert!(b >= 1281, "budget {b} must not split below a tile");
+        assert!(b >= 1281, "budget {b} must not split below a task");
     }
 
     #[test]

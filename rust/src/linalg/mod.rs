@@ -8,8 +8,10 @@
 //! engine** (see `docs/ARCHITECTURE.md`): [`diag_mul`] holds the
 //! plan/execute phases over the SoA packed format, [`engine`] adds
 //! adaptive tiling of long output diagonals ([`engine::TileMode`]),
-//! coalesced scheduling of short ones ([`engine::schedule_work`]) and
-//! cross-multiplication plan caching.
+//! multiply-balanced coalesced scheduling of short ones
+//! ([`engine::schedule_work`]), shard partitioning for multi-engine /
+//! multi-process execution ([`engine::shard_plan`] — driven by
+//! [`crate::coordinator::shard`]) and cross-multiplication plan caching.
 #![warn(missing_docs)]
 
 pub mod diag_mul;
@@ -21,7 +23,10 @@ pub use diag_mul::{
     diag_mul, diag_mul_counted, diag_mul_parallel, diag_mul_reference, execute_plan,
     packed_diag_mul_counted, packed_diag_mul_parallel, plan_diag_mul, MulPlan,
 };
-pub use engine::{EngineConfig, KernelEngine, KernelStats, TileMode, WorkSchedule};
+pub use engine::{
+    shard_plan, EngineConfig, KernelEngine, KernelStats, PlannedProduct, ShardPlan,
+    ShardRange, TileMode, WorkSchedule,
+};
 pub use gustavson::gustavson_mul;
 pub use outer::outer_mul;
 

@@ -43,6 +43,13 @@ pub struct EngineStats {
     /// entirely on packed operands) — the counter behind the ROADMAP
     /// "packed-operand coordinator path" item.
     pub operand_copies_avoided: u64,
+    /// Shard ranges executed for this call (0 when the multiplication
+    /// ran on a single engine): the fan-out of the shard layer
+    /// (`coordinator::shard`), `S` per sharded oracle multiply.
+    pub shards_used: u64,
+    /// Output-plane bytes stitched back from shard slices (16 bytes per
+    /// complex element; 0 unsharded).
+    pub shard_stitch_bytes: u64,
 }
 
 /// Row-aligned f32 planes of a chunk of diagonals.

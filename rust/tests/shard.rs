@@ -1,0 +1,264 @@
+//! Shard-layer property and process-backend tests: sharded execution
+//! (both backends) must be **bitwise identical** (`f64::to_bits`) to
+//! single-engine execution for shard counts 1–8 on band, ±2^q and mixed
+//! band-length workloads, survive uneven-range edge cases (S > tiles,
+//! empty shards), and fail fast — with the worker's stderr surfaced —
+//! when a process worker cannot answer.
+
+use diamond::coordinator::shard::{ProcessShardExecutor, ShardBackend, ShardCoordinator};
+use diamond::format::DiagMatrix;
+use diamond::linalg::engine::{shard_plan, tile_plan};
+use diamond::linalg::{packed_diag_mul_counted, plan_diag_mul, EngineConfig, TileMode};
+use diamond::num::Complex;
+use diamond::testutil::{prop_check, random_exp_offset_matrix, XorShift64};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// The built `diamond` binary (cargo provides the path to integration
+/// tests), re-entered as `diamond shard-worker` by the process backend.
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_diamond"))
+}
+
+fn random_band(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    for _ in 0..rng.gen_range(1, max_diags + 1) {
+        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+        let len = DiagMatrix::diag_len(n, d);
+        let vals: Vec<Complex> = (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
+/// Mixed band-length operand: the full main diagonal plus a random
+/// subset of extreme corner offsets (many length-1..16 diagonals next
+/// to one of length n) — the shard balancer's worst case.
+fn random_mixed_band(rng: &mut XorShift64, n: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    let vals = |rng: &mut XorShift64, len: usize| -> Vec<Complex> {
+        (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect()
+    };
+    let v = vals(rng, n);
+    m.set_diag(0, v);
+    for k in 1..=16i64.min(n as i64 - 1) {
+        for sign in [1i64, -1] {
+            if rng.gen_bool(0.6) {
+                let d = sign * (n as i64 - k);
+                let len = DiagMatrix::diag_len(n, d);
+                let v = vals(rng, len);
+                m.set_diag(d, v);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn inproc_sharded_is_bitwise_identical_across_shard_counts_1_to_8() {
+    // The tentpole determinism contract on all three workload families.
+    prop_check("sharded == single engine, bitwise, S=1..8", 10, |rng| {
+        let n = rng.gen_range(48, 512);
+        let (a, b) = match rng.gen_range(0, 3) {
+            0 => (random_band(rng, n, 6), random_band(rng, n, 6)),
+            1 => (
+                random_exp_offset_matrix(rng, n, 6),
+                random_exp_offset_matrix(rng, n, 6),
+            ),
+            _ => (random_mixed_band(rng, n), random_mixed_band(rng, n)),
+        };
+        let ap = a.freeze();
+        let bp = b.freeze();
+        let (single, single_stats) = packed_diag_mul_counted(&ap, &bp);
+        for shards in 1..=8usize {
+            let mut sc = ShardCoordinator::new(
+                EngineConfig {
+                    tile: TileMode::Fixed(rng.gen_range(1, 256)),
+                    workers: rng.gen_range(1, 5),
+                    ..EngineConfig::default()
+                },
+                shards,
+                ShardBackend::InProc,
+            );
+            let (c, stats) = sc.multiply(&ap, &bp).expect("inproc cannot fail");
+            if !c.bit_eq(&single) {
+                return Err(format!("n={n} shards={shards}: output differs bitwise"));
+            }
+            if stats != single_stats {
+                return Err(format!("n={n} shards={shards}: OpStats differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uneven_ranges_and_empty_shards() {
+    // S far beyond the task count: trailing empty shards, still exact.
+    let id = DiagMatrix::identity(40).freeze();
+    let (single, _) = packed_diag_mul_counted(&id, &id);
+    for shards in [1usize, 2, 7, 8] {
+        let mut sc = ShardCoordinator::new(
+            EngineConfig {
+                tile: TileMode::Fixed(1 << 20), // 1 task per diagonal → 1 task total
+                workers: 1,
+                ..EngineConfig::default()
+            },
+            shards,
+            ShardBackend::InProc,
+        );
+        let (c, _) = sc.multiply(&id, &id).unwrap();
+        assert!(c.bit_eq(&single), "shards={shards}");
+    }
+    // The shard partition itself: S > tasks leaves trailing empties.
+    let plan = plan_diag_mul(&id, &id);
+    let tiles = tile_plan(&plan, 1 << 20);
+    assert_eq!(tiles.tasks.len(), 1);
+    let sp = shard_plan(&tiles, 8);
+    assert_eq!(sp.len(), 8);
+    assert_eq!(sp.ranges.iter().filter(|r| r.task_hi > r.task_lo).count(), 1);
+    assert_eq!(sp.ranges.last().unwrap().task_hi, 1);
+    // All-zero operands: every range empty, product empty.
+    let zero = DiagMatrix::zeros(16).freeze();
+    let mut sc = ShardCoordinator::new(EngineConfig::default(), 4, ShardBackend::InProc);
+    let (z, zs) = sc.multiply(&zero, &id).unwrap();
+    assert_eq!(z.nnzd(), 0);
+    assert_eq!(zs.mults, 0);
+}
+
+#[test]
+fn process_backend_is_bitwise_identical_to_single_engine() {
+    // Real child processes over the wire format, at shard counts 2 and
+    // 4, on both an exp-offset and a mixed band-length workload. n is
+    // large enough that every shard gets real work.
+    let mut rng = XorShift64::new(0xD1A40D);
+    let workloads = vec![
+        (
+            random_exp_offset_matrix(&mut rng, 512, 8),
+            random_exp_offset_matrix(&mut rng, 512, 8),
+        ),
+        (random_mixed_band(&mut rng, 300), random_mixed_band(&mut rng, 300)),
+    ];
+    for (a, b) in &workloads {
+        let ap = a.freeze();
+        let bp = b.freeze();
+        let (single, single_stats) = packed_diag_mul_counted(&ap, &bp);
+        for shards in [2usize, 4] {
+            let mut sc = ShardCoordinator::with_executor(
+                EngineConfig::default(),
+                shards,
+                ProcessShardExecutor::new(worker_exe()),
+            );
+            let (c, stats) = sc
+                .multiply(&ap, &bp)
+                .expect("process backend should succeed");
+            assert!(
+                c.bit_eq(&single),
+                "n={} shards={shards}: process-sharded output differs bitwise",
+                ap.dim()
+            );
+            assert_eq!(stats, single_stats);
+            assert_eq!(sc.stats().shards_used, shards as u64);
+            assert!(sc.stats().stitch_bytes > 0);
+        }
+    }
+}
+
+#[test]
+fn process_backend_with_empty_shards_skips_spawns() {
+    // A single stored diagonal at a huge tile → one task; 4 shards mean
+    // 3 empty ranges that must not spawn workers (and must stitch to
+    // empty slices).
+    let id = DiagMatrix::identity(64).freeze();
+    let (single, _) = packed_diag_mul_counted(&id, &id);
+    let mut sc = ShardCoordinator::with_executor(
+        EngineConfig {
+            tile: TileMode::Fixed(1 << 20),
+            ..EngineConfig::default()
+        },
+        4,
+        ProcessShardExecutor::new(worker_exe()),
+    );
+    let (c, _) = sc.multiply(&id, &id).unwrap();
+    assert!(c.bit_eq(&single));
+}
+
+#[test]
+fn process_worker_failure_fails_fast_with_stderr() {
+    // A worker that exits immediately with an error (unknown
+    // subcommand): the parent must return a clear error — including the
+    // worker's stderr — well within the timeout, never hang.
+    let a = random_exp_offset_matrix(&mut XorShift64::new(7), 128, 5).freeze();
+    let executor = ProcessShardExecutor::new(worker_exe())
+        .with_args(vec!["definitely-not-a-subcommand".to_string()]);
+    let mut sc = ShardCoordinator::with_executor(EngineConfig::default(), 2, executor);
+    let t0 = Instant::now();
+    let err = sc.multiply(&a, &a).expect_err("dead worker must error");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "fail-fast took {elapsed:?}"
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard worker"), "unhelpful error: {msg}");
+    assert!(
+        msg.contains("unknown command"),
+        "worker stderr not surfaced: {msg}"
+    );
+}
+
+#[test]
+fn process_worker_nonsense_response_is_reported() {
+    // `diamond help` exits 0 but writes prose, not a response frame:
+    // the parent must reject it as a malformed response, not hang or
+    // stitch garbage.
+    let a = random_exp_offset_matrix(&mut XorShift64::new(9), 96, 4).freeze();
+    let executor =
+        ProcessShardExecutor::new(worker_exe()).with_args(vec!["help".to_string()]);
+    let mut sc = ShardCoordinator::with_executor(EngineConfig::default(), 2, executor);
+    let err = sc.multiply(&a, &a).expect_err("prose is not a response");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard worker"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn process_backend_reuses_shard_plans_across_a_chain() {
+    // Taylor-style replay: same offset structure twice → the plan cache
+    // and the shard-plan memo both hit, and results stay identical.
+    let a = random_exp_offset_matrix(&mut XorShift64::new(21), 256, 6).freeze();
+    let mut sc = ShardCoordinator::with_executor(
+        EngineConfig::default(),
+        3,
+        ProcessShardExecutor::new(worker_exe()),
+    );
+    let (c1, _) = sc.multiply(&a, &a).unwrap();
+    let (c2, _) = sc.multiply(&a, &a).unwrap();
+    assert!(c1.bit_eq(&c2));
+    assert_eq!(sc.stats().shard_plans_built, 1);
+    assert_eq!(sc.stats().shard_plan_reuses, 1);
+    assert_eq!(sc.kernel_stats().plan_cache_hits, 1);
+}
+
+#[test]
+fn sharded_taylor_chain_on_process_backend_matches_unsharded() {
+    // End-to-end: expm_diag over worker processes equals the in-process
+    // unsharded chain exactly.
+    let mut h = DiagMatrix::zeros(48);
+    for d in -2i64..=2 {
+        let len = DiagMatrix::diag_len(48, d);
+        h.set_diag(d, vec![Complex::new(0.8, 0.1 * d as f64); len]);
+    }
+    let single = diamond::taylor::expm_diag(&h, 0.3, 5);
+    let mut sc = ShardCoordinator::with_executor(
+        EngineConfig::default(),
+        2,
+        ProcessShardExecutor::new(worker_exe()),
+    );
+    let sharded = diamond::taylor::expm_diag_sharded(&h, 0.3, 5, &mut sc).unwrap();
+    assert_eq!(sharded.op, single.op);
+    assert_eq!(sharded.shard.sharded_multiplies, 5);
+}
