@@ -1,0 +1,340 @@
+"""Transliteration checks of the shard transport's wire encoding.
+
+The build container has no Rust toolchain, so the byte-exact encoding
+rules of ``rust/src/coordinator/transport.rs`` (handshake + framing) and
+``rust/src/coordinator/shard.rs`` (job/response bodies) are mirrored
+here 1:1 — same magics, same field order, same little-endian widths —
+and property-checked:
+
+* the 8-byte ``DSHK | version u32`` hello round-trips, and version
+  skew / foreign magic / truncation are rejected exactly like
+  ``check_hello`` rejects them (both versions named in the error);
+* the TCP envelope ``len u64 | payload`` round-trips, including
+  multi-part writes, clean-EOF detection and the oversize-length guard;
+* the job and response bodies round-trip **bit-exactly** (``f64`` values
+  travel as IEEE-754 bit patterns: ``-0.0``, denormals and NaN payloads
+  survive untouched);
+* golden byte layouts pin the exact offsets, so a Rust-side encoding
+  change that forgets the version bump fails here loudly;
+* composed streams parse: ``hello | job`` (the process backend's stdin)
+  and ``hello | frame(job) …`` (one TCP connection).
+"""
+
+import math
+import struct
+
+import numpy as np
+import pytest
+
+# --- mirror of rust/src/coordinator/transport.rs --------------------------
+
+WIRE_VERSION = 2
+HELLO_MAGIC = b"DSHK"
+HELLO_LEN = 8
+MAX_FRAME_BYTES = 1 << 34
+
+JOB_MAGIC = b"DSJ1"
+RESP_MAGIC = b"DSR1"
+STATUS_OK = 0
+STATUS_ERR = 1
+
+
+def encode_hello(version=WIRE_VERSION):
+    return HELLO_MAGIC + struct.pack("<I", version)
+
+
+def decode_hello(buf):
+    if len(buf) < HELLO_LEN:
+        raise ValueError(f"truncated shard handshake: got {len(buf)} of {HELLO_LEN} bytes")
+    if buf[:4] != HELLO_MAGIC:
+        raise ValueError("not a shard transport handshake")
+    return struct.unpack("<I", buf[4:HELLO_LEN])[0]
+
+
+def check_hello(buf):
+    peer = decode_hello(buf)
+    if peer != WIRE_VERSION:
+        raise ValueError(
+            f"shard wire version mismatch: peer speaks v{peer}, "
+            f"this build speaks v{WIRE_VERSION}"
+        )
+
+
+def encode_frame(*parts):
+    payload = b"".join(parts)
+    return struct.pack("<Q", len(payload)) + payload
+
+
+def read_frame(buf, pos=0):
+    """Returns (payload | None, new_pos); None on clean EOF at ``pos``."""
+    if pos == len(buf):
+        return None, pos
+    if len(buf) - pos < 8:
+        raise ValueError("peer closed mid-frame")
+    (length,) = struct.unpack_from("<Q", buf, pos)
+    if length > MAX_FRAME_BYTES:
+        raise ValueError("corrupt length prefix")
+    end = pos + 8 + length
+    if end > len(buf):
+        raise ValueError("peer closed mid-frame")
+    return buf[pos + 8 : end], end
+
+
+# --- mirror of the job/response bodies (coordinator/shard.rs) -------------
+
+
+def _unpack(fmt, buf, pos):
+    """``struct.unpack_from`` with the Rust ``Cursor`` contract: a
+    truncated frame is a loud ``ValueError``, never a raw struct error
+    (the Rust side bails with "truncated shard message")."""
+    try:
+        return struct.unpack_from(fmt, buf, pos)
+    except struct.error:
+        raise ValueError(
+            f"truncated shard message: wanted {struct.calcsize(fmt)} bytes at "
+            f"offset {pos}, frame holds {len(buf)}"
+        ) from None
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def encode_matrix(n, offsets, re, im):
+    elems = sum(n - abs(d) for d in offsets)
+    assert len(re) == len(im) == elems
+    out = [struct.pack("<Q", len(offsets))]
+    out += [struct.pack("<q", d) for d in offsets]
+    out += [struct.pack("<d", v) for v in re]
+    out += [struct.pack("<d", v) for v in im]
+    return b"".join(out)
+
+
+def encode_job(n, tile, task_lo, task_hi, mat_a, mat_b):
+    return (
+        JOB_MAGIC
+        + struct.pack("<QQQQ", n, tile, task_lo, task_hi)
+        + mat_a
+        + mat_b
+    )
+
+
+def decode_matrix(buf, pos, n):
+    (nnzd,) = _unpack("<Q", buf, pos)
+    pos += 8
+    if nnzd > 2 * n:
+        raise ValueError(f"matrix claims {nnzd} diagonals for dimension {n}")
+    offsets = []
+    elems = 0
+    for _ in range(nnzd):
+        (d,) = _unpack("<q", buf, pos)
+        pos += 8
+        if abs(d) >= max(n, 1):
+            raise ValueError(f"offset {d} out of range for dimension {n}")
+        elems += n - abs(d)
+        offsets.append(d)
+    re = list(_unpack(f"<{elems}d", buf, pos))
+    pos += 8 * elems
+    im = list(_unpack(f"<{elems}d", buf, pos))
+    pos += 8 * elems
+    if any(a >= b for a, b in zip(offsets, offsets[1:])):
+        raise ValueError("matrix offsets not strictly ascending")
+    return (offsets, re, im), pos
+
+
+def decode_job(buf):
+    if buf[:4] != JOB_MAGIC:
+        raise ValueError("not a shard job (bad magic)")
+    n, tile, task_lo, task_hi = _unpack("<QQQQ", buf, 4)
+    if task_lo > task_hi:
+        raise ValueError(f"inverted shard range [{task_lo}, {task_hi})")
+    a, pos = decode_matrix(buf, 36, n)
+    b, pos = decode_matrix(buf, pos, n)
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return n, tile, task_lo, task_hi, a, b
+
+
+def encode_ok(re, im, mults):
+    assert len(re) == len(im)
+    return (
+        RESP_MAGIC
+        + bytes([STATUS_OK])
+        + struct.pack("<QQ", mults, len(re))
+        + b"".join(struct.pack("<d", v) for v in re)
+        + b"".join(struct.pack("<d", v) for v in im)
+    )
+
+
+def encode_err(msg):
+    raw = msg.encode("utf-8")
+    return RESP_MAGIC + bytes([STATUS_ERR]) + struct.pack("<Q", len(raw)) + raw
+
+
+def decode_resp(buf):
+    if buf[:4] != RESP_MAGIC:
+        raise ValueError("not a shard response (bad magic)")
+    status = buf[4]
+    if status == STATUS_OK:
+        mults, elems = _unpack("<QQ", buf, 5)
+        pos = 21
+        re = list(_unpack(f"<{elems}d", buf, pos))
+        pos += 8 * elems
+        im = list(_unpack(f"<{elems}d", buf, pos))
+        pos += 8 * elems
+        if pos != len(buf):
+            raise ValueError("trailing bytes")
+        return re, im, mults
+    if status == STATUS_ERR:
+        (length,) = _unpack("<Q", buf, 5)
+        raise ValueError("worker reported: " + buf[13 : 13 + length].decode("utf-8"))
+    raise ValueError(f"unknown shard response status {status}")
+
+
+# --- the tests ------------------------------------------------------------
+
+
+def test_hello_golden_bytes_and_roundtrip():
+    h = encode_hello()
+    assert len(h) == HELLO_LEN
+    # Golden layout: magic then the version as little-endian u32. A Rust
+    # encoding change that forgets the version bump breaks this line.
+    assert h == b"DSHK\x02\x00\x00\x00"
+    assert decode_hello(h) == WIRE_VERSION
+    check_hello(h)  # no raise
+
+
+def test_hello_rejects_skew_magic_and_truncation():
+    with pytest.raises(ValueError) as e:
+        check_hello(encode_hello(WIRE_VERSION + 1))
+    # Both versions named, so either end of a skewed deployment can
+    # diagnose which side is stale.
+    assert f"v{WIRE_VERSION + 1}" in str(e.value)
+    assert f"v{WIRE_VERSION}" in str(e.value)
+    with pytest.raises(ValueError):
+        decode_hello(b"DSJ1" + struct.pack("<I", WIRE_VERSION))  # job magic is not a hello
+    with pytest.raises(ValueError):
+        decode_hello(encode_hello()[:5])
+    with pytest.raises(ValueError):
+        decode_hello(b"")
+
+
+def test_frame_roundtrip_multipart_and_bounds():
+    buf = encode_frame(b"hello ", b"world")
+    assert buf[:8] == struct.pack("<Q", 11)
+    payload, pos = read_frame(buf)
+    assert payload == b"hello world"
+    # Clean EOF between frames → None (the normal end of a connection).
+    payload, pos = read_frame(buf, pos)
+    assert payload is None and pos == len(buf)
+    # EOF mid-length and mid-payload are errors, not clean ends.
+    with pytest.raises(ValueError):
+        read_frame(buf[:4])
+    with pytest.raises(ValueError):
+        read_frame(buf[:12])
+    # An oversize length prefix is rejected before any allocation.
+    with pytest.raises(ValueError, match="corrupt"):
+        read_frame(struct.pack("<Q", MAX_FRAME_BYTES + 1))
+
+
+def test_job_golden_layout():
+    # 3×3 matrix with diagonals −1 and 0: E = 2 + 3 = 5 elements.
+    offsets = [-1, 0]
+    re = [1.0, 2.0, 3.0, 4.0, 5.0]
+    im = [0.5, -0.5, 0.25, -0.25, 0.0]
+    m = encode_matrix(3, offsets, re, im)
+    job = encode_job(3, 8192, 1, 4, m, m)
+    # Header: magic, then n/tile/task_lo/task_hi as u64 le.
+    assert job[:4] == b"DSJ1"
+    assert struct.unpack_from("<QQQQ", job, 4) == (3, 8192, 1, 4)
+    # Matrix A begins at byte 36 with its diagonal count.
+    assert struct.unpack_from("<Q", job, 36) == (2,)
+    assert struct.unpack_from("<qq", job, 44) == (-1, 0)
+    # Value planes follow as f64 bit patterns, re plane then im plane.
+    assert struct.unpack_from("<5d", job, 60) == tuple(re)
+    assert struct.unpack_from("<5d", job, 100) == tuple(im)
+    # Total: header 36 + 2 × (8 + 2·8 + 2·5·8) = 36 + 2·104.
+    assert len(job) == 36 + 2 * 104
+
+
+def test_job_roundtrip_and_rejections():
+    rng = np.random.default_rng(42)
+    for n in (1, 2, 7, 33):
+        offsets = sorted(
+            set(int(d) for d in rng.integers(-(n - 1), n, size=5)) if n > 1 else {0}
+        )
+        elems = sum(n - abs(d) for d in offsets)
+        re = [float(x) for x in rng.standard_normal(elems)]
+        im = [float(x) for x in rng.standard_normal(elems)]
+        m = encode_matrix(n, offsets, re, im)
+        job = encode_job(n, 64, 0, 3, m, m)
+        got_n, tile, lo, hi, (aoff, are, aim), _b = decode_job(job)
+        assert (got_n, tile, lo, hi) == (n, 64, 0, 3)
+        assert aoff == offsets
+        # Bit-exact: compare the u64 views, not float equality.
+        assert [f64_bits(x) for x in are] == [f64_bits(x) for x in re]
+        assert [f64_bits(x) for x in aim] == [f64_bits(x) for x in im]
+        with pytest.raises(ValueError):
+            decode_job(job[:-5])  # truncation
+        with pytest.raises(ValueError):
+            decode_job(job + b"\x00")  # trailing bytes
+    with pytest.raises(ValueError):
+        decode_job(b"nope")
+    # Inverted range and out-of-range offset are structural errors.
+    m = encode_matrix(4, [0], [1.0] * 4, [0.0] * 4)
+    with pytest.raises(ValueError, match="inverted"):
+        decode_job(encode_job(4, 8, 5, 2, m, m))
+    # Hand-crafted matrix claiming offset 9 in a 4-dim matrix: rejected
+    # at the offset check, before any value bytes are interpreted.
+    bad = struct.pack("<Q", 1) + struct.pack("<q", 9)
+    with pytest.raises(ValueError, match="out of range"):
+        decode_job(encode_job(4, 8, 0, 1, bad, m))
+
+
+def test_response_roundtrip_is_bit_exact():
+    # -0.0, a denormal and inf must cross the wire bit-identically —
+    # the transport moves bit patterns, not rounded decimals.
+    re = [1.5, -0.0, 5e-324, math.inf]
+    im = [0.0, 2.0, -3.25, -math.inf]
+    buf = encode_ok(re, im, 42)
+    assert buf[:5] == b"DSR1\x00"
+    gre, gim, mults = decode_resp(buf)
+    assert mults == 42
+    assert [f64_bits(x) for x in gre] == [f64_bits(x) for x in re]
+    assert [f64_bits(x) for x in gim] == [f64_bits(x) for x in im]
+    assert math.copysign(1.0, gre[1]) == -1.0  # -0.0 survived
+    with pytest.raises(ValueError, match="boom: tile 3 missing"):
+        decode_resp(encode_err("boom: tile 3 missing"))
+    with pytest.raises(ValueError):
+        decode_resp(buf[:7])
+
+
+def test_composed_streams_parse_like_both_transports():
+    m = encode_matrix(2, [0], [1.0, 2.0], [0.0, -1.0])
+    job = encode_job(2, 16, 0, 1, m, m)
+    # Process backend: both pipes are hello-stamped — stdin carries
+    # hello | job, stdout hello | response, each delimited by EOF.
+    stdin = encode_hello() + job
+    check_hello(stdin[:HELLO_LEN])
+    assert decode_job(stdin[HELLO_LEN:])[0] == 2
+    stdout = encode_hello() + encode_ok([1.0], [0.0], 1)
+    check_hello(stdout[:HELLO_LEN])
+    assert decode_resp(stdout[HELLO_LEN:])[2] == 1
+    # TCP: hello once, then one frame per job — two jobs on one
+    # connection (a Taylor chain) parse sequentially.
+    stream = encode_hello() + encode_frame(job) + encode_frame(job)
+    check_hello(stream[:HELLO_LEN])
+    pos = HELLO_LEN
+    seen = 0
+    while True:
+        payload, pos = read_frame(stream, pos)
+        if payload is None:
+            break
+        assert decode_job(payload)[0] == 2
+        seen += 1
+    assert seen == 2
+    # A version-skewed stream must fail at the handshake, before any
+    # job bytes are interpreted (the PR-4 mis-parse this fixes).
+    skewed = encode_hello(WIRE_VERSION + 1) + job
+    with pytest.raises(ValueError, match="version mismatch"):
+        check_hello(skewed[:HELLO_LEN])

@@ -71,6 +71,12 @@ pub struct KernelCase {
     pub sharded_x2_ns: f64,
     /// The shard layer at 4 ranges (in-process backend).
     pub sharded_x4_ns: f64,
+    /// The TCP transport at 2 ranges: two in-process `shard-serve`
+    /// daemons on ephemeral loopback ports, persistent connections,
+    /// warm server-side plan caches — cross-checked bitwise before
+    /// timing. `NaN` (rendered as `null` in BENCH_kernel.json) when
+    /// loopback networking is unavailable in the build sandbox.
+    pub sharded_tcp_x2_ns: f64,
     /// Tile length [`TileMode::Auto`] resolved to for this plan.
     pub grouped_auto_tile: usize,
     /// Pool tasks under per-diagonal scheduling (one per output
@@ -109,6 +115,12 @@ impl KernelCase {
     /// 4-way-sharded speedup over the seed BTreeMap kernel.
     pub fn speedup_sharded_x4(&self) -> f64 {
         self.btreemap_ns / self.sharded_x4_ns
+    }
+
+    /// 2-way TCP-sharded speedup over the seed BTreeMap kernel (`NaN`
+    /// when the TCP column could not run).
+    pub fn speedup_sharded_tcp_x2(&self) -> f64 {
+        self.btreemap_ns / self.sharded_tcp_x2_ns
     }
 
     /// Pool-task reduction of the coalesced schedule vs per-diagonal
@@ -302,6 +314,47 @@ pub fn run_case_on(
         s4.bit_eq(&serial_c),
         "4-way sharded kernel must be bit-identical to single-engine"
     );
+    // TCP transport at 2 ranges: two in-process shard-serve daemons on
+    // ephemeral loopback ports. Build sandboxes without loopback
+    // networking skip the column (NaN → null in the JSON) instead of
+    // failing the whole bench; a *correctness* divergence still panics.
+    let mut shard_tcp: Option<(ShardCoordinator, Vec<crate::coordinator::transport::ShardServer>)> =
+        match (
+            crate::coordinator::transport::ShardServer::spawn("127.0.0.1:0"),
+            crate::coordinator::transport::ShardServer::spawn("127.0.0.1:0"),
+        ) {
+            (Ok(s1), Ok(s2)) => {
+                let mut sc = ShardCoordinator::new(
+                    EngineConfig {
+                        workers,
+                        ..EngineConfig::default()
+                    },
+                    2,
+                    ShardBackend::Tcp {
+                        endpoints: vec![s1.endpoint(), s2.endpoint()],
+                    },
+                );
+                match sc.multiply(&ap, &bp) {
+                    Ok((stcp, _)) => {
+                        assert!(
+                            stcp.bit_eq(&serial_c),
+                            "tcp-sharded kernel must be bit-identical to single-engine"
+                        );
+                        Some((sc, vec![s1, s2]))
+                    }
+                    Err(e) => {
+                        eprintln!("tcp shard column skipped (loopback transport failed): {e:#}");
+                        None
+                    }
+                }
+            }
+            (r1, r2) => {
+                for e in [r1.err(), r2.err()].into_iter().flatten() {
+                    eprintln!("tcp shard column skipped (loopback bind failed): {e:#}");
+                }
+                None
+            }
+        };
 
     let btreemap_ns = time_ns(reps, || crate::linalg::diag_mul_reference(a, b).nnzd());
     let soa_serial_ns = time_ns(reps, || {
@@ -319,6 +372,43 @@ pub fn run_case_on(
     let sharded_x4_ns = time_ns(reps, || {
         shard4.multiply(&ap, &bp).expect("inproc").0.nnzd()
     });
+    // Manual timing loop for the tcp column: a transient transport
+    // failure mid-timing degrades to the null column (like a failed
+    // spawn) instead of panicking the whole bench away.
+    let sharded_tcp_x2_ns = match shard_tcp.as_mut() {
+        Some((sc, _servers)) => {
+            let mut failed = match sc.multiply(&ap, &bp) {
+                Ok(_) => false, // warmup
+                Err(e) => {
+                    eprintln!("tcp shard column skipped (warmup failed): {e:#}");
+                    true
+                }
+            };
+            let t0 = Instant::now();
+            let mut sink = 0usize;
+            for _ in 0..reps {
+                if failed {
+                    break;
+                }
+                match sc.multiply(&ap, &bp) {
+                    Ok((c, _)) => sink = sink.wrapping_add(c.nnzd()),
+                    Err(e) => {
+                        eprintln!("tcp shard column skipped mid-timing: {e:#}");
+                        failed = true;
+                    }
+                }
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / reps.max(1) as f64;
+            std::hint::black_box(sink);
+            if failed {
+                f64::NAN
+            } else {
+                ns
+            }
+        }
+        None => f64::NAN,
+    };
+    drop(shard_tcp); // disconnect, then stop the loopback daemons
 
     KernelCase {
         workload,
@@ -337,6 +427,7 @@ pub fn run_case_on(
         grouped_auto_ns,
         sharded_x2_ns,
         sharded_x4_ns,
+        sharded_tcp_x2_ns,
         grouped_auto_tile,
         tasks_per_diagonal,
         tasks_grouped,
@@ -428,12 +519,14 @@ pub fn tile_sweep(n: usize, qmax: u32, reps: usize) -> String {
 }
 
 /// The `diamond kernel --shards N [--shard-backend B]` verification +
-/// mini-bench, and the body of the CI `shard-smoke` gate: for each
-/// smoke workload, execute single-engine and `N`-way sharded on the
-/// requested backend and **fail** (Err → CLI exit 2) unless the
-/// stitched output is bitwise identical (`f64::to_bits`); report
-/// wall-clock, stitch volume and the shard multiply-balance skew.
-pub fn shard_check(shards: usize, backend: ShardBackend, smoke: bool) -> Result<String, String> {
+/// mini-bench, and the body of the CI `shard-smoke` and
+/// `remote-shard-smoke` gates: for each smoke workload, execute
+/// single-engine and `N`-way sharded on the requested backend and
+/// **fail** (Err → CLI exit 2) unless the stitched output is bitwise
+/// identical (`f64::to_bits`); report wall-clock, stitch volume and the
+/// shard multiply-balance skew — plus per-endpoint round-trips and
+/// bytes on the tcp backend.
+pub fn shard_check(shards: usize, backend: &ShardBackend, smoke: bool) -> Result<String, String> {
     let mut pairs: Vec<(&'static str, DiagMatrix, DiagMatrix)> = vec![
         (
             "exp-offset",
@@ -456,11 +549,12 @@ pub fn shard_check(shards: usize, backend: ShardBackend, smoke: bool) -> Result<
         "workload", "n", "shards", "backend", "single ms", "sharded ms", "vs single",
         "stitch KiB", "skew %", "bitwise",
     ]);
+    let mut endpoint_lines: Vec<String> = Vec::new();
     for (name, a, b) in &pairs {
         let ap = a.freeze();
         let bp = b.freeze();
         let (single, _) = crate::linalg::packed_diag_mul_counted(&ap, &bp);
-        let mut sc = ShardCoordinator::new(EngineConfig::default(), shards, backend);
+        let mut sc = ShardCoordinator::new(EngineConfig::default(), shards, backend.clone());
         let (c, _) = sc
             .multiply(&ap, &bp)
             .map_err(|e| format!("{name} n={}: sharded execution failed: {e:#}", ap.dim()))?;
@@ -497,21 +591,55 @@ pub fn shard_check(shards: usize, backend: ShardBackend, smoke: bool) -> Result<
             skew_pct.to_string(),
             "identical".to_string(),
         ]);
+        for ep in sc.endpoint_io() {
+            endpoint_lines.push(format!(
+                "  {name} n={}: endpoint {} — {} round-trips, {} KiB sent, {} KiB received, {} connect(s)",
+                ap.dim(),
+                ep.endpoint,
+                ep.round_trips,
+                ep.bytes_sent / 1024,
+                ep.bytes_received / 1024,
+                ep.connects
+            ));
+        }
     }
-    Ok(format!(
+    let mut report = format!(
         "Shard check — {shards} shard(s), {} backend: stitched output bitwise-identical \
          to single-engine on all workloads\n{}",
         backend.name(),
         t.render()
-    ))
+    );
+    if !endpoint_lines.is_empty() {
+        report.push_str("\nper-endpoint transport I/O:\n");
+        report.push_str(&endpoint_lines.join("\n"));
+    }
+    Ok(report)
+}
+
+/// `ms` cell for a possibly-skipped timing (`NaN` → `-`).
+fn fmt_ms_opt(ns: f64) -> String {
+    if ns.is_finite() {
+        format!("{:.3}", ns / 1e6)
+    } else {
+        "-".to_string()
+    }
+}
+
+/// JSON number for a possibly-skipped value (`NaN`/`inf` → `null`).
+fn fmt_json_opt(v: f64, decimals: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.decimals$}")
+    } else {
+        "null".to_string()
+    }
 }
 
 /// Render the human-readable comparison table.
 pub fn render_table(cases: &[KernelCase]) -> String {
     let mut t = Table::new(&[
         "workload", "n", "diags", "workers", "tile", "btreemap ms", "soa ms", "tiled ms",
-        "cached ms", "grouped ms", "sh2 ms", "sh4 ms", "soa x", "tiled x", "cached x",
-        "grouped x", "tasks", "grouped tasks",
+        "cached ms", "grouped ms", "sh2 ms", "sh4 ms", "tcp2 ms", "soa x", "tiled x",
+        "cached x", "grouped x", "tasks", "grouped tasks",
     ]);
     for c in cases {
         t.row(vec![
@@ -527,6 +655,7 @@ pub fn render_table(cases: &[KernelCase]) -> String {
             format!("{:.3}", c.grouped_auto_ns / 1e6),
             format!("{:.3}", c.sharded_x2_ns / 1e6),
             format!("{:.3}", c.sharded_x4_ns / 1e6),
+            fmt_ms_opt(c.sharded_tcp_x2_ns),
             super::fmt_ratio(c.speedup_soa()),
             super::fmt_ratio(c.speedup_tiled()),
             super::fmt_ratio(c.speedup_cached()),
@@ -549,7 +678,7 @@ pub fn to_json(cases: &[KernelCase]) -> String {
     );
     for (i, c) in cases.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"workload\": \"{}\", \"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"tile_mode\": \"{}\", \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"grouped_auto_ns\": {:.0}, \"sharded_x2_ns\": {:.0}, \"sharded_x4_ns\": {:.0}, \"grouped_auto_tile\": {}, \"tasks_per_diagonal\": {}, \"tasks_grouped\": {}, \"task_reduction\": {:.3}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}, \"speedup_grouped_auto_vs_seed\": {:.3}, \"speedup_sharded_x2_vs_seed\": {:.3}, \"speedup_sharded_x4_vs_seed\": {:.3}}}{}\n",
+            "    {{\"workload\": \"{}\", \"n\": {}, \"diags\": {}, \"workers\": {}, \"tile\": {}, \"tile_mode\": \"{}\", \"serial_btreemap_ns\": {:.0}, \"soa_serial_ns\": {:.0}, \"soa_tiled_parallel_ns\": {:.0}, \"plan_cached_ns\": {:.0}, \"grouped_auto_ns\": {:.0}, \"sharded_x2_ns\": {:.0}, \"sharded_x4_ns\": {:.0}, \"sharded_tcp_x2_ns\": {}, \"grouped_auto_tile\": {}, \"tasks_per_diagonal\": {}, \"tasks_grouped\": {}, \"task_reduction\": {:.3}, \"speedup_soa_vs_seed\": {:.3}, \"speedup_tiled_vs_seed\": {:.3}, \"speedup_cached_vs_seed\": {:.3}, \"speedup_grouped_auto_vs_seed\": {:.3}, \"speedup_sharded_x2_vs_seed\": {:.3}, \"speedup_sharded_x4_vs_seed\": {:.3}, \"speedup_sharded_tcp_x2_vs_seed\": {}}}{}\n",
             c.workload,
             c.n,
             c.diags,
@@ -563,6 +692,7 @@ pub fn to_json(cases: &[KernelCase]) -> String {
             c.grouped_auto_ns,
             c.sharded_x2_ns,
             c.sharded_x4_ns,
+            fmt_json_opt(c.sharded_tcp_x2_ns, 0),
             c.grouped_auto_tile,
             c.tasks_per_diagonal,
             c.tasks_grouped,
@@ -573,6 +703,7 @@ pub fn to_json(cases: &[KernelCase]) -> String {
             c.speedup_grouped(),
             c.speedup_sharded_x2(),
             c.speedup_sharded_x4(),
+            fmt_json_opt(c.speedup_sharded_tcp_x2(), 3),
             if i + 1 < cases.len() { "," } else { "" },
         ));
     }
@@ -651,6 +782,9 @@ mod tests {
         assert!(c.grouped_auto_ns > 0.0);
         assert!(c.sharded_x2_ns > 0.0);
         assert!(c.sharded_x4_ns > 0.0);
+        // The tcp column either timed (loopback available — the CI
+        // case) or was skipped as NaN; both render, neither is 0.
+        assert!(c.sharded_tcp_x2_ns > 0.0 || c.sharded_tcp_x2_ns.is_nan());
         assert!(c.grouped_auto_tile >= 1);
         assert!(c.tasks_grouped >= 1);
         assert!(c.tasks_grouped <= c.tasks_per_diagonal.max(1));
@@ -698,6 +832,7 @@ mod tests {
             grouped_auto_ns: 25e4,
             sharded_x2_ns: 2e5,
             sharded_x4_ns: 1e5,
+            sharded_tcp_x2_ns: 4e5,
             grouped_auto_tile: 5461,
             tasks_per_diagonal: 525,
             tasks_grouped: 21,
@@ -720,17 +855,54 @@ mod tests {
         assert!(j.contains("\"sharded_x4_ns\": 100000"));
         assert!(j.contains("\"speedup_sharded_x2_vs_seed\": 10.000"));
         assert!(j.contains("\"speedup_sharded_x4_vs_seed\": 20.000"));
+        assert!(j.contains("\"sharded_tcp_x2_ns\": 400000"));
+        assert!(j.contains("\"speedup_sharded_tcp_x2_vs_seed\": 5.000"));
         assert!(render_table(&cases).contains("4096"));
+        // A skipped tcp column serializes as null (valid JSON), never
+        // as NaN, and renders as `-` in the table.
+        let mut skipped = cases;
+        skipped[0].sharded_tcp_x2_ns = f64::NAN;
+        let j = to_json(&skipped);
+        assert!(j.contains("\"sharded_tcp_x2_ns\": null"));
+        assert!(j.contains("\"speedup_sharded_tcp_x2_vs_seed\": null"));
+        assert!(!j.contains("NaN"));
     }
 
     #[test]
     fn shard_check_small_smoke() {
         // The CLI gate body on a cheap in-process configuration: the
-        // real CI job runs this at n = 2^12 on both backends; here the
-        // same code path must verify and render.
-        let report = shard_check(2, ShardBackend::InProc, true).expect("inproc must verify");
+        // real CI job runs this at n = 2^12 on both local backends;
+        // here the same code path must verify and render.
+        let report =
+            shard_check(2, &ShardBackend::InProc, true).expect("inproc must verify");
         assert!(report.contains("bitwise-identical"));
         assert!(report.contains("inproc"));
         assert!(report.contains("mixed-band"));
+    }
+
+    #[test]
+    fn shard_check_tcp_smoke_reports_endpoints() {
+        // The remote-shard-smoke gate body against two in-process
+        // loopback daemons (the CI job drives the same code path via
+        // `diamond kernel --shard-backend tcp` against real
+        // `diamond shard-serve` binaries).
+        use crate::coordinator::transport::ShardServer;
+        let (s1, s2) = match (ShardServer::spawn("127.0.0.1:0"), ShardServer::spawn("127.0.0.1:0"))
+        {
+            (Ok(a), Ok(b)) => (a, b),
+            _ => {
+                eprintln!("loopback unavailable in this sandbox; skipping tcp smoke");
+                return;
+            }
+        };
+        let backend = ShardBackend::Tcp {
+            endpoints: vec![s1.endpoint(), s2.endpoint()],
+        };
+        let report = shard_check(2, &backend, true).expect("tcp must verify over loopback");
+        assert!(report.contains("bitwise-identical"));
+        assert!(report.contains("tcp"));
+        assert!(report.contains("per-endpoint transport I/O"));
+        assert!(report.contains(&s1.endpoint()));
+        assert!(report.contains(&s2.endpoint()));
     }
 }

@@ -2,10 +2,13 @@
 //!
 //! ```text
 //! diamond table2 | table3 | fig6 | fig10 | fig11 | fig12 | fig13 | ablations
-//! diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]
-//!                [--shards <n>] [--shard-backend <inproc|process>]
+//! diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke] [--check-only]
+//!                [--shards <n>] [--shard-backend <inproc|process|tcp>]
+//!                [--shard-endpoints <host:port,...>]
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
-//!                [--shards <n>] [--shard-backend <inproc|process>]
+//!                [--shards <n>] [--shard-backend <inproc|process|tcp>]
+//!                [--shard-endpoints <host:port,...>]
+//! diamond shard-serve --listen <addr>   (shard daemon: jobs over TCP)
 //! diamond shard-worker        (internal: one shard job over stdin/stdout)
 //! diamond bench-all
 //! ```
@@ -36,7 +39,9 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
-/// Parse the shared `--shards N [--shard-backend inproc|process]` pair.
+/// Parse the shared `--shards N [--shard-backend inproc|process|tcp]
+/// [--shard-endpoints host:port,...]` trio. The `tcp` backend requires
+/// an endpoint list; the other backends reject one.
 fn shard_flags(args: &[String]) -> Result<(Option<usize>, ShardBackend), String> {
     let shards = flag_value(args, "--shards")
         .map(|v| v.parse::<usize>().map_err(|e| format!("--shards: {e}")))
@@ -44,12 +49,55 @@ fn shard_flags(args: &[String]) -> Result<(Option<usize>, ShardBackend), String>
     if shards == Some(0) {
         return Err("--shards must be at least 1".into());
     }
+    let endpoints = flag_value(args, "--shard-endpoints");
     let backend = match flag_value(args, "--shard-backend") {
         None => ShardBackend::InProc,
+        Some(s) if s.eq_ignore_ascii_case("tcp") => {
+            let eps: Vec<String> = endpoints
+                .as_deref()
+                .ok_or(
+                    "--shard-backend tcp requires --shard-endpoints host:port[,host:port...]",
+                )?
+                .split(',')
+                .map(str::trim)
+                .filter(|e| !e.is_empty())
+                .map(String::from)
+                .collect();
+            if eps.is_empty() {
+                return Err("--shard-endpoints holds no endpoints".into());
+            }
+            return Ok((shards, ShardBackend::Tcp { endpoints: eps }));
+        }
         Some(s) => ShardBackend::parse(&s)
-            .ok_or_else(|| format!("--shard-backend must be inproc|process, got `{s}`"))?,
+            .ok_or_else(|| format!("--shard-backend must be inproc|process|tcp, got `{s}`"))?,
     };
+    if endpoints.is_some() {
+        return Err("--shard-endpoints applies to --shard-backend tcp only".into());
+    }
     Ok((shards, backend))
+}
+
+/// `diamond shard-serve --listen <addr>` — the TCP shard daemon: accept
+/// connections forever, one engine (with its own plan cache) per
+/// connection, jobs answered sequentially per connection. `--listen
+/// host:0` binds an ephemeral port; the bound address is printed on the
+/// first line so scripts (and tests) can scrape it.
+fn cmd_shard_serve(args: &[String]) -> Result<(), String> {
+    use crate::coordinator::transport;
+    let listen = flag_value(args, "--listen")
+        .ok_or("shard-serve requires --listen <host:port> (port 0 for ephemeral)")?;
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| format!("binding {listen}: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("resolving bound address: {e}"))?;
+    println!(
+        "shard-serve: listening on {addr} (wire v{})",
+        transport::WIRE_VERSION
+    );
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    transport::serve(listener).map_err(|e| format!("shard-serve: {e:#}"))
 }
 
 fn cmd_evolve(args: &[String]) -> Result<(), String> {
@@ -148,12 +196,24 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             rep.engine.shard_stitch_bytes / 1024
         );
     }
+    for ep in &rep.engine.shard_endpoints {
+        println!(
+            "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s)",
+            ep.endpoint,
+            ep.round_trips,
+            ep.bytes_sent / 1024,
+            ep.bytes_received / 1024,
+            ep.connects
+        );
+    }
     Ok(())
 }
 
 /// `diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]
-/// [--shards <n>] [--shard-backend <inproc|process>]` — the kernel
-/// microbenchmark with engine knobs exposed. `--tile auto` switches the
+/// [--shards <n>] [--shard-backend <inproc|process|tcp>]
+/// [--shard-endpoints <host:port,...>] [--check-only]` — the kernel
+/// microbenchmark with engine knobs exposed (`--check-only` skips the
+/// bench suite and runs only the shard check). `--tile auto` switches the
 /// tiled/cached columns to adaptive tiling **and** prints the tile
 /// sweep; `--shards` additionally runs the shard check (the CI
 /// `shard-smoke` gate): sharded execution on the requested backend must
@@ -180,17 +240,26 @@ fn cmd_kernel(args: &[String]) -> Result<(), String> {
     }
     let (shards, shard_backend) = shard_flags(args)?;
     let smoke = args.iter().any(|a| a == "--smoke");
-    let cases = crate::bench_harness::kernel::run_suite_with(&opts, smoke);
-    println!("{}", crate::bench_harness::kernel::render_table(&cases));
-    if sweep {
-        println!();
-        println!("{}", crate::bench_harness::kernel::tile_sweep(1 << 12, 11, 3));
+    // --check-only: skip the microbench suite and run only the shard
+    // check, so the CI shard-smoke wall clocks measure the shard
+    // transport rather than the whole kernel bench.
+    let check_only = args.iter().any(|a| a == "--check-only");
+    if check_only && shards.is_none() {
+        return Err("--check-only requires --shards <n>".into());
+    }
+    if !check_only {
+        let cases = crate::bench_harness::kernel::run_suite_with(&opts, smoke);
+        println!("{}", crate::bench_harness::kernel::render_table(&cases));
+        if sweep {
+            println!();
+            println!("{}", crate::bench_harness::kernel::tile_sweep(1 << 12, 11, 3));
+        }
     }
     if let Some(s) = shards {
         println!();
         println!(
             "{}",
-            crate::bench_harness::kernel::shard_check(s, shard_backend, smoke)?
+            crate::bench_harness::kernel::shard_check(s, &shard_backend, smoke)?
         );
     }
     Ok(())
@@ -234,6 +303,7 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             Ok(())
         }
         "kernel" => cmd_kernel(rest),
+        "shard-serve" => cmd_shard_serve(rest),
         "shard-worker" => {
             // Internal: executes one serialized (operands, shard range)
             // job received on stdin and writes the output-plane slice to
@@ -264,10 +334,13 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
             println!(
                 "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
                  commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
-                 kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]\n         \
-                 [--shards <n>] [--shard-backend <inproc|process>]\n  \
+                 kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke] [--check-only]\n         \
+                 [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
+                 [--shard-endpoints <host:port,...>]\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]\n         \
-                 [--shards <n>] [--shard-backend <inproc|process>]\n  \
+                 [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
+                 [--shard-endpoints <host:port,...>]\n  \
+                 shard-serve --listen <host:port>  (TCP shard daemon; port 0 = ephemeral)\n  \
                  shard-worker  (internal: one shard job over stdin/stdout)"
             );
             Ok(())
@@ -334,6 +407,8 @@ mod tests {
         assert_eq!(shard_flags(&[]).unwrap(), (None, ShardBackend::InProc));
         assert!(shard_flags(&["--shards".into(), "0".into()]).is_err());
         assert!(shard_flags(&["--shards".into(), "x".into()]).is_err());
+        // tcp without endpoints is an error; with endpoints it carries
+        // the parsed, trimmed list.
         assert!(shard_flags(&[
             "--shards".into(),
             "2".into(),
@@ -341,9 +416,47 @@ mod tests {
             "tcp".into()
         ])
         .is_err());
+        let ok = shard_flags(&[
+            "--shards".into(),
+            "2".into(),
+            "--shard-backend".into(),
+            "tcp".into(),
+            "--shard-endpoints".into(),
+            "127.0.0.1:7401, 127.0.0.1:7402".into(),
+        ])
+        .unwrap();
+        assert_eq!(
+            ok,
+            (
+                Some(2),
+                ShardBackend::Tcp {
+                    endpoints: vec!["127.0.0.1:7401".into(), "127.0.0.1:7402".into()]
+                }
+            )
+        );
+        // Endpoints only make sense with the tcp backend.
+        assert!(shard_flags(&[
+            "--shard-backend".into(),
+            "process".into(),
+            "--shard-endpoints".into(),
+            "127.0.0.1:7401".into(),
+        ])
+        .is_err());
+        assert!(shard_flags(&[
+            "--shard-backend".into(),
+            "tcp".into(),
+            "--shard-endpoints".into(),
+            " , ".into(),
+        ])
+        .is_err());
         // Malformed shard flags fail the kernel command up front.
         assert_eq!(
             run_with_args(vec!["kernel".into(), "--shards".into(), "zero".into()]),
+            2
+        );
+        // --check-only without --shards has nothing to check.
+        assert_eq!(
+            run_with_args(vec!["kernel".into(), "--check-only".into()]),
             2
         );
     }

@@ -17,6 +17,7 @@
 pub mod pool;
 pub mod server;
 pub mod shard;
+pub mod transport;
 
 use crate::baselines::{Accelerator, BaselineReport};
 use crate::format::{DiagMatrix, PackedDiagMatrix};
@@ -198,12 +199,34 @@ impl Coordinator {
         let mut kernel = self.kernel.lock().unwrap();
         let hits_before = kernel.kernel_stats().plan_cache_hits;
         let shard_before = *kernel.stats();
+        let io_before: Vec<transport::EndpointIo> = kernel.endpoint_io().to_vec();
         let (c, _stats) = kernel.multiply(a, b)?;
         let shard_after = *kernel.stats();
+        // Per-endpoint transport deltas for this one call (TCP backend
+        // only; the endpoint list is fixed per coordinator, so indexes
+        // align between the before/after snapshots).
+        let shard_endpoints: Vec<transport::EndpointIo> = kernel
+            .endpoint_io()
+            .iter()
+            .enumerate()
+            .map(|(i, after)| {
+                let b = io_before.get(i);
+                transport::EndpointIo {
+                    endpoint: after.endpoint.clone(),
+                    round_trips: after.round_trips - b.map_or(0, |b| b.round_trips),
+                    bytes_sent: after.bytes_sent - b.map_or(0, |b| b.bytes_sent),
+                    bytes_received: after.bytes_received
+                        - b.map_or(0, |b| b.bytes_received),
+                    connects: after.connects - b.map_or(0, |b| b.connects),
+                }
+            })
+            .filter(|d| d.round_trips > 0 || d.connects > 0)
+            .collect();
         let stats = EngineStats {
             plan_cache_hits: kernel.kernel_stats().plan_cache_hits - hits_before,
             shards_used: shard_after.shards_used - shard_before.shards_used,
             shard_stitch_bytes: shard_after.stitch_bytes - shard_before.stitch_bytes,
+            shard_endpoints,
             ..EngineStats::default()
         };
         Ok((c, stats))
@@ -336,6 +359,16 @@ impl Coordinator {
             engine_total.operand_copies_avoided += es.operand_copies_avoided;
             engine_total.shards_used += es.shards_used;
             engine_total.shard_stitch_bytes += es.shard_stitch_bytes;
+            for ep in &es.shard_endpoints {
+                match engine_total
+                    .shard_endpoints
+                    .iter()
+                    .position(|t| t.endpoint == ep.endpoint)
+                {
+                    Some(i) => engine_total.shard_endpoints[i].absorb(ep),
+                    None => engine_total.shard_endpoints.push(ep.clone()),
+                }
+            }
 
             let term_nnzd = match &term {
                 Term::Packed(p) => {

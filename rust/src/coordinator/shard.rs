@@ -14,8 +14,10 @@
 //!   [`ShardBackend`], and stitches with [`PackedDiagMatrix::stitch`].
 //! * the **wire format** — a serde-free little-endian encoding of one
 //!   `(operands, tile, shard range)` job and its `(re, im, mults)`
-//!   response. The same framing a multi-node transport would carry; here
-//!   it rides child-process stdin/stdout.
+//!   response, opened by the version handshake of
+//!   [`crate::coordinator::transport`]. The identical framing rides
+//!   child-process stdin/stdout here and TCP connections in the socket
+//!   transport (`diamond shard-serve` + [`ShardBackend::Tcp`]).
 //! * [`ProcessShardExecutor`] + [`run_worker`] — the process backend: the
 //!   parent spawns one `diamond shard-worker` per non-empty range, feeds
 //!   each its job, and collects the output slices with a hard timeout,
@@ -212,9 +214,9 @@ pub struct ShardJob {
 }
 
 /// Serialize the shared operand payload `matrix(A) | matrix(B)` —
-/// identical for every shard of one multiplication, so the process
-/// executor encodes it once and shares it across the worker feeds.
-fn encode_operands(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Vec<u8> {
+/// identical for every shard of one multiplication, so the process and
+/// TCP executors encode it once and share it across the worker feeds.
+pub(crate) fn encode_operands(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Vec<u8> {
     assert_eq!(a.dim(), b.dim(), "dimension mismatch");
     let mut buf = Vec::with_capacity(
         16 + 16 * (a.stored_elements() + b.stored_elements())
@@ -227,7 +229,7 @@ fn encode_operands(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Vec<u8> {
 
 /// Serialize the per-shard job header (`JOB_MAGIC | n | tile | task_lo
 /// | task_hi`) — the only part of a job that differs between shards.
-fn encode_job_header(n: usize, tile: usize, task_lo: usize, task_hi: usize) -> Vec<u8> {
+pub(crate) fn encode_job_header(n: usize, tile: usize, task_lo: usize, task_hi: usize) -> Vec<u8> {
     let mut buf = Vec::with_capacity(36);
     buf.extend_from_slice(&JOB_MAGIC);
     put_usize(&mut buf, n);
@@ -338,12 +340,16 @@ pub fn decode_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
 
 // --- the worker side ------------------------------------------------------
 
-/// Execute one decoded job: replay the parent's plan → tile decisions
-/// (pure in the operands and tile length) and fill the owned range.
-fn execute_job(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
-    let job = decode_job(bytes)?;
-    let plan = plan_diag_mul(&job.a, &job.b);
-    let tiles = tile_plan(&plan, job.tile);
+/// Execute a decoded job's task range against an already-derived
+/// tiling — the one range-execution contract (bounds check, exact
+/// elems/mults accounting, [`fill_task_range`] fill) shared by the
+/// process worker (which derives the tiling fresh) and the TCP server
+/// (which serves it from a per-connection plan memo), so the two remote
+/// workers cannot drift apart.
+pub(crate) fn execute_job_planned(
+    tiles: &crate::linalg::engine::TilePlan,
+    job: &ShardJob,
+) -> Result<(Vec<f64>, Vec<f64>, u64)> {
     if job.task_hi > tiles.tasks.len() {
         bail!(
             "shard range [{}, {}) out of bounds: plan has {} tile tasks",
@@ -357,21 +363,45 @@ fn execute_job(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
     let mults: usize = run.iter().map(|t| t.mults).sum();
     let mut re = vec![0f64; elems];
     let mut im = vec![0f64; elems];
-    fill_task_range(&tiles, job.task_lo, job.task_hi, &job.a, &job.b, &mut re, &mut im);
+    fill_task_range(tiles, job.task_lo, job.task_hi, &job.a, &job.b, &mut re, &mut im);
     Ok((re, im, mults as u64))
 }
 
-/// The `diamond shard-worker` body: read one serialized job from
-/// `input` to EOF, execute its tile range, write the response to
-/// `output`. On failure an error response is still written (so the
-/// parent gets a structured message even before it inspects stderr) and
-/// the error is returned for the CLI to exit non-zero with.
+/// Execute one decoded job: replay the parent's plan → tile decisions
+/// (pure in the operands and tile length) and fill the owned range.
+fn execute_job(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+    let job = decode_job(bytes)?;
+    let plan = plan_diag_mul(&job.a, &job.b);
+    let tiles = tile_plan(&plan, job.tile);
+    execute_job_planned(&tiles, &job)
+}
+
+/// The `diamond shard-worker` body: read one handshake-prefixed,
+/// serialized job from `input` to EOF, verify the wire version
+/// ([`transport::check_hello`](crate::coordinator::transport::check_hello)
+/// — a version-skewed parent is rejected with a descriptive error
+/// instead of mis-parsing the job body), execute the job's tile range,
+/// and write `hello | response` to `output` (the parent verifies the
+/// response-direction version the same way). On failure an error
+/// response is still written (so the parent gets a structured message
+/// even before it inspects stderr) and the error is returned for the
+/// CLI to exit non-zero with.
 pub fn run_worker(input: &mut impl Read, output: &mut impl Write) -> Result<()> {
+    use crate::coordinator::transport::{check_hello, encode_hello, HELLO_LEN};
+    // The worker's own hello stamps the response stream first, so the
+    // parent verifies the version of whatever it is about to decode —
+    // both directions are guarded, exactly like the TCP transport.
+    output
+        .write_all(&encode_hello())
+        .context("writing shard handshake")?;
     let mut buf = Vec::new();
     input
         .read_to_end(&mut buf)
         .context("reading shard job from stdin")?;
-    match execute_job(&buf) {
+    let job_body = check_hello(buf.get(..HELLO_LEN.min(buf.len())).unwrap_or(&[]))
+        .context("shard transport handshake")
+        .map(|()| &buf[HELLO_LEN..]);
+    match job_body.and_then(execute_job) {
         Ok((re, im, mults)) => {
             output
                 .write_all(&encode_ok(&re, &im, mults))
@@ -391,20 +421,30 @@ pub fn run_worker(input: &mut impl Read, output: &mut impl Write) -> Result<()> 
 // --- the process backend --------------------------------------------------
 
 /// Where the shard ranges of a [`ShardCoordinator`] execute.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ShardBackend {
     /// Threads inside this process (zero transport overhead — the
-    /// default, and the baseline the process backend is checked
+    /// default, and the baseline the other backends are checked
     /// against).
     InProc,
     /// One `diamond shard-worker` child process per non-empty range,
-    /// over the stdin/stdout wire format — the same framing a future
-    /// multi-node transport reuses, with no network dependency.
+    /// over the stdin/stdout wire format — the single-node dress
+    /// rehearsal for the TCP transport, with no network dependency.
     Process,
+    /// Remote `diamond shard-serve` daemons over TCP: shard slot `i`
+    /// is served by `endpoints[i % endpoints.len()]` on a persistent,
+    /// handshake-checked connection (see
+    /// [`transport::TcpShardExecutor`](crate::coordinator::transport::TcpShardExecutor)).
+    Tcp {
+        /// `host:port` endpoint list (`--shard-endpoints` on the CLI).
+        endpoints: Vec<String>,
+    },
 }
 
 impl ShardBackend {
-    /// Parse a CLI spelling (`inproc` | `process`).
+    /// Parse a CLI spelling (`inproc` | `process`). The `tcp` backend
+    /// carries endpoints, so the CLI assembles it from
+    /// `--shard-backend tcp --shard-endpoints …` instead.
     pub fn parse(s: &str) -> Option<ShardBackend> {
         match s.to_ascii_lowercase().as_str() {
             "inproc" | "in-proc" | "thread" | "threads" => Some(ShardBackend::InProc),
@@ -414,10 +454,11 @@ impl ShardBackend {
     }
 
     /// Display name (the CLI spelling).
-    pub fn name(self) -> &'static str {
+    pub fn name(&self) -> &'static str {
         match self {
             ShardBackend::InProc => "inproc",
             ShardBackend::Process => "process",
+            ShardBackend::Tcp { .. } => "tcp",
         }
     }
 }
@@ -571,9 +612,12 @@ impl ProcessShardExecutor {
         // Feed on a thread: a worker that dies before draining its job
         // must not wedge the parent on a full pipe (the write fails
         // with EPIPE instead and the collect step reports the death).
+        // The stream opens with the wire-version handshake, so a
+        // version-skewed worker rejects the job instead of mis-parsing.
         std::thread::spawn(move || {
             let _ = stdin
-                .write_all(&header)
+                .write_all(&crate::coordinator::transport::encode_hello())
+                .and_then(|()| stdin.write_all(&header))
                 .and_then(|()| stdin.write_all(&payload));
             // stdin drops here → EOF, the worker's read_to_end returns.
         });
@@ -622,7 +666,14 @@ impl ProcessShardExecutor {
             }
         };
         let status = Self::reap(run)?;
-        match decode_resp(&out) {
+        // Stdout is `hello | response`: verify the worker's advertised
+        // wire version before decoding a single response byte (the
+        // response-direction half of the version handshake).
+        use crate::coordinator::transport::{check_hello, HELLO_LEN};
+        let decoded = check_hello(out.get(..HELLO_LEN.min(out.len())).unwrap_or(&[]))
+            .context("verifying worker handshake")
+            .and_then(|()| decode_resp(&out[HELLO_LEN..]));
+        match decoded {
             Ok(resp) if status.success() => Ok(resp),
             Ok(_) => {
                 let note = Self::stderr_note(run);
@@ -733,6 +784,7 @@ pub struct ShardCoordinator {
     shards: usize,
     backend: ShardBackend,
     executor: Option<ProcessShardExecutor>,
+    tcp: Option<crate::coordinator::transport::TcpShardExecutor>,
     cache: HashMap<ShardKey, Arc<ShardPlan>>,
     last_plan: Option<Arc<ShardPlan>>,
     stats: ShardStats,
@@ -741,13 +793,14 @@ pub struct ShardCoordinator {
 impl ShardCoordinator {
     /// Coordinator with `shards` ranges on `backend` (shard count
     /// clamped to ≥ 1). The process backend resolves its worker binary
-    /// lazily on first use ([`ProcessShardExecutor::from_env`]).
+    /// — and the TCP backend its connections — lazily on first use.
     pub fn new(cfg: EngineConfig, shards: usize, backend: ShardBackend) -> Self {
         ShardCoordinator {
             engine: KernelEngine::new(cfg),
             shards: shards.max(1),
             backend,
             executor: None,
+            tcp: None,
             cache: HashMap::new(),
             last_plan: None,
             stats: ShardStats::default(),
@@ -767,15 +820,24 @@ impl ShardCoordinator {
         shards: usize,
         executor: ProcessShardExecutor,
     ) -> Self {
-        ShardCoordinator {
-            engine: KernelEngine::new(cfg),
-            shards: shards.max(1),
-            backend: ShardBackend::Process,
-            executor: Some(executor),
-            cache: HashMap::new(),
-            last_plan: None,
-            stats: ShardStats::default(),
-        }
+        let mut sc = Self::new(cfg, shards, ShardBackend::Process);
+        sc.executor = Some(executor);
+        sc
+    }
+
+    /// TCP-backed coordinator with an explicit executor (tests use this
+    /// to shorten the connect/response deadlines).
+    pub fn with_tcp_executor(
+        cfg: EngineConfig,
+        shards: usize,
+        executor: crate::coordinator::transport::TcpShardExecutor,
+    ) -> Self {
+        let backend = ShardBackend::Tcp {
+            endpoints: executor.endpoints().to_vec(),
+        };
+        let mut sc = Self::new(cfg, shards, backend);
+        sc.tcp = Some(executor);
+        sc
     }
 
     /// Configured shard count.
@@ -784,8 +846,15 @@ impl ShardCoordinator {
     }
 
     /// Configured backend.
-    pub fn backend(&self) -> ShardBackend {
-        self.backend
+    pub fn backend(&self) -> &ShardBackend {
+        &self.backend
+    }
+
+    /// Per-endpoint transport I/O (round-trips, bytes each way,
+    /// connects) accumulated over this coordinator's lifetime — empty
+    /// unless the TCP backend has executed at least one multiply.
+    pub fn endpoint_io(&self) -> &[crate::coordinator::transport::EndpointIo] {
+        self.tcp.as_ref().map(|t| t.io()).unwrap_or(&[])
     }
 
     /// Shard-layer counters.
@@ -808,9 +877,9 @@ impl ShardCoordinator {
 
     /// Multiply `a · b` across the configured shards. Bitwise identical
     /// to [`KernelEngine::multiply`] on the same engine configuration
-    /// for any shard count and either backend; `Err` only on process
-    /// transport failures (spawn, worker death, timeout, wire
-    /// corruption) — never on in-process execution.
+    /// for any shard count and every backend; `Err` only on transport
+    /// failures (spawn/connect, worker death, deadline expiry, wire
+    /// corruption, version skew) — never on in-process execution.
     pub fn multiply(
         &mut self,
         a: &PackedDiagMatrix,
@@ -825,7 +894,8 @@ impl ShardCoordinator {
         self.last_plan = Some(Arc::clone(&sp));
         self.engine.record_execution(&planned);
 
-        let slices = match self.backend {
+        let backend = self.backend.clone();
+        let slices = match backend {
             ShardBackend::InProc => execute_shard_ranges(
                 &planned.tiles,
                 &sp,
@@ -839,6 +909,16 @@ impl ShardCoordinator {
                 }
                 self.executor
                     .as_ref()
+                    .expect("executor installed above")
+                    .execute(a, b, planned.tiles.tile, &sp)?
+            }
+            ShardBackend::Tcp { endpoints } => {
+                if self.tcp.is_none() {
+                    self.tcp =
+                        Some(crate::coordinator::transport::TcpShardExecutor::new(endpoints)?);
+                }
+                self.tcp
+                    .as_mut()
                     .expect("executor installed above")
                     .execute(a, b, planned.tiles.tile, &sp)?
             }
@@ -962,10 +1042,14 @@ mod tests {
         let sp = shard_plan(&tiles, 3);
         let r = sp.ranges[1];
         assert!(r.task_hi > r.task_lo, "middle shard must hold work");
-        let job = encode_job(&a, &b, 40, r.task_lo, r.task_hi);
+        let mut job = crate::coordinator::transport::encode_hello().to_vec();
+        job.extend_from_slice(&encode_job(&a, &b, 40, r.task_lo, r.task_hi));
         let mut out = Vec::new();
         run_worker(&mut &job[..], &mut out).unwrap();
-        let (wre, wim, mults) = decode_resp(&out).unwrap();
+        // Stdout is hello | response: both directions are stamped.
+        let hl = crate::coordinator::transport::HELLO_LEN;
+        crate::coordinator::transport::check_hello(&out[..hl]).unwrap();
+        let (wre, wim, mults) = decode_resp(&out[hl..]).unwrap();
         assert_eq!(mults as usize, r.mults);
         let mut ere = vec![0f64; r.elems];
         let mut eim = vec![0f64; r.elems];
@@ -976,17 +1060,42 @@ mod tests {
 
     #[test]
     fn run_worker_rejects_bad_jobs_with_error_response() {
+        use crate::coordinator::transport::{check_hello, HELLO_LEN};
+        // No handshake at all: rejected at the transport layer. The
+        // worker still stamps its own hello onto stdout first.
         let mut out = Vec::new();
         assert!(run_worker(&mut &b"garbage"[..], &mut out).is_err());
-        let err = decode_resp(&out).unwrap_err();
+        check_hello(&out[..HELLO_LEN]).unwrap();
+        let err = decode_resp(&out[HELLO_LEN..]).unwrap_err();
         assert!(format!("{err:#}").contains("worker reported"));
         // Out-of-range shard range is caught before execution.
         let a = band(16, 1);
-        let job = encode_job(&a, &a, 8, 0, 10_000);
+        let mut job = crate::coordinator::transport::encode_hello().to_vec();
+        job.extend_from_slice(&encode_job(&a, &a, 8, 0, 10_000));
         let mut out = Vec::new();
         assert!(run_worker(&mut &job[..], &mut out).is_err());
-        let err = format!("{:#}", decode_resp(&out).unwrap_err());
+        check_hello(&out[..HELLO_LEN]).unwrap();
+        let err = format!("{:#}", decode_resp(&out[HELLO_LEN..]).unwrap_err());
         assert!(err.contains("out of bounds"), "{err}");
+    }
+
+    #[test]
+    fn run_worker_rejects_version_skewed_handshake() {
+        // A valid job behind a future-version hello: the worker must
+        // refuse with an error naming both versions — the mis-parse
+        // this handshake exists to prevent.
+        use crate::coordinator::transport::{check_hello, encode_hello, HELLO_LEN, WIRE_VERSION};
+        let a = band(24, 2);
+        let mut skewed = encode_hello();
+        skewed[4..].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        let mut job = skewed.to_vec();
+        job.extend_from_slice(&encode_job(&a, &a, 16, 0, 1));
+        let mut out = Vec::new();
+        assert!(run_worker(&mut &job[..], &mut out).is_err());
+        check_hello(&out[..HELLO_LEN]).unwrap();
+        let err = format!("{:#}", decode_resp(&out[HELLO_LEN..]).unwrap_err());
+        assert!(err.contains("version mismatch"), "{err}");
+        assert!(err.contains(&format!("v{}", WIRE_VERSION + 1)), "{err}");
     }
 
     #[test]
@@ -1045,8 +1154,14 @@ mod tests {
     fn backend_parsing() {
         assert_eq!(ShardBackend::parse("inproc"), Some(ShardBackend::InProc));
         assert_eq!(ShardBackend::parse("Process"), Some(ShardBackend::Process));
+        // `tcp` carries endpoints, so the bare name never parses — the
+        // CLI assembles the variant from --shard-endpoints instead.
         assert_eq!(ShardBackend::parse("tcp"), None);
         assert_eq!(ShardBackend::InProc.name(), "inproc");
         assert_eq!(ShardBackend::Process.name(), "process");
+        let tcp = ShardBackend::Tcp {
+            endpoints: vec!["127.0.0.1:7401".into()],
+        };
+        assert_eq!(tcp.name(), "tcp");
     }
 }

@@ -1,0 +1,779 @@
+//! The shard layer's **socket transport**: the `diamond shard-serve`
+//! TCP daemon and the [`TcpShardExecutor`] that fans one multiplication's
+//! shard ranges out to remote daemons — the multi-node step the
+//! stdin/stdout process backend of [`crate::coordinator::shard`] was the
+//! dress rehearsal for.
+//!
+//! Three pieces (see `docs/ARCHITECTURE.md` §Shard layer for the wire
+//! spec and the connection-lifecycle contract):
+//!
+//! * the **handshake** — an 8-byte `HELLO_MAGIC | version` frame each
+//!   peer sends before anything else. Both sides require version
+//!   *equality* ([`check_hello`]): a version-skewed peer is rejected
+//!   with a descriptive error instead of mis-parsing the job body.
+//!   The process backend prepends the same frame to its stdin pipe.
+//! * **framing** — TCP is a byte stream with no EOF between jobs, so
+//!   every message after the handshake travels as
+//!   `len u64 (little-endian) | payload` ([`write_frame`] /
+//!   [`read_frame`]). The payloads are exactly the job/response
+//!   encodings the process backend already uses
+//!   ([`crate::coordinator::shard::encode_job`] and friends) — the wire
+//!   format did not fork, it gained an envelope.
+//! * the **daemon** ([`serve`] / [`ShardServer`]) and the **client**
+//!   ([`TcpShardExecutor`]) — one engine per connection on the server
+//!   (its plan cache persists across a Taylor chain's jobs), persistent
+//!   per-shard connections with connect/response deadlines, straggler
+//!   cancellation and per-endpoint I/O accounting on the client.
+//!
+//! ## Determinism
+//!
+//! The transport moves `f64::to_bits` values inside the same job frames
+//! the process backend uses and the server executes them with the same
+//! [`fill_task_range`](crate::linalg::engine::fill_task_range) body —
+//! so TCP-sharded output is **bitwise**
+//! identical to in-process and single-engine execution (gated by
+//! `rust/tests/shard_tcp.rs` and the CI `remote-shard-smoke` job).
+
+use crate::coordinator::shard::{
+    decode_job, decode_resp, encode_err, encode_job_header, encode_ok, encode_operands,
+    execute_job_planned, ShardJob, DEFAULT_WORKER_TIMEOUT,
+};
+use crate::format::PackedDiagMatrix;
+use crate::linalg::engine::{tile_plan, ShardPlan, TilePlan};
+use crate::linalg::{plan_diag_mul, MulPlan};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Version of the shard wire protocol. Bumped whenever the handshake,
+/// framing, job or response encodings change shape; peers require
+/// exact equality, so a version-skewed worker fails the handshake with
+/// a clear error instead of mis-parsing a job body.
+///
+/// v1 was PR 4's handshake-less stdin/stdout encoding; v2 added this
+/// hello frame (both transports) and the TCP length-prefix envelope.
+pub const WIRE_VERSION: u32 = 2;
+
+/// Frame marker of the handshake (both directions, both transports).
+pub const HELLO_MAGIC: [u8; 4] = *b"DSHK";
+
+/// Byte length of the handshake frame: magic + `u32` version.
+pub const HELLO_LEN: usize = 8;
+
+/// Upper bound on a framed payload (16 GiB). A corrupt or hostile
+/// length prefix must never reach `Vec::with_capacity`; real shard
+/// jobs are orders of magnitude smaller.
+pub const MAX_FRAME_BYTES: u64 = 1 << 34;
+
+/// How long each side waits for the peer's 8 handshake bytes.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Server-side idle deadline between frames. A half-open peer (network
+/// partition with no RST, or a client that wedged mid-frame) must not
+/// pin a handler thread and its plan cache forever — far above any
+/// realistic gap between a chain's multiplies, far below forever.
+const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(30 * 60);
+
+/// Default TCP connect deadline per endpoint.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-connection plan memo entries kept before the cache resets (same
+/// bound as the coordinator-side shard-plan memo).
+const PLAN_CACHE_CAP: usize = 32;
+
+// --- handshake ------------------------------------------------------------
+
+/// The 8-byte hello frame this build sends: `HELLO_MAGIC | WIRE_VERSION`.
+pub fn encode_hello() -> [u8; HELLO_LEN] {
+    let mut buf = [0u8; HELLO_LEN];
+    buf[..4].copy_from_slice(&HELLO_MAGIC);
+    buf[4..].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf
+}
+
+/// Parse a peer's hello frame, returning its advertised version. Errors
+/// on truncation or a foreign magic (the peer is not a diamond shard
+/// transport at all).
+pub fn decode_hello(bytes: &[u8]) -> Result<u32> {
+    if bytes.len() < HELLO_LEN {
+        bail!(
+            "truncated shard handshake: got {} of {HELLO_LEN} bytes",
+            bytes.len()
+        );
+    }
+    if bytes[..4] != HELLO_MAGIC {
+        bail!(
+            "not a shard transport handshake (magic {:02x?}, expected {:02x?})",
+            &bytes[..4],
+            HELLO_MAGIC
+        );
+    }
+    Ok(u32::from_le_bytes(bytes[4..HELLO_LEN].try_into().unwrap()))
+}
+
+/// Validate a peer's hello against this build: same magic, same
+/// [`WIRE_VERSION`]. The error names both versions so a skewed
+/// deployment is diagnosable from either end.
+pub fn check_hello(bytes: &[u8]) -> Result<()> {
+    let peer = decode_hello(bytes)?;
+    if peer != WIRE_VERSION {
+        bail!(
+            "shard wire version mismatch: peer speaks v{peer}, this build speaks \
+             v{WIRE_VERSION} — upgrade the older side"
+        );
+    }
+    Ok(())
+}
+
+// --- framing --------------------------------------------------------------
+
+/// Write one framed message: `total-length u64 | parts…`. Multiple
+/// parts let the caller stream a shared operand payload after a
+/// per-shard header without concatenating them first.
+pub fn write_frame(w: &mut impl Write, parts: &[&[u8]]) -> std::io::Result<()> {
+    let len: u64 = parts.iter().map(|p| p.len() as u64).sum();
+    w.write_all(&len.to_le_bytes())?;
+    for p in parts {
+        w.write_all(p)?;
+    }
+    w.flush()
+}
+
+/// Read one framed message. `Ok(None)` on a clean EOF *before* the
+/// first length byte (the peer closed between messages — the normal end
+/// of a connection); an EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 8];
+    let mut got = 0usize;
+    while got < 8 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("peer closed mid-frame: {got} of 8 length bytes"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    let len = u64::from_le_bytes(len_buf);
+    if len > MAX_FRAME_BYTES {
+        bail!("frame claims {len} bytes (limit {MAX_FRAME_BYTES}) — corrupt length prefix?");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("reading {len}-byte frame payload"))?;
+    Ok(Some(payload))
+}
+
+// --- the server side ------------------------------------------------------
+
+/// Key of a served connection's plan memo: a `(plan, tiling)` pair is a
+/// pure function of the operand offset sets, the dimension and the
+/// parent's resolved tile length.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct PlanKey {
+    n: usize,
+    tile: usize,
+    a_offsets: Vec<i64>,
+    b_offsets: Vec<i64>,
+}
+
+type PlanCache = HashMap<PlanKey, Arc<(MulPlan, TilePlan)>>;
+
+/// Execute one decoded job with the connection's plan memo: a Taylor
+/// chain re-sends operand *values* every iteration, but once its offset
+/// structure stabilizes the plan → tile derivation is served from the
+/// cache instead of recomputed (the server-side mirror of
+/// [`KernelEngine`](crate::linalg::KernelEngine)'s plan cache).
+fn execute_job_cached(
+    job: &ShardJob,
+    cache: &mut PlanCache,
+    hits: &mut u64,
+) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+    let key = PlanKey {
+        n: job.a.dim(),
+        tile: job.tile,
+        a_offsets: job.a.offsets().to_vec(),
+        b_offsets: job.b.offsets().to_vec(),
+    };
+    let planned = match cache.get(&key) {
+        Some(hit) => {
+            *hits += 1;
+            Arc::clone(hit)
+        }
+        None => {
+            let plan = plan_diag_mul(&job.a, &job.b);
+            let tiles = tile_plan(&plan, job.tile);
+            if cache.len() >= PLAN_CACHE_CAP {
+                cache.clear();
+            }
+            let entry = Arc::new((plan, tiles));
+            cache.insert(key, Arc::clone(&entry));
+            entry
+        }
+    };
+    execute_job_planned(&planned.1, job)
+}
+
+/// Serve one accepted connection to completion: exchange handshakes
+/// (server speaks first, so even a client that would never send its own
+/// hello learns this build's version), then answer framed jobs
+/// sequentially until the peer closes. Job-level failures are reported
+/// as framed error responses and the connection stays up; transport or
+/// handshake failures tear it down.
+fn handle_conn(mut stream: TcpStream, peer: &str) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .write_all(&encode_hello())
+        .and_then(|()| stream.flush())
+        .context("sending handshake")?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("arming handshake deadline")?;
+    let mut hello = [0u8; HELLO_LEN];
+    stream
+        .read_exact(&mut hello)
+        .context("reading client handshake")?;
+    if let Err(e) = check_hello(&hello) {
+        // Reject in our own framing: a same-framing client decodes a
+        // structured error, anything else sees the connection close.
+        let _ = write_frame(&mut stream, &[&encode_err(&format!("{e:#}"))]);
+        return Err(e);
+    }
+    stream
+        .set_read_timeout(Some(CONN_IDLE_TIMEOUT))
+        .context("arming idle deadline")?;
+
+    let mut cache: PlanCache = HashMap::new();
+    let mut served = 0u64;
+    let mut hits = 0u64;
+    while let Some(frame) = read_frame(&mut stream)? {
+        let resp = match decode_job(&frame)
+            .and_then(|job| execute_job_cached(&job, &mut cache, &mut hits))
+        {
+            Ok((re, im, mults)) => encode_ok(&re, &im, mults),
+            Err(e) => encode_err(&format!("{e:#}")),
+        };
+        write_frame(&mut stream, &[&resp]).context("writing response")?;
+        served += 1;
+    }
+    eprintln!("shard-serve: {peer}: closed after {served} job(s), {hits} plan-cache hit(s)");
+    Ok(())
+}
+
+/// The one accept loop both daemon flavors run: spawn a handler thread
+/// per connection; log transient accept failures (ECONNABORTED, EMFILE)
+/// and retry after a short pause instead of dying or hot-spinning.
+/// Exits only when `stop` (the in-process [`ShardServer`] flag) flips.
+fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>) {
+    let stopped = |stop: &Option<Arc<AtomicBool>>| {
+        stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst))
+    };
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if stopped(&stop) {
+                    break;
+                }
+                let peer = peer.to_string();
+                let _ = std::thread::Builder::new()
+                    .name(format!("shard-conn-{peer}"))
+                    .spawn(move || {
+                        if let Err(e) = handle_conn(stream, &peer) {
+                            eprintln!("shard-serve: {peer}: {e:#}");
+                        }
+                    });
+            }
+            Err(e) => {
+                if stopped(&stop) {
+                    break;
+                }
+                eprintln!("shard-serve: accept failed (retrying): {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// The `diamond shard-serve` accept loop: one handler thread per
+/// connection (each with its own engine state, serving its jobs
+/// sequentially), running until the process is killed. Connection *and*
+/// accept errors are logged to stderr and never take the daemon down.
+pub fn serve(listener: TcpListener) -> Result<()> {
+    run_accept_loop(listener, None);
+    Ok(())
+}
+
+/// An in-process `shard-serve` daemon on an ephemeral loopback port —
+/// how tests and the kernel microbenchmark get real TCP endpoints
+/// without launching the binary. Stops (and joins its accept loop) on
+/// [`ShardServer::stop`] or drop.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind `bind_addr` (use port 0 for an ephemeral port) and serve
+    /// connections on a background thread.
+    pub fn spawn(bind_addr: &str) -> Result<ShardServer> {
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("binding shard server to {bind_addr}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name(format!("shard-serve-{addr}"))
+            .spawn(move || run_accept_loop(listener, Some(stop_flag)))
+            .context("spawning shard server accept loop")?;
+        Ok(ShardServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address, as a `host:port` endpoint string for
+    /// `--shard-endpoints` / [`TcpShardExecutor::new`].
+    pub fn endpoint(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop (idempotent). Handler
+    /// threads for connections already open drain when their clients
+    /// disconnect.
+    pub fn stop(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the blocked accept() so the loop observes the flag.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// --- the client side ------------------------------------------------------
+
+/// Cumulative transport I/O of one endpoint, as surfaced per multiply
+/// through [`EngineStats`](crate::runtime::engine::EngineStats)
+/// `shard_endpoints` and cumulatively through
+/// [`ShardCoordinator::endpoint_io`](crate::coordinator::shard::ShardCoordinator::endpoint_io).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EndpointIo {
+    /// The endpoint (`host:port` as configured).
+    pub endpoint: String,
+    /// Completed job round-trips (one per shard range executed there).
+    pub round_trips: u64,
+    /// Bytes written to the endpoint (handshake + framed jobs).
+    pub bytes_sent: u64,
+    /// Bytes read back (handshake + framed responses).
+    pub bytes_received: u64,
+    /// Connections established (1 per slot in steady state; more after
+    /// failures forced a reconnect).
+    pub connects: u64,
+}
+
+impl EndpointIo {
+    /// Fold another record (for the same endpoint) into this one —
+    /// how `Coordinator::evolve` accumulates per-call deltas across a
+    /// Taylor chain.
+    pub fn absorb(&mut self, other: &EndpointIo) {
+        self.round_trips += other.round_trips;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_received += other.bytes_received;
+        self.connects += other.connects;
+    }
+}
+
+/// What one exchange thread reports back: the decoded slice plus the
+/// wire bytes it moved.
+type ExchangeResult = Result<(Vec<f64>, Vec<f64>, u64, u64, u64)>;
+
+/// Executes a [`ShardPlan`]'s ranges on remote `diamond shard-serve`
+/// daemons over TCP. One persistent connection per shard slot (slot `i`
+/// dials `endpoints[i % E]`), established lazily, handshake-checked,
+/// and reused across a Taylor chain's multiplies so the server-side
+/// plan caches stay warm. Fail-fast by construction: connect and
+/// response deadlines, straggler shutdown on first failure, and the
+/// remote error (or the dead endpoint's name) surfaced in the returned
+/// error. After any failure every connection is dropped, so the next
+/// multiply starts from clean reconnects.
+pub struct TcpShardExecutor {
+    endpoints: Vec<String>,
+    /// Per-endpoint connect deadline (default
+    /// [`DEFAULT_CONNECT_TIMEOUT`]).
+    pub connect_timeout: Duration,
+    /// Response deadline per multiply (default
+    /// [`DEFAULT_WORKER_TIMEOUT`], matching the process backend).
+    pub timeout: Duration,
+    conns: Vec<Option<TcpStream>>,
+    io: Vec<EndpointIo>,
+}
+
+impl TcpShardExecutor {
+    /// Executor over `endpoints` (`host:port` strings; at least one).
+    /// Shard slot `i` is served by `endpoints[i % endpoints.len()]`.
+    pub fn new(endpoints: Vec<String>) -> Result<Self> {
+        if endpoints.is_empty() {
+            bail!("tcp shard backend needs at least one endpoint (--shard-endpoints host:port[,host:port…])");
+        }
+        let io = endpoints
+            .iter()
+            .map(|e| EndpointIo {
+                endpoint: e.clone(),
+                ..EndpointIo::default()
+            })
+            .collect();
+        Ok(TcpShardExecutor {
+            endpoints,
+            connect_timeout: DEFAULT_CONNECT_TIMEOUT,
+            timeout: DEFAULT_WORKER_TIMEOUT,
+            conns: Vec::new(),
+            io,
+        })
+    }
+
+    /// The configured endpoints.
+    pub fn endpoints(&self) -> &[String] {
+        &self.endpoints
+    }
+
+    /// Cumulative per-endpoint I/O counters (index-aligned with
+    /// [`TcpShardExecutor::endpoints`]).
+    pub fn io(&self) -> &[EndpointIo] {
+        &self.io
+    }
+
+    /// Dial, deadline-arm and handshake the connection for `slot`.
+    fn connect(&mut self, slot: usize) -> Result<TcpStream> {
+        let ep_idx = slot % self.endpoints.len();
+        let ep = &self.endpoints[ep_idx];
+        let addr = ep
+            .to_socket_addrs()
+            .with_context(|| format!("resolving shard endpoint `{ep}`"))?
+            .next()
+            .ok_or_else(|| anyhow!("shard endpoint `{ep}` resolved to no address"))?;
+        let mut stream = TcpStream::connect_timeout(&addr, self.connect_timeout)
+            .with_context(|| {
+                format!(
+                    "connecting to shard endpoint {ep} (shard {slot}, deadline {:?})",
+                    self.connect_timeout
+                )
+            })?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_write_timeout(Some(self.timeout))
+            .context("arming write deadline")?;
+        // The handshake gets its own short deadline: an endpoint that
+        // accepts but never answers (blackholed port, wrong service)
+        // must fail the connect step in seconds, not hold the whole
+        // response budget. The job deadline is armed after.
+        stream
+            .set_read_timeout(Some(self.timeout.min(HANDSHAKE_TIMEOUT)))
+            .context("arming handshake deadline")?;
+        stream
+            .write_all(&encode_hello())
+            .and_then(|()| stream.flush())
+            .with_context(|| format!("sending handshake to {ep}"))?;
+        let mut hello = [0u8; HELLO_LEN];
+        stream
+            .read_exact(&mut hello)
+            .with_context(|| format!("reading handshake from {ep} (is it `diamond shard-serve`?)"))?;
+        check_hello(&hello).with_context(|| format!("shard endpoint {ep} rejected"))?;
+        stream
+            .set_read_timeout(Some(self.timeout))
+            .context("arming read deadline")?;
+        let rec = &mut self.io[ep_idx];
+        rec.connects += 1;
+        rec.bytes_sent += HELLO_LEN as u64;
+        rec.bytes_received += HELLO_LEN as u64;
+        Ok(stream)
+    }
+
+    /// Execute every range of `sp` on the remote endpoints and return
+    /// the output-plane slices in shard order (empty ranges yield empty
+    /// slices without touching the network). All non-empty ranges are
+    /// in flight concurrently, one per connection; the first failure
+    /// shuts the surviving sockets down (stragglers unblock
+    /// immediately), poisons the connection pool, and surfaces the
+    /// remote error.
+    pub fn execute(
+        &mut self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+        tile: usize,
+        sp: &ShardPlan,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        let n_ranges = sp.ranges.len();
+        if self.conns.len() < n_ranges {
+            self.conns.resize_with(n_ranges, || None);
+        }
+        let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
+            (0..n_ranges).map(|_| None).collect();
+
+        // Connect every needed slot up front, before any job is sent:
+        // a dead endpoint fails the multiply inside the connect
+        // deadline without leaving half the fleet mid-job.
+        for (i, r) in sp.ranges.iter().enumerate() {
+            if r.task_lo == r.task_hi {
+                slots[i] = Some((Vec::new(), Vec::new()));
+            } else if self.conns[i].is_none() {
+                match self.connect(i) {
+                    Ok(s) => self.conns[i] = Some(s),
+                    Err(e) => {
+                        self.poison();
+                        return Err(e);
+                    }
+                }
+            }
+        }
+
+        // Operands are identical for every shard: encode once, stream
+        // the shared buffer after each per-shard header.
+        let operands = Arc::new(encode_operands(a, b));
+        let (tx, rx) = mpsc::channel::<(usize, ExchangeResult)>();
+        let mut cancel: Vec<(usize, TcpStream)> = Vec::new();
+        let mut inflight = 0usize;
+        for (i, r) in sp.ranges.iter().enumerate() {
+            if r.task_lo == r.task_hi {
+                continue;
+            }
+            let stream = self.conns[i].as_ref().expect("connected above");
+            let (mut job_stream, cancel_stream) = match (stream.try_clone(), stream.try_clone())
+            {
+                (Ok(js), Ok(cs)) => (js, cs),
+                (Err(e), _) | (_, Err(e)) => {
+                    self.poison();
+                    return Err(anyhow::Error::from(e)
+                        .context(format!("cloning shard {i}'s connection handle")));
+                }
+            };
+            let header = encode_job_header(a.dim(), tile, r.task_lo, r.task_hi);
+            let payload = Arc::clone(&operands);
+            let txc = tx.clone();
+            std::thread::spawn(move || {
+                let _ = txc.send((i, exchange(&mut job_stream, &header, &payload)));
+            });
+            cancel.push((i, cancel_stream));
+            inflight += 1;
+        }
+        drop(tx);
+
+        let deadline = Instant::now() + self.timeout;
+        let mut failure: Option<anyhow::Error> = None;
+        let mut done = 0usize;
+        while done < inflight && failure.is_none() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(remaining) {
+                Ok((i, Ok((re, im, mults, sent, received)))) => {
+                    let r = &sp.ranges[i];
+                    if re.len() != r.elems {
+                        failure = Some(anyhow!(
+                            "shard {i} on {} returned {} elements, parent planned {} — plans diverged",
+                            self.endpoint_of(i),
+                            re.len(),
+                            r.elems
+                        ));
+                    } else if mults as usize != r.mults {
+                        failure = Some(anyhow!(
+                            "shard {i} on {} performed {mults} multiplies, parent planned {} — plans diverged",
+                            self.endpoint_of(i),
+                            r.mults
+                        ));
+                    } else {
+                        let rec = &mut self.io[i % self.endpoints.len()];
+                        rec.round_trips += 1;
+                        rec.bytes_sent += sent;
+                        rec.bytes_received += received;
+                        slots[i] = Some((re, im));
+                        done += 1;
+                    }
+                }
+                Ok((i, Err(e))) => {
+                    failure =
+                        Some(e.context(format!("shard {i} on {}", self.endpoint_of(i))));
+                }
+                Err(_) => {
+                    failure = Some(anyhow!(
+                        "no shard response within {:?} from {} — killed the stragglers",
+                        self.timeout,
+                        self.endpoints.join(", ")
+                    ));
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Straggler cancellation: shutting the sockets down makes
+            // every blocked exchange thread's read fail immediately.
+            for (_, s) in &cancel {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            self.poison();
+            return Err(e);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every shard range collected"))
+            .collect())
+    }
+
+    /// The endpoint serving shard slot `i`.
+    fn endpoint_of(&self, slot: usize) -> &str {
+        &self.endpoints[slot % self.endpoints.len()]
+    }
+
+    /// Drop every pooled connection (after a failure): the next multiply
+    /// reconnects from scratch instead of reusing a stream whose framing
+    /// state is unknown.
+    fn poison(&mut self) {
+        for c in self.conns.iter_mut() {
+            if let Some(c) = c.take() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+/// One job round-trip on an exchange thread: framed write of
+/// `header | operands`, framed read of the response, decode. Returns
+/// the slice plus the bytes moved in each direction.
+fn exchange(stream: &mut TcpStream, header: &[u8], operands: &[u8]) -> ExchangeResult {
+    write_frame(stream, &[header, operands]).context("sending shard job")?;
+    let frame = read_frame(stream)
+        .context("reading shard response")?
+        .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
+    let (re, im, mults) = decode_resp(&frame)?;
+    let sent = 8 + header.len() + operands.len();
+    let received = 8 + frame.len();
+    Ok((re, im, mults, sent as u64, received as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shard::encode_job;
+    use crate::format::DiagMatrix;
+    use crate::num::Complex;
+
+    #[test]
+    fn hello_roundtrip_and_rejections() {
+        let h = encode_hello();
+        assert_eq!(h.len(), HELLO_LEN);
+        assert_eq!(&h[..4], b"DSHK");
+        assert_eq!(decode_hello(&h).unwrap(), WIRE_VERSION);
+        check_hello(&h).unwrap();
+        // Version skew: both versions named in the error.
+        let mut skewed = h;
+        skewed[4..].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        let err = format!("{:#}", check_hello(&skewed).unwrap_err());
+        assert!(err.contains(&format!("v{}", WIRE_VERSION + 1)), "{err}");
+        assert!(err.contains(&format!("v{WIRE_VERSION}")), "{err}");
+        // Foreign magic and truncation fail loudly, never mis-parse.
+        assert!(decode_hello(b"DSJ1\x02\x00\x00\x00").is_err());
+        assert!(decode_hello(&h[..5]).is_err());
+        assert!(decode_hello(&[]).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_bounds() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[b"hello ", b"world"]).unwrap();
+        assert_eq!(&buf[..8], &11u64.to_le_bytes());
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello world");
+        // Clean EOF between frames → None.
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // EOF mid-length and mid-payload → errors.
+        assert!(read_frame(&mut &buf[..4]).is_err());
+        assert!(read_frame(&mut &buf[..12]).is_err());
+        // Oversized length prefix rejected before allocation.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let err = format!("{:#}", read_frame(&mut &huge[..]).unwrap_err());
+        assert!(err.contains("corrupt length prefix"), "{err}");
+    }
+
+    fn band(n: usize, half_width: i64) -> PackedDiagMatrix {
+        let mut m = DiagMatrix::zeros(n);
+        for d in -half_width..=half_width {
+            let len = DiagMatrix::diag_len(n, d);
+            m.set_diag(
+                d,
+                (0..len)
+                    .map(|k| Complex::new(0.2 + (k % 5) as f64 * 0.01, 0.1 * d as f64))
+                    .collect(),
+            );
+        }
+        m.freeze()
+    }
+
+    #[test]
+    fn served_connection_answers_jobs_with_plan_reuse() {
+        // Full client-side handshake + two framed jobs against an
+        // in-process server, over a real loopback socket.
+        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(&encode_hello()).unwrap();
+        let mut hello = [0u8; HELLO_LEN];
+        stream.read_exact(&mut hello).unwrap();
+        check_hello(&hello).unwrap();
+
+        let a = band(48, 2);
+        let b = band(48, 1);
+        let plan = plan_diag_mul(&a, &b);
+        let tiles = tile_plan(&plan, 1 << 13);
+        let job = encode_job(&a, &b, 1 << 13, 0, tiles.tasks.len());
+        for _ in 0..2 {
+            write_frame(&mut stream, &[&job]).unwrap();
+            let resp = read_frame(&mut stream).unwrap().expect("response frame");
+            let (re, im, mults) = decode_resp(&resp).unwrap();
+            let total: usize = tiles.tasks.iter().map(|t| t.hi - t.lo).sum();
+            assert_eq!(re.len(), total);
+            assert_eq!(im.len(), total);
+            assert_eq!(mults as usize, plan.mults);
+        }
+    }
+
+    #[test]
+    fn server_rejects_version_skewed_client_with_framed_error() {
+        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        // The server speaks first; its hello must check out.
+        let mut hello = [0u8; HELLO_LEN];
+        stream.read_exact(&mut hello).unwrap();
+        check_hello(&hello).unwrap();
+        // Now claim a future version: the reply is a framed, decodable
+        // error naming both versions — not a mis-parsed job.
+        let mut skewed = encode_hello();
+        skewed[4..].copy_from_slice(&(WIRE_VERSION + 7).to_le_bytes());
+        stream.write_all(&skewed).unwrap();
+        let frame = read_frame(&mut stream).unwrap().expect("rejection frame");
+        let err = format!("{:#}", decode_resp(&frame).unwrap_err());
+        assert!(err.contains("version mismatch"), "{err}");
+        assert!(err.contains(&format!("v{}", WIRE_VERSION + 7)), "{err}");
+    }
+
+    #[test]
+    fn executor_requires_endpoints() {
+        let err = format!("{:#}", TcpShardExecutor::new(Vec::new()).unwrap_err());
+        assert!(err.contains("--shard-endpoints"), "{err}");
+    }
+}

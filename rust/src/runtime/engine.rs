@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 /// `docs/ARCHITECTURE.md` §Statistics, next to the kernel-level
 /// [`KernelStats`](crate::linalg::KernelStats) and the operation-level
 /// [`OpStats`](crate::linalg::OpStats).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     /// PJRT executable invocations.
     pub calls: u64,
@@ -50,6 +50,11 @@ pub struct EngineStats {
     /// Output-plane bytes stitched back from shard slices (16 bytes per
     /// complex element; 0 unsharded).
     pub shard_stitch_bytes: u64,
+    /// Per-endpoint transport I/O of the call (TCP shard backend only;
+    /// empty otherwise): round-trips, bytes each way and connects per
+    /// `diamond shard-serve` endpoint. `Coordinator::evolve` merges the
+    /// per-call records by endpoint across the whole Taylor chain.
+    pub shard_endpoints: Vec<crate::coordinator::transport::EndpointIo>,
 }
 
 /// Row-aligned f32 planes of a chunk of diagonals.

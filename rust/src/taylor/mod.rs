@@ -113,14 +113,17 @@ pub fn expm_diag(h: &DiagMatrix, t: f64, iters: usize) -> TaylorResult {
 
 /// [`expm_diag`] with the chained SpMSpMs executed through a
 /// [`ShardCoordinator`](crate::coordinator::shard::ShardCoordinator):
-/// each product fans out as multiply-balanced shard ranges (in-process
-/// engines or `diamond shard-worker` processes) and is stitched back
-/// bitwise, so the result is identical to the unsharded chain. The
-/// coordinator's plan cache *and* shard-plan memo persist across
-/// iterations — a chain whose offset structure has stabilized shards
-/// once and replays the partition (reported in
-/// [`TaylorResult::shard`]). `Err` only on process-backend transport
-/// failures.
+/// each product fans out as multiply-balanced shard ranges — in-process
+/// engines, `diamond shard-worker` processes, or remote `diamond
+/// shard-serve` daemons over TCP — and is stitched back bitwise, so the
+/// result is identical to the unsharded chain. The coordinator's plan
+/// cache *and* shard-plan memo persist across iterations — a chain
+/// whose offset structure has stabilized shards once and replays the
+/// partition (reported in [`TaylorResult::shard`]) — and on the TCP
+/// backend the persistent per-shard connections keep the daemons'
+/// per-connection plan caches warm across the whole chain. `Err` only
+/// on transport failures (spawn/connect, worker death, deadline
+/// expiry, version skew).
 pub fn expm_diag_sharded(
     h: &DiagMatrix,
     t: f64,

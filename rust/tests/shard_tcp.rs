@@ -1,0 +1,350 @@
+//! TCP shard-transport property tests: `tcp == inproc == single engine`
+//! **bitwise** (`f64::to_bits`) for shard counts 1–4 over loopback
+//! daemons, fail-fast on dead and unresponsive endpoints (inside the
+//! configured deadlines), handshake rejection of version-skewed peers
+//! in both directions, and the real `diamond shard-serve` binary
+//! serving a Taylor chain with warm caches.
+
+use diamond::coordinator::shard::{decode_resp, ShardBackend, ShardCoordinator};
+use diamond::coordinator::transport::{
+    self, encode_hello, read_frame, ShardServer, TcpShardExecutor, HELLO_LEN, WIRE_VERSION,
+};
+use diamond::format::DiagMatrix;
+use diamond::linalg::{packed_diag_mul_counted, EngineConfig, TileMode};
+use diamond::num::Complex;
+use diamond::testutil::{prop_check, random_exp_offset_matrix, XorShift64};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+fn random_band(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    for _ in 0..rng.gen_range(1, max_diags + 1) {
+        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+        let len = DiagMatrix::diag_len(n, d);
+        let vals: Vec<Complex> = (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
+/// Mixed band-length operand (the shard balancer's worst case): the
+/// full main diagonal plus a random fan of short corner diagonals.
+fn random_mixed_band(rng: &mut XorShift64, n: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    let vals = |rng: &mut XorShift64, len: usize| -> Vec<Complex> {
+        (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect()
+    };
+    let v = vals(rng, n);
+    m.set_diag(0, v);
+    for k in 1..=16i64.min(n as i64 - 1) {
+        for sign in [1i64, -1] {
+            if rng.gen_bool(0.6) {
+                let d = sign * (n as i64 - k);
+                let len = DiagMatrix::diag_len(n, d);
+                let v = vals(rng, len);
+                m.set_diag(d, v);
+            }
+        }
+    }
+    m
+}
+
+fn tcp_backend(servers: &[ShardServer]) -> ShardBackend {
+    ShardBackend::Tcp {
+        endpoints: servers.iter().map(|s| s.endpoint()).collect(),
+    }
+}
+
+#[test]
+fn tcp_is_bitwise_identical_to_inproc_and_single_for_s1_to_4() {
+    // The tentpole determinism contract over a real loopback socket:
+    // for every workload family and S = 1..=4, the TCP-stitched output
+    // equals both the in-process-sharded and the single-engine output
+    // bitwise, and OpStats agree.
+    let servers = [
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+    ];
+    prop_check("tcp == inproc == single, bitwise, S=1..4", 6, |rng| {
+        let n = rng.gen_range(48, 320);
+        let (a, b) = match rng.gen_range(0, 3) {
+            0 => (random_band(rng, n, 5), random_band(rng, n, 5)),
+            1 => (
+                random_exp_offset_matrix(rng, n, 6),
+                random_exp_offset_matrix(rng, n, 6),
+            ),
+            _ => (random_mixed_band(rng, n), random_mixed_band(rng, n)),
+        };
+        let ap = a.freeze();
+        let bp = b.freeze();
+        let (single, single_stats) = packed_diag_mul_counted(&ap, &bp);
+        for shards in 1..=4usize {
+            let cfg = EngineConfig {
+                tile: TileMode::Fixed(rng.gen_range(8, 256)),
+                workers: rng.gen_range(1, 4),
+                ..EngineConfig::default()
+            };
+            let mut inproc = ShardCoordinator::new(cfg, shards, ShardBackend::InProc);
+            let (c_in, _) = inproc.multiply(&ap, &bp).expect("inproc cannot fail");
+            let mut tcp = ShardCoordinator::new(cfg, shards, tcp_backend(&servers));
+            let (c_tcp, stats) = tcp
+                .multiply(&ap, &bp)
+                .map_err(|e| format!("n={n} shards={shards}: tcp failed: {e:#}"))?;
+            if !c_tcp.bit_eq(&single) {
+                return Err(format!("n={n} shards={shards}: tcp differs from single"));
+            }
+            if !c_tcp.bit_eq(&c_in) {
+                return Err(format!("n={n} shards={shards}: tcp differs from inproc"));
+            }
+            if stats != single_stats {
+                return Err(format!("n={n} shards={shards}: OpStats differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tcp_taylor_chain_matches_unsharded_and_reuses_caches() {
+    // End-to-end: a Taylor chain over two loopback daemons equals the
+    // in-process unsharded chain exactly, reuses the coordinator-side
+    // shard plans once the offsets stabilize, and reports per-endpoint
+    // round-trips on persistent connections (connects stay at one per
+    // slot, proving the connections were reused across the chain).
+    let servers = [
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+    ];
+    let mut h = DiagMatrix::zeros(48);
+    for d in -2i64..=2 {
+        let len = DiagMatrix::diag_len(48, d);
+        h.set_diag(d, vec![Complex::new(0.8, 0.1 * d as f64); len]);
+    }
+    let iters = 6;
+    let single = diamond::taylor::expm_diag(&h, 0.3, iters);
+    let mut sc = ShardCoordinator::new(EngineConfig::default(), 2, tcp_backend(&servers));
+    let sharded = diamond::taylor::expm_diag_sharded(&h, 0.3, iters, &mut sc).unwrap();
+    assert_eq!(sharded.op, single.op);
+    assert_eq!(sharded.shard.sharded_multiplies, iters as u64);
+    assert!(
+        sharded.shard.shard_plan_reuses >= 1,
+        "stabilized offsets must replay the shard partition: {:?}",
+        sharded.shard
+    );
+    let io = sc.endpoint_io();
+    assert_eq!(io.len(), 2);
+    let trips: u64 = io.iter().map(|e| e.round_trips).sum();
+    assert!(trips >= iters as u64, "round-trips {trips} < iters {iters}");
+    for ep in io {
+        assert!(ep.bytes_sent > 0 && ep.bytes_received > 0, "{ep:?}");
+        assert_eq!(
+            ep.connects, 1,
+            "persistent connections must be reused across the chain: {ep:?}"
+        );
+    }
+}
+
+#[test]
+fn dead_endpoint_fails_fast_with_named_endpoint() {
+    // Bind an ephemeral port, then drop the listener: connecting to it
+    // is refused. The multiply must fail inside the connect deadline
+    // with the endpoint named — never hang.
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let a = random_exp_offset_matrix(&mut XorShift64::new(11), 128, 5).freeze();
+    let mut sc = ShardCoordinator::new(
+        EngineConfig::default(),
+        2,
+        ShardBackend::Tcp {
+            endpoints: vec![dead.clone()],
+        },
+    );
+    let t0 = Instant::now();
+    let err = sc.multiply(&a, &a).expect_err("dead endpoint must error");
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(60), "fail-fast took {elapsed:?}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&dead), "endpoint not named: {msg}");
+    assert!(msg.contains("connecting"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn unresponsive_endpoint_hits_the_response_deadline() {
+    // A listener that accepts but never completes the handshake: the
+    // executor's read deadline must fire and kill the multiply — the
+    // straggler-cancellation path, not a hang.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let mut held = Vec::new();
+        for conn in listener.incoming() {
+            match conn {
+                Ok(c) => held.push(c), // hold open, answer nothing
+                Err(_) => break,
+            }
+        }
+    });
+    let mut ex = TcpShardExecutor::new(vec![addr]).unwrap();
+    ex.timeout = Duration::from_secs(2);
+    let mut sc = ShardCoordinator::with_tcp_executor(EngineConfig::default(), 2, ex);
+    let a = random_exp_offset_matrix(&mut XorShift64::new(13), 128, 5).freeze();
+    let t0 = Instant::now();
+    let err = sc.multiply(&a, &a).expect_err("silent endpoint must time out");
+    let elapsed = t0.elapsed();
+    assert!(elapsed < Duration::from_secs(30), "deadline ignored: {elapsed:?}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("handshake"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn version_skewed_server_is_rejected_by_the_client() {
+    // A "future" daemon whose hello advertises WIRE_VERSION+1: the
+    // coordinator must refuse it with an error naming both versions —
+    // never feed it a job it would mis-parse.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut c) = conn else { break };
+            let mut skewed = encode_hello();
+            skewed[4..].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+            let _ = c.write_all(&skewed);
+            // Hold the socket so the client's rejection is about the
+            // version, not a dropped connection.
+            let mut sink = [0u8; 64];
+            let _ = c.read(&mut sink);
+        }
+    });
+    let mut sc = ShardCoordinator::new(
+        EngineConfig::default(),
+        2,
+        ShardBackend::Tcp {
+            endpoints: vec![addr],
+        },
+    );
+    let a = random_exp_offset_matrix(&mut XorShift64::new(17), 96, 4).freeze();
+    let err = sc.multiply(&a, &a).expect_err("skewed server must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version mismatch"), "{msg}");
+    assert!(msg.contains(&format!("v{}", WIRE_VERSION + 1)), "{msg}");
+    assert!(msg.contains(&format!("v{WIRE_VERSION}")), "{msg}");
+}
+
+#[test]
+fn version_skewed_client_gets_a_framed_rejection_from_the_server() {
+    let mut server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    // The server speaks first: its hello must be valid for this build.
+    let mut hello = [0u8; HELLO_LEN];
+    stream.read_exact(&mut hello).unwrap();
+    transport::check_hello(&hello).unwrap();
+    // Claim an older version; the server must answer with a framed,
+    // decodable error rather than mis-parsing what follows.
+    let mut skewed = encode_hello();
+    skewed[4..].copy_from_slice(&(WIRE_VERSION - 1).to_le_bytes());
+    stream.write_all(&skewed).unwrap();
+    let frame = read_frame(&mut stream)
+        .unwrap()
+        .expect("server must reply with a rejection frame");
+    let err = format!("{:#}", decode_resp(&frame).unwrap_err());
+    assert!(err.contains("version mismatch"), "{err}");
+    server.stop();
+}
+
+#[test]
+fn real_shard_serve_binary_answers_a_chain_of_jobs() {
+    // The actual daemon the CI remote-shard-smoke job launches:
+    // `diamond shard-serve --listen 127.0.0.1:0`, with the bound
+    // address scraped from its first stdout line. Two multiplies on one
+    // coordinator exercise connection reuse and the daemon's
+    // per-connection plan cache; both must be bitwise identical to the
+    // single engine.
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_diamond"))
+        .args(["shard-serve", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning diamond shard-serve");
+    // Scrape "shard-serve: listening on <addr> (wire vN)" with a
+    // deadline so a broken daemon fails the test instead of hanging it.
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        let _ = BufReader::new(stdout).read_line(&mut line);
+        let _ = tx.send(line);
+    });
+    let line = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("daemon never announced its address");
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unparseable announcement: {line:?}"))
+        .to_string();
+    assert!(
+        line.contains(&format!("wire v{WIRE_VERSION}")),
+        "daemon must announce its wire version: {line:?}"
+    );
+
+    let a = random_exp_offset_matrix(&mut XorShift64::new(23), 256, 6).freeze();
+    let (single, _) = packed_diag_mul_counted(&a, &a);
+    let mut sc = ShardCoordinator::new(
+        EngineConfig::default(),
+        2,
+        ShardBackend::Tcp {
+            endpoints: vec![addr],
+        },
+    );
+    let (c1, _) = sc.multiply(&a, &a).expect("first multiply over the daemon");
+    let (c2, _) = sc.multiply(&a, &a).expect("second multiply over the daemon");
+    assert!(c1.bit_eq(&single));
+    assert!(c2.bit_eq(&single));
+    assert_eq!(sc.stats().shard_plans_built, 1);
+    assert_eq!(sc.stats().shard_plan_reuses, 1);
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+#[test]
+fn tcp_with_empty_shards_touches_only_working_endpoints() {
+    // One stored diagonal at a huge tile → one task; 4 shards leave 3
+    // empty ranges that must not open connections. Endpoint 1 would be
+    // dialed only by slots 1 and 3 (both empty) — point it at a dead
+    // port to prove empty ranges never connect.
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+    let id = DiagMatrix::identity(64).freeze();
+    let (single, _) = packed_diag_mul_counted(&id, &id);
+    let mut sc = ShardCoordinator::new(
+        EngineConfig {
+            tile: TileMode::Fixed(1 << 20),
+            ..EngineConfig::default()
+        },
+        4,
+        ShardBackend::Tcp {
+            endpoints: vec![server.endpoint(), dead],
+        },
+    );
+    let (c, _) = sc.multiply(&id, &id).expect("empty shards must not dial endpoints");
+    assert!(c.bit_eq(&single));
+    let io = sc.endpoint_io();
+    assert_eq!(io[0].round_trips, 1);
+    assert_eq!(io[1].round_trips, 0);
+    assert_eq!(io[1].connects, 0);
+}
