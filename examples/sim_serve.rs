@@ -1,0 +1,64 @@
+//! Serving-layer demo: batched SpMSpM jobs through the `BatchServer`.
+//!
+//! ```sh
+//! cargo run --release --example sim_serve
+//! ```
+//!
+//! Submits a mixed set of jobs — several Taylor-chain-style multiplies
+//! against the same stationary `H` plus a couple of unrelated products —
+//! and shows how the server batches jobs that share an operand
+//! fingerprint, then prints the aggregate `ServeStats` (jobs, batches,
+//! shared-operand hits, cycles, energy).
+
+use diamond::coordinator::server::{BatchServer, SpmspmRequest};
+use diamond::ham::heisenberg::heisenberg;
+use diamond::ham::tfim::tfim;
+
+fn main() -> anyhow::Result<()> {
+    let h = heisenberg(5, 1.0).matrix;
+    let g = tfim(5, 1.0, 0.9).matrix;
+    println!(
+        "workload: {} chain-style jobs sharing H ({}x{}, {} diagonals) + 2 one-off jobs",
+        4,
+        h.dim(),
+        h.dim(),
+        h.nnzd()
+    );
+
+    // Chain-style jobs: different A, identical stationary B = H — the
+    // dominant serving pattern in Hamiltonian simulation.
+    let mut jobs: Vec<SpmspmRequest> = (0..4)
+        .map(|i| SpmspmRequest {
+            id: i,
+            a: h.clone(),
+            b: h.clone(),
+        })
+        .collect();
+    // One-offs that share nothing.
+    jobs.push(SpmspmRequest {
+        id: 4,
+        a: g.clone(),
+        b: g.clone(),
+    });
+    jobs.push(SpmspmRequest {
+        id: 5,
+        a: h.clone(),
+        b: g.clone(),
+    });
+
+    let mut server = BatchServer::oracle(8);
+    println!("functional path: {}", server.functional_name());
+    let results = server.serve(jobs)?;
+    for r in &results {
+        println!(
+            "  job {}: batch {}, C has {} diagonals, {} cycles",
+            r.id,
+            r.batch,
+            r.c.nnzd(),
+            r.sim.total_cycles()
+        );
+    }
+    // The previously-silent aggregate: batching honesty in one line.
+    println!("{}", server.stats);
+    Ok(())
+}

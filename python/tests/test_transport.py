@@ -1,8 +1,8 @@
-"""Transliteration checks of the shard transport's wire encoding.
+"""Transliteration checks of the shard transport's wire encoding (v3).
 
 The build container has no Rust toolchain, so the byte-exact encoding
 rules of ``rust/src/coordinator/transport.rs`` (handshake + framing) and
-``rust/src/coordinator/shard.rs`` (job/response bodies) are mirrored
+``rust/src/coordinator/shard.rs`` (plane/job/chain bodies) are mirrored
 here 1:1 — same magics, same field order, same little-endian widths —
 and property-checked:
 
@@ -11,13 +11,21 @@ and property-checked:
   ``check_hello`` rejects them (both versions named in the error);
 * the TCP envelope ``len u64 | payload`` round-trips, including
   multi-part writes, clean-EOF detection and the oversize-length guard;
-* the job and response bodies round-trip **bit-exactly** (``f64`` values
-  travel as IEEE-754 bit patterns: ``-0.0``, denormals and NaN payloads
-  survive untouched);
+* the **plane fingerprint** (FNV-1a over dim, diagonal count, offsets
+  and every value's f64 bit pattern) matches the Rust implementation on
+  a golden vector, so content addressing agrees across languages;
+* ``PutPlane`` / ``HavePlane`` / job (52-byte fixed) / ``ChainJob``
+  (36-byte fixed) / responses round-trip **bit-exactly** (``f64``
+  values travel as IEEE-754 bit patterns: ``-0.0``, denormals and NaN
+  payloads survive untouched);
 * golden byte layouts pin the exact offsets, so a Rust-side encoding
   change that forgets the version bump fails here loudly;
-* composed streams parse: ``hello | job`` (the process backend's stdin)
-  and ``hello | frame(job) …`` (one TCP connection).
+* every truncated prefix and a sweep of single-byte mutations of valid
+  encodings decode to a loud ``ValueError``, never a raw struct error
+  or a silent wrong answer;
+* composed streams parse: ``hello | frame(put) … frame(job)`` (both the
+  process backend's pipes and a TCP connection are framed in v3) and
+  ``hello | frame(put H) | frame(chain job)`` (a server-side chain).
 """
 
 import math
@@ -28,15 +36,20 @@ import pytest
 
 # --- mirror of rust/src/coordinator/transport.rs --------------------------
 
-WIRE_VERSION = 2
+WIRE_VERSION = 3
 HELLO_MAGIC = b"DSHK"
 HELLO_LEN = 8
 MAX_FRAME_BYTES = 1 << 34
 
 JOB_MAGIC = b"DSJ1"
 RESP_MAGIC = b"DSR1"
+PLANE_PUT_MAGIC = b"DSP1"
+PLANE_HAVE_MAGIC = b"DSH1"
+CHAIN_MAGIC = b"DSC1"
+CHAIN_RESP_MAGIC = b"DCR1"
 STATUS_OK = 0
 STATUS_ERR = 1
+MAX_CHAIN_ITERS = 1024
 
 
 def encode_hello(version=WIRE_VERSION):
@@ -65,14 +78,14 @@ def encode_frame(*parts):
     return struct.pack("<Q", len(payload)) + payload
 
 
-def read_frame(buf, pos=0):
+def read_frame(buf, pos=0, max_frame=MAX_FRAME_BYTES):
     """Returns (payload | None, new_pos); None on clean EOF at ``pos``."""
     if pos == len(buf):
         return None, pos
     if len(buf) - pos < 8:
         raise ValueError("peer closed mid-frame")
     (length,) = struct.unpack_from("<Q", buf, pos)
-    if length > MAX_FRAME_BYTES:
+    if length > max_frame:
         raise ValueError("corrupt length prefix")
     end = pos + 8 + length
     if end > len(buf):
@@ -80,7 +93,7 @@ def read_frame(buf, pos=0):
     return buf[pos + 8 : end], end
 
 
-# --- mirror of the job/response bodies (coordinator/shard.rs) -------------
+# --- mirror of the plane/job/chain bodies (coordinator/shard.rs) ----------
 
 
 def _unpack(fmt, buf, pos):
@@ -100,6 +113,29 @@ def f64_bits(x):
     return struct.unpack("<Q", struct.pack("<d", x))[0]
 
 
+def plane_fingerprint(n, offsets, re, im):
+    """FNV-1a over dim, nnzd, offsets and every value's f64 bits — the
+    content address of an operand plane. Must agree bit-for-bit with
+    ``plane_fingerprint`` in shard.rs (golden vector pinned below and in
+    the Rust unit tests)."""
+    h = 0xCBF29CE484222325
+
+    def mix(x):
+        nonlocal h
+        h ^= x
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+
+    mix(n)
+    mix(len(offsets))
+    for d in offsets:
+        mix(d & 0xFFFFFFFFFFFFFFFF)  # i64 → u64, two's complement
+    for v in re:
+        mix(f64_bits(v))
+    for v in im:
+        mix(f64_bits(v))
+    return h
+
+
 def encode_matrix(n, offsets, re, im):
     elems = sum(n - abs(d) for d in offsets)
     assert len(re) == len(im) == elems
@@ -110,19 +146,16 @@ def encode_matrix(n, offsets, re, im):
     return b"".join(out)
 
 
-def encode_job(n, tile, task_lo, task_hi, mat_a, mat_b):
-    return (
-        JOB_MAGIC
-        + struct.pack("<QQQQ", n, tile, task_lo, task_hi)
-        + mat_a
-        + mat_b
-    )
+def matrix_wire_bytes(nnzd, elems):
+    return 8 + 8 * nnzd + 16 * elems
 
 
 def decode_matrix(buf, pos, n):
     (nnzd,) = _unpack("<Q", buf, pos)
     pos += 8
-    if nnzd > 2 * n:
+    # Both bounds pre-allocation, exactly like take_matrix: structural
+    # (≤ 2n−1 diagonals) and physical (each offset costs 8 frame bytes).
+    if nnzd > 2 * n or nnzd > (len(buf) - pos) // 8:
         raise ValueError(f"matrix claims {nnzd} diagonals for dimension {n}")
     offsets = []
     elems = 0
@@ -133,6 +166,11 @@ def decode_matrix(buf, pos, n):
             raise ValueError(f"offset {d} out of range for dimension {n}")
         elems += n - abs(d)
         offsets.append(d)
+    if elems > (len(buf) - pos) // 8:
+        raise ValueError(
+            f"truncated shard message: {elems} f64 values claimed at offset "
+            f"{pos}, frame holds {len(buf)} bytes"
+        )
     re = list(_unpack(f"<{elems}d", buf, pos))
     pos += 8 * elems
     im = list(_unpack(f"<{elems}d", buf, pos))
@@ -142,17 +180,115 @@ def decode_matrix(buf, pos, n):
     return (offsets, re, im), pos
 
 
+def encode_plane_put(fp, n, mat):
+    return PLANE_PUT_MAGIC + struct.pack("<QQ", fp, n) + mat
+
+
+def decode_plane_put(buf):
+    if buf[:4] != PLANE_PUT_MAGIC:
+        raise ValueError("not a plane-put frame (bad magic)")
+    fp, n = _unpack("<QQ", buf, 4)
+    m, pos = decode_matrix(buf, 20, n)
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return fp, n, m
+
+
+def encode_plane_have(fp, n):
+    return PLANE_HAVE_MAGIC + struct.pack("<QQ", fp, n)
+
+
+def decode_plane_have(buf):
+    if buf[:4] != PLANE_HAVE_MAGIC:
+        raise ValueError("not a plane-have frame (bad magic)")
+    if len(buf) != 20:
+        raise ValueError("trailing bytes" if len(buf) > 20 else "truncated shard message")
+    return _unpack("<QQ", buf, 4)
+
+
+def encode_job(n, tile, task_lo, task_hi, fp_a, fp_b):
+    """v3 job: a 52-byte fixed-size frame of plane *references* — the
+    operand bytes travel separately as PutPlane frames."""
+    return JOB_MAGIC + struct.pack("<QQQQQQ", n, tile, task_lo, task_hi, fp_a, fp_b)
+
+
 def decode_job(buf):
     if buf[:4] != JOB_MAGIC:
         raise ValueError("not a shard job (bad magic)")
-    n, tile, task_lo, task_hi = _unpack("<QQQQ", buf, 4)
+    n, tile, task_lo, task_hi, fp_a, fp_b = _unpack("<QQQQQQ", buf, 4)
     if task_lo > task_hi:
         raise ValueError(f"inverted shard range [{task_lo}, {task_hi})")
-    a, pos = decode_matrix(buf, 36, n)
-    b, pos = decode_matrix(buf, pos, n)
-    if pos != len(buf):
+    if len(buf) != 52:
         raise ValueError("trailing bytes")
-    return n, tile, task_lo, task_hi, a, b
+    return n, tile, task_lo, task_hi, fp_a, fp_b
+
+
+def encode_chain_job(n, t, iters, fp_h):
+    """ChainJob: 36 bytes — n, t (as f64 bits), iteration count and the
+    fingerprint of the resident H plane."""
+    return CHAIN_MAGIC + struct.pack("<QdQQ", n, t, iters, fp_h)
+
+
+def decode_chain_job(buf):
+    if buf[:4] != CHAIN_MAGIC:
+        raise ValueError("not a chain job (bad magic)")
+    (n,) = _unpack("<Q", buf, 4)
+    (t,) = _unpack("<d", buf, 12)
+    iters, fp_h = _unpack("<QQ", buf, 20)
+    if iters == 0 or iters > MAX_CHAIN_ITERS:
+        raise ValueError(
+            f"chain job claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})"
+        )
+    if len(buf) != 36:
+        raise ValueError("trailing bytes")
+    return n, t, iters, fp_h
+
+
+def encode_chain_ok(n, term, sum_m, steps):
+    """Chain response: magic | status | n | matrix(term) | matrix(sum) |
+    nsteps | steps, each step six u64-wide fields (saving as f64 bits)."""
+    out = [CHAIN_RESP_MAGIC, bytes([STATUS_OK]), struct.pack("<Q", n), term, sum_m]
+    out.append(struct.pack("<Q", len(steps)))
+    for k, term_nnzd, sum_nnzd, term_elements, saving, mults in steps:
+        out.append(
+            struct.pack("<QQQQdQ", k, term_nnzd, sum_nnzd, term_elements, saving, mults)
+        )
+    return b"".join(out)
+
+
+def encode_chain_err(msg):
+    raw = msg.encode("utf-8")
+    return CHAIN_RESP_MAGIC + bytes([STATUS_ERR]) + struct.pack("<Q", len(raw)) + raw
+
+
+def decode_chain_resp(buf):
+    if buf[:4] != CHAIN_RESP_MAGIC:
+        raise ValueError("not a chain response (bad magic)")
+    (status,) = _unpack("<B", buf, 4)
+    if status == STATUS_OK:
+        (n,) = _unpack("<Q", buf, 5)
+        term, pos = decode_matrix(buf, 13, n)
+        sum_m, pos = decode_matrix(buf, pos, n)
+        (nsteps,) = _unpack("<Q", buf, pos)
+        pos += 8
+        if nsteps > MAX_CHAIN_ITERS:
+            raise ValueError(
+                f"chain response claims {nsteps} steps (allowed <= {MAX_CHAIN_ITERS})"
+            )
+        steps = []
+        for _ in range(nsteps):
+            k, term_nnzd, sum_nnzd, term_elements = _unpack("<QQQQ", buf, pos)
+            (saving,) = _unpack("<d", buf, pos + 32)
+            (mults,) = _unpack("<Q", buf, pos + 40)
+            pos += 48
+            steps.append((k, term_nnzd, sum_nnzd, term_elements, saving, mults))
+        if pos != len(buf):
+            raise ValueError("trailing bytes")
+        return term, sum_m, steps
+    if status == STATUS_ERR:
+        (length,) = _unpack("<Q", buf, 5)
+        raise ValueError("chain worker reported: " + buf[13 : 13 + length].decode("utf-8"))
+    raise ValueError(f"unknown chain response status {status}")
 
 
 def encode_ok(re, im, mults):
@@ -174,9 +310,14 @@ def encode_err(msg):
 def decode_resp(buf):
     if buf[:4] != RESP_MAGIC:
         raise ValueError("not a shard response (bad magic)")
-    status = buf[4]
+    (status,) = _unpack("<B", buf, 4)
     if status == STATUS_OK:
         mults, elems = _unpack("<QQ", buf, 5)
+        if elems > (len(buf) - 21) // 8:
+            raise ValueError(
+                f"truncated shard message: {elems} f64 values claimed at offset "
+                f"21, frame holds {len(buf)} bytes"
+            )
         pos = 21
         re = list(_unpack(f"<{elems}d", buf, pos))
         pos += 8 * elems
@@ -191,6 +332,32 @@ def decode_resp(buf):
     raise ValueError(f"unknown shard response status {status}")
 
 
+# --- shared fixtures ------------------------------------------------------
+
+# The golden plane: 3×3, diagonals −1/0/2, E = 2 + 3 + 1 = 6 elements.
+# Mirrors `fingerprint_golden_vector_is_pinned` in shard.rs — the value
+# below must never change without a WIRE_VERSION bump on both sides.
+GOLDEN_N = 3
+GOLDEN_OFFSETS = [-1, 0, 2]
+GOLDEN_RE = [0.5, -0.25, 1.0, 2.0, -0.0, 3.5]
+GOLDEN_IM = [0.0, 1.5, -2.5, 0.125, 4.0, -1.0]
+GOLDEN_FP = 0xAE41FF973D63777A
+
+
+def golden_matrix():
+    return encode_matrix(GOLDEN_N, GOLDEN_OFFSETS, GOLDEN_RE, GOLDEN_IM)
+
+
+def random_plane(rng, n):
+    offsets = sorted(
+        set(int(d) for d in rng.integers(-(n - 1), n, size=5)) if n > 1 else {0}
+    )
+    elems = sum(n - abs(d) for d in offsets)
+    re = [float(x) for x in rng.standard_normal(elems)]
+    im = [float(x) for x in rng.standard_normal(elems)]
+    return offsets, re, im
+
+
 # --- the tests ------------------------------------------------------------
 
 
@@ -199,18 +366,20 @@ def test_hello_golden_bytes_and_roundtrip():
     assert len(h) == HELLO_LEN
     # Golden layout: magic then the version as little-endian u32. A Rust
     # encoding change that forgets the version bump breaks this line.
-    assert h == b"DSHK\x02\x00\x00\x00"
+    assert h == b"DSHK\x03\x00\x00\x00"
     assert decode_hello(h) == WIRE_VERSION
     check_hello(h)  # no raise
 
 
 def test_hello_rejects_skew_magic_and_truncation():
-    with pytest.raises(ValueError) as e:
-        check_hello(encode_hello(WIRE_VERSION + 1))
-    # Both versions named, so either end of a skewed deployment can
-    # diagnose which side is stale.
-    assert f"v{WIRE_VERSION + 1}" in str(e.value)
-    assert f"v{WIRE_VERSION}" in str(e.value)
+    # Version-skew matrix: one version ahead and one behind both fail
+    # fast, naming both versions so either end of a skewed deployment
+    # can diagnose which side is stale.
+    for peer in (WIRE_VERSION + 1, WIRE_VERSION - 1):
+        with pytest.raises(ValueError) as e:
+            check_hello(encode_hello(peer))
+        assert f"v{peer}" in str(e.value)
+        assert f"v{WIRE_VERSION}" in str(e.value)
     with pytest.raises(ValueError):
         decode_hello(b"DSJ1" + struct.pack("<I", WIRE_VERSION))  # job magic is not a hello
     with pytest.raises(ValueError):
@@ -235,60 +404,148 @@ def test_frame_roundtrip_multipart_and_bounds():
     # An oversize length prefix is rejected before any allocation.
     with pytest.raises(ValueError, match="corrupt"):
         read_frame(struct.pack("<Q", MAX_FRAME_BYTES + 1))
+    # `shard-serve --max-frame-bytes` tightens the same guard: a frame
+    # over the configured cap fails with the identical error.
+    with pytest.raises(ValueError, match="corrupt length prefix"):
+        read_frame(encode_frame(b"x" * 32), max_frame=16)
 
 
-def test_job_golden_layout():
-    # 3×3 matrix with diagonals −1 and 0: E = 2 + 3 = 5 elements.
-    offsets = [-1, 0]
-    re = [1.0, 2.0, 3.0, 4.0, 5.0]
-    im = [0.5, -0.5, 0.25, -0.25, 0.0]
-    m = encode_matrix(3, offsets, re, im)
-    job = encode_job(3, 8192, 1, 4, m, m)
-    # Header: magic, then n/tile/task_lo/task_hi as u64 le.
+def test_plane_fingerprint_golden_and_sensitivity():
+    # Cross-language content addressing hinges on this constant: the
+    # identical plane must hash identically in Rust and here.
+    assert plane_fingerprint(GOLDEN_N, GOLDEN_OFFSETS, GOLDEN_RE, GOLDEN_IM) == GOLDEN_FP
+    # Every field participates: dimension, offsets, value bits.
+    assert plane_fingerprint(4, GOLDEN_OFFSETS, GOLDEN_RE, GOLDEN_IM) != GOLDEN_FP
+    assert (
+        plane_fingerprint(GOLDEN_N, [-1, 0, 1], GOLDEN_RE, GOLDEN_IM) != GOLDEN_FP
+    )
+    bumped = list(GOLDEN_RE)
+    bumped[0] = math.nextafter(bumped[0], math.inf)
+    assert plane_fingerprint(GOLDEN_N, GOLDEN_OFFSETS, bumped, GOLDEN_IM) != GOLDEN_FP
+    # Bit patterns, not float equality: -0.0 and 0.0 address different
+    # planes (they are different operand bytes on the wire).
+    flipped = list(GOLDEN_RE)
+    flipped[4] = 0.0  # was -0.0
+    assert plane_fingerprint(GOLDEN_N, GOLDEN_OFFSETS, flipped, GOLDEN_IM) != GOLDEN_FP
+
+
+def test_plane_put_golden_layout_and_roundtrip():
+    buf = encode_plane_put(GOLDEN_FP, GOLDEN_N, golden_matrix())
+    assert buf[:4] == b"DSP1"
+    assert struct.unpack_from("<QQ", buf, 4) == (GOLDEN_FP, GOLDEN_N)
+    # Matrix begins at byte 20 with its diagonal count.
+    assert struct.unpack_from("<Q", buf, 20) == (3,)
+    assert struct.unpack_from("<qqq", buf, 28) == (-1, 0, 2)
+    assert len(buf) == 20 + matrix_wire_bytes(3, 6)
+    fp, n, (offs, re, im) = decode_plane_put(buf)
+    assert (fp, n, offs) == (GOLDEN_FP, GOLDEN_N, GOLDEN_OFFSETS)
+    assert [f64_bits(x) for x in re] == [f64_bits(x) for x in GOLDEN_RE]
+    assert [f64_bits(x) for x in im] == [f64_bits(x) for x in GOLDEN_IM]
+    # The server's anti-poisoning rule: recompute the fingerprint of
+    # every accepted Put; a frame claiming the wrong address is caught.
+    assert plane_fingerprint(n, *(offs, re, im)) == fp
+    lying = encode_plane_put(GOLDEN_FP ^ 1, GOLDEN_N, golden_matrix())
+    fp2, n2, m2 = decode_plane_put(lying)
+    assert plane_fingerprint(n2, *m2) != fp2  # mismatch → reject
+
+
+def test_plane_have_is_twenty_bytes():
+    buf = encode_plane_have(GOLDEN_FP, GOLDEN_N)
+    assert buf[:4] == b"DSH1"
+    assert len(buf) == 20  # the whole point: 20 bytes instead of a plane
+    assert decode_plane_have(buf) == (GOLDEN_FP, GOLDEN_N)
+    with pytest.raises(ValueError):
+        decode_plane_have(buf[:15])
+    with pytest.raises(ValueError):
+        decode_plane_have(buf + b"\x00")
+    with pytest.raises(ValueError, match="magic"):
+        decode_plane_have(b"DSP1" + buf[4:])
+
+
+def test_job_golden_layout_is_52_bytes():
+    job = encode_job(3, 8192, 1, 4, GOLDEN_FP, 0x1122334455667788)
+    # v3 jobs are fixed-size plane references: magic, then
+    # n/tile/task_lo/task_hi/fp_a/fp_b as u64 le — operands travel
+    # separately as PutPlane frames, at most once per connection.
+    assert len(job) == 52
     assert job[:4] == b"DSJ1"
-    assert struct.unpack_from("<QQQQ", job, 4) == (3, 8192, 1, 4)
-    # Matrix A begins at byte 36 with its diagonal count.
-    assert struct.unpack_from("<Q", job, 36) == (2,)
-    assert struct.unpack_from("<qq", job, 44) == (-1, 0)
-    # Value planes follow as f64 bit patterns, re plane then im plane.
-    assert struct.unpack_from("<5d", job, 60) == tuple(re)
-    assert struct.unpack_from("<5d", job, 100) == tuple(im)
-    # Total: header 36 + 2 × (8 + 2·8 + 2·5·8) = 36 + 2·104.
-    assert len(job) == 36 + 2 * 104
+    assert struct.unpack_from("<QQQQQQ", job, 4) == (
+        3,
+        8192,
+        1,
+        4,
+        GOLDEN_FP,
+        0x1122334455667788,
+    )
 
 
 def test_job_roundtrip_and_rejections():
     rng = np.random.default_rng(42)
     for n in (1, 2, 7, 33):
-        offsets = sorted(
-            set(int(d) for d in rng.integers(-(n - 1), n, size=5)) if n > 1 else {0}
-        )
-        elems = sum(n - abs(d) for d in offsets)
-        re = [float(x) for x in rng.standard_normal(elems)]
-        im = [float(x) for x in rng.standard_normal(elems)]
-        m = encode_matrix(n, offsets, re, im)
-        job = encode_job(n, 64, 0, 3, m, m)
-        got_n, tile, lo, hi, (aoff, are, aim), _b = decode_job(job)
-        assert (got_n, tile, lo, hi) == (n, 64, 0, 3)
-        assert aoff == offsets
-        # Bit-exact: compare the u64 views, not float equality.
-        assert [f64_bits(x) for x in are] == [f64_bits(x) for x in re]
-        assert [f64_bits(x) for x in aim] == [f64_bits(x) for x in im]
+        offsets, re, im = random_plane(rng, n)
+        fp = plane_fingerprint(n, offsets, re, im)
+        job = encode_job(n, 64, 0, 3, fp, fp)
+        assert decode_job(job) == (n, 64, 0, 3, fp, fp)
         with pytest.raises(ValueError):
             decode_job(job[:-5])  # truncation
         with pytest.raises(ValueError):
             decode_job(job + b"\x00")  # trailing bytes
     with pytest.raises(ValueError):
         decode_job(b"nope")
-    # Inverted range and out-of-range offset are structural errors.
-    m = encode_matrix(4, [0], [1.0] * 4, [0.0] * 4)
     with pytest.raises(ValueError, match="inverted"):
-        decode_job(encode_job(4, 8, 5, 2, m, m))
-    # Hand-crafted matrix claiming offset 9 in a 4-dim matrix: rejected
-    # at the offset check, before any value bytes are interpreted.
-    bad = struct.pack("<Q", 1) + struct.pack("<q", 9)
-    with pytest.raises(ValueError, match="out of range"):
-        decode_job(encode_job(4, 8, 0, 1, bad, m))
+        decode_job(encode_job(4, 8, 5, 2, 1, 2))
+
+
+def test_chain_job_golden_layout_and_bounds():
+    buf = encode_chain_job(48, 0.25, 6, GOLDEN_FP)
+    assert len(buf) == 36
+    assert buf[:4] == b"DSC1"
+    assert struct.unpack_from("<Q", buf, 4) == (48,)
+    # t travels as f64 bits at offset 12, then iters and fp_h.
+    assert struct.unpack_from("<d", buf, 12) == (0.25,)
+    assert struct.unpack_from("<QQ", buf, 20) == (6, GOLDEN_FP)
+    assert decode_chain_job(buf) == (48, 0.25, 6, GOLDEN_FP)
+    # t is bit-exact: -0.0 survives.
+    _, t, _, _ = decode_chain_job(encode_chain_job(4, -0.0, 1, 9))
+    assert math.copysign(1.0, t) == -1.0
+    # The iteration budget is structural: 0 and MAX+1 both reject.
+    with pytest.raises(ValueError, match="iterations"):
+        decode_chain_job(encode_chain_job(48, 0.25, 0, GOLDEN_FP))
+    with pytest.raises(ValueError, match="iterations"):
+        decode_chain_job(encode_chain_job(48, 0.25, MAX_CHAIN_ITERS + 1, GOLDEN_FP))
+    with pytest.raises(ValueError):
+        decode_chain_job(buf[:-3])
+    with pytest.raises(ValueError):
+        decode_chain_job(buf + b"\x00")
+
+
+def test_chain_resp_roundtrip_is_bit_exact():
+    term = golden_matrix()
+    sum_m = encode_matrix(3, [0], [1.0, -0.0, 5e-324], [math.inf, 0.0, -2.5])
+    steps = [
+        (1, 3, 1, 6, 0.5, 27),
+        (2, 3, 3, 6, -0.0, 54),  # saving is f64 bits: -0.0 must survive
+    ]
+    buf = encode_chain_ok(3, term, sum_m, steps)
+    assert buf[:5] == b"DCR1\x00"
+    gterm, gsum, gsteps = decode_chain_resp(buf)
+    assert gterm[0] == GOLDEN_OFFSETS
+    assert [f64_bits(x) for x in gterm[1]] == [f64_bits(x) for x in GOLDEN_RE]
+    assert [f64_bits(x) for x in gsum[1]] == [f64_bits(x) for x in [1.0, -0.0, 5e-324]]
+    assert [f64_bits(x) for x in gsum[2]] == [f64_bits(x) for x in [math.inf, 0.0, -2.5]]
+    assert len(gsteps) == 2
+    assert gsteps[0] == steps[0]
+    assert gsteps[1][:4] == steps[1][:4] and gsteps[1][5] == steps[1][5]
+    assert math.copysign(1.0, gsteps[1][4]) == -1.0  # -0.0 saving survived
+    # Server-reported failures surface as errors, like decode_resp.
+    with pytest.raises(ValueError, match="unknown operand plane"):
+        decode_chain_resp(encode_chain_err("unknown operand plane 0x1 — resend required"))
+    # A step count over the iteration budget rejects pre-allocation.
+    bad = bytearray(buf)
+    nsteps_at = 13 + len(term) + len(sum_m)
+    struct.pack_into("<Q", bad, nsteps_at, MAX_CHAIN_ITERS + 7)
+    with pytest.raises(ValueError, match="steps"):
+        decode_chain_resp(bytes(bad))
 
 
 def test_response_roundtrip_is_bit_exact():
@@ -309,32 +566,97 @@ def test_response_roundtrip_is_bit_exact():
         decode_resp(buf[:7])
 
 
+def test_every_truncation_and_mutation_fails_loudly():
+    """The hardened-decoder property: every proper prefix of a valid
+    encoding raises ValueError (never struct.error, never a silent
+    partial decode), and flipped header bytes are caught by a magic,
+    bound or trailing-bytes check — or decode to *different* values,
+    never crash."""
+    put = encode_plane_put(GOLDEN_FP, GOLDEN_N, golden_matrix())
+    have = encode_plane_have(GOLDEN_FP, GOLDEN_N)
+    job = encode_job(3, 64, 0, 2, GOLDEN_FP, GOLDEN_FP)
+    chain = encode_chain_job(16, 0.5, 4, GOLDEN_FP)
+    resp = encode_ok([1.0, 2.0], [0.0, -1.0], 9)
+    cresp = encode_chain_ok(3, golden_matrix(), golden_matrix(), [(1, 3, 3, 6, 0.0, 27)])
+    decoders = [
+        (put, decode_plane_put),
+        (have, decode_plane_have),
+        (job, decode_job),
+        (chain, decode_chain_job),
+        (resp, decode_resp),
+        (cresp, decode_chain_resp),
+    ]
+    for buf, dec in decoders:
+        dec(buf)  # the unmutated encoding decodes
+        for cut in range(len(buf)):
+            with pytest.raises(ValueError):
+                dec(buf[:cut])
+    # Single-byte mutations across the header region: decoding either
+    # rejects loudly or returns (no exception class other than
+    # ValueError may escape — that is the Cursor contract).
+    rng = np.random.default_rng(7)
+    for buf, dec in decoders:
+        for _ in range(64):
+            i = int(rng.integers(0, min(len(buf), 24)))
+            mutated = bytearray(buf)
+            mutated[i] ^= int(rng.integers(1, 256))
+            try:
+                dec(bytes(mutated))
+            except ValueError:
+                pass
+
+
 def test_composed_streams_parse_like_both_transports():
-    m = encode_matrix(2, [0], [1.0, 2.0], [0.0, -1.0])
-    job = encode_job(2, 16, 0, 1, m, m)
-    # Process backend: both pipes are hello-stamped — stdin carries
-    # hello | job, stdout hello | response, each delimited by EOF.
-    stdin = encode_hello() + job
+    rng = np.random.default_rng(3)
+    offsets, re, im = random_plane(rng, 2)
+    fp = plane_fingerprint(2, offsets, re, im)
+    put = encode_plane_put(fp, 2, encode_matrix(2, offsets, re, im))
+    job = encode_job(2, 16, 0, 1, fp, fp)
+    # Process backend (v3): both pipes are hello-stamped and framed —
+    # stdin carries hello | frame(put) | frame(job), stdout hello |
+    # frame(response); the same JobRouter serves both transports.
+    stdin = encode_hello() + encode_frame(put) + encode_frame(job)
     check_hello(stdin[:HELLO_LEN])
-    assert decode_job(stdin[HELLO_LEN:])[0] == 2
-    stdout = encode_hello() + encode_ok([1.0], [0.0], 1)
+    pos = HELLO_LEN
+    f1, pos = read_frame(stdin, pos)
+    assert decode_plane_put(f1)[0] == fp
+    f2, pos = read_frame(stdin, pos)
+    assert decode_job(f2)[0] == 2
+    assert read_frame(stdin, pos)[0] is None
+    stdout = encode_hello() + encode_frame(encode_ok([1.0], [0.0], 1))
     check_hello(stdout[:HELLO_LEN])
-    assert decode_resp(stdout[HELLO_LEN:])[2] == 1
-    # TCP: hello once, then one frame per job — two jobs on one
-    # connection (a Taylor chain) parse sequentially.
-    stream = encode_hello() + encode_frame(job) + encode_frame(job)
+    assert decode_resp(read_frame(stdout, HELLO_LEN)[0])[2] == 1
+    # TCP Taylor chain, per-iteration mode: the stationary plane ships
+    # once, later multiplies reference it by Have + fingerprint — the
+    # second iteration's operand traffic is 20 bytes, not a plane.
+    have = encode_plane_have(fp, 2)
+    stream = (
+        encode_hello()
+        + encode_frame(put)
+        + encode_frame(job)
+        + encode_frame(have)
+        + encode_frame(job)
+    )
     check_hello(stream[:HELLO_LEN])
     pos = HELLO_LEN
-    seen = 0
+    kinds = []
     while True:
         payload, pos = read_frame(stream, pos)
         if payload is None:
             break
-        assert decode_job(payload)[0] == 2
-        seen += 1
-    assert seen == 2
+        kinds.append(bytes(payload[:4]))
+    assert kinds == [b"DSP1", b"DSJ1", b"DSH1", b"DSJ1"]
+    # Server-side chain: H ships once, then one 36-byte ChainJob runs
+    # the whole loop on the daemon.
+    cstream = encode_hello() + encode_frame(put) + encode_frame(encode_chain_job(2, 0.3, 6, fp))
+    pos = HELLO_LEN
+    f1, pos = read_frame(cstream, pos)
+    assert decode_plane_put(f1)[0] == fp
+    f2, pos = read_frame(cstream, pos)
+    assert decode_chain_job(f2) == (2, 0.3, 6, fp)
+    assert len(f2) == 36
     # A version-skewed stream must fail at the handshake, before any
-    # job bytes are interpreted (the PR-4 mis-parse this fixes).
-    skewed = encode_hello(WIRE_VERSION + 1) + job
+    # frame bytes are interpreted.
+    skewed = encode_hello(WIRE_VERSION + 1) + encode_frame(job)
     with pytest.raises(ValueError, match="version mismatch"):
         check_hello(skewed[:HELLO_LEN])

@@ -7,8 +7,10 @@
 //!                [--shard-endpoints <host:port,...>]
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
 //!                [--shards <n>] [--shard-backend <inproc|process|tcp>]
-//!                [--shard-endpoints <host:port,...>]
-//! diamond shard-serve --listen <addr>   (shard daemon: jobs over TCP)
+//!                [--shard-endpoints <host:port,...>] [--chain]
+//!                [--counters-json <path>]
+//! diamond shard-serve --listen <addr> [--max-frame-bytes <n>]
+//!                     [--plane-cache-cap <n>] [--plan-cache-cap <n>]
 //! diamond shard-worker        (internal: one shard job over stdin/stdout)
 //! diamond bench-all
 //! ```
@@ -86,6 +88,7 @@ fn cmd_shard_serve(args: &[String]) -> Result<(), String> {
     use crate::coordinator::transport;
     let listen = flag_value(args, "--listen")
         .ok_or("shard-serve requires --listen <host:port> (port 0 for ephemeral)")?;
+    let cfg = serve_config_flags(args)?;
     let listener = std::net::TcpListener::bind(&listen)
         .map_err(|e| format!("binding {listen}: {e}"))?;
     let addr = listener
@@ -97,13 +100,89 @@ fn cmd_shard_serve(args: &[String]) -> Result<(), String> {
     );
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
-    transport::serve(listener).map_err(|e| format!("shard-serve: {e:#}"))
+    transport::serve_with(listener, cfg).map_err(|e| format!("shard-serve: {e:#}"))
+}
+
+/// Parse `shard-serve`'s cache/bound knobs into a
+/// [`ServeConfig`](crate::coordinator::transport::ServeConfig), starting
+/// from the defaults.
+fn serve_config_flags(
+    args: &[String],
+) -> Result<crate::coordinator::transport::ServeConfig, String> {
+    let mut cfg = crate::coordinator::transport::ServeConfig::default();
+    if let Some(v) = flag_value(args, "--max-frame-bytes") {
+        cfg.max_frame_bytes = v
+            .parse::<u64>()
+            .map_err(|e| format!("--max-frame-bytes: {e}"))?;
+        if cfg.max_frame_bytes == 0 {
+            return Err("--max-frame-bytes must be at least 1".into());
+        }
+    }
+    if let Some(v) = flag_value(args, "--plane-cache-cap") {
+        cfg.plane_cache_cap = v
+            .parse::<usize>()
+            .map_err(|e| format!("--plane-cache-cap: {e}"))?;
+    }
+    if let Some(v) = flag_value(args, "--plan-cache-cap") {
+        cfg.plan_cache_cap = v
+            .parse::<usize>()
+            .map_err(|e| format!("--plan-cache-cap: {e}"))?;
+    }
+    Ok(cfg)
+}
+
+/// Serialize the shard-transport byte counters as a small JSON document
+/// (hand-built; the offline build has no serde) so CI gates can assert
+/// the dedup ratio without scraping stdout.
+fn counters_json(
+    mode: &str,
+    family: &str,
+    qubits: usize,
+    iters: usize,
+    payload_bytes: u64,
+    dedup_bytes_avoided: u64,
+    endpoints: &[crate::coordinator::transport::EndpointIo],
+) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut eps = String::new();
+    for (i, ep) in endpoints.iter().enumerate() {
+        if i > 0 {
+            eps.push_str(", ");
+        }
+        eps.push_str(&format!(
+            "{{\"endpoint\": \"{}\", \"round_trips\": {}, \"bytes_sent\": {}, \
+             \"bytes_received\": {}, \"connects\": {}, \"payload_bytes\": {}, \
+             \"dedup_bytes_avoided\": {}}}",
+            esc(&ep.endpoint),
+            ep.round_trips,
+            ep.bytes_sent,
+            ep.bytes_received,
+            ep.connects,
+            ep.payload_bytes,
+            ep.dedup_bytes_avoided,
+        ));
+    }
+    format!(
+        "{{\n  \"mode\": \"{}\",\n  \"family\": \"{}\",\n  \"qubits\": {},\n  \
+         \"iters\": {},\n  \"payload_bytes\": {},\n  \"dedup_bytes_avoided\": {},\n  \
+         \"endpoints\": [{}]\n}}\n",
+        esc(mode),
+        esc(family),
+        qubits,
+        iters,
+        payload_bytes,
+        dedup_bytes_avoided,
+        eps,
+    )
 }
 
 fn cmd_evolve(args: &[String]) -> Result<(), String> {
-    let family = flag_value(args, "--family")
-        .and_then(|f| parse_family(&f))
+    let family_arg = flag_value(args, "--family");
+    let family = family_arg
+        .as_deref()
+        .and_then(parse_family)
         .ok_or("evolve requires --family <maxcut|heisenberg|tsp|tfim|fermi-hubbard|qmaxcut|bose-hubbard>")?;
+    let family_name = family_arg.expect("present: parsed above").to_ascii_lowercase();
     let qubits: usize = flag_value(args, "--qubits")
         .ok_or("evolve requires --qubits <n>")?
         .parse()
@@ -113,9 +192,22 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         .transpose()?
         .unwrap_or(0);
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    let chain = args.iter().any(|a| a == "--chain");
+    let counters_path = flag_value(args, "--counters-json");
     let (shards, shard_backend) = shard_flags(args)?;
     if use_pjrt && shards.is_some() {
         return Err("--shards applies to the oracle path only (drop --pjrt)".into());
+    }
+    if chain {
+        if use_pjrt {
+            return Err("--chain runs on the shard transport (drop --pjrt)".into());
+        }
+        if !matches!(shard_backend, ShardBackend::Tcp { .. }) {
+            return Err(
+                "--chain requires --shard-backend tcp (the chain executes on the daemon)"
+                    .into(),
+            );
+        }
     }
 
     let ham = crate::ham::build(family, qubits);
@@ -124,6 +216,71 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         .map(|v| v.parse().map_err(|e| format!("--t: {e}")))
         .transpose()?
         .unwrap_or_else(|| crate::bench_harness::workload::bench_t(h));
+
+    if chain {
+        // Server-side chain: one ChainJob carries (H, t, iters); the
+        // daemon runs the ChainDriver loop and returns term + sum +
+        // per-step stats — bitwise identical to the local chain.
+        let iters = if iters == 0 {
+            crate::taylor::iters_for(h, t, crate::taylor::DEFAULT_TOL)
+        } else {
+            iters
+        };
+        let mut sc = crate::coordinator::shard::ShardCoordinator::new(
+            crate::linalg::engine::EngineConfig::default(),
+            shards.unwrap_or(1),
+            shard_backend,
+        );
+        let r = sc.run_chain(h, t, iters).map_err(|e| format!("evolve: {e:#}"))?;
+        println!(
+            "{}: dim {}, {} diagonals, t={t:.4}, {} Taylor iterations [server-side chain]",
+            ham.name,
+            h.dim(),
+            h.nnzd(),
+            iters,
+        );
+        for s in &r.steps {
+            println!(
+                "  iter {}: term {} diagonals, sum {} diagonals, storage saving {:.1}%",
+                s.k,
+                s.term_nnzd,
+                s.sum_nnzd,
+                s.sum_storage_saving * 100.0
+            );
+        }
+        println!(
+            "chain transport: {} remote chain job(s), {} KiB operand payload shipped, {} KiB avoided by plane dedup",
+            r.shard.remote_chain_jobs,
+            r.shard.payload_bytes / 1024,
+            r.shard.dedup_bytes_avoided / 1024,
+        );
+        for ep in sc.endpoint_io() {
+            println!(
+                "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s), payload {} B (+{} B deduped)",
+                ep.endpoint,
+                ep.round_trips,
+                ep.bytes_sent / 1024,
+                ep.bytes_received / 1024,
+                ep.connects,
+                ep.payload_bytes,
+                ep.dedup_bytes_avoided,
+            );
+        }
+        if let Some(path) = counters_path {
+            let doc = counters_json(
+                "chain",
+                &family_name,
+                qubits,
+                iters,
+                r.shard.payload_bytes,
+                r.shard.dedup_bytes_avoided,
+                sc.endpoint_io(),
+            );
+            std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+            println!("counters written to {path}");
+        }
+        return Ok(());
+    }
 
     let coord = if use_pjrt {
         Coordinator::with_pjrt().map_err(|e| format!("loading PJRT runtime: {e:#}"))?
@@ -196,15 +353,37 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             rep.engine.shard_stitch_bytes / 1024
         );
     }
+    if rep.engine.shard_payload_bytes > 0 || rep.engine.shard_dedup_bytes_avoided > 0 {
+        println!(
+            "operand planes: {} KiB shipped, {} KiB avoided by content-addressed dedup",
+            rep.engine.shard_payload_bytes / 1024,
+            rep.engine.shard_dedup_bytes_avoided / 1024,
+        );
+    }
     for ep in &rep.engine.shard_endpoints {
         println!(
-            "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s)",
+            "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s), payload {} B (+{} B deduped)",
             ep.endpoint,
             ep.round_trips,
             ep.bytes_sent / 1024,
             ep.bytes_received / 1024,
-            ep.connects
+            ep.connects,
+            ep.payload_bytes,
+            ep.dedup_bytes_avoided,
         );
+    }
+    if let Some(path) = counters_path {
+        let doc = counters_json(
+            "per-iter",
+            &family_name,
+            qubits,
+            rep.iters,
+            rep.engine.shard_payload_bytes,
+            rep.engine.shard_dedup_bytes_avoided,
+            &rep.engine.shard_endpoints,
+        );
+        std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("counters written to {path}");
     }
     Ok(())
 }
@@ -339,8 +518,11 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
                  [--shard-endpoints <host:port,...>]\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]\n         \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
-                 [--shard-endpoints <host:port,...>]\n  \
-                 shard-serve --listen <host:port>  (TCP shard daemon; port 0 = ephemeral)\n  \
+                 [--shard-endpoints <host:port,...>] [--chain] [--counters-json <path>]\n         \
+                 (--chain runs the whole Taylor chain server-side over tcp)\n  \
+                 shard-serve --listen <host:port> [--max-frame-bytes <n>]\n              \
+                 [--plane-cache-cap <n>] [--plan-cache-cap <n>]\n              \
+                 (TCP shard daemon; port 0 = ephemeral)\n  \
                  shard-worker  (internal: one shard job over stdin/stdout)"
             );
             Ok(())
@@ -459,5 +641,105 @@ mod tests {
             run_with_args(vec!["kernel".into(), "--check-only".into()]),
             2
         );
+    }
+
+    #[test]
+    fn serve_config_flags_parse_and_reject() {
+        use crate::coordinator::transport::ServeConfig;
+        let d = ServeConfig::default();
+        let got = serve_config_flags(&[]).unwrap();
+        assert_eq!(got.max_frame_bytes, d.max_frame_bytes);
+        assert_eq!(got.plane_cache_cap, d.plane_cache_cap);
+        assert_eq!(got.plan_cache_cap, d.plan_cache_cap);
+        let got = serve_config_flags(&[
+            "--max-frame-bytes".into(),
+            "4096".into(),
+            "--plane-cache-cap".into(),
+            "3".into(),
+            "--plan-cache-cap".into(),
+            "7".into(),
+        ])
+        .unwrap();
+        assert_eq!(got.max_frame_bytes, 4096);
+        assert_eq!(got.plane_cache_cap, 3);
+        assert_eq!(got.plan_cache_cap, 7);
+        assert!(serve_config_flags(&["--max-frame-bytes".into(), "0".into()]).is_err());
+        assert!(serve_config_flags(&["--max-frame-bytes".into(), "x".into()]).is_err());
+        assert!(serve_config_flags(&["--plane-cache-cap".into(), "-1".into()]).is_err());
+    }
+
+    #[test]
+    fn evolve_chain_flag_validation() {
+        // --chain without the tcp backend is rejected before any work.
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--chain".into(),
+            ]),
+            2
+        );
+        // --chain + --pjrt conflict.
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--chain".into(),
+                "--pjrt".into(),
+            ]),
+            2
+        );
+        // --chain with a process backend is still rejected: the chain
+        // job rides the TCP transport only.
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--shards".into(),
+                "2".into(),
+                "--shard-backend".into(),
+                "process".into(),
+                "--chain".into(),
+            ]),
+            2
+        );
+    }
+
+    #[test]
+    fn counters_json_shape() {
+        let eps = vec![crate::coordinator::transport::EndpointIo {
+            endpoint: "127.0.0.1:7403".into(),
+            round_trips: 2,
+            bytes_sent: 100,
+            bytes_received: 200,
+            connects: 1,
+            payload_bytes: 80,
+            dedup_bytes_avoided: 800,
+        }];
+        let doc = counters_json("chain", "tfim", 8, 6, 80, 800, &eps);
+        assert!(doc.contains("\"mode\": \"chain\""));
+        assert!(doc.contains("\"family\": \"tfim\""));
+        assert!(doc.contains("\"qubits\": 8"));
+        assert!(doc.contains("\"iters\": 6"));
+        assert!(doc.contains("\"payload_bytes\": 80"));
+        assert!(doc.contains("\"dedup_bytes_avoided\": 800"));
+        assert!(doc.contains("\"endpoint\": \"127.0.0.1:7403\""));
+        // Hand-built JSON must stay parseable: balanced braces/brackets,
+        // no trailing commas before a closer.
+        assert_eq!(
+            doc.matches('{').count(),
+            doc.matches('}').count(),
+            "balanced braces"
+        );
+        assert!(!doc.contains(",]") && !doc.contains(",}"));
     }
 }

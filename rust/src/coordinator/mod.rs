@@ -218,6 +218,10 @@ impl Coordinator {
                     bytes_received: after.bytes_received
                         - b.map_or(0, |b| b.bytes_received),
                     connects: after.connects - b.map_or(0, |b| b.connects),
+                    payload_bytes: after.payload_bytes
+                        - b.map_or(0, |b| b.payload_bytes),
+                    dedup_bytes_avoided: after.dedup_bytes_avoided
+                        - b.map_or(0, |b| b.dedup_bytes_avoided),
                 }
             })
             .filter(|d| d.round_trips > 0 || d.connects > 0)
@@ -227,6 +231,9 @@ impl Coordinator {
             shards_used: shard_after.shards_used - shard_before.shards_used,
             shard_stitch_bytes: shard_after.stitch_bytes - shard_before.stitch_bytes,
             shard_endpoints,
+            shard_payload_bytes: shard_after.payload_bytes - shard_before.payload_bytes,
+            shard_dedup_bytes_avoided: shard_after.dedup_bytes_avoided
+                - shard_before.dedup_bytes_avoided,
             ..EngineStats::default()
         };
         Ok((c, stats))
@@ -359,6 +366,8 @@ impl Coordinator {
             engine_total.operand_copies_avoided += es.operand_copies_avoided;
             engine_total.shards_used += es.shards_used;
             engine_total.shard_stitch_bytes += es.shard_stitch_bytes;
+            engine_total.shard_payload_bytes += es.shard_payload_bytes;
+            engine_total.shard_dedup_bytes_avoided += es.shard_dedup_bytes_avoided;
             for ep in &es.shard_endpoints {
                 match engine_total
                     .shard_endpoints

@@ -31,7 +31,10 @@ pub struct JobResult {
     pub batch: usize,
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics. Surfaced through [`std::fmt::Display`]
+/// so serving front-ends (the `sim_serve` example today, `diamond
+/// serve` when it lands) report the batch-sharing win instead of
+/// silently computing it.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeStats {
     pub jobs: u64,
@@ -40,6 +43,17 @@ pub struct ServeStats {
     pub shared_operand_hits: u64,
     pub total_cycles: u64,
     pub total_energy_j: f64,
+}
+
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "served {} job(s) in {} batch(es), {} shared-operand hit(s); \
+             {} cycles, {:.3e} J",
+            self.jobs, self.batches, self.shared_operand_hits, self.total_cycles, self.total_energy_j
+        )
+    }
 }
 
 /// Cheap content fingerprint of a matrix (dimension, offsets, and a few
@@ -218,6 +232,30 @@ mod tests {
         // All four jobs share both operands with batch-mates (first one
         // registers, the rest hit).
         assert_eq!(server.stats.shared_operand_hits, 3);
+    }
+
+    #[test]
+    fn serve_stats_surface_batch_sharing_counts() {
+        // The full ServeStats surface — jobs, batches, sharing hits,
+        // totals — must be populated after a serve and rendered by the
+        // Display impl (the counters were previously computed but never
+        // surfaced anywhere).
+        let h = crate::ham::heisenberg::heisenberg(5, 1.0).matrix;
+        let mut server = BatchServer::oracle(2);
+        let jobs: Vec<SpmspmRequest> =
+            (0..4).map(|i| job(i, h.clone(), h.clone())).collect();
+        server.serve(jobs).unwrap();
+        assert_eq!(server.stats.jobs, 4);
+        // max_batch 2 over 4 same-key jobs → exactly 2 batches.
+        assert_eq!(server.stats.batches, 2);
+        // One registration per batch, the batch-mate hits: 2 hits.
+        assert_eq!(server.stats.shared_operand_hits, 2);
+        assert!(server.stats.total_cycles > 0);
+        assert!(server.stats.total_energy_j > 0.0);
+        let line = server.stats.to_string();
+        assert!(line.contains("4 job(s)"), "{line}");
+        assert!(line.contains("2 batch(es)"), "{line}");
+        assert!(line.contains("2 shared-operand hit(s)"), "{line}");
     }
 
     #[test]

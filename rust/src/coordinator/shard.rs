@@ -12,12 +12,17 @@
 //!   [`shard_plan`] (cached per offset structure, so a Taylor chain
 //!   shards once and replays), executes the ranges on the configured
 //!   [`ShardBackend`], and stitches with [`PackedDiagMatrix::stitch`].
-//! * the **wire format** — a serde-free little-endian encoding of one
-//!   `(operands, tile, shard range)` job and its `(re, im, mults)`
-//!   response, opened by the version handshake of
-//!   [`crate::coordinator::transport`]. The identical framing rides
-//!   child-process stdin/stdout here and TCP connections in the socket
-//!   transport (`diamond shard-serve` + [`ShardBackend::Tcp`]).
+//! * the **wire format** — a serde-free little-endian encoding with
+//!   **content-addressed operand planes**: operands travel as
+//!   fingerprint-keyed `PutPlane`/`HavePlane` frames into a bounded
+//!   per-connection [`PlaneStore`], jobs reference planes by
+//!   fingerprint, and a `ChainJob` runs a whole Taylor chain
+//!   server-side from one resident `H`. All of it is opened by the
+//!   version handshake of [`crate::coordinator::transport`]. The
+//!   identical framing rides child-process stdin/stdout here and TCP
+//!   connections in the socket transport (`diamond shard-serve` +
+//!   [`ShardBackend::Tcp`]); both sides route frames through one
+//!   [`JobRouter`].
 //! * [`ProcessShardExecutor`] + [`run_worker`] — the process backend: the
 //!   parent spawns one `diamond shard-worker` per non-empty range, feeds
 //!   each its job, and collects the output slices with a hard timeout,
@@ -36,26 +41,54 @@
 //! (gated by the repo property tests and the CI `shard-smoke` job).
 
 use crate::format::diag::ZERO_TOL;
-use crate::format::PackedDiagMatrix;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
 use crate::linalg::engine::{
     execute_shard_ranges, fill_task_range, shard_plan, tile_plan, EngineConfig, KernelEngine,
-    KernelStats, PlannedProduct, ShardPlan,
+    KernelStats, PlannedProduct, ShardPlan, TilePlan,
 };
-use crate::linalg::{plan_diag_mul, OpStats};
+use crate::linalg::{plan_diag_mul, MulPlan, OpStats};
+use crate::taylor::TaylorStep;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// Frame marker of a shard job (parent → worker stdin).
+/// Frame marker of a shard job (references operand planes by
+/// fingerprint since wire v3).
 pub const JOB_MAGIC: [u8; 4] = *b"DSJ1";
 /// Frame marker of a shard response (worker stdout → parent).
 pub const RESP_MAGIC: [u8; 4] = *b"DSR1";
+/// Frame marker of a `PutPlane`: ship one operand plane's bytes into
+/// the peer's [`PlaneStore`] under its content fingerprint.
+pub const PLANE_PUT_MAGIC: [u8; 4] = *b"DSP1";
+/// Frame marker of a `HavePlane`: assert (without shipping bytes) that
+/// the peer's [`PlaneStore`] already holds a fingerprint.
+pub const PLANE_HAVE_MAGIC: [u8; 4] = *b"DSH1";
+/// Frame marker of a `ChainJob`: run a whole Taylor chain server-side
+/// from one resident `H` plane.
+pub const CHAIN_MAGIC: [u8; 4] = *b"DSC1";
+/// Frame marker of a `ChainJob` response.
+pub const CHAIN_RESP_MAGIC: [u8; 4] = *b"DCR1";
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
+
+/// Operand planes a [`PlaneStore`] keeps before it resets. Sized so a
+/// Taylor chain's working set — the stationary `A` plus the slowly
+/// saturating term structure — never evicts mid-chain at the paper's
+/// 3–8 iteration depths.
+pub const DEFAULT_PLANE_CACHE_CAP: usize = 16;
+
+/// Per-connection plan memo entries kept before the cache resets (same
+/// bound as the coordinator-side shard-plan memo).
+pub const DEFAULT_PLAN_CACHE_CAP: usize = 32;
+
+/// Upper bound on a `ChainJob`'s iteration count — far above
+/// [`crate::taylor::taylor_iters`]'s own 64-iteration ceiling, low
+/// enough that a corrupt frame cannot wedge a daemon in a giant loop.
+pub const MAX_CHAIN_ITERS: u64 = 1024;
 
 /// Environment variable overriding the worker executable the process
 /// backend spawns (defaults to the current executable — the `diamond`
@@ -96,6 +129,47 @@ fn put_matrix(buf: &mut Vec<u8>, m: &PackedDiagMatrix) {
     for &v in m.im_plane() {
         buf.extend_from_slice(&v.to_bits().to_le_bytes());
     }
+}
+
+/// Encoded size of [`put_matrix`]'s output for a plane with `nnzd`
+/// stored diagonals and `elems` stored elements — the unit both
+/// `payload_bytes` and `dedup_bytes_avoided` count in, so "bytes
+/// avoided" means exactly "matrix bytes a v2 resend would have shipped".
+pub fn matrix_wire_bytes(nnzd: u64, elems: u64) -> u64 {
+    8 + 8 * nnzd + 16 * elems
+}
+
+/// [`matrix_wire_bytes`] of a concrete plane.
+pub fn plane_wire_bytes(m: &PackedDiagMatrix) -> u64 {
+    matrix_wire_bytes(m.nnzd() as u64, m.stored_elements() as u64)
+}
+
+/// Content fingerprint of an operand plane: FNV-1a over the dimension,
+/// diagonal count, offsets and **every** value's `f64::to_bits` (both
+/// planes). Two planes share a fingerprint only if they are bitwise
+/// identical operands, so a fingerprint-addressed [`PlaneStore`] hit
+/// replays the exact bytes a resend would have shipped — the dedup can
+/// never change a result, only the traffic. (Collisions are the usual
+/// 64-bit-hash caveat; a server recomputes the fingerprint of every
+/// `PutPlane` it accepts, so a corrupt frame cannot poison the store.)
+pub fn plane_fingerprint(m: &PackedDiagMatrix) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    mix(m.dim() as u64);
+    mix(m.nnzd() as u64);
+    for &d in m.offsets() {
+        mix(d as u64);
+    }
+    for &v in m.re_plane() {
+        mix(v.to_bits());
+    }
+    for &v in m.im_plane() {
+        mix(v.to_bits());
+    }
+    h
 }
 
 /// Bounds-checked little-endian reader over a received frame.
@@ -197,13 +271,14 @@ fn take_matrix(c: &mut Cursor<'_>, n: usize) -> Result<PackedDiagMatrix> {
     Ok(PackedDiagMatrix::from_planes(n, offsets, re, im))
 }
 
-/// One decoded shard job: operands, the parent's resolved tile length,
-/// and the half-open tile-task range the worker owns.
+/// One resolved shard job: operand planes (shared out of a
+/// [`PlaneStore`]), the parent's resolved tile length, and the
+/// half-open tile-task range the worker owns.
 pub struct ShardJob {
     /// Left operand.
-    pub a: PackedDiagMatrix,
+    pub a: Arc<PackedDiagMatrix>,
     /// Right operand.
-    pub b: PackedDiagMatrix,
+    pub b: Arc<PackedDiagMatrix>,
     /// Tile length the parent cut the plan with (the worker re-tiles
     /// with the same value, reproducing the identical task list).
     pub tile: usize,
@@ -213,52 +288,100 @@ pub struct ShardJob {
     pub task_hi: usize,
 }
 
-/// Serialize the shared operand payload `matrix(A) | matrix(B)` —
-/// identical for every shard of one multiplication, so the process and
-/// TCP executors encode it once and share it across the worker feeds.
-pub(crate) fn encode_operands(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Vec<u8> {
-    assert_eq!(a.dim(), b.dim(), "dimension mismatch");
-    let mut buf = Vec::with_capacity(
-        16 + 16 * (a.stored_elements() + b.stored_elements())
-            + 8 * (a.nnzd() + b.nnzd()),
-    );
-    put_matrix(&mut buf, a);
-    put_matrix(&mut buf, b);
+/// One decoded (but unresolved) v3 job frame: the range plus the
+/// operand-plane fingerprints a [`JobRouter`] resolves against its
+/// [`PlaneStore`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobRefs {
+    /// Matrix dimension (must match both referenced planes).
+    pub n: usize,
+    /// Tile length the parent cut the plan with.
+    pub tile: usize,
+    /// First tile task of the range.
+    pub task_lo: usize,
+    /// One past the last tile task of the range.
+    pub task_hi: usize,
+    /// Fingerprint of the left operand plane.
+    pub fp_a: u64,
+    /// Fingerprint of the right operand plane.
+    pub fp_b: u64,
+}
+
+/// Serialize one `PutPlane` frame: `PLANE_PUT_MAGIC | fingerprint | n |
+/// matrix` with `matrix = nnzd | offsets (i64 × nnzd) | re (f64-bits ×
+/// E) | im (f64-bits × E)` where `E = Σ (n − |d|)`.
+pub fn encode_plane_put(fp: u64, m: &PackedDiagMatrix) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(20 + plane_wire_bytes(m) as usize);
+    buf.extend_from_slice(&PLANE_PUT_MAGIC);
+    put_u64(&mut buf, fp);
+    put_usize(&mut buf, m.dim());
+    put_matrix(&mut buf, m);
     buf
 }
 
-/// Serialize the per-shard job header (`JOB_MAGIC | n | tile | task_lo
-/// | task_hi`) — the only part of a job that differs between shards.
-pub(crate) fn encode_job_header(n: usize, tile: usize, task_lo: usize, task_hi: usize) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(36);
+/// Decode a `PutPlane` frame into its claimed fingerprint and plane.
+/// The caller (the [`JobRouter`]) recomputes the fingerprint before
+/// trusting it.
+pub fn decode_plane_put(bytes: &[u8]) -> Result<(u64, PackedDiagMatrix)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &PLANE_PUT_MAGIC[..] {
+        bail!("not a plane-put frame (bad magic)");
+    }
+    let fp = c.u64()?;
+    let n = c.usize()?;
+    let m = take_matrix(&mut c, n).context("decoding plane")?;
+    c.done()?;
+    Ok((fp, m))
+}
+
+/// Serialize one `HavePlane` frame: `PLANE_HAVE_MAGIC | fingerprint |
+/// n` — the sender believes the peer already holds the plane, shipping
+/// 20 bytes instead of the full matrix.
+pub fn encode_plane_have(fp: u64, n: usize) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(20);
+    buf.extend_from_slice(&PLANE_HAVE_MAGIC);
+    put_u64(&mut buf, fp);
+    put_usize(&mut buf, n);
+    buf
+}
+
+/// Decode a `HavePlane` frame into `(fingerprint, n)`.
+pub fn decode_plane_have(bytes: &[u8]) -> Result<(u64, usize)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &PLANE_HAVE_MAGIC[..] {
+        bail!("not a plane-have frame (bad magic)");
+    }
+    let fp = c.u64()?;
+    let n = c.usize()?;
+    c.done()?;
+    Ok((fp, n))
+}
+
+/// Serialize one shard job. Layout (all integers little-endian u64):
+/// `JOB_MAGIC | n | tile | task_lo | task_hi | fp_a | fp_b` — 52 bytes,
+/// independent of operand size. The operand bytes travel separately as
+/// `PutPlane` frames, at most once per fingerprint per connection.
+pub fn encode_job(
+    n: usize,
+    tile: usize,
+    task_lo: usize,
+    task_hi: usize,
+    fp_a: u64,
+    fp_b: u64,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(52);
     buf.extend_from_slice(&JOB_MAGIC);
     put_usize(&mut buf, n);
     put_usize(&mut buf, tile);
     put_usize(&mut buf, task_lo);
     put_usize(&mut buf, task_hi);
-    buf
-}
-
-/// Serialize one complete shard job. Layout (all integers little-endian
-/// u64 unless noted): `JOB_MAGIC | n | tile | task_lo | task_hi |
-/// matrix(A) | matrix(B)` with `matrix = nnzd | offsets (i64 × nnzd) |
-/// re (f64-bits × E) | im (f64-bits × E)` where `E = Σ (n − |d|)`.
-/// (Convenience single-buffer form; the executor streams header and
-/// shared operand payload separately.)
-pub fn encode_job(
-    a: &PackedDiagMatrix,
-    b: &PackedDiagMatrix,
-    tile: usize,
-    task_lo: usize,
-    task_hi: usize,
-) -> Vec<u8> {
-    let mut buf = encode_job_header(a.dim(), tile, task_lo, task_hi);
-    buf.extend_from_slice(&encode_operands(a, b));
+    put_u64(&mut buf, fp_a);
+    put_u64(&mut buf, fp_b);
     buf
 }
 
 /// Decode one shard job (the inverse of [`encode_job`]).
-pub fn decode_job(bytes: &[u8]) -> Result<ShardJob> {
+pub fn decode_job(bytes: &[u8]) -> Result<JobRefs> {
     let mut c = Cursor::new(bytes);
     if c.take(4)? != &JOB_MAGIC[..] {
         bail!("not a shard job (bad magic)");
@@ -267,19 +390,151 @@ pub fn decode_job(bytes: &[u8]) -> Result<ShardJob> {
     let tile = c.usize()?;
     let task_lo = c.usize()?;
     let task_hi = c.usize()?;
+    let fp_a = c.u64()?;
+    let fp_b = c.u64()?;
     if task_lo > task_hi {
         bail!("inverted shard range [{task_lo}, {task_hi})");
     }
-    let a = take_matrix(&mut c, n).context("decoding operand A")?;
-    let b = take_matrix(&mut c, n).context("decoding operand B")?;
     c.done()?;
-    Ok(ShardJob {
-        a,
-        b,
+    Ok(JobRefs {
+        n,
         tile,
         task_lo,
         task_hi,
+        fp_a,
+        fp_b,
     })
+}
+
+/// One decoded `ChainJob`: run `iters` Taylor iterations of
+/// `exp(−iHt)` server-side from the resident `H` plane `fp_h`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChainRefs {
+    /// Matrix dimension (must match the referenced plane).
+    pub n: usize,
+    /// Evolution time.
+    pub t: f64,
+    /// Taylor truncation depth (1 ..= [`MAX_CHAIN_ITERS`]).
+    pub iters: usize,
+    /// Fingerprint of the resident `H` plane.
+    pub fp_h: u64,
+}
+
+/// Serialize one `ChainJob`: `CHAIN_MAGIC | n | t (f64-bits) | iters |
+/// fp_h` — 36 bytes; `H` itself travels once as a `PutPlane`.
+pub fn encode_chain_job(n: usize, t: f64, iters: usize, fp_h: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(36);
+    buf.extend_from_slice(&CHAIN_MAGIC);
+    put_usize(&mut buf, n);
+    put_u64(&mut buf, t.to_bits());
+    put_usize(&mut buf, iters);
+    put_u64(&mut buf, fp_h);
+    buf
+}
+
+/// Decode one `ChainJob` (the inverse of [`encode_chain_job`]).
+pub fn decode_chain_job(bytes: &[u8]) -> Result<ChainRefs> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_MAGIC[..] {
+        bail!("not a chain job (bad magic)");
+    }
+    let n = c.usize()?;
+    let t = c.f64()?;
+    let iters = c.u64()?;
+    let fp_h = c.u64()?;
+    if iters == 0 || iters > MAX_CHAIN_ITERS {
+        bail!("chain job claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})");
+    }
+    c.done()?;
+    Ok(ChainRefs {
+        n,
+        t,
+        iters: iters as usize,
+        fp_h,
+    })
+}
+
+/// Serialize a successful `ChainJob` response: `CHAIN_RESP_MAGIC | 0u8
+/// | n | matrix(term) | matrix(sum) | nsteps | steps` where each step
+/// is `k | term_nnzd | sum_nnzd | term_elements | sum_storage_saving
+/// (f64-bits) | mults` (six u64 each).
+pub fn encode_chain_ok(
+    term: &PackedDiagMatrix,
+    sum: &PackedDiagMatrix,
+    steps: &[TaylorStep],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(
+        21 + (plane_wire_bytes(term) + plane_wire_bytes(sum)) as usize + 48 * steps.len(),
+    );
+    buf.extend_from_slice(&CHAIN_RESP_MAGIC);
+    buf.push(STATUS_OK);
+    put_usize(&mut buf, term.dim());
+    put_matrix(&mut buf, term);
+    put_matrix(&mut buf, sum);
+    put_usize(&mut buf, steps.len());
+    for s in steps {
+        put_usize(&mut buf, s.k);
+        put_usize(&mut buf, s.term_nnzd);
+        put_usize(&mut buf, s.sum_nnzd);
+        put_usize(&mut buf, s.term_elements);
+        put_u64(&mut buf, s.sum_storage_saving.to_bits());
+        put_usize(&mut buf, s.mults);
+    }
+    buf
+}
+
+/// Serialize a `ChainJob` failure: `CHAIN_RESP_MAGIC | 1u8 | len | utf8`.
+pub fn encode_chain_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&CHAIN_RESP_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a `ChainJob` response into `(term, sum, steps)`; a
+/// server-reported failure comes back as `Err`.
+pub fn decode_chain_resp(
+    bytes: &[u8],
+) -> Result<(PackedDiagMatrix, PackedDiagMatrix, Vec<TaylorStep>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_RESP_MAGIC[..] {
+        bail!(
+            "not a chain response (bad magic; got {} bytes)",
+            bytes.len()
+        );
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let n = c.usize()?;
+            let term = take_matrix(&mut c, n).context("decoding chain term")?;
+            let sum = take_matrix(&mut c, n).context("decoding chain sum")?;
+            let nsteps = c.u64()?;
+            if nsteps > MAX_CHAIN_ITERS {
+                bail!("chain response claims {nsteps} steps (allowed ≤ {MAX_CHAIN_ITERS})");
+            }
+            let mut steps = Vec::with_capacity(nsteps as usize);
+            for _ in 0..nsteps {
+                steps.push(TaylorStep {
+                    k: c.usize()?,
+                    term_nnzd: c.usize()?,
+                    sum_nnzd: c.usize()?,
+                    term_elements: c.usize()?,
+                    sum_storage_saving: c.f64()?,
+                    mults: c.usize()?,
+                });
+            }
+            c.done()?;
+            Ok((term, sum, steps))
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("chain worker reported: {msg}");
+        }
+        s => bail!("unknown chain response status {s}"),
+    }
 }
 
 /// Serialize a successful response: `RESP_MAGIC | 0u8 | mults | elems |
@@ -338,6 +593,316 @@ pub fn decode_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
     }
 }
 
+// --- the plane cache ------------------------------------------------------
+
+/// The server side of content addressing: a bounded map from plane
+/// fingerprint to resident [`PackedDiagMatrix`], one per connection
+/// (next to the connection's plan memo). **Eviction contract**: an
+/// insert that would exceed the cap clears the whole store first (the
+/// same wholesale reset the plan caches use — cheap, deterministic, and
+/// exactly mirrorable client-side by [`PlaneMirror`]); re-inserting a
+/// resident fingerprint replaces in place and never evicts.
+pub struct PlaneStore {
+    cap: usize,
+    map: HashMap<u64, Arc<PackedDiagMatrix>>,
+}
+
+impl PlaneStore {
+    /// Store keeping at most `cap` planes (clamped to ≥ 2 so one job's
+    /// two operands always fit together).
+    pub fn new(cap: usize) -> Self {
+        PlaneStore {
+            cap: cap.max(2),
+            map: HashMap::new(),
+        }
+    }
+
+    /// Is `fp` resident?
+    pub fn contains(&self, fp: u64) -> bool {
+        self.map.contains_key(&fp)
+    }
+
+    /// The resident plane under `fp`, shared.
+    pub fn get(&self, fp: u64) -> Option<Arc<PackedDiagMatrix>> {
+        self.map.get(&fp).cloned()
+    }
+
+    /// Insert under the eviction contract above.
+    pub fn insert(&mut self, fp: u64, m: Arc<PackedDiagMatrix>) {
+        if !self.map.contains_key(&fp) && self.map.len() >= self.cap {
+            self.map.clear();
+        }
+        self.map.insert(fp, m);
+    }
+
+    /// Resident plane count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// The client side of content addressing: which fingerprints this
+/// client believes are resident in the peer's [`PlaneStore`],
+/// replaying the store's eviction contract move for move so Put/Have
+/// decisions stay in lockstep. A mis-predicted `Have` (caps differ, or
+/// the server restarted behind a proxy) is recoverable: the server
+/// answers the job with an `unknown operand plane` error and the
+/// executor resends the full planes once.
+pub struct PlaneMirror {
+    cap: usize,
+    set: HashSet<u64>,
+}
+
+impl PlaneMirror {
+    /// Mirror of a peer store with the same `cap` (clamped like
+    /// [`PlaneStore::new`]).
+    pub fn new(cap: usize) -> Self {
+        PlaneMirror {
+            cap: cap.max(2),
+            set: HashSet::new(),
+        }
+    }
+
+    /// Record that `fp` is about to be referenced on the wire. Returns
+    /// `true` when the peer already holds it (send `HavePlane`),
+    /// `false` when its bytes must ship (send `PutPlane`) — and updates
+    /// the mirror exactly as the peer's store will.
+    pub fn note(&mut self, fp: u64) -> bool {
+        if self.set.contains(&fp) {
+            return true;
+        }
+        if self.set.len() >= self.cap {
+            self.set.clear();
+        }
+        self.set.insert(fp);
+        false
+    }
+
+    /// Reset to exactly `fps` — after a cache-miss recovery resend, the
+    /// only planes known resident are the ones just re-Put (a safe
+    /// subset of whatever the server actually holds).
+    pub fn reset_to(&mut self, fps: &[u64]) {
+        self.set.clear();
+        self.set.extend(fps.iter().copied());
+    }
+
+    /// Forget everything (the connection was torn down, and the peer's
+    /// per-connection store died with it).
+    pub fn clear(&mut self) {
+        self.set.clear();
+    }
+}
+
+// --- the frame router -----------------------------------------------------
+
+/// Key of a served connection's plan memo: a `(plan, tiling)` pair is a
+/// pure function of the operand offset sets, the dimension and the
+/// parent's resolved tile length.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct PlanKey {
+    n: usize,
+    tile: usize,
+    a_offsets: Vec<i64>,
+    b_offsets: Vec<i64>,
+}
+
+type PlanCache = HashMap<PlanKey, Arc<(MulPlan, TilePlan)>>;
+
+/// Execute one resolved job with the connection's plan memo: a Taylor
+/// chain references the same operand *structure* every iteration, so
+/// once its offsets stabilize the plan → tile derivation is served from
+/// the cache instead of recomputed (the server-side mirror of
+/// [`KernelEngine`]'s plan cache).
+fn execute_job_cached(
+    job: &ShardJob,
+    cache: &mut PlanCache,
+    cap: usize,
+    hits: &mut u64,
+) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+    let key = PlanKey {
+        n: job.a.dim(),
+        tile: job.tile,
+        a_offsets: job.a.offsets().to_vec(),
+        b_offsets: job.b.offsets().to_vec(),
+    };
+    let planned = match cache.get(&key) {
+        Some(hit) => {
+            *hits += 1;
+            Arc::clone(hit)
+        }
+        None => {
+            let plan = plan_diag_mul(&job.a, &job.b);
+            let tiles = tile_plan(&plan, job.tile);
+            if cache.len() >= cap.max(1) {
+                cache.clear();
+            }
+            let entry = Arc::new((plan, tiles));
+            cache.insert(key, Arc::clone(&entry));
+            entry
+        }
+    };
+    execute_job_planned(&planned.1, job)
+}
+
+/// What [`JobRouter::handle`] decided about one inbound frame.
+pub enum Routed {
+    /// A plane frame was absorbed; no response is due.
+    Silent,
+    /// Send this response frame back.
+    Reply(Vec<u8>),
+    /// Send this (error) response frame back, and surface the message
+    /// to the caller — the process worker exits non-zero with it, the
+    /// TCP server logs it and keeps the connection.
+    Fail(Vec<u8>, String),
+}
+
+/// One connection's server-side state machine, shared verbatim by the
+/// TCP daemon (`handle_conn`) and the process worker ([`run_worker`]) so
+/// the two remote backends cannot drift: a [`PlaneStore`] for
+/// content-addressed operands, a plan memo for stabilized structures,
+/// and a single-engine [`ShardCoordinator`] that executes server-side
+/// `ChainJob`s (its own plan caches staying warm across chains).
+///
+/// Plane frames are absorbed silently; a problem with one (bad
+/// fingerprint, unknown `HavePlane`) is parked and reported on the
+/// *next* job/chain frame, so the strict request→response rhythm of the
+/// wire is preserved.
+pub struct JobRouter {
+    planes: PlaneStore,
+    plans: PlanCache,
+    plan_cap: usize,
+    chain_engine: ShardCoordinator,
+    pending_err: Option<String>,
+    /// Jobs answered (ok or err).
+    pub jobs: u64,
+    /// Chain jobs answered (ok or err).
+    pub chains: u64,
+    /// Plan-memo hits across the connection.
+    pub plan_hits: u64,
+}
+
+impl JobRouter {
+    /// Router with the given plane-store and plan-memo bounds.
+    pub fn new(plane_cap: usize, plan_cap: usize) -> Self {
+        JobRouter {
+            planes: PlaneStore::new(plane_cap),
+            plans: HashMap::new(),
+            plan_cap: plan_cap.max(1),
+            chain_engine: ShardCoordinator::single(),
+            pending_err: None,
+            jobs: 0,
+            chains: 0,
+            plan_hits: 0,
+        }
+    }
+
+    /// Route one inbound frame by its 4-byte magic.
+    pub fn handle(&mut self, frame: &[u8]) -> Routed {
+        match frame.get(..4) {
+            Some(m) if m == PLANE_PUT_MAGIC => {
+                match decode_plane_put(frame) {
+                    Ok((fp, plane)) => {
+                        let actual = plane_fingerprint(&plane);
+                        if actual == fp {
+                            self.planes.insert(fp, Arc::new(plane));
+                        } else {
+                            self.pending_err = Some(format!(
+                                "plane fingerprint mismatch: frame claims {fp:#018x}, \
+                                 content hashes to {actual:#018x}"
+                            ));
+                        }
+                    }
+                    Err(e) => self.pending_err = Some(format!("{e:#}")),
+                }
+                Routed::Silent
+            }
+            Some(m) if m == PLANE_HAVE_MAGIC => {
+                match decode_plane_have(frame) {
+                    Ok((fp, _n)) => {
+                        if !self.planes.contains(fp) {
+                            self.pending_err = Some(format!(
+                                "unknown operand plane {fp:#018x} (evicted or never \
+                                 shipped) — resend required"
+                            ));
+                        }
+                    }
+                    Err(e) => self.pending_err = Some(format!("{e:#}")),
+                }
+                Routed::Silent
+            }
+            Some(m) if m == JOB_MAGIC => {
+                self.jobs += 1;
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_job(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok((re, im, mults)) => Routed::Reply(encode_ok(&re, &im, mults)),
+                    Err(msg) => Routed::Fail(encode_err(&msg), msg),
+                }
+            }
+            Some(m) if m == CHAIN_MAGIC => {
+                self.chains += 1;
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_chain(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_chain_err(&msg), msg),
+                }
+            }
+            _ => {
+                let msg = format!(
+                    "unknown shard frame ({} bytes; magic {:02x?})",
+                    frame.len(),
+                    frame.get(..4).unwrap_or(&[])
+                );
+                Routed::Fail(encode_err(&msg), msg)
+            }
+        }
+    }
+
+    fn resolve(&self, fp: u64, n: usize, role: &str) -> Result<Arc<PackedDiagMatrix>> {
+        let plane = self
+            .planes
+            .get(fp)
+            .ok_or_else(|| anyhow!("job references unknown operand plane {fp:#018x} ({role}) — resend required"))?;
+        if plane.dim() != n {
+            bail!(
+                "job dimension {n} does not match resident plane {fp:#018x} (dimension {})",
+                plane.dim()
+            );
+        }
+        Ok(plane)
+    }
+
+    fn run_job(&mut self, frame: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+        let refs = decode_job(frame)?;
+        let job = ShardJob {
+            a: self.resolve(refs.fp_a, refs.n, "A")?,
+            b: self.resolve(refs.fp_b, refs.n, "B")?,
+            tile: refs.tile,
+            task_lo: refs.task_lo,
+            task_hi: refs.task_hi,
+        };
+        execute_job_cached(&job, &mut self.plans, self.plan_cap, &mut self.plan_hits)
+    }
+
+    fn run_chain(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let refs = decode_chain_job(frame)?;
+        let hp = self.resolve(refs.fp_h, refs.n, "H")?;
+        let out = crate::taylor::ChainDriver::from_packed(&hp, refs.t)
+            .run(refs.iters, &mut self.chain_engine)?;
+        Ok(encode_chain_ok(&out.term, &out.op.freeze(), &out.steps))
+    }
+}
+
 // --- the worker side ------------------------------------------------------
 
 /// Execute a decoded job's task range against an already-derived
@@ -367,54 +932,63 @@ pub(crate) fn execute_job_planned(
     Ok((re, im, mults as u64))
 }
 
-/// Execute one decoded job: replay the parent's plan → tile decisions
-/// (pure in the operands and tile length) and fill the owned range.
-fn execute_job(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
-    let job = decode_job(bytes)?;
-    let plan = plan_diag_mul(&job.a, &job.b);
-    let tiles = tile_plan(&plan, job.tile);
-    execute_job_planned(&tiles, &job)
-}
-
-/// The `diamond shard-worker` body: read one handshake-prefixed,
-/// serialized job from `input` to EOF, verify the wire version
+/// The `diamond shard-worker` body: stamp `hello` onto the output,
+/// verify the parent's hello
 /// ([`transport::check_hello`](crate::coordinator::transport::check_hello)
 /// — a version-skewed parent is rejected with a descriptive error
-/// instead of mis-parsing the job body), execute the job's tile range,
-/// and write `hello | response` to `output` (the parent verifies the
-/// response-direction version the same way). On failure an error
+/// instead of mis-parsing a frame body), then route framed messages
+/// (`PutPlane`/`HavePlane`/job/chain) through a [`JobRouter`] until
+/// EOF, writing each response as a frame. On failure a framed error
 /// response is still written (so the parent gets a structured message
-/// even before it inspects stderr) and the error is returned for the
-/// CLI to exit non-zero with.
+/// even before it inspects stderr) and the first error is returned for
+/// the CLI to exit non-zero with.
 pub fn run_worker(input: &mut impl Read, output: &mut impl Write) -> Result<()> {
-    use crate::coordinator::transport::{check_hello, encode_hello, HELLO_LEN};
+    use crate::coordinator::transport::{
+        check_hello, encode_hello, read_frame, write_frame, HELLO_LEN,
+    };
     // The worker's own hello stamps the response stream first, so the
     // parent verifies the version of whatever it is about to decode —
     // both directions are guarded, exactly like the TCP transport.
     output
         .write_all(&encode_hello())
         .context("writing shard handshake")?;
-    let mut buf = Vec::new();
-    input
-        .read_to_end(&mut buf)
-        .context("reading shard job from stdin")?;
-    let job_body = check_hello(buf.get(..HELLO_LEN.min(buf.len())).unwrap_or(&[]))
-        .context("shard transport handshake")
-        .map(|()| &buf[HELLO_LEN..]);
-    match job_body.and_then(execute_job) {
-        Ok((re, im, mults)) => {
-            output
-                .write_all(&encode_ok(&re, &im, mults))
-                .context("writing shard response")?;
-            output.flush().context("flushing shard response")?;
-            Ok(())
+    output.flush().context("flushing shard handshake")?;
+    let mut hello = [0u8; HELLO_LEN];
+    let handshake = input
+        .read_exact(&mut hello)
+        .context("reading shard handshake from stdin")
+        .and_then(|()| check_hello(&hello).context("shard transport handshake"));
+    if let Err(e) = handshake {
+        let _ = write_frame(output, &[&encode_err(&format!("{e:#}"))]);
+        return Err(e);
+    }
+    let mut router = JobRouter::new(DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP);
+    let mut first_err: Option<anyhow::Error> = None;
+    loop {
+        let frame = match read_frame(input) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                let _ = write_frame(output, &[&encode_err(&format!("{e:#}"))]);
+                return Err(e);
+            }
+        };
+        match router.handle(&frame) {
+            Routed::Silent => {}
+            Routed::Reply(resp) => {
+                write_frame(output, &[&resp]).context("writing shard response")?;
+            }
+            Routed::Fail(resp, msg) => {
+                write_frame(output, &[&resp]).context("writing shard response")?;
+                if first_err.is_none() {
+                    first_err = Some(anyhow!(msg));
+                }
+            }
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let _ = output.write_all(&encode_err(&msg));
-            let _ = output.flush();
-            Err(e)
-        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 
@@ -473,6 +1047,16 @@ pub struct ProcessShardExecutor {
     /// Per-worker response deadline (default
     /// [`DEFAULT_WORKER_TIMEOUT`]).
     pub timeout: Duration,
+    /// Cumulative operand-plane bytes actually shipped over worker
+    /// pipes (`PutPlane` matrix payloads).
+    pub payload_bytes: u64,
+    /// Cumulative operand-plane bytes the fingerprint dedup did not
+    /// ship (each `HavePlane` counts the matrix bytes a resend would
+    /// have cost). Workers are one-shot processes, so only the
+    /// within-job dedup (`A` and `B` sharing a fingerprint) applies
+    /// here — the persistent-connection TCP executor is where the
+    /// cross-iteration dedup pays off.
+    pub dedup_bytes_avoided: u64,
 }
 
 /// One in-flight worker: its child handle plus the channels the reader
@@ -491,6 +1075,8 @@ impl ProcessShardExecutor {
             worker_exe,
             worker_args: vec!["shard-worker".to_string()],
             timeout: DEFAULT_WORKER_TIMEOUT,
+            payload_bytes: 0,
+            dedup_bytes_avoided: 0,
         }
     }
 
@@ -519,7 +1105,7 @@ impl ProcessShardExecutor {
     /// concurrently; the first failure kills the stragglers and
     /// surfaces the worker's stderr in the error.
     pub fn execute(
-        &self,
+        &mut self,
         a: &PackedDiagMatrix,
         b: &PackedDiagMatrix,
         tile: usize,
@@ -528,16 +1114,33 @@ impl ProcessShardExecutor {
         let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
             (0..sp.ranges.len()).map(|_| None).collect();
         let mut running: Vec<Running> = Vec::new();
-        // Operands are identical for every shard: serialize once, share
-        // the buffer across the worker feeds.
-        let operands = Arc::new(encode_operands(a, b));
+        // Operands are identical for every shard: encode the plane
+        // frames once, share the buffers across the worker feeds. A
+        // worker is a one-shot process, so each non-empty shard ships
+        // `A` once — and `B` travels as a 20-byte `HavePlane` when it
+        // is the same plane as `A` (a chain's `term·term` degenerate).
+        let fa = plane_fingerprint(a);
+        let fb = plane_fingerprint(b);
+        let put_a = Arc::new(encode_plane_put(fa, a));
+        let second: Arc<Vec<u8>> = if fb == fa {
+            Arc::new(encode_plane_have(fa, a.dim()))
+        } else {
+            Arc::new(encode_plane_put(fb, b))
+        };
 
         for (i, r) in sp.ranges.iter().enumerate() {
             if r.task_lo == r.task_hi {
                 slots[i] = Some((Vec::new(), Vec::new()));
                 continue;
             }
-            match self.spawn_worker(&operands, a.dim(), tile, r.task_lo, r.task_hi, i) {
+            self.payload_bytes += plane_wire_bytes(a);
+            if fb == fa {
+                self.dedup_bytes_avoided += plane_wire_bytes(b);
+            } else {
+                self.payload_bytes += plane_wire_bytes(b);
+            }
+            let job = encode_job(a.dim(), tile, r.task_lo, r.task_hi, fa, fb);
+            match self.spawn_worker(&put_a, &second, job, i) {
                 Ok(run) => running.push(run),
                 Err(e) => {
                     Self::kill_all(&mut running);
@@ -587,11 +1190,9 @@ impl ProcessShardExecutor {
 
     fn spawn_worker(
         &self,
-        operands: &Arc<Vec<u8>>,
-        n: usize,
-        tile: usize,
-        task_lo: usize,
-        task_hi: usize,
+        put_a: &Arc<Vec<u8>>,
+        second: &Arc<Vec<u8>>,
+        job: Vec<u8>,
         shard: usize,
     ) -> Result<Running> {
         let mut child = Command::new(&self.worker_exe)
@@ -606,20 +1207,24 @@ impl ProcessShardExecutor {
                     self.worker_exe.display()
                 )
             })?;
-        let header = encode_job_header(n, tile, task_lo, task_hi);
-        let payload = Arc::clone(operands);
+        let put_a = Arc::clone(put_a);
+        let second = Arc::clone(second);
         let mut stdin = child.stdin.take().expect("piped stdin");
         // Feed on a thread: a worker that dies before draining its job
         // must not wedge the parent on a full pipe (the write fails
         // with EPIPE instead and the collect step reports the death).
         // The stream opens with the wire-version handshake, so a
-        // version-skewed worker rejects the job instead of mis-parsing.
+        // version-skewed worker rejects the frames instead of
+        // mis-parsing; then the same framed Put/Put-or-Have/job
+        // sequence the TCP client sends.
         std::thread::spawn(move || {
+            use crate::coordinator::transport::{encode_hello, write_frame};
             let _ = stdin
-                .write_all(&crate::coordinator::transport::encode_hello())
-                .and_then(|()| stdin.write_all(&header))
-                .and_then(|()| stdin.write_all(&payload));
-            // stdin drops here → EOF, the worker's read_to_end returns.
+                .write_all(&encode_hello())
+                .and_then(|()| write_frame(&mut stdin, &[&put_a]))
+                .and_then(|()| write_frame(&mut stdin, &[&second]))
+                .and_then(|()| write_frame(&mut stdin, &[&job]));
+            // stdin drops here → EOF, the worker's frame loop ends.
         });
         let mut stdout = child.stdout.take().expect("piped stdout");
         let (out_tx, out_rx) = mpsc::channel();
@@ -666,13 +1271,18 @@ impl ProcessShardExecutor {
             }
         };
         let status = Self::reap(run)?;
-        // Stdout is `hello | response`: verify the worker's advertised
-        // wire version before decoding a single response byte (the
-        // response-direction half of the version handshake).
-        use crate::coordinator::transport::{check_hello, HELLO_LEN};
+        // Stdout is `hello | frame(response)`: verify the worker's
+        // advertised wire version before decoding a single response
+        // byte (the response-direction half of the version handshake),
+        // then unwrap the one response frame.
+        use crate::coordinator::transport::{check_hello, read_frame, HELLO_LEN};
         let decoded = check_hello(out.get(..HELLO_LEN.min(out.len())).unwrap_or(&[]))
             .context("verifying worker handshake")
-            .and_then(|()| decode_resp(&out[HELLO_LEN..]));
+            .and_then(|()| {
+                read_frame(&mut &out[HELLO_LEN..])?
+                    .ok_or_else(|| anyhow!("worker closed without a response frame"))
+            })
+            .and_then(|frame| decode_resp(&frame));
         match decoded {
             Ok(resp) if status.success() => Ok(resp),
             Ok(_) => {
@@ -757,6 +1367,25 @@ pub struct ShardStats {
     /// Taylor-chain steady state: shard once per cached plan, replay
     /// across iterations).
     pub shard_plan_reuses: u64,
+    /// Operand-plane bytes actually shipped to remote workers
+    /// (`PutPlane` matrix payloads; zero on the in-process backend).
+    pub payload_bytes: u64,
+    /// Operand-plane bytes the content-addressed dedup did *not* ship:
+    /// each `HavePlane` counts the matrix bytes a v2-style resend would
+    /// have cost, so `payload_bytes + dedup_bytes_avoided` is the
+    /// resend-every-time traffic and their ratio is the dedup win.
+    pub dedup_bytes_avoided: u64,
+    /// Whole Taylor chains executed remotely as single `ChainJob`s.
+    pub remote_chain_jobs: u64,
+}
+
+/// Sum the payload/dedup counters across an endpoint-I/O slice — how
+/// the coordinator converts the TCP executor's cumulative per-endpoint
+/// counters into per-call [`ShardStats`] deltas.
+fn io_payload_totals(io: &[crate::coordinator::transport::EndpointIo]) -> (u64, u64) {
+    io.iter().fold((0, 0), |(p, d), e| {
+        (p + e.payload_bytes, d + e.dedup_bytes_avoided)
+    })
 }
 
 /// Key of the shard-plan memo: a shard plan is a pure function of the
@@ -907,20 +1536,28 @@ impl ShardCoordinator {
                 if self.executor.is_none() {
                     self.executor = Some(ProcessShardExecutor::from_env()?);
                 }
-                self.executor
-                    .as_ref()
-                    .expect("executor installed above")
-                    .execute(a, b, planned.tiles.tile, &sp)?
+                let ex = self.executor.as_mut().expect("executor installed above");
+                let (p0, d0) = (ex.payload_bytes, ex.dedup_bytes_avoided);
+                let slices = ex.execute(a, b, planned.tiles.tile, &sp)?;
+                let (dp, dd) = (ex.payload_bytes - p0, ex.dedup_bytes_avoided - d0);
+                self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(dp);
+                self.stats.dedup_bytes_avoided =
+                    self.stats.dedup_bytes_avoided.saturating_add(dd);
+                slices
             }
             ShardBackend::Tcp { endpoints } => {
                 if self.tcp.is_none() {
                     self.tcp =
                         Some(crate::coordinator::transport::TcpShardExecutor::new(endpoints)?);
                 }
-                self.tcp
-                    .as_mut()
-                    .expect("executor installed above")
-                    .execute(a, b, planned.tiles.tile, &sp)?
+                let tcp = self.tcp.as_mut().expect("executor installed above");
+                let (p0, d0) = io_payload_totals(tcp.io());
+                let slices = tcp.execute(a, b, planned.tiles.tile, &sp)?;
+                let (p1, d1) = io_payload_totals(tcp.io());
+                self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(p1 - p0);
+                self.stats.dedup_bytes_avoided =
+                    self.stats.dedup_bytes_avoided.saturating_add(d1 - d0);
+                slices
             }
         };
 
@@ -949,6 +1586,61 @@ impl ShardCoordinator {
             writes: planned.plan.writes,
         };
         Ok((c, stats))
+    }
+
+    /// Run a whole `exp(−iHt)` Taylor chain through this coordinator.
+    ///
+    /// On the TCP backend the chain ships as **one** `ChainJob` to the
+    /// first endpoint: `H` travels once as a content-addressed
+    /// `PutPlane` (a repeated chain on the same coordinator ships only
+    /// a 20-byte `HavePlane`), the daemon runs the identical
+    /// [`ChainDriver`](crate::taylor::ChainDriver) loop body
+    /// server-side, and the final term + accumulated sum + per-step
+    /// stats come back in a single response — bitwise identical to the
+    /// local chain by construction (the kernel counters in the result
+    /// stay zero, since the multiplies happened on the daemon's
+    /// engine). On every other backend this is exactly
+    /// [`expm_diag_sharded`](crate::taylor::expm_diag_sharded): the
+    /// chain runs locally, iteration by iteration, through
+    /// [`ShardCoordinator::multiply`].
+    pub fn run_chain(
+        &mut self,
+        h: &DiagMatrix,
+        t: f64,
+        iters: usize,
+    ) -> Result<crate::taylor::TaylorResult> {
+        if let ShardBackend::Tcp { endpoints } = &self.backend {
+            if self.tcp.is_none() {
+                self.tcp = Some(crate::coordinator::transport::TcpShardExecutor::new(
+                    endpoints.clone(),
+                )?);
+            }
+            let hp = h.freeze();
+            let tcp = self.tcp.as_mut().expect("executor installed above");
+            let (p0, d0) = io_payload_totals(tcp.io());
+            let (term, sum, steps) = tcp.execute_chain(&hp, t, iters)?;
+            let (p1, d1) = io_payload_totals(tcp.io());
+            self.stats.multiplies = self.stats.multiplies.saturating_add(iters as u64);
+            self.stats.remote_chain_jobs = self.stats.remote_chain_jobs.saturating_add(1);
+            self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(p1 - p0);
+            self.stats.dedup_bytes_avoided =
+                self.stats.dedup_bytes_avoided.saturating_add(d1 - d0);
+            return Ok(crate::taylor::TaylorResult {
+                op: sum.thaw(),
+                term,
+                steps,
+                kernel: *self.engine.stats(),
+                shard: self.stats,
+            });
+        }
+        let out = crate::taylor::ChainDriver::new(h, t).run(iters, self)?;
+        Ok(crate::taylor::TaylorResult {
+            op: out.op,
+            term: out.term,
+            steps: out.steps,
+            kernel: *self.engine.stats(),
+            shard: self.stats,
+        })
     }
 
     /// The shard partition for this planned product, from the memo when
@@ -1002,19 +1694,319 @@ mod tests {
 
     #[test]
     fn job_wire_roundtrip() {
-        let a = band(24, 2);
-        let b = band(24, 3);
-        let bytes = encode_job(&a, &b, 1000, 3, 9);
+        let bytes = encode_job(24, 1000, 3, 9, 0xAA55, 0x55AA);
+        assert_eq!(bytes.len(), 52, "v3 jobs are fixed-size plane references");
         let job = decode_job(&bytes).unwrap();
-        assert!(job.a.bit_eq(&a));
-        assert!(job.b.bit_eq(&b));
-        assert_eq!((job.tile, job.task_lo, job.task_hi), (1000, 3, 9));
+        assert_eq!(
+            job,
+            JobRefs {
+                n: 24,
+                tile: 1000,
+                task_lo: 3,
+                task_hi: 9,
+                fp_a: 0xAA55,
+                fp_b: 0x55AA,
+            }
+        );
         // Truncation and corruption fail loudly, never panic.
         assert!(decode_job(&bytes[..bytes.len() - 5]).is_err());
         assert!(decode_job(b"nope").is_err());
         let mut extra = bytes.clone();
         extra.push(0);
         assert!(decode_job(&extra).is_err());
+        // Inverted range rejected at decode.
+        assert!(decode_job(&encode_job(24, 1000, 9, 3, 1, 2)).is_err());
+    }
+
+    #[test]
+    fn plane_wire_roundtrip_and_fingerprint_golden() {
+        let a = band(24, 2);
+        let fp = plane_fingerprint(&a);
+        let put = encode_plane_put(fp, &a);
+        assert_eq!(put.len() as u64, 20 + plane_wire_bytes(&a));
+        let (gfp, got) = decode_plane_put(&put).unwrap();
+        assert_eq!(gfp, fp);
+        assert!(got.bit_eq(&a));
+        assert!(decode_plane_put(&put[..put.len() - 3]).is_err());
+        let have = encode_plane_have(fp, 24);
+        assert_eq!(decode_plane_have(&have).unwrap(), (fp, 24));
+        assert!(decode_plane_have(&put).is_err(), "magics must not cross");
+        assert!(decode_plane_put(&have).is_err());
+        // Fingerprints are content hashes: any value or structure
+        // change moves them.
+        let b = band(24, 3);
+        assert_ne!(plane_fingerprint(&b), fp);
+        let mut a2 = a.clone();
+        a2.scale(crate::num::Complex::real(2.0));
+        assert_ne!(plane_fingerprint(&a2), fp);
+        // Golden value pinned against the Python wire mirror
+        // (python/tests/test_transport.py) so the two implementations
+        // cannot drift apart silently.
+        let golden = PackedDiagMatrix::from_planes(
+            3,
+            vec![-1, 0, 2],
+            vec![0.5, -0.25, 1.0, 2.0, -0.0, 3.5],
+            vec![0.0, 1.5, -2.5, 0.125, 4.0, -1.0],
+        );
+        assert_eq!(plane_fingerprint(&golden), 0xae41ff973d63777a);
+    }
+
+    #[test]
+    fn chain_wire_roundtrip() {
+        let bytes = encode_chain_job(48, 0.25, 6, 0xFEED);
+        let refs = decode_chain_job(&bytes).unwrap();
+        assert_eq!(
+            refs,
+            ChainRefs {
+                n: 48,
+                t: 0.25,
+                iters: 6,
+                fp_h: 0xFEED,
+            }
+        );
+        assert!(decode_chain_job(&bytes[..10]).is_err());
+        assert!(decode_chain_job(&encode_chain_job(48, 0.25, 0, 1)).is_err());
+        assert!(
+            decode_chain_job(&encode_chain_job(48, 0.25, MAX_CHAIN_ITERS as usize + 1, 1))
+                .is_err()
+        );
+        // Response: term + sum + steps survive bit-exactly.
+        let term = band(16, 1);
+        let sum = band(16, 2);
+        let steps = vec![
+            TaylorStep {
+                k: 1,
+                term_nnzd: 3,
+                sum_nnzd: 5,
+                term_elements: 46,
+                sum_storage_saving: 0.75,
+                mults: 120,
+            },
+            TaylorStep {
+                k: 2,
+                term_nnzd: 5,
+                sum_nnzd: 5,
+                term_elements: 76,
+                sum_storage_saving: -0.0,
+                mults: 240,
+            },
+        ];
+        let resp = encode_chain_ok(&term, &sum, &steps);
+        let (gterm, gsum, gsteps) = decode_chain_resp(&resp).unwrap();
+        assert!(gterm.bit_eq(&term));
+        assert!(gsum.bit_eq(&sum));
+        assert_eq!(gsteps.len(), 2);
+        for (g, s) in gsteps.iter().zip(&steps) {
+            assert_eq!((g.k, g.term_nnzd, g.sum_nnzd), (s.k, s.term_nnzd, s.sum_nnzd));
+            assert_eq!(g.term_elements, s.term_elements);
+            assert_eq!(
+                g.sum_storage_saving.to_bits(),
+                s.sum_storage_saving.to_bits()
+            );
+            assert_eq!(g.mults, s.mults);
+        }
+        let err = decode_chain_resp(&encode_chain_err("H went missing")).unwrap_err();
+        assert!(format!("{err:#}").contains("H went missing"));
+        assert!(decode_chain_resp(&resp[..resp.len() - 7]).is_err());
+    }
+
+    #[test]
+    fn decode_survives_mutated_and_truncated_frames() {
+        // Property sweep (satellite hardening): every decoder must
+        // return Err — never panic, never over-allocate — on any
+        // truncation, and survive arbitrary single-byte corruption.
+        let a = band(24, 2);
+        let fp = plane_fingerprint(&a);
+        let frames: Vec<Vec<u8>> = vec![
+            encode_plane_put(fp, &a),
+            encode_plane_have(fp, 24),
+            encode_job(24, 64, 0, 5, fp, fp),
+            encode_chain_job(24, 0.3, 4, fp),
+            encode_ok(&[1.0, -2.5], &[0.5, 0.0], 7),
+            encode_err("boom"),
+            encode_chain_ok(&a, &a, &[]),
+            encode_chain_err("boom"),
+        ];
+        let decode_any = |bytes: &[u8]| {
+            let _ = decode_plane_put(bytes);
+            let _ = decode_plane_have(bytes);
+            let _ = decode_job(bytes);
+            let _ = decode_chain_job(bytes);
+            let _ = decode_resp(bytes);
+            let _ = decode_chain_resp(bytes);
+        };
+        crate::testutil::prop_check("mutated/truncated decode never panics", 30, |rng| {
+            let f = &frames[rng.gen_range(0, frames.len())];
+            // Strict truncation at a random point must fail every
+            // decoder that accepts the intact frame.
+            let cut = rng.gen_range(0, f.len());
+            assert!(decode_plane_put(&f[..cut]).is_err());
+            assert!(decode_job(&f[..cut]).is_err());
+            assert!(decode_resp(&f[..cut]).is_err());
+            assert!(decode_chain_resp(&f[..cut]).is_err());
+            decode_any(&f[..cut]);
+            // Random byte flips: decoders may accept or reject, but
+            // must never panic (length fields are all bounds-checked
+            // before allocation).
+            let mut mutated = f.clone();
+            for _ in 0..rng.gen_range(1, 4) {
+                let i = rng.gen_range(0, mutated.len());
+                mutated[i] ^= rng.next_u64() as u8 | 1;
+            }
+            decode_any(&mutated);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plane_store_and_mirror_stay_in_lockstep() {
+        // The mirror's Put/Have prediction must equal the store's
+        // residency under any insert sequence — including wholesale
+        // eviction — or a client would ship wrong Have frames.
+        let plane = Arc::new(band(8, 1));
+        crate::testutil::prop_check("PlaneMirror mirrors PlaneStore eviction", 20, |rng| {
+            let cap = rng.gen_range(2, 6);
+            let mut store = PlaneStore::new(cap);
+            let mut mirror = PlaneMirror::new(cap);
+            for _ in 0..64 {
+                let fp = rng.gen_range(0, 9) as u64; // small space → collisions + evictions
+                let predicted_resident = mirror.note(fp);
+                if predicted_resident != store.contains(fp) {
+                    return Err(format!(
+                        "mirror predicted resident={predicted_resident} for {fp}, store says {}",
+                        store.contains(fp)
+                    ));
+                }
+                store.insert(fp, Arc::clone(&plane));
+            }
+            Ok(())
+        });
+        // The documented eviction contract itself.
+        let mut store = PlaneStore::new(2);
+        store.insert(1, Arc::clone(&plane));
+        store.insert(2, Arc::clone(&plane));
+        store.insert(1, Arc::clone(&plane)); // replace-in-place: no evict
+        assert_eq!(store.len(), 2);
+        store.insert(3, Arc::clone(&plane)); // over cap: wholesale reset
+        assert_eq!(store.len(), 1);
+        assert!(store.contains(3) && !store.contains(1));
+    }
+
+    #[test]
+    fn router_runs_chain_bitwise_identical_to_local_expm() {
+        // The acceptance contract at the router level: a ChainJob
+        // answered by the server-side ChainDriver must be bitwise
+        // identical to the local expm_diag chain.
+        let mut h = DiagMatrix::zeros(20);
+        for d in [-4i64, -1, 0, 1, 4] {
+            let len = DiagMatrix::diag_len(20, d);
+            h.set_diag(
+                d,
+                (0..len)
+                    .map(|k| Complex::new(0.7 - (k % 3) as f64 * 0.2, 0.1 * d as f64))
+                    .collect(),
+            );
+        }
+        let (t, iters) = (0.3, 5);
+        let local = crate::taylor::expm_diag(&h, t, iters);
+        let hp = h.freeze();
+        let fp = plane_fingerprint(&hp);
+        let mut router = JobRouter::new(DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP);
+        assert!(matches!(
+            router.handle(&encode_plane_put(fp, &hp)),
+            Routed::Silent
+        ));
+        let resp = match router.handle(&encode_chain_job(20, t, iters, fp)) {
+            Routed::Reply(buf) => buf,
+            _ => panic!("chain job must be answered"),
+        };
+        let (term, sum, steps) = decode_chain_resp(&resp).unwrap();
+        assert!(term.bit_eq(&local.term));
+        assert!(sum.thaw() == local.op, "server-side sum differs from local chain");
+        assert_eq!(steps.len(), iters);
+        for (g, s) in steps.iter().zip(&local.steps) {
+            assert_eq!(g.k, s.k);
+            assert_eq!(g.term_nnzd, s.term_nnzd);
+            assert_eq!(g.mults, s.mults);
+        }
+        assert_eq!(router.chains, 1);
+        // A second chain on the same connection: H is already resident,
+        // a HavePlane suffices.
+        assert!(matches!(
+            router.handle(&encode_plane_have(fp, 20)),
+            Routed::Silent
+        ));
+        let resp2 = match router.handle(&encode_chain_job(20, t, iters, fp)) {
+            Routed::Reply(buf) => buf,
+            _ => panic!("second chain job must be answered"),
+        };
+        let (term2, _, _) = decode_chain_resp(&resp2).unwrap();
+        assert!(term2.bit_eq(&local.term));
+    }
+
+    #[test]
+    fn router_reports_unknown_planes_and_recovers_on_resend() {
+        let a = band(16, 1);
+        let fp = plane_fingerprint(&a);
+        let mut router = JobRouter::new(DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP);
+        // Have before any Put: parked, then surfaced on the job.
+        assert!(matches!(
+            router.handle(&encode_plane_have(fp, 16)),
+            Routed::Silent
+        ));
+        let job = encode_job(16, 64, 0, 1, fp, fp);
+        match router.handle(&job) {
+            Routed::Fail(resp, msg) => {
+                assert!(msg.contains("unknown operand plane"), "{msg}");
+                let err = format!("{:#}", decode_resp(&resp).unwrap_err());
+                assert!(err.contains("unknown operand plane"), "{err}");
+            }
+            _ => panic!("job referencing an unknown plane must fail"),
+        }
+        // The recovery path: resend as a full Put, replay the job.
+        assert!(matches!(
+            router.handle(&encode_plane_put(fp, &a)),
+            Routed::Silent
+        ));
+        match router.handle(&job) {
+            Routed::Reply(resp) => {
+                let (re, _, _) = decode_resp(&resp).unwrap();
+                assert!(!re.is_empty());
+            }
+            _ => panic!("job must succeed after the resend"),
+        }
+        // A Put whose fingerprint lies is parked, not stored.
+        assert!(matches!(
+            router.handle(&encode_plane_put(fp ^ 1, &a)),
+            Routed::Silent
+        ));
+        match router.handle(&job) {
+            Routed::Fail(_, msg) => {
+                assert!(msg.contains("fingerprint mismatch"), "{msg}")
+            }
+            _ => panic!("a lying Put must fail the next job"),
+        }
+        // Unknown magic: framed error, message names the frame.
+        match router.handle(b"WHAT....") {
+            Routed::Fail(_, msg) => assert!(msg.contains("unknown shard frame"), "{msg}"),
+            _ => panic!("unknown magic must fail"),
+        }
+    }
+
+    #[test]
+    fn run_chain_local_backends_match_expm_diag() {
+        let mut h = DiagMatrix::zeros(24);
+        for d in -2i64..=2 {
+            let len = DiagMatrix::diag_len(24, d);
+            h.set_diag(d, vec![Complex::new(0.9, 0.15 * d as f64); len]);
+        }
+        let local = crate::taylor::expm_diag(&h, 0.4, 6);
+        let mut sc = ShardCoordinator::new(EngineConfig::default(), 3, ShardBackend::InProc);
+        let r = sc.run_chain(&h, 0.4, 6).unwrap();
+        assert_eq!(r.op, local.op);
+        assert!(r.term.bit_eq(&local.term));
+        assert_eq!(r.shard.remote_chain_jobs, 0);
+        assert_eq!(r.shard.sharded_multiplies, 6);
     }
 
     #[test]
@@ -1031,10 +2023,19 @@ mod tests {
         assert!(decode_resp(&bytes[..7]).is_err());
     }
 
+    /// Length-prefix one payload the way [`transport::write_frame`]
+    /// does — test-side framing for hand-built worker streams.
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut v = (payload.len() as u64).to_le_bytes().to_vec();
+        v.extend_from_slice(payload);
+        v
+    }
+
     #[test]
     fn run_worker_in_memory_matches_inproc_slice() {
-        // The worker body over in-memory IO: its slice must equal the
-        // parent-side range execution bitwise.
+        // The worker body over in-memory IO: `hello | Put(a) | Put(b) |
+        // job` in, `hello | frame(resp)` out, and the slice must equal
+        // the parent-side range execution bitwise.
         let a = band(64, 3);
         let b = band(64, 2);
         let plan = plan_diag_mul(&a, &b);
@@ -1042,14 +2043,20 @@ mod tests {
         let sp = shard_plan(&tiles, 3);
         let r = sp.ranges[1];
         assert!(r.task_hi > r.task_lo, "middle shard must hold work");
-        let mut job = crate::coordinator::transport::encode_hello().to_vec();
-        job.extend_from_slice(&encode_job(&a, &b, 40, r.task_lo, r.task_hi));
+        let (fa, fb) = (plane_fingerprint(&a), plane_fingerprint(&b));
+        let mut input = crate::coordinator::transport::encode_hello().to_vec();
+        input.extend_from_slice(&framed(&encode_plane_put(fa, &a)));
+        input.extend_from_slice(&framed(&encode_plane_put(fb, &b)));
+        input.extend_from_slice(&framed(&encode_job(64, 40, r.task_lo, r.task_hi, fa, fb)));
         let mut out = Vec::new();
-        run_worker(&mut &job[..], &mut out).unwrap();
-        // Stdout is hello | response: both directions are stamped.
+        run_worker(&mut &input[..], &mut out).unwrap();
+        // Stdout is hello | framed response: both directions stamped.
         let hl = crate::coordinator::transport::HELLO_LEN;
         crate::coordinator::transport::check_hello(&out[..hl]).unwrap();
-        let (wre, wim, mults) = decode_resp(&out[hl..]).unwrap();
+        let resp = crate::coordinator::transport::read_frame(&mut &out[hl..])
+            .unwrap()
+            .expect("worker must answer the job");
+        let (wre, wim, mults) = decode_resp(&resp).unwrap();
         assert_eq!(mults as usize, r.mults);
         let mut ere = vec![0f64; r.elems];
         let mut eim = vec![0f64; r.elems];
@@ -1059,43 +2066,91 @@ mod tests {
     }
 
     #[test]
+    fn run_worker_runs_whole_chain_over_the_pipe() {
+        // A ChainJob through the worker entrypoint itself: one Put of H,
+        // one chain frame, bitwise-identical result to local expm_diag.
+        let mut h = DiagMatrix::zeros(18);
+        for d in [-2i64, 0, 3] {
+            let len = DiagMatrix::diag_len(18, d);
+            h.set_diag(d, vec![Complex::new(0.6, 0.2 * d as f64); len]);
+        }
+        let local = crate::taylor::expm_diag(&h, 0.5, 4);
+        let hp = h.freeze();
+        let fp = plane_fingerprint(&hp);
+        let mut input = crate::coordinator::transport::encode_hello().to_vec();
+        input.extend_from_slice(&framed(&encode_plane_put(fp, &hp)));
+        input.extend_from_slice(&framed(&encode_chain_job(18, 0.5, 4, fp)));
+        let mut out = Vec::new();
+        run_worker(&mut &input[..], &mut out).unwrap();
+        let hl = crate::coordinator::transport::HELLO_LEN;
+        crate::coordinator::transport::check_hello(&out[..hl]).unwrap();
+        let resp = crate::coordinator::transport::read_frame(&mut &out[hl..])
+            .unwrap()
+            .expect("worker must answer the chain");
+        let (term, sum, steps) = decode_chain_resp(&resp).unwrap();
+        assert!(term.bit_eq(&local.term));
+        assert!(sum.thaw() == local.op);
+        assert_eq!(steps.len(), 4);
+    }
+
+    #[test]
     fn run_worker_rejects_bad_jobs_with_error_response() {
-        use crate::coordinator::transport::{check_hello, HELLO_LEN};
+        use crate::coordinator::transport::{check_hello, read_frame, HELLO_LEN};
         // No handshake at all: rejected at the transport layer. The
         // worker still stamps its own hello onto stdout first.
         let mut out = Vec::new();
         assert!(run_worker(&mut &b"garbage"[..], &mut out).is_err());
         check_hello(&out[..HELLO_LEN]).unwrap();
-        let err = decode_resp(&out[HELLO_LEN..]).unwrap_err();
+        let resp = read_frame(&mut &out[HELLO_LEN..]).unwrap().unwrap();
+        let err = decode_resp(&resp).unwrap_err();
         assert!(format!("{err:#}").contains("worker reported"));
-        // Out-of-range shard range is caught before execution.
+        // Out-of-range shard range is caught at decode, before any
+        // plane resolution or execution.
         let a = band(16, 1);
-        let mut job = crate::coordinator::transport::encode_hello().to_vec();
-        job.extend_from_slice(&encode_job(&a, &a, 8, 0, 10_000));
+        let fp = plane_fingerprint(&a);
+        let mut input = crate::coordinator::transport::encode_hello().to_vec();
+        input.extend_from_slice(&framed(&encode_plane_put(fp, &a)));
+        input.extend_from_slice(&framed(&encode_job(16, 8, 0, 10_000, fp, fp)));
         let mut out = Vec::new();
-        assert!(run_worker(&mut &job[..], &mut out).is_err());
+        assert!(run_worker(&mut &input[..], &mut out).is_err());
         check_hello(&out[..HELLO_LEN]).unwrap();
-        let err = format!("{:#}", decode_resp(&out[HELLO_LEN..]).unwrap_err());
+        let resp = read_frame(&mut &out[HELLO_LEN..]).unwrap().unwrap();
+        let err = format!("{:#}", decode_resp(&resp).unwrap_err());
         assert!(err.contains("out of bounds"), "{err}");
+        // A job whose fingerprints were never shipped: named plane miss.
+        let mut input = crate::coordinator::transport::encode_hello().to_vec();
+        input.extend_from_slice(&framed(&encode_job(16, 8, 0, 1, 0xDEAD, 0xDEAD)));
+        let mut out = Vec::new();
+        assert!(run_worker(&mut &input[..], &mut out).is_err());
+        let resp = read_frame(&mut &out[HELLO_LEN..]).unwrap().unwrap();
+        let err = format!("{:#}", decode_resp(&resp).unwrap_err());
+        assert!(err.contains("unknown operand plane"), "{err}");
     }
 
     #[test]
     fn run_worker_rejects_version_skewed_handshake() {
-        // A valid job behind a future-version hello: the worker must
-        // refuse with an error naming both versions — the mis-parse
-        // this handshake exists to prevent.
-        use crate::coordinator::transport::{check_hello, encode_hello, HELLO_LEN, WIRE_VERSION};
+        // A valid job behind a skewed hello (one version up AND one
+        // down): the worker must refuse with an error naming both
+        // versions — the mis-parse this handshake exists to prevent.
+        use crate::coordinator::transport::{
+            check_hello, encode_hello, read_frame, HELLO_LEN, WIRE_VERSION,
+        };
         let a = band(24, 2);
-        let mut skewed = encode_hello();
-        skewed[4..].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
-        let mut job = skewed.to_vec();
-        job.extend_from_slice(&encode_job(&a, &a, 16, 0, 1));
-        let mut out = Vec::new();
-        assert!(run_worker(&mut &job[..], &mut out).is_err());
-        check_hello(&out[..HELLO_LEN]).unwrap();
-        let err = format!("{:#}", decode_resp(&out[HELLO_LEN..]).unwrap_err());
-        assert!(err.contains("version mismatch"), "{err}");
-        assert!(err.contains(&format!("v{}", WIRE_VERSION + 1)), "{err}");
+        let fp = plane_fingerprint(&a);
+        for peer in [WIRE_VERSION + 1, WIRE_VERSION - 1] {
+            let mut skewed = encode_hello();
+            skewed[4..].copy_from_slice(&peer.to_le_bytes());
+            let mut input = skewed.to_vec();
+            input.extend_from_slice(&framed(&encode_plane_put(fp, &a)));
+            input.extend_from_slice(&framed(&encode_job(24, 16, 0, 1, fp, fp)));
+            let mut out = Vec::new();
+            assert!(run_worker(&mut &input[..], &mut out).is_err());
+            check_hello(&out[..HELLO_LEN]).unwrap();
+            let resp = read_frame(&mut &out[HELLO_LEN..]).unwrap().unwrap();
+            let err = format!("{:#}", decode_resp(&resp).unwrap_err());
+            assert!(err.contains("version mismatch"), "{err}");
+            assert!(err.contains(&format!("v{peer}")), "{err}");
+        }
     }
 
     #[test]

@@ -15,15 +15,22 @@
 //! * **framing** — TCP is a byte stream with no EOF between jobs, so
 //!   every message after the handshake travels as
 //!   `len u64 (little-endian) | payload` ([`write_frame`] /
-//!   [`read_frame`]). The payloads are exactly the job/response
+//!   [`read_frame`]). The payloads are exactly the plane / job / chain
 //!   encodings the process backend already uses
-//!   ([`crate::coordinator::shard::encode_job`] and friends) — the wire
+//!   ([`crate::coordinator::shard::encode_plane_put`],
+//!   [`crate::coordinator::shard::encode_job`] and friends) — the wire
 //!   format did not fork, it gained an envelope.
 //! * the **daemon** ([`serve`] / [`ShardServer`]) and the **client**
-//!   ([`TcpShardExecutor`]) — one engine per connection on the server
-//!   (its plan cache persists across a Taylor chain's jobs), persistent
-//!   per-shard connections with connect/response deadlines, straggler
-//!   cancellation and per-endpoint I/O accounting on the client.
+//!   ([`TcpShardExecutor`]) — one
+//!   [`JobRouter`](crate::coordinator::shard::JobRouter) per connection
+//!   on the server (its plane store and plan cache persist across a
+//!   Taylor chain's jobs), persistent per-shard connections with
+//!   connect/response deadlines, straggler cancellation and per-endpoint
+//!   I/O accounting on the client. Since wire v3 the client keeps a
+//!   [`PlaneMirror`](crate::coordinator::shard::PlaneMirror) per
+//!   connection and ships each operand plane's bytes **once**: repeat
+//!   operands travel as 20-byte `HavePlane` references, and the
+//!   payload/dedup split is counted in [`EndpointIo`].
 //!
 //! ## Determinism
 //!
@@ -33,16 +40,21 @@
 //! so TCP-sharded output is **bitwise**
 //! identical to in-process and single-engine execution (gated by
 //! `rust/tests/shard_tcp.rs` and the CI `remote-shard-smoke` job).
+//! Server-side chain jobs run the same
+//! [`ChainDriver`](crate::taylor::ChainDriver) loop body the local
+//! path runs, so whole-chain results are bitwise identical too (the CI
+//! `chain-smoke` job gates the dedup win).
 
 use crate::coordinator::shard::{
-    decode_job, decode_resp, encode_err, encode_job_header, encode_ok, encode_operands,
-    execute_job_planned, ShardJob, DEFAULT_WORKER_TIMEOUT,
+    decode_chain_resp, decode_resp, encode_chain_job, encode_err, encode_job,
+    encode_plane_have, encode_plane_put, matrix_wire_bytes, plane_fingerprint,
+    plane_wire_bytes, JobRouter, PlaneMirror, Routed, DEFAULT_PLANE_CACHE_CAP,
+    DEFAULT_PLAN_CACHE_CAP, DEFAULT_WORKER_TIMEOUT,
 };
 use crate::format::PackedDiagMatrix;
-use crate::linalg::engine::{tile_plan, ShardPlan, TilePlan};
-use crate::linalg::{plan_diag_mul, MulPlan};
+use crate::linalg::engine::ShardPlan;
+use crate::taylor::TaylorStep;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -57,7 +69,11 @@ use std::time::{Duration, Instant};
 ///
 /// v1 was PR 4's handshake-less stdin/stdout encoding; v2 added this
 /// hello frame (both transports) and the TCP length-prefix envelope.
-pub const WIRE_VERSION: u32 = 2;
+/// v3 made operand planes content-addressed (`PutPlane`/`HavePlane`
+/// frames, fingerprint-referencing jobs) and added server-side
+/// `ChainJob` execution — a v2 job body no longer parses, which is
+/// exactly what the handshake equality check is for.
+pub const WIRE_VERSION: u32 = 3;
 
 /// Frame marker of the handshake (both directions, both transports).
 pub const HELLO_MAGIC: [u8; 4] = *b"DSHK";
@@ -82,9 +98,34 @@ const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(30 * 60);
 /// Default TCP connect deadline per endpoint.
 pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Per-connection plan memo entries kept before the cache resets (same
-/// bound as the coordinator-side shard-plan memo).
-const PLAN_CACHE_CAP: usize = 32;
+/// Tunables of a `shard-serve` daemon, one copy per accepted
+/// connection: the frame-size bound (satellite hardening against a bad
+/// client's length prefix) and the per-connection cache caps the CLI
+/// exposes as `--max-frame-bytes` / `--plane-cache-cap` /
+/// `--plan-cache-cap`.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Largest framed payload the server will read (default
+    /// [`MAX_FRAME_BYTES`]).
+    pub max_frame_bytes: u64,
+    /// Operand planes kept per connection (default
+    /// [`DEFAULT_PLANE_CACHE_CAP`]).
+    pub plane_cache_cap: usize,
+    /// `(plan, tiling)` memo entries kept per connection (default
+    /// [`DEFAULT_PLAN_CACHE_CAP`], same bound as the coordinator-side
+    /// shard-plan memo).
+    pub plan_cache_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_frame_bytes: MAX_FRAME_BYTES,
+            plane_cache_cap: DEFAULT_PLANE_CACHE_CAP,
+            plan_cache_cap: DEFAULT_PLAN_CACHE_CAP,
+        }
+    }
+}
 
 // --- handshake ------------------------------------------------------------
 
@@ -148,6 +189,14 @@ pub fn write_frame(w: &mut impl Write, parts: &[&[u8]]) -> std::io::Result<()> {
 /// first length byte (the peer closed between messages — the normal end
 /// of a connection); an EOF mid-frame is an error.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    read_frame_limited(r, MAX_FRAME_BYTES)
+}
+
+/// [`read_frame`] with an explicit payload bound: the length prefix is
+/// validated against `max` *before* any allocation, so a corrupt or
+/// hostile prefix can never trigger an unbounded `vec!`. The server
+/// threads its `--max-frame-bytes` setting through here.
+pub fn read_frame_limited(r: &mut impl Read, max: u64) -> Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 8];
     let mut got = 0usize;
     while got < 8 {
@@ -160,8 +209,8 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
         }
     }
     let len = u64::from_le_bytes(len_buf);
-    if len > MAX_FRAME_BYTES {
-        bail!("frame claims {len} bytes (limit {MAX_FRAME_BYTES}) — corrupt length prefix?");
+    if len > max {
+        bail!("frame claims {len} bytes (limit {max}) — corrupt length prefix?");
     }
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)
@@ -171,61 +220,15 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
 
 // --- the server side ------------------------------------------------------
 
-/// Key of a served connection's plan memo: a `(plan, tiling)` pair is a
-/// pure function of the operand offset sets, the dimension and the
-/// parent's resolved tile length.
-#[derive(Clone, Debug, Hash, PartialEq, Eq)]
-struct PlanKey {
-    n: usize,
-    tile: usize,
-    a_offsets: Vec<i64>,
-    b_offsets: Vec<i64>,
-}
-
-type PlanCache = HashMap<PlanKey, Arc<(MulPlan, TilePlan)>>;
-
-/// Execute one decoded job with the connection's plan memo: a Taylor
-/// chain re-sends operand *values* every iteration, but once its offset
-/// structure stabilizes the plan → tile derivation is served from the
-/// cache instead of recomputed (the server-side mirror of
-/// [`KernelEngine`](crate::linalg::KernelEngine)'s plan cache).
-fn execute_job_cached(
-    job: &ShardJob,
-    cache: &mut PlanCache,
-    hits: &mut u64,
-) -> Result<(Vec<f64>, Vec<f64>, u64)> {
-    let key = PlanKey {
-        n: job.a.dim(),
-        tile: job.tile,
-        a_offsets: job.a.offsets().to_vec(),
-        b_offsets: job.b.offsets().to_vec(),
-    };
-    let planned = match cache.get(&key) {
-        Some(hit) => {
-            *hits += 1;
-            Arc::clone(hit)
-        }
-        None => {
-            let plan = plan_diag_mul(&job.a, &job.b);
-            let tiles = tile_plan(&plan, job.tile);
-            if cache.len() >= PLAN_CACHE_CAP {
-                cache.clear();
-            }
-            let entry = Arc::new((plan, tiles));
-            cache.insert(key, Arc::clone(&entry));
-            entry
-        }
-    };
-    execute_job_planned(&planned.1, job)
-}
-
 /// Serve one accepted connection to completion: exchange handshakes
 /// (server speaks first, so even a client that would never send its own
-/// hello learns this build's version), then answer framed jobs
-/// sequentially until the peer closes. Job-level failures are reported
-/// as framed error responses and the connection stays up; transport or
-/// handshake failures tear it down.
-fn handle_conn(mut stream: TcpStream, peer: &str) -> Result<()> {
+/// hello learns this build's version), then route framed messages
+/// through a per-connection [`JobRouter`] — plane frames are absorbed
+/// into the router's plane store, job and chain frames are answered —
+/// until the peer closes. Job-level failures are reported as framed
+/// error responses and the connection stays up; transport or handshake
+/// failures tear it down.
+fn handle_conn(mut stream: TcpStream, peer: &str, cfg: &ServeConfig) -> Result<()> {
     let _ = stream.set_nodelay(true);
     stream
         .write_all(&encode_hello())
@@ -248,20 +251,26 @@ fn handle_conn(mut stream: TcpStream, peer: &str) -> Result<()> {
         .set_read_timeout(Some(CONN_IDLE_TIMEOUT))
         .context("arming idle deadline")?;
 
-    let mut cache: PlanCache = HashMap::new();
-    let mut served = 0u64;
-    let mut hits = 0u64;
-    while let Some(frame) = read_frame(&mut stream)? {
-        let resp = match decode_job(&frame)
-            .and_then(|job| execute_job_cached(&job, &mut cache, &mut hits))
-        {
-            Ok((re, im, mults)) => encode_ok(&re, &im, mults),
-            Err(e) => encode_err(&format!("{e:#}")),
-        };
-        write_frame(&mut stream, &[&resp]).context("writing response")?;
-        served += 1;
+    let mut router = JobRouter::new(cfg.plane_cache_cap, cfg.plan_cache_cap);
+    while let Some(frame) = read_frame_limited(&mut stream, cfg.max_frame_bytes)? {
+        match router.handle(&frame) {
+            Routed::Silent => {}
+            Routed::Reply(resp) => {
+                write_frame(&mut stream, &[&resp]).context("writing response")?;
+            }
+            Routed::Fail(resp, msg) => {
+                // The client gets a decodable framed error and may
+                // retry (e.g. resend an evicted plane); the connection
+                // stays up.
+                eprintln!("shard-serve: {peer}: {msg}");
+                write_frame(&mut stream, &[&resp]).context("writing error response")?;
+            }
+        }
     }
-    eprintln!("shard-serve: {peer}: closed after {served} job(s), {hits} plan-cache hit(s)");
+    eprintln!(
+        "shard-serve: {peer}: closed after {} job(s) + {} chain(s), {} plan-cache hit(s)",
+        router.jobs, router.chains, router.plan_hits
+    );
     Ok(())
 }
 
@@ -269,7 +278,7 @@ fn handle_conn(mut stream: TcpStream, peer: &str) -> Result<()> {
 /// per connection; log transient accept failures (ECONNABORTED, EMFILE)
 /// and retry after a short pause instead of dying or hot-spinning.
 /// Exits only when `stop` (the in-process [`ShardServer`] flag) flips.
-fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>) {
+fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>, cfg: ServeConfig) {
     let stopped = |stop: &Option<Arc<AtomicBool>>| {
         stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst))
     };
@@ -280,10 +289,11 @@ fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>) {
                     break;
                 }
                 let peer = peer.to_string();
+                let conn_cfg = cfg.clone();
                 let _ = std::thread::Builder::new()
                     .name(format!("shard-conn-{peer}"))
                     .spawn(move || {
-                        if let Err(e) = handle_conn(stream, &peer) {
+                        if let Err(e) = handle_conn(stream, &peer, &conn_cfg) {
                             eprintln!("shard-serve: {peer}: {e:#}");
                         }
                     });
@@ -304,7 +314,14 @@ fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>) {
 /// sequentially), running until the process is killed. Connection *and*
 /// accept errors are logged to stderr and never take the daemon down.
 pub fn serve(listener: TcpListener) -> Result<()> {
-    run_accept_loop(listener, None);
+    serve_with(listener, ServeConfig::default())
+}
+
+/// [`serve`] with explicit [`ServeConfig`] tunables — the entry point
+/// `diamond shard-serve` uses once its `--max-frame-bytes` /
+/// `--plane-cache-cap` / `--plan-cache-cap` flags are parsed.
+pub fn serve_with(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
+    run_accept_loop(listener, None, cfg);
     Ok(())
 }
 
@@ -320,8 +337,15 @@ pub struct ShardServer {
 
 impl ShardServer {
     /// Bind `bind_addr` (use port 0 for an ephemeral port) and serve
-    /// connections on a background thread.
+    /// connections on a background thread with default tunables.
     pub fn spawn(bind_addr: &str) -> Result<ShardServer> {
+        Self::spawn_with(bind_addr, ServeConfig::default())
+    }
+
+    /// [`ShardServer::spawn`] with explicit [`ServeConfig`] tunables —
+    /// how tests exercise small plane caches and tight frame bounds
+    /// without a real daemon.
+    pub fn spawn_with(bind_addr: &str, cfg: ServeConfig) -> Result<ShardServer> {
         let listener = TcpListener::bind(bind_addr)
             .with_context(|| format!("binding shard server to {bind_addr}"))?;
         let addr = listener.local_addr().context("resolving bound address")?;
@@ -329,7 +353,7 @@ impl ShardServer {
         let stop_flag = Arc::clone(&stop);
         let handle = std::thread::Builder::new()
             .name(format!("shard-serve-{addr}"))
-            .spawn(move || run_accept_loop(listener, Some(stop_flag)))
+            .spawn(move || run_accept_loop(listener, Some(stop_flag), cfg))
             .context("spawning shard server accept loop")?;
         Ok(ShardServer {
             addr,
@@ -389,6 +413,17 @@ pub struct EndpointIo {
     /// Connections established (1 per slot in steady state; more after
     /// failures forced a reconnect).
     pub connects: u64,
+    /// Operand-plane bytes actually shipped (`PutPlane` matrix
+    /// payloads). A subset of `bytes_sent`; the rest is framing, plane
+    /// references and job headers.
+    pub payload_bytes: u64,
+    /// Operand-plane bytes content-addressing did *not* ship: each
+    /// `HavePlane` (and each chain iteration that kept its operands
+    /// server-side) counts the bytes a resend-every-time protocol would
+    /// have cost. `payload_bytes + dedup_bytes_avoided` is the v2-style
+    /// traffic; the ratio is the dedup win the CI `chain-smoke` job
+    /// gates.
+    pub dedup_bytes_avoided: u64,
 }
 
 impl EndpointIo {
@@ -400,12 +435,46 @@ impl EndpointIo {
         self.bytes_sent += other.bytes_sent;
         self.bytes_received += other.bytes_received;
         self.connects += other.connects;
+        self.payload_bytes += other.payload_bytes;
+        self.dedup_bytes_avoided += other.dedup_bytes_avoided;
     }
 }
 
 /// What one exchange thread reports back: the decoded slice plus the
-/// wire bytes it moved.
-type ExchangeResult = Result<(Vec<f64>, Vec<f64>, u64, u64, u64)>;
+/// wire bytes it moved and how the operand planes traveled.
+struct Exchanged {
+    re: Vec<f64>,
+    im: Vec<f64>,
+    mults: u64,
+    sent: u64,
+    received: u64,
+    /// Plane bytes shipped in this exchange (both attempts).
+    payload: u64,
+    /// Plane bytes `HavePlane` references avoided shipping.
+    dedup: u64,
+    /// The server reported an evicted/unknown plane and the exchange
+    /// recovered by resending full `PutPlane`s — the caller must reset
+    /// its mirror to exactly the resent planes.
+    retried: bool,
+}
+
+type ExchangeResult = Result<Exchanged>;
+
+/// The per-slot plane frames one exchange needs: the first-attempt pair
+/// (Put or Have per operand, as the mirror predicted) and the full-Put
+/// pair used if the server evicted a plane the mirror thought resident.
+struct PlaneShipment {
+    frame_a: Arc<Vec<u8>>,
+    frame_b: Arc<Vec<u8>>,
+    put_a: Arc<Vec<u8>>,
+    put_b: Arc<Vec<u8>>,
+    /// Plane bytes the first attempt ships.
+    payload: u64,
+    /// Plane bytes the first attempt avoids via `HavePlane`.
+    dedup: u64,
+    /// Plane bytes a full resend ships (fallback attempt).
+    full_payload: u64,
+}
 
 /// Executes a [`ShardPlan`]'s ranges on remote `diamond shard-serve`
 /// daemons over TCP. One persistent connection per shard slot (slot `i`
@@ -424,7 +493,18 @@ pub struct TcpShardExecutor {
     /// Response deadline per multiply (default
     /// [`DEFAULT_WORKER_TIMEOUT`], matching the process backend).
     pub timeout: Duration,
+    /// The plane-cache capacity this client assumes each server
+    /// connection holds (default [`DEFAULT_PLANE_CACHE_CAP`]). If the
+    /// server was launched with a *smaller* `--plane-cache-cap` the
+    /// mirror mis-predicts, the server reports the unknown plane, and
+    /// the exchange self-heals by resending — correctness never depends
+    /// on the caps agreeing.
+    pub plane_cache_cap: usize,
     conns: Vec<Option<TcpStream>>,
+    /// Per-slot mirror of the server connection's plane store — decides
+    /// Put vs Have without a round-trip. Index-aligned with `conns`
+    /// (each connection has its own server-side store).
+    mirrors: Vec<PlaneMirror>,
     io: Vec<EndpointIo>,
 }
 
@@ -446,7 +526,9 @@ impl TcpShardExecutor {
             endpoints,
             connect_timeout: DEFAULT_CONNECT_TIMEOUT,
             timeout: DEFAULT_WORKER_TIMEOUT,
+            plane_cache_cap: DEFAULT_PLANE_CACHE_CAP,
             conns: Vec::new(),
+            mirrors: Vec::new(),
             io,
         })
     }
@@ -526,6 +608,10 @@ impl TcpShardExecutor {
         if self.conns.len() < n_ranges {
             self.conns.resize_with(n_ranges, || None);
         }
+        let cap = self.plane_cache_cap;
+        if self.mirrors.len() < n_ranges {
+            self.mirrors.resize_with(n_ranges, || PlaneMirror::new(cap));
+        }
         let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
             (0..n_ranges).map(|_| None).collect();
 
@@ -537,7 +623,12 @@ impl TcpShardExecutor {
                 slots[i] = Some((Vec::new(), Vec::new()));
             } else if self.conns[i].is_none() {
                 match self.connect(i) {
-                    Ok(s) => self.conns[i] = Some(s),
+                    Ok(s) => {
+                        // A fresh connection means a fresh (empty)
+                        // server-side plane store.
+                        self.conns[i] = Some(s);
+                        self.mirrors[i].clear();
+                    }
                     Err(e) => {
                         self.poison();
                         return Err(e);
@@ -546,9 +637,21 @@ impl TcpShardExecutor {
             }
         }
 
-        // Operands are identical for every shard: encode once, stream
-        // the shared buffer after each per-shard header.
-        let operands = Arc::new(encode_operands(a, b));
+        // Content-addressed operands: encode each plane's Put frame
+        // once and share it across shards; per slot the mirror decides
+        // whether the plane travels at all or as a 20-byte Have.
+        let fa = plane_fingerprint(a);
+        let fb = plane_fingerprint(b);
+        let put_a = Arc::new(encode_plane_put(fa, a));
+        let put_b = if fb == fa {
+            Arc::clone(&put_a)
+        } else {
+            Arc::new(encode_plane_put(fb, b))
+        };
+        let have_a = Arc::new(encode_plane_have(fa, a.dim()));
+        let have_b = Arc::new(encode_plane_have(fb, b.dim()));
+        let (a_bytes, b_bytes) = (plane_wire_bytes(a), plane_wire_bytes(b));
+
         let (tx, rx) = mpsc::channel::<(usize, ExchangeResult)>();
         let mut cancel: Vec<(usize, TcpStream)> = Vec::new();
         let mut inflight = 0usize;
@@ -556,6 +659,30 @@ impl TcpShardExecutor {
             if r.task_lo == r.task_hi {
                 continue;
             }
+            // The mirror replays the server store's insert semantics in
+            // order: a is noted before b, exactly as the server will
+            // absorb the frames.
+            let a_resident = self.mirrors[i].note(fa);
+            let b_resident = self.mirrors[i].note(fb);
+            let (frame_a, pay_a, ded_a) = if a_resident {
+                (Arc::clone(&have_a), 0, a_bytes)
+            } else {
+                (Arc::clone(&put_a), a_bytes, 0)
+            };
+            let (frame_b, pay_b, ded_b) = if b_resident {
+                (Arc::clone(&have_b), 0, b_bytes)
+            } else {
+                (Arc::clone(&put_b), b_bytes, 0)
+            };
+            let ship = PlaneShipment {
+                frame_a,
+                frame_b,
+                put_a: Arc::clone(&put_a),
+                put_b: Arc::clone(&put_b),
+                payload: pay_a + pay_b,
+                dedup: ded_a + ded_b,
+                full_payload: a_bytes + b_bytes,
+            };
             let stream = self.conns[i].as_ref().expect("connected above");
             let (mut job_stream, cancel_stream) = match (stream.try_clone(), stream.try_clone())
             {
@@ -566,11 +693,10 @@ impl TcpShardExecutor {
                         .context(format!("cloning shard {i}'s connection handle")));
                 }
             };
-            let header = encode_job_header(a.dim(), tile, r.task_lo, r.task_hi);
-            let payload = Arc::clone(&operands);
+            let job = encode_job(a.dim(), tile, r.task_lo, r.task_hi, fa, fb);
             let txc = tx.clone();
             std::thread::spawn(move || {
-                let _ = txc.send((i, exchange(&mut job_stream, &header, &payload)));
+                let _ = txc.send((i, exchange(&mut job_stream, &job, &ship)));
             });
             cancel.push((i, cancel_stream));
             inflight += 1;
@@ -583,27 +709,36 @@ impl TcpShardExecutor {
         while done < inflight && failure.is_none() {
             let remaining = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(remaining) {
-                Ok((i, Ok((re, im, mults, sent, received)))) => {
+                Ok((i, Ok(x))) => {
                     let r = &sp.ranges[i];
-                    if re.len() != r.elems {
+                    if x.re.len() != r.elems {
                         failure = Some(anyhow!(
                             "shard {i} on {} returned {} elements, parent planned {} — plans diverged",
                             self.endpoint_of(i),
-                            re.len(),
+                            x.re.len(),
                             r.elems
                         ));
-                    } else if mults as usize != r.mults {
+                    } else if x.mults as usize != r.mults {
                         failure = Some(anyhow!(
-                            "shard {i} on {} performed {mults} multiplies, parent planned {} — plans diverged",
+                            "shard {i} on {} performed {} multiplies, parent planned {} — plans diverged",
                             self.endpoint_of(i),
+                            x.mults,
                             r.mults
                         ));
                     } else {
+                        if x.retried {
+                            // The server's store was reset by the
+                            // recovery resend: it now holds exactly
+                            // these two planes.
+                            self.mirrors[i].reset_to(&[fa, fb]);
+                        }
                         let rec = &mut self.io[i % self.endpoints.len()];
                         rec.round_trips += 1;
-                        rec.bytes_sent += sent;
-                        rec.bytes_received += received;
-                        slots[i] = Some((re, im));
+                        rec.bytes_sent += x.sent;
+                        rec.bytes_received += x.received;
+                        rec.payload_bytes += x.payload;
+                        rec.dedup_bytes_avoided += x.dedup;
+                        slots[i] = Some((x.re, x.im));
                         done += 1;
                     }
                 }
@@ -635,6 +770,136 @@ impl TcpShardExecutor {
             .collect())
     }
 
+    /// Run a whole Taylor chain as **one** remote `ChainJob` on shard
+    /// slot 0's connection: `H` travels once (as a `PutPlane` on the
+    /// first chain, a 20-byte `HavePlane` on repeats), the daemon runs
+    /// the [`ChainDriver`](crate::taylor::ChainDriver) loop body, and
+    /// the final term + accumulated sum + per-step stats come back in a
+    /// single response. The dedup counter credits the entire
+    /// resend-every-iteration traffic a per-iteration v2-style protocol
+    /// would have shipped (term_{k−1} and `H` per step), which is what
+    /// the CI `chain-smoke` ratio gate measures.
+    pub fn execute_chain(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+    ) -> Result<(PackedDiagMatrix, PackedDiagMatrix, Vec<TaylorStep>)> {
+        let n = hp.dim();
+        if self.conns.is_empty() {
+            self.conns.push(None);
+        }
+        let cap = self.plane_cache_cap;
+        if self.mirrors.is_empty() {
+            self.mirrors.push(PlaneMirror::new(cap));
+        }
+        if self.conns[0].is_none() {
+            match self.connect(0) {
+                Ok(s) => {
+                    self.conns[0] = Some(s);
+                    self.mirrors[0].clear();
+                }
+                Err(e) => {
+                    self.poison();
+                    return Err(e);
+                }
+            }
+        }
+        let fh = plane_fingerprint(hp);
+        let put_h = encode_plane_put(fh, hp);
+        let have_h = encode_plane_have(fh, n);
+        let h_bytes = plane_wire_bytes(hp);
+        let resident = self.mirrors[0].note(fh);
+        let job = encode_chain_job(n, t, iters, fh);
+
+        // The chain runs `iters` multiplies before answering: scale the
+        // read deadline with the work instead of treating a long chain
+        // as a dead endpoint.
+        let chain_timeout = self
+            .timeout
+            .saturating_mul(iters.clamp(1, u32::MAX as usize) as u32);
+        let stream = self.conns[0].as_mut().expect("connected above");
+        let _ = stream.set_read_timeout(Some(chain_timeout));
+
+        // (result, plane bytes shipped, wire bytes sent/received, retried)
+        type ChainRun = (
+            (PackedDiagMatrix, PackedDiagMatrix, Vec<TaylorStep>),
+            u64,
+            u64,
+            u64,
+            bool,
+        );
+        let run = (|| -> Result<ChainRun> {
+            let first: &Vec<u8> = if resident { &have_h } else { &put_h };
+            let first_shipped = if resident { 0 } else { h_bytes };
+            write_frame(stream, &[first]).context("sending chain operand plane")?;
+            write_frame(stream, &[&job]).context("sending chain job")?;
+            let mut sent = (16 + first.len() + job.len()) as u64;
+            let frame = read_frame(stream)
+                .context("reading chain response")?
+                .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
+            let mut received = (8 + frame.len()) as u64;
+            match decode_chain_resp(&frame) {
+                Ok(out) => Ok((out, first_shipped, sent, received, false)),
+                Err(e) if format!("{e:#}").contains("unknown operand plane") => {
+                    // The server evicted H (or our mirror over-assumed
+                    // its cap): resend in full, once.
+                    write_frame(stream, &[&put_h]).context("resending chain operand plane")?;
+                    write_frame(stream, &[&job]).context("resending chain job")?;
+                    sent += (16 + put_h.len() + job.len()) as u64;
+                    let frame = read_frame(stream)
+                        .context("reading chain response after resend")?
+                        .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
+                    received += (8 + frame.len()) as u64;
+                    let out = decode_chain_resp(&frame)?;
+                    Ok((out, first_shipped + h_bytes, sent, received, true))
+                }
+                Err(e) => Err(e),
+            }
+        })();
+        // Restore the per-multiply deadline for subsequent jobs on this
+        // connection.
+        if let Some(s) = self.conns[0].as_mut() {
+            let _ = s.set_read_timeout(Some(self.timeout));
+        }
+        let ((term, sum, steps), shipped, sent, received, retried) = match run {
+            Ok(v) => v,
+            Err(e) => {
+                self.poison();
+                return Err(e.context(format!("chain job on {}", self.endpoint_of(0))));
+            }
+        };
+        if steps.len() != iters {
+            self.poison();
+            bail!(
+                "chain job on {} returned {} steps, expected {iters}",
+                self.endpoint_of(0),
+                steps.len()
+            );
+        }
+        if retried {
+            // The recovery resend reset the server's store to exactly
+            // {H}.
+            self.mirrors[0].reset_to(&[fh]);
+        }
+        // What a resend-every-iteration protocol would have shipped:
+        // each step k multiplies term_{k−1} (identity for k=1) against
+        // A, whose plane has exactly H's shape.
+        let mut resend_model = 0u64;
+        let mut prev = matrix_wire_bytes(1, n as u64); // identity term_0
+        for s in &steps {
+            resend_model += prev + h_bytes;
+            prev = matrix_wire_bytes(s.term_nnzd as u64, s.term_elements as u64);
+        }
+        let rec = &mut self.io[0];
+        rec.round_trips += 1;
+        rec.bytes_sent += sent;
+        rec.bytes_received += received;
+        rec.payload_bytes += shipped;
+        rec.dedup_bytes_avoided += resend_model.saturating_sub(shipped);
+        Ok((term, sum, steps))
+    }
+
     /// The endpoint serving shard slot `i`.
     fn endpoint_of(&self, slot: usize) -> &str {
         &self.endpoints[slot % self.endpoints.len()]
@@ -642,35 +907,82 @@ impl TcpShardExecutor {
 
     /// Drop every pooled connection (after a failure): the next multiply
     /// reconnects from scratch instead of reusing a stream whose framing
-    /// state is unknown.
+    /// state is unknown. The plane mirrors are cleared with them — a new
+    /// connection starts with an empty server-side store.
     fn poison(&mut self) {
         for c in self.conns.iter_mut() {
             if let Some(c) = c.take() {
                 let _ = c.shutdown(Shutdown::Both);
             }
         }
+        for m in self.mirrors.iter_mut() {
+            m.clear();
+        }
     }
 }
 
-/// One job round-trip on an exchange thread: framed write of
-/// `header | operands`, framed read of the response, decode. Returns
-/// the slice plus the bytes moved in each direction.
-fn exchange(stream: &mut TcpStream, header: &[u8], operands: &[u8]) -> ExchangeResult {
-    write_frame(stream, &[header, operands]).context("sending shard job")?;
+/// One job round-trip on an exchange thread: framed writes of the two
+/// plane frames (Put or Have, as the caller's mirror predicted) and the
+/// fingerprint-referencing job, framed read of the response, decode.
+/// If the server reports an unknown (evicted) plane, the exchange
+/// self-heals once by resending both planes as full `PutPlane`s and
+/// replaying the job — so a client/server cache-cap mismatch degrades
+/// to extra bytes, never to a failed multiply. Returns the slice plus
+/// the bytes moved in each direction and the payload/dedup split.
+fn exchange(stream: &mut TcpStream, job: &[u8], ship: &PlaneShipment) -> ExchangeResult {
+    write_frame(stream, &[&ship.frame_a]).context("sending operand plane a")?;
+    write_frame(stream, &[&ship.frame_b]).context("sending operand plane b")?;
+    write_frame(stream, &[job]).context("sending shard job")?;
+    let mut sent = (24 + ship.frame_a.len() + ship.frame_b.len() + job.len()) as u64;
     let frame = read_frame(stream)
         .context("reading shard response")?
         .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
-    let (re, im, mults) = decode_resp(&frame)?;
-    let sent = 8 + header.len() + operands.len();
-    let received = 8 + frame.len();
-    Ok((re, im, mults, sent as u64, received as u64))
+    let mut received = (8 + frame.len()) as u64;
+    match decode_resp(&frame) {
+        Ok((re, im, mults)) => Ok(Exchanged {
+            re,
+            im,
+            mults,
+            sent,
+            received,
+            payload: ship.payload,
+            dedup: ship.dedup,
+            retried: false,
+        }),
+        Err(e) if format!("{e:#}").contains("unknown operand plane") => {
+            write_frame(stream, &[&ship.put_a]).context("resending operand plane a")?;
+            write_frame(stream, &[&ship.put_b]).context("resending operand plane b")?;
+            write_frame(stream, &[job]).context("resending shard job")?;
+            sent += (24 + ship.put_a.len() + ship.put_b.len() + job.len()) as u64;
+            let frame = read_frame(stream)
+                .context("reading shard response after resend")?
+                .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
+            received += (8 + frame.len()) as u64;
+            let (re, im, mults) = decode_resp(&frame)?;
+            Ok(Exchanged {
+                re,
+                im,
+                mults,
+                sent,
+                received,
+                // The first attempt's Haves turned out not to cover
+                // reality; everything actually shipped, nothing was
+                // avoided.
+                payload: ship.payload + ship.full_payload,
+                dedup: 0,
+                retried: true,
+            })
+        }
+        Err(e) => Err(e),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::shard::encode_job;
     use crate::format::DiagMatrix;
+    use crate::linalg::plan_diag_mul;
+    use crate::linalg::engine::tile_plan;
     use crate::num::Complex;
 
     #[test]
@@ -709,6 +1021,17 @@ mod tests {
         huge.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
         let err = format!("{:#}", read_frame(&mut &huge[..]).unwrap_err());
         assert!(err.contains("corrupt length prefix"), "{err}");
+        // The explicit bound rejects frames the default would accept —
+        // the `--max-frame-bytes` hardening path.
+        let err = format!(
+            "{:#}",
+            read_frame_limited(&mut &buf[..], 10).unwrap_err()
+        );
+        assert!(err.contains("limit 10"), "{err}");
+        assert_eq!(
+            read_frame_limited(&mut &buf[..], 11).unwrap().unwrap(),
+            b"hello world"
+        );
     }
 
     fn band(n: usize, half_width: i64) -> PackedDiagMatrix {
@@ -725,31 +1048,98 @@ mod tests {
         m.freeze()
     }
 
-    #[test]
-    fn served_connection_answers_jobs_with_plan_reuse() {
-        // Full client-side handshake + two framed jobs against an
-        // in-process server, over a real loopback socket.
-        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+    /// Dial + mutual handshake against an in-process server.
+    fn dial(server: &ShardServer) -> TcpStream {
         let mut stream = TcpStream::connect(server.addr()).unwrap();
         stream.write_all(&encode_hello()).unwrap();
         let mut hello = [0u8; HELLO_LEN];
         stream.read_exact(&mut hello).unwrap();
         check_hello(&hello).unwrap();
+        stream
+    }
+
+    #[test]
+    fn served_connection_answers_jobs_with_plan_reuse() {
+        // Full client-side handshake + two framed jobs against an
+        // in-process server, over a real loopback socket. The first
+        // round ships the planes; the second references them with
+        // 20-byte Haves and still gets the identical answer.
+        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let mut stream = dial(&server);
 
         let a = band(48, 2);
         let b = band(48, 1);
+        let (fa, fb) = (plane_fingerprint(&a), plane_fingerprint(&b));
         let plan = plan_diag_mul(&a, &b);
         let tiles = tile_plan(&plan, 1 << 13);
-        let job = encode_job(&a, &b, 1 << 13, 0, tiles.tasks.len());
-        for _ in 0..2 {
+        let job = encode_job(48, 1 << 13, 0, tiles.tasks.len(), fa, fb);
+        for round in 0..2 {
+            if round == 0 {
+                write_frame(&mut stream, &[&encode_plane_put(fa, &a)]).unwrap();
+                write_frame(&mut stream, &[&encode_plane_put(fb, &b)]).unwrap();
+            } else {
+                write_frame(&mut stream, &[&encode_plane_have(fa, 48)]).unwrap();
+                write_frame(&mut stream, &[&encode_plane_have(fb, 48)]).unwrap();
+            }
             write_frame(&mut stream, &[&job]).unwrap();
             let resp = read_frame(&mut stream).unwrap().expect("response frame");
             let (re, im, mults) = decode_resp(&resp).unwrap();
             let total: usize = tiles.tasks.iter().map(|t| t.hi - t.lo).sum();
-            assert_eq!(re.len(), total);
+            assert_eq!(re.len(), total, "round {round}");
             assert_eq!(im.len(), total);
             assert_eq!(mults as usize, plan.mults);
         }
+    }
+
+    #[test]
+    fn server_reports_evicted_plane_and_recovers_on_resend() {
+        // A server with a tiny plane cache: a third Put wholesale-evicts
+        // the first two, a stale Have + job then fails with the plane
+        // named, and a full resend on the SAME connection recovers.
+        let server = ShardServer::spawn_with(
+            "127.0.0.1:0",
+            ServeConfig {
+                plane_cache_cap: 2,
+                ..ServeConfig::default()
+            },
+        )
+        .expect("loopback bind");
+        let mut stream = dial(&server);
+
+        let a = band(32, 1);
+        let b = band(32, 2);
+        let c = band(32, 3);
+        let (fa, fb, fc) = (
+            plane_fingerprint(&a),
+            plane_fingerprint(&b),
+            plane_fingerprint(&c),
+        );
+        let plan = plan_diag_mul(&a, &b);
+        let tiles = tile_plan(&plan, 1 << 13);
+        let job = encode_job(32, 1 << 13, 0, tiles.tasks.len(), fa, fb);
+        // Warm the store with a and b; the job answers.
+        write_frame(&mut stream, &[&encode_plane_put(fa, &a)]).unwrap();
+        write_frame(&mut stream, &[&encode_plane_put(fb, &b)]).unwrap();
+        write_frame(&mut stream, &[&job]).unwrap();
+        let resp = read_frame(&mut stream).unwrap().expect("response frame");
+        let (want_re, want_im, _) = decode_resp(&resp).unwrap();
+        // A third plane over cap 2 resets the store.
+        write_frame(&mut stream, &[&encode_plane_put(fc, &c)]).unwrap();
+        // Stale Haves: the job must fail naming the missing plane.
+        write_frame(&mut stream, &[&encode_plane_have(fa, 32)]).unwrap();
+        write_frame(&mut stream, &[&encode_plane_have(fb, 32)]).unwrap();
+        write_frame(&mut stream, &[&job]).unwrap();
+        let resp = read_frame(&mut stream).unwrap().expect("error frame");
+        let err = format!("{:#}", decode_resp(&resp).unwrap_err());
+        assert!(err.contains("unknown operand plane"), "{err}");
+        // Full resend on the same connection: recovered, same answer.
+        write_frame(&mut stream, &[&encode_plane_put(fa, &a)]).unwrap();
+        write_frame(&mut stream, &[&encode_plane_put(fb, &b)]).unwrap();
+        write_frame(&mut stream, &[&job]).unwrap();
+        let resp = read_frame(&mut stream).unwrap().expect("recovered frame");
+        let (re, im, _) = decode_resp(&resp).unwrap();
+        assert!(re.iter().zip(&want_re).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(im.iter().zip(&want_im).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -55,6 +55,15 @@ pub struct EngineStats {
     /// `diamond shard-serve` endpoint. `Coordinator::evolve` merges the
     /// per-call records by endpoint across the whole Taylor chain.
     pub shard_endpoints: Vec<crate::coordinator::transport::EndpointIo>,
+    /// Operand-plane bytes actually shipped to remote shard workers
+    /// (`PutPlane` payloads, summed over endpoints; 0 in-process).
+    pub shard_payload_bytes: u64,
+    /// Operand-plane bytes the content-addressed `HavePlane` dedup (and
+    /// server-side chain jobs) avoided shipping.
+    /// `shard_payload_bytes + shard_dedup_bytes_avoided` is the
+    /// resend-every-iteration traffic — the ratio is the wire win the
+    /// CI `chain-smoke` job gates.
+    pub shard_dedup_bytes_avoided: u64,
 }
 
 /// Row-aligned f32 planes of a chunk of diagonals.

@@ -8,7 +8,8 @@
 
 pub mod trotter;
 
-use crate::format::DiagMatrix;
+use crate::coordinator::shard::ShardCoordinator;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
 use crate::num::{Complex, I, ONE};
 
 /// Default evolution time: the paper pairs each Hamiltonian with a short
@@ -72,9 +73,104 @@ pub struct TaylorStep {
 #[derive(Clone, Debug)]
 pub struct TaylorResult {
     pub op: DiagMatrix,
+    /// The final power term `(−iHt)^K / K!` (packed). Remote chain jobs
+    /// return it over the wire so the client can verify bit-identity
+    /// against a local chain without re-running one.
+    pub term: PackedDiagMatrix,
     pub steps: Vec<TaylorStep>,
     pub kernel: crate::linalg::KernelStats,
     pub shard: crate::coordinator::shard::ShardStats,
+}
+
+/// The Taylor loop body, factored out of [`expm_diag_sharded`] so every
+/// execution site — the local chain, the per-iteration sharded chain,
+/// and the server-side `ChainJob` in
+/// [`JobRouter`](crate::coordinator::shard::JobRouter) — runs the *same*
+/// statements in the same order. Bitwise identity between local and
+/// remote chains then holds by construction rather than by parallel
+/// maintenance of two loop bodies.
+pub struct ChainDriver {
+    /// `A = −iHt`, frozen once for the whole chain.
+    a: PackedDiagMatrix,
+    term: PackedDiagMatrix,
+    sum: DiagMatrix,
+    steps: Vec<TaylorStep>,
+    k: usize,
+}
+
+/// What a completed chain produced: the operator sum, the final power
+/// term, and the per-iteration trace.
+pub struct ChainOutcome {
+    pub op: DiagMatrix,
+    pub term: PackedDiagMatrix,
+    pub steps: Vec<TaylorStep>,
+}
+
+impl ChainDriver {
+    /// Start a chain for `exp(−iHt)` from a builder-form Hamiltonian.
+    pub fn new(h: &DiagMatrix, t: f64) -> Self {
+        Self::start(h.scaled(-I * t).freeze(), h.dim())
+    }
+
+    /// Start a chain from an already-frozen `H` — the wire face used by
+    /// the shard server, which receives `H` as a packed plane. Bit
+    /// identical to [`ChainDriver::new`]: `freeze` keeps every stored
+    /// diagonal (ascending, values untouched) and
+    /// [`PackedDiagMatrix::scale`] applies the same complex-multiply
+    /// formula as [`DiagMatrix::scaled`], so scaling before or after
+    /// freezing yields the same bits in the same slots.
+    pub fn from_packed(hp: &PackedDiagMatrix, t: f64) -> Self {
+        let mut a = hp.clone();
+        a.scale(-I * t);
+        Self::start(a, hp.dim())
+    }
+
+    fn start(a: PackedDiagMatrix, n: usize) -> Self {
+        ChainDriver {
+            a,
+            term: PackedDiagMatrix::identity(n),
+            sum: DiagMatrix::identity(n),
+            steps: Vec::new(),
+            k: 0,
+        }
+    }
+
+    /// One Taylor iteration: `term_k = term_{k−1} · A / k`, accumulated
+    /// into the sum, with the per-step trace recorded.
+    pub fn step(&mut self, sc: &mut ShardCoordinator) -> anyhow::Result<()> {
+        self.k += 1;
+        let k = self.k;
+        let (mut next, stats) = sc.multiply(&self.term, &self.a)?;
+        next.scale(ONE / k as f64);
+        next.prune(crate::format::diag::ZERO_TOL);
+        self.term = next;
+        self.sum.add_assign_scaled_packed(&self.term, ONE);
+        self.steps.push(TaylorStep {
+            k,
+            term_nnzd: self.term.nnzd(),
+            sum_nnzd: self.sum.nnzd(),
+            term_elements: self.term.stored_elements(),
+            sum_storage_saving: self.sum.storage_saving(),
+            mults: stats.mults,
+        });
+        Ok(())
+    }
+
+    /// Run `iters` steps to completion.
+    pub fn run(
+        mut self,
+        iters: usize,
+        sc: &mut ShardCoordinator,
+    ) -> anyhow::Result<ChainOutcome> {
+        for _ in 0..iters {
+            self.step(sc)?;
+        }
+        Ok(ChainOutcome {
+            op: self.sum,
+            term: self.term,
+            steps: self.steps,
+        })
+    }
 }
 
 /// Compute `exp(−iHt)` to `iters` Taylor terms using diagonal SpMSpM.
@@ -128,34 +224,13 @@ pub fn expm_diag_sharded(
     h: &DiagMatrix,
     t: f64,
     iters: usize,
-    sc: &mut crate::coordinator::shard::ShardCoordinator,
+    sc: &mut ShardCoordinator,
 ) -> anyhow::Result<TaylorResult> {
-    let n = h.dim();
-    // A = −iHt, frozen once for the whole chain.
-    let a = h.scaled(-I * t).freeze();
-    let mut sum = DiagMatrix::identity(n);
-    let mut term = crate::format::PackedDiagMatrix::identity(n);
-    let mut steps = Vec::with_capacity(iters);
-
-    for k in 1..=iters {
-        // term_k = term_{k-1} · A / k
-        let (mut next, stats) = sc.multiply(&term, &a)?;
-        next.scale(ONE / k as f64);
-        next.prune(crate::format::diag::ZERO_TOL);
-        term = next;
-        sum.add_assign_scaled_packed(&term, ONE);
-        steps.push(TaylorStep {
-            k,
-            term_nnzd: term.nnzd(),
-            sum_nnzd: sum.nnzd(),
-            term_elements: term.stored_elements(),
-            sum_storage_saving: sum.storage_saving(),
-            mults: stats.mults,
-        });
-    }
+    let out = ChainDriver::new(h, t).run(iters, sc)?;
     Ok(TaylorResult {
-        op: sum,
-        steps,
+        op: out.op,
+        term: out.term,
+        steps: out.steps,
         kernel: *sc.kernel_stats(),
         shard: *sc.stats(),
     })

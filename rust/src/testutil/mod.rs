@@ -91,6 +91,47 @@ pub fn random_exp_offset_matrix(rng: &mut XorShift64, n: usize, max_diags: usize
     m
 }
 
+/// Random band matrix: up to `max_diags` uniformly-placed diagonals
+/// anywhere in `(-n, n)` (colliding offsets overwrite). The generic
+/// "some sparse band structure" workload.
+pub fn random_band_matrix(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    for _ in 0..rng.gen_range(1, max_diags + 1) {
+        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+        let len = DiagMatrix::diag_len(n, d);
+        let vals: Vec<Complex> = (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect();
+        m.set_diag(d, vals);
+    }
+    m
+}
+
+/// Mixed band-length operand: the full main diagonal plus a random
+/// subset of extreme corner offsets (many length-1..16 diagonals next
+/// to one of length n) — the shard balancer's worst case.
+pub fn random_mixed_band_matrix(rng: &mut XorShift64, n: usize) -> DiagMatrix {
+    let mut m = DiagMatrix::zeros(n);
+    let vals = |rng: &mut XorShift64, len: usize| -> Vec<Complex> {
+        (0..len)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect()
+    };
+    let v = vals(rng, n);
+    m.set_diag(0, v);
+    for k in 1..=16i64.min(n as i64 - 1) {
+        for sign in [1i64, -1] {
+            if rng.gen_bool(0.6) {
+                let d = sign * (n as i64 - k);
+                let len = DiagMatrix::diag_len(n, d);
+                let v = vals(rng, len);
+                m.set_diag(d, v);
+            }
+        }
+    }
+    m
+}
+
 /// Run `cases` seeded property cases; on failure report the seed so the
 /// case can be replayed. `f` receives a fresh PRNG per case.
 pub fn prop_check<F: Fn(&mut XorShift64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
@@ -143,6 +184,23 @@ mod tests {
     #[should_panic(expected = "property `always-fails`")]
     fn prop_check_reports_seed() {
         prop_check("always-fails", 1, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn band_generators_structure() {
+        let mut rng = XorShift64::new(13);
+        for _ in 0..25 {
+            let m = random_band_matrix(&mut rng, 64, 5);
+            assert!(m.nnzd() >= 1 && m.nnzd() <= 5);
+            for d in m.offsets() {
+                assert!(d.unsigned_abs() < 64, "offset {d}");
+            }
+            let m = random_mixed_band_matrix(&mut rng, 64);
+            assert!(m.offsets().contains(&0), "main diagonal always present");
+            for d in m.offsets() {
+                assert!(*d == 0 || d.unsigned_abs() >= 64 - 16, "offset {d}");
+            }
+        }
     }
 
     #[test]

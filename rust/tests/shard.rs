@@ -10,7 +10,10 @@ use diamond::format::DiagMatrix;
 use diamond::linalg::engine::{shard_plan, tile_plan};
 use diamond::linalg::{packed_diag_mul_counted, plan_diag_mul, EngineConfig, TileMode};
 use diamond::num::Complex;
-use diamond::testutil::{prop_check, random_exp_offset_matrix, XorShift64};
+use diamond::testutil::{
+    prop_check, random_band_matrix as random_band, random_exp_offset_matrix,
+    random_mixed_band_matrix as random_mixed_band, XorShift64,
+};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -18,44 +21,6 @@ use std::time::{Duration, Instant};
 /// tests), re-entered as `diamond shard-worker` by the process backend.
 fn worker_exe() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_diamond"))
-}
-
-fn random_band(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
-    let mut m = DiagMatrix::zeros(n);
-    for _ in 0..rng.gen_range(1, max_diags + 1) {
-        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
-        let len = DiagMatrix::diag_len(n, d);
-        let vals: Vec<Complex> = (0..len)
-            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
-            .collect();
-        m.set_diag(d, vals);
-    }
-    m
-}
-
-/// Mixed band-length operand: the full main diagonal plus a random
-/// subset of extreme corner offsets (many length-1..16 diagonals next
-/// to one of length n) — the shard balancer's worst case.
-fn random_mixed_band(rng: &mut XorShift64, n: usize) -> DiagMatrix {
-    let mut m = DiagMatrix::zeros(n);
-    let vals = |rng: &mut XorShift64, len: usize| -> Vec<Complex> {
-        (0..len)
-            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
-            .collect()
-    };
-    let v = vals(rng, n);
-    m.set_diag(0, v);
-    for k in 1..=16i64.min(n as i64 - 1) {
-        for sign in [1i64, -1] {
-            if rng.gen_bool(0.6) {
-                let d = sign * (n as i64 - k);
-                let len = DiagMatrix::diag_len(n, d);
-                let v = vals(rng, len);
-                m.set_diag(d, v);
-            }
-        }
-    }
-    m
 }
 
 #[test]
@@ -241,6 +206,49 @@ fn process_backend_reuses_shard_plans_across_a_chain() {
     assert_eq!(sc.stats().shard_plans_built, 1);
     assert_eq!(sc.stats().shard_plan_reuses, 1);
     assert_eq!(sc.kernel_stats().plan_cache_hits, 1);
+}
+
+#[test]
+fn chain_final_term_is_bitwise_identical_across_local_inproc_process() {
+    // Chain bit-identity, satellite of the server-side-chain tentpole:
+    // the final Taylor term (and the summed operator) out of
+    // `run_chain` must match local `expm_diag` to the bit on every
+    // backend, on the mixed band-length workloads the balancer finds
+    // hardest. The TCP per-iteration and ChainJob variants of this
+    // property live in tests/shard_tcp.rs.
+    prop_check("chain term bitwise across backends", 4, |rng| {
+        let n = rng.gen_range(32, 160);
+        let h = if rng.gen_bool(0.5) {
+            random_mixed_band(rng, n)
+        } else {
+            random_band(rng, n, 5)
+        };
+        let t = 0.1 + rng.gen_f64() * 0.4;
+        let iters = rng.gen_range(3, 7);
+        let local = diamond::taylor::expm_diag(&h, t, iters);
+        let mut inproc =
+            ShardCoordinator::new(EngineConfig::default(), 3, ShardBackend::InProc);
+        let r = inproc.run_chain(&h, t, iters).expect("inproc chain");
+        if !r.term.bit_eq(&local.term) {
+            return Err(format!("n={n}: inproc final term differs bitwise"));
+        }
+        if r.op != local.op {
+            return Err(format!("n={n}: inproc summed operator differs"));
+        }
+        let mut proc = ShardCoordinator::with_executor(
+            EngineConfig::default(),
+            2,
+            ProcessShardExecutor::new(worker_exe()),
+        );
+        let r = proc.run_chain(&h, t, iters).expect("process chain");
+        if !r.term.bit_eq(&local.term) {
+            return Err(format!("n={n}: process final term differs bitwise"));
+        }
+        if r.op != local.op {
+            return Err(format!("n={n}: process summed operator differs"));
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -12,47 +12,13 @@ use diamond::coordinator::transport::{
 use diamond::format::DiagMatrix;
 use diamond::linalg::{packed_diag_mul_counted, EngineConfig, TileMode};
 use diamond::num::Complex;
-use diamond::testutil::{prop_check, random_exp_offset_matrix, XorShift64};
+use diamond::testutil::{
+    prop_check, random_band_matrix as random_band, random_exp_offset_matrix,
+    random_mixed_band_matrix as random_mixed_band, XorShift64,
+};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
-
-fn random_band(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
-    let mut m = DiagMatrix::zeros(n);
-    for _ in 0..rng.gen_range(1, max_diags + 1) {
-        let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
-        let len = DiagMatrix::diag_len(n, d);
-        let vals: Vec<Complex> = (0..len)
-            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
-            .collect();
-        m.set_diag(d, vals);
-    }
-    m
-}
-
-/// Mixed band-length operand (the shard balancer's worst case): the
-/// full main diagonal plus a random fan of short corner diagonals.
-fn random_mixed_band(rng: &mut XorShift64, n: usize) -> DiagMatrix {
-    let mut m = DiagMatrix::zeros(n);
-    let vals = |rng: &mut XorShift64, len: usize| -> Vec<Complex> {
-        (0..len)
-            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
-            .collect()
-    };
-    let v = vals(rng, n);
-    m.set_diag(0, v);
-    for k in 1..=16i64.min(n as i64 - 1) {
-        for sign in [1i64, -1] {
-            if rng.gen_bool(0.6) {
-                let d = sign * (n as i64 - k);
-                let len = DiagMatrix::diag_len(n, d);
-                let v = vals(rng, len);
-                m.set_diag(d, v);
-            }
-        }
-    }
-    m
-}
 
 fn tcp_backend(servers: &[ShardServer]) -> ShardBackend {
     ShardBackend::Tcp {
@@ -146,7 +112,120 @@ fn tcp_taylor_chain_matches_unsharded_and_reuses_caches() {
             ep.connects, 1,
             "persistent connections must be reused across the chain: {ep:?}"
         );
+        // Content-addressed planes: the stationary operand `A` travels
+        // once per endpoint; every later iteration references it by
+        // fingerprint, so each endpoint must record dedup savings.
+        assert!(
+            ep.dedup_bytes_avoided > 0,
+            "stationary A was re-shipped instead of deduped: {ep:?}"
+        );
     }
+    assert!(sharded.shard.payload_bytes > 0);
+    assert!(sharded.shard.dedup_bytes_avoided > 0, "{:?}", sharded.shard);
+}
+
+#[test]
+fn tcp_chain_job_is_bitwise_identical_and_ships_h_once() {
+    // The server-side chain: one ChainJob carries (H, t, iters) to the
+    // daemon, which runs the shared ChainDriver loop and returns the
+    // final term + sum + per-step trace. Must equal the local chain to
+    // the bit, and a second chain on the same coordinator must not
+    // re-ship H (HavePlane reference instead of a PutPlane payload).
+    let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+    let mut h = DiagMatrix::zeros(48);
+    for d in -2i64..=2 {
+        let len = DiagMatrix::diag_len(48, d);
+        h.set_diag(d, vec![Complex::new(0.8, 0.1 * d as f64); len]);
+    }
+    let iters = 6;
+    let local = diamond::taylor::expm_diag(&h, 0.3, iters);
+    let mut sc = ShardCoordinator::new(
+        EngineConfig::default(),
+        1,
+        ShardBackend::Tcp {
+            endpoints: vec![server.endpoint()],
+        },
+    );
+    let r1 = sc.run_chain(&h, 0.3, iters).expect("remote chain");
+    assert!(
+        r1.term.bit_eq(&local.term),
+        "remote chain's final term differs bitwise from local expm_diag"
+    );
+    assert_eq!(r1.op, local.op, "summed operator differs");
+    assert_eq!(r1.steps.len(), iters);
+    for (rs, ls) in r1.steps.iter().zip(local.steps.iter()) {
+        assert_eq!(rs.k, ls.k);
+        assert_eq!(rs.term_nnzd, ls.term_nnzd, "k={}", rs.k);
+        assert_eq!(rs.sum_nnzd, ls.sum_nnzd, "k={}", rs.k);
+        assert_eq!(rs.mults, ls.mults, "k={}", rs.k);
+    }
+    assert_eq!(r1.shard.remote_chain_jobs, 1);
+    assert!(r1.shard.payload_bytes > 0, "H must ship once: {:?}", r1.shard);
+    assert!(
+        r1.shard.dedup_bytes_avoided > 0,
+        "server-side iterations must count as avoided resends: {:?}",
+        r1.shard
+    );
+
+    // Second chain, same H: the plane is resident server-side, so the
+    // cumulative payload must not grow — only the dedup counter does.
+    let r2 = sc.run_chain(&h, 0.3, iters).expect("second remote chain");
+    assert!(r2.term.bit_eq(&local.term));
+    assert_eq!(r2.shard.remote_chain_jobs, 2);
+    assert_eq!(
+        r2.shard.payload_bytes, r1.shard.payload_bytes,
+        "H was re-shipped on the second chain: {:?}",
+        r2.shard
+    );
+    assert!(r2.shard.dedup_bytes_avoided > r1.shard.dedup_bytes_avoided);
+    let io = sc.endpoint_io();
+    assert_eq!(io[0].connects, 1, "chain jobs must reuse the connection");
+    assert_eq!(io[0].round_trips, 2);
+}
+
+#[test]
+fn chain_term_bitwise_across_local_tcp_per_iter_and_chain_job() {
+    // Satellite (chain bit-identity) — the TCP half: on mixed
+    // band-length workloads, the final term out of (a) the local chain,
+    // (b) the per-iteration TCP-sharded chain, and (c) the server-side
+    // ChainJob agree to the bit.
+    let servers = [
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+    ];
+    prop_check("chain term bitwise: local == tcp per-iter == ChainJob", 3, |rng| {
+        let n = rng.gen_range(32, 128);
+        let h = if rng.gen_bool(0.5) {
+            random_mixed_band(rng, n)
+        } else {
+            random_band(rng, n, 5)
+        };
+        let t = 0.1 + rng.gen_f64() * 0.3;
+        let iters = rng.gen_range(3, 6);
+        let local = diamond::taylor::expm_diag(&h, t, iters);
+        let mut per_iter =
+            ShardCoordinator::new(EngineConfig::default(), 2, tcp_backend(&servers));
+        let r = diamond::taylor::expm_diag_sharded(&h, t, iters, &mut per_iter)
+            .map_err(|e| format!("per-iter tcp chain failed: {e:#}"))?;
+        if !r.term.bit_eq(&local.term) {
+            return Err(format!("n={n}: per-iter tcp term differs bitwise"));
+        }
+        if r.op != local.op {
+            return Err(format!("n={n}: per-iter tcp sum differs"));
+        }
+        let mut chain =
+            ShardCoordinator::new(EngineConfig::default(), 1, tcp_backend(&servers));
+        let r = chain
+            .run_chain(&h, t, iters)
+            .map_err(|e| format!("ChainJob failed: {e:#}"))?;
+        if !r.term.bit_eq(&local.term) {
+            return Err(format!("n={n}: ChainJob term differs bitwise"));
+        }
+        if r.op != local.op {
+            return Err(format!("n={n}: ChainJob sum differs"));
+        }
+        Ok(())
+    });
 }
 
 #[test]
@@ -204,61 +283,80 @@ fn unresponsive_endpoint_hits_the_response_deadline() {
 }
 
 #[test]
-fn version_skewed_server_is_rejected_by_the_client() {
-    // A "future" daemon whose hello advertises WIRE_VERSION+1: the
-    // coordinator must refuse it with an error naming both versions —
-    // never feed it a job it would mis-parse.
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap().to_string();
-    std::thread::spawn(move || {
-        for conn in listener.incoming() {
-            let Ok(mut c) = conn else { break };
-            let mut skewed = encode_hello();
-            skewed[4..].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
-            let _ = c.write_all(&skewed);
-            // Hold the socket so the client's rejection is about the
-            // version, not a dropped connection.
-            let mut sink = [0u8; 64];
-            let _ = c.read(&mut sink);
-        }
-    });
-    let mut sc = ShardCoordinator::new(
-        EngineConfig::default(),
-        2,
-        ShardBackend::Tcp {
-            endpoints: vec![addr],
-        },
-    );
-    let a = random_exp_offset_matrix(&mut XorShift64::new(17), 96, 4).freeze();
-    let err = sc.multiply(&a, &a).expect_err("skewed server must be rejected");
-    let msg = format!("{err:#}");
-    assert!(msg.contains("version mismatch"), "{msg}");
-    assert!(msg.contains(&format!("v{}", WIRE_VERSION + 1)), "{msg}");
-    assert!(msg.contains(&format!("v{WIRE_VERSION}")), "{msg}");
+fn version_skew_matrix_server_side_skew_is_rejected_by_the_client() {
+    // Every (client WIRE_VERSION, server WIRE_VERSION±1) pairing where
+    // the *daemon* is skewed: the coordinator must refuse the endpoint
+    // with an error naming both versions — never feed it a job it would
+    // mis-parse, never hang.
+    for peer in [WIRE_VERSION + 1, WIRE_VERSION - 1] {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut c) = conn else { break };
+                let mut skewed = encode_hello();
+                skewed[4..].copy_from_slice(&peer.to_le_bytes());
+                let _ = c.write_all(&skewed);
+                // Hold the socket so the client's rejection is about the
+                // version, not a dropped connection.
+                let mut sink = [0u8; 64];
+                let _ = c.read(&mut sink);
+            }
+        });
+        let mut sc = ShardCoordinator::new(
+            EngineConfig::default(),
+            2,
+            ShardBackend::Tcp {
+                endpoints: vec![addr],
+            },
+        );
+        let a = random_exp_offset_matrix(&mut XorShift64::new(17), 96, 4).freeze();
+        let t0 = Instant::now();
+        let err = sc
+            .multiply(&a, &a)
+            .expect_err("skewed server must be rejected");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "skew v{peer}: rejection took {:?}",
+            t0.elapsed()
+        );
+        let msg = format!("{err:#}");
+        assert!(msg.contains("version mismatch"), "peer v{peer}: {msg}");
+        assert!(msg.contains(&format!("v{peer}")), "peer v{peer}: {msg}");
+        assert!(msg.contains(&format!("v{WIRE_VERSION}")), "peer v{peer}: {msg}");
+    }
 }
 
 #[test]
-fn version_skewed_client_gets_a_framed_rejection_from_the_server() {
-    let mut server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
-    let mut stream = TcpStream::connect(server.addr()).unwrap();
-    stream
-        .set_read_timeout(Some(Duration::from_secs(10)))
-        .unwrap();
-    // The server speaks first: its hello must be valid for this build.
-    let mut hello = [0u8; HELLO_LEN];
-    stream.read_exact(&mut hello).unwrap();
-    transport::check_hello(&hello).unwrap();
-    // Claim an older version; the server must answer with a framed,
-    // decodable error rather than mis-parsing what follows.
-    let mut skewed = encode_hello();
-    skewed[4..].copy_from_slice(&(WIRE_VERSION - 1).to_le_bytes());
-    stream.write_all(&skewed).unwrap();
-    let frame = read_frame(&mut stream)
-        .unwrap()
-        .expect("server must reply with a rejection frame");
-    let err = format!("{:#}", decode_resp(&frame).unwrap_err());
-    assert!(err.contains("version mismatch"), "{err}");
-    server.stop();
+fn version_skew_matrix_client_side_skew_gets_a_framed_rejection() {
+    // The other half of the matrix: a skewed *client* (±1) against this
+    // build's daemon. The server must answer with a framed, decodable
+    // error naming both versions rather than mis-parsing what follows.
+    for peer in [WIRE_VERSION + 1, WIRE_VERSION - 1] {
+        let mut server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        // The server speaks first: its hello must be valid for this build.
+        let mut hello = [0u8; HELLO_LEN];
+        stream.read_exact(&mut hello).unwrap();
+        transport::check_hello(&hello).unwrap();
+        let mut skewed = encode_hello();
+        skewed[4..].copy_from_slice(&peer.to_le_bytes());
+        stream.write_all(&skewed).unwrap();
+        let frame = read_frame(&mut stream)
+            .unwrap()
+            .expect("server must reply with a rejection frame");
+        let err = format!("{:#}", decode_resp(&frame).unwrap_err());
+        assert!(err.contains("version mismatch"), "peer v{peer}: {err}");
+        assert!(err.contains(&format!("v{peer}")), "peer v{peer}: {err}");
+        assert!(
+            err.contains(&format!("v{WIRE_VERSION}")),
+            "peer v{peer}: {err}"
+        );
+        server.stop();
+    }
 }
 
 #[test]
