@@ -1,0 +1,310 @@
+"""Transliteration checks of the matrix-free state-vector layer.
+
+The build container has no Rust toolchain, so the pure index math of
+``rust/src/linalg/spmv.rs`` — the SpMV-as-one-output-diagonal plan, the
+strided-AXPY fill with its exact complex expansion order, the halo
+``state_window`` and the sharded halo execution — plus the
+``StateDriver`` Taylor loop of ``rust/src/taylor/mod.rs`` are mirrored
+here 1:1 and property-checked:
+
+* the SpMV plan is ONE output diagonal of offset 0 covering the whole
+  state, each stored diagonal of ``H`` contributing a single strided
+  AXPY (``ka0=0``, ``kb0=max(0,d)``, ``kc0=max(0,−d)``), so the
+  existing tile/schedule/shard mirrors apply unchanged;
+* the fill matches the dense ``H @ x`` oracle, and tiled + sharded
+  executions (each range fed only its halo window, exactly what the
+  wire ships) reproduce the whole-state execution **bit-for-bit**;
+* ``state_window`` names the exact ``[lo − max_d, hi + max_{−d})``
+  halo, clipped at the state boundary (golden values mirror the Rust
+  unit test);
+* the matrix-free Taylor chain ``term_k = (A·term_{k−1})/k``,
+  ``sum += term_k`` with ``A = −iHt`` matches the dense same-order
+  Taylor oracle and preserves the norm for Hermitian ``H``.
+
+Plan/tile/shard mirrors are imported from ``test_scheduler`` /
+``test_shard`` so the transliterations cannot drift apart.
+"""
+
+import random
+
+import numpy as np
+
+from test_scheduler import diag_len, tile_plan
+from test_shard import shard_plan
+
+# --- mirror of rust/src/linalg/diag_mul.rs::plan_spmv ---------------------
+
+
+def plan_spmv(n, offsets):
+    """The whole state as ONE output diagonal {offset 0, len n}; every
+    stored diagonal of H is one strided AXPY contribution."""
+    contribs = [
+        dict(
+            a_idx=ai,
+            b_idx=0,
+            ka0=0,
+            kb0=max(0, d),
+            kc0=max(0, -d),
+            length=diag_len(n, d),
+        )
+        for ai, d in enumerate(sorted(offsets))
+    ]
+    return [dict(offset=0, length=n, contribs=contribs)]
+
+
+# --- mirrors of rust/src/linalg/spmv.rs -----------------------------------
+
+
+def fill_state_window(contribs, base, h_planes, x_re, x_im, x_base, dst_re, dst_im):
+    """Exact mirror of fill_state_window's f64 operation order: the
+    complex product expands as (hr·xr − hi·xi, hr·xi + hi·xr)."""
+    for c in contribs:
+        hr, hi = h_planes[c["a_idx"]]
+        xo = c["kb0"] - x_base
+        o = c["kc0"] - base
+        for k in range(c["length"]):
+            dst_re[o + k] += hr[c["ka0"] + k] * x_re[xo + k] - hi[c["ka0"] + k] * x_im[xo + k]
+            dst_im[o + k] += hr[c["ka0"] + k] * x_im[xo + k] + hi[c["ka0"] + k] * x_re[xo + k]
+
+
+def fill_state_range(tasks, task_lo, task_hi, h_planes, x_re, x_im, x_base, dst_re, dst_im):
+    off = 0
+    for task in tasks[task_lo:task_hi]:
+        length = task["hi"] - task["lo"]
+        fill_state_window(
+            task["contribs"],
+            task["lo"],
+            h_planes,
+            x_re,
+            x_im,
+            x_base,
+            dst_re[off : off + length],
+            dst_im[off : off + length],
+        )
+        off += length
+    assert off == len(dst_re)
+
+
+def state_window(tasks, task_lo, task_hi):
+    """The halo window [x_lo, x_hi) a task range reads; None when the
+    range has no contributions (its output stays zero)."""
+    window = None
+    for task in tasks[task_lo:task_hi]:
+        for c in task["contribs"]:
+            lo, hi = c["kb0"], c["kb0"] + c["length"]
+            window = (lo, hi) if window is None else (min(window[0], lo), max(window[1], hi))
+    return window
+
+
+def execute_spmv(n, tasks, h_planes, x_re, x_im):
+    re = np.zeros(n)
+    im = np.zeros(n)
+    fill_state_range(tasks, 0, len(tasks), h_planes, x_re, x_im, 0, re, im)
+    return re, im
+
+
+def execute_spmv_ranges(tasks, ranges, h_planes, x_re, x_im):
+    """Each range gets ONLY its halo window of the state — exactly what
+    a remote StateJob ships — and fills its own contiguous slice."""
+    slices = []
+    for r in ranges:
+        re = np.zeros(r["elems"])
+        im = np.zeros(r["elems"])
+        w = state_window(tasks, r["task_lo"], r["task_hi"])
+        if w is not None:
+            x_lo, x_hi = w
+            fill_state_range(
+                tasks,
+                r["task_lo"],
+                r["task_hi"],
+                h_planes,
+                x_re[x_lo:x_hi],
+                x_im[x_lo:x_hi],
+                x_lo,
+                re,
+                im,
+            )
+        slices.append((re, im))
+    return slices
+
+
+# --- mirror of rust/src/taylor/mod.rs::StateDriver ------------------------
+
+
+def scale_planes(offsets, planes, z):
+    """H → z·H on split planes: (re, im) → (re·zr − im·zi, re·zi + im·zr)."""
+    zr, zi = z.real, z.imag
+    return [(re * zr - im * zi, re * zi + im * zr) for re, im in planes]
+
+
+def state_chain(n, offsets, h_planes, t, psi_re, psi_im, iters, tile=None):
+    """term_k = (A·term_{k−1})/k, sum += term_k, with A = −iHt frozen
+    once — the exact loop body every Rust state path runs."""
+    a_planes = scale_planes(offsets, h_planes, -1j * t)
+    tasks = tile_plan(plan_spmv(n, offsets), tile if tile else n)
+    term_re, term_im = np.array(psi_re), np.array(psi_im)
+    sum_re, sum_im = np.array(psi_re), np.array(psi_im)
+    steps = []
+    for k in range(1, iters + 1):
+        re, im = execute_spmv(n, tasks, a_planes, term_re, term_im)
+        inv_k = 1.0 / k
+        term_re, term_im = re * inv_k, im * inv_k
+        sum_re = sum_re + term_re
+        sum_im = sum_im + term_im
+        steps.append((k, sum(diag_len(n, d) for d in offsets)))
+    return sum_re, sum_im, steps
+
+
+# --- fixtures -------------------------------------------------------------
+
+
+def diags_to_dense(n, offsets, planes):
+    h = np.zeros((n, n), dtype=complex)
+    for (re, im), d in zip(planes, sorted(offsets)):
+        for k in range(diag_len(n, d)):
+            h[max(0, -d) + k, max(0, d) + k] = re[k] + 1j * im[k]
+    return h
+
+
+def random_h(rng, n, max_diags, hermitian=False):
+    if hermitian:
+        nonneg = sorted({0} | {rng.randrange(1, n) for _ in range(max_diags // 2)})
+        offsets = sorted({-d for d in nonneg} | set(nonneg))
+        planes_by_d = {}
+        for d in nonneg:
+            g = np.random.default_rng(rng.randrange(2**31))
+            re = g.standard_normal(diag_len(n, d))
+            im = np.zeros(diag_len(n, d)) if d == 0 else g.standard_normal(diag_len(n, d))
+            planes_by_d[d] = (re, im)
+            if d > 0:
+                planes_by_d[-d] = (re.copy(), -im)
+        planes = [planes_by_d[d] for d in offsets]
+    else:
+        offsets = sorted({0} | {rng.randrange(-(n - 1), n) for _ in range(max_diags)})
+        planes = []
+        for d in offsets:
+            g = np.random.default_rng(rng.randrange(2**31))
+            planes.append(
+                (g.standard_normal(diag_len(n, d)), g.standard_normal(diag_len(n, d)))
+            )
+    return offsets, planes
+
+
+# --- the tests ------------------------------------------------------------
+
+
+def test_spmv_plan_is_one_output_diagonal():
+    outs = plan_spmv(9, [-2, 0, 3])
+    assert len(outs) == 1 and outs[0]["offset"] == 0 and outs[0]["length"] == 9
+    by_idx = outs[0]["contribs"]
+    # d = −2 writes y[2..9) from x[0..7); d = 3 writes y[0..6) from x[3..9).
+    assert (by_idx[0]["kb0"], by_idx[0]["kc0"], by_idx[0]["length"]) == (0, 2, 7)
+    assert (by_idx[1]["kb0"], by_idx[1]["kc0"], by_idx[1]["length"]) == (0, 0, 9)
+    assert (by_idx[2]["kb0"], by_idx[2]["kc0"], by_idx[2]["length"]) == (3, 0, 6)
+    # Total multiplies = stored elements of H — the matrix-free cost.
+    assert sum(c["length"] for c in by_idx) == 7 + 9 + 6
+
+
+def test_spmv_matches_dense_oracle():
+    rng = random.Random(5)
+    for _ in range(12):
+        n = rng.randrange(2, 40)
+        offsets, planes = random_h(rng, n, 6)
+        g = np.random.default_rng(rng.randrange(2**31))
+        x = g.standard_normal(n) + 1j * g.standard_normal(n)
+        tasks = tile_plan(plan_spmv(n, offsets), n)
+        re, im = execute_spmv(n, tasks, planes, x.real.copy(), x.imag.copy())
+        want = diags_to_dense(n, offsets, planes) @ x
+        assert np.max(np.abs((re + 1j * im) - want)) < 1e-12
+
+
+def test_tiled_and_sharded_halo_execution_is_bit_identical():
+    rng = random.Random(17)
+    for _ in range(8):
+        n = rng.randrange(32, 200)
+        offsets, planes = random_h(rng, n, 7)
+        g = np.random.default_rng(rng.randrange(2**31))
+        x_re = g.standard_normal(n)
+        x_im = g.standard_normal(n)
+        base = tile_plan(plan_spmv(n, offsets), n)
+        want_re, want_im = execute_spmv(n, base, planes, x_re, x_im)
+        for tile in (1, 7, 64, n):
+            tasks = tile_plan(plan_spmv(n, offsets), tile)
+            re, im = execute_spmv(n, tasks, planes, x_re, x_im)
+            # Same contributions in ascending-offset order per element →
+            # identical f64 operation order → bit-for-bit equality.
+            assert np.array_equal(re, want_re) and np.array_equal(im, want_im)
+            for shards in (1, 2, 3, 5):
+                ranges = shard_plan(tasks, shards)
+                slices = execute_spmv_ranges(tasks, ranges, planes, x_re, x_im)
+                sre = np.concatenate([s[0] for s in slices])
+                sim = np.concatenate([s[1] for s in slices])
+                assert np.array_equal(sre, want_re), f"tile={tile} S={shards}"
+                assert np.array_equal(sim, want_im), f"tile={tile} S={shards}"
+
+
+def test_state_window_golden_band():
+    # Mirrors spmv.rs::state_window_bounds_are_exact: band of half-width
+    # 2 on n=20 with tiles of 5 — the range writing y[5..10) reads the
+    # ±2 halo x[3..12); edge tiles clip at the state boundary.
+    n = 20
+    offsets = [-2, -1, 0, 1, 2]
+    tasks = tile_plan(plan_spmv(n, offsets), 5)
+    assert len(tasks) == 4
+    assert state_window(tasks, 1, 2) == (3, 12)
+    assert state_window(tasks, 0, 1) == (0, 7)
+    assert state_window(tasks, 3, 4) == (13, 20)
+    assert state_window(tasks, 0, len(tasks)) == (0, n)
+    assert state_window(tasks, 2, 2) is None
+    # The halo is what the wire ships: 9 of 20 amplitudes, not the state.
+    lo, hi = state_window(tasks, 1, 2)
+    assert hi - lo == 9 < n
+
+
+def test_state_chain_matches_dense_taylor_oracle():
+    rng = random.Random(29)
+    for _ in range(6):
+        n = rng.randrange(8, 48)
+        offsets, planes = random_h(rng, n, 5)
+        h = diags_to_dense(n, offsets, planes)
+        t = 0.1 / max(1.0, np.abs(h).sum(axis=0).max())
+        g = np.random.default_rng(rng.randrange(2**31))
+        psi = g.standard_normal(n) + 1j * g.standard_normal(n)
+        psi /= np.linalg.norm(psi)
+        iters = 12
+        sre, sim, steps = state_chain(
+            n, offsets, planes, t, psi.real.copy(), psi.imag.copy(), iters
+        )
+        # Dense same-order Taylor: u = Σ (−iHt)^k / k! applied to ψ.
+        a = -1j * t * h
+        want = psi.copy()
+        term = psi.copy()
+        for k in range(1, iters + 1):
+            term = (a @ term) / k
+            want = want + term
+        assert np.max(np.abs((sre + 1j * sim) - want)) < 1e-10
+        assert [k for k, _ in steps] == list(range(1, iters + 1))
+        assert all(m == sum(diag_len(n, d) for d in offsets) for _, m in steps)
+
+
+def test_state_chain_preserves_norm_for_hermitian_h():
+    rng = random.Random(41)
+    for _ in range(6):
+        n = rng.randrange(8, 64)
+        offsets, planes = random_h(rng, n, 6, hermitian=True)
+        h = diags_to_dense(n, offsets, planes)
+        assert np.max(np.abs(h - h.conj().T)) < 1e-12
+        t = 0.1 / max(1.0, np.abs(h).sum(axis=0).max())
+        g = np.random.default_rng(rng.randrange(2**31))
+        psi = g.standard_normal(n) + 1j * g.standard_normal(n)
+        psi /= np.linalg.norm(psi)
+        sre, sim, _ = state_chain(
+            n, offsets, planes, t, psi.real.copy(), psi.imag.copy(), 20
+        )
+        norm = float(np.sum(sre * sre + sim * sim))
+        assert abs(norm - 1.0) < 1e-10
+        # And tiling does not change the evolved state bitwise.
+        tre, tim, _ = state_chain(
+            n, offsets, planes, t, psi.real.copy(), psi.imag.copy(), 20, tile=13
+        )
+        assert np.array_equal(tre, sre) and np.array_equal(tim, sim)

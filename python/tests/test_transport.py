@@ -1,4 +1,4 @@
-"""Transliteration checks of the shard transport's wire encoding (v3).
+"""Transliteration checks of the shard transport's wire encoding (v4).
 
 The build container has no Rust toolchain, so the byte-exact encoding
 rules of ``rust/src/coordinator/transport.rs`` (handshake + framing) and
@@ -24,8 +24,13 @@ and property-checked:
   encodings decode to a loud ``ValueError``, never a raw struct error
   or a silent wrong answer;
 * composed streams parse: ``hello | frame(put) … frame(job)`` (both the
-  process backend's pipes and a TCP connection are framed in v3) and
-  ``hello | frame(put H) | frame(chain job)`` (a server-side chain).
+  process backend's pipes and a TCP connection are framed the same way)
+  and ``hello | frame(put H) | frame(chain job)`` (a server-side chain);
+* the v4 **state frames** round-trip bit-exactly: halo-windowed
+  ``StateJob`` (``DSS1``, 60-byte header + 16 bytes per halo element),
+  server-side ``StateChainJob`` (``DSE1``, 36-byte header + the ψ0
+  planes) and its ``DER1`` response carrying the evolved planes plus the
+  per-step multiply trace.
 """
 
 import math
@@ -36,7 +41,7 @@ import pytest
 
 # --- mirror of rust/src/coordinator/transport.rs --------------------------
 
-WIRE_VERSION = 3
+WIRE_VERSION = 4
 HELLO_MAGIC = b"DSHK"
 HELLO_LEN = 8
 MAX_FRAME_BYTES = 1 << 34
@@ -47,6 +52,9 @@ PLANE_PUT_MAGIC = b"DSP1"
 PLANE_HAVE_MAGIC = b"DSH1"
 CHAIN_MAGIC = b"DSC1"
 CHAIN_RESP_MAGIC = b"DCR1"
+STATE_JOB_MAGIC = b"DSS1"
+STATE_CHAIN_MAGIC = b"DSE1"
+STATE_CHAIN_RESP_MAGIC = b"DER1"
 STATUS_OK = 0
 STATUS_ERR = 1
 MAX_CHAIN_ITERS = 1024
@@ -291,6 +299,137 @@ def decode_chain_resp(buf):
     raise ValueError(f"unknown chain response status {status}")
 
 
+def encode_state_job(n, tile, task_lo, task_hi, fp_h, x_lo, x_re, x_im):
+    """v4 StateJob: a 60-byte header — magic, then n / tile / task_lo /
+    task_hi / fp_h / x_lo / x_len as u64 le — followed by the ψ halo
+    window as SoA f64 planes. ``H`` travels separately as a
+    content-addressed PutPlane, at most once per connection."""
+    assert len(x_re) == len(x_im)
+    return (
+        STATE_JOB_MAGIC
+        + struct.pack("<QQQQQQQ", n, tile, task_lo, task_hi, fp_h, x_lo, len(x_re))
+        + b"".join(struct.pack("<d", v) for v in x_re)
+        + b"".join(struct.pack("<d", v) for v in x_im)
+    )
+
+
+def decode_state_job(buf):
+    if buf[:4] != STATE_JOB_MAGIC:
+        raise ValueError("not a state job (bad magic)")
+    n, tile, task_lo, task_hi, fp_h, x_lo, x_len = _unpack("<QQQQQQQ", buf, 4)
+    if task_lo > task_hi:
+        raise ValueError(f"inverted state shard range [{task_lo}, {task_hi})")
+    if x_lo + x_len > n:
+        raise ValueError(f"state window [{x_lo}, {x_lo}+{x_len}) exceeds dimension {n}")
+    if x_len > (len(buf) - 60) // 8:
+        raise ValueError(
+            f"truncated shard message: {x_len} f64 values claimed at offset "
+            f"60, frame holds {len(buf)} bytes"
+        )
+    pos = 60
+    x_re = list(_unpack(f"<{x_len}d", buf, pos))
+    pos += 8 * x_len
+    x_im = list(_unpack(f"<{x_len}d", buf, pos))
+    pos += 8 * x_len
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return n, tile, task_lo, task_hi, fp_h, x_lo, x_re, x_im
+
+
+def encode_state_chain_job(n, t, iters, fp_h, psi_re, psi_im):
+    """v4 StateChainJob: a 36-byte header — n, t (f64 bits), iters,
+    fp_h — plus the full ψ0 as SoA planes; the whole matrix-free Taylor
+    loop runs on the daemon."""
+    assert len(psi_re) == len(psi_im) == n
+    return (
+        STATE_CHAIN_MAGIC
+        + struct.pack("<QdQQ", n, t, iters, fp_h)
+        + b"".join(struct.pack("<d", v) for v in psi_re)
+        + b"".join(struct.pack("<d", v) for v in psi_im)
+    )
+
+
+def decode_state_chain_job(buf):
+    if buf[:4] != STATE_CHAIN_MAGIC:
+        raise ValueError("not a state chain job (bad magic)")
+    (n,) = _unpack("<Q", buf, 4)
+    (t,) = _unpack("<d", buf, 12)
+    iters, fp_h = _unpack("<QQ", buf, 20)
+    if iters == 0 or iters > MAX_CHAIN_ITERS:
+        raise ValueError(
+            f"state chain job claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})"
+        )
+    if n > (len(buf) - 36) // 16:
+        raise ValueError(
+            f"truncated shard message: {2 * n} f64 values claimed at offset "
+            f"36, frame holds {len(buf)} bytes"
+        )
+    pos = 36
+    psi_re = list(_unpack(f"<{n}d", buf, pos))
+    pos += 8 * n
+    psi_im = list(_unpack(f"<{n}d", buf, pos))
+    pos += 8 * n
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return n, t, iters, fp_h, psi_re, psi_im
+
+
+def encode_state_chain_ok(psi_re, psi_im, steps):
+    """StateChain response: magic | status | nsteps | (k | mults) ×
+    nsteps | n | psi_re | psi_im — the evolved planes plus the per-step
+    multiply trace."""
+    assert len(psi_re) == len(psi_im)
+    out = [STATE_CHAIN_RESP_MAGIC, bytes([STATUS_OK]), struct.pack("<Q", len(steps))]
+    for k, mults in steps:
+        out.append(struct.pack("<QQ", k, mults))
+    out.append(struct.pack("<Q", len(psi_re)))
+    out += [struct.pack("<d", v) for v in psi_re]
+    out += [struct.pack("<d", v) for v in psi_im]
+    return b"".join(out)
+
+
+def encode_state_chain_err(msg):
+    raw = msg.encode("utf-8")
+    return STATE_CHAIN_RESP_MAGIC + bytes([STATUS_ERR]) + struct.pack("<Q", len(raw)) + raw
+
+
+def decode_state_chain_resp(buf):
+    if buf[:4] != STATE_CHAIN_RESP_MAGIC:
+        raise ValueError("not a state chain response (bad magic)")
+    (status,) = _unpack("<B", buf, 4)
+    if status == STATUS_OK:
+        (nsteps,) = _unpack("<Q", buf, 5)
+        if nsteps > MAX_CHAIN_ITERS:
+            raise ValueError(
+                f"state chain response claims {nsteps} steps (allowed <= {MAX_CHAIN_ITERS})"
+            )
+        pos = 13
+        steps = []
+        for _ in range(nsteps):
+            steps.append(_unpack("<QQ", buf, pos))
+            pos += 16
+        (n,) = _unpack("<Q", buf, pos)
+        pos += 8
+        if n > (len(buf) - pos) // 16:
+            raise ValueError(
+                f"truncated shard message: {2 * n} f64 values claimed at offset "
+                f"{pos}, frame holds {len(buf)} bytes"
+            )
+        psi_re = list(_unpack(f"<{n}d", buf, pos))
+        pos += 8 * n
+        psi_im = list(_unpack(f"<{n}d", buf, pos))
+        pos += 8 * n
+        if pos != len(buf):
+            raise ValueError("trailing bytes")
+        return psi_re, psi_im, steps
+    if status == STATUS_ERR:
+        (length,) = _unpack("<Q", buf, 5)
+        raise ValueError(
+            "state chain worker reported: " + buf[13 : 13 + length].decode("utf-8")
+        )
+    raise ValueError(f"unknown state chain response status {status}")
+
+
 def encode_ok(re, im, mults):
     assert len(re) == len(im)
     return (
@@ -366,7 +505,7 @@ def test_hello_golden_bytes_and_roundtrip():
     assert len(h) == HELLO_LEN
     # Golden layout: magic then the version as little-endian u32. A Rust
     # encoding change that forgets the version bump breaks this line.
-    assert h == b"DSHK\x03\x00\x00\x00"
+    assert h == b"DSHK\x04\x00\x00\x00"
     assert decode_hello(h) == WIRE_VERSION
     check_hello(h)  # no raise
 
@@ -548,6 +687,87 @@ def test_chain_resp_roundtrip_is_bit_exact():
         decode_chain_resp(bytes(bad))
 
 
+def test_state_job_golden_layout_and_roundtrip():
+    # 60-byte header, then the halo window as SoA planes: a StateJob for
+    # tasks [1, 4) whose output rows read only x[2 .. 2+3).
+    x_re = [1.5, -0.0, 5e-324]
+    x_im = [0.0, -2.25, math.inf]
+    buf = encode_state_job(8, 4096, 1, 4, GOLDEN_FP, 2, x_re, x_im)
+    assert buf[:4] == b"DSS1"
+    assert len(buf) == 60 + 16 * 3
+    assert struct.unpack_from("<QQQQQQQ", buf, 4) == (8, 4096, 1, 4, GOLDEN_FP, 2, 3)
+    n, tile, lo, hi, fp, x_lo, gre, gim = decode_state_job(buf)
+    assert (n, tile, lo, hi, fp, x_lo) == (8, 4096, 1, 4, GOLDEN_FP, 2)
+    # Halo planes are bit-exact: -0.0, denormals and inf survive.
+    assert [f64_bits(x) for x in gre] == [f64_bits(x) for x in x_re]
+    assert [f64_bits(x) for x in gim] == [f64_bits(x) for x in x_im]
+    assert math.copysign(1.0, gre[1]) == -1.0
+    # An empty range ships an empty window — 60 bytes total.
+    empty = encode_state_job(8, 4096, 2, 2, GOLDEN_FP, 0, [], [])
+    assert len(empty) == 60
+    assert decode_state_job(empty)[6] == []
+    # Structural rejections: inverted range, window past the dimension.
+    with pytest.raises(ValueError, match="inverted"):
+        decode_state_job(encode_state_job(8, 64, 5, 2, GOLDEN_FP, 0, [], []))
+    with pytest.raises(ValueError, match="exceeds dimension"):
+        decode_state_job(encode_state_job(8, 64, 0, 1, GOLDEN_FP, 7, [0.0, 0.0], [0.0, 0.0]))
+    with pytest.raises(ValueError):
+        decode_state_job(buf + b"\x00")
+
+
+def test_state_chain_job_golden_layout_and_bounds():
+    psi_re = [0.5, -0.5]
+    psi_im = [-0.0, 0.25]
+    buf = encode_state_chain_job(2, 0.3, 6, GOLDEN_FP, psi_re, psi_im)
+    assert buf[:4] == b"DSE1"
+    # Same 36-byte header shape as the SpMSpM chain job (DSC1), then ψ0.
+    assert len(buf) == 36 + 16 * 2
+    assert struct.unpack_from("<Q", buf, 4) == (2,)
+    assert struct.unpack_from("<d", buf, 12) == (0.3,)
+    assert struct.unpack_from("<QQ", buf, 20) == (6, GOLDEN_FP)
+    n, t, iters, fp, gre, gim = decode_state_chain_job(buf)
+    assert (n, t, iters, fp) == (2, 0.3, 6, GOLDEN_FP)
+    assert math.copysign(1.0, gim[0]) == -1.0  # -0.0 survived
+    # The iteration budget is structural, same bound as DSC1.
+    with pytest.raises(ValueError, match="iterations"):
+        decode_state_chain_job(encode_state_chain_job(2, 0.3, 0, GOLDEN_FP, psi_re, psi_im))
+    with pytest.raises(ValueError, match="iterations"):
+        decode_state_chain_job(
+            encode_state_chain_job(2, 0.3, MAX_CHAIN_ITERS + 1, GOLDEN_FP, psi_re, psi_im)
+        )
+    with pytest.raises(ValueError):
+        decode_state_chain_job(buf[:-3])
+    with pytest.raises(ValueError):
+        decode_state_chain_job(buf + b"\x00")
+
+
+def test_state_chain_resp_roundtrip_is_bit_exact():
+    psi_re = [1.0, -0.0, 5e-324]
+    psi_im = [math.inf, 0.0, -2.5]
+    steps = [(1, 27), (2, 27), (3, 27)]
+    buf = encode_state_chain_ok(psi_re, psi_im, steps)
+    assert buf[:5] == b"DER1\x00"
+    # Header walk: nsteps, the (k | mults) trace, then n and the planes.
+    assert struct.unpack_from("<Q", buf, 5) == (3,)
+    assert struct.unpack_from("<Q", buf, 13 + 16 * 3) == (3,)
+    gre, gim, gsteps = decode_state_chain_resp(buf)
+    assert gsteps == steps
+    assert [f64_bits(x) for x in gre] == [f64_bits(x) for x in psi_re]
+    assert [f64_bits(x) for x in gim] == [f64_bits(x) for x in psi_im]
+    assert math.copysign(1.0, gre[1]) == -1.0
+    # Server-reported failures surface as errors — the client's
+    # resend-once path matches on this exact message.
+    with pytest.raises(ValueError, match="unknown operand plane"):
+        decode_state_chain_resp(
+            encode_state_chain_err("unknown operand plane 0x1 — resend required")
+        )
+    # A step count over the iteration budget rejects pre-allocation.
+    bad = bytearray(buf)
+    struct.pack_into("<Q", bad, 5, MAX_CHAIN_ITERS + 7)
+    with pytest.raises(ValueError, match="steps"):
+        decode_state_chain_resp(bytes(bad))
+
+
 def test_response_roundtrip_is_bit_exact():
     # -0.0, a denormal and inf must cross the wire bit-identically —
     # the transport moves bit patterns, not rounded decimals.
@@ -578,6 +798,9 @@ def test_every_truncation_and_mutation_fails_loudly():
     chain = encode_chain_job(16, 0.5, 4, GOLDEN_FP)
     resp = encode_ok([1.0, 2.0], [0.0, -1.0], 9)
     cresp = encode_chain_ok(3, golden_matrix(), golden_matrix(), [(1, 3, 3, 6, 0.0, 27)])
+    sjob = encode_state_job(4, 64, 0, 2, GOLDEN_FP, 1, [0.5, -0.5], [0.0, 1.0])
+    schain = encode_state_chain_job(2, 0.5, 4, GOLDEN_FP, [1.0, 0.0], [0.0, -1.0])
+    sresp = encode_state_chain_ok([1.0, 0.5], [0.0, -0.5], [(1, 9), (2, 9)])
     decoders = [
         (put, decode_plane_put),
         (have, decode_plane_have),
@@ -585,6 +808,9 @@ def test_every_truncation_and_mutation_fails_loudly():
         (chain, decode_chain_job),
         (resp, decode_resp),
         (cresp, decode_chain_resp),
+        (sjob, decode_state_job),
+        (schain, decode_state_chain_job),
+        (sresp, decode_state_chain_resp),
     ]
     for buf, dec in decoders:
         dec(buf)  # the unmutated encoding decodes
@@ -655,6 +881,36 @@ def test_composed_streams_parse_like_both_transports():
     f2, pos = read_frame(cstream, pos)
     assert decode_chain_job(f2) == (2, 0.3, 6, fp)
     assert len(f2) == 36
+    # v4 state sharding: H ships once, each shard's StateJob carries
+    # only its halo window of ψ — a second SpMV on the same connection
+    # references H by a 20-byte Have.
+    sjob = encode_state_job(2, 16, 0, 1, fp, 0, [0.5, -0.5], [0.0, 1.0])
+    sstream = (
+        encode_hello()
+        + encode_frame(put)
+        + encode_frame(sjob)
+        + encode_frame(have)
+        + encode_frame(sjob)
+    )
+    check_hello(sstream[:HELLO_LEN])
+    pos = HELLO_LEN
+    kinds = []
+    while True:
+        payload, pos = read_frame(sstream, pos)
+        if payload is None:
+            break
+        kinds.append(bytes(payload[:4]))
+    assert kinds == [b"DSP1", b"DSS1", b"DSH1", b"DSS1"]
+    # v4 server-side state chain: one DSE1 frame runs the whole
+    # matrix-free evolution on the daemon.
+    scstream = encode_hello() + encode_frame(put) + encode_frame(
+        encode_state_chain_job(2, 0.3, 6, fp, [1.0, 0.0], [0.0, 0.0])
+    )
+    pos = HELLO_LEN
+    f1, pos = read_frame(scstream, pos)
+    assert decode_plane_put(f1)[0] == fp
+    f2, pos = read_frame(scstream, pos)
+    assert decode_state_chain_job(f2)[:4] == (2, 0.3, 6, fp)
     # A version-skewed stream must fail at the handshake, before any
     # frame bytes are interpreted.
     skewed = encode_hello(WIRE_VERSION + 1) + encode_frame(job)

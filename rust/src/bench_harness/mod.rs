@@ -6,6 +6,7 @@
 
 pub mod experiments;
 pub mod kernel;
+pub mod state;
 pub mod workload;
 
 use std::fmt::Write as _;

@@ -8,6 +8,7 @@
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
 //!                [--shards <n>] [--shard-backend <inproc|process|tcp>]
 //!                [--shard-endpoints <host:port,...>] [--chain]
+//!                [--state [--batch <n>] [--via-matrix] [--bench-json <path>]]
 //!                [--counters-json <path>]
 //! diamond shard-serve --listen <addr> [--max-frame-bytes <n>]
 //!                     [--plane-cache-cap <n>] [--plan-cache-cap <n>]
@@ -193,10 +194,28 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         .unwrap_or(0);
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
     let chain = args.iter().any(|a| a == "--chain");
+    let state = args.iter().any(|a| a == "--state");
+    let via_matrix = args.iter().any(|a| a == "--via-matrix");
+    let batch_flag = flag_value(args, "--batch");
+    let batch: usize = batch_flag
+        .as_deref()
+        .map(|v| v.parse().map_err(|e| format!("--batch: {e}")))
+        .transpose()?
+        .unwrap_or(1);
+    let bench_json = flag_value(args, "--bench-json");
     let counters_path = flag_value(args, "--counters-json");
     let (shards, shard_backend) = shard_flags(args)?;
     if use_pjrt && shards.is_some() {
         return Err("--shards applies to the oracle path only (drop --pjrt)".into());
+    }
+    if !state && (via_matrix || bench_json.is_some() || batch_flag.is_some()) {
+        return Err("--batch/--via-matrix/--bench-json require --state".into());
+    }
+    if batch == 0 {
+        return Err("--batch must be at least 1".into());
+    }
+    if state && use_pjrt {
+        return Err("--state runs matrix-free on the shard engine (drop --pjrt)".into());
     }
     if chain {
         if use_pjrt {
@@ -216,6 +235,23 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         .map(|v| v.parse().map_err(|e| format!("--t: {e}")))
         .transpose()?
         .unwrap_or_else(|| crate::bench_harness::workload::bench_t(h));
+
+    if state {
+        return cmd_evolve_state(StateRun {
+            family,
+            family_name,
+            ham: &ham,
+            t,
+            iters,
+            batch,
+            via_matrix,
+            chain,
+            shards,
+            shard_backend,
+            counters_path,
+            bench_json,
+        });
+    }
 
     if chain {
         // Server-side chain: one ChainJob carries (H, t, iters); the
@@ -388,6 +424,188 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Parsed inputs of `evolve --state` (one struct so the handoff from
+/// [`cmd_evolve`] stays readable).
+struct StateRun<'a> {
+    family: Family,
+    family_name: String,
+    ham: &'a crate::ham::Hamiltonian,
+    t: f64,
+    iters: usize,
+    batch: usize,
+    via_matrix: bool,
+    chain: bool,
+    shards: Option<usize>,
+    shard_backend: ShardBackend,
+    counters_path: Option<String>,
+    bench_json: Option<String>,
+}
+
+/// Serialize the state path's counters: the transport byte counters the
+/// chain gate already reads, plus the state-layer fields (`SpMVs`
+/// through the coordinator, complex multiplies, remote state jobs, ψ
+/// halo bytes) the `state-smoke` gate asserts on.
+#[allow(clippy::too_many_arguments)]
+fn state_counters_json(
+    mode: &str,
+    family: &str,
+    qubits: usize,
+    iters: usize,
+    batch: usize,
+    mults: u64,
+    stats: &crate::coordinator::shard::ShardStats,
+    endpoints: &[crate::coordinator::transport::EndpointIo],
+) -> String {
+    let base = counters_json(
+        mode,
+        family,
+        qubits,
+        iters,
+        stats.payload_bytes,
+        stats.dedup_bytes_avoided,
+        endpoints,
+    );
+    // Splice the state fields in before the closing brace: the document
+    // stays a superset of the chain-gate shape.
+    let tail = format!(
+        "  \"batch\": {},\n  \"state_multiplies\": {},\n  \"complex_mults\": {},\n  \
+         \"remote_state_jobs\": {},\n  \"halo_bytes\": {}\n}}\n",
+        batch, stats.state_multiplies, mults, stats.remote_state_jobs, stats.halo_bytes,
+    );
+    let trimmed = base
+        .trim_end()
+        .strip_suffix('}')
+        .expect("closing brace")
+        .trim_end()
+        .to_string();
+    format!("{trimmed},\n{tail}")
+}
+
+/// `evolve --state`: evolve `ψ(t) = exp(−iHt)·ψ₀` matrix-free — the
+/// packed SpMV Taylor chain, never a matrix power — over a
+/// deterministic batch of initial states. One coordinator serves the
+/// whole batch, so the SpMV plan (and shard partition) is built once
+/// and replayed per RHS. `--chain` (tcp backend) runs each RHS as one
+/// server-side `StateChainJob`; `--via-matrix` additionally runs the
+/// materialize-`U`-then-apply path and prints the multiply comparison
+/// the CI `state-smoke` gate asserts (`--bench-json` writes it).
+fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
+    let h = &run.ham.matrix;
+    let iters = if run.iters == 0 {
+        crate::taylor::iters_for(h, run.t, crate::taylor::DEFAULT_TOL).max(1)
+    } else {
+        run.iters
+    };
+    let t = run.t;
+    let psis = crate::bench_harness::state::initial_states(h.dim(), run.batch);
+    let mut sc = crate::coordinator::shard::ShardCoordinator::new(
+        crate::linalg::engine::EngineConfig::default(),
+        run.shards.unwrap_or(1),
+        run.shard_backend,
+    );
+    let mut results = Vec::with_capacity(run.batch);
+    for psi in &psis {
+        let r = if run.chain {
+            sc.run_state_chain(h, t, iters, psi)
+        } else {
+            crate::taylor::apply_expm_sharded(h, t, iters, psi, &mut sc)
+        }
+        .map_err(|e| format!("evolve --state: {e:#}"))?;
+        results.push(r);
+    }
+
+    let mults: u64 = results
+        .iter()
+        .flat_map(|r| r.steps.iter())
+        .map(|s| s.mults as u64)
+        .sum();
+    println!(
+        "{}: dim {}, {} diagonals, t={t:.4}, {} Taylor iterations, batch {} [matrix-free state{}]",
+        run.ham.name,
+        h.dim(),
+        h.nnzd(),
+        iters,
+        run.batch,
+        if run.chain { ", server-side chain" } else { "" },
+    );
+    let last = results.last().expect("batch is non-empty");
+    let norm: f64 = last.psi.iter().map(|z| z.norm_sqr()).sum();
+    println!(
+        "state: {} SpMVs, {} complex multiplies, final ‖ψ‖² − 1 = {:.2e}",
+        sc.stats().state_multiplies,
+        crate::bench_harness::fmt_u64(mults),
+        norm - 1.0,
+    );
+    let ks = sc.kernel_stats();
+    if ks.plan_cache_hits > 0 {
+        println!(
+            "plan cache: {} build(s), {} reuse hit(s) across the batch",
+            ks.plans_built, ks.plan_cache_hits
+        );
+    }
+    let st = sc.stats();
+    if st.shards_used > 0 {
+        println!(
+            "shard layer: {} ranges executed, {} KiB stitched, {} remote state job(s), {} KiB ψ halo shipped",
+            st.shards_used,
+            st.stitch_bytes / 1024,
+            st.remote_state_jobs,
+            st.halo_bytes / 1024,
+        );
+    }
+    if st.payload_bytes > 0 || st.dedup_bytes_avoided > 0 {
+        println!(
+            "operand planes: {} KiB shipped, {} KiB avoided by content-addressed dedup",
+            st.payload_bytes / 1024,
+            st.dedup_bytes_avoided / 1024,
+        );
+    }
+    for ep in sc.endpoint_io() {
+        println!(
+            "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s), payload {} B (+{} B deduped)",
+            ep.endpoint,
+            ep.round_trips,
+            ep.bytes_sent / 1024,
+            ep.bytes_received / 1024,
+            ep.connects,
+            ep.payload_bytes,
+            ep.dedup_bytes_avoided,
+        );
+    }
+
+    if run.via_matrix || run.bench_json.is_some() {
+        let bench = crate::bench_harness::state::run_state_bench(
+            run.family,
+            &run.family_name,
+            run.ham.n_qubits,
+            t,
+            iters,
+            run.batch,
+        );
+        println!("{}", bench.render_summary());
+        if let Some(path) = &run.bench_json {
+            std::fs::write(path, bench.render_json())
+                .map_err(|e| format!("writing {path}: {e}"))?;
+            println!("state bench written to {path}");
+        }
+    }
+    if let Some(path) = &run.counters_path {
+        let doc = state_counters_json(
+            if run.chain { "state-chain" } else { "state" },
+            &run.family_name,
+            run.ham.n_qubits,
+            iters,
+            run.batch,
+            mults,
+            sc.stats(),
+            sc.endpoint_io(),
+        );
+        std::fs::write(path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("counters written to {path}");
+    }
+    Ok(())
+}
+
 /// `diamond kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke]
 /// [--shards <n>] [--shard-backend <inproc|process|tcp>]
 /// [--shard-endpoints <host:port,...>] [--check-only]` — the kernel
@@ -519,7 +737,10 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]\n         \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
                  [--shard-endpoints <host:port,...>] [--chain] [--counters-json <path>]\n         \
-                 (--chain runs the whole Taylor chain server-side over tcp)\n  \
+                 [--state [--batch <n>] [--via-matrix] [--bench-json <path>]]\n         \
+                 (--chain runs the whole Taylor chain server-side over tcp;\n          \
+                 --state evolves ψ matrix-free via the packed SpMV kernel,\n          \
+                 --via-matrix adds the materialize-U comparison)\n  \
                  shard-serve --listen <host:port> [--max-frame-bytes <n>]\n              \
                  [--plane-cache-cap <n>] [--plan-cache-cap <n>]\n              \
                  (TCP shard daemon; port 0 = ephemeral)\n  \
@@ -712,6 +933,104 @@ mod tests {
             ]),
             2
         );
+    }
+
+    #[test]
+    fn evolve_state_flag_validation() {
+        // --via-matrix / --batch / --bench-json without --state.
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--via-matrix".into(),
+            ]),
+            2
+        );
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--batch".into(),
+                "2".into(),
+            ]),
+            2
+        );
+        // --state + --pjrt conflict, and --batch 0 is rejected.
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--state".into(),
+                "--pjrt".into(),
+            ]),
+            2
+        );
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--state".into(),
+                "--batch".into(),
+                "0".into(),
+            ]),
+            2
+        );
+    }
+
+    #[test]
+    fn evolve_state_runs_matrix_free() {
+        // The full command path: small TFIM, batched, sharded in-proc.
+        assert_eq!(
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--state".into(),
+                "--batch".into(),
+                "2".into(),
+                "--iters".into(),
+                "4".into(),
+                "--shards".into(),
+                "2".into(),
+            ]),
+            0
+        );
+    }
+
+    #[test]
+    fn state_counters_json_shape() {
+        let stats = crate::coordinator::shard::ShardStats {
+            payload_bytes: 80,
+            dedup_bytes_avoided: 800,
+            state_multiplies: 12,
+            remote_state_jobs: 6,
+            halo_bytes: 4096,
+            ..Default::default()
+        };
+        let doc = state_counters_json("state", "tfim", 10, 6, 2, 123456, &stats, &[]);
+        assert!(doc.contains("\"mode\": \"state\""));
+        assert!(doc.contains("\"batch\": 2"));
+        assert!(doc.contains("\"state_multiplies\": 12"));
+        assert!(doc.contains("\"complex_mults\": 123456"));
+        assert!(doc.contains("\"remote_state_jobs\": 6"));
+        assert!(doc.contains("\"halo_bytes\": 4096"));
+        assert!(doc.contains("\"payload_bytes\": 80"));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert!(!doc.contains(",]") && !doc.contains(",}"));
     }
 
     #[test]

@@ -44,10 +44,11 @@ use crate::format::diag::ZERO_TOL;
 use crate::format::{DiagMatrix, PackedDiagMatrix};
 use crate::linalg::engine::{
     execute_shard_ranges, fill_task_range, shard_plan, tile_plan, EngineConfig, KernelEngine,
-    KernelStats, PlannedProduct, ShardPlan, TilePlan,
+    KernelStats, PlannedProduct, ShardPlan, TilePlan, SPMV_KEY_SENTINEL,
 };
 use crate::linalg::{plan_diag_mul, MulPlan, OpStats};
-use crate::taylor::TaylorStep;
+use crate::linalg::spmv::{execute_spmv, execute_spmv_ranges, fill_state_range, state_window};
+use crate::taylor::{StateStep, TaylorStep};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
@@ -72,6 +73,18 @@ pub const PLANE_HAVE_MAGIC: [u8; 4] = *b"DSH1";
 pub const CHAIN_MAGIC: [u8; 4] = *b"DSC1";
 /// Frame marker of a `ChainJob` response.
 pub const CHAIN_RESP_MAGIC: [u8; 4] = *b"DCR1";
+/// Frame marker of a `StateJob`: execute one SpMV shard range against a
+/// resident `H` plane and the ψ halo window shipped in the frame.
+/// Responses reuse the plain shard response ([`RESP_MAGIC`]) — a state
+/// slice is re/im planes plus a multiply count, exactly like an SpMSpM
+/// slice.
+pub const STATE_JOB_MAGIC: [u8; 4] = *b"DSS1";
+/// Frame marker of a `StateChainJob`: run a whole matrix-free Taylor
+/// state chain (`ψ(t) = exp(−iHt)·ψ0`) server-side from one resident
+/// `H` plane.
+pub const STATE_CHAIN_MAGIC: [u8; 4] = *b"DSE1";
+/// Frame marker of a `StateChainJob` response.
+pub const STATE_CHAIN_RESP_MAGIC: [u8; 4] = *b"DER1";
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
 
@@ -593,6 +606,245 @@ pub fn decode_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
     }
 }
 
+/// One decoded `StateJob`: the SpMV shard range, the fingerprint of the
+/// resident `H` plane, and the ψ halo window the range reads —
+/// `x[x_lo .. x_lo + x_re.len())` in state indices. Only the window
+/// ships; the rest of the state never crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateJobRefs {
+    /// State dimension (must match the referenced `H` plane).
+    pub n: usize,
+    /// Tile length the parent cut the SpMV plan with.
+    pub tile: usize,
+    /// First tile task of the range.
+    pub task_lo: usize,
+    /// One past the last tile task of the range.
+    pub task_hi: usize,
+    /// Fingerprint of the resident `H` plane.
+    pub fp_h: u64,
+    /// State index of the halo window's first element.
+    pub x_lo: usize,
+    /// Real plane of the halo window.
+    pub x_re: Vec<f64>,
+    /// Imaginary plane of the halo window.
+    pub x_im: Vec<f64>,
+}
+
+/// Serialize one `StateJob`: `STATE_JOB_MAGIC | n | tile | task_lo |
+/// task_hi | fp_h | x_lo | x_len | x_re (f64-bits × x_len) | x_im
+/// (f64-bits × x_len)` — a 60-byte header plus 16 bytes per halo
+/// element. `H` itself travels separately as a content-addressed
+/// `PutPlane`, at most once per connection.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_state_job(
+    n: usize,
+    tile: usize,
+    task_lo: usize,
+    task_hi: usize,
+    fp_h: u64,
+    x_lo: usize,
+    x_re: &[f64],
+    x_im: &[f64],
+) -> Vec<u8> {
+    debug_assert_eq!(x_re.len(), x_im.len());
+    let mut buf = Vec::with_capacity(60 + 16 * x_re.len());
+    buf.extend_from_slice(&STATE_JOB_MAGIC);
+    put_usize(&mut buf, n);
+    put_usize(&mut buf, tile);
+    put_usize(&mut buf, task_lo);
+    put_usize(&mut buf, task_hi);
+    put_u64(&mut buf, fp_h);
+    put_usize(&mut buf, x_lo);
+    put_usize(&mut buf, x_re.len());
+    for &v in x_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in x_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Decode one `StateJob` (the inverse of [`encode_state_job`]).
+pub fn decode_state_job(bytes: &[u8]) -> Result<StateJobRefs> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_JOB_MAGIC[..] {
+        bail!("not a state job (bad magic)");
+    }
+    let n = c.usize()?;
+    let tile = c.usize()?;
+    let task_lo = c.usize()?;
+    let task_hi = c.usize()?;
+    let fp_h = c.u64()?;
+    let x_lo = c.usize()?;
+    let x_len = c.usize()?;
+    if task_lo > task_hi {
+        bail!("inverted state shard range [{task_lo}, {task_hi})");
+    }
+    if x_lo.checked_add(x_len).map_or(true, |hi| hi > n) {
+        bail!("state window [{x_lo}, {x_lo}+{x_len}) exceeds dimension {n}");
+    }
+    let x_re = c.f64s(x_len)?;
+    let x_im = c.f64s(x_len)?;
+    c.done()?;
+    Ok(StateJobRefs {
+        n,
+        tile,
+        task_lo,
+        task_hi,
+        fp_h,
+        x_lo,
+        x_re,
+        x_im,
+    })
+}
+
+/// One decoded `StateChainJob`: run `iters` matrix-free Taylor
+/// iterations of `exp(−iHt)·ψ0` server-side from the resident `H`
+/// plane `fp_h`, with ψ0 riding in the frame as SoA planes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateChainRefs {
+    /// State dimension (must match the referenced plane).
+    pub n: usize,
+    /// Evolution time.
+    pub t: f64,
+    /// Taylor truncation depth (1 ..= [`MAX_CHAIN_ITERS`]).
+    pub iters: usize,
+    /// Fingerprint of the resident `H` plane.
+    pub fp_h: u64,
+    /// Real plane of ψ0.
+    pub psi_re: Vec<f64>,
+    /// Imaginary plane of ψ0.
+    pub psi_im: Vec<f64>,
+}
+
+/// Serialize one `StateChainJob`: `STATE_CHAIN_MAGIC | n | t (f64-bits)
+/// | iters | fp_h | psi_re (f64-bits × n) | psi_im (f64-bits × n)` — a
+/// 36-byte header plus the state; `H` travels once as a `PutPlane`.
+pub fn encode_state_chain_job(
+    n: usize,
+    t: f64,
+    iters: usize,
+    fp_h: u64,
+    psi_re: &[f64],
+    psi_im: &[f64],
+) -> Vec<u8> {
+    debug_assert_eq!(psi_re.len(), n);
+    debug_assert_eq!(psi_im.len(), n);
+    let mut buf = Vec::with_capacity(36 + 16 * n);
+    buf.extend_from_slice(&STATE_CHAIN_MAGIC);
+    put_usize(&mut buf, n);
+    put_u64(&mut buf, t.to_bits());
+    put_usize(&mut buf, iters);
+    put_u64(&mut buf, fp_h);
+    for &v in psi_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in psi_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Decode one `StateChainJob` (the inverse of
+/// [`encode_state_chain_job`]).
+pub fn decode_state_chain_job(bytes: &[u8]) -> Result<StateChainRefs> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_CHAIN_MAGIC[..] {
+        bail!("not a state chain job (bad magic)");
+    }
+    let n = c.usize()?;
+    let t = c.f64()?;
+    let iters = c.u64()?;
+    let fp_h = c.u64()?;
+    if iters == 0 || iters > MAX_CHAIN_ITERS {
+        bail!("state chain job claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})");
+    }
+    let psi_re = c.f64s(n)?;
+    let psi_im = c.f64s(n)?;
+    c.done()?;
+    Ok(StateChainRefs {
+        n,
+        t,
+        iters: iters as usize,
+        fp_h,
+        psi_re,
+        psi_im,
+    })
+}
+
+/// Serialize a successful `StateChainJob` response:
+/// `STATE_CHAIN_RESP_MAGIC | 0u8 | nsteps | (k | mults) × nsteps | n |
+/// psi_re (f64-bits × n) | psi_im (f64-bits × n)`.
+pub fn encode_state_chain_ok(psi_re: &[f64], psi_im: &[f64], steps: &[StateStep]) -> Vec<u8> {
+    debug_assert_eq!(psi_re.len(), psi_im.len());
+    let mut buf = Vec::with_capacity(21 + 16 * steps.len() + 16 * psi_re.len());
+    buf.extend_from_slice(&STATE_CHAIN_RESP_MAGIC);
+    buf.push(STATUS_OK);
+    put_usize(&mut buf, steps.len());
+    for s in steps {
+        put_usize(&mut buf, s.k);
+        put_usize(&mut buf, s.mults);
+    }
+    put_usize(&mut buf, psi_re.len());
+    for &v in psi_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in psi_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Serialize a `StateChainJob` failure: `STATE_CHAIN_RESP_MAGIC | 1u8 |
+/// len | utf8`.
+pub fn encode_state_chain_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&STATE_CHAIN_RESP_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a `StateChainJob` response into `(psi_re, psi_im, steps)`; a
+/// server-reported failure comes back as `Err`.
+pub fn decode_state_chain_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, Vec<StateStep>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_CHAIN_RESP_MAGIC[..] {
+        bail!(
+            "not a state chain response (bad magic; got {} bytes)",
+            bytes.len()
+        );
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let nsteps = c.u64()?;
+            if nsteps > MAX_CHAIN_ITERS {
+                bail!("state chain response claims {nsteps} steps (allowed ≤ {MAX_CHAIN_ITERS})");
+            }
+            let mut steps = Vec::with_capacity(nsteps as usize);
+            for _ in 0..nsteps {
+                steps.push(StateStep {
+                    k: c.usize()?,
+                    mults: c.usize()?,
+                });
+            }
+            let n = c.usize()?;
+            let psi_re = c.f64s(n)?;
+            let psi_im = c.f64s(n)?;
+            c.done()?;
+            Ok((psi_re, psi_im, steps))
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("state chain worker reported: {msg}");
+        }
+        s => bail!("unknown state chain response status {s}"),
+    }
+}
+
 // --- the plane cache ------------------------------------------------------
 
 /// The server side of content addressing: a bounded map from plane
@@ -778,9 +1030,9 @@ pub struct JobRouter {
     plan_cap: usize,
     chain_engine: ShardCoordinator,
     pending_err: Option<String>,
-    /// Jobs answered (ok or err).
+    /// Jobs answered, SpMSpM and state alike (ok or err).
     pub jobs: u64,
-    /// Chain jobs answered (ok or err).
+    /// Chain jobs answered, operator and state alike (ok or err).
     pub chains: u64,
     /// Plan-memo hits across the connection.
     pub plan_hits: u64,
@@ -857,6 +1109,28 @@ impl JobRouter {
                     Err(msg) => Routed::Fail(encode_chain_err(&msg), msg),
                 }
             }
+            Some(m) if m == STATE_JOB_MAGIC => {
+                self.jobs += 1;
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_state_job(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok((re, im, mults)) => Routed::Reply(encode_ok(&re, &im, mults)),
+                    Err(msg) => Routed::Fail(encode_err(&msg), msg),
+                }
+            }
+            Some(m) if m == STATE_CHAIN_MAGIC => {
+                self.chains += 1;
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_state_chain(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_state_chain_err(&msg), msg),
+                }
+            }
             _ => {
                 let msg = format!(
                     "unknown shard frame ({} bytes; magic {:02x?})",
@@ -900,6 +1174,83 @@ impl JobRouter {
         let out = crate::taylor::ChainDriver::from_packed(&hp, refs.t)
             .run(refs.iters, &mut self.chain_engine)?;
         Ok(encode_chain_ok(&out.term, &out.op.freeze(), &out.steps))
+    }
+
+    fn run_state_job(&mut self, frame: &[u8]) -> Result<(Vec<f64>, Vec<f64>, u64)> {
+        let refs = decode_state_job(frame)?;
+        let h = self.resolve(refs.fp_h, refs.n, "H")?;
+        // The SpMV plan memo key: `H`'s offsets against the sentinel
+        // B-operand, exactly mirroring [`KernelEngine::plan_spmv`]'s
+        // client-side cache — a state chain hits this from its second
+        // iteration on.
+        let key = PlanKey {
+            n: refs.n,
+            tile: refs.tile,
+            a_offsets: h.offsets().to_vec(),
+            b_offsets: vec![crate::linalg::engine::SPMV_KEY_SENTINEL],
+        };
+        let planned = match self.plans.get(&key) {
+            Some(hit) => {
+                self.plan_hits += 1;
+                Arc::clone(hit)
+            }
+            None => {
+                let plan = crate::linalg::plan_spmv(&h);
+                let tiles = tile_plan(&plan, refs.tile);
+                if self.plans.len() >= self.plan_cap {
+                    self.plans.clear();
+                }
+                let entry = Arc::new((plan, tiles));
+                self.plans.insert(key, Arc::clone(&entry));
+                entry
+            }
+        };
+        let tiles = &planned.1;
+        if refs.task_hi > tiles.tasks.len() {
+            bail!(
+                "state shard range [{}, {}) out of bounds: plan has {} tile tasks",
+                refs.task_lo,
+                refs.task_hi,
+                tiles.tasks.len()
+            );
+        }
+        // The shipped window must cover everything the range reads —
+        // checked before any slice indexing so a mis-windowed frame is
+        // a structured error, never a panic.
+        if let Some((lo, hi)) = state_window(tiles, refs.task_lo, refs.task_hi) {
+            if refs.x_lo > lo || refs.x_lo + refs.x_re.len() < hi {
+                bail!(
+                    "state job ships x[{}, {}) but the range reads x[{lo}, {hi})",
+                    refs.x_lo,
+                    refs.x_lo + refs.x_re.len()
+                );
+            }
+        }
+        let run = &tiles.tasks[refs.task_lo..refs.task_hi];
+        let elems: usize = run.iter().map(|t| t.hi - t.lo).sum();
+        let mults: usize = run.iter().map(|t| t.mults).sum();
+        let mut re = vec![0f64; elems];
+        let mut im = vec![0f64; elems];
+        fill_state_range(
+            tiles,
+            refs.task_lo,
+            refs.task_hi,
+            &h,
+            &refs.x_re,
+            &refs.x_im,
+            refs.x_lo,
+            &mut re,
+            &mut im,
+        );
+        Ok((re, im, mults as u64))
+    }
+
+    fn run_state_chain(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let refs = decode_state_chain_job(frame)?;
+        let hp = self.resolve(refs.fp_h, refs.n, "H")?;
+        let out = crate::taylor::StateDriver::from_packed(&hp, refs.t, refs.psi_re, refs.psi_im)
+            .run(refs.iters, &mut self.chain_engine)?;
+        Ok(encode_state_chain_ok(&out.psi_re, &out.psi_im, &out.steps))
     }
 }
 
@@ -1140,7 +1491,8 @@ impl ProcessShardExecutor {
                 self.payload_bytes += plane_wire_bytes(b);
             }
             let job = encode_job(a.dim(), tile, r.task_lo, r.task_hi, fa, fb);
-            match self.spawn_worker(&put_a, &second, job, i) {
+            let frames = vec![Arc::clone(&put_a), Arc::clone(&second), Arc::new(job)];
+            match self.spawn_worker(frames, i) {
                 Ok(run) => running.push(run),
                 Err(e) => {
                     Self::kill_all(&mut running);
@@ -1148,7 +1500,67 @@ impl ProcessShardExecutor {
                 }
             }
         }
+        self.collect_all(running, sp, slots)
+    }
 
+    /// Execute every range of an SpMV [`ShardPlan`] on worker
+    /// processes: each non-empty range's worker is fed `hello | Put(H)
+    /// | StateJob`, where the job carries only the range's ψ halo
+    /// window ([`state_window`]). Output slices come back in shard
+    /// order, concatenation-ready. Same fail-fast contract as
+    /// [`ProcessShardExecutor::execute`].
+    pub fn execute_state(
+        &mut self,
+        h: &PackedDiagMatrix,
+        tiles: &TilePlan,
+        sp: &ShardPlan,
+        x_re: &[f64],
+        x_im: &[f64],
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
+            (0..sp.ranges.len()).map(|_| None).collect();
+        let mut running: Vec<Running> = Vec::new();
+        let fh = plane_fingerprint(h);
+        let put_h = Arc::new(encode_plane_put(fh, h));
+        for (i, r) in sp.ranges.iter().enumerate() {
+            if r.task_lo == r.task_hi {
+                slots[i] = Some((Vec::new(), Vec::new()));
+                continue;
+            }
+            self.payload_bytes += plane_wire_bytes(h);
+            let (x_lo, x_hi) = state_window(tiles, r.task_lo, r.task_hi).unwrap_or((0, 0));
+            let job = encode_state_job(
+                h.dim(),
+                tiles.tile,
+                r.task_lo,
+                r.task_hi,
+                fh,
+                x_lo,
+                &x_re[x_lo..x_hi],
+                &x_im[x_lo..x_hi],
+            );
+            match self.spawn_worker(vec![Arc::clone(&put_h), Arc::new(job)], i) {
+                Ok(run) => running.push(run),
+                Err(e) => {
+                    Self::kill_all(&mut running);
+                    return Err(e);
+                }
+            }
+        }
+        self.collect_all(running, sp, slots)
+    }
+
+    /// Collect every running worker's response slice into its shard
+    /// slot, cross-checking the returned element and multiply counts
+    /// against the parent's plan — the shared tail of
+    /// [`ProcessShardExecutor::execute`] and
+    /// [`ProcessShardExecutor::execute_state`].
+    fn collect_all(
+        &self,
+        mut running: Vec<Running>,
+        sp: &ShardPlan,
+        mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>>,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
         let mut failure: Option<anyhow::Error> = None;
         for idx in 0..running.len() {
             let shard = running[idx].shard;
@@ -1188,13 +1600,7 @@ impl ProcessShardExecutor {
             .collect())
     }
 
-    fn spawn_worker(
-        &self,
-        put_a: &Arc<Vec<u8>>,
-        second: &Arc<Vec<u8>>,
-        job: Vec<u8>,
-        shard: usize,
-    ) -> Result<Running> {
+    fn spawn_worker(&self, frames: Vec<Arc<Vec<u8>>>, shard: usize) -> Result<Running> {
         let mut child = Command::new(&self.worker_exe)
             .args(&self.worker_args)
             .stdin(Stdio::piped())
@@ -1207,23 +1613,21 @@ impl ProcessShardExecutor {
                     self.worker_exe.display()
                 )
             })?;
-        let put_a = Arc::clone(put_a);
-        let second = Arc::clone(second);
         let mut stdin = child.stdin.take().expect("piped stdin");
         // Feed on a thread: a worker that dies before draining its job
         // must not wedge the parent on a full pipe (the write fails
         // with EPIPE instead and the collect step reports the death).
         // The stream opens with the wire-version handshake, so a
         // version-skewed worker rejects the frames instead of
-        // mis-parsing; then the same framed Put/Put-or-Have/job
-        // sequence the TCP client sends.
+        // mis-parsing; then the same framed plane/job sequence the TCP
+        // client sends.
         std::thread::spawn(move || {
             use crate::coordinator::transport::{encode_hello, write_frame};
-            let _ = stdin
-                .write_all(&encode_hello())
-                .and_then(|()| write_frame(&mut stdin, &[&put_a]))
-                .and_then(|()| write_frame(&mut stdin, &[&second]))
-                .and_then(|()| write_frame(&mut stdin, &[&job]));
+            let mut res = stdin.write_all(&encode_hello());
+            for f in &frames {
+                res = res.and_then(|()| write_frame(&mut stdin, &[f]));
+            }
+            let _ = res;
             // stdin drops here → EOF, the worker's frame loop ends.
         });
         let mut stdout = child.stdout.take().expect("piped stdout");
@@ -1375,8 +1779,19 @@ pub struct ShardStats {
     /// have cost, so `payload_bytes + dedup_bytes_avoided` is the
     /// resend-every-time traffic and their ratio is the dedup win.
     pub dedup_bytes_avoided: u64,
-    /// Whole Taylor chains executed remotely as single `ChainJob`s.
+    /// Whole Taylor chains — operator (`ChainJob`) and state
+    /// (`StateChainJob`) alike — executed remotely as single jobs.
     pub remote_chain_jobs: u64,
+    /// Matrix-free SpMVs executed through the coordinator (sharded or
+    /// not).
+    pub state_multiplies: u64,
+    /// SpMV shard ranges dispatched to remote workers as `StateJob`s
+    /// (process or TCP backend; zero in-process).
+    pub remote_state_jobs: u64,
+    /// State-plane bytes shipped to remote SpMV workers: each range's ψ
+    /// halo window at 16 bytes per complex element — the traffic the
+    /// halo-window optimisation pays instead of `S` whole-state copies.
+    pub halo_bytes: u64,
 }
 
 /// Sum the payload/dedup counters across an endpoint-I/O slice — how
@@ -1657,6 +2072,27 @@ impl ShardCoordinator {
             a_offsets: a.offsets().to_vec(),
             b_offsets: b.offsets().to_vec(),
         };
+        self.shard_plan_cached(key, planned)
+    }
+
+    /// [`shard_plan_for`](Self::shard_plan_for) for an SpMV: the memo
+    /// key is `H`'s offsets against the [`SPMV_KEY_SENTINEL`] B-operand
+    /// (mirroring [`KernelEngine::plan_spmv`]'s cache key), so a state
+    /// chain shards once and replays every iteration.
+    fn shard_plan_for_spmv(
+        &mut self,
+        h: &PackedDiagMatrix,
+        planned: &PlannedProduct,
+    ) -> Arc<ShardPlan> {
+        let key = ShardKey {
+            n: h.dim(),
+            a_offsets: h.offsets().to_vec(),
+            b_offsets: vec![SPMV_KEY_SENTINEL],
+        };
+        self.shard_plan_cached(key, planned)
+    }
+
+    fn shard_plan_cached(&mut self, key: ShardKey, planned: &PlannedProduct) -> Arc<ShardPlan> {
         if let Some(hit) = self.cache.get(&key) {
             self.stats.shard_plan_reuses = self.stats.shard_plan_reuses.saturating_add(1);
             return Arc::clone(hit);
@@ -1668,6 +2104,167 @@ impl ShardCoordinator {
         }
         self.cache.insert(key, Arc::clone(&sp));
         sp
+    }
+
+    /// Matrix-free `y = H·x` across the configured shards, the state
+    /// held as SoA re/im planes. Bitwise identical to
+    /// [`KernelEngine::spmv`] on the same engine configuration for any
+    /// shard count and every backend: each shard range accumulates its
+    /// contributions in plan order and the slices concatenate in shard
+    /// order. Remote shards receive `H` content-addressed (at most once
+    /// per connection on TCP) plus only their ψ halo window
+    /// ([`state_window`]); `Err` only on transport failures. Returns
+    /// the output planes and the planned complex-multiply count.
+    pub fn spmv(
+        &mut self,
+        h: &PackedDiagMatrix,
+        x_re: &[f64],
+        x_im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, usize)> {
+        assert_eq!(x_re.len(), h.dim(), "state dimension mismatch");
+        assert_eq!(x_im.len(), h.dim(), "state dimension mismatch");
+        self.stats.state_multiplies = self.stats.state_multiplies.saturating_add(1);
+        let planned = self.engine.plan_spmv(h);
+        self.engine.record_execution(&planned);
+        let mults = planned.plan.mults;
+        if self.shards <= 1 {
+            let (re, im) = execute_spmv(
+                &planned.plan,
+                &planned.tiles,
+                &planned.schedule,
+                h,
+                x_re,
+                x_im,
+                self.engine.config().workers,
+            );
+            return Ok((re, im, mults));
+        }
+        let sp = self.shard_plan_for_spmv(h, &planned);
+        self.last_plan = Some(Arc::clone(&sp));
+
+        let backend = self.backend.clone();
+        let slices = match backend {
+            ShardBackend::InProc => execute_spmv_ranges(
+                &planned.tiles,
+                &sp,
+                h,
+                x_re,
+                x_im,
+                self.engine.config().workers,
+            ),
+            ShardBackend::Process => {
+                if self.executor.is_none() {
+                    self.executor = Some(ProcessShardExecutor::from_env()?);
+                }
+                self.note_halo(&planned.tiles, &sp);
+                let ex = self.executor.as_mut().expect("executor installed above");
+                let (p0, d0) = (ex.payload_bytes, ex.dedup_bytes_avoided);
+                let slices = ex.execute_state(h, &planned.tiles, &sp, x_re, x_im)?;
+                let (dp, dd) = (ex.payload_bytes - p0, ex.dedup_bytes_avoided - d0);
+                self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(dp);
+                self.stats.dedup_bytes_avoided =
+                    self.stats.dedup_bytes_avoided.saturating_add(dd);
+                slices
+            }
+            ShardBackend::Tcp { endpoints } => {
+                if self.tcp.is_none() {
+                    self.tcp =
+                        Some(crate::coordinator::transport::TcpShardExecutor::new(endpoints)?);
+                }
+                self.note_halo(&planned.tiles, &sp);
+                let tcp = self.tcp.as_mut().expect("executor installed above");
+                let (p0, d0) = io_payload_totals(tcp.io());
+                let slices = tcp.execute_state(h, &planned.tiles, &sp, x_re, x_im)?;
+                let (p1, d1) = io_payload_totals(tcp.io());
+                self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(p1 - p0);
+                self.stats.dedup_bytes_avoided =
+                    self.stats.dedup_bytes_avoided.saturating_add(d1 - d0);
+                slices
+            }
+        };
+
+        // Stitch: a state vector is one offset-0 output plane, so the
+        // shard slices concatenate — no offsets, no prune.
+        let n = h.dim();
+        let mut re = Vec::with_capacity(n);
+        let mut im = Vec::with_capacity(n);
+        for (sre, sim) in &slices {
+            re.extend_from_slice(sre);
+            im.extend_from_slice(sim);
+        }
+        debug_assert_eq!(re.len(), n, "shard slices must tile the state exactly");
+        self.stats.shards_used = self
+            .stats
+            .shards_used
+            .saturating_add(sp.ranges.len() as u64);
+        self.stats.stitch_bytes = self.stats.stitch_bytes.saturating_add(16 * n as u64);
+        Ok((re, im, mults))
+    }
+
+    /// Account the remote traffic of one sharded SpMV: a `StateJob` per
+    /// non-empty range, each shipping its halo window of ψ.
+    fn note_halo(&mut self, tiles: &TilePlan, sp: &ShardPlan) {
+        for r in &sp.ranges {
+            if r.task_lo == r.task_hi {
+                continue;
+            }
+            self.stats.remote_state_jobs = self.stats.remote_state_jobs.saturating_add(1);
+            if let Some((lo, hi)) = state_window(tiles, r.task_lo, r.task_hi) {
+                self.stats.halo_bytes =
+                    self.stats.halo_bytes.saturating_add(16 * (hi - lo) as u64);
+            }
+        }
+    }
+
+    /// Run a whole matrix-free `exp(−iHt)·ψ0` state chain through this
+    /// coordinator.
+    ///
+    /// On the TCP backend the chain ships as **one** `StateChainJob` to
+    /// the first endpoint: `H` travels once as a content-addressed
+    /// `PutPlane` (a repeated chain on the same coordinator ships only
+    /// a 20-byte `HavePlane`), ψ0 rides in the job frame, the daemon
+    /// runs the identical [`StateDriver`](crate::taylor::StateDriver)
+    /// loop body server-side, and the evolved planes plus per-step
+    /// multiply trace come back in a single response — bitwise
+    /// identical to the local chain by construction. On every other
+    /// backend this is exactly
+    /// [`apply_expm_sharded`](crate::taylor::apply_expm_sharded): the
+    /// chain runs locally, one [`ShardCoordinator::spmv`] per
+    /// iteration.
+    pub fn run_state_chain(
+        &mut self,
+        h: &DiagMatrix,
+        t: f64,
+        iters: usize,
+        psi0: &[crate::num::Complex],
+    ) -> Result<crate::taylor::StateResult> {
+        if let ShardBackend::Tcp { endpoints } = &self.backend {
+            if self.tcp.is_none() {
+                self.tcp = Some(crate::coordinator::transport::TcpShardExecutor::new(
+                    endpoints.clone(),
+                )?);
+            }
+            let hp = h.freeze();
+            let (x_re, x_im) = crate::linalg::split_state(psi0);
+            let tcp = self.tcp.as_mut().expect("executor installed above");
+            let (p0, d0) = io_payload_totals(tcp.io());
+            let (re, im, steps) = tcp.execute_state_chain(&hp, t, iters, &x_re, &x_im)?;
+            let (p1, d1) = io_payload_totals(tcp.io());
+            self.stats.state_multiplies =
+                self.stats.state_multiplies.saturating_add(iters as u64);
+            self.stats.remote_chain_jobs = self.stats.remote_chain_jobs.saturating_add(1);
+            self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(p1 - p0);
+            self.stats.dedup_bytes_avoided =
+                self.stats.dedup_bytes_avoided.saturating_add(d1 - d0);
+            return Ok(crate::taylor::StateResult {
+                psi: crate::linalg::join_state(&re, &im),
+                iters,
+                steps,
+                kernel: *self.engine.stats(),
+                shard: self.stats,
+            });
+        }
+        crate::taylor::apply_expm_sharded(h, t, iters, psi0, self)
     }
 }
 
@@ -1826,6 +2423,10 @@ mod tests {
             encode_err("boom"),
             encode_chain_ok(&a, &a, &[]),
             encode_chain_err("boom"),
+            encode_state_job(24, 16, 0, 2, fp, 3, &[1.0, 2.0], &[0.5, -0.5]),
+            encode_state_chain_job(2, 0.3, 4, fp, &[1.0, 0.0], &[0.0, 1.0]),
+            encode_state_chain_ok(&[1.0, 2.0], &[0.5, -0.5], &[StateStep { k: 1, mults: 4 }]),
+            encode_state_chain_err("boom"),
         ];
         let decode_any = |bytes: &[u8]| {
             let _ = decode_plane_put(bytes);
@@ -1834,6 +2435,9 @@ mod tests {
             let _ = decode_chain_job(bytes);
             let _ = decode_resp(bytes);
             let _ = decode_chain_resp(bytes);
+            let _ = decode_state_job(bytes);
+            let _ = decode_state_chain_job(bytes);
+            let _ = decode_state_chain_resp(bytes);
         };
         crate::testutil::prop_check("mutated/truncated decode never panics", 30, |rng| {
             let f = &frames[rng.gen_range(0, frames.len())];
@@ -1844,6 +2448,9 @@ mod tests {
             assert!(decode_job(&f[..cut]).is_err());
             assert!(decode_resp(&f[..cut]).is_err());
             assert!(decode_chain_resp(&f[..cut]).is_err());
+            assert!(decode_state_job(&f[..cut]).is_err());
+            assert!(decode_state_chain_job(&f[..cut]).is_err());
+            assert!(decode_state_chain_resp(&f[..cut]).is_err());
             decode_any(&f[..cut]);
             // Random byte flips: decoders may accept or reject, but
             // must never panic (length fields are all bounds-checked
@@ -2203,6 +2810,295 @@ mod tests {
         let (z, zs) = sc.multiply(&zero, &id).unwrap();
         assert_eq!(z.nnzd(), 0);
         assert_eq!(zs.mults, 0);
+    }
+
+    /// Deterministic interleaved state for the state-path tests.
+    fn test_state(n: usize) -> Vec<Complex> {
+        (0..n)
+            .map(|k| Complex::new(0.3 + 0.01 * k as f64, -0.2 + 0.02 * (k % 5) as f64))
+            .collect()
+    }
+
+    #[test]
+    fn state_job_wire_roundtrip() {
+        let x_re = vec![0.5, -1.25, 3.0];
+        let x_im = vec![0.0, 2.5, -0.125];
+        let bytes = encode_state_job(24, 64, 3, 9, 0xBEEF, 7, &x_re, &x_im);
+        assert_eq!(bytes.len(), 60 + 16 * 3, "60-byte header + 16 B/halo element");
+        let refs = decode_state_job(&bytes).unwrap();
+        assert_eq!(
+            (refs.n, refs.tile, refs.task_lo, refs.task_hi, refs.fp_h, refs.x_lo),
+            (24, 64, 3, 9, 0xBEEF, 7)
+        );
+        assert!(refs.x_re.iter().zip(&x_re).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(refs.x_im.iter().zip(&x_im).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Truncation, corruption, trailing bytes: Err, never panic.
+        assert!(decode_state_job(&bytes[..bytes.len() - 5]).is_err());
+        assert!(decode_state_job(b"nope").is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(decode_state_job(&extra).is_err());
+        // Inverted range and out-of-state windows rejected at decode.
+        assert!(decode_state_job(&encode_state_job(24, 64, 9, 3, 1, 0, &x_re, &x_im)).is_err());
+        assert!(
+            decode_state_job(&encode_state_job(4, 64, 0, 1, 1, 3, &[0.0; 2], &[0.0; 2]))
+                .is_err(),
+            "window [3, 5) exceeds dimension 4"
+        );
+    }
+
+    #[test]
+    fn state_chain_wire_roundtrip() {
+        let psi_re = vec![1.0, -0.0, 0.25];
+        let psi_im = vec![0.5, 2.0, -3.5];
+        let bytes = encode_state_chain_job(3, 0.25, 6, 0xFEED, &psi_re, &psi_im);
+        let refs = decode_state_chain_job(&bytes).unwrap();
+        assert_eq!((refs.n, refs.t, refs.iters, refs.fp_h), (3, 0.25, 6, 0xFEED));
+        assert!(refs.psi_re.iter().zip(&psi_re).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(refs.psi_im.iter().zip(&psi_im).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(decode_state_chain_job(&bytes[..10]).is_err());
+        assert!(
+            decode_state_chain_job(&encode_state_chain_job(3, 0.25, 0, 1, &psi_re, &psi_im))
+                .is_err()
+        );
+        assert!(decode_state_chain_job(&encode_state_chain_job(
+            3,
+            0.25,
+            MAX_CHAIN_ITERS as usize + 1,
+            1,
+            &psi_re,
+            &psi_im
+        ))
+        .is_err());
+        // Response: planes + per-step trace survive bit-exactly.
+        let steps = vec![StateStep { k: 1, mults: 12 }, StateStep { k: 2, mults: 12 }];
+        let resp = encode_state_chain_ok(&psi_re, &psi_im, &steps);
+        let (gre, gim, gsteps) = decode_state_chain_resp(&resp).unwrap();
+        assert!(gre.iter().zip(&psi_re).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(gim.iter().zip(&psi_im).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(gsteps, steps);
+        let err = decode_state_chain_resp(&encode_state_chain_err("psi went missing"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("psi went missing"));
+        assert!(decode_state_chain_resp(&resp[..resp.len() - 7]).is_err());
+        // Magics must not cross with the operator chain frames.
+        assert!(decode_chain_resp(&resp).is_err());
+        assert!(decode_chain_job(&bytes).is_err());
+    }
+
+    #[test]
+    fn router_executes_state_jobs_with_halo_windows() {
+        let h = band(64, 3);
+        let psi = test_state(64);
+        let (x_re, x_im) = crate::linalg::split_state(&psi);
+        let plan = crate::linalg::plan_spmv(&h);
+        let tiles = tile_plan(&plan, 16);
+        let sp = shard_plan(&tiles, 3);
+        let r = sp.ranges[1];
+        assert!(r.task_hi > r.task_lo, "middle shard must hold work");
+        let (x_lo, x_hi) = state_window(&tiles, r.task_lo, r.task_hi).unwrap();
+        let mut want_re = vec![0f64; r.elems];
+        let mut want_im = vec![0f64; r.elems];
+        fill_state_range(
+            &tiles, r.task_lo, r.task_hi, &h, &x_re, &x_im, 0, &mut want_re, &mut want_im,
+        );
+        let fp = plane_fingerprint(&h);
+        let mut router = JobRouter::new(DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP);
+        assert!(matches!(router.handle(&encode_plane_put(fp, &h)), Routed::Silent));
+        // The job ships only the halo window, not the whole state.
+        let job = encode_state_job(
+            64,
+            16,
+            r.task_lo,
+            r.task_hi,
+            fp,
+            x_lo,
+            &x_re[x_lo..x_hi],
+            &x_im[x_lo..x_hi],
+        );
+        let resp = match router.handle(&job) {
+            Routed::Reply(buf) => buf,
+            _ => panic!("state job must be answered"),
+        };
+        let (gre, gim, mults) = decode_resp(&resp).unwrap();
+        assert_eq!(mults as usize, r.mults);
+        assert!(gre.iter().zip(&want_re).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(gim.iter().zip(&want_im).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Replay: the SpMV plan memo hits.
+        assert_eq!(router.plan_hits, 0);
+        match router.handle(&job) {
+            Routed::Reply(_) => {}
+            _ => panic!("replayed state job must be answered"),
+        }
+        assert_eq!(router.plan_hits, 1);
+        assert_eq!(router.jobs, 2);
+        // A window that does not cover the range's reads: structured
+        // error naming the windows, not a panic.
+        let short = encode_state_job(
+            64,
+            16,
+            r.task_lo,
+            r.task_hi,
+            fp,
+            x_lo + 1,
+            &x_re[x_lo + 1..x_hi],
+            &x_im[x_lo + 1..x_hi],
+        );
+        match router.handle(&short) {
+            Routed::Fail(_, msg) => assert!(msg.contains("the range reads"), "{msg}"),
+            _ => panic!("under-covered state job must fail"),
+        }
+        // An unknown H plane: named plane miss.
+        let orphan = encode_state_job(64, 16, 0, 1, 0xDEAD, 0, &x_re, &x_im);
+        match router.handle(&orphan) {
+            Routed::Fail(_, msg) => assert!(msg.contains("unknown operand plane"), "{msg}"),
+            _ => panic!("state job referencing an unknown plane must fail"),
+        }
+    }
+
+    #[test]
+    fn router_runs_state_chain_bitwise_identical_to_local() {
+        let mut h = DiagMatrix::zeros(20);
+        for d in [-4i64, -1, 0, 1, 4] {
+            let len = DiagMatrix::diag_len(20, d);
+            h.set_diag(
+                d,
+                (0..len)
+                    .map(|k| Complex::new(0.7 - (k % 3) as f64 * 0.2, 0.1 * d as f64))
+                    .collect(),
+            );
+        }
+        let (t, iters) = (0.3, 5);
+        let psi0 = test_state(20);
+        let mut sc = ShardCoordinator::single();
+        let local = crate::taylor::apply_expm_sharded(&h, t, iters, &psi0, &mut sc).unwrap();
+        let hp = h.freeze();
+        let fp = plane_fingerprint(&hp);
+        let (x_re, x_im) = crate::linalg::split_state(&psi0);
+        let mut router = JobRouter::new(DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP);
+        assert!(matches!(router.handle(&encode_plane_put(fp, &hp)), Routed::Silent));
+        let resp = match router.handle(&encode_state_chain_job(20, t, iters, fp, &x_re, &x_im))
+        {
+            Routed::Reply(buf) => buf,
+            _ => panic!("state chain job must be answered"),
+        };
+        let (gre, gim, steps) = decode_state_chain_resp(&resp).unwrap();
+        let got = crate::linalg::join_state(&gre, &gim);
+        assert_eq!(got.len(), local.psi.len());
+        for (g, w) in got.iter().zip(&local.psi) {
+            assert_eq!(g.re.to_bits(), w.re.to_bits());
+            assert_eq!(g.im.to_bits(), w.im.to_bits());
+        }
+        assert_eq!(steps, local.steps);
+        assert_eq!(router.chains, 1);
+    }
+
+    #[test]
+    fn spmv_coordinator_is_bit_identical_and_reuses_shard_plans() {
+        let h = band(96, 3);
+        let psi = test_state(96);
+        let (x_re, x_im) = crate::linalg::split_state(&psi);
+        let (want, _) = crate::linalg::spmv_packed(&h, &psi);
+        let (want_re, want_im) = crate::linalg::split_state(&want);
+        for shards in [1usize, 2, 4, 8] {
+            let mut sc = ShardCoordinator::new(
+                EngineConfig {
+                    workers: 2,
+                    ..EngineConfig::default()
+                },
+                shards,
+                ShardBackend::InProc,
+            );
+            let (re, im, mults) = sc.spmv(&h, &x_re, &x_im).unwrap();
+            assert_eq!(mults, h.stored_elements(), "shards={shards}");
+            assert!(
+                re.iter().zip(&want_re).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={shards}"
+            );
+            assert!(
+                im.iter().zip(&want_im).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={shards}"
+            );
+            // Replay: the plan cache and shard-plan memo both hit.
+            let (re2, _, _) = sc.spmv(&h, &x_re, &x_im).unwrap();
+            assert_eq!(re2, re);
+            assert_eq!(sc.kernel_stats().plan_cache_hits, 1);
+            assert_eq!(sc.stats().state_multiplies, 2);
+            if shards > 1 {
+                assert_eq!(sc.stats().shard_plans_built, 1);
+                assert_eq!(sc.stats().shard_plan_reuses, 1);
+                assert_eq!(sc.stats().shards_used, 2 * shards as u64);
+                // In-process shards ship nothing.
+                assert_eq!(sc.stats().remote_state_jobs, 0);
+                assert_eq!(sc.stats().halo_bytes, 0);
+                // An SpMSpM on the same H must not collide with the
+                // SpMV entries in either memo (the sentinel key).
+                let before = sc.stats().shard_plans_built;
+                sc.multiply(&h, &h).unwrap();
+                assert_eq!(sc.stats().shard_plans_built, before + 1);
+            } else {
+                assert_eq!(sc.stats().shards_used, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn run_worker_executes_state_frames_over_the_pipe() {
+        // The worker entrypoint itself on state frames: Put(H) plus a
+        // windowed StateJob, then a StateChainJob on the same resident
+        // plane — both answered bitwise-identically to local execution.
+        let h = band(32, 2);
+        let psi = test_state(32);
+        let (x_re, x_im) = crate::linalg::split_state(&psi);
+        let plan = crate::linalg::plan_spmv(&h);
+        let tiles = tile_plan(&plan, 10);
+        let sp = shard_plan(&tiles, 2);
+        let r = sp.ranges[1];
+        let (x_lo, x_hi) = state_window(&tiles, r.task_lo, r.task_hi).unwrap();
+        let fp = plane_fingerprint(&h);
+        let mut input = crate::coordinator::transport::encode_hello().to_vec();
+        input.extend_from_slice(&framed(&encode_plane_put(fp, &h)));
+        input.extend_from_slice(&framed(&encode_state_job(
+            32,
+            10,
+            r.task_lo,
+            r.task_hi,
+            fp,
+            x_lo,
+            &x_re[x_lo..x_hi],
+            &x_im[x_lo..x_hi],
+        )));
+        input.extend_from_slice(&framed(&encode_state_chain_job(
+            32, 0.4, 4, fp, &x_re, &x_im,
+        )));
+        let mut out = Vec::new();
+        run_worker(&mut &input[..], &mut out).unwrap();
+        let hl = crate::coordinator::transport::HELLO_LEN;
+        crate::coordinator::transport::check_hello(&out[..hl]).unwrap();
+        let mut rest = &out[hl..];
+        let resp1 = crate::coordinator::transport::read_frame(&mut rest)
+            .unwrap()
+            .expect("worker must answer the state job");
+        let (wre, wim, mults) = decode_resp(&resp1).unwrap();
+        assert_eq!(mults as usize, r.mults);
+        let mut ere = vec![0f64; r.elems];
+        let mut eim = vec![0f64; r.elems];
+        fill_state_range(
+            &tiles, r.task_lo, r.task_hi, &h, &x_re, &x_im, 0, &mut ere, &mut eim,
+        );
+        assert!(wre.iter().zip(&ere).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(wim.iter().zip(&eim).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let resp2 = crate::coordinator::transport::read_frame(&mut rest)
+            .unwrap()
+            .expect("worker must answer the state chain");
+        let (cre, cim, steps) = decode_state_chain_resp(&resp2).unwrap();
+        let mut sc = ShardCoordinator::single();
+        let local = crate::taylor::StateDriver::from_packed(&h, 0.4, x_re.clone(), x_im.clone())
+            .run(4, &mut sc)
+            .unwrap();
+        assert!(cre.iter().zip(&local.psi_re).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(cim.iter().zip(&local.psi_im).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(steps, local.steps);
     }
 
     #[test]

@@ -46,14 +46,15 @@
 //! `chain-smoke` job gates the dedup win).
 
 use crate::coordinator::shard::{
-    decode_chain_resp, decode_resp, encode_chain_job, encode_err, encode_job,
-    encode_plane_have, encode_plane_put, matrix_wire_bytes, plane_fingerprint,
-    plane_wire_bytes, JobRouter, PlaneMirror, Routed, DEFAULT_PLANE_CACHE_CAP,
-    DEFAULT_PLAN_CACHE_CAP, DEFAULT_WORKER_TIMEOUT,
+    decode_chain_resp, decode_resp, decode_state_chain_resp, encode_chain_job, encode_err,
+    encode_job, encode_plane_have, encode_plane_put, encode_state_chain_job, encode_state_job,
+    matrix_wire_bytes, plane_fingerprint, plane_wire_bytes, JobRouter, PlaneMirror, Routed,
+    DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP, DEFAULT_WORKER_TIMEOUT,
 };
 use crate::format::PackedDiagMatrix;
-use crate::linalg::engine::ShardPlan;
-use crate::taylor::TaylorStep;
+use crate::linalg::engine::{ShardPlan, TilePlan};
+use crate::linalg::spmv::state_window;
+use crate::taylor::{StateStep, TaylorStep};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -72,8 +73,12 @@ use std::time::{Duration, Instant};
 /// v3 made operand planes content-addressed (`PutPlane`/`HavePlane`
 /// frames, fingerprint-referencing jobs) and added server-side
 /// `ChainJob` execution — a v2 job body no longer parses, which is
-/// exactly what the handshake equality check is for.
-pub const WIRE_VERSION: u32 = 3;
+/// exactly what the handshake equality check is for. v4 added the
+/// matrix-free state frames: halo-windowed `StateJob`s (`DSS1`) and
+/// server-side `StateChainJob` execution (`DSE1`/`DER1`) — a v3 peer
+/// would reject the new magics job-by-job, but a version gate at
+/// connect time diagnoses the skew once instead of per frame.
+pub const WIRE_VERSION: u32 = 4;
 
 /// Frame marker of the handshake (both directions, both transports).
 pub const HELLO_MAGIC: [u8; 4] = *b"DSHK";
@@ -476,6 +481,20 @@ struct PlaneShipment {
     full_payload: u64,
 }
 
+/// The single-operand analogue of [`PlaneShipment`] for state jobs:
+/// `H` is the only content-addressed plane (the ψ halo window travels
+/// inside the job frame itself, fresh every multiply by construction).
+struct StateShipment {
+    frame_h: Arc<Vec<u8>>,
+    put_h: Arc<Vec<u8>>,
+    /// Plane bytes the first attempt ships.
+    payload: u64,
+    /// Plane bytes the first attempt avoids via `HavePlane`.
+    dedup: u64,
+    /// Plane bytes a full resend ships (fallback attempt).
+    full_payload: u64,
+}
+
 /// Executes a [`ShardPlan`]'s ranges on remote `diamond shard-serve`
 /// daemons over TCP. One persistent connection per shard slot (slot `i`
 /// dials `endpoints[i % E]`), established lazily, handshake-checked,
@@ -770,6 +789,171 @@ impl TcpShardExecutor {
             .collect())
     }
 
+    /// Execute one matrix-free SpMV's shard ranges remotely: per range,
+    /// `H` travels content-addressed (a `PutPlane` once per connection,
+    /// 20-byte `HavePlane`s on every later multiply of a Taylor chain)
+    /// and the job frame carries only the ψ **halo window**
+    /// ([`state_window`]) that range actually reads — O(window) bytes
+    /// per shard instead of O(n). Same connection pool, fail-fast
+    /// collection, plans-diverged cross-checks and evicted-plane
+    /// self-healing as [`TcpShardExecutor::execute`].
+    pub fn execute_state(
+        &mut self,
+        h: &PackedDiagMatrix,
+        tiles: &TilePlan,
+        sp: &ShardPlan,
+        x_re: &[f64],
+        x_im: &[f64],
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        let n_ranges = sp.ranges.len();
+        if self.conns.len() < n_ranges {
+            self.conns.resize_with(n_ranges, || None);
+        }
+        let cap = self.plane_cache_cap;
+        if self.mirrors.len() < n_ranges {
+            self.mirrors.resize_with(n_ranges, || PlaneMirror::new(cap));
+        }
+        let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
+            (0..n_ranges).map(|_| None).collect();
+
+        for (i, r) in sp.ranges.iter().enumerate() {
+            if r.task_lo == r.task_hi {
+                slots[i] = Some((Vec::new(), Vec::new()));
+            } else if self.conns[i].is_none() {
+                match self.connect(i) {
+                    Ok(s) => {
+                        self.conns[i] = Some(s);
+                        self.mirrors[i].clear();
+                    }
+                    Err(e) => {
+                        self.poison();
+                        return Err(e);
+                    }
+                }
+            }
+        }
+
+        let fh = plane_fingerprint(h);
+        let put_h = Arc::new(encode_plane_put(fh, h));
+        let have_h = Arc::new(encode_plane_have(fh, h.dim()));
+        let h_bytes = plane_wire_bytes(h);
+
+        let (tx, rx) = mpsc::channel::<(usize, ExchangeResult)>();
+        let mut cancel: Vec<(usize, TcpStream)> = Vec::new();
+        let mut inflight = 0usize;
+        for (i, r) in sp.ranges.iter().enumerate() {
+            if r.task_lo == r.task_hi {
+                continue;
+            }
+            let resident = self.mirrors[i].note(fh);
+            let (frame_h, payload, dedup) = if resident {
+                (Arc::clone(&have_h), 0, h_bytes)
+            } else {
+                (Arc::clone(&put_h), h_bytes, 0)
+            };
+            let ship = StateShipment {
+                frame_h,
+                put_h: Arc::clone(&put_h),
+                payload,
+                dedup,
+                full_payload: h_bytes,
+            };
+            let stream = self.conns[i].as_ref().expect("connected above");
+            let (mut job_stream, cancel_stream) = match (stream.try_clone(), stream.try_clone())
+            {
+                (Ok(js), Ok(cs)) => (js, cs),
+                (Err(e), _) | (_, Err(e)) => {
+                    self.poison();
+                    return Err(anyhow::Error::from(e)
+                        .context(format!("cloning shard {i}'s connection handle")));
+                }
+            };
+            // Ship only the halo window the range reads, not all of ψ.
+            let (x_lo, x_hi) =
+                state_window(tiles, r.task_lo, r.task_hi).unwrap_or((0, 0));
+            let job = encode_state_job(
+                h.dim(),
+                tiles.tile,
+                r.task_lo,
+                r.task_hi,
+                fh,
+                x_lo,
+                &x_re[x_lo..x_hi],
+                &x_im[x_lo..x_hi],
+            );
+            let txc = tx.clone();
+            std::thread::spawn(move || {
+                let _ = txc.send((i, exchange_state(&mut job_stream, &job, &ship)));
+            });
+            cancel.push((i, cancel_stream));
+            inflight += 1;
+        }
+        drop(tx);
+
+        let deadline = Instant::now() + self.timeout;
+        let mut failure: Option<anyhow::Error> = None;
+        let mut done = 0usize;
+        while done < inflight && failure.is_none() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(remaining) {
+                Ok((i, Ok(x))) => {
+                    let r = &sp.ranges[i];
+                    if x.re.len() != r.elems {
+                        failure = Some(anyhow!(
+                            "shard {i} on {} returned {} elements, parent planned {} — plans diverged",
+                            self.endpoint_of(i),
+                            x.re.len(),
+                            r.elems
+                        ));
+                    } else if x.mults as usize != r.mults {
+                        failure = Some(anyhow!(
+                            "shard {i} on {} performed {} multiplies, parent planned {} — plans diverged",
+                            self.endpoint_of(i),
+                            x.mults,
+                            r.mults
+                        ));
+                    } else {
+                        if x.retried {
+                            // The recovery resend reset the server's
+                            // store to exactly {H}.
+                            self.mirrors[i].reset_to(&[fh]);
+                        }
+                        let rec = &mut self.io[i % self.endpoints.len()];
+                        rec.round_trips += 1;
+                        rec.bytes_sent += x.sent;
+                        rec.bytes_received += x.received;
+                        rec.payload_bytes += x.payload;
+                        rec.dedup_bytes_avoided += x.dedup;
+                        slots[i] = Some((x.re, x.im));
+                        done += 1;
+                    }
+                }
+                Ok((i, Err(e))) => {
+                    failure =
+                        Some(e.context(format!("shard {i} on {}", self.endpoint_of(i))));
+                }
+                Err(_) => {
+                    failure = Some(anyhow!(
+                        "no shard response within {:?} from {} — killed the stragglers",
+                        self.timeout,
+                        self.endpoints.join(", ")
+                    ));
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for (_, s) in &cancel {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            self.poison();
+            return Err(e);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every shard range collected"))
+            .collect())
+    }
+
     /// Run a whole Taylor chain as **one** remote `ChainJob` on shard
     /// slot 0's connection: `H` travels once (as a `PutPlane` on the
     /// first chain, a 20-byte `HavePlane` on repeats), the daemon runs
@@ -900,6 +1084,130 @@ impl TcpShardExecutor {
         Ok((term, sum, steps))
     }
 
+    /// Run a whole matrix-free `apply_expm` chain as **one** remote
+    /// `StateChainJob` on shard slot 0's connection: `H` travels
+    /// content-addressed (once per connection), ψ₀ rides in the job
+    /// frame, the daemon runs the
+    /// [`StateDriver`](crate::taylor::StateDriver) loop body, and the
+    /// evolved state + per-step multiply counts come back in a single
+    /// response. The dedup counter credits what a per-iteration
+    /// protocol would have shipped — `H` plus the full ψ term, every
+    /// step — against the one `H` plane and one ψ₀ actually sent.
+    pub fn execute_state_chain(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        x_re: &[f64],
+        x_im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<StateStep>)> {
+        let n = hp.dim();
+        if self.conns.is_empty() {
+            self.conns.push(None);
+        }
+        let cap = self.plane_cache_cap;
+        if self.mirrors.is_empty() {
+            self.mirrors.push(PlaneMirror::new(cap));
+        }
+        if self.conns[0].is_none() {
+            match self.connect(0) {
+                Ok(s) => {
+                    self.conns[0] = Some(s);
+                    self.mirrors[0].clear();
+                }
+                Err(e) => {
+                    self.poison();
+                    return Err(e);
+                }
+            }
+        }
+        let fh = plane_fingerprint(hp);
+        let put_h = encode_plane_put(fh, hp);
+        let have_h = encode_plane_have(fh, n);
+        let h_bytes = plane_wire_bytes(hp);
+        // The state plane (ψ₀ inside the job frame) is operand payload
+        // too: 16 bytes per element, shipped exactly once per chain.
+        let psi_bytes = 16 * n as u64;
+        let resident = self.mirrors[0].note(fh);
+        let job = encode_state_chain_job(n, t, iters, fh, x_re, x_im);
+
+        // The chain runs `iters` SpMVs before answering: scale the read
+        // deadline with the work instead of treating a long chain as a
+        // dead endpoint.
+        let chain_timeout = self
+            .timeout
+            .saturating_mul(iters.clamp(1, u32::MAX as usize) as u32);
+        let stream = self.conns[0].as_mut().expect("connected above");
+        let _ = stream.set_read_timeout(Some(chain_timeout));
+
+        // (result, plane bytes shipped, wire bytes sent/received, retried)
+        type StateChainRun = ((Vec<f64>, Vec<f64>, Vec<StateStep>), u64, u64, u64, bool);
+        let run = (|| -> Result<StateChainRun> {
+            let first: &Vec<u8> = if resident { &have_h } else { &put_h };
+            let first_shipped = if resident { 0 } else { h_bytes } + psi_bytes;
+            write_frame(stream, &[first]).context("sending state chain operand plane")?;
+            write_frame(stream, &[&job]).context("sending state chain job")?;
+            let mut sent = (16 + first.len() + job.len()) as u64;
+            let frame = read_frame(stream)
+                .context("reading state chain response")?
+                .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
+            let mut received = (8 + frame.len()) as u64;
+            match decode_state_chain_resp(&frame) {
+                Ok(out) => Ok((out, first_shipped, sent, received, false)),
+                Err(e) if format!("{e:#}").contains("unknown operand plane") => {
+                    // The server evicted H (or our mirror over-assumed
+                    // its cap): resend in full, once.
+                    write_frame(stream, &[&put_h])
+                        .context("resending state chain operand plane")?;
+                    write_frame(stream, &[&job]).context("resending state chain job")?;
+                    sent += (16 + put_h.len() + job.len()) as u64;
+                    let frame = read_frame(stream)
+                        .context("reading state chain response after resend")?
+                        .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
+                    received += (8 + frame.len()) as u64;
+                    let out = decode_state_chain_resp(&frame)?;
+                    Ok((out, first_shipped + h_bytes + psi_bytes, sent, received, true))
+                }
+                Err(e) => Err(e),
+            }
+        })();
+        // Restore the per-multiply deadline for subsequent jobs on this
+        // connection.
+        if let Some(s) = self.conns[0].as_mut() {
+            let _ = s.set_read_timeout(Some(self.timeout));
+        }
+        let ((re, im, steps), shipped, sent, received, retried) = match run {
+            Ok(v) => v,
+            Err(e) => {
+                self.poison();
+                return Err(e.context(format!("state chain job on {}", self.endpoint_of(0))));
+            }
+        };
+        if steps.len() != iters {
+            self.poison();
+            bail!(
+                "state chain job on {} returned {} steps, expected {iters}",
+                self.endpoint_of(0),
+                steps.len()
+            );
+        }
+        if retried {
+            self.mirrors[0].reset_to(&[fh]);
+        }
+        // What a resend-every-iteration protocol would have shipped:
+        // each of the `iters` SpMVs moves H's plane plus the full
+        // previous ψ term (states never sparsify, so every term costs
+        // 16n bytes).
+        let resend_model = (iters as u64).saturating_mul(h_bytes + psi_bytes);
+        let rec = &mut self.io[0];
+        rec.round_trips += 1;
+        rec.bytes_sent += sent;
+        rec.bytes_received += received;
+        rec.payload_bytes += shipped;
+        rec.dedup_bytes_avoided += resend_model.saturating_sub(shipped);
+        Ok((re, im, steps))
+    }
+
     /// The endpoint serving shard slot `i`.
     fn endpoint_of(&self, slot: usize) -> &str {
         &self.endpoints[slot % self.endpoints.len()]
@@ -968,6 +1276,53 @@ fn exchange(stream: &mut TcpStream, job: &[u8], ship: &PlaneShipment) -> Exchang
                 // The first attempt's Haves turned out not to cover
                 // reality; everything actually shipped, nothing was
                 // avoided.
+                payload: ship.payload + ship.full_payload,
+                dedup: 0,
+                retried: true,
+            })
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// One state-job round-trip on an exchange thread: a framed `H` plane
+/// (Put or Have), the halo-windowed job, framed response, decode. Same
+/// evicted-plane self-healing as [`exchange`], with a single operand:
+/// the ψ window is part of the job frame and needs no recovery logic.
+fn exchange_state(stream: &mut TcpStream, job: &[u8], ship: &StateShipment) -> ExchangeResult {
+    write_frame(stream, &[&ship.frame_h]).context("sending state operand plane")?;
+    write_frame(stream, &[job]).context("sending state job")?;
+    let mut sent = (16 + ship.frame_h.len() + job.len()) as u64;
+    let frame = read_frame(stream)
+        .context("reading state job response")?
+        .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
+    let mut received = (8 + frame.len()) as u64;
+    match decode_resp(&frame) {
+        Ok((re, im, mults)) => Ok(Exchanged {
+            re,
+            im,
+            mults,
+            sent,
+            received,
+            payload: ship.payload,
+            dedup: ship.dedup,
+            retried: false,
+        }),
+        Err(e) if format!("{e:#}").contains("unknown operand plane") => {
+            write_frame(stream, &[&ship.put_h]).context("resending state operand plane")?;
+            write_frame(stream, &[job]).context("resending state job")?;
+            sent += (16 + ship.put_h.len() + job.len()) as u64;
+            let frame = read_frame(stream)
+                .context("reading state job response after resend")?
+                .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
+            received += (8 + frame.len()) as u64;
+            let (re, im, mults) = decode_resp(&frame)?;
+            Ok(Exchanged {
+                re,
+                im,
+                mults,
+                sent,
+                received,
                 payload: ship.payload + ship.full_payload,
                 dedup: 0,
                 retried: true,
@@ -1165,5 +1520,86 @@ mod tests {
     fn executor_requires_endpoints() {
         let err = format!("{:#}", TcpShardExecutor::new(Vec::new()).unwrap_err());
         assert!(err.contains("--shard-endpoints"), "{err}");
+    }
+
+    #[test]
+    fn tcp_executor_state_matches_local_bitwise() {
+        // Sharded SpMV over real loopback sockets must reproduce the
+        // single-engine kernel bit for bit, and a second multiply of
+        // the same H must travel as Haves (dedup credited, payload
+        // flat) while the ψ halo windows ride in every job frame.
+        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let h = band(64, 2);
+        let n = h.dim();
+        let psi: Vec<Complex> = (0..n)
+            .map(|k| Complex::new(0.3 + 0.01 * k as f64, -0.2 + 0.02 * (k % 7) as f64))
+            .collect();
+        let (want, _) = crate::linalg::spmv_packed(&h, &psi);
+        let plan = crate::linalg::plan_spmv(&h);
+        let tiles = tile_plan(&plan, 16);
+        let sp = crate::linalg::engine::shard_plan(&tiles, 3);
+        assert!(sp.ranges.iter().filter(|r| r.task_lo != r.task_hi).count() > 1);
+        let (x_re, x_im) = crate::linalg::split_state(&psi);
+
+        let mut ex = TcpShardExecutor::new(vec![server.endpoint()]).unwrap();
+        let mut payload_after_first = 0u64;
+        for round in 0..2 {
+            let slices = ex.execute_state(&h, &tiles, &sp, &x_re, &x_im).unwrap();
+            let got_re: Vec<f64> =
+                slices.iter().flat_map(|(r, _)| r.iter().copied()).collect();
+            let got_im: Vec<f64> =
+                slices.iter().flat_map(|(_, i)| i.iter().copied()).collect();
+            assert_eq!(got_re.len(), n, "round {round}");
+            for k in 0..n {
+                assert_eq!(got_re[k].to_bits(), want[k].re.to_bits(), "round {round} re[{k}]");
+                assert_eq!(got_im[k].to_bits(), want[k].im.to_bits(), "round {round} im[{k}]");
+            }
+            let io = &ex.io()[0];
+            if round == 0 {
+                payload_after_first = io.payload_bytes;
+                assert!(payload_after_first > 0);
+                assert_eq!(io.dedup_bytes_avoided, 0);
+            } else {
+                assert_eq!(io.payload_bytes, payload_after_first, "H re-shipped");
+                assert!(io.dedup_bytes_avoided > 0, "Haves not credited");
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_executor_state_chain_matches_local_bitwise() {
+        // A server-side state chain must reproduce the local
+        // StateDriver loop bit for bit (same loop body on both sides),
+        // and the second chain on the same connection must dedup H.
+        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let h = band(20, 2);
+        let (t, iters) = (0.3, 5usize);
+        let psi: Vec<Complex> = (0..h.dim())
+            .map(|k| Complex::new(0.1 + 0.02 * k as f64, 0.05 * (k % 3) as f64))
+            .collect();
+        let (x_re, x_im) = crate::linalg::split_state(&psi);
+        let mut sc = crate::coordinator::shard::ShardCoordinator::single();
+        let want = crate::taylor::StateDriver::from_packed(&h, t, x_re.clone(), x_im.clone())
+            .run(iters, &mut sc)
+            .unwrap();
+
+        let mut ex = TcpShardExecutor::new(vec![server.endpoint()]).unwrap();
+        for round in 0..2 {
+            let (re, im, steps) = ex
+                .execute_state_chain(&h, t, iters, &x_re, &x_im)
+                .unwrap();
+            assert_eq!(steps, want.steps, "round {round}");
+            assert!(re
+                .iter()
+                .zip(&want.psi_re)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(im
+                .iter()
+                .zip(&want.psi_im)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        let io = &ex.io()[0];
+        assert_eq!(io.round_trips, 2);
+        assert!(io.dedup_bytes_avoided > 0, "repeat chain did not dedup H");
     }
 }

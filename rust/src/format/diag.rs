@@ -288,13 +288,25 @@ impl DiagMatrix {
         worst
     }
 
-    /// Matrix–vector product `self · x` (state application path).
+    /// Matrix–vector product `self · x` (state application path). Each
+    /// stored diagonal is one contiguous slice-window AXPY: diagonal `d`
+    /// maps `x[c0..c0+len]` onto `y[r0..r0+len]` with `r0 = max(0, −d)`,
+    /// `c0 = max(0, d)` — no per-element index arithmetic. Accumulation
+    /// order (ascending offset, ascending element) and the complex
+    /// expansion match the seed's per-element formulation and the packed
+    /// SpMV kernel ([`crate::linalg::spmv`]), so all three are
+    /// bit-identical.
     pub fn matvec(&self, x: &[Complex]) -> Vec<Complex> {
         assert_eq!(x.len(), self.n);
         let mut y = vec![ZERO; self.n];
         for (&d, vals) in &self.diags {
-            for (k, &v) in vals.iter().enumerate() {
-                y[Self::row_of(d, k)] += v * x[Self::col_of(d, k)];
+            let r0 = Self::row_of(d, 0);
+            let c0 = Self::col_of(d, 0);
+            let len = vals.len();
+            for ((yv, &xv), &v) in
+                y[r0..r0 + len].iter_mut().zip(&x[c0..c0 + len]).zip(vals)
+            {
+                *yv += v * xv;
             }
         }
         y
@@ -878,6 +890,47 @@ mod tests {
         assert_eq!(y[0], c(7.0)); // 1*1 + 2*3
         assert_eq!(y[1], c(3.0)); // 3*1
         assert_eq!(y[2], I * c(2.0));
+    }
+
+    #[test]
+    fn matvec_slice_windows_match_per_element_bitwise() {
+        // The slice-windowed matvec must reproduce the seed's
+        // per-element BTreeMap loop to the bit: same accumulation order
+        // (ascending offset, ascending element), same complex expansion.
+        let seed_matvec = |m: &DiagMatrix, x: &[Complex]| -> Vec<Complex> {
+            let mut y = vec![ZERO; m.dim()];
+            for (d, vals) in m.iter() {
+                for (k, &v) in vals.iter().enumerate() {
+                    y[DiagMatrix::row_of(d, k)] += v * x[DiagMatrix::col_of(d, k)];
+                }
+            }
+            y
+        };
+        crate::testutil::prop_check("matvec == seed matvec (bitwise)", 32, |rng| {
+            let n = rng.gen_range(1, 48);
+            let mut m = DiagMatrix::zeros(n);
+            for _ in 0..rng.gen_range(1, 8) {
+                let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+                let len = DiagMatrix::diag_len(n, d);
+                m.set_diag(
+                    d,
+                    (0..len)
+                        .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                        .collect(),
+                );
+            }
+            let x: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                .collect();
+            let want = seed_matvec(&m, &x);
+            let got = m.matvec(&x);
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.re.to_bits() != w.re.to_bits() || g.im.to_bits() != w.im.to_bits() {
+                    return Err(format!("n={n} element {k}: {g:?} != {w:?}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

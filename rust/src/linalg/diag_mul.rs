@@ -196,6 +196,48 @@ pub fn plan_diag_mul(a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> MulPlan {
     }
 }
 
+/// Phase 1 for SpMV: plan `y = H·x` where `x`/`y` are state vectors held
+/// as SoA re/im planes. The whole state is modeled as **one output
+/// diagonal** of offset 0 and length `n`, so the plan runs unchanged
+/// through the tiling/scheduling/sharding layers built for SpMSpM
+/// ([`crate::linalg::engine`]). Each stored diagonal `d` of `H`
+/// contributes one strided AXPY: `y[r0..r0+len] += H_d[0..len] ·
+/// x[c0..c0+len]` with `r0 = max(0, −d)`, `c0 = max(0, d)` — the
+/// contribution's `kc0` is the y-window start and `kb0` the x-window
+/// start (`b_idx` is unused; the "B operand" is the state itself).
+/// Contribution order is ascending `d` (the determinism contract the
+/// state executors replay).
+pub fn plan_spmv(h: &PackedDiagMatrix) -> MulPlan {
+    let n = h.dim();
+    let mut contribs = Vec::with_capacity(h.nnzd());
+    let mut mults = 0usize;
+    for (a_idx, &d) in h.offsets().iter().enumerate() {
+        let len = DiagMatrix::diag_len(n, d);
+        mults = mults.saturating_add(len);
+        contribs.push(Contribution {
+            a_idx,
+            b_idx: 0,
+            ka0: 0,
+            kb0: 0i64.max(d) as usize,
+            kc0: 0i64.max(-d) as usize,
+            len,
+        });
+    }
+    let written = merged_coverage(contribs.iter().map(|c| (c.kc0, c.kc0 + c.len)).collect());
+    MulPlan {
+        n,
+        outs: vec![OutDiagPlan {
+            offset: 0,
+            len: n,
+            written,
+            contribs,
+        }],
+        out_offsets: vec![0],
+        mults,
+        writes: written,
+    }
+}
+
 /// Accumulate `contribs` into the destination plane window starting at
 /// storage index `base` of the output diagonal's frame, in plan order
 /// (the determinism contract). This is the SoA hot loop: four contiguous
@@ -543,6 +585,30 @@ mod tests {
         let c = diag_mul(&a, &a);
         let oracle = d.matmul(&d);
         assert!(diag_to_dense(&c).max_abs_diff(&oracle) < 1e-14);
+    }
+
+    #[test]
+    fn spmv_plan_structure_is_exact() {
+        let n = 10;
+        let mut h = DiagMatrix::zeros(n);
+        h.set_diag(-3, vec![ONE; 7]);
+        h.set_diag(0, vec![ONE; 10]);
+        h.set_diag(2, vec![ONE; 8]);
+        let plan = plan_spmv(&h.freeze());
+        // One output "diagonal": the state vector itself.
+        assert_eq!(plan.offsets(), vec![0]);
+        assert_eq!(plan.outs.len(), 1);
+        let out = &plan.outs[0];
+        assert_eq!(out.len, n);
+        // d=-3: y[3..10] += H·x[0..7]; d=0: y[0..10]; d=2: y[0..8] += H·x[2..10].
+        assert_eq!(out.contribs.len(), 3);
+        assert_eq!((out.contribs[0].kc0, out.contribs[0].kb0, out.contribs[0].len), (3, 0, 7));
+        assert_eq!((out.contribs[1].kc0, out.contribs[1].kb0, out.contribs[1].len), (0, 0, 10));
+        assert_eq!((out.contribs[2].kc0, out.contribs[2].kb0, out.contribs[2].len), (0, 2, 8));
+        // mults = stored elements of H; every row is written at least once.
+        assert_eq!(plan.mults, 7 + 10 + 8);
+        assert_eq!(plan.writes, n);
+        assert_eq!(out.written, n);
     }
 
     #[test]

@@ -713,6 +713,11 @@ pub struct KernelStats {
     pub unit_mult_skew_pct: u64,
 }
 
+/// Sentinel B-operand "offset" for SpMV plan-cache keys (see
+/// [`KernelEngine::plan_spmv`]): a real diagonal offset is bounded by
+/// `±(n − 1)`, so `i64::MAX` can never collide with an SpMSpM key.
+pub const SPMV_KEY_SENTINEL: i64 = i64::MAX;
+
 /// Cache key: a plan is fully determined by the operand offset sets and
 /// the dimension.
 #[derive(Clone, Debug, Hash, PartialEq, Eq)]
@@ -827,7 +832,13 @@ impl KernelEngine {
     }
 
     fn build(&mut self, a: &PackedDiagMatrix, b: &PackedDiagMatrix) -> Arc<PlannedProduct> {
-        let plan = plan_diag_mul(a, b);
+        self.finish_build(plan_diag_mul(a, b))
+    }
+
+    /// Tile + schedule an already-built Minkowski (or SpMV) plan under
+    /// the engine configuration — the shared tail of [`KernelEngine::build`]
+    /// and [`KernelEngine::plan_spmv`].
+    fn finish_build(&mut self, plan: MulPlan) -> Arc<PlannedProduct> {
         let total: usize = plan.outs.iter().map(|o| o.len).sum();
         let tile = self.cfg.tile.resolve(total, self.cfg.workers);
         let tiles = tile_plan(&plan, tile);
@@ -845,6 +856,61 @@ impl KernelEngine {
             tiles,
             schedule,
         })
+    }
+
+    /// Plan `H·ψ` (SpMV) — one whole-state output diagonal, tiled and
+    /// scheduled like any product plan, and cached in the same plan
+    /// cache under the [`SPMV_KEY_SENTINEL`] B-operand key (no legal
+    /// diagonal offset reaches `i64::MAX`, so SpMV plans never collide
+    /// with SpMSpM plans over the same `H`). A Taylor state chain hits
+    /// this cache from the second iteration on: `H`'s offsets never
+    /// change.
+    pub fn plan_spmv(&mut self, h: &PackedDiagMatrix) -> Arc<PlannedProduct> {
+        if self.cfg.cache_plans {
+            let key = PlanKey {
+                n: h.dim(),
+                a_offsets: h.offsets().to_vec(),
+                b_offsets: vec![SPMV_KEY_SENTINEL],
+            };
+            if let Some(hit) = self.cache.get(&key) {
+                self.stats.plan_cache_hits = self.stats.plan_cache_hits.saturating_add(1);
+                return Arc::clone(hit);
+            }
+            self.stats.plan_cache_misses = self.stats.plan_cache_misses.saturating_add(1);
+            let planned = self.finish_build(diag_mul::plan_spmv(h));
+            if self.cache.len() >= self.cfg.cache_capacity.max(1) {
+                self.cache.clear();
+            }
+            self.cache.insert(key, Arc::clone(&planned));
+            planned
+        } else {
+            self.finish_build(diag_mul::plan_spmv(h))
+        }
+    }
+
+    /// Matrix-free `y = H·x` over SoA state planes through the full
+    /// engine stack: cached SpMV plan → tiled, scheduled execution
+    /// across the worker pool. Updates the same execution counters as
+    /// [`KernelEngine::multiply`].
+    pub fn spmv(
+        &mut self,
+        h: &PackedDiagMatrix,
+        x_re: &[f64],
+        x_im: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(x_re.len(), h.dim(), "state dimension mismatch");
+        assert_eq!(x_im.len(), h.dim(), "state dimension mismatch");
+        let planned = self.plan_spmv(h);
+        self.record_execution(&planned);
+        super::spmv::execute_spmv(
+            &planned.plan,
+            &planned.tiles,
+            &planned.schedule,
+            h,
+            x_re,
+            x_im,
+            self.cfg.workers,
+        )
     }
 
     /// Record the execution counters for `planned` (multiplies, tiles,
@@ -1253,6 +1319,33 @@ mod tests {
             per_tile.stats().tiles_executed,
             "coalescing off means one unit per tile"
         );
+    }
+
+    #[test]
+    fn spmv_through_engine_caches_and_matches_serial() {
+        let h = band(300, 3);
+        let psi: Vec<Complex> = (0..300)
+            .map(|k| Complex::new(0.1 + k as f64 * 1e-3, -0.2 + (k % 5) as f64 * 0.07))
+            .collect();
+        let (x_re, x_im) = crate::linalg::split_state(&psi);
+        let mut eng = KernelEngine::with_defaults();
+        let (re1, im1) = eng.spmv(&h, &x_re, &x_im);
+        assert_eq!(eng.stats().plan_cache_hits, 0);
+        assert_eq!(eng.stats().plans_built, 1);
+        let (re2, im2) = eng.spmv(&h, &x_re, &x_im);
+        assert_eq!(eng.stats().plan_cache_hits, 1, "repeat SpMV must hit the cache");
+        assert_eq!(re1, re2);
+        assert_eq!(im1, im2);
+        // An SpMSpM over the same H must not be served the SpMV plan.
+        eng.multiply(&h, &h);
+        assert_eq!(eng.stats().plans_built, 2, "sentinel key must not collide");
+        // Engine path is bit-identical to the serial convenience path.
+        let (want, _) = crate::linalg::spmv_packed(&h, &psi);
+        let got = crate::linalg::join_state(&re1, &im1);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.re.to_bits(), w.re.to_bits());
+            assert_eq!(g.im.to_bits(), w.im.to_bits());
+        }
     }
 
     #[test]

@@ -18,15 +18,17 @@ pub mod diag_mul;
 pub mod engine;
 pub mod gustavson;
 pub mod outer;
+pub mod spmv;
 
 pub use diag_mul::{
     diag_mul, diag_mul_counted, diag_mul_parallel, diag_mul_reference, execute_plan,
-    packed_diag_mul_counted, packed_diag_mul_parallel, plan_diag_mul, MulPlan,
+    packed_diag_mul_counted, packed_diag_mul_parallel, plan_diag_mul, plan_spmv, MulPlan,
 };
 pub use engine::{
     shard_plan, EngineConfig, KernelEngine, KernelStats, PlannedProduct, ShardPlan,
     ShardRange, TileMode, WorkSchedule,
 };
+pub use spmv::{join_state, split_state, spmv_packed};
 pub use gustavson::gustavson_mul;
 pub use outer::outer_mul;
 

@@ -1,0 +1,413 @@
+//! Matrix-free diagonal SpMV: `y = H·x` where `x`/`y` are state vectors
+//! held as split SoA re/im planes (the DiaQ direction — see
+//! `docs/ARCHITECTURE.md` §State-vector layer).
+//!
+//! Every stored diagonal of `H` is one contiguous strided AXPY over the
+//! state vector: `y[r0..r0+len] += H_d · x[c0..c0+len]` — denser and
+//! more vectorizable than any SpMSpM tile, since both operand streams
+//! and the output stream are unit-stride `f64` planes.
+//!
+//! The whole state vector is planned as **one output diagonal** of
+//! offset 0 ([`crate::linalg::diag_mul::plan_spmv`]), so the existing
+//! tiling ([`crate::linalg::engine::tile_plan`]), coalescing
+//! ([`crate::linalg::engine::schedule_work`]) and shard partitioning
+//! ([`crate::linalg::engine::shard_plan`]) layers apply unchanged: a
+//! tile is a cache-sized segment of `y`, a shard range is a contiguous
+//! run of segments, and stitching is plain concatenation.
+//!
+//! **Halo windows.** A task range writing `y[lo..hi)` reads only
+//! `x[lo − max_d .. hi + max_{−d})` — the range's clipped contributions
+//! name the exact window ([`state_window`]). Remote state shards
+//! therefore ship only their ψ window (plus `H` once, content
+//! addressed), not the whole state.
+//!
+//! **Determinism contract.** Per output element, contributions land in
+//! ascending-offset plan order regardless of tile size, schedule,
+//! worker count or shard count; the complex product expands in the same
+//! operation order as interleaved `Complex` mul/add. Every execution
+//! path — including `DiagMatrix::matvec` — is therefore bit-identical.
+
+use super::diag_mul::Contribution;
+use super::engine::{ShardPlan, TilePlan, WorkSchedule};
+use super::{MulPlan, OpStats};
+use crate::format::PackedDiagMatrix;
+use crate::num::Complex;
+
+/// Split an interleaved `Complex` state vector into SoA re/im planes.
+pub fn split_state(x: &[Complex]) -> (Vec<f64>, Vec<f64>) {
+    (x.iter().map(|c| c.re).collect(), x.iter().map(|c| c.im).collect())
+}
+
+/// Reassemble SoA re/im planes into an interleaved `Complex` vector.
+pub fn join_state(re: &[f64], im: &[f64]) -> Vec<Complex> {
+    assert_eq!(re.len(), im.len());
+    re.iter().zip(im).map(|(&r, &i)| Complex::new(r, i)).collect()
+}
+
+/// Accumulate `contribs` into the `y` window starting at storage index
+/// `base`, reading the state from re/im planes whose element 0 is state
+/// index `x_base` (0 for a full state; a halo window's start for a
+/// remote shard). The SpMV analogue of
+/// [`crate::linalg::diag_mul::fill_window`], with the same complex
+/// expansion order — the bitwise-identity anchor for every state path.
+pub fn fill_state_window(
+    contribs: &[Contribution],
+    base: usize,
+    h: &PackedDiagMatrix,
+    x_re: &[f64],
+    x_im: &[f64],
+    x_base: usize,
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) {
+    debug_assert_eq!(dst_re.len(), dst_im.len());
+    for c in contribs {
+        let hr = &h.re_at(c.a_idx)[c.ka0..c.ka0 + c.len];
+        let hi = &h.im_at(c.a_idx)[c.ka0..c.ka0 + c.len];
+        let xo = c.kb0 - x_base;
+        let xr = &x_re[xo..xo + c.len];
+        let xi = &x_im[xo..xo + c.len];
+        let o = c.kc0 - base;
+        let wr = &mut dst_re[o..o + c.len];
+        let wi = &mut dst_im[o..o + c.len];
+        for k in 0..c.len {
+            wr[k] += hr[k] * xr[k] - hi[k] * xi[k];
+            wi[k] += hr[k] * xi[k] + hi[k] * xr[k];
+        }
+    }
+}
+
+/// Execute the contiguous tile-task run `[task_lo, task_hi)` of an SpMV
+/// tile plan into the `y` slice that run owns (`dst_re`/`dst_im` must be
+/// exactly the run's total window length). The state planes start at
+/// state index `x_base` and must cover the run's [`state_window`].
+/// The SpMV analogue of [`crate::linalg::engine::fill_task_range`] —
+/// shared by the scheduled executor, the in-process shard executor and
+/// the remote state-job handlers.
+pub fn fill_state_range(
+    tiles: &TilePlan,
+    task_lo: usize,
+    task_hi: usize,
+    h: &PackedDiagMatrix,
+    x_re: &[f64],
+    x_im: &[f64],
+    x_base: usize,
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) {
+    debug_assert_eq!(dst_re.len(), dst_im.len());
+    let mut off = 0usize;
+    for task in &tiles.tasks[task_lo..task_hi] {
+        let len = task.hi - task.lo;
+        fill_state_window(
+            &task.contribs,
+            task.lo,
+            h,
+            x_re,
+            x_im,
+            x_base,
+            &mut dst_re[off..off + len],
+            &mut dst_im[off..off + len],
+        );
+        off += len;
+    }
+    debug_assert_eq!(off, dst_re.len());
+}
+
+/// The halo window of a task range: the state-index interval
+/// `[x_lo, x_hi)` its clipped contributions read (`None` for a range
+/// with no contributions — its output stays zero and it needs no state
+/// at all). Remote state shards ship exactly this window of ψ.
+pub fn state_window(tiles: &TilePlan, task_lo: usize, task_hi: usize) -> Option<(usize, usize)> {
+    let mut window: Option<(usize, usize)> = None;
+    for task in &tiles.tasks[task_lo..task_hi] {
+        for c in &task.contribs {
+            let (lo, hi) = (c.kb0, c.kb0 + c.len);
+            window = Some(match window {
+                None => (lo, hi),
+                Some((wl, wh)) => (wl.min(lo), wh.max(hi)),
+            });
+        }
+    }
+    window
+}
+
+/// Execute an SpMV plan under a [`WorkSchedule`]: every unit is written
+/// by exactly one worker into its disjoint slice of the output `y`
+/// planes, fanned across the pool above
+/// [`crate::linalg::diag_mul::PARALLEL_MULTS_THRESHOLD`] multiplies.
+/// Unlike the SpMSpM executor the output is a **state vector**, so no
+/// zero-pruning happens — `y` keeps its full length `n`.
+pub fn execute_spmv(
+    plan: &MulPlan,
+    tiles: &TilePlan,
+    sched: &WorkSchedule,
+    h: &PackedDiagMatrix,
+    x_re: &[f64],
+    x_im: &[f64],
+    workers: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    use super::diag_mul::PARALLEL_MULTS_THRESHOLD;
+    let total: usize = plan.outs.iter().map(|o| o.len).sum();
+    let mut re = vec![0f64; total];
+    let mut im = vec![0f64; total];
+    {
+        let mut rest_re: &mut [f64] = &mut re;
+        let mut rest_im: &mut [f64] = &mut im;
+        let mut items: Vec<(usize, &mut [f64], &mut [f64])> =
+            Vec::with_capacity(sched.units.len());
+        for (u, unit) in sched.units.iter().enumerate() {
+            let (head_re, tail_re) = std::mem::take(&mut rest_re).split_at_mut(unit.elems);
+            let (head_im, tail_im) = std::mem::take(&mut rest_im).split_at_mut(unit.elems);
+            items.push((u, head_re, head_im));
+            rest_re = tail_re;
+            rest_im = tail_im;
+        }
+        debug_assert!(rest_re.is_empty() && rest_im.is_empty());
+        let run_unit = |(u, dst_re, dst_im): (usize, &mut [f64], &mut [f64])| {
+            let unit = &sched.units[u];
+            fill_state_range(tiles, unit.task_lo, unit.task_hi, h, x_re, x_im, 0, dst_re, dst_im);
+        };
+        let fan_out =
+            workers > 1 && sched.units.len() > 1 && plan.mults >= PARALLEL_MULTS_THRESHOLD;
+        if fan_out {
+            crate::coordinator::pool::parallel_map(items, workers, run_unit);
+        } else {
+            for item in items {
+                run_unit(item);
+            }
+        }
+    }
+    (re, im)
+}
+
+/// Execute every range of an SpMV [`ShardPlan`] in process, returning
+/// one `(re, im)` output slice per range in shard order. Each range
+/// receives only its halo window of the state (exactly what a remote
+/// shard would be shipped), so this path *exercises* the halo indexing
+/// the wire frames rely on. Concatenating the slices reproduces
+/// single-engine [`execute_spmv`] bitwise.
+pub fn execute_spmv_ranges(
+    tiles: &TilePlan,
+    sp: &ShardPlan,
+    h: &PackedDiagMatrix,
+    x_re: &[f64],
+    x_im: &[f64],
+    workers: usize,
+) -> Vec<(Vec<f64>, Vec<f64>)> {
+    use super::diag_mul::PARALLEL_MULTS_THRESHOLD;
+    let run = |r: crate::linalg::ShardRange| {
+        let mut re = vec![0f64; r.elems];
+        let mut im = vec![0f64; r.elems];
+        if let Some((x_lo, x_hi)) = state_window(tiles, r.task_lo, r.task_hi) {
+            fill_state_range(
+                tiles,
+                r.task_lo,
+                r.task_hi,
+                h,
+                &x_re[x_lo..x_hi],
+                &x_im[x_lo..x_hi],
+                x_lo,
+                &mut re,
+                &mut im,
+            );
+        }
+        (re, im)
+    };
+    let total_mults: usize = sp.ranges.iter().map(|r| r.mults).sum();
+    if workers > 1 && sp.ranges.len() > 1 && total_mults >= PARALLEL_MULTS_THRESHOLD {
+        crate::coordinator::pool::parallel_map(sp.ranges.clone(), workers, run)
+    } else {
+        sp.ranges.iter().copied().map(run).collect()
+    }
+}
+
+/// Serial convenience: plan + execute `y = H·ψ` on one worker with one
+/// whole-state tile. Returns the interleaved result and operation
+/// statistics (`mults` = stored elements of `H` — the counter the
+/// matrix-free CI gate compares against the materialize-then-matvec
+/// path).
+pub fn spmv_packed(h: &PackedDiagMatrix, psi: &[Complex]) -> (Vec<Complex>, OpStats) {
+    assert_eq!(psi.len(), h.dim(), "state dimension mismatch");
+    let plan = super::diag_mul::plan_spmv(h);
+    let tiles = super::engine::tile_plan(&plan, usize::MAX);
+    let sched = WorkSchedule::per_task(&tiles);
+    let (x_re, x_im) = split_state(psi);
+    let (re, im) = execute_spmv(&plan, &tiles, &sched, h, &x_re, &x_im, 1);
+    let stats = OpStats {
+        mults: plan.mults,
+        merge_adds: plan.mults,
+        reads: 2usize.saturating_mul(plan.mults),
+        writes: plan.writes,
+    };
+    (join_state(&re, &im), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::DiagMatrix;
+    use crate::linalg::diag_mul::plan_spmv;
+    use crate::linalg::engine::{schedule_work, shard_plan, tile_plan};
+    use crate::testutil::{prop_check, XorShift64};
+
+    fn random_state(rng: &mut XorShift64, n: usize) -> Vec<Complex> {
+        (0..n)
+            .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+            .collect()
+    }
+
+    fn random_h(rng: &mut XorShift64, n: usize, max_diags: usize) -> DiagMatrix {
+        let mut m = DiagMatrix::zeros(n);
+        let ndiags = rng.gen_range(1, max_diags + 1);
+        for _ in 0..ndiags {
+            let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+            let len = DiagMatrix::diag_len(n, d);
+            let vals: Vec<Complex> = (0..len)
+                .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                .collect();
+            m.set_diag(d, vals);
+        }
+        m
+    }
+
+    #[test]
+    fn spmv_matches_matvec_bitwise() {
+        // Both paths accumulate contributions in ascending-offset order
+        // with the same complex expansion, so they agree to the bit.
+        prop_check("spmv_packed == matvec (bitwise)", 24, |rng| {
+            let n = rng.gen_range(2, 40);
+            let h = random_h(rng, n, 7);
+            let psi = random_state(rng, n);
+            let want = h.matvec(&psi);
+            let (got, stats) = spmv_packed(&h.freeze(), &psi);
+            if stats.mults != h.stored_elements() {
+                return Err(format!(
+                    "mults {} != stored elements {}",
+                    stats.mults,
+                    h.stored_elements()
+                ));
+            }
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.re.to_bits() != w.re.to_bits() || g.im.to_bits() != w.im.to_bits() {
+                    return Err(format!("n={n} element {k}: {g:?} != {w:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spmv_matches_dense_oracle() {
+        prop_check("spmv_packed == dense matvec", 24, |rng| {
+            let n = rng.gen_range(2, 32);
+            let h = random_h(rng, n, 6);
+            let psi = random_state(rng, n);
+            let dense = crate::format::convert::diag_to_dense(&h);
+            let (got, _) = spmv_packed(&h.freeze(), &psi);
+            for r in 0..n {
+                let mut want = crate::num::ZERO;
+                for c in 0..n {
+                    want += dense.get(r, c) * psi[c];
+                }
+                if (got[r] - want).abs() > 1e-12 {
+                    return Err(format!("n={n} row {r}: {:?} != {want:?}", got[r]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_scheduled_parallel_spmv_is_bit_identical() {
+        let mut rng = XorShift64::new(11);
+        let n = 700;
+        let h = random_h(&mut rng, n, 9).freeze();
+        let psi = random_state(&mut rng, n);
+        let (x_re, x_im) = split_state(&psi);
+        let plan = plan_spmv(&h);
+        let base_tiles = tile_plan(&plan, usize::MAX);
+        let (want_re, want_im) = execute_spmv(
+            &plan,
+            &base_tiles,
+            &WorkSchedule::per_task(&base_tiles),
+            &h,
+            &x_re,
+            &x_im,
+            1,
+        );
+        assert_eq!(want_re.len(), n);
+        for tile in [1usize, 13, 64, 4096] {
+            let tiles = tile_plan(&plan, tile);
+            for budget in [1usize, 100, 1_000_000] {
+                let sched = schedule_work(&tiles, budget);
+                for workers in [1usize, 3] {
+                    let (re, im) = execute_spmv(&plan, &tiles, &sched, &h, &x_re, &x_im, workers);
+                    assert_eq!(re, want_re, "tile={tile} budget={budget} workers={workers}");
+                    assert_eq!(im, want_im, "tile={tile} budget={budget} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_spmv_with_halo_windows_stitches_bitwise() {
+        let mut rng = XorShift64::new(23);
+        let n = 500;
+        let h = random_h(&mut rng, n, 8).freeze();
+        let psi = random_state(&mut rng, n);
+        let (x_re, x_im) = split_state(&psi);
+        let plan = plan_spmv(&h);
+        for tile in [7usize, 64, 100_000] {
+            let tiles = tile_plan(&plan, tile);
+            let (want_re, want_im) =
+                execute_spmv(&plan, &tiles, &WorkSchedule::per_task(&tiles), &h, &x_re, &x_im, 1);
+            for shards in [1usize, 2, 3, 5, 8] {
+                let sp = shard_plan(&tiles, shards);
+                for workers in [1usize, 3] {
+                    let slices = execute_spmv_ranges(&tiles, &sp, &h, &x_re, &x_im, workers);
+                    assert_eq!(slices.len(), shards);
+                    let mut re = Vec::new();
+                    let mut im = Vec::new();
+                    for (sre, sim) in &slices {
+                        re.extend_from_slice(sre);
+                        im.extend_from_slice(sim);
+                    }
+                    assert_eq!(re, want_re, "tile={tile} shards={shards} workers={workers}");
+                    assert_eq!(im, want_im, "tile={tile} shards={shards} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn state_window_bounds_are_exact() {
+        // Band of half-width 2 on n=20, tiles of 5: the range writing
+        // y[5..10) reads x[3..12) — the ±2 halo around its tile.
+        let n = 20;
+        let mut m = DiagMatrix::zeros(n);
+        for d in -2i64..=2 {
+            m.set_diag(d, vec![crate::num::ONE; DiagMatrix::diag_len(n, d)]);
+        }
+        let h = m.freeze();
+        let plan = plan_spmv(&h);
+        let tiles = tile_plan(&plan, 5);
+        assert_eq!(tiles.tasks.len(), 4);
+        assert_eq!(state_window(&tiles, 1, 2), Some((3, 12)));
+        // First and last tiles clip at the state boundary.
+        assert_eq!(state_window(&tiles, 0, 1), Some((0, 7)));
+        assert_eq!(state_window(&tiles, 3, 4), Some((13, 20)));
+        // The whole plan reads the whole state.
+        assert_eq!(state_window(&tiles, 0, tiles.tasks.len()), Some((0, n)));
+        // An empty range has no window.
+        assert_eq!(state_window(&tiles, 2, 2), None);
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let mut rng = XorShift64::new(3);
+        let psi = random_state(&mut rng, 33);
+        let (re, im) = split_state(&psi);
+        assert_eq!(join_state(&re, &im), psi);
+    }
+}

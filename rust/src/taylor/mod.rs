@@ -236,11 +236,211 @@ pub fn expm_diag_sharded(
     })
 }
 
-/// Evolve a state: `ψ(t) = exp(−iHt) ψ(0)`.
+/// Evolve a state by materializing the operator: `ψ(t) = exp(−iHt)·ψ(0)`
+/// via the SpMSpM chain and one matvec. This is the `--via-matrix`
+/// comparison path; the matrix-free path ([`apply_expm`]) computes the
+/// same state in O(iters · nnz(H)) multiplies without ever forming a
+/// matrix power.
 pub fn evolve_state(h: &DiagMatrix, t: f64, psi0: &[Complex], tol: f64) -> Vec<Complex> {
     let iters = iters_for(h, t, tol);
     let u = expm_diag(h, t, iters).op;
     u.matvec(psi0)
+}
+
+/// Per-iteration record of a matrix-free Taylor state chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StateStep {
+    /// Taylor order of this step.
+    pub k: usize,
+    /// Complex multiplies spent in this step's SpMV (= stored elements
+    /// of `H`, every iteration — no fill-in, unlike the SpMSpM chain).
+    pub mults: usize,
+}
+
+/// Result of a matrix-free state evolution ([`apply_expm`] /
+/// [`apply_expm_sharded`]): the evolved state plus the per-step multiply
+/// trace and the kernel/shard counters for the whole chain.
+#[derive(Clone, Debug)]
+pub struct StateResult {
+    /// The evolved state `ψ(t)`.
+    pub psi: Vec<Complex>,
+    /// Taylor iterations run.
+    pub iters: usize,
+    pub steps: Vec<StateStep>,
+    pub kernel: crate::linalg::KernelStats,
+    pub shard: crate::coordinator::shard::ShardStats,
+}
+
+/// What a completed state chain produced: the evolved state as SoA
+/// planes plus the per-iteration trace (the wire face of the
+/// server-side `StateChainJob`).
+pub struct StateOutcome {
+    /// Real plane of `ψ(t)`.
+    pub psi_re: Vec<f64>,
+    /// Imaginary plane of `ψ(t)`.
+    pub psi_im: Vec<f64>,
+    pub steps: Vec<StateStep>,
+}
+
+/// The matrix-free Taylor loop body, factored out exactly like
+/// [`ChainDriver`] so every execution site — the local chain, the
+/// per-iteration sharded chain, and the server-side `StateChainJob` in
+/// [`JobRouter`](crate::coordinator::shard::JobRouter) — runs the same
+/// statements in the same order:
+///
+/// `term_k = (A · term_{k−1}) / k`, `sum += term_k`, with `A = −iHt`
+/// frozen once and both `term` and `sum` held as SoA re/im planes. The
+/// per-step scale is a plain `f64` multiply by `1/k` on both planes
+/// (the state is a vector, not a matrix — there is no complex scale),
+/// applied identically on every state path, so local, in-process,
+/// process and TCP state chains are bit-identical by construction.
+pub struct StateDriver {
+    /// `A = −iHt`, frozen once for the whole chain.
+    a: PackedDiagMatrix,
+    term_re: Vec<f64>,
+    term_im: Vec<f64>,
+    sum_re: Vec<f64>,
+    sum_im: Vec<f64>,
+    steps: Vec<StateStep>,
+    k: usize,
+}
+
+impl StateDriver {
+    /// Start a state chain for `exp(−iHt)·ψ0` from a builder-form
+    /// Hamiltonian and an interleaved state.
+    pub fn new(h: &DiagMatrix, t: f64, psi0: &[Complex]) -> Self {
+        let (re, im) = crate::linalg::split_state(psi0);
+        Self::from_packed_planes(h.scaled(-I * t).freeze(), re, im)
+    }
+
+    /// Start a state chain from an already-frozen `H` and SoA state
+    /// planes — the wire face used by the shard server (bit-identical
+    /// to [`StateDriver::new`] for the same reasons as
+    /// [`ChainDriver::from_packed`]).
+    pub fn from_packed(hp: &PackedDiagMatrix, t: f64, psi_re: Vec<f64>, psi_im: Vec<f64>) -> Self {
+        let mut a = hp.clone();
+        a.scale(-I * t);
+        Self::from_packed_planes(a, psi_re, psi_im)
+    }
+
+    fn from_packed_planes(a: PackedDiagMatrix, re: Vec<f64>, im: Vec<f64>) -> Self {
+        assert_eq!(re.len(), a.dim(), "state dimension mismatch");
+        assert_eq!(im.len(), a.dim(), "state dimension mismatch");
+        StateDriver {
+            a,
+            term_re: re.clone(),
+            term_im: im.clone(),
+            sum_re: re,
+            sum_im: im,
+            steps: Vec::new(),
+            k: 0,
+        }
+    }
+
+    /// One Taylor iteration: `term_k = (A·term_{k−1}) / k`, accumulated
+    /// into the sum. One SpMV — O(nnz(H)) multiplies, no fill-in.
+    pub fn step(&mut self, sc: &mut ShardCoordinator) -> anyhow::Result<()> {
+        self.k += 1;
+        let k = self.k;
+        let (mut re, mut im, mults) = sc.spmv(&self.a, &self.term_re, &self.term_im)?;
+        let inv_k = 1.0 / k as f64;
+        for v in re.iter_mut() {
+            *v *= inv_k;
+        }
+        for v in im.iter_mut() {
+            *v *= inv_k;
+        }
+        self.term_re = re;
+        self.term_im = im;
+        for (s, v) in self.sum_re.iter_mut().zip(&self.term_re) {
+            *s += v;
+        }
+        for (s, v) in self.sum_im.iter_mut().zip(&self.term_im) {
+            *s += v;
+        }
+        self.steps.push(StateStep { k, mults });
+        Ok(())
+    }
+
+    /// Run `iters` steps to completion.
+    pub fn run(mut self, iters: usize, sc: &mut ShardCoordinator) -> anyhow::Result<StateOutcome> {
+        for _ in 0..iters {
+            self.step(sc)?;
+        }
+        Ok(StateOutcome {
+            psi_re: self.sum_re,
+            psi_im: self.sum_im,
+            steps: self.steps,
+        })
+    }
+}
+
+/// Matrix-free state evolution: `ψ(t) = exp(−iHt)·ψ(0)` computed as
+/// `Σ_k (−iHt)^k ψ(0) / k!` — one SpMV per Taylor order, never forming
+/// a matrix power. O(iters · nnz(H)) complex multiplies versus the
+/// fill-in-growing SpMSpM chain of [`evolve_state`]; identical states
+/// to the dense oracle within truncation error.
+///
+/// ```
+/// use diamond::format::DiagMatrix;
+/// use diamond::num::{Complex, ZERO};
+/// use diamond::taylor::apply_expm;
+///
+/// // exp(0)·ψ == ψ at any truncation depth.
+/// let psi0 = vec![Complex::real(0.6), Complex::real(0.8), ZERO, ZERO];
+/// let r = apply_expm(&DiagMatrix::zeros(4), 1.0, &psi0, 1e-2);
+/// assert_eq!(r.psi, psi0);
+/// ```
+pub fn apply_expm(h: &DiagMatrix, t: f64, psi0: &[Complex], tol: f64) -> StateResult {
+    let mut sc = crate::coordinator::shard::ShardCoordinator::single();
+    let iters = iters_for(h, t, tol);
+    apply_expm_sharded(h, t, iters, psi0, &mut sc)
+        .expect("single-engine in-process execution is infallible")
+}
+
+/// [`apply_expm`] with the state vector sharded through a
+/// [`ShardCoordinator`]: each SpMV fans out as multiply-balanced
+/// contiguous segments of `ψ` (each shipped only its halo window of the
+/// state on remote backends) and is stitched back by concatenation —
+/// bit-identical to the unsharded chain. `Err` only on transport
+/// failures.
+pub fn apply_expm_sharded(
+    h: &DiagMatrix,
+    t: f64,
+    iters: usize,
+    psi0: &[Complex],
+    sc: &mut ShardCoordinator,
+) -> anyhow::Result<StateResult> {
+    let out = StateDriver::new(h, t, psi0).run(iters, sc)?;
+    Ok(StateResult {
+        psi: crate::linalg::join_state(&out.psi_re, &out.psi_im),
+        iters,
+        steps: out.steps,
+        kernel: *sc.kernel_stats(),
+        shard: *sc.stats(),
+    })
+}
+
+/// Batched many-ψ evolution under one Hamiltonian — the dominant
+/// serving pattern ("many users, same `H`"). One coordinator carries
+/// all right-hand sides, so the SpMV plan (and any shard partition) is
+/// built once and replayed for every state after the first: the
+/// returned kernel counters show `plan_cache_hits ≥ (batch−1)·iters`.
+/// Each state's result is bit-identical to its own [`apply_expm`] run.
+pub fn apply_expm_batch(
+    h: &DiagMatrix,
+    t: f64,
+    psis: &[Vec<Complex>],
+    tol: f64,
+) -> Vec<StateResult> {
+    let mut sc = crate::coordinator::shard::ShardCoordinator::single();
+    let iters = iters_for(h, t, tol);
+    psis.iter()
+        .map(|psi0| {
+            apply_expm_sharded(h, t, iters, psi0, &mut sc)
+                .expect("single-engine in-process execution is infallible")
+        })
+        .collect()
 }
 
 /// Dense oracle for `exp(−iHt)` (scaling-and-squaring-free plain Taylor at
@@ -426,6 +626,99 @@ mod tests {
             sharded.shard.shard_plans_built + sharded.shard.shard_plan_reuses,
             sharded.shard.sharded_multiplies
         );
+    }
+
+    #[test]
+    fn matrix_free_matches_via_matrix_with_far_fewer_multiplies() {
+        // Same truncation depth, same arithmetic order per Taylor order
+        // ⇒ the two paths agree to rounding; the matrix-free multiply
+        // count is iters·nnz(H) while the SpMSpM chain pays fill-in.
+        let h = crate::ham::tfim::tfim(6, 1.0, 0.9).matrix;
+        let t = 0.05;
+        let tol = 1e-10;
+        let n = h.dim();
+        let mut psi0 = vec![ZERO; n];
+        psi0[1] = Complex::new(0.6, 0.0);
+        psi0[5] = Complex::new(0.0, 0.8);
+        let via_matrix = evolve_state(&h, t, &psi0, tol);
+        let r = apply_expm(&h, t, &psi0, tol);
+        assert_eq!(r.iters, iters_for(&h, t, tol));
+        assert_eq!(r.steps.len(), r.iters);
+        let worst = r
+            .psi
+            .iter()
+            .zip(&via_matrix)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(worst < 1e-8, "paths diverge: {worst}");
+        // Multiply accounting: every state step costs exactly nnz(H).
+        let h_elems = h.stored_elements();
+        for s in &r.steps {
+            assert_eq!(s.mults, h_elems, "step {} paid fill-in?", s.k);
+        }
+        // Norm preservation (H Hermitian, converged expansion).
+        let norm: f64 = r.psi.iter().map(|z| z.norm_sqr()).sum();
+        assert!((norm - 1.0).abs() < 1e-9, "norm² = {norm}");
+    }
+
+    #[test]
+    fn batch_reuses_plans_and_matches_individual_runs() {
+        let h = crate::ham::heisenberg::heisenberg(4, 1.0).matrix;
+        let t = 0.05;
+        let tol = 1e-8;
+        let n = h.dim();
+        let psis: Vec<Vec<Complex>> = (0..3)
+            .map(|s| {
+                let mut p = vec![ZERO; n];
+                p[s] = crate::num::ONE;
+                p
+            })
+            .collect();
+        let batch = apply_expm_batch(&h, t, &psis, tol);
+        assert_eq!(batch.len(), 3);
+        let iters = iters_for(&h, t, tol);
+        // One plan for the whole batch: after the very first SpMV every
+        // later iteration of every state hits the cache.
+        let last = batch.last().unwrap();
+        assert_eq!(last.kernel.plans_built, 1, "{:?}", last.kernel);
+        assert_eq!(
+            last.kernel.plan_cache_hits as usize,
+            3 * iters - 1,
+            "{:?}",
+            last.kernel
+        );
+        // Each state is bit-identical to its standalone run.
+        for (psi0, got) in psis.iter().zip(&batch) {
+            let solo = apply_expm(&h, t, psi0, tol);
+            for (g, w) in got.psi.iter().zip(&solo.psi) {
+                assert_eq!(g.re.to_bits(), w.re.to_bits());
+                assert_eq!(g.im.to_bits(), w.im.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_state_chain_matches_unsharded_bitwise() {
+        use crate::coordinator::shard::{ShardBackend, ShardCoordinator};
+        use crate::linalg::EngineConfig;
+        let h = crate::ham::tfim::tfim(5, 1.0, 0.7).matrix;
+        let t = 0.05;
+        let n = h.dim();
+        let psi0: Vec<Complex> = (0..n)
+            .map(|k| Complex::new(((k + 1) as f64).recip(), 0.1 * k as f64 / n as f64))
+            .collect();
+        let iters = iters_for(&h, t, 1e-8);
+        let single = apply_expm(&h, t, &psi0, 1e-8);
+        for shards in [2usize, 3, 5] {
+            let mut sc =
+                ShardCoordinator::new(EngineConfig::default(), shards, ShardBackend::InProc);
+            let sharded = apply_expm_sharded(&h, t, iters, &psi0, &mut sc).unwrap();
+            for (g, w) in sharded.psi.iter().zip(&single.psi) {
+                assert_eq!(g.re.to_bits(), w.re.to_bits(), "shards={shards}");
+                assert_eq!(g.im.to_bits(), w.im.to_bits(), "shards={shards}");
+            }
+            assert_eq!(sharded.steps, single.steps, "shards={shards}");
+        }
     }
 
     #[test]

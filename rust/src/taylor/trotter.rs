@@ -97,6 +97,56 @@ pub fn trotter_evolve(h: &DiagMatrix, t: f64, r: usize, tol: f64) -> TrotterResu
     TrotterResult { op, steps }
 }
 
+/// Result of a matrix-free Trotterized state evolution.
+pub struct TrotterStateResult {
+    /// The evolved state `ψ(t)`.
+    pub psi: Vec<Complex>,
+    /// Taylor iterations used for the off-diagonal factor of each step.
+    pub taylor_iters: usize,
+    /// Trotter steps applied.
+    pub r: usize,
+}
+
+/// First-order Trotter evolution applied **directly to a state** — no
+/// step operator, no matrix products. Each of the `r` steps applies the
+/// Taylor factor of `exp(−iO·dt)` to `ψ` via the matrix-free SpMV chain
+/// ([`super::StateDriver`]) and then the exact `exp(−iD·dt)` phase
+/// diagonal elementwise, in the same order as [`trotter_evolve`]'s
+/// `step_op = exp(−iD·dt) · exp(−iO·dt)`. Per step this costs
+/// O(iters · nnz(O)) + O(n) multiplies versus the matrix path's
+/// SpMSpM chains plus `r` operator-operator products.
+pub fn trotter_evolve_state(
+    h: &DiagMatrix,
+    t: f64,
+    r: usize,
+    psi0: &[Complex],
+    tol: f64,
+) -> TrotterStateResult {
+    assert!(r > 0);
+    assert_eq!(psi0.len(), h.dim(), "state dimension mismatch");
+    let dt = t / r as f64;
+    let (d, o) = split_diag_offdiag(h);
+    let u_d = expm_diagonal_exact(&d, dt);
+    let phases: Vec<Complex> = u_d.diag(0).expect("exact diagonal factor is dense").to_vec();
+    let iters = iters_for(&o, dt, tol).max(1);
+    let mut sc = crate::coordinator::shard::ShardCoordinator::single();
+    let mut psi = psi0.to_vec();
+    for _ in 0..r {
+        let out = super::StateDriver::new(&o, dt, &psi)
+            .run(iters, &mut sc)
+            .expect("single-engine in-process execution is infallible");
+        psi = crate::linalg::join_state(&out.psi_re, &out.psi_im);
+        for (p, ph) in psi.iter_mut().zip(&phases) {
+            *p = *ph * *p;
+        }
+    }
+    TrotterStateResult {
+        psi,
+        taylor_iters: iters,
+        r,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +204,34 @@ mod tests {
         let psi = res.op.matvec(&psi0);
         let norm: f64 = psi.iter().map(|z| z.norm_sqr()).sum();
         assert!((norm - 1.0).abs() < 1e-6, "norm^2 {norm}");
+    }
+
+    #[test]
+    fn state_trotter_matches_operator_trotter() {
+        // The matrix-free Trotter state must agree with applying the
+        // materialized step operator: same splitting, same Taylor depth,
+        // same factor order — only pruning/association differ.
+        let h = crate::ham::heisenberg::heisenberg(4, 1.0).matrix;
+        let t = 0.2;
+        let tol = 1e-10;
+        let n = h.dim();
+        let psi0: Vec<Complex> = (0..n)
+            .map(|k| Complex::new(0.3 + 0.01 * k as f64, -0.2 + 0.02 * (k % 3) as f64))
+            .collect();
+        for r in [1usize, 4] {
+            let res = trotter_evolve(&h, t, r, tol);
+            let want = res.op.matvec(&psi0);
+            let got = trotter_evolve_state(&h, t, r, &psi0, tol);
+            assert_eq!(got.r, r);
+            assert_eq!(got.taylor_iters, res.steps[0].taylor_iters);
+            let worst = got
+                .psi
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(worst < 1e-8, "r={r}: state diverges from operator path by {worst}");
+        }
     }
 
     #[test]

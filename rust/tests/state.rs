@@ -1,0 +1,199 @@
+//! State-vector evolution tests: `apply_expm` must match the dense
+//! Taylor oracle to 1e-8 on **every** registry Hamiltonian, preserve
+//! the norm up to truncation error, and the sharded matrix-free path
+//! must be **bitwise identical** (`f64::to_bits`) across all four
+//! execution paths — local single engine, in-process shards, process
+//! workers and TCP endpoints — including the server-side state chain.
+
+use diamond::bench_harness::state::initial_states;
+use diamond::coordinator::shard::{ProcessShardExecutor, ShardBackend, ShardCoordinator};
+use diamond::coordinator::transport::ShardServer;
+use diamond::format::convert::diag_to_dense;
+use diamond::ham::{build, Family};
+use diamond::linalg::EngineConfig;
+use diamond::num::Complex;
+use diamond::taylor::{apply_expm, apply_expm_batch, apply_expm_sharded, expm_dense_oracle};
+
+/// The built `diamond` binary, re-entered as `diamond shard-worker` by
+/// the process backend.
+fn worker_exe() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_diamond"))
+}
+
+const ALL_FAMILIES: [Family; 7] = [
+    Family::MaxCut,
+    Family::Heisenberg,
+    Family::Tsp,
+    Family::Tfim,
+    Family::FermiHubbard,
+    Family::QMaxCut,
+    Family::BoseHubbard,
+];
+
+/// An evolution time small enough that a 25-term Taylor series is far
+/// below 1e-8 truncation error even for the stiff (TSP-penalty)
+/// spectra: scale by the 1-norm so `t·‖H‖₁ ≤ 0.1`.
+fn safe_t(h: &diamond::format::DiagMatrix) -> f64 {
+    0.1 / h.one_norm().max(1.0)
+}
+
+fn bitwise_eq(a: &[Complex], b: &[Complex]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.re.to_bits() == y.re.to_bits() && x.im.to_bits() == y.im.to_bits())
+}
+
+#[test]
+fn apply_expm_matches_dense_oracle_on_every_registry_family() {
+    // Same truncation order on both sides, so the only allowed
+    // difference is floating-point rounding — far under 1e-8.
+    let iters = 25;
+    for family in ALL_FAMILIES {
+        let ham = build(family, 4);
+        let h = &ham.matrix;
+        let n = h.dim();
+        let t = safe_t(h);
+        let psi = initial_states(n, 1).remove(0);
+
+        let got = apply_expm_sharded(h, t, iters, &psi, &mut ShardCoordinator::single())
+            .expect("single-engine in-process execution is infallible");
+        assert_eq!(got.iters, iters);
+        assert_eq!(got.steps.len(), iters);
+        assert!(got.steps.iter().all(|s| s.mults > 0), "{}: idle SpMV", ham.name);
+
+        let want = expm_dense_oracle(&diag_to_dense(h), t, iters).matvec(&psi);
+        let diff = got
+            .psi
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(diff < 1e-8, "{}: dense-oracle mismatch {diff:e}", ham.name);
+
+        // exp(−iHt) is unitary for Hermitian H; with t·‖H‖₁ ≤ 0.1 the
+        // 25-term truncation leaves the norm intact to ~1e-12.
+        let norm: f64 = got.psi.iter().map(|z| z.norm_sqr()).sum();
+        assert!(
+            (norm - 1.0).abs() < 1e-10,
+            "{}: norm drift {:e}",
+            ham.name,
+            (norm - 1.0).abs()
+        );
+    }
+}
+
+#[test]
+fn apply_expm_tolerance_driven_iters_preserve_norm() {
+    // The tol-driven entry point picks its own truncation order; it
+    // must still land within tol of unitary on every family.
+    for family in ALL_FAMILIES {
+        let ham = build(family, 4);
+        let h = &ham.matrix;
+        let t = safe_t(h);
+        let psi = initial_states(h.dim(), 1).remove(0);
+        let r = apply_expm(h, t, &psi, 1e-10);
+        assert!(r.iters > 0);
+        let norm: f64 = r.psi.iter().map(|z| z.norm_sqr()).sum();
+        assert!(
+            (norm - 1.0).abs() < 1e-8,
+            "{}: norm drift {:e} at tol-driven iters {}",
+            ham.name,
+            (norm - 1.0).abs(),
+            r.iters
+        );
+    }
+}
+
+#[test]
+fn state_sharding_is_bitwise_identical_across_all_four_paths() {
+    // The determinism contract extended to ψ: local == inproc ==
+    // process == tcp, element-for-element to the bit. TFIM (band) and
+    // Heisenberg (wider offset spread) exercise different halo shapes.
+    let servers = [
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+        ShardServer::spawn("127.0.0.1:0").expect("loopback bind"),
+    ];
+    let tcp_backend = ShardBackend::Tcp {
+        endpoints: servers.iter().map(|s| s.endpoint()).collect(),
+    };
+    for family in [Family::Tfim, Family::Heisenberg] {
+        let ham = build(family, 6);
+        let h = &ham.matrix;
+        let t = safe_t(h);
+        let iters = 6;
+        let psi = initial_states(h.dim(), 1).remove(0);
+
+        let local = apply_expm_sharded(h, t, iters, &psi, &mut ShardCoordinator::single())
+            .expect("single-engine in-process execution is infallible");
+
+        for shards in 2..=4 {
+            let mut sc =
+                ShardCoordinator::new(EngineConfig::default(), shards, ShardBackend::InProc);
+            let r = apply_expm_sharded(h, t, iters, &psi, &mut sc).expect("inproc shards");
+            assert!(
+                bitwise_eq(&r.psi, &local.psi),
+                "{}: inproc S={shards} diverged from local",
+                ham.name
+            );
+            assert_eq!(r.steps, local.steps, "{}: step log diverged", ham.name);
+            assert!(sc.stats().remote_state_jobs == 0);
+            assert!(sc.stats().state_multiplies > 0);
+        }
+
+        let mut proc = ShardCoordinator::with_executor(
+            EngineConfig::default(),
+            3,
+            ProcessShardExecutor::new(worker_exe()),
+        );
+        let r = apply_expm_sharded(h, t, iters, &psi, &mut proc).expect("process shards");
+        assert!(
+            bitwise_eq(&r.psi, &local.psi),
+            "{}: process backend diverged from local",
+            ham.name
+        );
+        assert!(proc.stats().remote_state_jobs > 0, "no remote state jobs ran");
+        assert!(proc.stats().halo_bytes > 0, "halo traffic not accounted");
+
+        let mut tcp = ShardCoordinator::new(EngineConfig::default(), 3, tcp_backend.clone());
+        let r = apply_expm_sharded(h, t, iters, &psi, &mut tcp).expect("tcp shards");
+        assert!(
+            bitwise_eq(&r.psi, &local.psi),
+            "{}: tcp backend diverged from local",
+            ham.name
+        );
+        assert!(tcp.stats().remote_state_jobs > 0);
+
+        // Server-side chain: whole ψ-evolution on the endpoint, one
+        // round trip per call — still bitwise identical.
+        let mut chain = ShardCoordinator::new(EngineConfig::default(), 1, tcp_backend.clone());
+        let r = chain.run_state_chain(h, t, iters, &psi).expect("tcp state chain");
+        assert!(
+            bitwise_eq(&r.psi, &local.psi),
+            "{}: server-side chain diverged from local",
+            ham.name
+        );
+        assert_eq!(r.steps, local.steps, "{}: chain step log diverged", ham.name);
+        assert!(chain.stats().remote_chain_jobs > 0);
+    }
+}
+
+#[test]
+fn apply_expm_batch_is_bitwise_identical_to_individual_runs() {
+    // The batched entry point shares one plan across RHS — the answers
+    // must not change, bit for bit, and every RHS gets its own step log.
+    let ham = build(Family::Heisenberg, 5);
+    let h = &ham.matrix;
+    let t = safe_t(h);
+    let psis = initial_states(h.dim(), 3);
+    let batch = apply_expm_batch(h, t, &psis, 1e-10);
+    assert_eq!(batch.len(), 3);
+    for (psi, b) in psis.iter().zip(&batch) {
+        let solo = apply_expm(h, t, psi, 1e-10);
+        assert_eq!(b.iters, solo.iters);
+        assert_eq!(b.steps, solo.steps);
+        assert!(bitwise_eq(&b.psi, &solo.psi), "batched ψ diverged from solo run");
+    }
+    // Distinct RHS must stay distinct after evolution.
+    assert!(!bitwise_eq(&batch[0].psi, &batch[1].psi));
+}
