@@ -1,15 +1,25 @@
-//! Serving-layer demo: batched SpMSpM jobs through the `BatchServer`.
+//! Serving-layer demo: batched SpMSpM jobs through the in-process
+//! `BatchServer`, then the same workload as concurrent tenants of a
+//! real `diamond serve` TCP daemon (wire v5).
 //!
 //! ```sh
 //! cargo run --release --example sim_serve
 //! ```
 //!
-//! Submits a mixed set of jobs — several Taylor-chain-style multiplies
-//! against the same stationary `H` plus a couple of unrelated products —
-//! and shows how the server batches jobs that share an operand
-//! fingerprint, then prints the aggregate `ServeStats` (jobs, batches,
-//! shared-operand hits, cycles, energy).
+//! Part 1 submits a mixed set of jobs — several Taylor-chain-style
+//! multiplies against the same stationary `H` plus a couple of
+//! unrelated products — and shows how the server batches jobs that
+//! share an operand fingerprint, then prints the aggregate
+//! `ServeStats` (jobs, batches, shared-operand hits, cycles, energy).
+//!
+//! Part 2 spins the multi-tenant daemon up on an ephemeral loopback
+//! port, connects two tenants that submit concurrently against the
+//! same resident `H`, and reads the daemon's counters back over the
+//! wire via the v5 `Stats` frame — the second tenant ships zero
+//! operand bytes because its `HavePlane` hits the daemon-wide
+//! content-addressed store.
 
+use diamond::coordinator::serve::{ServeClient, ServeServer};
 use diamond::coordinator::server::{BatchServer, SpmspmRequest};
 use diamond::ham::heisenberg::heisenberg;
 use diamond::ham::tfim::tfim;
@@ -58,7 +68,34 @@ fn main() -> anyhow::Result<()> {
             r.sim.total_cycles()
         );
     }
-    // The previously-silent aggregate: batching honesty in one line.
     println!("{}", server.stats);
+
+    // --- part 2: the same pattern through the real TCP daemon ---
+    println!();
+    let mut daemon = ServeServer::spawn("127.0.0.1:0")?;
+    println!("daemon: listening on {} (in-process demo)", daemon.endpoint());
+    let hp = h.freeze();
+
+    let mut alice = ServeClient::connect(&daemon.endpoint())?;
+    let mut bob = ServeClient::connect(&daemon.endpoint())?;
+    let (c_alice, mults) = alice.spmspm(&hp, &hp)?;
+    println!(
+        "  tenant alice: C has {} diagonals ({} mults), shipped H after {} resend(s)",
+        c_alice.nnzd(),
+        mults,
+        alice.plane_resends
+    );
+    let (c_bob, _) = bob.spmspm(&hp, &hp)?;
+    println!(
+        "  tenant bob:   C has {} diagonals, H already resident ({} resend(s))",
+        c_bob.nnzd(),
+        bob.plane_resends
+    );
+
+    // The satellite win: the daemon's counters travel the wire too.
+    let (stats, resident) = bob.stats()?;
+    println!("daemon stats via the v5 Stats frame ({resident} plane(s) resident):");
+    println!("  {stats}");
+    daemon.stop();
     Ok(())
 }

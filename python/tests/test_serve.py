@@ -1,0 +1,509 @@
+"""Transliteration checks of the wire-v5 serving frames.
+
+``diamond serve`` (rust/src/coordinator/serve.rs) multiplexes tenant
+jobs over the shard transport with five new frames, encoded in
+``rust/src/coordinator/shard.rs``. The build container has no Rust
+toolchain, so — exactly like ``test_transport.py`` for v1–v4 — the
+byte-exact rules are mirrored here 1:1 and property-checked:
+
+* ``Submit`` (``DSB1``): ``job_id u64 | kind u8 | body`` — an SpMSpM
+  job is a fixed 37 bytes of plane *references*, a chain job 45 bytes,
+  a state job 45 + 16n (ψ0 rides inline; ``H`` is content-addressed);
+* ``Result`` (``DRS1``): ``job_id | status | kind | body``, echoing the
+  client-chosen id; a job-level failure is ``status=1 | len | utf8``
+  and decodes to a value (the connection survives), never an exception;
+* ``Busy`` (``DBY1``): a 20-byte admission refusal carrying
+  ``retry_after_ms`` — the backpressure edge of the state machine;
+* ``Stats`` (``DST1`` request / ``DTR1`` response): the daemon's
+  ``ServeStats`` counters plus the resident-plane count as a fixed
+  85-byte frame, ``total_energy_j`` travelling as f64 bits;
+* golden byte vectors are pinned against the Rust unit test
+  ``serve_wire_golden_bytes`` in shard.rs — the two must change
+  together, and only with a WIRE_VERSION bump;
+* every truncated prefix and a sweep of single-byte header mutations
+  fail loudly with ``ValueError``, mirroring the Rust ``Cursor``
+  contract;
+* a composed tenant conversation parses: ``hello v5 | frame(put H) |
+  frame(submit) | frame(have H) | frame(submit)`` — the second job's
+  operand traffic is 20 bytes, not a plane.
+"""
+
+import math
+import struct
+
+import numpy as np
+import pytest
+from test_transport import (
+    GOLDEN_FP,
+    GOLDEN_N,
+    GOLDEN_OFFSETS,
+    HELLO_LEN,
+    MAX_CHAIN_ITERS,
+    STATUS_ERR,
+    STATUS_OK,
+    WIRE_VERSION,
+    _unpack,
+    check_hello,
+    decode_matrix,
+    encode_frame,
+    encode_hello,
+    encode_matrix,
+    encode_plane_have,
+    encode_plane_put,
+    f64_bits,
+    golden_matrix,
+    plane_fingerprint,
+    read_frame,
+)
+
+# --- mirror of the v5 serving frames (coordinator/shard.rs) ---------------
+
+SUBMIT_MAGIC = b"DSB1"
+RESULT_MAGIC = b"DRS1"
+BUSY_MAGIC = b"DBY1"
+STATS_MAGIC = b"DST1"
+STATS_RESP_MAGIC = b"DTR1"
+
+KIND_SPMSPM = 0
+KIND_CHAIN = 1
+KIND_STATE = 2
+
+
+def encode_submit_spmspm(job_id, n, fp_a, fp_b):
+    return SUBMIT_MAGIC + struct.pack("<QBQQQ", job_id, KIND_SPMSPM, n, fp_a, fp_b)
+
+
+def encode_submit_chain(job_id, n, t, iters, fp_h):
+    return SUBMIT_MAGIC + struct.pack("<QBQdQQ", job_id, KIND_CHAIN, n, t, iters, fp_h)
+
+
+def encode_submit_state(job_id, n, t, iters, fp_h, psi_re, psi_im):
+    assert len(psi_re) == len(psi_im) == n
+    return (
+        SUBMIT_MAGIC
+        + struct.pack("<QBQdQQ", job_id, KIND_STATE, n, t, iters, fp_h)
+        + b"".join(struct.pack("<d", v) for v in psi_re)
+        + b"".join(struct.pack("<d", v) for v in psi_im)
+    )
+
+
+def decode_submit(buf):
+    """Returns ``(job_id, kind, body)`` with body a kind-shaped tuple."""
+    if buf[:4] != SUBMIT_MAGIC:
+        raise ValueError("not a serve submit (bad magic)")
+    job_id, kind = _unpack("<QB", buf, 4)
+    pos = 13
+    if kind == KIND_SPMSPM:
+        body = _unpack("<QQQ", buf, pos)
+        pos += 24
+    elif kind in (KIND_CHAIN, KIND_STATE):
+        (n,) = _unpack("<Q", buf, pos)
+        (t,) = _unpack("<d", buf, pos + 8)
+        iters, fp_h = _unpack("<QQ", buf, pos + 16)
+        pos += 32
+        if iters == 0 or iters > MAX_CHAIN_ITERS:
+            raise ValueError(
+                f"serve submit claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})"
+            )
+        if kind == KIND_CHAIN:
+            body = (n, t, iters, fp_h)
+        else:
+            if n > (len(buf) - pos) // 16:
+                raise ValueError(
+                    f"truncated shard message: {2 * n} f64 values claimed at "
+                    f"offset {pos}, frame holds {len(buf)} bytes"
+                )
+            psi_re = list(_unpack(f"<{n}d", buf, pos))
+            pos += 8 * n
+            psi_im = list(_unpack(f"<{n}d", buf, pos))
+            pos += 8 * n
+            body = (n, t, iters, fp_h, psi_re, psi_im)
+    else:
+        raise ValueError(f"unknown serve submit kind {kind}")
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return job_id, kind, body
+
+
+def encode_result_spmspm(job_id, mults, n, mat):
+    return (
+        RESULT_MAGIC
+        + struct.pack("<QBB", job_id, STATUS_OK, KIND_SPMSPM)
+        + struct.pack("<QQ", mults, n)
+        + mat
+    )
+
+
+def encode_result_chain(job_id, n, term, sum_m, steps):
+    out = [
+        RESULT_MAGIC,
+        struct.pack("<QBB", job_id, STATUS_OK, KIND_CHAIN),
+        struct.pack("<Q", n),
+        term,
+        sum_m,
+        struct.pack("<Q", len(steps)),
+    ]
+    for k, term_nnzd, sum_nnzd, term_elements, saving, mults in steps:
+        out.append(
+            struct.pack("<QQQQdQ", k, term_nnzd, sum_nnzd, term_elements, saving, mults)
+        )
+    return b"".join(out)
+
+
+def encode_result_state(job_id, psi_re, psi_im, steps):
+    assert len(psi_re) == len(psi_im)
+    out = [
+        RESULT_MAGIC,
+        struct.pack("<QBB", job_id, STATUS_OK, KIND_STATE),
+        struct.pack("<Q", len(steps)),
+    ]
+    for k, mults in steps:
+        out.append(struct.pack("<QQ", k, mults))
+    out.append(struct.pack("<Q", len(psi_re)))
+    out += [struct.pack("<d", v) for v in psi_re]
+    out += [struct.pack("<d", v) for v in psi_im]
+    return b"".join(out)
+
+
+def encode_result_err(job_id, msg):
+    raw = msg.encode("utf-8")
+    return RESULT_MAGIC + struct.pack("<QBQ", job_id, STATUS_ERR, len(raw)) + raw
+
+
+def decode_result(buf):
+    """Returns ``(job_id, kind | "err", body)``. A job-level failure is a
+    *value* — the connection (and the tenant's other jobs) survive."""
+    if buf[:4] != RESULT_MAGIC:
+        raise ValueError("not a serve result (bad magic)")
+    job_id, status = _unpack("<QB", buf, 4)
+    if status == STATUS_ERR:
+        (length,) = _unpack("<Q", buf, 13)
+        if 21 + length != len(buf):
+            raise ValueError(
+                "truncated shard message" if 21 + length > len(buf) else "trailing bytes"
+            )
+        return job_id, "err", buf[21 : 21 + length].decode("utf-8")
+    if status != STATUS_OK:
+        raise ValueError(f"unknown serve result status {status}")
+    (kind,) = _unpack("<B", buf, 13)
+    pos = 14
+    if kind == KIND_SPMSPM:
+        mults, n = _unpack("<QQ", buf, pos)
+        mat, pos = decode_matrix(buf, pos + 16, n)
+        body = (mults, n, mat)
+    elif kind == KIND_CHAIN:
+        (n,) = _unpack("<Q", buf, pos)
+        term, pos = decode_matrix(buf, pos + 8, n)
+        sum_m, pos = decode_matrix(buf, pos, n)
+        (nsteps,) = _unpack("<Q", buf, pos)
+        pos += 8
+        if nsteps > MAX_CHAIN_ITERS:
+            raise ValueError(
+                f"serve result claims {nsteps} steps (allowed <= {MAX_CHAIN_ITERS})"
+            )
+        steps = []
+        for _ in range(nsteps):
+            k, term_nnzd, sum_nnzd, term_elements = _unpack("<QQQQ", buf, pos)
+            (saving,) = _unpack("<d", buf, pos + 32)
+            (mults,) = _unpack("<Q", buf, pos + 40)
+            pos += 48
+            steps.append((k, term_nnzd, sum_nnzd, term_elements, saving, mults))
+        body = (n, term, sum_m, steps)
+    elif kind == KIND_STATE:
+        (nsteps,) = _unpack("<Q", buf, pos)
+        pos += 8
+        if nsteps > MAX_CHAIN_ITERS:
+            raise ValueError(
+                f"serve result claims {nsteps} steps (allowed <= {MAX_CHAIN_ITERS})"
+            )
+        steps = []
+        for _ in range(nsteps):
+            steps.append(_unpack("<QQ", buf, pos))
+            pos += 16
+        (n,) = _unpack("<Q", buf, pos)
+        pos += 8
+        if n > (len(buf) - pos) // 16:
+            raise ValueError(
+                f"truncated shard message: {2 * n} f64 values claimed at offset "
+                f"{pos}, frame holds {len(buf)} bytes"
+            )
+        psi_re = list(_unpack(f"<{n}d", buf, pos))
+        pos += 8 * n
+        psi_im = list(_unpack(f"<{n}d", buf, pos))
+        pos += 8 * n
+        body = (psi_re, psi_im, steps)
+    else:
+        raise ValueError(f"unknown serve result kind {kind}")
+    if pos != len(buf):
+        raise ValueError("trailing bytes")
+    return job_id, kind, body
+
+
+def encode_busy(job_id, retry_after_ms):
+    return BUSY_MAGIC + struct.pack("<QQ", job_id, retry_after_ms)
+
+
+def decode_busy(buf):
+    if buf[:4] != BUSY_MAGIC:
+        raise ValueError("not a serve busy frame (bad magic)")
+    if len(buf) != 20:
+        raise ValueError("trailing bytes" if len(buf) > 20 else "truncated shard message")
+    return _unpack("<QQ", buf, 4)
+
+
+def encode_stats_req():
+    return STATS_MAGIC
+
+
+def decode_stats_req(buf):
+    if buf[:4] != STATS_MAGIC:
+        raise ValueError("not a serve stats request (bad magic)")
+    if len(buf) != 4:
+        raise ValueError("trailing bytes")
+
+
+STATS_FIELDS = (
+    "jobs",
+    "batches",
+    "shared_operand_hits",
+    "devices_instantiated",
+    "queue_depth_peak",
+    "rejected_jobs",
+    "dedup_bytes_avoided",
+    "planes_resident",
+    "total_cycles",
+)
+
+
+def encode_stats_resp(counters, total_energy_j):
+    """``counters``: the nine u64 fields in STATS_FIELDS order, then the
+    energy as f64 bits — a fixed 85-byte frame."""
+    assert len(counters) == len(STATS_FIELDS)
+    return (
+        STATS_RESP_MAGIC
+        + bytes([STATUS_OK])
+        + struct.pack("<9Q", *counters)
+        + struct.pack("<d", total_energy_j)
+    )
+
+
+def decode_stats_resp(buf):
+    if buf[:4] != STATS_RESP_MAGIC:
+        raise ValueError("not a serve stats response (bad magic)")
+    (status,) = _unpack("<B", buf, 4)
+    if status != STATUS_OK:
+        raise ValueError(f"unknown serve stats status {status}")
+    counters = _unpack("<9Q", buf, 5)
+    (energy,) = _unpack("<d", buf, 77)
+    if len(buf) != 85:
+        raise ValueError("trailing bytes")
+    return counters, energy
+
+
+# --- the tests ------------------------------------------------------------
+
+
+def test_hello_v5_golden_bytes():
+    # The serving layer is the v5 semantic change; the handshake golden
+    # bytes pin the bump (mirrors `serve_wire_golden_bytes` in shard.rs).
+    assert WIRE_VERSION == 5
+    assert encode_hello() == b"DSHK\x05\x00\x00\x00"
+    check_hello(encode_hello())  # no raise
+    with pytest.raises(ValueError, match="v4"):
+        check_hello(b"DSHK\x04\x00\x00\x00")  # a v4 peer is named in the error
+
+
+def test_submit_spmspm_golden_layout_is_37_bytes():
+    # Pinned against `serve_wire_golden_bytes` in shard.rs: same ids,
+    # same fingerprints, byte for byte.
+    buf = encode_submit_spmspm(7, 4, 0x1111111111111111, 0x2222222222222222)
+    assert buf == (
+        b"DSB1"
+        + struct.pack("<Q", 7)
+        + b"\x00"
+        + struct.pack("<QQQ", 4, 0x1111111111111111, 0x2222222222222222)
+    )
+    assert len(buf) == 37
+    job_id, kind, body = decode_submit(buf)
+    assert (job_id, kind) == (7, KIND_SPMSPM)
+    assert body == (4, 0x1111111111111111, 0x2222222222222222)
+
+
+def test_submit_chain_and_state_roundtrip_bit_exact():
+    buf = encode_submit_chain(3, 16, -0.0, 6, GOLDEN_FP)
+    assert len(buf) == 45
+    # Kind byte sits at offset 12, t as f64 bits at 21.
+    assert buf[12] == KIND_CHAIN
+    job_id, kind, (n, t, iters, fp_h) = decode_submit(buf)
+    assert (job_id, n, iters, fp_h) == (3, 16, 6, GOLDEN_FP)
+    assert math.copysign(1.0, t) == -1.0  # -0.0 survived
+    psi_re = [1.0, -0.0]
+    psi_im = [5e-324, math.inf]
+    sbuf = encode_submit_state(4, 2, 0.3, 6, GOLDEN_FP, psi_re, psi_im)
+    assert len(sbuf) == 45 + 16 * 2
+    assert sbuf[12] == KIND_STATE
+    job_id, kind, (n, t, iters, fp_h, gre, gim) = decode_submit(sbuf)
+    assert (job_id, n, t, iters, fp_h) == (4, 2, 0.3, 6, GOLDEN_FP)
+    assert [f64_bits(x) for x in gre] == [f64_bits(x) for x in psi_re]
+    assert [f64_bits(x) for x in gim] == [f64_bits(x) for x in psi_im]
+    # The iteration budget is structural, shared with DSC1/DSE1.
+    for bad_iters in (0, MAX_CHAIN_ITERS + 1):
+        with pytest.raises(ValueError, match="iterations"):
+            decode_submit(encode_submit_chain(1, 16, 0.5, bad_iters, GOLDEN_FP))
+    with pytest.raises(ValueError, match="kind 9"):
+        decode_submit(buf[:12] + bytes([9]) + buf[13:])
+    with pytest.raises(ValueError):
+        decode_submit(buf + b"\x00")
+
+
+def test_result_roundtrips_every_kind_and_echoes_ids():
+    mat = golden_matrix()
+    buf = encode_result_spmspm(11, 27, GOLDEN_N, mat)
+    job_id, kind, (mults, n, (offs, re, im)) = decode_result(buf)
+    assert (job_id, kind, mults, n, offs) == (11, KIND_SPMSPM, 27, GOLDEN_N, GOLDEN_OFFSETS)
+    cbuf = encode_result_chain(
+        12, GOLDEN_N, mat, mat, [(1, 3, 3, 6, -0.0, 27), (2, 3, 1, 6, 0.5, 54)]
+    )
+    job_id, kind, (n, term, sum_m, steps) = decode_result(cbuf)
+    assert (job_id, kind, n, len(steps)) == (12, KIND_CHAIN, GOLDEN_N, 2)
+    assert math.copysign(1.0, steps[0][4]) == -1.0  # saving is f64 bits
+    sbuf = encode_result_state(13, [1.0, -0.0], [5e-324, 0.0], [(1, 9), (2, 9)])
+    job_id, kind, (gre, gim, ssteps) = decode_result(sbuf)
+    assert (job_id, kind, ssteps) == (13, KIND_STATE, [(1, 9), (2, 9)])
+    assert f64_bits(gre[1]) == f64_bits(-0.0)
+    assert f64_bits(gim[0]) == f64_bits(5e-324)
+    # A job-level failure decodes to a value with the id preserved — the
+    # client retires *that* job; the connection survives. Pinned against
+    # `serve_wire_golden_bytes`.
+    ebuf = encode_result_err(5, "nope")
+    assert ebuf == b"DRS1" + struct.pack("<Q", 5) + b"\x01" + struct.pack("<Q", 4) + b"nope"
+    assert decode_result(ebuf) == (5, "err", "nope")
+    # The resend-once recovery keys on this exact message text.
+    _, _, msg = decode_result(
+        encode_result_err(6, "job references unknown operand plane 0x1 — resend required")
+    )
+    assert "unknown operand plane" in msg
+    # A step count over the iteration budget rejects pre-allocation.
+    bad = bytearray(sbuf)
+    struct.pack_into("<Q", bad, 14, MAX_CHAIN_ITERS + 7)
+    with pytest.raises(ValueError, match="steps"):
+        decode_result(bytes(bad))
+
+
+def test_busy_golden_layout_is_20_bytes():
+    buf = encode_busy(9, 250)
+    # Pinned against `serve_wire_golden_bytes` in shard.rs.
+    assert buf == b"DBY1" + struct.pack("<QQ", 9, 250)
+    assert len(buf) == 20  # an admission refusal costs 20 bytes, not a job
+    assert decode_busy(buf) == (9, 250)
+    with pytest.raises(ValueError):
+        decode_busy(buf[:15])
+    with pytest.raises(ValueError):
+        decode_busy(buf + b"\x00")
+    with pytest.raises(ValueError, match="magic"):
+        decode_busy(b"DRS1" + buf[4:])
+
+
+def test_stats_frames_roundtrip_bit_exact():
+    assert encode_stats_req() == b"DST1"  # bare magic, no body
+    decode_stats_req(encode_stats_req())
+    counters = (18, 9, 12, 6, 2, 4, 123456, 7, 98765)
+    buf = encode_stats_resp(counters, -0.0)
+    assert len(buf) == 85
+    assert buf[:5] == b"DTR1\x00"
+    got, energy = decode_stats_resp(buf)
+    assert got == counters
+    assert math.copysign(1.0, energy) == -1.0  # energy travels as f64 bits
+    with pytest.raises(ValueError, match="status"):
+        decode_stats_resp(buf[:4] + b"\x07" + buf[5:])
+    with pytest.raises(ValueError):
+        decode_stats_req(b"DST1\x00")
+
+
+def test_every_truncation_and_mutation_fails_loudly():
+    """Same hardened-decoder property as the v1–v4 sweep: every proper
+    prefix raises ValueError, and single-byte header mutations either
+    reject loudly or decode to different values — never another
+    exception class, never a silent partial decode."""
+    frames = [
+        (encode_submit_spmspm(1, GOLDEN_N, GOLDEN_FP, GOLDEN_FP), decode_submit),
+        (encode_submit_chain(2, 16, 0.5, 4, GOLDEN_FP), decode_submit),
+        (
+            encode_submit_state(3, 2, 0.5, 4, GOLDEN_FP, [1.0, 0.0], [0.0, -1.0]),
+            decode_submit,
+        ),
+        (encode_result_spmspm(4, 27, GOLDEN_N, golden_matrix()), decode_result),
+        (
+            encode_result_chain(
+                5, GOLDEN_N, golden_matrix(), golden_matrix(), [(1, 3, 3, 6, 0.0, 27)]
+            ),
+            decode_result,
+        ),
+        (encode_result_state(6, [1.0, 0.5], [0.0, -0.5], [(1, 9)]), decode_result),
+        (encode_result_err(7, "boom"), decode_result),
+        (encode_busy(8, 250), decode_busy),
+        (encode_stats_resp((1, 2, 3, 4, 5, 6, 7, 8, 9), 0.125), decode_stats_resp),
+    ]
+    for buf, dec in frames:
+        dec(buf)  # the unmutated encoding decodes
+        for cut in range(len(buf)):
+            with pytest.raises(ValueError):
+                dec(buf[:cut])
+    rng = np.random.default_rng(11)
+    for buf, dec in frames:
+        for _ in range(64):
+            i = int(rng.integers(0, min(len(buf), 24)))
+            mutated = bytearray(buf)
+            mutated[i] ^= int(rng.integers(1, 256))
+            try:
+                dec(bytes(mutated))
+            except ValueError:
+                pass
+
+
+def test_composed_tenant_conversation_parses():
+    # One tenant's lifecycle on the wire: hello v5, ship H once, submit,
+    # then a second submit whose operand traffic is a 20-byte Have — the
+    # dedup the daemon-wide plane store buys.
+    rng = np.random.default_rng(5)
+    n = 4
+    offsets = sorted(set(int(d) for d in rng.integers(-(n - 1), n, size=3)))
+    elems = sum(n - abs(d) for d in offsets)
+    re = [float(x) for x in rng.standard_normal(elems)]
+    im = [float(x) for x in rng.standard_normal(elems)]
+    fp = plane_fingerprint(n, offsets, re, im)
+    put = encode_plane_put(fp, n, encode_matrix(n, offsets, re, im))
+    stream = (
+        encode_hello()
+        + encode_frame(put)
+        + encode_frame(encode_submit_spmspm(1, n, fp, fp))
+        + encode_frame(encode_plane_have(fp, n))
+        + encode_frame(encode_submit_chain(2, n, 0.3, 6, fp))
+        + encode_frame(encode_stats_req())
+    )
+    check_hello(stream[:HELLO_LEN])
+    pos = HELLO_LEN
+    kinds = []
+    while True:
+        payload, pos = read_frame(stream, pos)
+        if payload is None:
+            break
+        kinds.append(bytes(payload[:4]))
+    assert kinds == [b"DSP1", b"DSB1", b"DSH1", b"DSB1", b"DST1"]
+    # And the daemon's side of the admission state machine: accept,
+    # refuse, answer — each a distinct magic the client dispatches on.
+    replies = (
+        encode_frame(encode_busy(2, 20))
+        + encode_frame(encode_result_spmspm(1, 9, n, encode_matrix(n, offsets, re, im)))
+        + encode_frame(encode_stats_resp((2, 1, 1, 1, 1, 1, 0, 1, 42), 0.5))
+    )
+    f1, pos = read_frame(replies, 0)
+    assert decode_busy(f1) == (2, 20)
+    f2, pos = read_frame(replies, pos)
+    job_id, kind, (mults, gn, (goffs, gre, gim)) = decode_result(f2)
+    assert (job_id, mults, gn, goffs) == (1, 9, n, offsets)
+    assert [f64_bits(x) for x in gre] == [f64_bits(x) for x in re]
+    f3, pos = read_frame(replies, pos)
+    counters, energy = decode_stats_resp(f3)
+    assert counters[0] == 2 and counters[-1] == 42
+    assert read_frame(replies, pos)[0] is None

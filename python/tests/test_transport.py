@@ -1,4 +1,4 @@
-"""Transliteration checks of the shard transport's wire encoding (v4).
+"""Transliteration checks of the shard transport's wire encoding (v5).
 
 The build container has no Rust toolchain, so the byte-exact encoding
 rules of ``rust/src/coordinator/transport.rs`` (handshake + framing) and
@@ -31,6 +31,10 @@ and property-checked:
   server-side ``StateChainJob`` (``DSE1``, 36-byte header + the ψ0
   planes) and its ``DER1`` response carrying the evolved planes plus the
   per-step multiply trace.
+
+The v5 serving frames (``DSB1``/``DRS1``/``DBY1``/``DST1``/``DTR1``)
+are mirrored in ``test_serve.py``; the hello golden bytes here pin the
+version bump itself.
 """
 
 import math
@@ -41,7 +45,7 @@ import pytest
 
 # --- mirror of rust/src/coordinator/transport.rs --------------------------
 
-WIRE_VERSION = 4
+WIRE_VERSION = 5
 HELLO_MAGIC = b"DSHK"
 HELLO_LEN = 8
 MAX_FRAME_BYTES = 1 << 34
@@ -505,7 +509,7 @@ def test_hello_golden_bytes_and_roundtrip():
     assert len(h) == HELLO_LEN
     # Golden layout: magic then the version as little-endian u32. A Rust
     # encoding change that forgets the version bump breaks this line.
-    assert h == b"DSHK\x04\x00\x00\x00"
+    assert h == b"DSHK\x05\x00\x00\x00"
     assert decode_hello(h) == WIRE_VERSION
     check_hello(h)  # no raise
 

@@ -13,6 +13,14 @@
 //! diamond shard-serve --listen <addr> [--max-frame-bytes <n>]
 //!                     [--plane-cache-cap <n>] [--plan-cache-cap <n>]
 //! diamond shard-worker        (internal: one shard job over stdin/stdout)
+//! diamond serve --listen <addr> [--max-batch <n>] [--queue-cap <n>]
+//!               [--inflight-cap <n>] [--batch-window-ms <n>]
+//!               [--retry-after-ms <n>] [--queue-deadline-ms <n>]
+//!               [--max-frame-bytes <n>] [--plane-cache-cap <n>]
+//!               [--counters-json <path>]
+//! diamond serve-bench --endpoint <addr> [--baseline-endpoint <addr>]
+//!                     [--clients <n>] [--jobs <n>] [--family <name>]
+//!                     [--qubits <n>] [--json <path>]
 //! diamond bench-all
 //! ```
 
@@ -130,6 +138,285 @@ fn serve_config_flags(
             .map_err(|e| format!("--plan-cache-cap: {e}"))?;
     }
     Ok(cfg)
+}
+
+/// Parse `diamond serve`'s daemon knobs into a
+/// [`ServeDaemonConfig`](crate::coordinator::serve::ServeDaemonConfig),
+/// starting from the defaults.
+fn serve_daemon_flags(
+    args: &[String],
+) -> Result<crate::coordinator::serve::ServeDaemonConfig, String> {
+    let mut cfg = crate::coordinator::serve::ServeDaemonConfig::default();
+    if let Some(v) = flag_value(args, "--max-frame-bytes") {
+        cfg.max_frame_bytes = v
+            .parse::<u64>()
+            .map_err(|e| format!("--max-frame-bytes: {e}"))?;
+        if cfg.max_frame_bytes == 0 {
+            return Err("--max-frame-bytes must be at least 1".into());
+        }
+    }
+    if let Some(v) = flag_value(args, "--plane-cache-cap") {
+        cfg.plane_cache_cap = v
+            .parse::<usize>()
+            .map_err(|e| format!("--plane-cache-cap: {e}"))?;
+    }
+    if let Some(v) = flag_value(args, "--max-batch") {
+        cfg.max_batch = v.parse::<usize>().map_err(|e| format!("--max-batch: {e}"))?;
+        if cfg.max_batch == 0 {
+            return Err("--max-batch must be at least 1".into());
+        }
+    }
+    if let Some(v) = flag_value(args, "--queue-cap") {
+        cfg.queue_cap = v.parse::<usize>().map_err(|e| format!("--queue-cap: {e}"))?;
+        if cfg.queue_cap == 0 {
+            return Err("--queue-cap must be at least 1".into());
+        }
+    }
+    if let Some(v) = flag_value(args, "--inflight-cap") {
+        cfg.inflight_cap = v
+            .parse::<usize>()
+            .map_err(|e| format!("--inflight-cap: {e}"))?;
+        if cfg.inflight_cap == 0 {
+            return Err("--inflight-cap must be at least 1".into());
+        }
+    }
+    if let Some(v) = flag_value(args, "--batch-window-ms") {
+        cfg.batch_window = std::time::Duration::from_millis(
+            v.parse::<u64>().map_err(|e| format!("--batch-window-ms: {e}"))?,
+        );
+    }
+    if let Some(v) = flag_value(args, "--retry-after-ms") {
+        cfg.retry_after_ms = v
+            .parse::<u64>()
+            .map_err(|e| format!("--retry-after-ms: {e}"))?;
+        if cfg.retry_after_ms == 0 {
+            return Err("--retry-after-ms must be at least 1".into());
+        }
+    }
+    if let Some(v) = flag_value(args, "--queue-deadline-ms") {
+        let ms = v
+            .parse::<u64>()
+            .map_err(|e| format!("--queue-deadline-ms: {e}"))?;
+        if ms == 0 {
+            return Err("--queue-deadline-ms must be at least 1".into());
+        }
+        cfg.queue_deadline = std::time::Duration::from_millis(ms);
+    }
+    Ok(cfg)
+}
+
+/// Serialize the serving layer's counters (the fields the CI
+/// `serve-smoke` gate asserts on) as hand-built JSON.
+fn serve_counters_json(stats: &crate::coordinator::server::ServeStats) -> String {
+    format!(
+        "{{\n  \"jobs\": {},\n  \"batches\": {},\n  \"devices_instantiated\": {},\n  \
+         \"shared_operand_hits\": {},\n  \"queue_depth_peak\": {},\n  \
+         \"rejected_jobs\": {},\n  \"dedup_bytes_avoided\": {},\n  \
+         \"total_cycles\": {},\n  \"total_energy_j\": {:e}\n}}\n",
+        stats.jobs,
+        stats.batches,
+        stats.devices_instantiated,
+        stats.shared_operand_hits,
+        stats.queue_depth_peak,
+        stats.rejected_jobs,
+        stats.dedup_bytes_avoided,
+        stats.total_cycles,
+        stats.total_energy_j,
+    )
+}
+
+/// `diamond serve --listen <addr>` — the multi-tenant batch daemon
+/// (wire v5): many concurrent tenant connections, one shared operand
+/// store, one scheduler batching by stationary-operand fingerprint.
+/// Runs until SIGTERM/SIGINT, then drains cleanly (new submissions are
+/// `Busy`-rejected, queued jobs finish) and prints the final
+/// [`ServeStats`](crate::coordinator::server::ServeStats) line the CI
+/// gate scrapes; `--counters-json` writes the same counters as JSON.
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    use crate::coordinator::{serve, transport};
+    let listen = flag_value(args, "--listen")
+        .ok_or("serve requires --listen <host:port> (port 0 for ephemeral)")?;
+    let cfg = serve_daemon_flags(args)?;
+    let counters_path = flag_value(args, "--counters-json");
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| format!("binding {listen}: {e}"))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("resolving bound address: {e}"))?;
+    println!(
+        "serve: listening on {addr} (wire v{}, max-batch {}, queue-cap {})",
+        transport::WIRE_VERSION,
+        cfg.max_batch,
+        cfg.queue_cap,
+    );
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let stop = serve::stop_on_signals();
+    let stats =
+        serve::serve_blocking(listener, cfg, stop).map_err(|e| format!("serve: {e:#}"))?;
+    println!("serve: drained; {stats}");
+    if let Some(path) = counters_path {
+        std::fs::write(&path, serve_counters_json(&stats))
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("counters written to {path}");
+    }
+    Ok(())
+}
+
+/// `diamond serve-bench --endpoint <addr>` — the multi-tenant client
+/// harness behind the CI `serve-smoke` gate: `--clients` threads each
+/// submit `--jobs` SpMSpM jobs sharing one TFIM `H` (every round
+/// barrier-synchronized so concurrent submissions actually coalesce),
+/// verify every result bitwise against local execution, then read the
+/// daemon's stats delta. With `--baseline-endpoint` (a daemon running
+/// `--max-batch 1`) the same workload measures the no-batching device
+/// count; without it the definitional batch-size-1 cost (one device per
+/// job) is used. `--json` writes the `BENCH_serve.json` document with
+/// the `device_reduction` ratio the gate asserts ≥ 2.
+fn cmd_serve_bench(args: &[String]) -> Result<(), String> {
+    use crate::coordinator::serve::ServeClient;
+    let endpoint =
+        flag_value(args, "--endpoint").ok_or("serve-bench requires --endpoint <host:port>")?;
+    let baseline = flag_value(args, "--baseline-endpoint");
+    let clients: usize = flag_value(args, "--clients")
+        .map(|v| v.parse().map_err(|e| format!("--clients: {e}")))
+        .transpose()?
+        .unwrap_or(8);
+    let jobs: usize = flag_value(args, "--jobs")
+        .map(|v| v.parse().map_err(|e| format!("--jobs: {e}")))
+        .transpose()?
+        .unwrap_or(4);
+    if clients == 0 || jobs == 0 {
+        return Err("--clients and --jobs must be at least 1".into());
+    }
+    let family_arg = flag_value(args, "--family").unwrap_or_else(|| "tfim".into());
+    let family = parse_family(&family_arg)
+        .ok_or_else(|| format!("--family: unknown family `{family_arg}`"))?;
+    let qubits: usize = flag_value(args, "--qubits")
+        .map(|v| v.parse().map_err(|e| format!("--qubits: {e}")))
+        .transpose()?
+        .unwrap_or(6);
+    let json_path = flag_value(args, "--json");
+
+    let ham = crate::ham::build(family, qubits);
+    let h = std::sync::Arc::new(ham.matrix.freeze());
+    let (want, want_stats) = crate::linalg::packed_diag_mul_counted(&h, &h);
+    let want = std::sync::Arc::new(want);
+    let want_mults = want_stats.mults as u64;
+
+    // One workload run against `ep`: returns (stats delta of interest,
+    // busy retries absorbed). Every result is checked bitwise in the
+    // submitting thread; any mismatch fails the whole bench.
+    let run = |ep: &str| -> Result<(u64, u64, u64, u64, u64), String> {
+        let mut probe =
+            ServeClient::connect(ep).map_err(|e| format!("serve-bench: {ep}: {e:#}"))?;
+        let (before, _) = probe
+            .stats()
+            .map_err(|e| format!("serve-bench: {ep}: stats: {e:#}"))?;
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(clients));
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let (ep, h, want, barrier) = (
+                ep.to_string(),
+                std::sync::Arc::clone(&h),
+                std::sync::Arc::clone(&want),
+                std::sync::Arc::clone(&barrier),
+            );
+            handles.push(std::thread::spawn(move || -> Result<u64, String> {
+                let mut cl = ServeClient::connect(&ep)
+                    .map_err(|e| format!("client {c}: connect: {e:#}"))?;
+                for j in 0..jobs {
+                    // Rounds are barrier-synchronized so all tenants'
+                    // submissions land inside one batch window.
+                    barrier.wait();
+                    let (got, mults) = cl
+                        .spmspm(&h, &h)
+                        .map_err(|e| format!("client {c} job {j}: {e:#}"))?;
+                    if !got.bit_eq(&want) {
+                        return Err(format!(
+                            "client {c} job {j}: served product differs from local execution"
+                        ));
+                    }
+                    if mults != want_mults {
+                        return Err(format!(
+                            "client {c} job {j}: mults {mults} != local {want_mults}"
+                        ));
+                    }
+                }
+                Ok(cl.busy_retries)
+            }));
+        }
+        let mut busy = 0u64;
+        for hnd in handles {
+            busy += hnd.join().map_err(|_| "serve-bench: client panicked")??;
+        }
+        let (after, _) = probe
+            .stats()
+            .map_err(|e| format!("serve-bench: {ep}: stats: {e:#}"))?;
+        Ok((
+            after.jobs - before.jobs,
+            after.devices_instantiated - before.devices_instantiated,
+            after.shared_operand_hits - before.shared_operand_hits,
+            after.dedup_bytes_avoided - before.dedup_bytes_avoided,
+            busy,
+        ))
+    };
+
+    let total_jobs = (clients * jobs) as u64;
+    let (got_jobs, devices, shared_hits, dedup_bytes, busy) = run(&endpoint)?;
+    if got_jobs != total_jobs {
+        return Err(format!(
+            "daemon executed {got_jobs} job(s), expected {total_jobs} — jobs lost or duplicated"
+        ));
+    }
+    let baseline_devices = match &baseline {
+        Some(ep) => {
+            let (bjobs, bdev, _, _, _) = run(ep)?;
+            if bjobs != total_jobs {
+                return Err(format!(
+                    "baseline daemon executed {bjobs} job(s), expected {total_jobs}"
+                ));
+            }
+            bdev
+        }
+        // Definitional batch-size-1 cost: one device instantiation per
+        // job.
+        None => total_jobs,
+    };
+    let reduction = baseline_devices as f64 / devices.max(1) as f64;
+    println!(
+        "serve-bench: {clients} client(s) × {jobs} job(s) on {} ({} qubits): all bitwise-identical to local",
+        ham.name, qubits,
+    );
+    println!(
+        "devices instantiated: {devices} vs {baseline_devices} at batch size 1 — {reduction:.2}× reduction"
+    );
+    println!(
+        "shared-operand hits: {shared_hits}, dedup bytes avoided: {dedup_bytes}, busy retries absorbed: {busy}"
+    );
+    if let Some(path) = json_path {
+        let doc = format!(
+            "{{\n  \"family\": \"{}\",\n  \"qubits\": {},\n  \"clients\": {},\n  \
+             \"jobs_per_client\": {},\n  \"jobs\": {},\n  \"devices_instantiated\": {},\n  \
+             \"baseline_devices_instantiated\": {},\n  \"device_reduction\": {:.4},\n  \
+             \"shared_operand_hits\": {},\n  \"dedup_bytes_avoided\": {},\n  \
+             \"busy_retries\": {},\n  \"bitwise_identical\": true\n}}\n",
+            family_arg.to_ascii_lowercase(),
+            qubits,
+            clients,
+            jobs,
+            total_jobs,
+            devices,
+            baseline_devices,
+            reduction,
+            shared_hits,
+            dedup_bytes,
+            busy,
+        );
+        std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("serve bench written to {path}");
+    }
+    Ok(())
 }
 
 /// Serialize the shard-transport byte counters as a small JSON document
@@ -701,6 +988,8 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
         }
         "kernel" => cmd_kernel(rest),
         "shard-serve" => cmd_shard_serve(rest),
+        "serve" => cmd_serve(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "shard-worker" => {
             // Internal: executes one serialized (operands, shard range)
             // job received on stdin and writes the output-plane slice to
@@ -744,6 +1033,14 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
                  shard-serve --listen <host:port> [--max-frame-bytes <n>]\n              \
                  [--plane-cache-cap <n>] [--plan-cache-cap <n>]\n              \
                  (TCP shard daemon; port 0 = ephemeral)\n  \
+                 serve --listen <host:port> [--max-batch <n>] [--queue-cap <n>]\n        \
+                 [--inflight-cap <n>] [--batch-window-ms <n>] [--retry-after-ms <n>]\n        \
+                 [--queue-deadline-ms <n>] [--max-frame-bytes <n>]\n        \
+                 [--plane-cache-cap <n>] [--counters-json <path>]\n        \
+                 (multi-tenant batch daemon, wire v5; SIGTERM drains cleanly)\n  \
+                 serve-bench --endpoint <host:port> [--baseline-endpoint <host:port>]\n              \
+                 [--clients <n>] [--jobs <n>] [--family <name>] [--qubits <n>]\n              \
+                 [--json <path>]  (concurrent-tenant harness; verifies bitwise)\n  \
                  shard-worker  (internal: one shard job over stdin/stdout)"
             );
             Ok(())
@@ -887,6 +1184,98 @@ mod tests {
         assert!(serve_config_flags(&["--max-frame-bytes".into(), "0".into()]).is_err());
         assert!(serve_config_flags(&["--max-frame-bytes".into(), "x".into()]).is_err());
         assert!(serve_config_flags(&["--plane-cache-cap".into(), "-1".into()]).is_err());
+    }
+
+    #[test]
+    fn serve_daemon_flags_parse_and_reject() {
+        use crate::coordinator::serve::ServeDaemonConfig;
+        let d = ServeDaemonConfig::default();
+        let got = serve_daemon_flags(&[]).unwrap();
+        assert_eq!(got.max_batch, d.max_batch);
+        assert_eq!(got.queue_cap, d.queue_cap);
+        assert_eq!(got.inflight_cap, d.inflight_cap);
+        assert_eq!(got.batch_window, d.batch_window);
+        assert_eq!(got.retry_after_ms, d.retry_after_ms);
+        assert_eq!(got.queue_deadline, d.queue_deadline);
+        let got = serve_daemon_flags(&[
+            "--max-batch".into(),
+            "3".into(),
+            "--queue-cap".into(),
+            "5".into(),
+            "--inflight-cap".into(),
+            "2".into(),
+            "--batch-window-ms".into(),
+            "150".into(),
+            "--retry-after-ms".into(),
+            "40".into(),
+            "--queue-deadline-ms".into(),
+            "9000".into(),
+            "--max-frame-bytes".into(),
+            "4096".into(),
+            "--plane-cache-cap".into(),
+            "9".into(),
+        ])
+        .unwrap();
+        assert_eq!(got.max_batch, 3);
+        assert_eq!(got.queue_cap, 5);
+        assert_eq!(got.inflight_cap, 2);
+        assert_eq!(got.batch_window, std::time::Duration::from_millis(150));
+        assert_eq!(got.retry_after_ms, 40);
+        assert_eq!(got.queue_deadline, std::time::Duration::from_millis(9000));
+        assert_eq!(got.max_frame_bytes, 4096);
+        assert_eq!(got.plane_cache_cap, 9);
+        for bad in [
+            ["--max-batch", "0"],
+            ["--queue-cap", "0"],
+            ["--inflight-cap", "0"],
+            ["--retry-after-ms", "0"],
+            ["--queue-deadline-ms", "0"],
+            ["--max-frame-bytes", "0"],
+            ["--batch-window-ms", "x"],
+        ] {
+            assert!(
+                serve_daemon_flags(&[bad[0].into(), bad[1].into()]).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        // serve without --listen, serve-bench without --endpoint: both
+        // fail fast with exit 2.
+        assert_eq!(run_with_args(vec!["serve".into()]), 2);
+        assert_eq!(run_with_args(vec!["serve-bench".into()]), 2);
+        assert_eq!(
+            run_with_args(vec![
+                "serve".into(),
+                "--listen".into(),
+                "127.0.0.1:0".into(),
+                "--max-batch".into(),
+                "0".into(),
+            ]),
+            2
+        );
+    }
+
+    #[test]
+    fn serve_counters_json_shape() {
+        let stats = crate::coordinator::server::ServeStats {
+            jobs: 32,
+            batches: 4,
+            devices_instantiated: 4,
+            shared_operand_hits: 28,
+            queue_depth_peak: 8,
+            rejected_jobs: 3,
+            dedup_bytes_avoided: 4096,
+            total_cycles: 1000,
+            total_energy_j: 1.5e-6,
+        };
+        let doc = serve_counters_json(&stats);
+        assert!(doc.contains("\"jobs\": 32"));
+        assert!(doc.contains("\"devices_instantiated\": 4"));
+        assert!(doc.contains("\"shared_operand_hits\": 28"));
+        assert!(doc.contains("\"queue_depth_peak\": 8"));
+        assert!(doc.contains("\"rejected_jobs\": 3"));
+        assert!(doc.contains("\"dedup_bytes_avoided\": 4096"));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert!(!doc.contains(",]") && !doc.contains(",}"));
     }
 
     #[test]

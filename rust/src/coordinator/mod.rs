@@ -15,6 +15,7 @@
 //! pool fans benchmark suites out across threads.
 
 pub mod pool;
+pub mod serve;
 pub mod server;
 pub mod shard;
 pub mod transport;

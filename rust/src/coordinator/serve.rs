@@ -1,0 +1,1273 @@
+//! The **multi-tenant serving layer**: the `diamond serve` TCP daemon
+//! (wire v5) that wires the in-process [`BatchServer`] scheduling
+//! policy to the shard-transport fleet — many concurrent client
+//! connections submit SpMSpM, operator-chain and state-chain jobs; a
+//! single scheduler thread drains a bounded submission queue into
+//! batches grouped by the stationary-operand fingerprint, so tenants
+//! sharing a resident `H` share one device instantiation, one plan
+//! cache, and (via the daemon-wide content-addressed [`PlaneStore`])
+//! one shipped copy of the operand planes.
+//!
+//! Three pieces (see `docs/ARCHITECTURE.md` §Serving layer for the wire
+//! spec and the admission state machine):
+//!
+//! * **connection threads** — one per accepted client, running the v5
+//!   handshake and frame loop: `PutPlane`/`HavePlane` frames land in
+//!   the *shared* store (`HavePlane` hits credit
+//!   [`ServeStats::dedup_bytes_avoided`] — bytes another tenant's Put
+//!   saved this one from shipping), `Submit` frames pass admission
+//!   control and enqueue, `Stats` frames answer immediately from the
+//!   shared counters.
+//! * **admission control** — a submission is refused with a typed
+//!   `Busy{retry_after}` frame (never silently dropped, never blocking
+//!   the daemon) when the bounded queue is full, the connection is over
+//!   its in-flight cap, or the daemon is draining; queued jobs that
+//!   outlive the queue deadline fail fast with a structured error
+//!   instead of executing stale work.
+//! * the **scheduler thread** — waits for submissions, sleeps one
+//!   `batch_window` so concurrent tenants' jobs can coalesce, then
+//!   drains the whole queue and executes it under the
+//!   [`BatchServer`]-inherited policy: stable-sort by
+//!   `(dim, stationary fingerprint)`, cut batches at every key change
+//!   and at `max_batch`, one [`DiamondDevice`] per batch with
+//!   fingerprint-shared matrix registrations, results written back in
+//!   frame form to each job's own connection.
+//!
+//! ## Determinism
+//!
+//! Batching changes *when* a job runs, never *what* it computes: values
+//! are produced by the same loop bodies every local path runs —
+//! [`ShardCoordinator::multiply`] for SpMSpM,
+//! [`ChainDriver::from_packed`] for operator chains,
+//! [`StateDriver::from_packed`] for state chains — on operands that
+//! travelled as `f64::to_bits`. Results are therefore bitwise identical
+//! to serial local execution regardless of tenant count, admission
+//! rejections or batch grouping (gated by `rust/tests/serve.rs` and the
+//! CI `serve-smoke` job).
+//!
+//! [`BatchServer`]: crate::coordinator::server::BatchServer
+
+use crate::coordinator::server::ServeStats;
+use crate::coordinator::shard::{
+    decode_busy, decode_plane_have, decode_plane_put, decode_result, decode_stats_req,
+    decode_stats_resp, decode_submit, encode_busy, encode_err, encode_plane_have,
+    encode_plane_put, encode_result_err, encode_result_ok, encode_stats_req, encode_stats_resp,
+    encode_submit, plane_fingerprint, plane_wire_bytes, PlaneStore, ServeResult,
+    ShardCoordinator, SubmitBody, BUSY_MAGIC, DEFAULT_WORKER_TIMEOUT, PLANE_HAVE_MAGIC,
+    PLANE_PUT_MAGIC, RESULT_MAGIC, STATS_MAGIC, SUBMIT_MAGIC,
+};
+use crate::coordinator::transport::{
+    check_hello, encode_hello, read_frame_limited, write_frame, DEFAULT_CONNECT_TIMEOUT,
+    HELLO_LEN, MAX_FRAME_BYTES,
+};
+use crate::format::PackedDiagMatrix;
+use crate::sim::device::MatrixId;
+use crate::sim::{DiamondDevice, SimConfig};
+use crate::taylor::{ChainDriver, StateDriver, StateStep, TaylorStep};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long each side waits for the peer's handshake bytes (same bound
+/// as the shard transport).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Server-side idle deadline between frames — a half-open tenant must
+/// not pin a connection thread forever.
+const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(30 * 60);
+
+/// Default daemon-wide plane-store capacity. Larger than the
+/// per-connection shard default: the store is shared by *every* tenant,
+/// and its whole point is keeping many tenants' stationary operands
+/// resident at once.
+pub const DEFAULT_SERVE_PLANE_CAP: usize = 64;
+
+/// Default jobs per batch (one device instantiation per batch).
+pub const DEFAULT_MAX_BATCH: usize = 8;
+
+/// Default bound on the submission queue — beyond it, submissions are
+/// refused with `Busy` instead of ballooning memory.
+pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// Default per-connection in-flight cap: one tenant pipelining
+/// unboundedly must not starve the rest.
+pub const DEFAULT_INFLIGHT_CAP: usize = 16;
+
+/// Default batch window: how long the scheduler lets concurrent
+/// tenants' submissions coalesce before draining the queue. Small —
+/// enough for a burst of near-simultaneous submits to land in one
+/// batch, negligible against a job's execution time.
+pub const DEFAULT_BATCH_WINDOW: Duration = Duration::from_millis(5);
+
+/// Default retry hint carried by a `Busy` rejection.
+pub const DEFAULT_RETRY_AFTER_MS: u64 = 20;
+
+/// Default fail-fast deadline for a queued job: a job the scheduler
+/// could not reach within this bound answers with a structured error
+/// rather than executing arbitrarily stale work.
+pub const DEFAULT_QUEUE_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Tunables of a `diamond serve` daemon — the CLI exposes each as a
+/// flag (`--max-batch`, `--queue-cap`, `--inflight-cap`,
+/// `--batch-window-ms`, `--retry-after-ms`, `--queue-deadline-ms`,
+/// `--max-frame-bytes`, `--plane-cache-cap`).
+#[derive(Clone, Debug)]
+pub struct ServeDaemonConfig {
+    /// Largest framed payload the daemon will read (default
+    /// [`MAX_FRAME_BYTES`]).
+    pub max_frame_bytes: u64,
+    /// Daemon-wide plane-store capacity (default
+    /// [`DEFAULT_SERVE_PLANE_CAP`]).
+    pub plane_cache_cap: usize,
+    /// Jobs per batch (default [`DEFAULT_MAX_BATCH`]).
+    pub max_batch: usize,
+    /// Submission-queue bound (default [`DEFAULT_QUEUE_CAP`]).
+    pub queue_cap: usize,
+    /// Per-connection in-flight cap (default [`DEFAULT_INFLIGHT_CAP`]).
+    pub inflight_cap: usize,
+    /// Coalescing window before each queue drain (default
+    /// [`DEFAULT_BATCH_WINDOW`]).
+    pub batch_window: Duration,
+    /// Retry hint carried by `Busy` rejections (default
+    /// [`DEFAULT_RETRY_AFTER_MS`]).
+    pub retry_after_ms: u64,
+    /// Fail-fast deadline for queued jobs (default
+    /// [`DEFAULT_QUEUE_DEADLINE`]).
+    pub queue_deadline: Duration,
+}
+
+impl Default for ServeDaemonConfig {
+    fn default() -> Self {
+        ServeDaemonConfig {
+            max_frame_bytes: MAX_FRAME_BYTES,
+            plane_cache_cap: DEFAULT_SERVE_PLANE_CAP,
+            max_batch: DEFAULT_MAX_BATCH,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            inflight_cap: DEFAULT_INFLIGHT_CAP,
+            batch_window: DEFAULT_BATCH_WINDOW,
+            retry_after_ms: DEFAULT_RETRY_AFTER_MS,
+            queue_deadline: DEFAULT_QUEUE_DEADLINE,
+        }
+    }
+}
+
+// --- shared daemon state --------------------------------------------------
+
+/// One tenant connection's write half, shared between its reader thread
+/// (which writes `Busy`, immediate errors and stats replies) and the
+/// scheduler (which writes results) — every frame goes out under the
+/// same mutex, so replies never interleave mid-frame.
+struct Conn {
+    writer: Mutex<TcpStream>,
+    /// Jobs accepted from this connection and not yet answered.
+    inflight: AtomicUsize,
+    peer: String,
+}
+
+fn send(conn: &Conn, frame: &[u8]) -> Result<()> {
+    let mut w = conn.writer.lock().expect("serve writer lock poisoned");
+    write_frame(&mut *w, &[frame]).context("writing serve frame")
+}
+
+/// A submission that passed admission: operands already resolved to
+/// shared planes (an `Arc` clone, so a later store eviction cannot
+/// invalidate a queued job), plus the grouping key and the connection
+/// to answer on.
+struct Queued {
+    job_id: u64,
+    job: ResolvedJob,
+    dim: usize,
+    /// Stationary-operand fingerprint — the batch grouping key.
+    key_fp: u64,
+    enqueued: Instant,
+    conn: Arc<Conn>,
+}
+
+enum ResolvedJob {
+    Spmspm {
+        fp_a: u64,
+        fp_b: u64,
+        a: Arc<PackedDiagMatrix>,
+        b: Arc<PackedDiagMatrix>,
+    },
+    Chain {
+        fp_h: u64,
+        t: f64,
+        iters: usize,
+        h: Arc<PackedDiagMatrix>,
+    },
+    State {
+        fp_h: u64,
+        t: f64,
+        iters: usize,
+        h: Arc<PackedDiagMatrix>,
+        psi_re: Vec<f64>,
+        psi_im: Vec<f64>,
+    },
+}
+
+impl ResolvedJob {
+    /// Largest operand diagonal count — sizes the batch's device.
+    fn max_nnzd(&self) -> usize {
+        match self {
+            ResolvedJob::Spmspm { a, b, .. } => a.nnzd().max(b.nnzd()),
+            ResolvedJob::Chain { h, .. } | ResolvedJob::State { h, .. } => h.nnzd(),
+        }
+    }
+
+    /// Fingerprints of every operand plane the job touches (the keys of
+    /// the batch's shared device registrations).
+    fn operand_fps(&self) -> Vec<u64> {
+        match self {
+            ResolvedJob::Spmspm { fp_a, fp_b, .. } => vec![*fp_a, *fp_b],
+            ResolvedJob::Chain { fp_h, .. } | ResolvedJob::State { fp_h, .. } => vec![*fp_h],
+        }
+    }
+}
+
+/// Everything the connection threads and the scheduler share.
+struct Shared {
+    cfg: ServeDaemonConfig,
+    /// The daemon-wide content-addressed operand store — the
+    /// per-connection [`PlaneStore`] of the shard wire, promoted to one
+    /// instance for all tenants.
+    planes: Mutex<PlaneStore>,
+    queue: Mutex<VecDeque<Queued>>,
+    cv: Condvar,
+    stats: Mutex<ServeStats>,
+    /// Once set, new submissions are `Busy`-rejected and the scheduler
+    /// exits after the queue empties — the clean-drain half of
+    /// shutdown. Checked under the queue mutex at enqueue time, so a
+    /// submission is either drained or rejected, never lost.
+    draining: AtomicBool,
+}
+
+impl Shared {
+    fn new(cfg: ServeDaemonConfig) -> Self {
+        let planes = PlaneStore::new(cfg.plane_cache_cap);
+        Shared {
+            cfg,
+            planes: Mutex::new(planes),
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stats: Mutex::new(ServeStats::default()),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    fn stats_snapshot(&self) -> ServeStats {
+        *self.stats.lock().expect("serve stats lock poisoned")
+    }
+}
+
+// --- connection threads ---------------------------------------------------
+
+/// Resolve a submit body against the shared plane store, cloning the
+/// `Arc`s so the job survives any later eviction. Errors are job-level
+/// strings (the connection survives); an unknown plane names the
+/// fingerprint with the same `unknown operand plane` phrasing the shard
+/// wire uses, so the one client recovery path serves both layers.
+fn resolve_body(shared: &Shared, body: SubmitBody) -> std::result::Result<ResolvedJob, String> {
+    let planes = shared.planes.lock().expect("serve planes lock poisoned");
+    let get = |fp: u64, n: usize, role: &str| {
+        let p = planes.get(fp).ok_or_else(|| {
+            format!("job references unknown operand plane {fp:#018x} ({role}) — resend required")
+        })?;
+        if p.dim() != n {
+            return Err(format!(
+                "job dimension {n} does not match resident plane {fp:#018x} (dimension {})",
+                p.dim()
+            ));
+        }
+        Ok(p)
+    };
+    match body {
+        SubmitBody::Spmspm { n, fp_a, fp_b } => Ok(ResolvedJob::Spmspm {
+            fp_a,
+            fp_b,
+            a: get(fp_a, n, "A")?,
+            b: get(fp_b, n, "B")?,
+        }),
+        SubmitBody::Chain { n, t, iters, fp_h } => Ok(ResolvedJob::Chain {
+            fp_h,
+            t,
+            iters,
+            h: get(fp_h, n, "H")?,
+        }),
+        SubmitBody::State {
+            n,
+            t,
+            iters,
+            fp_h,
+            psi_re,
+            psi_im,
+        } => Ok(ResolvedJob::State {
+            fp_h,
+            t,
+            iters,
+            h: get(fp_h, n, "H")?,
+            psi_re,
+            psi_im,
+        }),
+    }
+}
+
+/// Serve one tenant connection: v5 handshake, then the frame loop.
+/// Plane frames are absorbed silently into the shared store (a problem
+/// with one is parked and reported on the next submit, preserving the
+/// submit→reply rhythm); submits pass admission control; stats answer
+/// immediately. Job-level failures keep the connection up; transport or
+/// handshake failures tear it down.
+fn handle_conn(mut stream: TcpStream, peer: &str, shared: &Arc<Shared>) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .write_all(&encode_hello())
+        .and_then(|()| stream.flush())
+        .context("sending handshake")?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("arming handshake deadline")?;
+    let mut hello = [0u8; HELLO_LEN];
+    stream
+        .read_exact(&mut hello)
+        .context("reading client handshake")?;
+    if let Err(e) = check_hello(&hello) {
+        let _ = write_frame(&mut stream, &[&encode_err(&format!("{e:#}"))]);
+        return Err(e);
+    }
+    stream
+        .set_read_timeout(Some(CONN_IDLE_TIMEOUT))
+        .context("arming idle deadline")?;
+
+    let conn = Arc::new(Conn {
+        writer: Mutex::new(stream.try_clone().context("cloning connection writer")?),
+        inflight: AtomicUsize::new(0),
+        peer: peer.to_string(),
+    });
+    let cfg = &shared.cfg;
+    let mut pending_err: Option<String> = None;
+
+    while let Some(frame) = read_frame_limited(&mut stream, cfg.max_frame_bytes)? {
+        match frame.get(..4) {
+            Some(m) if m == PLANE_PUT_MAGIC => match decode_plane_put(&frame) {
+                Ok((fp, plane)) => {
+                    // Re-fingerprint before trusting: a corrupt Put must
+                    // not poison a store every tenant resolves against.
+                    let actual = plane_fingerprint(&plane);
+                    if actual != fp {
+                        pending_err = Some(format!(
+                            "plane fingerprint mismatch: frame claims {fp:#018x}, \
+                             content hashes to {actual:#018x}"
+                        ));
+                    } else {
+                        shared
+                            .planes
+                            .lock()
+                            .expect("serve planes lock poisoned")
+                            .insert(fp, Arc::new(plane));
+                    }
+                }
+                Err(e) => pending_err = Some(format!("{e:#}")),
+            },
+            Some(m) if m == PLANE_HAVE_MAGIC => match decode_plane_have(&frame) {
+                Ok((fp, n)) => {
+                    let hit = shared
+                        .planes
+                        .lock()
+                        .expect("serve planes lock poisoned")
+                        .get(fp)
+                        .filter(|p| p.dim() == n);
+                    match hit {
+                        Some(p) => {
+                            // The daemon-wide dedup win: this tenant
+                            // referenced a plane some tenant already
+                            // shipped, saving a full Put.
+                            shared
+                                .stats
+                                .lock()
+                                .expect("serve stats lock poisoned")
+                                .dedup_bytes_avoided += plane_wire_bytes(&p);
+                        }
+                        None => {
+                            pending_err = Some(format!(
+                                "job references unknown operand plane {fp:#018x} (have) \
+                                 — resend required"
+                            ))
+                        }
+                    }
+                }
+                Err(e) => pending_err = Some(format!("{e:#}")),
+            },
+            Some(m) if m == SUBMIT_MAGIC => {
+                let refs = decode_submit(&frame)?;
+                if let Some(msg) = pending_err.take() {
+                    send(&conn, &encode_result_err(refs.job_id, &msg))?;
+                    continue;
+                }
+                let busy = |shared: &Shared, conn: &Conn| -> Result<()> {
+                    shared
+                        .stats
+                        .lock()
+                        .expect("serve stats lock poisoned")
+                        .rejected_jobs += 1;
+                    send(conn, &encode_busy(refs.job_id, shared.cfg.retry_after_ms))
+                };
+                if shared.draining.load(Ordering::SeqCst)
+                    || conn.inflight.load(Ordering::SeqCst) >= cfg.inflight_cap
+                {
+                    busy(shared, &conn)?;
+                    continue;
+                }
+                match resolve_body(shared, refs.body) {
+                    Err(msg) => send(&conn, &encode_result_err(refs.job_id, &msg))?,
+                    Ok(job) => {
+                        let queued = Queued {
+                            job_id: refs.job_id,
+                            dim: match &job {
+                                ResolvedJob::Spmspm { a, .. } => a.dim(),
+                                ResolvedJob::Chain { h, .. }
+                                | ResolvedJob::State { h, .. } => h.dim(),
+                            },
+                            key_fp: match &job {
+                                ResolvedJob::Spmspm { fp_b, .. } => *fp_b,
+                                ResolvedJob::Chain { fp_h, .. }
+                                | ResolvedJob::State { fp_h, .. } => *fp_h,
+                            },
+                            job,
+                            enqueued: Instant::now(),
+                            conn: Arc::clone(&conn),
+                        };
+                        let mut q = shared.queue.lock().expect("serve queue lock poisoned");
+                        // Drain and cap are both decided under the
+                        // queue mutex: a submission is either visible
+                        // to the scheduler's final drain or rejected.
+                        if shared.draining.load(Ordering::SeqCst) || q.len() >= cfg.queue_cap {
+                            drop(q);
+                            busy(shared, &conn)?;
+                        } else {
+                            conn.inflight.fetch_add(1, Ordering::SeqCst);
+                            q.push_back(queued);
+                            let depth = q.len() as u64;
+                            drop(q);
+                            let mut st =
+                                shared.stats.lock().expect("serve stats lock poisoned");
+                            st.queue_depth_peak = st.queue_depth_peak.max(depth);
+                            drop(st);
+                            shared.cv.notify_one();
+                        }
+                    }
+                }
+            }
+            Some(m) if m == STATS_MAGIC => {
+                decode_stats_req(&frame)?;
+                let stats = shared.stats_snapshot();
+                let resident = shared
+                    .planes
+                    .lock()
+                    .expect("serve planes lock poisoned")
+                    .len() as u64;
+                send(&conn, &encode_stats_resp(&stats, resident))?;
+            }
+            _ => {
+                bail!(
+                    "unknown serve frame ({} bytes; magic {:02x?})",
+                    frame.len(),
+                    frame.get(..4).unwrap_or(&[])
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+// --- the scheduler --------------------------------------------------------
+
+/// Execute one drained queue's worth of jobs under the batching policy
+/// and write each result to its own connection.
+fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Queued>) {
+    // Fail queued-too-long jobs fast instead of executing stale work.
+    let now = Instant::now();
+    let deadline = shared.cfg.queue_deadline;
+    let mut live = Vec::with_capacity(jobs.len());
+    for q in jobs.drain(..) {
+        if now.duration_since(q.enqueued) > deadline {
+            let msg = format!(
+                "job expired in the submission queue (deadline {} ms)",
+                deadline.as_millis()
+            );
+            if let Err(e) = send(&q.conn, &encode_result_err(q.job_id, &msg)) {
+                eprintln!("serve: {}: dropping expiry for job {}: {e:#}", q.conn.peer, q.job_id);
+            }
+            q.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+        } else {
+            live.push(q);
+        }
+    }
+
+    // The BatchServer schedule: stable sort by (dim, stationary fp),
+    // cut batches at every key change and at max_batch — a batch never
+    // mixes dimensions or stationary operands.
+    live.sort_by_key(|q| (q.dim, q.key_fp));
+    for run in live.chunk_by(|x, y| (x.dim, x.key_fp) == (y.dim, y.key_fp)) {
+        for chunk in run.chunks(shared.cfg.max_batch) {
+            let mut delta = ServeStats {
+                batches: 1,
+                devices_instantiated: 1,
+                ..ServeStats::default()
+            };
+            let dim = chunk[0].dim;
+            let max_nnzd = chunk.iter().map(|q| q.job.max_nnzd()).max().unwrap_or(1);
+            let cfg = SimConfig::for_workload(dim, max_nnzd, max_nnzd);
+            let mut device = DiamondDevice::new(cfg);
+            let mut id_cache: HashMap<u64, MatrixId> = HashMap::new();
+
+            let mut replies: Vec<(&Queued, Vec<u8>)> = Vec::with_capacity(chunk.len());
+            for q in chunk {
+                let fps = q.job.operand_fps();
+                if fps.iter().any(|fp| id_cache.contains_key(fp)) {
+                    delta.shared_operand_hits += 1;
+                }
+                for fp in &fps {
+                    id_cache
+                        .entry(*fp)
+                        .or_insert_with(|| device.register_matrix());
+                }
+                let reply = match &q.job {
+                    ResolvedJob::Spmspm { fp_a, fp_b, a, b } => {
+                        // Sim accounting through the batch's shared
+                        // device (cache model sees cross-tenant reuse),
+                        // values through the shared engine.
+                        let (ia, ib) = (id_cache[fp_a], id_cache[fp_b]);
+                        let ic = device.register_matrix();
+                        let (_timed, sim) = device.spmspm(&a.thaw(), ia, &b.thaw(), ib, ic);
+                        delta.total_cycles += sim.total_cycles();
+                        delta.total_energy_j += crate::energy::diamond_energy(&sim);
+                        match engine.multiply(a, b) {
+                            Ok((c, stats)) => encode_result_ok(
+                                q.job_id,
+                                &ServeResult::Spmspm {
+                                    c,
+                                    mults: stats.mults as u64,
+                                },
+                            ),
+                            Err(e) => encode_result_err(q.job_id, &format!("{e:#}")),
+                        }
+                    }
+                    ResolvedJob::Chain { t, iters, h, .. } => {
+                        match ChainDriver::from_packed(h, *t).run(*iters, engine) {
+                            Ok(out) => encode_result_ok(
+                                q.job_id,
+                                &ServeResult::Chain {
+                                    term: out.term,
+                                    sum: out.op.freeze(),
+                                    steps: out.steps,
+                                },
+                            ),
+                            Err(e) => encode_result_err(q.job_id, &format!("{e:#}")),
+                        }
+                    }
+                    ResolvedJob::State {
+                        t,
+                        iters,
+                        h,
+                        psi_re,
+                        psi_im,
+                        ..
+                    } => {
+                        let driver =
+                            StateDriver::from_packed(h, *t, psi_re.clone(), psi_im.clone());
+                        match driver.run(*iters, engine) {
+                            Ok(out) => encode_result_ok(
+                                q.job_id,
+                                &ServeResult::State {
+                                    psi_re: out.psi_re,
+                                    psi_im: out.psi_im,
+                                    steps: out.steps,
+                                },
+                            ),
+                            Err(e) => encode_result_err(q.job_id, &format!("{e:#}")),
+                        }
+                    }
+                };
+                delta.jobs += 1;
+                replies.push((q, reply));
+            }
+            // Absorb before replying: a tenant that reads its result
+            // and immediately asks for Stats must see its job counted.
+            shared
+                .stats
+                .lock()
+                .expect("serve stats lock poisoned")
+                .absorb(&delta);
+            for (q, reply) in replies {
+                // Free the in-flight slot before the reply hits the
+                // wire, so an instant resubmit can't draw a spurious
+                // Busy for a slot its own finished job still holds.
+                q.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                if let Err(e) = send(&q.conn, &reply) {
+                    // The tenant left; its batch-mates' results are
+                    // unaffected.
+                    eprintln!(
+                        "serve: {}: dropping result for job {}: {e:#}",
+                        q.conn.peer, q.job_id
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The scheduler loop: wait for submissions (or drain), let one batch
+/// window of tenants coalesce, drain the whole queue, execute. One
+/// [`ShardCoordinator`] lives across the daemon's whole life, so every
+/// tenant's chains share its plan caches. Exits — returning the final
+/// stats — only when draining *and* the queue is empty, a check made
+/// under the queue mutex so no accepted job can slip past the last
+/// drain.
+fn run_scheduler(shared: Arc<Shared>) -> ServeStats {
+    let mut engine = ShardCoordinator::single();
+    loop {
+        {
+            let mut q = shared.queue.lock().expect("serve queue lock poisoned");
+            while q.is_empty() && !shared.draining.load(Ordering::SeqCst) {
+                q = shared.cv.wait(q).expect("serve queue lock poisoned");
+            }
+            if q.is_empty() {
+                break;
+            }
+        }
+        std::thread::sleep(shared.cfg.batch_window);
+        let drained: Vec<Queued> = shared
+            .queue
+            .lock()
+            .expect("serve queue lock poisoned")
+            .drain(..)
+            .collect();
+        run_batches(&shared, &mut engine, drained);
+    }
+    shared.stats_snapshot()
+}
+
+// --- daemon front doors ---------------------------------------------------
+
+/// The accept loop: one connection thread per tenant; transient accept
+/// failures are logged and retried. Exits when `stop` flips (woken by a
+/// self-connect).
+fn run_serve_accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, shared: Arc<Shared>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let peer = peer.to_string();
+                let conn_shared = Arc::clone(&shared);
+                let _ = std::thread::Builder::new()
+                    .name(format!("serve-conn-{peer}"))
+                    .spawn(move || {
+                        if let Err(e) = handle_conn(stream, &peer, &conn_shared) {
+                            eprintln!("serve: {peer}: {e:#}");
+                        }
+                    });
+            }
+            Err(e) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("serve: accept failed (retrying): {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Run the daemon on the calling thread until `stop` flips, then drain
+/// cleanly: stop accepting, `Busy`-reject new submissions, finish every
+/// queued job, and return the final stats — the `diamond serve` entry
+/// point (the CLI arms `stop` from SIGTERM/SIGINT via
+/// [`stop_on_signals`]).
+pub fn serve_blocking(
+    listener: TcpListener,
+    cfg: ServeDaemonConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<ServeStats> {
+    let addr = listener.local_addr().context("resolving bound address")?;
+    let shared = Arc::new(Shared::new(cfg));
+    let sched_shared = Arc::clone(&shared);
+    let sched = std::thread::Builder::new()
+        .name("serve-scheduler".into())
+        .spawn(move || run_scheduler(sched_shared))
+        .context("spawning serve scheduler")?;
+    // The watcher turns the stop flag into a drain: accept() blocks (and
+    // glibc restarts it around signals), so initiate draining and wake
+    // the accept loop with a self-connect.
+    let watch_stop = Arc::clone(&stop);
+    let watch_shared = Arc::clone(&shared);
+    let watcher = std::thread::Builder::new()
+        .name("serve-stop-watch".into())
+        .spawn(move || loop {
+            if watch_stop.load(Ordering::SeqCst) {
+                watch_shared.draining.store(true, Ordering::SeqCst);
+                watch_shared.cv.notify_all();
+                let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        })
+        .context("spawning serve stop watcher")?;
+    run_serve_accept_loop(listener, stop, shared);
+    let stats = sched
+        .join()
+        .map_err(|_| anyhow!("serve scheduler panicked"))?;
+    let _ = watcher.join();
+    Ok(stats)
+}
+
+/// An in-process `diamond serve` daemon on an ephemeral loopback port —
+/// how the soak tests get a real multi-tenant TCP endpoint without
+/// launching the binary. [`ServeServer::stop`] drains cleanly and
+/// returns the final stats; drop stops too (discarding them).
+pub struct ServeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    sched: Option<JoinHandle<ServeStats>>,
+    last: ServeStats,
+}
+
+impl ServeServer {
+    /// Bind `bind_addr` (port 0 for ephemeral) with default tunables.
+    pub fn spawn(bind_addr: &str) -> Result<ServeServer> {
+        Self::spawn_with(bind_addr, ServeDaemonConfig::default())
+    }
+
+    /// [`ServeServer::spawn`] with explicit tunables — how tests force
+    /// tiny queues and long batch windows.
+    pub fn spawn_with(bind_addr: &str, cfg: ServeDaemonConfig) -> Result<ServeServer> {
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("binding serve daemon to {bind_addr}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let shared = Arc::new(Shared::new(cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sched_shared = Arc::clone(&shared);
+        let sched = std::thread::Builder::new()
+            .name("serve-scheduler".into())
+            .spawn(move || run_scheduler(sched_shared))
+            .context("spawning serve scheduler")?;
+        let accept_shared = Arc::clone(&shared);
+        let accept_stop = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name(format!("serve-{addr}"))
+            .spawn(move || run_serve_accept_loop(listener, accept_stop, accept_shared))
+            .context("spawning serve accept loop")?;
+        Ok(ServeServer {
+            addr,
+            stop,
+            shared,
+            accept: Some(accept),
+            sched: Some(sched),
+            last: ServeStats::default(),
+        })
+    }
+
+    /// The bound address as a `host:port` endpoint string.
+    pub fn endpoint(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live stats snapshot (tests assert mid-flight counters through
+    /// this without a round trip).
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats_snapshot()
+    }
+
+    /// Drain and stop (idempotent): reject new submissions, finish every
+    /// queued job, join the scheduler and accept loop, and return the
+    /// final stats.
+    pub fn stop(&mut self) -> ServeStats {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return self.last;
+        }
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        // Wake the blocked accept() so the loop observes the flag.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sched.take() {
+            if let Ok(stats) = h.join() {
+                self.last = stats;
+            }
+        }
+        self.last
+    }
+}
+
+impl Drop for ServeServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// --- signal plumbing ------------------------------------------------------
+
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Set by the handler; polled by [`super::stop_on_signals`]'s watcher
+    /// (an atomic store is async-signal-safe, nothing else here is).
+    pub static STOP: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_signal as usize);
+            signal(SIGINT, on_signal as usize);
+        }
+    }
+}
+
+/// Install SIGTERM/SIGINT handlers and return a flag that flips when
+/// either arrives — the `stop` input of [`serve_blocking`], giving the
+/// CLI its clean drain-on-SIGTERM exit. (glibc `signal` restarts the
+/// blocked `accept`, which is why the drain is initiated by a polling
+/// watcher plus a self-connect rather than an EINTR.) On non-unix
+/// targets the flag simply never flips.
+pub fn stop_on_signals() -> Arc<AtomicBool> {
+    let flag = Arc::new(AtomicBool::new(false));
+    #[cfg(unix)]
+    {
+        sig::install();
+        let f = Arc::clone(&flag);
+        let _ = std::thread::Builder::new()
+            .name("serve-signal-watch".into())
+            .spawn(move || loop {
+                if sig::STOP.load(Ordering::SeqCst) {
+                    f.store(true, Ordering::SeqCst);
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            });
+    }
+    flag
+}
+
+// --- the client -----------------------------------------------------------
+
+/// One tenant connection to a `diamond serve` daemon: submits jobs,
+/// absorbs `Busy` rejections (sleep the daemon's retry hint, resubmit),
+/// and recovers evicted operand planes (resend full `PutPlane`s once per
+/// attempt cycle). Operands are always referenced optimistically with
+/// 20-byte `HavePlane` frames first — after any tenant has shipped a
+/// plane, every other tenant's reference rides the daemon-wide store
+/// for free, which is exactly the cross-tenant dedup
+/// [`ServeStats::dedup_bytes_avoided`] counts.
+pub struct ServeClient {
+    stream: TcpStream,
+    max_frame_bytes: u64,
+    next_id: u64,
+    /// `Busy` rejections absorbed (each slept and resubmitted).
+    pub busy_retries: u64,
+    /// Plane-eviction recoveries (full resends after an
+    /// `unknown operand plane` error).
+    pub plane_resends: u64,
+}
+
+impl ServeClient {
+    /// Connect and handshake (the daemon speaks first).
+    pub fn connect(endpoint: &str) -> Result<ServeClient> {
+        let addr = endpoint
+            .to_socket_addrs()
+            .with_context(|| format!("resolving serve endpoint {endpoint}"))?
+            .next()
+            .ok_or_else(|| anyhow!("serve endpoint {endpoint} resolved to no address"))?;
+        let mut stream = TcpStream::connect_timeout(&addr, DEFAULT_CONNECT_TIMEOUT)
+            .with_context(|| format!("connecting to serve daemon {endpoint}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("arming handshake deadline")?;
+        let mut hello = [0u8; HELLO_LEN];
+        stream
+            .read_exact(&mut hello)
+            .context("reading serve handshake")?;
+        check_hello(&hello)?;
+        stream
+            .write_all(&encode_hello())
+            .and_then(|()| stream.flush())
+            .context("sending handshake")?;
+        stream
+            .set_read_timeout(Some(DEFAULT_WORKER_TIMEOUT))
+            .context("arming response deadline")?;
+        Ok(ServeClient {
+            stream,
+            max_frame_bytes: MAX_FRAME_BYTES,
+            next_id: 1,
+            busy_retries: 0,
+            plane_resends: 0,
+        })
+    }
+
+    /// Submit one job and wait for its result, riding out `Busy`
+    /// rejections and plane evictions.
+    fn roundtrip(
+        &mut self,
+        body: &SubmitBody,
+        planes: &[(u64, &PackedDiagMatrix)],
+    ) -> Result<ServeResult> {
+        let job_id = self.next_id;
+        self.next_id += 1;
+        let deadline = Instant::now() + DEFAULT_WORKER_TIMEOUT;
+        let mut ship_full = false;
+        loop {
+            if Instant::now() > deadline {
+                bail!("serve job {job_id} timed out awaiting admission");
+            }
+            for (fp, m) in planes {
+                let frame = if ship_full {
+                    encode_plane_put(*fp, m)
+                } else {
+                    encode_plane_have(*fp, m.dim())
+                };
+                write_frame(&mut self.stream, &[&frame]).context("sending operand plane")?;
+            }
+            write_frame(&mut self.stream, &[&encode_submit(job_id, body)])
+                .context("sending submit")?;
+            let frame = read_frame_limited(&mut self.stream, self.max_frame_bytes)?
+                .ok_or_else(|| anyhow!("serve daemon closed mid-job"))?;
+            match frame.get(..4) {
+                Some(m) if m == BUSY_MAGIC => {
+                    let (id, retry_after_ms) = decode_busy(&frame)?;
+                    if id != job_id {
+                        bail!("busy rejection for job {id}, expected {job_id}");
+                    }
+                    self.busy_retries += 1;
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.clamp(1, 1000)));
+                }
+                Some(m) if m == RESULT_MAGIC => {
+                    let (id, res) = decode_result(&frame)?;
+                    if id != job_id {
+                        bail!("result for job {id}, expected {job_id}");
+                    }
+                    match res {
+                        ServeResult::Err(msg)
+                            if msg.contains("unknown operand plane") && !ship_full =>
+                        {
+                            // The daemon evicted (or never saw) an
+                            // operand this client referenced — ship the
+                            // full planes and resubmit.
+                            self.plane_resends += 1;
+                            ship_full = true;
+                        }
+                        ServeResult::Err(msg) => bail!("serve daemon reported: {msg}"),
+                        ok => return Ok(ok),
+                    }
+                }
+                _ => bail!(
+                    "unexpected frame from serve daemon ({} bytes; magic {:02x?})",
+                    frame.len(),
+                    frame.get(..4).unwrap_or(&[])
+                ),
+            }
+        }
+    }
+
+    /// Submit `C = A · B`; returns the product and its multiply count.
+    pub fn spmspm(
+        &mut self,
+        a: &PackedDiagMatrix,
+        b: &PackedDiagMatrix,
+    ) -> Result<(PackedDiagMatrix, u64)> {
+        let (fp_a, fp_b) = (plane_fingerprint(a), plane_fingerprint(b));
+        let body = SubmitBody::Spmspm {
+            n: a.dim(),
+            fp_a,
+            fp_b,
+        };
+        match self.roundtrip(&body, &[(fp_a, a), (fp_b, b)])? {
+            ServeResult::Spmspm { c, mults } => Ok((c, mults)),
+            _ => bail!("serve daemon answered an SpMSpM submit with a different result kind"),
+        }
+    }
+
+    /// Submit an operator chain `exp(−iHt)` to `iters` Taylor terms;
+    /// returns `(term, sum, steps)` as the shard chain wire does.
+    pub fn chain(
+        &mut self,
+        h: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+    ) -> Result<(PackedDiagMatrix, PackedDiagMatrix, Vec<TaylorStep>)> {
+        let fp_h = plane_fingerprint(h);
+        let body = SubmitBody::Chain {
+            n: h.dim(),
+            t,
+            iters,
+            fp_h,
+        };
+        match self.roundtrip(&body, &[(fp_h, h)])? {
+            ServeResult::Chain { term, sum, steps } => Ok((term, sum, steps)),
+            _ => bail!("serve daemon answered a chain submit with a different result kind"),
+        }
+    }
+
+    /// Submit a matrix-free state chain `exp(−iHt)·ψ0`; returns the
+    /// evolved planes and the per-step trace.
+    pub fn state_chain(
+        &mut self,
+        h: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        psi_re: &[f64],
+        psi_im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<StateStep>)> {
+        debug_assert_eq!(psi_re.len(), h.dim());
+        debug_assert_eq!(psi_im.len(), h.dim());
+        let fp_h = plane_fingerprint(h);
+        let body = SubmitBody::State {
+            n: h.dim(),
+            t,
+            iters,
+            fp_h,
+            psi_re: psi_re.to_vec(),
+            psi_im: psi_im.to_vec(),
+        };
+        match self.roundtrip(&body, &[(fp_h, h)])? {
+            ServeResult::State {
+                psi_re,
+                psi_im,
+                steps,
+            } => Ok((psi_re, psi_im, steps)),
+            _ => bail!("serve daemon answered a state submit with a different result kind"),
+        }
+    }
+
+    /// Fetch the daemon's live stats and resident-plane count.
+    pub fn stats(&mut self) -> Result<(ServeStats, u64)> {
+        write_frame(&mut self.stream, &[&encode_stats_req()]).context("sending stats request")?;
+        let frame = read_frame_limited(&mut self.stream, self.max_frame_bytes)?
+            .ok_or_else(|| anyhow!("serve daemon closed mid-stats"))?;
+        decode_stats_resp(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::packed_diag_mul_counted;
+
+    fn tfim_packed(qubits: usize) -> PackedDiagMatrix {
+        crate::ham::tfim::tfim(qubits, 1.0, 0.7).matrix.freeze()
+    }
+
+    #[test]
+    fn daemon_answers_a_job_and_surfaces_stats_frames() {
+        // Satellite: ServeStats must be fetchable over the wire via the
+        // Stats request frame — not just printed by the in-process
+        // example.
+        let mut server = ServeServer::spawn("127.0.0.1:0").unwrap();
+        let mut client = ServeClient::connect(&server.endpoint()).unwrap();
+        let h = tfim_packed(3);
+        let (c, mults) = client.spmspm(&h, &h).unwrap();
+        let (want, want_stats) = packed_diag_mul_counted(&h, &h);
+        assert!(c.bit_eq(&want), "served product differs from local");
+        assert_eq!(mults, want_stats.mults as u64);
+        // The first job shipped its planes after one recovery round
+        // (optimistic Have, then full Put).
+        assert_eq!(client.plane_resends, 1);
+
+        let (stats, resident) = client.stats().unwrap();
+        assert_eq!(stats.jobs, 1);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.devices_instantiated, 1);
+        assert!(stats.total_cycles > 0);
+        assert!(stats.total_energy_j > 0.0);
+        assert_eq!(resident, 1, "A == B == H: one resident plane");
+
+        // A second client referencing the same plane rides the shared
+        // store: zero resends, and the dedup counter credits the bytes.
+        let mut second = ServeClient::connect(&server.endpoint()).unwrap();
+        let (c2, _) = second.spmspm(&h, &h).unwrap();
+        assert!(c2.bit_eq(&want));
+        assert_eq!(second.plane_resends, 0);
+        let (stats, _) = second.stats().unwrap();
+        assert_eq!(stats.jobs, 2);
+        assert!(
+            stats.dedup_bytes_avoided >= 2 * plane_wire_bytes(&h),
+            "cross-tenant Have hits must credit dedup_bytes_avoided"
+        );
+
+        let final_stats = server.stop();
+        assert_eq!(final_stats.jobs, 2);
+    }
+
+    #[test]
+    fn chain_and_state_results_are_bitwise_local() {
+        let mut server = ServeServer::spawn("127.0.0.1:0").unwrap();
+        let mut client = ServeClient::connect(&server.endpoint()).unwrap();
+        let h = tfim_packed(3);
+        let n = h.dim();
+        let (t, iters) = (0.37, 4);
+
+        let (term, sum, steps) = client.chain(&h, t, iters).unwrap();
+        let mut sc = ShardCoordinator::single();
+        let want = ChainDriver::from_packed(&h, t).run(iters, &mut sc).unwrap();
+        assert!(term.bit_eq(&want.term));
+        assert!(sum.bit_eq(&want.op.freeze()));
+        assert_eq!(steps.len(), want.steps.len());
+
+        let psi_re: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let psi_im: Vec<f64> = (0..n).map(|i| 0.25 * i as f64).collect();
+        let (got_re, got_im, ssteps) = client
+            .state_chain(&h, t, iters, &psi_re, &psi_im)
+            .unwrap();
+        let mut sc = ShardCoordinator::single();
+        let want = StateDriver::from_packed(&h, t, psi_re.clone(), psi_im.clone())
+            .run(iters, &mut sc)
+            .unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got_re), bits(&want.psi_re));
+        assert_eq!(bits(&got_im), bits(&want.psi_im));
+        assert_eq!(ssteps, want.steps);
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_plane_yields_structured_error_and_recovery() {
+        let mut server = ServeServer::spawn("127.0.0.1:0").unwrap();
+        let h = tfim_packed(2);
+        let fp = plane_fingerprint(&h);
+
+        // Raw frames: submit referencing a plane never shipped.
+        let addr = server.addr();
+        let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
+        let mut hello = [0u8; HELLO_LEN];
+        stream.read_exact(&mut hello).unwrap();
+        check_hello(&hello).unwrap();
+        stream.write_all(&encode_hello()).unwrap();
+        let body = SubmitBody::Spmspm {
+            n: h.dim(),
+            fp_a: fp,
+            fp_b: fp,
+        };
+        write_frame(&mut stream, &[&encode_submit(42, &body)]).unwrap();
+        let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
+            .unwrap()
+            .unwrap();
+        let (id, res) = decode_result(&frame).unwrap();
+        assert_eq!(id, 42);
+        match res {
+            ServeResult::Err(msg) => {
+                assert!(msg.contains("unknown operand plane"), "{msg}");
+            }
+            _ => panic!("expected a structured job error"),
+        }
+
+        // Recovery: ship the plane, resubmit the same id, succeed.
+        write_frame(&mut stream, &[&encode_plane_put(fp, &h)]).unwrap();
+        write_frame(&mut stream, &[&encode_submit(42, &body)]).unwrap();
+        let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
+            .unwrap()
+            .unwrap();
+        let (id, res) = decode_result(&frame).unwrap();
+        assert_eq!(id, 42);
+        let (want, _) = packed_diag_mul_counted(&h, &h);
+        match res {
+            ServeResult::Spmspm { c, .. } => assert!(c.bit_eq(&want)),
+            _ => panic!("expected a product"),
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn corrupt_plane_put_cannot_poison_the_shared_store() {
+        let mut server = ServeServer::spawn("127.0.0.1:0").unwrap();
+        let h = tfim_packed(2);
+        let honest_fp = plane_fingerprint(&h);
+        let poisoned_fp = honest_fp ^ 0xdead_beef;
+
+        let mut stream =
+            TcpStream::connect_timeout(&server.addr(), Duration::from_secs(5)).unwrap();
+        let mut hello = [0u8; HELLO_LEN];
+        stream.read_exact(&mut hello).unwrap();
+        check_hello(&hello).unwrap();
+        stream.write_all(&encode_hello()).unwrap();
+
+        // Put under a fingerprint the content does not hash to: the
+        // daemon must reject it, and the next submit reports why.
+        write_frame(&mut stream, &[&encode_plane_put(poisoned_fp, &h)]).unwrap();
+        let body = SubmitBody::Spmspm {
+            n: h.dim(),
+            fp_a: poisoned_fp,
+            fp_b: poisoned_fp,
+        };
+        write_frame(&mut stream, &[&encode_submit(1, &body)]).unwrap();
+        let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
+            .unwrap()
+            .unwrap();
+        let (_, res) = decode_result(&frame).unwrap();
+        match res {
+            ServeResult::Err(msg) => assert!(msg.contains("fingerprint mismatch"), "{msg}"),
+            _ => panic!("poisoned Put must not be served"),
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn draining_daemon_busy_rejects_and_finishes_queued_work() {
+        let mut server = ServeServer::spawn_with(
+            "127.0.0.1:0",
+            ServeDaemonConfig {
+                batch_window: Duration::from_millis(100),
+                ..ServeDaemonConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = ServeClient::connect(&server.endpoint()).unwrap();
+        let h = tfim_packed(2);
+        let (c, _) = client.spmspm(&h, &h).unwrap();
+        let (want, _) = packed_diag_mul_counted(&h, &h);
+        assert!(c.bit_eq(&want));
+        let stats = server.stop();
+        assert_eq!(stats.jobs, 1, "queued job must finish before the drain completes");
+
+        // Submitting into a stopped-but-connected daemon is refused
+        // with Busy, not dropped; the client surfaces the timeout only
+        // after bounded retries, so probe with raw frames instead.
+        let body = SubmitBody::Spmspm {
+            n: h.dim(),
+            fp_a: plane_fingerprint(&h),
+            fp_b: plane_fingerprint(&h),
+        };
+        write_frame(&mut client.stream, &[&encode_submit(99, &body)]).unwrap();
+        let frame = read_frame_limited(&mut client.stream, MAX_FRAME_BYTES)
+            .unwrap()
+            .unwrap();
+        let (id, retry_after_ms) = decode_busy(&frame).unwrap();
+        assert_eq!(id, 99);
+        assert!(retry_after_ms > 0);
+    }
+}

@@ -35,23 +35,65 @@ pub struct JobResult {
 /// so serving front-ends (the `sim_serve` example today, `diamond
 /// serve` when it lands) report the batch-sharing win instead of
 /// silently computing it.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ServeStats {
     pub jobs: u64,
     pub batches: u64,
     /// Jobs that shared a resident operand with a batch-mate.
     pub shared_operand_hits: u64,
+    /// Devices instantiated (one per executed batch — the denominator of
+    /// the batching win: `jobs / devices_instantiated` ≥ 1, higher is
+    /// better).
+    pub devices_instantiated: u64,
+    /// Deepest the submission queue ever got (the daemon path; always 0
+    /// for in-process [`BatchServer::serve`] calls, which have no queue).
+    pub queue_depth_peak: u64,
+    /// Submissions refused with a `Busy` rejection (daemon path only).
+    pub rejected_jobs: u64,
+    /// Operand-plane bytes that did *not* ship because a tenant's
+    /// `HavePlane` hit the daemon-wide content-addressed store (daemon
+    /// path only; counted in [`matrix_wire_bytes`] units).
+    ///
+    /// [`matrix_wire_bytes`]: crate::coordinator::shard::matrix_wire_bytes
+    pub dedup_bytes_avoided: u64,
     pub total_cycles: u64,
     pub total_energy_j: f64,
+}
+
+impl ServeStats {
+    /// Fold one scheduling round's counters into the running totals —
+    /// `queue_depth_peak` folds as a max, everything else adds. The
+    /// `diamond serve` scheduler accumulates per-batch deltas through
+    /// this so the stats mutex is never held across a batch execution.
+    pub fn absorb(&mut self, d: &ServeStats) {
+        self.jobs += d.jobs;
+        self.batches += d.batches;
+        self.shared_operand_hits += d.shared_operand_hits;
+        self.devices_instantiated += d.devices_instantiated;
+        self.queue_depth_peak = self.queue_depth_peak.max(d.queue_depth_peak);
+        self.rejected_jobs += d.rejected_jobs;
+        self.dedup_bytes_avoided += d.dedup_bytes_avoided;
+        self.total_cycles += d.total_cycles;
+        self.total_energy_j += d.total_energy_j;
+    }
 }
 
 impl std::fmt::Display for ServeStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "served {} job(s) in {} batch(es), {} shared-operand hit(s); \
-             {} cycles, {:.3e} J",
-            self.jobs, self.batches, self.shared_operand_hits, self.total_cycles, self.total_energy_j
+            "served {} job(s) in {} batch(es) on {} device(s), \
+             {} shared-operand hit(s), {} rejected, peak queue {}, \
+             {} plane byte(s) deduped; {} cycles, {:.3e} J",
+            self.jobs,
+            self.batches,
+            self.devices_instantiated,
+            self.shared_operand_hits,
+            self.rejected_jobs,
+            self.queue_depth_peak,
+            self.dedup_bytes_avoided,
+            self.total_cycles,
+            self.total_energy_j
         )
     }
 }
@@ -110,9 +152,23 @@ impl BatchServer {
 
     /// Serve a set of jobs: schedule into batches (same dimension, shared
     /// B first), execute, return per-job results in submission order.
+    ///
+    /// Scheduling invariants (gated by the property tests below, and the
+    /// contract the `diamond serve` daemon inherits):
+    ///
+    /// * a batch never mixes dimensions;
+    /// * batch-mates always share the stationary-operand fingerprint
+    ///   (`fingerprint(B)`) — the sorted order is cut at every key
+    ///   change *and* at `max_batch`, so a chunk is always a slice of
+    ///   one equal-key run;
+    /// * results come back in submission order regardless of the
+    ///   schedule;
+    /// * exactly one device is instantiated per batch
+    ///   ([`ServeStats::devices_instantiated`] `==` batches served).
     pub fn serve(&mut self, jobs: Vec<SpmspmRequest>) -> Result<Vec<JobResult>> {
         // Schedule: group by (dim, fingerprint of B) so batch-mates share
-        // the stationary operand, then chunk to max_batch.
+        // the stationary operand, then chunk each equal-key run to
+        // max_batch.
         let mut order: Vec<usize> = (0..jobs.len()).collect();
         let keys: Vec<(usize, u64)> = jobs
             .iter()
@@ -123,53 +179,38 @@ impl BatchServer {
         let mut results: Vec<Option<JobResult>> = (0..jobs.len()).map(|_| None).collect();
         let mut batch_idx = 0usize;
 
-        for chunk in order.chunks(self.max_batch) {
-            // One device per batch; operand ids shared via fingerprints so
-            // the cache model sees cross-job reuse.
-            let dim = jobs[chunk[0]].a.dim();
-            let max_nnzd = chunk
-                .iter()
-                .map(|&i| jobs[i].a.nnzd().max(jobs[i].b.nnzd()))
-                .max()
-                .unwrap_or(1);
-            let cfg = SimConfig::for_workload(dim, max_nnzd, max_nnzd);
-            let mut device = DiamondDevice::new(cfg);
-            let mut id_cache: HashMap<u64, MatrixId> = HashMap::new();
+        for run in order.chunk_by(|&x, &y| keys[x] == keys[y]) {
+            for chunk in run.chunks(self.max_batch) {
+                // One device per batch; operand ids shared via fingerprints
+                // so the cache model sees cross-job reuse.
+                let dim = jobs[chunk[0]].a.dim();
+                let max_nnzd = chunk
+                    .iter()
+                    .map(|&i| jobs[i].a.nnzd().max(jobs[i].b.nnzd()))
+                    .max()
+                    .unwrap_or(1);
+                let cfg = SimConfig::for_workload(dim, max_nnzd, max_nnzd);
+                let mut device = DiamondDevice::new(cfg);
+                self.stats.devices_instantiated += 1;
+                let mut id_cache: HashMap<u64, MatrixId> = HashMap::new();
 
-            for &i in chunk {
-                let job = &jobs[i];
-                if job.a.dim() != dim {
-                    // Mixed dimensions fall back to their own batch slot.
-                    let cfg = SimConfig::for_workload(
-                        job.a.dim(),
-                        job.a.nnzd().max(1),
-                        job.b.nnzd().max(1),
-                    );
-                    let mut solo = DiamondDevice::new(cfg);
-                    let (ia, ib, ic) = (
-                        solo.register_matrix(),
-                        solo.register_matrix(),
-                        solo.register_matrix(),
-                    );
-                    let (_t, sim) = solo.spmspm(&job.a, ia, &job.b, ib, ic);
+                for &i in chunk {
+                    let job = &jobs[i];
+                    let fa = fingerprint(&job.a);
+                    let fb = fingerprint(&job.b);
+                    let shared = id_cache.contains_key(&fa) || id_cache.contains_key(&fb);
+                    let ia = *id_cache.entry(fa).or_insert_with(|| device.register_matrix());
+                    let ib = *id_cache.entry(fb).or_insert_with(|| device.register_matrix());
+                    let ic = device.register_matrix();
+                    if shared {
+                        self.stats.shared_operand_hits += 1;
+                    }
+                    let (_timed, sim) = device.spmspm(&job.a, ia, &job.b, ib, ic);
                     let (c, _) = self.coordinator.values(&job.a, &job.b)?;
                     self.finish(&mut results, i, job.id, c, sim, batch_idx);
-                    continue;
                 }
-                let fa = fingerprint(&job.a);
-                let fb = fingerprint(&job.b);
-                let shared = id_cache.contains_key(&fa) || id_cache.contains_key(&fb);
-                let ia = *id_cache.entry(fa).or_insert_with(|| device.register_matrix());
-                let ib = *id_cache.entry(fb).or_insert_with(|| device.register_matrix());
-                let ic = device.register_matrix();
-                if shared {
-                    self.stats.shared_operand_hits += 1;
-                }
-                let (_timed, sim) = device.spmspm(&job.a, ia, &job.b, ib, ic);
-                let (c, _) = self.coordinator.values(&job.a, &job.b)?;
-                self.finish(&mut results, i, job.id, c, sim, batch_idx);
+                batch_idx += 1;
             }
-            batch_idx += 1;
         }
 
         self.stats.batches += batch_idx as u64;
@@ -272,6 +313,157 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].c.dim(), 8);
         assert_eq!(out[1].c.dim(), 32);
+    }
+
+    // --- scheduler property tests -------------------------------------
+    //
+    // Random job streams through `serve`, checking the scheduling
+    // invariants the doc comment promises (and the `diamond serve`
+    // daemon builds on): batches never mix dimensions, batch-mates
+    // always share the stationary-operand fingerprint, results come
+    // back in submission order, and the ServeStats totals reconcile
+    // with the per-job results.
+
+    use crate::testutil::{prop_check, random_band_matrix, XorShift64};
+    use std::collections::HashSet;
+
+    /// A random job stream over a small pool of stationary operands (so
+    /// sharing actually occurs), plus the per-job `(a, b)` clones the
+    /// checks replay against.
+    fn random_stream(
+        rng: &mut XorShift64,
+    ) -> (Vec<SpmspmRequest>, Vec<(DiagMatrix, DiagMatrix)>) {
+        let dims = [6usize, 9, 12];
+        let pool: Vec<DiagMatrix> = dims
+            .iter()
+            .flat_map(|&n| (0..2).map(move |_| n))
+            .map(|n| random_band_matrix(rng, n, 3))
+            .collect::<Vec<_>>();
+        let njobs = rng.gen_range(1, 14);
+        let mut jobs = Vec::with_capacity(njobs);
+        let mut pairs = Vec::with_capacity(njobs);
+        for i in 0..njobs {
+            let b = rng.choose(&pool).clone();
+            let a = random_band_matrix(rng, b.dim(), 3);
+            pairs.push((a.clone(), b.clone()));
+            jobs.push(job(i as u64, a, b));
+        }
+        (jobs, pairs)
+    }
+
+    #[test]
+    fn prop_batches_are_uniform_and_ordered() {
+        prop_check("serve-batch-uniform", 10, |rng| {
+            let (jobs, pairs) = random_stream(rng);
+            let keys: Vec<(usize, u64)> = jobs
+                .iter()
+                .map(|j| (j.a.dim(), fingerprint(&j.b)))
+                .collect();
+            let max_batch = rng.gen_range(1, 5);
+            let mut server = BatchServer::oracle(max_batch);
+            let out = server.serve(jobs).map_err(|e| e.to_string())?;
+
+            // Results in submission order, values correct per job.
+            for (i, r) in out.iter().enumerate() {
+                if r.id != i as u64 {
+                    return Err(format!("slot {i} holds job {}", r.id));
+                }
+                let want = diag_mul(&pairs[i].0, &pairs[i].1);
+                if r.c.max_abs_diff(&want) > 1e-12 {
+                    return Err(format!("job {i} value off"));
+                }
+            }
+
+            // A batch never mixes (dim, stationary-fp) keys and never
+            // exceeds max_batch.
+            let mut by_batch: HashMap<usize, Vec<usize>> = HashMap::new();
+            for (i, r) in out.iter().enumerate() {
+                by_batch.entry(r.batch).or_default().push(i);
+            }
+            for (batch, members) in &by_batch {
+                if members.len() > max_batch {
+                    return Err(format!(
+                        "batch {batch} holds {} jobs (max {max_batch})",
+                        members.len()
+                    ));
+                }
+                let key = keys[members[0]];
+                if members.iter().any(|&i| keys[i] != key) {
+                    return Err(format!("batch {batch} mixes keys"));
+                }
+            }
+
+            // Totals reconcile with the per-job results and the batch
+            // count (one device per batch).
+            if server.stats.jobs != out.len() as u64 {
+                return Err("stats.jobs != jobs served".into());
+            }
+            if server.stats.batches != by_batch.len() as u64 {
+                return Err(format!(
+                    "stats.batches {} != distinct batches {}",
+                    server.stats.batches,
+                    by_batch.len()
+                ));
+            }
+            if server.stats.devices_instantiated != server.stats.batches {
+                return Err("one device per batch violated".into());
+            }
+            let cycles: u64 = out.iter().map(|r| r.sim.total_cycles()).sum();
+            if server.stats.total_cycles != cycles {
+                return Err("stats.total_cycles != per-job sum".into());
+            }
+            let energy: f64 = out
+                .iter()
+                .map(|r| crate::energy::diamond_energy(&r.sim))
+                .sum();
+            if (server.stats.total_energy_j - energy).abs() > 1e-9 * energy.max(1.0) {
+                return Err("stats.total_energy_j != per-job sum".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_shared_hits_reconcile_with_schedule() {
+        // The schedule is deterministic (stable sort by key, cut at key
+        // changes and max_batch), so the expected shared-operand hit
+        // count can be replayed exactly.
+        prop_check("serve-shared-hits", 10, |rng| {
+            let (jobs, pairs) = random_stream(rng);
+            let keys: Vec<(usize, u64)> = jobs
+                .iter()
+                .map(|j| (j.a.dim(), fingerprint(&j.b)))
+                .collect();
+            let max_batch = rng.gen_range(1, 5);
+
+            let mut order: Vec<usize> = (0..jobs.len()).collect();
+            order.sort_by_key(|&i| keys[i]);
+            let mut want_hits = 0u64;
+            for run in order.chunk_by(|&x, &y| keys[x] == keys[y]) {
+                for chunk in run.chunks(max_batch) {
+                    let mut resident: HashSet<u64> = HashSet::new();
+                    for &i in chunk {
+                        let fa = fingerprint(&pairs[i].0);
+                        let fb = fingerprint(&pairs[i].1);
+                        if resident.contains(&fa) || resident.contains(&fb) {
+                            want_hits += 1;
+                        }
+                        resident.insert(fa);
+                        resident.insert(fb);
+                    }
+                }
+            }
+
+            let mut server = BatchServer::oracle(max_batch);
+            server.serve(jobs).map_err(|e| e.to_string())?;
+            if server.stats.shared_operand_hits != want_hits {
+                return Err(format!(
+                    "shared_operand_hits {} != replayed schedule {}",
+                    server.stats.shared_operand_hits, want_hits
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -845,6 +845,509 @@ pub fn decode_state_chain_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, Vec<
     }
 }
 
+// --- wire v5: the multi-tenant serve vocabulary ---------------------------
+//
+// The frames `diamond serve` adds on top of the shard vocabulary: a
+// tagged `Submit` envelope carrying a client-chosen job id (so a tenant
+// may pipeline jobs and match replies out of order), a `Result`
+// envelope echoing that id, a typed `Busy` rejection for admission
+// control, and a `Stats` request/response pair surfacing the daemon's
+// [`ServeStats`](crate::coordinator::server::ServeStats). Operand
+// planes still travel as the v3 `PutPlane`/`HavePlane` frames — v5 only
+// changes where they land (a daemon-wide store instead of a
+// per-connection one).
+
+/// Frame marker of a serve `Submit`: one tenant job (SpMSpM, operator
+/// chain, or state chain) tagged with a client-chosen job id.
+pub const SUBMIT_MAGIC: [u8; 4] = *b"DSB1";
+/// Frame marker of a serve `Result`: the outcome of one submitted job,
+/// echoing its id.
+pub const RESULT_MAGIC: [u8; 4] = *b"DRS1";
+/// Frame marker of a serve `Busy` rejection: the daemon refused the
+/// submission (queue full, in-flight cap, or draining) and names a
+/// retry delay.
+pub const BUSY_MAGIC: [u8; 4] = *b"DBY1";
+/// Frame marker of a serve `Stats` request (no body — 4 bytes).
+pub const STATS_MAGIC: [u8; 4] = *b"DST1";
+/// Frame marker of a serve `Stats` response.
+pub const STATS_RESP_MAGIC: [u8; 4] = *b"DTR1";
+
+/// `Submit` kind tag: one SpMSpM product `C = A · B`.
+pub const KIND_SPMSPM: u8 = 0;
+/// `Submit` kind tag: one operator Taylor chain `exp(−iHt)`.
+pub const KIND_CHAIN: u8 = 1;
+/// `Submit` kind tag: one matrix-free state chain `exp(−iHt)·ψ0`.
+pub const KIND_STATE: u8 = 2;
+
+/// One decoded serve `Submit`: the client-chosen job id plus the job
+/// body. Operands ride by fingerprint; the daemon resolves them against
+/// its shared [`PlaneStore`] at admission time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitRefs {
+    /// Client-chosen id echoed by the matching `Result`/`Busy`.
+    pub job_id: u64,
+    /// The job itself.
+    pub body: SubmitBody,
+}
+
+/// The three job shapes a serve `Submit` can carry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitBody {
+    /// `C = A · B`, both operands by fingerprint.
+    Spmspm {
+        /// Matrix dimension (must match both referenced planes).
+        n: usize,
+        /// Fingerprint of the moving operand plane `A`.
+        fp_a: u64,
+        /// Fingerprint of the stationary operand plane `B`.
+        fp_b: u64,
+    },
+    /// Operator Taylor chain `exp(−iHt)` from a resident `H`.
+    Chain {
+        /// Matrix dimension.
+        n: usize,
+        /// Evolution time.
+        t: f64,
+        /// Taylor truncation depth (1 ..= [`MAX_CHAIN_ITERS`]).
+        iters: usize,
+        /// Fingerprint of the resident `H` plane.
+        fp_h: u64,
+    },
+    /// Matrix-free state chain `exp(−iHt)·ψ0` from a resident `H`.
+    State {
+        /// State dimension.
+        n: usize,
+        /// Evolution time.
+        t: f64,
+        /// Taylor truncation depth (1 ..= [`MAX_CHAIN_ITERS`]).
+        iters: usize,
+        /// Fingerprint of the resident `H` plane.
+        fp_h: u64,
+        /// Real plane of ψ0.
+        psi_re: Vec<f64>,
+        /// Imaginary plane of ψ0.
+        psi_im: Vec<f64>,
+    },
+}
+
+impl SubmitBody {
+    /// The job's matrix/state dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            SubmitBody::Spmspm { n, .. }
+            | SubmitBody::Chain { n, .. }
+            | SubmitBody::State { n, .. } => *n,
+        }
+    }
+
+    /// Fingerprint of the stationary operand — the batching key: jobs
+    /// sharing it share one device-resident operand (`B` for SpMSpM,
+    /// `H` for both chain shapes).
+    pub fn stationary_fp(&self) -> u64 {
+        match self {
+            SubmitBody::Spmspm { fp_b, .. } => *fp_b,
+            SubmitBody::Chain { fp_h, .. } | SubmitBody::State { fp_h, .. } => *fp_h,
+        }
+    }
+
+    /// The wire kind tag.
+    pub fn kind(&self) -> u8 {
+        match self {
+            SubmitBody::Spmspm { .. } => KIND_SPMSPM,
+            SubmitBody::Chain { .. } => KIND_CHAIN,
+            SubmitBody::State { .. } => KIND_STATE,
+        }
+    }
+}
+
+/// Serialize one serve `Submit`: `SUBMIT_MAGIC | job_id | kind (u8) |
+/// body` with body `n | fp_a | fp_b` (SpMSpM, 37 bytes total), `n | t
+/// (f64-bits) | iters | fp_h` (chain, 45 bytes), or `n | t (f64-bits) |
+/// iters | fp_h | psi_re (f64-bits × n) | psi_im (f64-bits × n)`
+/// (state, 45 + 16n bytes).
+pub fn encode_submit(job_id: u64, body: &SubmitBody) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(45);
+    buf.extend_from_slice(&SUBMIT_MAGIC);
+    put_u64(&mut buf, job_id);
+    buf.push(body.kind());
+    match body {
+        SubmitBody::Spmspm { n, fp_a, fp_b } => {
+            put_usize(&mut buf, *n);
+            put_u64(&mut buf, *fp_a);
+            put_u64(&mut buf, *fp_b);
+        }
+        SubmitBody::Chain { n, t, iters, fp_h } => {
+            put_usize(&mut buf, *n);
+            put_u64(&mut buf, t.to_bits());
+            put_usize(&mut buf, *iters);
+            put_u64(&mut buf, *fp_h);
+        }
+        SubmitBody::State {
+            n,
+            t,
+            iters,
+            fp_h,
+            psi_re,
+            psi_im,
+        } => {
+            buf.reserve(16 * n);
+            put_usize(&mut buf, *n);
+            put_u64(&mut buf, t.to_bits());
+            put_usize(&mut buf, *iters);
+            put_u64(&mut buf, *fp_h);
+            for &v in psi_re {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            for &v in psi_im {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+    buf
+}
+
+/// Decode one serve `Submit` (the inverse of [`encode_submit`]).
+pub fn decode_submit(bytes: &[u8]) -> Result<SubmitRefs> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &SUBMIT_MAGIC[..] {
+        bail!("not a serve submit (bad magic)");
+    }
+    let job_id = c.u64()?;
+    let kind = c.take(1)?[0];
+    let body = match kind {
+        KIND_SPMSPM => {
+            let n = c.usize()?;
+            let fp_a = c.u64()?;
+            let fp_b = c.u64()?;
+            SubmitBody::Spmspm { n, fp_a, fp_b }
+        }
+        KIND_CHAIN | KIND_STATE => {
+            let n = c.usize()?;
+            let t = c.f64()?;
+            let iters = c.u64()?;
+            let fp_h = c.u64()?;
+            if iters == 0 || iters > MAX_CHAIN_ITERS {
+                bail!("serve submit claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})");
+            }
+            if kind == KIND_CHAIN {
+                SubmitBody::Chain {
+                    n,
+                    t,
+                    iters: iters as usize,
+                    fp_h,
+                }
+            } else {
+                let psi_re = c.f64s(n)?;
+                let psi_im = c.f64s(n)?;
+                SubmitBody::State {
+                    n,
+                    t,
+                    iters: iters as usize,
+                    fp_h,
+                    psi_re,
+                    psi_im,
+                }
+            }
+        }
+        k => bail!("unknown serve submit kind {k}"),
+    };
+    c.done()?;
+    Ok(SubmitRefs { job_id, body })
+}
+
+/// The outcome a serve `Result` carries for one job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeResult {
+    /// SpMSpM product: the output matrix plus its multiply count.
+    Spmspm {
+        /// The product `C = A · B`.
+        c: PackedDiagMatrix,
+        /// Complex multiplies the product spent.
+        mults: u64,
+    },
+    /// Operator chain: final power term, operator sum, per-step trace.
+    Chain {
+        /// The final power term `(−iHt)^K / K!`.
+        term: PackedDiagMatrix,
+        /// The operator sum `exp(−iHt)` (truncated).
+        sum: PackedDiagMatrix,
+        /// Per-iteration trace.
+        steps: Vec<TaylorStep>,
+    },
+    /// State chain: the evolved state plus the per-step trace.
+    State {
+        /// Real plane of `ψ(t)`.
+        psi_re: Vec<f64>,
+        /// Imaginary plane of `ψ(t)`.
+        psi_im: Vec<f64>,
+        /// Per-iteration trace.
+        steps: Vec<StateStep>,
+    },
+    /// The job failed server-side (the connection survives; the message
+    /// says why — an `unknown operand plane` text triggers the client's
+    /// resend-once recovery exactly as on the shard wire).
+    Err(String),
+}
+
+/// Serialize a successful serve `Result`: `RESULT_MAGIC | job_id | 0u8
+/// | kind (u8) | body` with body `mults | n | matrix(C)` (SpMSpM), `n |
+/// matrix(term) | matrix(sum) | nsteps | steps` (chain, steps as in
+/// [`encode_chain_ok`]), or `nsteps | (k | mults) × nsteps | n | psi_re
+/// | psi_im` (state).
+pub fn encode_result_ok(job_id: u64, res: &ServeResult) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    buf.extend_from_slice(&RESULT_MAGIC);
+    put_u64(&mut buf, job_id);
+    buf.push(STATUS_OK);
+    match res {
+        ServeResult::Spmspm { c, mults } => {
+            buf.reserve(plane_wire_bytes(c) as usize);
+            buf.push(KIND_SPMSPM);
+            put_u64(&mut buf, *mults);
+            put_usize(&mut buf, c.dim());
+            put_matrix(&mut buf, c);
+        }
+        ServeResult::Chain { term, sum, steps } => {
+            buf.reserve((plane_wire_bytes(term) + plane_wire_bytes(sum)) as usize);
+            buf.push(KIND_CHAIN);
+            put_usize(&mut buf, term.dim());
+            put_matrix(&mut buf, term);
+            put_matrix(&mut buf, sum);
+            put_usize(&mut buf, steps.len());
+            for s in steps {
+                put_usize(&mut buf, s.k);
+                put_usize(&mut buf, s.term_nnzd);
+                put_usize(&mut buf, s.sum_nnzd);
+                put_usize(&mut buf, s.term_elements);
+                put_u64(&mut buf, s.sum_storage_saving.to_bits());
+                put_usize(&mut buf, s.mults);
+            }
+        }
+        ServeResult::State {
+            psi_re,
+            psi_im,
+            steps,
+        } => {
+            buf.reserve(16 * psi_re.len());
+            buf.push(KIND_STATE);
+            put_usize(&mut buf, steps.len());
+            for s in steps {
+                put_usize(&mut buf, s.k);
+                put_usize(&mut buf, s.mults);
+            }
+            put_usize(&mut buf, psi_re.len());
+            for &v in psi_re {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            for &v in psi_im {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        ServeResult::Err(_) => unreachable!("encode_result_err carries failures"),
+    }
+    buf
+}
+
+/// Serialize a per-job failure: `RESULT_MAGIC | job_id | 1u8 | len |
+/// utf8` — the job failed but the connection (and the tenant's other
+/// in-flight jobs) survive.
+pub fn encode_result_err(job_id: u64, msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(21 + msg.len());
+    buf.extend_from_slice(&RESULT_MAGIC);
+    put_u64(&mut buf, job_id);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a serve `Result` into `(job_id, outcome)`. A job-level
+/// failure decodes as `Ok((id, ServeResult::Err(..)))` — the id is
+/// preserved so the client can retire or resend that job; `Err` is
+/// reserved for frames that are not well-formed results at all.
+pub fn decode_result(bytes: &[u8]) -> Result<(u64, ServeResult)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &RESULT_MAGIC[..] {
+        bail!(
+            "not a serve result (bad magic; got {} bytes)",
+            bytes.len()
+        );
+    }
+    let job_id = c.u64()?;
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let kind = c.take(1)?[0];
+            let res = match kind {
+                KIND_SPMSPM => {
+                    let mults = c.u64()?;
+                    let n = c.usize()?;
+                    let m = take_matrix(&mut c, n).context("decoding serve product")?;
+                    ServeResult::Spmspm { c: m, mults }
+                }
+                KIND_CHAIN => {
+                    let n = c.usize()?;
+                    let term = take_matrix(&mut c, n).context("decoding serve chain term")?;
+                    let sum = take_matrix(&mut c, n).context("decoding serve chain sum")?;
+                    let nsteps = c.u64()?;
+                    if nsteps > MAX_CHAIN_ITERS {
+                        bail!(
+                            "serve result claims {nsteps} steps (allowed ≤ {MAX_CHAIN_ITERS})"
+                        );
+                    }
+                    let mut steps = Vec::with_capacity(nsteps as usize);
+                    for _ in 0..nsteps {
+                        steps.push(TaylorStep {
+                            k: c.usize()?,
+                            term_nnzd: c.usize()?,
+                            sum_nnzd: c.usize()?,
+                            term_elements: c.usize()?,
+                            sum_storage_saving: c.f64()?,
+                            mults: c.usize()?,
+                        });
+                    }
+                    ServeResult::Chain { term, sum, steps }
+                }
+                KIND_STATE => {
+                    let nsteps = c.u64()?;
+                    if nsteps > MAX_CHAIN_ITERS {
+                        bail!(
+                            "serve result claims {nsteps} steps (allowed ≤ {MAX_CHAIN_ITERS})"
+                        );
+                    }
+                    let mut steps = Vec::with_capacity(nsteps as usize);
+                    for _ in 0..nsteps {
+                        steps.push(StateStep {
+                            k: c.usize()?,
+                            mults: c.usize()?,
+                        });
+                    }
+                    let n = c.usize()?;
+                    let psi_re = c.f64s(n)?;
+                    let psi_im = c.f64s(n)?;
+                    ServeResult::State {
+                        psi_re,
+                        psi_im,
+                        steps,
+                    }
+                }
+                k => bail!("unknown serve result kind {k}"),
+            };
+            c.done()?;
+            Ok((job_id, res))
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            c.done()?;
+            Ok((job_id, ServeResult::Err(msg)))
+        }
+        s => bail!("unknown serve result status {s}"),
+    }
+}
+
+/// Serialize a serve `Busy` rejection: `BUSY_MAGIC | job_id |
+/// retry_after_ms` — 20 bytes. The daemon refused the submission
+/// without queuing it; the client should back off `retry_after_ms`
+/// milliseconds and resubmit the same job id.
+pub fn encode_busy(job_id: u64, retry_after_ms: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(20);
+    buf.extend_from_slice(&BUSY_MAGIC);
+    put_u64(&mut buf, job_id);
+    put_u64(&mut buf, retry_after_ms);
+    buf
+}
+
+/// Decode a serve `Busy` into `(job_id, retry_after_ms)`.
+pub fn decode_busy(bytes: &[u8]) -> Result<(u64, u64)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &BUSY_MAGIC[..] {
+        bail!("not a serve busy frame (bad magic)");
+    }
+    let job_id = c.u64()?;
+    let retry_after_ms = c.u64()?;
+    c.done()?;
+    Ok((job_id, retry_after_ms))
+}
+
+/// Serialize a serve `Stats` request — the bare magic, no body.
+pub fn encode_stats_req() -> Vec<u8> {
+    STATS_MAGIC.to_vec()
+}
+
+/// Is this frame a serve `Stats` request?
+pub fn decode_stats_req(bytes: &[u8]) -> Result<()> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATS_MAGIC[..] {
+        bail!("not a serve stats request (bad magic)");
+    }
+    c.done()
+}
+
+/// Serialize a serve `Stats` response: `STATS_RESP_MAGIC | 0u8 | jobs |
+/// batches | shared_operand_hits | devices_instantiated |
+/// queue_depth_peak | rejected_jobs | dedup_bytes_avoided |
+/// planes_resident | total_cycles | total_energy_j (f64-bits)` — 85
+/// bytes. `planes_resident` rides alongside the
+/// [`ServeStats`](crate::coordinator::server::ServeStats) fields: it is
+/// a property of the daemon's shared [`PlaneStore`], not of the batch
+/// scheduler.
+pub fn encode_stats_resp(
+    stats: &crate::coordinator::server::ServeStats,
+    planes_resident: u64,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(85);
+    buf.extend_from_slice(&STATS_RESP_MAGIC);
+    buf.push(STATUS_OK);
+    put_u64(&mut buf, stats.jobs);
+    put_u64(&mut buf, stats.batches);
+    put_u64(&mut buf, stats.shared_operand_hits);
+    put_u64(&mut buf, stats.devices_instantiated);
+    put_u64(&mut buf, stats.queue_depth_peak);
+    put_u64(&mut buf, stats.rejected_jobs);
+    put_u64(&mut buf, stats.dedup_bytes_avoided);
+    put_u64(&mut buf, planes_resident);
+    put_u64(&mut buf, stats.total_cycles);
+    put_u64(&mut buf, stats.total_energy_j.to_bits());
+    buf
+}
+
+/// Decode a serve `Stats` response into `(stats, planes_resident)`.
+pub fn decode_stats_resp(bytes: &[u8]) -> Result<(crate::coordinator::server::ServeStats, u64)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATS_RESP_MAGIC[..] {
+        bail!("not a serve stats response (bad magic)");
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {}
+        s => bail!("unknown serve stats status {s}"),
+    }
+    let jobs = c.u64()?;
+    let batches = c.u64()?;
+    let shared_operand_hits = c.u64()?;
+    let devices_instantiated = c.u64()?;
+    let queue_depth_peak = c.u64()?;
+    let rejected_jobs = c.u64()?;
+    let dedup_bytes_avoided = c.u64()?;
+    let planes_resident = c.u64()?;
+    let total_cycles = c.u64()?;
+    let total_energy_j = c.f64()?;
+    c.done()?;
+    Ok((
+        crate::coordinator::server::ServeStats {
+            jobs,
+            batches,
+            shared_operand_hits,
+            devices_instantiated,
+            queue_depth_peak,
+            rejected_jobs,
+            dedup_bytes_avoided,
+            total_cycles,
+            total_energy_j,
+        },
+        planes_resident,
+    ))
+}
+
 // --- the plane cache ------------------------------------------------------
 
 /// The server side of content addressing: a bounded map from plane
@@ -2408,6 +2911,185 @@ mod tests {
     }
 
     #[test]
+    fn serve_wire_golden_bytes() {
+        // Pinned against the Python mirror (python/tests/test_serve.py)
+        // so the v5 encodings cannot drift apart silently.
+        let submit = encode_submit(
+            7,
+            &SubmitBody::Spmspm {
+                n: 4,
+                fp_a: 0x1111111111111111,
+                fp_b: 0x2222222222222222,
+            },
+        );
+        let mut want = Vec::new();
+        want.extend_from_slice(b"DSB1");
+        want.extend_from_slice(&7u64.to_le_bytes());
+        want.push(0); // KIND_SPMSPM
+        want.extend_from_slice(&4u64.to_le_bytes());
+        want.extend_from_slice(&0x1111111111111111u64.to_le_bytes());
+        want.extend_from_slice(&0x2222222222222222u64.to_le_bytes());
+        assert_eq!(submit, want, "v5 SpMSpM submit layout is pinned");
+        assert_eq!(submit.len(), 37);
+
+        let busy = encode_busy(9, 250);
+        let mut want = Vec::new();
+        want.extend_from_slice(b"DBY1");
+        want.extend_from_slice(&9u64.to_le_bytes());
+        want.extend_from_slice(&250u64.to_le_bytes());
+        assert_eq!(busy, want, "v5 busy layout is pinned");
+        assert_eq!(busy.len(), 20);
+
+        let err = encode_result_err(5, "nope");
+        let mut want = Vec::new();
+        want.extend_from_slice(b"DRS1");
+        want.extend_from_slice(&5u64.to_le_bytes());
+        want.push(1); // STATUS_ERR
+        want.extend_from_slice(&4u64.to_le_bytes());
+        want.extend_from_slice(b"nope");
+        assert_eq!(err, want, "v5 result-error layout is pinned");
+
+        assert_eq!(encode_stats_req(), b"DST1", "v5 stats request is the bare magic");
+    }
+
+    #[test]
+    fn serve_submit_wire_roundtrip() {
+        let cases = [
+            SubmitBody::Spmspm {
+                n: 24,
+                fp_a: 0xAA55,
+                fp_b: 0x55AA,
+            },
+            SubmitBody::Chain {
+                n: 24,
+                t: 0.25,
+                iters: 6,
+                fp_h: 0xFEED,
+            },
+            SubmitBody::State {
+                n: 3,
+                t: -0.5,
+                iters: 4,
+                fp_h: 0xBEEF,
+                psi_re: vec![1.0, -0.0, 0.5],
+                psi_im: vec![0.0, 2.5, -1.0],
+            },
+        ];
+        for (i, body) in cases.iter().enumerate() {
+            let bytes = encode_submit(i as u64 + 10, body);
+            let refs = decode_submit(&bytes).unwrap();
+            assert_eq!(refs.job_id, i as u64 + 10);
+            assert_eq!(&refs.body, body);
+            assert!(decode_submit(&bytes[..bytes.len() - 1]).is_err());
+            let mut extra = bytes.clone();
+            extra.push(0);
+            assert!(decode_submit(&extra).is_err());
+        }
+        // Iteration bounds hold for both chain shapes.
+        for iters in [0usize, MAX_CHAIN_ITERS as usize + 1] {
+            assert!(decode_submit(&encode_submit(
+                1,
+                &SubmitBody::Chain {
+                    n: 8,
+                    t: 0.1,
+                    iters,
+                    fp_h: 1,
+                }
+            ))
+            .is_err());
+        }
+        // Unknown kind tags are rejected by name.
+        let mut bad = encode_submit(1, &cases[0]);
+        bad[12] = 9;
+        let e = decode_submit(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown serve submit kind 9"));
+    }
+
+    #[test]
+    fn serve_result_and_stats_wire_roundtrip() {
+        let c = band(16, 2);
+        let ok = encode_result_ok(
+            3,
+            &ServeResult::Spmspm {
+                c: c.clone(),
+                mults: 99,
+            },
+        );
+        let (id, res) = decode_result(&ok).unwrap();
+        assert_eq!(id, 3);
+        match res {
+            ServeResult::Spmspm { c: got, mults } => {
+                assert!(got.bit_eq(&c));
+                assert_eq!(mults, 99);
+            }
+            _ => panic!("kind must round-trip"),
+        }
+
+        let steps = vec![TaylorStep {
+            k: 1,
+            term_nnzd: 3,
+            sum_nnzd: 5,
+            term_elements: 46,
+            sum_storage_saving: 0.75,
+            mults: 120,
+        }];
+        let chain = ServeResult::Chain {
+            term: band(16, 1),
+            sum: band(16, 2),
+            steps: steps.clone(),
+        };
+        let (id, res) = decode_result(&encode_result_ok(4, &chain)).unwrap();
+        assert_eq!(id, 4);
+        match (&res, &chain) {
+            (
+                ServeResult::Chain { term: gt, sum: gs, steps: gsteps },
+                ServeResult::Chain { term, sum, .. },
+            ) => {
+                assert!(gt.bit_eq(term));
+                assert!(gs.bit_eq(sum));
+                assert_eq!(gsteps.len(), steps.len());
+                assert_eq!(gsteps[0].sum_storage_saving.to_bits(), 0.75f64.to_bits());
+            }
+            _ => panic!("kind must round-trip"),
+        }
+
+        let state = ServeResult::State {
+            psi_re: vec![1.0, -0.0],
+            psi_im: vec![0.5, 2.0],
+            steps: vec![StateStep { k: 1, mults: 4 }],
+        };
+        let (id, res) = decode_result(&encode_result_ok(5, &state)).unwrap();
+        assert_eq!(id, 5);
+        assert_eq!(res, state);
+
+        // Job-level failure decodes Ok with the id preserved.
+        let (id, res) = decode_result(&encode_result_err(8, "no plane")).unwrap();
+        assert_eq!(id, 8);
+        assert_eq!(res, ServeResult::Err("no plane".into()));
+
+        // Busy and Stats frames.
+        assert_eq!(decode_busy(&encode_busy(11, 20)).unwrap(), (11, 20));
+        decode_stats_req(&encode_stats_req()).unwrap();
+        assert!(decode_stats_req(&encode_busy(1, 1)).is_err());
+        let stats = crate::coordinator::server::ServeStats {
+            jobs: 32,
+            batches: 4,
+            shared_operand_hits: 28,
+            devices_instantiated: 4,
+            queue_depth_peak: 8,
+            rejected_jobs: 3,
+            dedup_bytes_avoided: 4096,
+            total_cycles: 123456,
+            total_energy_j: 1.5e-6,
+        };
+        let resp = encode_stats_resp(&stats, 7);
+        assert_eq!(resp.len(), 85, "v5 stats responses are fixed-size");
+        let (got, resident) = decode_stats_resp(&resp).unwrap();
+        assert_eq!(got, stats);
+        assert_eq!(resident, 7);
+    }
+
+    #[test]
     fn decode_survives_mutated_and_truncated_frames() {
         // Property sweep (satellite hardening): every decoder must
         // return Err — never panic, never over-allocate — on any
@@ -2427,6 +3109,22 @@ mod tests {
             encode_state_chain_job(2, 0.3, 4, fp, &[1.0, 0.0], &[0.0, 1.0]),
             encode_state_chain_ok(&[1.0, 2.0], &[0.5, -0.5], &[StateStep { k: 1, mults: 4 }]),
             encode_state_chain_err("boom"),
+            encode_submit(1, &SubmitBody::Spmspm { n: 24, fp_a: fp, fp_b: fp }),
+            encode_submit(
+                2,
+                &SubmitBody::State {
+                    n: 2,
+                    t: 0.3,
+                    iters: 4,
+                    fp_h: fp,
+                    psi_re: vec![1.0, 0.0],
+                    psi_im: vec![0.0, 1.0],
+                },
+            ),
+            encode_result_ok(3, &ServeResult::Spmspm { c: a.clone(), mults: 9 }),
+            encode_result_err(4, "boom"),
+            encode_busy(5, 20),
+            encode_stats_resp(&crate::coordinator::server::ServeStats::default(), 0),
         ];
         let decode_any = |bytes: &[u8]| {
             let _ = decode_plane_put(bytes);
@@ -2438,6 +3136,11 @@ mod tests {
             let _ = decode_state_job(bytes);
             let _ = decode_state_chain_job(bytes);
             let _ = decode_state_chain_resp(bytes);
+            let _ = decode_submit(bytes);
+            let _ = decode_result(bytes);
+            let _ = decode_busy(bytes);
+            let _ = decode_stats_req(bytes);
+            let _ = decode_stats_resp(bytes);
         };
         crate::testutil::prop_check("mutated/truncated decode never panics", 30, |rng| {
             let f = &frames[rng.gen_range(0, frames.len())];
@@ -2451,6 +3154,10 @@ mod tests {
             assert!(decode_state_job(&f[..cut]).is_err());
             assert!(decode_state_chain_job(&f[..cut]).is_err());
             assert!(decode_state_chain_resp(&f[..cut]).is_err());
+            assert!(decode_submit(&f[..cut]).is_err());
+            assert!(decode_result(&f[..cut]).is_err());
+            assert!(decode_busy(&f[..cut]).is_err());
+            assert!(decode_stats_resp(&f[..cut]).is_err());
             decode_any(&f[..cut]);
             // Random byte flips: decoders may accept or reject, but
             // must never panic (length fields are all bounds-checked

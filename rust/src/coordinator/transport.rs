@@ -78,7 +78,14 @@ use std::time::{Duration, Instant};
 /// server-side `StateChainJob` execution (`DSE1`/`DER1`) — a v3 peer
 /// would reject the new magics job-by-job, but a version gate at
 /// connect time diagnoses the skew once instead of per frame.
-pub const WIRE_VERSION: u32 = 4;
+/// v5 added the multi-tenant serve frames (`diamond serve` in
+/// `coordinator/serve.rs`): job-id-tagged `Submit`/`Result` (`DSB1`/
+/// `DRS1`), typed `Busy` admission rejections (`DBY1`), and the
+/// `Stats` request/response pair (`DST1`/`DTR1`) — plus a semantic
+/// change the version gate must catch even though v3/v4 frames kept
+/// their shapes: a serve daemon's `PutPlane`/`HavePlane` land in a
+/// daemon-wide store shared by every tenant, not a per-connection one.
+pub const WIRE_VERSION: u32 = 5;
 
 /// Frame marker of the handshake (both directions, both transports).
 pub const HELLO_MAGIC: [u8; 4] = *b"DSHK";

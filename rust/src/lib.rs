@@ -40,11 +40,15 @@
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts (built by
 //!   `python/compile/aot.py`) and executes them from the Rust hot path.
 //! * [`coordinator`] — the L3 system layer: blocking planner, job queue,
-//!   worker pool, request batching, the simulation ledger, and the
+//!   worker pool, request batching, the simulation ledger, the
 //!   **shard layer** ([`coordinator::shard`]): one SpMSpM split into
 //!   multiply-balanced tile ranges executed on independent engines —
 //!   in-process or `diamond shard-worker` child processes over a
-//!   serde-free wire format — and stitched back bitwise.
+//!   serde-free wire format — and stitched back bitwise; and the
+//!   **serving layer** ([`coordinator::serve`]): the multi-tenant
+//!   `diamond serve` TCP daemon batching concurrent tenants' jobs by
+//!   stationary-operand fingerprint, with admission control and a
+//!   daemon-wide content-addressed plane store.
 //! * [`bench_harness`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //! * [`testutil`] — seeded PRNG + mini property-testing harness (offline

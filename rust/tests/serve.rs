@@ -1,0 +1,355 @@
+//! Multi-tenant `diamond serve` soak tests: N concurrent tenants × M
+//! mixed jobs (SpMSpM + operator chain + state chain) against one
+//! daemon, with the queue sized to force `Busy` rejections. Every
+//! result must be **bitwise** (`f64::to_bits`) identical to serial
+//! local execution, tenants sharing `H` must produce shared-operand
+//! batch hits, no job may be lost or duplicated, and a deterministic
+//! in-flight-cap test plus a real-binary SIGTERM test pin the
+//! admission/drain state machine.
+
+use diamond::coordinator::serve::{ServeClient, ServeDaemonConfig, ServeServer};
+use diamond::coordinator::shard::{
+    decode_busy, decode_result, encode_plane_put, encode_submit, plane_fingerprint, ServeResult,
+    ShardCoordinator, SubmitBody,
+};
+use diamond::coordinator::transport::{
+    check_hello, encode_hello, read_frame_limited, write_frame, HELLO_LEN, MAX_FRAME_BYTES,
+};
+use diamond::format::PackedDiagMatrix;
+use diamond::ham::tfim::tfim;
+use diamond::taylor::{ChainDriver, StateDriver, StateOutcome, TaylorStep};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+const QUBITS: usize = 4;
+const T: f64 = 0.37;
+const ITERS: usize = 4;
+
+fn shared_h() -> PackedDiagMatrix {
+    tfim(QUBITS, 1.0, 0.7).matrix.freeze()
+}
+
+/// Per-tenant moving operand: same structure as `H`, distinct values —
+/// so every fingerprint differs but every job shares the stationary
+/// `H` batching key.
+fn tenant_a(c: usize) -> PackedDiagMatrix {
+    tfim(QUBITS, 1.0, 0.3 + 0.05 * c as f64).matrix.freeze()
+}
+
+fn tenant_psi(c: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let re = (0..n).map(|i| 1.0 / (1.0 + (i + c) as f64)).collect();
+    let im = (0..n).map(|i| 0.125 * ((i * (c + 1)) % 7) as f64).collect();
+    (re, im)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_taylor_steps_eq(got: &[TaylorStep], want: &[TaylorStep], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: step count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.k, w.k, "{ctx}: step order");
+        assert_eq!(g.term_nnzd, w.term_nnzd, "{ctx}: term nnzd");
+        assert_eq!(g.sum_nnzd, w.sum_nnzd, "{ctx}: sum nnzd");
+        assert_eq!(g.mults, w.mults, "{ctx}: mults");
+        assert_eq!(
+            g.sum_storage_saving.to_bits(),
+            w.sum_storage_saving.to_bits(),
+            "{ctx}: storage saving bits"
+        );
+    }
+}
+
+/// The serial local executions every served result must match bitwise —
+/// computed on the exact engine paths the daemon's scheduler runs.
+struct LocalWant {
+    spmspm: PackedDiagMatrix,
+    chain_term: PackedDiagMatrix,
+    chain_sum: PackedDiagMatrix,
+    chain_steps: Vec<TaylorStep>,
+    state: StateOutcome,
+}
+
+fn local_want(c: usize, h: &PackedDiagMatrix) -> LocalWant {
+    let a = tenant_a(c);
+    let mut sc = ShardCoordinator::single();
+    let (spmspm, _) = sc.multiply(&a, h).expect("local multiply");
+    let mut sc = ShardCoordinator::single();
+    let chain = ChainDriver::from_packed(h, T)
+        .run(ITERS, &mut sc)
+        .expect("local chain");
+    let (re, im) = tenant_psi(c, h.dim());
+    let mut sc = ShardCoordinator::single();
+    let state = StateDriver::from_packed(h, T, re, im)
+        .run(ITERS, &mut sc)
+        .expect("local state chain");
+    LocalWant {
+        spmspm,
+        chain_term: chain.term,
+        chain_sum: chain.op.freeze(),
+        chain_steps: chain.steps,
+        state,
+    }
+}
+
+#[test]
+fn multi_tenant_soak_is_bitwise_identical_and_degrades_gracefully() {
+    const TENANTS: usize = 6;
+    const ROUNDS: usize = 3; // one job of each kind per tenant
+
+    // A queue far smaller than one round of simultaneous submissions,
+    // and a batch window long enough that a barrier-synchronized burst
+    // always races the drain: Busy rejections are forced, and drained
+    // rounds always hold batch-mates sharing H.
+    let mut server = ServeServer::spawn_with(
+        "127.0.0.1:0",
+        ServeDaemonConfig {
+            queue_cap: 2,
+            batch_window: Duration::from_millis(200),
+            retry_after_ms: 15,
+            ..ServeDaemonConfig::default()
+        },
+    )
+    .expect("loopback daemon");
+    let h = Arc::new(shared_h());
+    let wants: Vec<Arc<LocalWant>> = (0..TENANTS)
+        .map(|c| Arc::new(local_want(c, &h)))
+        .collect();
+
+    let barrier = Arc::new(Barrier::new(TENANTS));
+    let endpoint = server.endpoint();
+    let mut handles = Vec::with_capacity(TENANTS);
+    for c in 0..TENANTS {
+        let (endpoint, h, want, barrier) = (
+            endpoint.clone(),
+            Arc::clone(&h),
+            Arc::clone(&wants[c]),
+            Arc::clone(&barrier),
+        );
+        handles.push(std::thread::spawn(move || -> (u64, u64) {
+            let mut cl = ServeClient::connect(&endpoint).expect("tenant connect");
+            let a = tenant_a(c);
+            let (psi_re, psi_im) = tenant_psi(c, h.dim());
+            for j in 0..ROUNDS {
+                // Rotate the kind per tenant so every drained round
+                // mixes all three job shapes; every round is
+                // barrier-synchronized so submissions actually collide
+                // with the bounded queue.
+                barrier.wait();
+                match (c + j) % 3 {
+                    0 => {
+                        let (got, _) = cl.spmspm(&a, &h).expect("served spmspm");
+                        assert!(
+                            got.bit_eq(&want.spmspm),
+                            "tenant {c}: served product differs from serial local"
+                        );
+                    }
+                    1 => {
+                        let (term, sum, steps) = cl.chain(&h, T, ITERS).expect("served chain");
+                        assert!(term.bit_eq(&want.chain_term), "tenant {c}: chain term");
+                        assert!(sum.bit_eq(&want.chain_sum), "tenant {c}: chain sum");
+                        assert_taylor_steps_eq(&steps, &want.chain_steps, "chain");
+                    }
+                    _ => {
+                        let (re, im, steps) = cl
+                            .state_chain(&h, T, ITERS, &psi_re, &psi_im)
+                            .expect("served state chain");
+                        assert_eq!(bits(&re), bits(&want.state.psi_re), "tenant {c}: ψ re");
+                        assert_eq!(bits(&im), bits(&want.state.psi_im), "tenant {c}: ψ im");
+                        assert_eq!(steps, want.state.steps, "tenant {c}: state steps");
+                    }
+                }
+            }
+            (cl.busy_retries, cl.plane_resends)
+        }));
+    }
+    let mut busy_total = 0u64;
+    for hnd in handles {
+        let (busy, _resends) = hnd.join().expect("tenant thread");
+        busy_total += busy;
+    }
+
+    let stats = server.stop();
+    // No job lost or duplicated: every accepted submission executed
+    // exactly once, and every tenant got all its results (asserted
+    // bitwise above).
+    assert_eq!(
+        stats.jobs,
+        (TENANTS * ROUNDS) as u64,
+        "accepted-job count must equal delivered results"
+    );
+    // Tenants share H, so batch-mates share the resident operand.
+    assert!(
+        stats.shared_operand_hits > 0,
+        "tenants sharing H must produce shared-operand batch hits: {stats}"
+    );
+    // Batching actually batched: fewer devices than jobs.
+    assert!(
+        stats.devices_instantiated < stats.jobs,
+        "batching must instantiate fewer devices than jobs: {stats}"
+    );
+    // The bounded queue was actually exercised, and the clients rode it
+    // out: at least one Busy rejection was issued and recovered.
+    assert!(
+        stats.rejected_jobs > 0,
+        "queue_cap=2 under {TENANTS} simultaneous tenants must reject: {stats}"
+    );
+    assert!(
+        busy_total > 0,
+        "clients must have absorbed the Busy rejections the daemon issued"
+    );
+    assert_eq!(
+        stats.rejected_jobs, busy_total,
+        "every daemon-side rejection is a client-side retry"
+    );
+    assert!(stats.queue_depth_peak >= 1 && stats.queue_depth_peak <= 2);
+    // Cross-tenant plane dedup: H shipped once, referenced by all.
+    assert!(
+        stats.dedup_bytes_avoided > 0,
+        "later tenants must ride the daemon-wide plane store: {stats}"
+    );
+}
+
+#[test]
+fn inflight_cap_busy_rejection_is_deterministic_and_recoverable() {
+    // Raw pipelined frames against inflight_cap=1: the second submit is
+    // admission-refused before the first one's batch window elapses —
+    // a deterministic Busy, recovered by resubmitting after the first
+    // result arrives.
+    let mut server = ServeServer::spawn_with(
+        "127.0.0.1:0",
+        ServeDaemonConfig {
+            inflight_cap: 1,
+            batch_window: Duration::from_millis(300),
+            retry_after_ms: 25,
+            ..ServeDaemonConfig::default()
+        },
+    )
+    .expect("loopback daemon");
+    let h = shared_h();
+    let fp = plane_fingerprint(&h);
+
+    let mut stream =
+        TcpStream::connect(server.addr()).expect("tenant connect");
+    let mut hello = [0u8; HELLO_LEN];
+    stream.read_exact(&mut hello).unwrap();
+    check_hello(&hello).unwrap();
+    stream.write_all(&encode_hello()).unwrap();
+
+    write_frame(&mut stream, &[&encode_plane_put(fp, &h)]).unwrap();
+    let body = |id: u64| {
+        encode_submit(
+            id,
+            &SubmitBody::Spmspm {
+                n: h.dim(),
+                fp_a: fp,
+                fp_b: fp,
+            },
+        )
+    };
+    // Pipeline two submits without reading: the conn thread admits job
+    // 1 (in-flight 1) and must refuse job 2 on the spot.
+    write_frame(&mut stream, &[&body(1)]).unwrap();
+    write_frame(&mut stream, &[&body(2)]).unwrap();
+
+    let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
+        .unwrap()
+        .expect("busy frame");
+    let (id, retry_after_ms) = decode_busy(&frame).expect("second submit must be Busy-refused");
+    assert_eq!(id, 2);
+    assert_eq!(retry_after_ms, 25, "busy carries the configured retry hint");
+
+    let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
+        .unwrap()
+        .expect("first result");
+    let (id, res) = decode_result(&frame).unwrap();
+    assert_eq!(id, 1, "job 1 must still execute");
+    let mut sc = ShardCoordinator::single();
+    let (want, _) = sc.multiply(&h, &h).unwrap();
+    match res {
+        ServeResult::Spmspm { c, .. } => assert!(c.bit_eq(&want)),
+        other => panic!("expected a product, got {other:?}"),
+    }
+
+    // Recovery: the refused job resubmits and completes.
+    write_frame(&mut stream, &[&body(2)]).unwrap();
+    let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
+        .unwrap()
+        .expect("second result");
+    let (id, res) = decode_result(&frame).unwrap();
+    assert_eq!(id, 2);
+    match res {
+        ServeResult::Spmspm { c, .. } => assert!(c.bit_eq(&want)),
+        other => panic!("expected a product, got {other:?}"),
+    }
+
+    let stats = server.stop();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.rejected_jobs, 1);
+}
+
+#[test]
+fn real_serve_binary_drains_cleanly_on_sigterm() {
+    // The exact lifecycle the CI serve-smoke gate scripts: spawn the
+    // real `diamond serve` binary, run a tenant job, SIGTERM it, and
+    // require a zero exit with the drained-stats line on stdout.
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_diamond"))
+        .args(["serve", "--listen", "127.0.0.1:0", "--batch-window-ms", "20"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning diamond serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = std::sync::mpsc::channel();
+    let reader = std::thread::spawn(move || {
+        let mut lines = Vec::new();
+        let mut r = BufReader::new(stdout);
+        let mut first = String::new();
+        let _ = r.read_line(&mut first);
+        let _ = tx.send(first.clone());
+        lines.push(first);
+        let mut rest = String::new();
+        let _ = r.read_to_string(&mut rest);
+        lines.push(rest);
+        lines.join("")
+    });
+    let line = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("daemon never announced its address");
+    assert!(line.contains("wire v5"), "announcement: {line:?}");
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unparseable announcement: {line:?}"))
+        .to_string();
+
+    let h = shared_h();
+    let mut cl = ServeClient::connect(&addr).expect("tenant connect");
+    let (got, _) = cl.spmspm(&h, &h).expect("served job");
+    let mut sc = ShardCoordinator::single();
+    let (want, _) = sc.multiply(&h, &h).unwrap();
+    assert!(got.bit_eq(&want));
+    let (stats, resident) = cl.stats().expect("stats over the wire");
+    assert_eq!(stats.jobs, 1);
+    assert_eq!(resident, 1);
+
+    // Clean drain on SIGTERM: exit 0 and the drained line.
+    let term = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("sending SIGTERM");
+    assert!(term.success());
+    let status = child.wait().expect("daemon exit status");
+    assert!(status.success(), "SIGTERM must drain, not crash: {status:?}");
+    let all_output = reader.join().expect("stdout reader");
+    assert!(
+        all_output.contains("serve: drained;"),
+        "daemon must report the drain: {all_output:?}"
+    );
+}
