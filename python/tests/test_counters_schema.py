@@ -1,0 +1,131 @@
+"""CountersV1 schema validation from the Python side.
+
+Every ``--counters-json`` emitter (``kernel``, ``evolve`` in all its
+modes, ``serve``) now writes one versioned document shape — CountersV1,
+rendered by ``rust/src/counters.rs`` and pinned byte-exact by the golden
+files under ``rust/tests/golden/``. The build container has no Rust
+toolchain, so this module re-validates the *same* goldens from the other
+language: each file must parse as JSON, carry ``schema_version == 1``
+and a ``mode``, and its stat subtrees (``engine`` / ``shard`` /
+``serve``) must hold exactly the documented keys with unsigned-integer
+values (``total_energy_j`` is the one float). CI gates key into these
+subtrees, so a key drifting here means a gate breaks — the Rust golden
+test and this one must change together, with a schema_version bump.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "golden"
+
+GOLDENS = sorted(GOLDEN_DIR.glob("counters_v1_*.json"))
+
+ENDPOINT_KEYS = [
+    "endpoint",
+    "round_trips",
+    "bytes_sent",
+    "bytes_received",
+    "connects",
+    "payload_bytes",
+    "dedup_bytes_avoided",
+]
+
+SHARD_KEYS = [
+    "multiplies",
+    "sharded_multiplies",
+    "shards_used",
+    "stitch_bytes",
+    "shard_plans_built",
+    "shard_plan_reuses",
+    "payload_bytes",
+    "dedup_bytes_avoided",
+    "remote_chain_jobs",
+    "state_multiplies",
+    "remote_state_jobs",
+    "halo_bytes",
+    "endpoints",
+]
+
+ENGINE_KEYS = [
+    "calls",
+    "bucket_n",
+    "bucket_d",
+    "exec_nanos",
+    "plan_cache_hits",
+    "operand_copies",
+    "operand_copies_avoided",
+    "shards_used",
+    "shard_stitch_bytes",
+    "payload_bytes",
+    "dedup_bytes_avoided",
+    "endpoints",
+]
+
+SERVE_KEYS = [
+    "jobs",
+    "batches",
+    "devices_instantiated",
+    "shared_operand_hits",
+    "queue_depth_peak",
+    "rejected_jobs",
+    "dedup_bytes_avoided",
+    "total_cycles",
+    "total_energy_j",
+]
+
+SECTION_KEYS = {"shard": SHARD_KEYS, "engine": ENGINE_KEYS, "serve": SERVE_KEYS}
+
+MODES = {"kernel", "per-iter", "chain", "state", "state-chain", "serve"}
+
+
+def _check_counters(keys, section, name):
+    for key in keys:
+        assert key in section, f"{name}: missing {key}"
+        value = section[key]
+        if key == "endpoints":
+            assert isinstance(value, list), f"{name}.endpoints must be a list"
+            for ep in value:
+                assert list(ep.keys()) == ENDPOINT_KEYS, f"{name}: endpoint keys drifted"
+                assert isinstance(ep["endpoint"], str)
+                for k in ENDPOINT_KEYS[1:]:
+                    assert isinstance(ep[k], int) and ep[k] >= 0
+        elif key == "total_energy_j":
+            assert isinstance(value, float), f"{name}.total_energy_j must be a float"
+        else:
+            assert isinstance(value, int) and value >= 0, f"{name}.{key} must be a u64"
+    assert list(section.keys()) == keys, f"{name}: key order/extra keys drifted"
+
+
+def test_goldens_exist_for_all_three_emitters():
+    names = {p.stem for p in GOLDENS}
+    assert {"counters_v1_kernel", "counters_v1_evolve", "counters_v1_serve"} <= names
+
+
+@pytest.mark.parametrize("path", GOLDENS, ids=lambda p: p.stem)
+def test_golden_is_schema_valid_counters_v1(path):
+    doc = json.loads(path.read_text())
+    keys = list(doc.keys())
+    # schema_version leads, mode second: the contract CI gates rely on.
+    assert keys[0] == "schema_version" and doc["schema_version"] == 1
+    assert keys[1] == "mode" and doc["mode"] in MODES
+    sections = [k for k in keys if k in SECTION_KEYS]
+    assert sections, f"{path.stem}: no stat subtree"
+    for name in sections:
+        _check_counters(SECTION_KEYS[name], doc[name], name)
+    # Context fields (everything between mode and the subtrees) are
+    # scalars, never nested.
+    for k in keys[2:]:
+        if k not in SECTION_KEYS:
+            assert isinstance(doc[k], (str, int)), f"context field {k} must be scalar"
+
+
+def test_serve_golden_carries_both_subtrees():
+    # The fleet-backed daemon reports its own ServeStats *and* the shard
+    # fleet it drove: CI's serve-smoke fleet variant asserts nonzero
+    # endpoint round-trips under ["shard"]["endpoints"].
+    doc = json.loads((GOLDEN_DIR / "counters_v1_serve.json").read_text())
+    assert list(doc.keys()) == ["schema_version", "mode", "serve", "shard"]
+    assert doc["serve"]["jobs"] > 0
+    assert doc["shard"]["endpoints"][0]["round_trips"] > 0

@@ -15,8 +15,10 @@ byte-exact rules are mirrored here 1:1 and property-checked:
 * ``Busy`` (``DBY1``): a 20-byte admission refusal carrying
   ``retry_after_ms`` — the backpressure edge of the state machine;
 * ``Stats`` (``DST1`` request / ``DTR1`` response): the daemon's
-  ``ServeStats`` counters plus the resident-plane count as a fixed
-  85-byte frame, ``total_energy_j`` travelling as f64 bits;
+  ``ServeStats`` counters plus the resident-plane count and the asking
+  connection's per-tenant fairness ledger (admitted / rejected /
+  served) as a fixed 109-byte frame, ``total_energy_j`` travelling as
+  f64 bits;
 * golden byte vectors are pinned against the Rust unit test
   ``serve_wire_golden_bytes`` in shard.rs — the two must change
   together, and only with a WIRE_VERSION bump;
@@ -275,15 +277,21 @@ STATS_FIELDS = (
 )
 
 
-def encode_stats_resp(counters, total_energy_j):
+TENANT_FIELDS = ("admitted", "rejected", "served")
+
+
+def encode_stats_resp(counters, total_energy_j, tenant):
     """``counters``: the nine u64 fields in STATS_FIELDS order, then the
-    energy as f64 bits — a fixed 85-byte frame."""
+    energy as f64 bits, then the asking tenant's fairness ledger in
+    TENANT_FIELDS order — a fixed 109-byte frame."""
     assert len(counters) == len(STATS_FIELDS)
+    assert len(tenant) == len(TENANT_FIELDS)
     return (
         STATS_RESP_MAGIC
         + bytes([STATUS_OK])
         + struct.pack("<9Q", *counters)
         + struct.pack("<d", total_energy_j)
+        + struct.pack("<3Q", *tenant)
     )
 
 
@@ -295,9 +303,10 @@ def decode_stats_resp(buf):
         raise ValueError(f"unknown serve stats status {status}")
     counters = _unpack("<9Q", buf, 5)
     (energy,) = _unpack("<d", buf, 77)
-    if len(buf) != 85:
+    tenant = _unpack("<3Q", buf, 85)
+    if len(buf) != 109:
         raise ValueError("trailing bytes")
-    return counters, energy
+    return counters, energy, tenant
 
 
 # --- the tests ------------------------------------------------------------
@@ -408,12 +417,19 @@ def test_stats_frames_roundtrip_bit_exact():
     assert encode_stats_req() == b"DST1"  # bare magic, no body
     decode_stats_req(encode_stats_req())
     counters = (18, 9, 12, 6, 2, 4, 123456, 7, 98765)
-    buf = encode_stats_resp(counters, -0.0)
-    assert len(buf) == 85
+    tenant = (15, 3, 12)
+    buf = encode_stats_resp(counters, -0.0, tenant)
+    assert len(buf) == 109
     assert buf[:5] == b"DTR1\x00"
-    got, energy = decode_stats_resp(buf)
+    got, energy, got_tenant = decode_stats_resp(buf)
     assert got == counters
+    assert got_tenant == tenant
     assert math.copysign(1.0, energy) == -1.0  # energy travels as f64 bits
+    # Golden bytes pinned against `serve_wire_golden_bytes` in shard.rs.
+    golden = encode_stats_resp(tuple(range(1, 10)), 0.125, (10, 11, 12))
+    want = b"DTR1\x00" + struct.pack("<9Q", *range(1, 10))
+    want += struct.pack("<d", 0.125) + struct.pack("<3Q", 10, 11, 12)
+    assert golden == want and len(golden) == 109
     with pytest.raises(ValueError, match="status"):
         decode_stats_resp(buf[:4] + b"\x07" + buf[5:])
     with pytest.raises(ValueError):
@@ -442,7 +458,10 @@ def test_every_truncation_and_mutation_fails_loudly():
         (encode_result_state(6, [1.0, 0.5], [0.0, -0.5], [(1, 9)]), decode_result),
         (encode_result_err(7, "boom"), decode_result),
         (encode_busy(8, 250), decode_busy),
-        (encode_stats_resp((1, 2, 3, 4, 5, 6, 7, 8, 9), 0.125), decode_stats_resp),
+        (
+            encode_stats_resp((1, 2, 3, 4, 5, 6, 7, 8, 9), 0.125, (10, 11, 12)),
+            decode_stats_resp,
+        ),
     ]
     for buf, dec in frames:
         dec(buf)  # the unmutated encoding decodes
@@ -495,7 +514,7 @@ def test_composed_tenant_conversation_parses():
     replies = (
         encode_frame(encode_busy(2, 20))
         + encode_frame(encode_result_spmspm(1, 9, n, encode_matrix(n, offsets, re, im)))
-        + encode_frame(encode_stats_resp((2, 1, 1, 1, 1, 1, 0, 1, 42), 0.5))
+        + encode_frame(encode_stats_resp((2, 1, 1, 1, 1, 1, 0, 1, 42), 0.5, (2, 1, 2)))
     )
     f1, pos = read_frame(replies, 0)
     assert decode_busy(f1) == (2, 20)
@@ -504,6 +523,7 @@ def test_composed_tenant_conversation_parses():
     assert (job_id, mults, gn, goffs) == (1, 9, n, offsets)
     assert [f64_bits(x) for x in gre] == [f64_bits(x) for x in re]
     f3, pos = read_frame(replies, pos)
-    counters, energy = decode_stats_resp(f3)
+    counters, energy, tenant = decode_stats_resp(f3)
     assert counters[0] == 2 and counters[-1] == 42
+    assert tenant == (2, 1, 2)  # this tenant's own admission ledger
     assert read_frame(replies, pos)[0] is None

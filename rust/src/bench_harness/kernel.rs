@@ -284,22 +284,14 @@ pub fn run_case_on(
     );
     // Shard layer (in-process backend): stitched output must equal the
     // single engine bitwise at both fan-outs before any timing.
-    let mut shard2 = ShardCoordinator::new(
-        EngineConfig {
-            workers,
-            ..EngineConfig::default()
-        },
-        2,
-        ShardBackend::InProc,
-    );
-    let mut shard4 = ShardCoordinator::new(
-        EngineConfig {
-            workers,
-            ..EngineConfig::default()
-        },
-        4,
-        ShardBackend::InProc,
-    );
+    let mut shard2 = crate::coordinator::exec::ExecConfig::new()
+        .workers(workers)
+        .shards(2)
+        .build();
+    let mut shard4 = crate::coordinator::exec::ExecConfig::new()
+        .workers(workers)
+        .shards(4)
+        .build();
     let (s2, _) = shard2
         .multiply(&ap, &bp)
         .expect("in-process sharding cannot fail");
@@ -324,16 +316,13 @@ pub fn run_case_on(
             crate::coordinator::transport::ShardServer::spawn("127.0.0.1:0"),
         ) {
             (Ok(s1), Ok(s2)) => {
-                let mut sc = ShardCoordinator::new(
-                    EngineConfig {
-                        workers,
-                        ..EngineConfig::default()
-                    },
-                    2,
-                    ShardBackend::Tcp {
+                let mut sc = crate::coordinator::exec::ExecConfig::new()
+                    .workers(workers)
+                    .shards(2)
+                    .backend(ShardBackend::Tcp {
                         endpoints: vec![s1.endpoint(), s2.endpoint()],
-                    },
-                );
+                    })
+                    .build();
                 match sc.multiply(&ap, &bp) {
                     Ok((stcp, _)) => {
                         assert!(
@@ -527,6 +516,32 @@ pub fn tile_sweep(n: usize, qmax: u32, reps: usize) -> String {
 /// shard multiply-balance skew — plus per-endpoint round-trips and
 /// bytes on the tcp backend.
 pub fn shard_check(shards: usize, backend: &ShardBackend, smoke: bool) -> Result<String, String> {
+    let exec = crate::coordinator::exec::ExecConfig::new()
+        .shards(shards)
+        .backend(backend.clone());
+    shard_check_with_stats(&exec, smoke).map(|(report, _, _)| report)
+}
+
+/// [`shard_check`] against an [`ExecConfig`]-described stack, also
+/// returning the one coordinator's cumulative [`ShardStats`] and
+/// per-endpoint transport I/O — the numbers `diamond kernel
+/// --counters-json` emits as the `CountersV1` shard subtree.
+///
+/// [`ExecConfig`]: crate::coordinator::exec::ExecConfig
+/// [`ShardStats`]: crate::coordinator::shard::ShardStats
+pub fn shard_check_with_stats(
+    exec: &crate::coordinator::exec::ExecConfig,
+    smoke: bool,
+) -> Result<
+    (
+        String,
+        crate::coordinator::shard::ShardStats,
+        Vec<crate::coordinator::transport::EndpointIo>,
+    ),
+    String,
+> {
+    let shards = exec.shard_count();
+    let backend = exec.backend_ref().clone();
     let mut pairs: Vec<(&'static str, DiagMatrix, DiagMatrix)> = vec![
         (
             "exp-offset",
@@ -550,11 +565,15 @@ pub fn shard_check(shards: usize, backend: &ShardBackend, smoke: bool) -> Result
         "stitch KiB", "skew %", "bitwise",
     ]);
     let mut endpoint_lines: Vec<String> = Vec::new();
+    // One coordinator for the whole sweep: persistent TCP connections,
+    // the plan cache and the shard-plan memo all carry across workloads,
+    // exactly as a long-lived serving stack would hold them.
+    let mut sc = exec.build();
+    let mut stitch_before = 0u64;
     for (name, a, b) in &pairs {
         let ap = a.freeze();
         let bp = b.freeze();
         let (single, _) = crate::linalg::packed_diag_mul_counted(&ap, &bp);
-        let mut sc = ShardCoordinator::new(EngineConfig::default(), shards, backend.clone());
         let (c, _) = sc
             .multiply(&ap, &bp)
             .map_err(|e| format!("{name} n={}: sharded execution failed: {e:#}", ap.dim()))?;
@@ -566,7 +585,8 @@ pub fn shard_check(shards: usize, backend: &ShardBackend, smoke: bool) -> Result
                 backend.name()
             ));
         }
-        let stitch_kib = sc.stats().stitch_bytes / 1024;
+        let stitch_kib = (sc.stats().stitch_bytes - stitch_before) / 1024;
+        stitch_before = sc.stats().stitch_bytes;
         // Shard balance of the partition the coordinator actually
         // executed (shards == 1 runs unsharded → perfectly balanced).
         let skew_pct = sc
@@ -591,17 +611,16 @@ pub fn shard_check(shards: usize, backend: &ShardBackend, smoke: bool) -> Result
             skew_pct.to_string(),
             "identical".to_string(),
         ]);
-        for ep in sc.endpoint_io() {
-            endpoint_lines.push(format!(
-                "  {name} n={}: endpoint {} — {} round-trips, {} KiB sent, {} KiB received, {} connect(s)",
-                ap.dim(),
-                ep.endpoint,
-                ep.round_trips,
-                ep.bytes_sent / 1024,
-                ep.bytes_received / 1024,
-                ep.connects
-            ));
-        }
+    }
+    for ep in sc.endpoint_io() {
+        endpoint_lines.push(format!(
+            "  endpoint {} — {} round-trips, {} KiB sent, {} KiB received, {} connect(s)",
+            ep.endpoint,
+            ep.round_trips,
+            ep.bytes_sent / 1024,
+            ep.bytes_received / 1024,
+            ep.connects
+        ));
     }
     let mut report = format!(
         "Shard check — {shards} shard(s), {} backend: stitched output bitwise-identical \
@@ -613,7 +632,7 @@ pub fn shard_check(shards: usize, backend: &ShardBackend, smoke: bool) -> Result
         report.push_str("\nper-endpoint transport I/O:\n");
         report.push_str(&endpoint_lines.join("\n"));
     }
-    Ok(report)
+    Ok((report, *sc.stats(), sc.endpoint_io().to_vec()))
 }
 
 /// `ms` cell for a possibly-skipped timing (`NaN` → `-`).
@@ -898,11 +917,20 @@ mod tests {
         let backend = ShardBackend::Tcp {
             endpoints: vec![s1.endpoint(), s2.endpoint()],
         };
-        let report = shard_check(2, &backend, true).expect("tcp must verify over loopback");
+        let exec = crate::coordinator::exec::ExecConfig::new()
+            .shards(2)
+            .backend(backend);
+        let (report, stats, io) =
+            shard_check_with_stats(&exec, true).expect("tcp must verify over loopback");
         assert!(report.contains("bitwise-identical"));
         assert!(report.contains("tcp"));
         assert!(report.contains("per-endpoint transport I/O"));
         assert!(report.contains(&s1.endpoint()));
         assert!(report.contains(&s2.endpoint()));
+        // The stats the CountersV1 kernel emitter surfaces: real shard
+        // fan-out, and every endpoint saw traffic.
+        assert!(stats.sharded_multiplies > 0);
+        assert_eq!(io.len(), 2);
+        assert!(io.iter().all(|ep| ep.round_trips > 0));
     }
 }

@@ -25,9 +25,12 @@
 //! ```
 
 use crate::bench_harness::experiments;
+use crate::coordinator::exec::ExecConfig;
 use crate::coordinator::shard::ShardBackend;
 use crate::coordinator::Coordinator;
+use crate::counters::CountersV1;
 use crate::ham::Family;
+use crate::linalg::TileMode;
 use crate::sim::SimConfig;
 
 fn parse_family(s: &str) -> Option<Family> {
@@ -50,42 +53,122 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
-/// Parse the shared `--shards N [--shard-backend inproc|process|tcp]
-/// [--shard-endpoints host:port,...]` trio. The `tcp` backend requires
-/// an endpoint list; the other backends reject one.
-fn shard_flags(args: &[String]) -> Result<(Option<usize>, ShardBackend), String> {
-    let shards = flag_value(args, "--shards")
-        .map(|v| v.parse::<usize>().map_err(|e| format!("--shards: {e}")))
-        .transpose()?;
-    if shards == Some(0) {
-        return Err("--shards must be at least 1".into());
-    }
-    let endpoints = flag_value(args, "--shard-endpoints");
-    let backend = match flag_value(args, "--shard-backend") {
-        None => ShardBackend::InProc,
-        Some(s) if s.eq_ignore_ascii_case("tcp") => {
-            let eps: Vec<String> = endpoints
-                .as_deref()
-                .ok_or(
-                    "--shard-backend tcp requires --shard-endpoints host:port[,host:port...]",
-                )?
-                .split(',')
-                .map(str::trim)
-                .filter(|e| !e.is_empty())
-                .map(String::from)
-                .collect();
-            if eps.is_empty() {
-                return Err("--shard-endpoints holds no endpoints".into());
-            }
-            return Ok((shards, ShardBackend::Tcp { endpoints: eps }));
+/// The one error message every subcommand emits for `--chain` off the
+/// TCP transport.
+const CHAIN_NEEDS_TCP: &str =
+    "--chain requires --shard-backend tcp (the chain executes on the daemon)";
+
+/// The one error message `serve` and `kernel` emit for `--chain`, which
+/// selects a job shape only `evolve` submits.
+const CHAIN_IS_AN_EVOLVE_FLAG: &str =
+    "--chain applies to evolve (it picks the server-side chain job shape)";
+
+/// The execution-stack flags shared by `kernel`, `evolve`, `serve` and
+/// `serve-bench`: `--shards <n>`, `--shard-backend
+/// <inproc|process|tcp>`, `--shard-endpoints <host:port,...>`, `--tile
+/// <elems|auto>` and `--chain` — parsed once, validated once
+/// (`tcp` requires an endpoint list, the other backends reject one,
+/// `--chain` requires `tcp`), and lowered onto the one construction
+/// path, [`ExecConfig`], via [`ExecFlags::exec_config`].
+struct ExecFlags {
+    shards: Option<usize>,
+    backend: ShardBackend,
+    tile: Option<TileMode>,
+    chain: bool,
+    /// Whether any of the five flags was present — how a pure-client
+    /// subcommand (`serve-bench`) rejects them wholesale.
+    any_set: bool,
+}
+
+impl ExecFlags {
+    fn parse(args: &[String]) -> Result<ExecFlags, String> {
+        let shards = flag_value(args, "--shards")
+            .map(|v| v.parse::<usize>().map_err(|e| format!("--shards: {e}")))
+            .transpose()?;
+        if shards == Some(0) {
+            return Err("--shards must be at least 1".into());
         }
-        Some(s) => ShardBackend::parse(&s)
-            .ok_or_else(|| format!("--shard-backend must be inproc|process|tcp, got `{s}`"))?,
-    };
-    if endpoints.is_some() {
-        return Err("--shard-endpoints applies to --shard-backend tcp only".into());
+        let tile = match flag_value(args, "--tile") {
+            None => None,
+            Some(t) if t.eq_ignore_ascii_case("auto") => Some(TileMode::Auto),
+            Some(t) => Some(TileMode::Fixed(
+                t.parse::<usize>().map_err(|e| format!("--tile: {e}"))?.max(1),
+            )),
+        };
+        let chain = args.iter().any(|a| a == "--chain");
+        let endpoints = flag_value(args, "--shard-endpoints");
+        let backend_flag = flag_value(args, "--shard-backend");
+        let any_set = shards.is_some()
+            || tile.is_some()
+            || chain
+            || endpoints.is_some()
+            || backend_flag.is_some();
+        let backend = match backend_flag {
+            None => ShardBackend::InProc,
+            Some(s) if s.eq_ignore_ascii_case("tcp") => {
+                let eps: Vec<String> = endpoints
+                    .as_deref()
+                    .ok_or(
+                        "--shard-backend tcp requires --shard-endpoints host:port[,host:port...]",
+                    )?
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|e| !e.is_empty())
+                    .map(String::from)
+                    .collect();
+                if eps.is_empty() {
+                    return Err("--shard-endpoints holds no endpoints".into());
+                }
+                return Ok(ExecFlags {
+                    shards,
+                    backend: ShardBackend::Tcp { endpoints: eps },
+                    tile,
+                    chain,
+                    any_set,
+                });
+            }
+            Some(s) => ShardBackend::parse(&s)
+                .ok_or_else(|| format!("--shard-backend must be inproc|process|tcp, got `{s}`"))?,
+        };
+        if endpoints.is_some() {
+            return Err("--shard-endpoints applies to --shard-backend tcp only".into());
+        }
+        Ok(ExecFlags {
+            shards,
+            backend,
+            tile,
+            chain,
+            any_set,
+        })
     }
-    Ok((shards, backend))
+
+    /// `--chain` rides the TCP transport only — the shared validation
+    /// with the shared message.
+    fn validate_chain(&self) -> Result<(), String> {
+        if self.chain && !matches!(self.backend, ShardBackend::Tcp { .. }) {
+            return Err(CHAIN_NEEDS_TCP.into());
+        }
+        Ok(())
+    }
+
+    /// Lower the parsed flags onto the one construction path.
+    fn exec_config(&self) -> ExecConfig {
+        let mut cfg = ExecConfig::new()
+            .shards(self.shards.unwrap_or(1))
+            .backend(self.backend.clone());
+        if let Some(t) = self.tile {
+            cfg = cfg.tile(t);
+        }
+        cfg
+    }
+
+    fn backend_name(&self) -> &'static str {
+        match self.backend {
+            ShardBackend::InProc => "inproc",
+            ShardBackend::Process => "process",
+            ShardBackend::Tcp { .. } => "tcp",
+        }
+    }
 }
 
 /// `diamond shard-serve --listen <addr>` — the TCP shard daemon: accept
@@ -205,38 +288,47 @@ fn serve_daemon_flags(
     Ok(cfg)
 }
 
-/// Serialize the serving layer's counters (the fields the CI
-/// `serve-smoke` gate asserts on) as hand-built JSON.
-fn serve_counters_json(stats: &crate::coordinator::server::ServeStats) -> String {
-    format!(
-        "{{\n  \"jobs\": {},\n  \"batches\": {},\n  \"devices_instantiated\": {},\n  \
-         \"shared_operand_hits\": {},\n  \"queue_depth_peak\": {},\n  \
-         \"rejected_jobs\": {},\n  \"dedup_bytes_avoided\": {},\n  \
-         \"total_cycles\": {},\n  \"total_energy_j\": {:e}\n}}\n",
-        stats.jobs,
-        stats.batches,
-        stats.devices_instantiated,
-        stats.shared_operand_hits,
-        stats.queue_depth_peak,
-        stats.rejected_jobs,
-        stats.dedup_bytes_avoided,
-        stats.total_cycles,
-        stats.total_energy_j,
-    )
+/// Parse `--tenant-weight default:N` (or bare `N`): the per-visit DRR
+/// quantum every tenant subqueue is credited with.
+fn tenant_weight_flag(args: &[String]) -> Result<Option<usize>, String> {
+    let Some(v) = flag_value(args, "--tenant-weight") else {
+        return Ok(None);
+    };
+    let raw = v.strip_prefix("default:").unwrap_or(&v);
+    let w: usize = raw
+        .parse()
+        .map_err(|e| format!("--tenant-weight: `{v}`: {e}"))?;
+    if w == 0 {
+        return Err("--tenant-weight must be at least 1".into());
+    }
+    Ok(Some(w))
 }
 
 /// `diamond serve --listen <addr>` — the multi-tenant batch daemon
 /// (wire v5): many concurrent tenant connections, one shared operand
-/// store, one scheduler batching by stationary-operand fingerprint.
-/// Runs until SIGTERM/SIGINT, then drains cleanly (new submissions are
+/// store, one scheduler batching by stationary-operand fingerprint and
+/// draining tenant subqueues deficit-round-robin (`--tenant-weight`).
+/// With `--shards`/`--shard-backend`/`--shard-endpoints` the
+/// scheduler's engine is a fleet-backed [`ExecConfig`] stack, so every
+/// served batch fans out across the shard fleet. Runs until
+/// SIGTERM/SIGINT, then drains cleanly (new submissions are
 /// `Busy`-rejected, queued jobs finish) and prints the final
 /// [`ServeStats`](crate::coordinator::server::ServeStats) line the CI
-/// gate scrapes; `--counters-json` writes the same counters as JSON.
+/// gate scrapes; `--counters-json` writes the CountersV1 document with
+/// the `serve` and `shard` subtrees.
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     use crate::coordinator::{serve, transport};
     let listen = flag_value(args, "--listen")
         .ok_or("serve requires --listen <host:port> (port 0 for ephemeral)")?;
-    let cfg = serve_daemon_flags(args)?;
+    let flags = ExecFlags::parse(args)?;
+    if flags.chain {
+        return Err(CHAIN_IS_AN_EVOLVE_FLAG.into());
+    }
+    let mut cfg = serve_daemon_flags(args)?;
+    cfg.exec = flags.exec_config();
+    if let Some(w) = tenant_weight_flag(args)? {
+        cfg.tenant_weight = w;
+    }
     let counters_path = flag_value(args, "--counters-json");
     let listener = std::net::TcpListener::bind(&listen)
         .map_err(|e| format!("binding {listen}: {e}"))?;
@@ -244,20 +336,46 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         .local_addr()
         .map_err(|e| format!("resolving bound address: {e}"))?;
     println!(
-        "serve: listening on {addr} (wire v{}, max-batch {}, queue-cap {})",
+        "serve: listening on {addr} (wire v{}, max-batch {}, queue-cap {}, \
+         shards {} on {}, tenant-weight {})",
         transport::WIRE_VERSION,
         cfg.max_batch,
         cfg.queue_cap,
+        cfg.exec.shard_count(),
+        flags.backend_name(),
+        cfg.tenant_weight,
     );
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
     let stop = serve::stop_on_signals();
-    let stats =
+    let report =
         serve::serve_blocking(listener, cfg, stop).map_err(|e| format!("serve: {e:#}"))?;
-    println!("serve: drained; {stats}");
+    println!("serve: drained; {}", report.stats);
+    if report.shard.sharded_multiplies > 0 || report.shard.remote_chain_jobs > 0 {
+        println!(
+            "fleet: {} multiplies ({} sharded) across {} range(s), {} remote chain job(s)",
+            report.shard.multiplies,
+            report.shard.sharded_multiplies,
+            report.shard.shards_used,
+            report.shard.remote_chain_jobs,
+        );
+    }
+    for ep in &report.endpoints {
+        println!(
+            "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s)",
+            ep.endpoint,
+            ep.round_trips,
+            ep.bytes_sent / 1024,
+            ep.bytes_received / 1024,
+            ep.connects,
+        );
+    }
     if let Some(path) = counters_path {
-        std::fs::write(&path, serve_counters_json(&stats))
-            .map_err(|e| format!("writing {path}: {e}"))?;
+        let doc = CountersV1::new("serve")
+            .serve(&report.stats)
+            .shard(&report.shard, &report.endpoints)
+            .render();
+        std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
         println!("counters written to {path}");
     }
     Ok(())
@@ -275,6 +393,15 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
 /// the `device_reduction` ratio the gate asserts ≥ 2.
 fn cmd_serve_bench(args: &[String]) -> Result<(), String> {
     use crate::coordinator::serve::ServeClient;
+    // serve-bench is a pure client harness: execution placement is the
+    // daemon's decision, so all fleet flags are rejected wholesale.
+    if ExecFlags::parse(args)?.any_set {
+        return Err(
+            "serve-bench is a client; pass --shards/--shard-backend/--shard-endpoints/\
+             --tile/--chain to the `serve` daemon instead"
+                .into(),
+        );
+    }
     let endpoint =
         flag_value(args, "--endpoint").ok_or("serve-bench requires --endpoint <host:port>")?;
     let baseline = flag_value(args, "--baseline-endpoint");
@@ -310,7 +437,7 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), String> {
     let run = |ep: &str| -> Result<(u64, u64, u64, u64, u64), String> {
         let mut probe =
             ServeClient::connect(ep).map_err(|e| format!("serve-bench: {ep}: {e:#}"))?;
-        let (before, _) = probe
+        let (before, _, _) = probe
             .stats()
             .map_err(|e| format!("serve-bench: {ep}: stats: {e:#}"))?;
         let barrier = std::sync::Arc::new(std::sync::Barrier::new(clients));
@@ -350,7 +477,7 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), String> {
         for hnd in handles {
             busy += hnd.join().map_err(|_| "serve-bench: client panicked")??;
         }
-        let (after, _) = probe
+        let (after, _, _) = probe
             .stats()
             .map_err(|e| format!("serve-bench: {ep}: stats: {e:#}"))?;
         Ok((
@@ -419,51 +546,6 @@ fn cmd_serve_bench(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Serialize the shard-transport byte counters as a small JSON document
-/// (hand-built; the offline build has no serde) so CI gates can assert
-/// the dedup ratio without scraping stdout.
-fn counters_json(
-    mode: &str,
-    family: &str,
-    qubits: usize,
-    iters: usize,
-    payload_bytes: u64,
-    dedup_bytes_avoided: u64,
-    endpoints: &[crate::coordinator::transport::EndpointIo],
-) -> String {
-    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
-    let mut eps = String::new();
-    for (i, ep) in endpoints.iter().enumerate() {
-        if i > 0 {
-            eps.push_str(", ");
-        }
-        eps.push_str(&format!(
-            "{{\"endpoint\": \"{}\", \"round_trips\": {}, \"bytes_sent\": {}, \
-             \"bytes_received\": {}, \"connects\": {}, \"payload_bytes\": {}, \
-             \"dedup_bytes_avoided\": {}}}",
-            esc(&ep.endpoint),
-            ep.round_trips,
-            ep.bytes_sent,
-            ep.bytes_received,
-            ep.connects,
-            ep.payload_bytes,
-            ep.dedup_bytes_avoided,
-        ));
-    }
-    format!(
-        "{{\n  \"mode\": \"{}\",\n  \"family\": \"{}\",\n  \"qubits\": {},\n  \
-         \"iters\": {},\n  \"payload_bytes\": {},\n  \"dedup_bytes_avoided\": {},\n  \
-         \"endpoints\": [{}]\n}}\n",
-        esc(mode),
-        esc(family),
-        qubits,
-        iters,
-        payload_bytes,
-        dedup_bytes_avoided,
-        eps,
-    )
-}
-
 fn cmd_evolve(args: &[String]) -> Result<(), String> {
     let family_arg = flag_value(args, "--family");
     let family = family_arg
@@ -491,8 +573,8 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         .unwrap_or(1);
     let bench_json = flag_value(args, "--bench-json");
     let counters_path = flag_value(args, "--counters-json");
-    let (shards, shard_backend) = shard_flags(args)?;
-    if use_pjrt && shards.is_some() {
+    let flags = ExecFlags::parse(args)?;
+    if use_pjrt && flags.shards.is_some() {
         return Err("--shards applies to the oracle path only (drop --pjrt)".into());
     }
     if !state && (via_matrix || bench_json.is_some() || batch_flag.is_some()) {
@@ -508,12 +590,7 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         if use_pjrt {
             return Err("--chain runs on the shard transport (drop --pjrt)".into());
         }
-        if !matches!(shard_backend, ShardBackend::Tcp { .. }) {
-            return Err(
-                "--chain requires --shard-backend tcp (the chain executes on the daemon)"
-                    .into(),
-            );
-        }
+        flags.validate_chain()?;
     }
 
     let ham = crate::ham::build(family, qubits);
@@ -533,8 +610,7 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             batch,
             via_matrix,
             chain,
-            shards,
-            shard_backend,
+            exec: flags.exec_config(),
             counters_path,
             bench_json,
         });
@@ -549,11 +625,7 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         } else {
             iters
         };
-        let mut sc = crate::coordinator::shard::ShardCoordinator::new(
-            crate::linalg::engine::EngineConfig::default(),
-            shards.unwrap_or(1),
-            shard_backend,
-        );
+        let mut sc = flags.exec_config().build();
         let r = sc.run_chain(h, t, iters).map_err(|e| format!("evolve: {e:#}"))?;
         println!(
             "{}: dim {}, {} diagonals, t={t:.4}, {} Taylor iterations [server-side chain]",
@@ -590,15 +662,12 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
             );
         }
         if let Some(path) = counters_path {
-            let doc = counters_json(
-                "chain",
-                &family_name,
-                qubits,
-                iters,
-                r.shard.payload_bytes,
-                r.shard.dedup_bytes_avoided,
-                sc.endpoint_io(),
-            );
+            let doc = CountersV1::new("chain")
+                .str_field("family", &family_name)
+                .u64_field("qubits", qubits as u64)
+                .u64_field("iters", iters as u64)
+                .shard(&r.shard, sc.endpoint_io())
+                .render();
             std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
             println!("counters written to {path}");
         }
@@ -607,8 +676,8 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
 
     let coord = if use_pjrt {
         Coordinator::with_pjrt().map_err(|e| format!("loading PJRT runtime: {e:#}"))?
-    } else if let Some(s) = shards {
-        Coordinator::oracle_sharded(s, shard_backend)
+    } else if flags.shards.is_some() {
+        Coordinator::oracle_exec(&flags.exec_config())
     } else {
         Coordinator::oracle()
     };
@@ -696,15 +765,12 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
         );
     }
     if let Some(path) = counters_path {
-        let doc = counters_json(
-            "per-iter",
-            &family_name,
-            qubits,
-            rep.iters,
-            rep.engine.shard_payload_bytes,
-            rep.engine.shard_dedup_bytes_avoided,
-            &rep.engine.shard_endpoints,
-        );
+        let doc = CountersV1::new("per-iter")
+            .str_field("family", &family_name)
+            .u64_field("qubits", qubits as u64)
+            .u64_field("iters", rep.iters as u64)
+            .engine(&rep.engine)
+            .render();
         std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
         println!("counters written to {path}");
     }
@@ -722,50 +788,9 @@ struct StateRun<'a> {
     batch: usize,
     via_matrix: bool,
     chain: bool,
-    shards: Option<usize>,
-    shard_backend: ShardBackend,
+    exec: ExecConfig,
     counters_path: Option<String>,
     bench_json: Option<String>,
-}
-
-/// Serialize the state path's counters: the transport byte counters the
-/// chain gate already reads, plus the state-layer fields (`SpMVs`
-/// through the coordinator, complex multiplies, remote state jobs, ψ
-/// halo bytes) the `state-smoke` gate asserts on.
-#[allow(clippy::too_many_arguments)]
-fn state_counters_json(
-    mode: &str,
-    family: &str,
-    qubits: usize,
-    iters: usize,
-    batch: usize,
-    mults: u64,
-    stats: &crate::coordinator::shard::ShardStats,
-    endpoints: &[crate::coordinator::transport::EndpointIo],
-) -> String {
-    let base = counters_json(
-        mode,
-        family,
-        qubits,
-        iters,
-        stats.payload_bytes,
-        stats.dedup_bytes_avoided,
-        endpoints,
-    );
-    // Splice the state fields in before the closing brace: the document
-    // stays a superset of the chain-gate shape.
-    let tail = format!(
-        "  \"batch\": {},\n  \"state_multiplies\": {},\n  \"complex_mults\": {},\n  \
-         \"remote_state_jobs\": {},\n  \"halo_bytes\": {}\n}}\n",
-        batch, stats.state_multiplies, mults, stats.remote_state_jobs, stats.halo_bytes,
-    );
-    let trimmed = base
-        .trim_end()
-        .strip_suffix('}')
-        .expect("closing brace")
-        .trim_end()
-        .to_string();
-    format!("{trimmed},\n{tail}")
 }
 
 /// `evolve --state`: evolve `ψ(t) = exp(−iHt)·ψ₀` matrix-free — the
@@ -785,11 +810,7 @@ fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
     };
     let t = run.t;
     let psis = crate::bench_harness::state::initial_states(h.dim(), run.batch);
-    let mut sc = crate::coordinator::shard::ShardCoordinator::new(
-        crate::linalg::engine::EngineConfig::default(),
-        run.shards.unwrap_or(1),
-        run.shard_backend,
-    );
+    let mut sc = run.exec.build();
     let mut results = Vec::with_capacity(run.batch);
     for psi in &psis {
         let r = if run.chain {
@@ -877,16 +898,14 @@ fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
         }
     }
     if let Some(path) = &run.counters_path {
-        let doc = state_counters_json(
-            if run.chain { "state-chain" } else { "state" },
-            &run.family_name,
-            run.ham.n_qubits,
-            iters,
-            run.batch,
-            mults,
-            sc.stats(),
-            sc.endpoint_io(),
-        );
+        let doc = CountersV1::new(if run.chain { "state-chain" } else { "state" })
+            .str_field("family", &run.family_name)
+            .u64_field("qubits", run.ham.n_qubits as u64)
+            .u64_field("iters", iters as u64)
+            .u64_field("batch", run.batch as u64)
+            .u64_field("complex_mults", mults)
+            .shard(sc.stats(), sc.endpoint_io())
+            .render();
         std::fs::write(path, doc).map_err(|e| format!("writing {path}: {e}"))?;
         println!("counters written to {path}");
     }
@@ -904,32 +923,30 @@ fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
 /// be **bitwise identical** to the single engine, or the command exits
 /// non-zero.
 fn cmd_kernel(args: &[String]) -> Result<(), String> {
-    use crate::linalg::TileMode;
     let mut opts = crate::bench_harness::kernel::KernelOptions::default();
+    let flags = ExecFlags::parse(args)?;
+    if flags.chain {
+        return Err(CHAIN_IS_AN_EVOLVE_FLAG.into());
+    }
     let mut sweep = false;
-    if let Some(t) = flag_value(args, "--tile") {
-        if t.eq_ignore_ascii_case("auto") {
-            opts.tile = TileMode::Auto;
-            sweep = true;
-        } else {
-            opts.tile = TileMode::Fixed(
-                t.parse::<usize>()
-                    .map_err(|e| format!("--tile: {e}"))?
-                    .max(1),
-            );
-        }
+    if let Some(t) = flags.tile {
+        opts.tile = t;
+        sweep = matches!(t, TileMode::Auto);
     }
     if args.iter().any(|a| a == "--no-plan-cache") {
         opts.plan_cache = false;
     }
-    let (shards, shard_backend) = shard_flags(args)?;
     let smoke = args.iter().any(|a| a == "--smoke");
     // --check-only: skip the microbench suite and run only the shard
     // check, so the CI shard-smoke wall clocks measure the shard
     // transport rather than the whole kernel bench.
     let check_only = args.iter().any(|a| a == "--check-only");
-    if check_only && shards.is_none() {
+    if check_only && flags.shards.is_none() {
         return Err("--check-only requires --shards <n>".into());
+    }
+    let counters_path = flag_value(args, "--counters-json");
+    if counters_path.is_some() && flags.shards.is_none() {
+        return Err("kernel --counters-json requires --shards <n> (it reports the shard check)".into());
     }
     if !check_only {
         let cases = crate::bench_harness::kernel::run_suite_with(&opts, smoke);
@@ -939,12 +956,21 @@ fn cmd_kernel(args: &[String]) -> Result<(), String> {
             println!("{}", crate::bench_harness::kernel::tile_sweep(1 << 12, 11, 3));
         }
     }
-    if let Some(s) = shards {
+    if flags.shards.is_some() {
+        let exec = flags.exec_config();
+        let (report, stats, endpoints) =
+            crate::bench_harness::kernel::shard_check_with_stats(&exec, smoke)?;
         println!();
-        println!(
-            "{}",
-            crate::bench_harness::kernel::shard_check(s, &shard_backend, smoke)?
-        );
+        println!("{report}");
+        if let Some(path) = counters_path {
+            let doc = CountersV1::new("kernel")
+                .u64_field("shards", exec.shard_count() as u64)
+                .str_field("backend", flags.backend_name())
+                .shard(&stats, &endpoints)
+                .render();
+            std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+            println!("counters written to {path}");
+        }
     }
     Ok(())
 }
@@ -1022,7 +1048,7 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
                  commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
                  kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke] [--check-only]\n         \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
-                 [--shard-endpoints <host:port,...>]\n  \
+                 [--shard-endpoints <host:port,...>] [--counters-json <path>]\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]\n         \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
                  [--shard-endpoints <host:port,...>] [--chain] [--counters-json <path>]\n         \
@@ -1037,7 +1063,11 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
                  [--inflight-cap <n>] [--batch-window-ms <n>] [--retry-after-ms <n>]\n        \
                  [--queue-deadline-ms <n>] [--max-frame-bytes <n>]\n        \
                  [--plane-cache-cap <n>] [--counters-json <path>]\n        \
-                 (multi-tenant batch daemon, wire v5; SIGTERM drains cleanly)\n  \
+                 [--shards <n>] [--shard-backend <inproc|process|tcp>]\n        \
+                 [--shard-endpoints <host:port,...>] [--tenant-weight default:<n>]\n        \
+                 (multi-tenant batch daemon, wire v5; batches execute on the\n         \
+                 shard fleet; tenants drain deficit-round-robin; SIGTERM drains\n         \
+                 cleanly)\n  \
                  serve-bench --endpoint <host:port> [--baseline-endpoint <host:port>]\n              \
                  [--clients <n>] [--jobs <n>] [--family <name>] [--qubits <n>]\n              \
                  [--json <path>]  (concurrent-tenant harness; verifies bitwise)\n  \
@@ -1093,30 +1123,45 @@ mod tests {
     }
 
     #[test]
-    fn shard_flags_parse_and_reject() {
-        let ok = shard_flags(&["--shards".into(), "4".into()]).unwrap();
-        assert_eq!(ok, (Some(4), ShardBackend::InProc));
-        let ok = shard_flags(&[
+    fn exec_flags_parse_and_reject() {
+        let ok = ExecFlags::parse(&["--shards".into(), "4".into()]).unwrap();
+        assert_eq!(ok.shards, Some(4));
+        assert_eq!(ok.backend, ShardBackend::InProc);
+        assert!(ok.tile.is_none());
+        assert!(!ok.chain);
+        assert!(ok.any_set);
+        let ok = ExecFlags::parse(&[
             "--shards".into(),
             "2".into(),
             "--shard-backend".into(),
             "process".into(),
         ])
         .unwrap();
-        assert_eq!(ok, (Some(2), ShardBackend::Process));
-        assert_eq!(shard_flags(&[]).unwrap(), (None, ShardBackend::InProc));
-        assert!(shard_flags(&["--shards".into(), "0".into()]).is_err());
-        assert!(shard_flags(&["--shards".into(), "x".into()]).is_err());
+        assert_eq!(ok.shards, Some(2));
+        assert_eq!(ok.backend, ShardBackend::Process);
+        let ok = ExecFlags::parse(&[]).unwrap();
+        assert_eq!(ok.shards, None);
+        assert_eq!(ok.backend, ShardBackend::InProc);
+        assert!(!ok.any_set);
+        assert!(ExecFlags::parse(&["--shards".into(), "0".into()]).is_err());
+        assert!(ExecFlags::parse(&["--shards".into(), "x".into()]).is_err());
+        // --tile rides the same parser: auto or a positive element count.
+        let ok = ExecFlags::parse(&["--tile".into(), "auto".into()]).unwrap();
+        assert!(matches!(ok.tile, Some(TileMode::Auto)));
+        assert!(ok.any_set);
+        let ok = ExecFlags::parse(&["--tile".into(), "4096".into()]).unwrap();
+        assert!(matches!(ok.tile, Some(TileMode::Fixed(4096))));
+        assert!(ExecFlags::parse(&["--tile".into(), "bogus".into()]).is_err());
         // tcp without endpoints is an error; with endpoints it carries
         // the parsed, trimmed list.
-        assert!(shard_flags(&[
+        assert!(ExecFlags::parse(&[
             "--shards".into(),
             "2".into(),
             "--shard-backend".into(),
             "tcp".into()
         ])
         .is_err());
-        let ok = shard_flags(&[
+        let ok = ExecFlags::parse(&[
             "--shards".into(),
             "2".into(),
             "--shard-backend".into(),
@@ -1125,30 +1170,46 @@ mod tests {
             "127.0.0.1:7401, 127.0.0.1:7402".into(),
         ])
         .unwrap();
+        assert_eq!(ok.shards, Some(2));
         assert_eq!(
-            ok,
-            (
-                Some(2),
-                ShardBackend::Tcp {
-                    endpoints: vec!["127.0.0.1:7401".into(), "127.0.0.1:7402".into()]
-                }
-            )
+            ok.backend,
+            ShardBackend::Tcp {
+                endpoints: vec!["127.0.0.1:7401".into(), "127.0.0.1:7402".into()]
+            }
         );
+        assert_eq!(ok.backend_name(), "tcp");
+        // The lowering carries every knob onto ExecConfig.
+        let exec = ok.exec_config();
+        assert_eq!(exec.shard_count(), 2);
+        assert!(matches!(exec.backend_ref(), ShardBackend::Tcp { .. }));
         // Endpoints only make sense with the tcp backend.
-        assert!(shard_flags(&[
+        assert!(ExecFlags::parse(&[
             "--shard-backend".into(),
             "process".into(),
             "--shard-endpoints".into(),
             "127.0.0.1:7401".into(),
         ])
         .is_err());
-        assert!(shard_flags(&[
+        assert!(ExecFlags::parse(&[
             "--shard-backend".into(),
             "tcp".into(),
             "--shard-endpoints".into(),
             " , ".into(),
         ])
         .is_err());
+        // --chain validation: shared message, tcp only.
+        let flags = ExecFlags::parse(&["--chain".into()]).unwrap();
+        assert!(flags.chain && flags.any_set);
+        assert_eq!(flags.validate_chain().unwrap_err(), CHAIN_NEEDS_TCP);
+        let flags = ExecFlags::parse(&[
+            "--chain".into(),
+            "--shard-backend".into(),
+            "tcp".into(),
+            "--shard-endpoints".into(),
+            "127.0.0.1:7401".into(),
+        ])
+        .unwrap();
+        assert!(flags.validate_chain().is_ok());
         // Malformed shard flags fail the kernel command up front.
         assert_eq!(
             run_with_args(vec!["kernel".into(), "--shards".into(), "zero".into()]),
@@ -1159,6 +1220,67 @@ mod tests {
             run_with_args(vec!["kernel".into(), "--check-only".into()]),
             2
         );
+        // --chain is an evolve flag: kernel rejects it up front.
+        assert_eq!(
+            run_with_args(vec!["kernel".into(), "--chain".into()]),
+            2
+        );
+        // kernel --counters-json reports the shard check, so it needs
+        // --shards.
+        assert_eq!(
+            run_with_args(vec![
+                "kernel".into(),
+                "--counters-json".into(),
+                "/dev/null".into(),
+            ]),
+            2
+        );
+    }
+
+    #[test]
+    fn tenant_weight_flag_parse_and_reject() {
+        assert_eq!(tenant_weight_flag(&[]).unwrap(), None);
+        assert_eq!(
+            tenant_weight_flag(&["--tenant-weight".into(), "default:3".into()]).unwrap(),
+            Some(3)
+        );
+        assert_eq!(
+            tenant_weight_flag(&["--tenant-weight".into(), "2".into()]).unwrap(),
+            Some(2)
+        );
+        assert!(tenant_weight_flag(&["--tenant-weight".into(), "default:0".into()]).is_err());
+        assert!(tenant_weight_flag(&["--tenant-weight".into(), "x".into()]).is_err());
+    }
+
+    #[test]
+    fn serve_and_serve_bench_reject_misplaced_exec_flags() {
+        // serve is a daemon, not an evolve client: --chain is rejected
+        // even before --listen is validated usable.
+        assert_eq!(
+            run_with_args(vec![
+                "serve".into(),
+                "--listen".into(),
+                "127.0.0.1:0".into(),
+                "--chain".into(),
+            ]),
+            2
+        );
+        // serve-bench is a pure client: every fleet flag belongs on the
+        // daemon.
+        for flag in [
+            vec!["--shards".into(), "2".into()],
+            vec!["--shard-backend".into(), "process".into()],
+            vec!["--tile".into(), "auto".into()],
+            vec!["--chain".into()],
+        ] {
+            let mut args = vec![
+                "serve-bench".into(),
+                "--endpoint".into(),
+                "127.0.0.1:1".into(),
+            ];
+            args.extend(flag.iter().cloned());
+            assert_eq!(run_with_args(args), 2, "serve-bench must reject {flag:?}");
+        }
     }
 
     #[test]
@@ -1252,30 +1374,6 @@ mod tests {
             ]),
             2
         );
-    }
-
-    #[test]
-    fn serve_counters_json_shape() {
-        let stats = crate::coordinator::server::ServeStats {
-            jobs: 32,
-            batches: 4,
-            devices_instantiated: 4,
-            shared_operand_hits: 28,
-            queue_depth_peak: 8,
-            rejected_jobs: 3,
-            dedup_bytes_avoided: 4096,
-            total_cycles: 1000,
-            total_energy_j: 1.5e-6,
-        };
-        let doc = serve_counters_json(&stats);
-        assert!(doc.contains("\"jobs\": 32"));
-        assert!(doc.contains("\"devices_instantiated\": 4"));
-        assert!(doc.contains("\"shared_operand_hits\": 28"));
-        assert!(doc.contains("\"queue_depth_peak\": 8"));
-        assert!(doc.contains("\"rejected_jobs\": 3"));
-        assert!(doc.contains("\"dedup_bytes_avoided\": 4096"));
-        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
-        assert!(!doc.contains(",]") && !doc.contains(",}"));
     }
 
     #[test]
@@ -1401,53 +1499,39 @@ mod tests {
     }
 
     #[test]
-    fn state_counters_json_shape() {
-        let stats = crate::coordinator::shard::ShardStats {
-            payload_bytes: 80,
-            dedup_bytes_avoided: 800,
-            state_multiplies: 12,
-            remote_state_jobs: 6,
-            halo_bytes: 4096,
-            ..Default::default()
-        };
-        let doc = state_counters_json("state", "tfim", 10, 6, 2, 123456, &stats, &[]);
-        assert!(doc.contains("\"mode\": \"state\""));
-        assert!(doc.contains("\"batch\": 2"));
-        assert!(doc.contains("\"state_multiplies\": 12"));
-        assert!(doc.contains("\"complex_mults\": 123456"));
-        assert!(doc.contains("\"remote_state_jobs\": 6"));
-        assert!(doc.contains("\"halo_bytes\": 4096"));
-        assert!(doc.contains("\"payload_bytes\": 80"));
-        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
-        assert!(!doc.contains(",]") && !doc.contains(",}"));
-    }
-
-    #[test]
-    fn counters_json_shape() {
-        let eps = vec![crate::coordinator::transport::EndpointIo {
-            endpoint: "127.0.0.1:7403".into(),
-            round_trips: 2,
-            bytes_sent: 100,
-            bytes_received: 200,
-            connects: 1,
-            payload_bytes: 80,
-            dedup_bytes_avoided: 800,
-        }];
-        let doc = counters_json("chain", "tfim", 8, 6, 80, 800, &eps);
-        assert!(doc.contains("\"mode\": \"chain\""));
-        assert!(doc.contains("\"family\": \"tfim\""));
-        assert!(doc.contains("\"qubits\": 8"));
-        assert!(doc.contains("\"iters\": 6"));
-        assert!(doc.contains("\"payload_bytes\": 80"));
-        assert!(doc.contains("\"dedup_bytes_avoided\": 800"));
-        assert!(doc.contains("\"endpoint\": \"127.0.0.1:7403\""));
-        // Hand-built JSON must stay parseable: balanced braces/brackets,
-        // no trailing commas before a closer.
+    fn evolve_state_writes_counters_v1() {
+        // The full command path with --counters-json: the emitted
+        // document carries the CountersV1 header and the shard subtree.
+        let dir = std::env::temp_dir().join(format!("diamond-cli-counters-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("counters_state.json");
+        let path_s = path.to_str().expect("utf8 path").to_string();
         assert_eq!(
-            doc.matches('{').count(),
-            doc.matches('}').count(),
-            "balanced braces"
+            run_with_args(vec![
+                "evolve".into(),
+                "--family".into(),
+                "tfim".into(),
+                "--qubits".into(),
+                "4".into(),
+                "--state".into(),
+                "--batch".into(),
+                "2".into(),
+                "--iters".into(),
+                "3".into(),
+                "--shards".into(),
+                "2".into(),
+                "--counters-json".into(),
+                path_s,
+            ]),
+            0
         );
-        assert!(!doc.contains(",]") && !doc.contains(",}"));
+        let doc = std::fs::read_to_string(&path).expect("counters written");
+        assert!(doc.starts_with("{\n  \"schema_version\": 1,\n  \"mode\": \"state\""));
+        assert!(doc.contains("\"family\": \"tfim\""));
+        assert!(doc.contains("\"batch\": 2"));
+        assert!(doc.contains("\"complex_mults\": "));
+        assert!(doc.contains("\"shard\": {"));
+        assert!(doc.contains("\"state_multiplies\": "));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,205 @@
+//! **`ExecConfig`** — the one public construction path for an execution
+//! stack.
+//!
+//! Before this module, an execution stack (a [`ShardCoordinator`] with
+//! its engine configuration, shard fan-out and backend) could be
+//! assembled five different ways: `ShardCoordinator::new` with bare
+//! [`ShardBackend`] enum plumbing, `ShardCoordinator::with_executor`,
+//! `ShardCoordinator::with_tcp_executor`, `Coordinator::oracle_sharded`,
+//! and each CLI subcommand re-parsing its own flag copies. Every one of
+//! those is now a deprecated shim over this builder:
+//!
+//! ```
+//! use diamond::coordinator::exec::ExecConfig;
+//! use diamond::coordinator::shard::ShardBackend;
+//! use diamond::linalg::engine::TileMode;
+//!
+//! // The degenerate single-engine stack (what `ShardCoordinator::single`
+//! // builds under the hood):
+//! let mut sc = ExecConfig::new().build();
+//!
+//! // A 4-way in-process fleet with adaptive tiling:
+//! let mut fleet = ExecConfig::new()
+//!     .shards(4)
+//!     .backend(ShardBackend::InProc)
+//!     .tile(TileMode::Auto)
+//!     .build();
+//! assert_eq!(fleet.shards(), 4);
+//! # let _ = (&mut sc, &mut fleet);
+//! ```
+//!
+//! The TCP fleet is one more builder call —
+//! `.backend(ShardBackend::Tcp { endpoints })` — which is exactly what
+//! `diamond serve --shards N --shard-backend tcp --shard-endpoints …`
+//! threads through to its scheduler (see [`coordinator::serve`]).
+//!
+//! The config is plain data (`Clone`): build as many coordinators from
+//! one config as you like. Executor-injection variants
+//! ([`ExecConfig::build_with_process_executor`],
+//! [`ExecConfig::build_with_tcp_executor`]) take the non-clonable
+//! executor at build time — how tests shorten worker deadlines or point
+//! the process backend at a prebuilt binary.
+//!
+//! [`coordinator::serve`]: crate::coordinator::serve
+
+use crate::coordinator::shard::{ProcessShardExecutor, ShardBackend, ShardCoordinator};
+use crate::coordinator::transport::TcpShardExecutor;
+use crate::linalg::engine::{EngineConfig, TileMode};
+
+/// Declarative description of an execution stack: engine configuration
+/// (tile mode, workers, plan cache), shard fan-out, and the backend the
+/// shard ranges execute on. See the [module docs](self) for the builder
+/// idiom and the migration table in `docs/ARCHITECTURE.md`.
+#[derive(Clone, Debug)]
+pub struct ExecConfig {
+    engine: EngineConfig,
+    shards: usize,
+    backend: ShardBackend,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            engine: EngineConfig::default(),
+            shards: 1,
+            backend: ShardBackend::InProc,
+        }
+    }
+}
+
+impl ExecConfig {
+    /// The default stack: one engine, default configuration, in-process.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shard fan-out (clamped to ≥ 1; 1 = the unsharded degenerate).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// Where the shard ranges execute (default [`ShardBackend::InProc`]).
+    pub fn backend(mut self, backend: ShardBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Tile derivation mode of the underlying engine (default
+    /// [`TileMode::Auto`] via [`EngineConfig::default`]).
+    pub fn tile(mut self, tile: TileMode) -> Self {
+        self.engine.tile = tile;
+        self
+    }
+
+    /// Worker fan-out for unit execution inside each engine (clamped to
+    /// ≥ 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.engine.workers = n.max(1);
+        self
+    }
+
+    /// Replace the whole engine configuration (the escape hatch for
+    /// knobs without a dedicated builder method: plan-cache policy,
+    /// coalescing).
+    pub fn engine(mut self, cfg: EngineConfig) -> Self {
+        self.engine = cfg;
+        self
+    }
+
+    /// Configured shard fan-out.
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// Configured backend.
+    pub fn backend_ref(&self) -> &ShardBackend {
+        &self.backend
+    }
+
+    /// Configured engine settings.
+    pub fn engine_config(&self) -> &EngineConfig {
+        &self.engine
+    }
+
+    /// Build the execution stack — *the* construction path every CLI
+    /// subcommand, the serve scheduler and the test suites go through.
+    /// Process workers and TCP connections are resolved lazily on first
+    /// use, so building is always cheap and infallible.
+    pub fn build(&self) -> ShardCoordinator {
+        ShardCoordinator::from_parts(self.engine, self.shards, self.backend.clone(), None, None)
+    }
+
+    /// Build with an explicit process-backend executor (tests point this
+    /// at a prebuilt `diamond` binary or shorten its deadline). Forces
+    /// [`ShardBackend::Process`] regardless of the configured backend.
+    pub fn build_with_process_executor(&self, executor: ProcessShardExecutor) -> ShardCoordinator {
+        ShardCoordinator::from_parts(
+            self.engine,
+            self.shards,
+            ShardBackend::Process,
+            Some(executor),
+            None,
+        )
+    }
+
+    /// Build with an explicit TCP executor (tests shorten its
+    /// connect/response deadlines). The backend is derived from the
+    /// executor's endpoint list, overriding the configured one.
+    pub fn build_with_tcp_executor(&self, executor: TcpShardExecutor) -> ShardCoordinator {
+        let backend = ShardBackend::Tcp {
+            endpoints: executor.endpoints().to_vec(),
+        };
+        ShardCoordinator::from_parts(self.engine, self.shards, backend, None, Some(executor))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let cfg = ExecConfig::new();
+        assert_eq!(cfg.shard_count(), 1);
+        assert_eq!(cfg.backend_ref(), &ShardBackend::InProc);
+
+        let cfg = ExecConfig::new()
+            .shards(0) // clamped
+            .shards(3)
+            .tile(TileMode::Fixed(64))
+            .workers(2)
+            .backend(ShardBackend::Process);
+        assert_eq!(cfg.shard_count(), 3);
+        assert_eq!(cfg.backend_ref(), &ShardBackend::Process);
+        assert_eq!(cfg.engine_config().tile, TileMode::Fixed(64));
+        assert_eq!(cfg.engine_config().workers, 2);
+
+        let sc = cfg.build();
+        assert_eq!(sc.shards(), 3);
+        assert_eq!(sc.backend(), &ShardBackend::Process);
+    }
+
+    #[test]
+    fn built_stack_is_bitwise_identical_to_serial() {
+        // The construction path must not change what the stack computes:
+        // a 3-way in-process fleet built here matches the serial kernel
+        // bit for bit.
+        let h = crate::ham::tfim::tfim(4, 1.0, 0.7).matrix.freeze();
+        let (want, _) = crate::linalg::packed_diag_mul_counted(&h, &h);
+        let mut sc = ExecConfig::new().shards(3).build();
+        let (got, _) = sc.multiply(&h, &h).unwrap();
+        assert!(got.bit_eq(&want));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_still_build_equivalent_stacks() {
+        // The deprecate-shim contract: old call sites keep compiling and
+        // keep producing the same stack for one release.
+        let old = ShardCoordinator::new(EngineConfig::default(), 2, ShardBackend::InProc);
+        let new = ExecConfig::new().shards(2).build();
+        assert_eq!(old.shards(), new.shards());
+        assert_eq!(old.backend(), new.backend());
+    }
+}

@@ -14,6 +14,7 @@
 //! same reuse pattern the paper describes (Sec. IV-D4). A scoped worker
 //! pool fans benchmark suites out across threads.
 
+pub mod exec;
 pub mod pool;
 pub mod serve;
 pub mod server;
@@ -122,20 +123,27 @@ impl Coordinator {
         }
     }
 
-    /// Timing-only coordinator whose oracle SpMSpMs execute as `shards`
-    /// multiply-balanced ranges on `backend` (in-process engines or
-    /// `diamond shard-worker` processes), stitched bitwise — fan-out is
-    /// surfaced through [`EngineStats::shards_used`] /
+    /// Timing-only coordinator whose oracle SpMSpMs execute on the stack
+    /// described by `exec` — `shards` multiply-balanced ranges on the
+    /// configured backend (in-process engines, `diamond shard-worker`
+    /// processes, or persistent TCP daemons), stitched bitwise. Fan-out
+    /// is surfaced through [`EngineStats::shards_used`] /
     /// [`EngineStats::shard_stitch_bytes`].
-    pub fn oracle_sharded(shards: usize, backend: shard::ShardBackend) -> Self {
+    pub fn oracle_exec(exec: &exec::ExecConfig) -> Self {
         Coordinator {
             functional: FunctionalMode::Oracle,
-            kernel: std::sync::Mutex::new(shard::ShardCoordinator::new(
-                crate::linalg::EngineConfig::default(),
-                shards,
-                backend,
-            )),
+            kernel: std::sync::Mutex::new(exec.build()),
         }
+    }
+
+    /// Timing-only sharded coordinator.
+    #[deprecated(
+        note = "construct through the ExecConfig builder: \
+                `Coordinator::oracle_exec(&ExecConfig::new().shards(n).backend(backend))` \
+                (see coordinator::exec)"
+    )]
+    pub fn oracle_sharded(shards: usize, backend: shard::ShardBackend) -> Self {
+        Self::oracle_exec(&exec::ExecConfig::new().shards(shards).backend(backend))
     }
 
     /// Compute values for `A·B` through the configured functional path.
@@ -558,9 +566,10 @@ mod tests {
         let single = Coordinator::oracle()
             .evolve(&h, 0.05, iters, SimConfig::default())
             .unwrap();
-        let sharded = Coordinator::oracle_sharded(3, shard::ShardBackend::InProc)
-            .evolve(&h, 0.05, iters, SimConfig::default())
-            .unwrap();
+        let sharded =
+            Coordinator::oracle_exec(&exec::ExecConfig::new().shards(3))
+                .evolve(&h, 0.05, iters, SimConfig::default())
+                .unwrap();
         assert_eq!(
             sharded.op, single.op,
             "sharded evolution must reproduce the single-engine operator exactly"

@@ -18,20 +18,31 @@
 //!   saved this one from shipping), `Submit` frames pass admission
 //!   control and enqueue, `Stats` frames answer immediately from the
 //!   shared counters.
-//! * **admission control** — a submission is refused with a typed
+//! * **admission control with per-tenant fairness** — submissions land
+//!   in per-connection subqueues; a submission is refused with a typed
 //!   `Busy{retry_after}` frame (never silently dropped, never blocking
-//!   the daemon) when the bounded queue is full, the connection is over
-//!   its in-flight cap, or the daemon is draining; queued jobs that
-//!   outlive the queue deadline fail fast with a structured error
-//!   instead of executing stale work.
+//!   the daemon) when the global queue is full, the tenant is over its
+//!   *fair share* of it (`queue_cap / connected tenants`, floored at
+//!   one slot), the connection is over its in-flight cap, or the daemon
+//!   is draining. The retry hint scales with the tenant's **own**
+//!   backlog, not the global queue, and every connection carries a
+//!   [`TenantCounters`] ledger (admitted/rejected/served) surfaced on
+//!   the stats frame. Queued jobs that outlive the queue deadline fail
+//!   fast with a structured error instead of executing stale work.
 //! * the **scheduler thread** — waits for submissions, sleeps one
 //!   `batch_window` so concurrent tenants' jobs can coalesce, then
-//!   drains the whole queue and executes it under the
-//!   [`BatchServer`]-inherited policy: stable-sort by
-//!   `(dim, stationary fingerprint)`, cut batches at every key change
-//!   and at `max_batch`, one [`DiamondDevice`] per batch with
-//!   fingerprint-shared matrix registrations, results written back in
-//!   frame form to each job's own connection.
+//!   takes one **deficit-round-robin** round over the tenant subqueues
+//!   (`tenant_weight` job quanta per tenant visit, at most `max_batch`
+//!   jobs per round — a bursting tenant cannot monopolize a round) and
+//!   executes it under the [`BatchServer`]-inherited policy:
+//!   stable-sort by `(dim, stationary fingerprint)`, cut batches at
+//!   every key change and at `max_batch`, one [`DiamondDevice`] per
+//!   batch with fingerprint-shared matrix registrations, results
+//!   written back in frame form to each job's own connection. The
+//!   values engine is built once from [`ServeDaemonConfig::exec`] — a
+//!   `--shards N --shard-backend tcp` daemon fans every batch's
+//!   multiplies across the persistent shard fleet, reusing its plan
+//!   caches and connections across all tenants.
 //!
 //! ## Determinism
 //!
@@ -47,18 +58,19 @@
 //!
 //! [`BatchServer`]: crate::coordinator::server::BatchServer
 
-use crate::coordinator::server::ServeStats;
+use crate::coordinator::exec::ExecConfig;
+use crate::coordinator::server::{ServeStats, TenantCounters};
 use crate::coordinator::shard::{
     decode_busy, decode_plane_have, decode_plane_put, decode_result, decode_stats_req,
     decode_stats_resp, decode_submit, encode_busy, encode_err, encode_plane_have,
     encode_plane_put, encode_result_err, encode_result_ok, encode_stats_req, encode_stats_resp,
     encode_submit, plane_fingerprint, plane_wire_bytes, PlaneStore, ServeResult,
-    ShardCoordinator, SubmitBody, BUSY_MAGIC, DEFAULT_WORKER_TIMEOUT, PLANE_HAVE_MAGIC,
-    PLANE_PUT_MAGIC, RESULT_MAGIC, STATS_MAGIC, SUBMIT_MAGIC,
+    ShardCoordinator, ShardStats, SubmitBody, BUSY_MAGIC, DEFAULT_WORKER_TIMEOUT,
+    PLANE_HAVE_MAGIC, PLANE_PUT_MAGIC, RESULT_MAGIC, STATS_MAGIC, SUBMIT_MAGIC,
 };
 use crate::coordinator::transport::{
     check_hello, encode_hello, read_frame_limited, write_frame, DEFAULT_CONNECT_TIMEOUT,
-    HELLO_LEN, MAX_FRAME_BYTES,
+    EndpointIo, HELLO_LEN, MAX_FRAME_BYTES,
 };
 use crate::format::PackedDiagMatrix;
 use crate::sim::device::MatrixId;
@@ -68,7 +80,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -112,10 +124,16 @@ pub const DEFAULT_RETRY_AFTER_MS: u64 = 20;
 /// rather than executing arbitrarily stale work.
 pub const DEFAULT_QUEUE_DEADLINE: Duration = Duration::from_secs(60);
 
+/// Default deficit-round-robin weight: each tenant earns this many job
+/// quanta per scheduler visit.
+pub const DEFAULT_TENANT_WEIGHT: usize = 1;
+
 /// Tunables of a `diamond serve` daemon — the CLI exposes each as a
 /// flag (`--max-batch`, `--queue-cap`, `--inflight-cap`,
 /// `--batch-window-ms`, `--retry-after-ms`, `--queue-deadline-ms`,
-/// `--max-frame-bytes`, `--plane-cache-cap`).
+/// `--max-frame-bytes`, `--plane-cache-cap`, `--tenant-weight`, plus
+/// the [`ExecConfig`] fleet flags `--shards`, `--shard-backend`,
+/// `--shard-endpoints`, `--tile`).
 #[derive(Clone, Debug)]
 pub struct ServeDaemonConfig {
     /// Largest framed payload the daemon will read (default
@@ -139,6 +157,16 @@ pub struct ServeDaemonConfig {
     /// Fail-fast deadline for queued jobs (default
     /// [`DEFAULT_QUEUE_DEADLINE`]).
     pub queue_deadline: Duration,
+    /// The execution stack every drained batch runs on — the scheduler
+    /// thread builds exactly one [`ShardCoordinator`] from this at
+    /// startup, so a fleet-backed daemon (`--shards N --shard-backend
+    /// tcp`) holds its persistent shard connections, plan caches and
+    /// shard-plan memos across every tenant's jobs.
+    pub exec: ExecConfig,
+    /// Deficit-round-robin quantum each tenant earns per scheduler
+    /// visit (default [`DEFAULT_TENANT_WEIGHT`]; the `--tenant-weight
+    /// default:N` knob).
+    pub tenant_weight: usize,
 }
 
 impl Default for ServeDaemonConfig {
@@ -152,6 +180,8 @@ impl Default for ServeDaemonConfig {
             batch_window: DEFAULT_BATCH_WINDOW,
             retry_after_ms: DEFAULT_RETRY_AFTER_MS,
             queue_deadline: DEFAULT_QUEUE_DEADLINE,
+            exec: ExecConfig::new(),
+            tenant_weight: DEFAULT_TENANT_WEIGHT,
         }
     }
 }
@@ -161,12 +191,33 @@ impl Default for ServeDaemonConfig {
 /// One tenant connection's write half, shared between its reader thread
 /// (which writes `Busy`, immediate errors and stats replies) and the
 /// scheduler (which writes results) — every frame goes out under the
-/// same mutex, so replies never interleave mid-frame.
+/// same mutex, so replies never interleave mid-frame. One connection is
+/// one tenant: the fairness subqueue key and the
+/// [`TenantCounters`] ledger both live here.
 struct Conn {
+    /// Daemon-unique tenant id — the DRR subqueue key.
+    id: u64,
     writer: Mutex<TcpStream>,
     /// Jobs accepted from this connection and not yet answered.
     inflight: AtomicUsize,
+    /// Jobs accepted past admission control.
+    admitted: AtomicU64,
+    /// Submissions refused with `Busy`.
+    rejected: AtomicU64,
+    /// Final frames sent for admitted jobs (results, job-level errors,
+    /// queue-deadline expiries).
+    served: AtomicU64,
     peer: String,
+}
+
+impl Conn {
+    fn tenant_counters(&self) -> TenantCounters {
+        TenantCounters {
+            admitted: self.admitted.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+            served: self.served.load(Ordering::SeqCst),
+        }
+    }
 }
 
 fn send(conn: &Conn, frame: &[u8]) -> Result<()> {
@@ -230,6 +281,87 @@ impl ResolvedJob {
     }
 }
 
+/// One tenant's fairness subqueue: its pending jobs plus its
+/// deficit-round-robin credit. The deficit carries across scheduler
+/// visits while the subqueue is nonempty (classic DRR) and resets when
+/// it empties (the subqueue is dropped wholesale).
+struct TenantQueue {
+    jobs: VecDeque<Queued>,
+    deficit: u64,
+}
+
+/// The submission queue, split into per-tenant subqueues drained
+/// deficit-round-robin: each scheduler pass visits tenants in arrival
+/// order, credits each `weight` job quanta, and takes at most that many
+/// of its jobs — so a tenant with a thousand queued jobs and a tenant
+/// with one get served at the same per-visit rate. Invariant: `subs`
+/// holds exactly the nonempty subqueues, `order` holds exactly their
+/// keys (each once), and `total` is the job sum.
+struct TenantQueues {
+    subs: HashMap<u64, TenantQueue>,
+    order: VecDeque<u64>,
+    total: usize,
+}
+
+impl TenantQueues {
+    fn new() -> Self {
+        TenantQueues {
+            subs: HashMap::new(),
+            order: VecDeque::new(),
+            total: 0,
+        }
+    }
+
+    /// This tenant's queued-job backlog (its `Busy` retry hints and its
+    /// fair-share admission check both read this).
+    fn len_for(&self, tenant: u64) -> usize {
+        self.subs.get(&tenant).map_or(0, |s| s.jobs.len())
+    }
+
+    fn push(&mut self, item: Queued) {
+        let tenant = item.conn.id;
+        match self.subs.get_mut(&tenant) {
+            Some(sub) => sub.jobs.push_back(item),
+            None => {
+                let mut jobs = VecDeque::new();
+                jobs.push_back(item);
+                self.subs.insert(tenant, TenantQueue { jobs, deficit: 0 });
+                self.order.push_back(tenant);
+            }
+        }
+        self.total += 1;
+    }
+
+    /// Take up to `budget` jobs, deficit-round-robin at `weight` quanta
+    /// per tenant visit. A tenant whose subqueue empties leaves the
+    /// rotation (and forfeits its deficit); one cut off by the budget
+    /// mid-visit keeps its credit for the next pass.
+    fn drain_drr(&mut self, weight: u64, budget: usize) -> Vec<Queued> {
+        let weight = weight.max(1);
+        let mut out = Vec::new();
+        while out.len() < budget && self.total > 0 {
+            let Some(tenant) = self.order.pop_front() else {
+                break;
+            };
+            let Some(sub) = self.subs.get_mut(&tenant) else {
+                continue;
+            };
+            sub.deficit += weight;
+            while sub.deficit > 0 && !sub.jobs.is_empty() && out.len() < budget {
+                out.push(sub.jobs.pop_front().expect("checked nonempty"));
+                sub.deficit -= 1;
+                self.total -= 1;
+            }
+            if sub.jobs.is_empty() {
+                self.subs.remove(&tenant);
+            } else {
+                self.order.push_back(tenant);
+            }
+        }
+        out
+    }
+}
+
 /// Everything the connection threads and the scheduler share.
 struct Shared {
     cfg: ServeDaemonConfig,
@@ -237,9 +369,19 @@ struct Shared {
     /// per-connection [`PlaneStore`] of the shard wire, promoted to one
     /// instance for all tenants.
     planes: Mutex<PlaneStore>,
-    queue: Mutex<VecDeque<Queued>>,
+    queue: Mutex<TenantQueues>,
     cv: Condvar,
     stats: Mutex<ServeStats>,
+    /// The scheduler's fleet counters, published after every batch round
+    /// (and on exit): the one [`ShardCoordinator`]'s cumulative
+    /// [`ShardStats`] plus per-endpoint transport I/O. Read by
+    /// `--counters-json` and the fleet accessors.
+    fleet: Mutex<(ShardStats, Vec<EndpointIo>)>,
+    /// Tenant-id allocator for accepted connections.
+    next_conn: AtomicU64,
+    /// Currently-connected tenants — the denominator of the fair-share
+    /// admission bound.
+    tenants: AtomicUsize,
     /// Once set, new submissions are `Busy`-rejected and the scheduler
     /// exits after the queue empties — the clean-drain half of
     /// shutdown. Checked under the queue mutex at enqueue time, so a
@@ -253,15 +395,52 @@ impl Shared {
         Shared {
             cfg,
             planes: Mutex::new(planes),
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(TenantQueues::new()),
             cv: Condvar::new(),
             stats: Mutex::new(ServeStats::default()),
+            fleet: Mutex::new((ShardStats::default(), Vec::new())),
+            next_conn: AtomicU64::new(1),
+            tenants: AtomicUsize::new(0),
             draining: AtomicBool::new(false),
         }
     }
 
     fn stats_snapshot(&self) -> ServeStats {
         *self.stats.lock().expect("serve stats lock poisoned")
+    }
+
+    fn fleet_snapshot(&self) -> (ShardStats, Vec<EndpointIo>) {
+        self.fleet.lock().expect("serve fleet lock poisoned").clone()
+    }
+
+    /// Per-tenant fair share of the submission queue: this tenant's
+    /// weighted slice of `queue_cap`, floored at one slot so a tenant is
+    /// never locked out entirely. Weights are uniform today (the
+    /// `--tenant-weight default:N` knob sets every tenant's), so the
+    /// weight cancels; a per-tenant weight map slots into the numerator
+    /// when it lands.
+    fn fair_share(&self) -> usize {
+        let tenants = self.tenants.load(Ordering::SeqCst).max(1);
+        let w = self.cfg.tenant_weight.max(1);
+        ((self.cfg.queue_cap * w) / (tenants * w)).max(1)
+    }
+}
+
+/// RAII registration of a connection in the tenant count — admission
+/// shares shrink when a tenant arrives and recover when it leaves,
+/// however its handler exits.
+struct TenantSlot<'a>(&'a Shared);
+
+impl<'a> TenantSlot<'a> {
+    fn register(shared: &'a Shared) -> Self {
+        shared.tenants.fetch_add(1, Ordering::SeqCst);
+        TenantSlot(shared)
+    }
+}
+
+impl Drop for TenantSlot<'_> {
+    fn drop(&mut self) {
+        self.0.tenants.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -345,10 +524,17 @@ fn handle_conn(mut stream: TcpStream, peer: &str, shared: &Arc<Shared>) -> Resul
         .context("arming idle deadline")?;
 
     let conn = Arc::new(Conn {
+        id: shared.next_conn.fetch_add(1, Ordering::SeqCst),
         writer: Mutex::new(stream.try_clone().context("cloning connection writer")?),
         inflight: AtomicUsize::new(0),
+        admitted: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        served: AtomicU64::new(0),
         peer: peer.to_string(),
     });
+    // Handshake done: this connection now counts as a tenant for the
+    // fair-share denominator (released on any exit path).
+    let _slot = TenantSlot::register(shared);
     let cfg = &shared.cfg;
     let mut pending_err: Option<String> = None;
 
@@ -409,18 +595,30 @@ fn handle_conn(mut stream: TcpStream, peer: &str, shared: &Arc<Shared>) -> Resul
                     send(&conn, &encode_result_err(refs.job_id, &msg))?;
                     continue;
                 }
-                let busy = |shared: &Shared, conn: &Conn| -> Result<()> {
+                // A rejection's retry hint reflects *this tenant's* own
+                // backlog, not the global queue: an idle tenant bounced
+                // by a transient condition retries after one base
+                // interval; one sitting on a deep subqueue backs off
+                // proportionally to the work it already has queued.
+                let busy = |shared: &Shared, conn: &Conn, own_backlog: u64| -> Result<()> {
                     shared
                         .stats
                         .lock()
                         .expect("serve stats lock poisoned")
                         .rejected_jobs += 1;
-                    send(conn, &encode_busy(refs.job_id, shared.cfg.retry_after_ms))
+                    conn.rejected.fetch_add(1, Ordering::SeqCst);
+                    let hint = shared.cfg.retry_after_ms.saturating_mul(own_backlog + 1);
+                    send(conn, &encode_busy(refs.job_id, hint))
                 };
                 if shared.draining.load(Ordering::SeqCst)
                     || conn.inflight.load(Ordering::SeqCst) >= cfg.inflight_cap
                 {
-                    busy(shared, &conn)?;
+                    let own = shared
+                        .queue
+                        .lock()
+                        .expect("serve queue lock poisoned")
+                        .len_for(conn.id) as u64;
+                    busy(shared, &conn, own)?;
                     continue;
                 }
                 match resolve_body(shared, refs.body) {
@@ -443,16 +641,26 @@ fn handle_conn(mut stream: TcpStream, peer: &str, shared: &Arc<Shared>) -> Resul
                             conn: Arc::clone(&conn),
                         };
                         let mut q = shared.queue.lock().expect("serve queue lock poisoned");
-                        // Drain and cap are both decided under the
-                        // queue mutex: a submission is either visible
-                        // to the scheduler's final drain or rejected.
-                        if shared.draining.load(Ordering::SeqCst) || q.len() >= cfg.queue_cap {
+                        // Drain, global cap and this tenant's fair
+                        // share are all decided under the queue mutex:
+                        // a submission is either visible to the
+                        // scheduler's final drain or rejected. The
+                        // share bound is what keeps one bursting
+                        // tenant from occupying the whole queue — it
+                        // caps out at its slice while everyone else's
+                        // slots stay open.
+                        let own = q.len_for(conn.id);
+                        if shared.draining.load(Ordering::SeqCst)
+                            || q.total >= cfg.queue_cap
+                            || own >= shared.fair_share()
+                        {
                             drop(q);
-                            busy(shared, &conn)?;
+                            busy(shared, &conn, own as u64)?;
                         } else {
                             conn.inflight.fetch_add(1, Ordering::SeqCst);
-                            q.push_back(queued);
-                            let depth = q.len() as u64;
+                            conn.admitted.fetch_add(1, Ordering::SeqCst);
+                            q.push(queued);
+                            let depth = q.total as u64;
                             drop(q);
                             let mut st =
                                 shared.stats.lock().expect("serve stats lock poisoned");
@@ -471,7 +679,7 @@ fn handle_conn(mut stream: TcpStream, peer: &str, shared: &Arc<Shared>) -> Resul
                     .lock()
                     .expect("serve planes lock poisoned")
                     .len() as u64;
-                send(&conn, &encode_stats_resp(&stats, resident))?;
+                send(&conn, &encode_stats_resp(&stats, resident, &conn.tenant_counters()))?;
             }
             _ => {
                 bail!(
@@ -503,6 +711,9 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
             if let Err(e) = send(&q.conn, &encode_result_err(q.job_id, &msg)) {
                 eprintln!("serve: {}: dropping expiry for job {}: {e:#}", q.conn.peer, q.job_id);
             }
+            // An expiry is the job's final answer: it still reconciles
+            // the tenant's ledger (admitted == served at quiescence).
+            q.conn.served.fetch_add(1, Ordering::SeqCst);
             q.conn.inflight.fetch_sub(1, Ordering::SeqCst);
         } else {
             live.push(q);
@@ -608,6 +819,7 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
                 // Free the in-flight slot before the reply hits the
                 // wire, so an instant resubmit can't draw a spurious
                 // Busy for a slot its own finished job still holds.
+                q.conn.served.fetch_add(1, Ordering::SeqCst);
                 q.conn.inflight.fetch_sub(1, Ordering::SeqCst);
                 if let Err(e) = send(&q.conn, &reply) {
                     // The tenant left; its batch-mates' results are
@@ -622,22 +834,34 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
     }
 }
 
+/// Publish the scheduler engine's cumulative fleet counters into the
+/// shared snapshot — done between batch rounds, never under a lock the
+/// hot path holds, so `--counters-json` and the stats accessors read a
+/// consistent fleet picture without touching the engine.
+fn publish_fleet(shared: &Shared, engine: &ShardCoordinator) {
+    let mut f = shared.fleet.lock().expect("serve fleet lock poisoned");
+    f.0 = *engine.stats();
+    f.1 = engine.endpoint_io().to_vec();
+}
+
 /// The scheduler loop: wait for submissions (or drain), let one batch
-/// window of tenants coalesce, drain the whole queue, execute. One
-/// [`ShardCoordinator`] lives across the daemon's whole life, so every
-/// tenant's chains share its plan caches. Exits — returning the final
-/// stats — only when draining *and* the queue is empty, a check made
-/// under the queue mutex so no accepted job can slip past the last
-/// drain.
+/// window of tenants coalesce, take one deficit-round-robin round of at
+/// most `max_batch` jobs, execute. One [`ShardCoordinator`] — built from
+/// [`ServeDaemonConfig::exec`], so possibly a multi-shard fleet over
+/// persistent TCP connections — lives across the daemon's whole life:
+/// every tenant's jobs share its plan caches, shard-plan memos and
+/// connections. Exits — returning the final stats — only when draining
+/// *and* the queue is empty, a check made under the queue mutex so no
+/// accepted job can slip past the last drain.
 fn run_scheduler(shared: Arc<Shared>) -> ServeStats {
-    let mut engine = ShardCoordinator::single();
+    let mut engine = shared.cfg.exec.build();
     loop {
         {
             let mut q = shared.queue.lock().expect("serve queue lock poisoned");
-            while q.is_empty() && !shared.draining.load(Ordering::SeqCst) {
+            while q.total == 0 && !shared.draining.load(Ordering::SeqCst) {
                 q = shared.cv.wait(q).expect("serve queue lock poisoned");
             }
-            if q.is_empty() {
+            if q.total == 0 {
                 break;
             }
         }
@@ -646,10 +870,11 @@ fn run_scheduler(shared: Arc<Shared>) -> ServeStats {
             .queue
             .lock()
             .expect("serve queue lock poisoned")
-            .drain(..)
-            .collect();
+            .drain_drr(shared.cfg.tenant_weight as u64, shared.cfg.max_batch);
         run_batches(&shared, &mut engine, drained);
+        publish_fleet(&shared, &engine);
     }
+    publish_fleet(&shared, &engine);
     shared.stats_snapshot()
 }
 
@@ -686,16 +911,27 @@ fn run_serve_accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, shared: A
     }
 }
 
+/// What a finished daemon reports: the scheduler's aggregate
+/// [`ServeStats`] plus the execution fleet's cumulative [`ShardStats`]
+/// and per-endpoint transport I/O — everything the `CountersV1` serve
+/// emitter needs in one struct.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub stats: ServeStats,
+    pub shard: ShardStats,
+    pub endpoints: Vec<EndpointIo>,
+}
+
 /// Run the daemon on the calling thread until `stop` flips, then drain
 /// cleanly: stop accepting, `Busy`-reject new submissions, finish every
-/// queued job, and return the final stats — the `diamond serve` entry
+/// queued job, and return the final report — the `diamond serve` entry
 /// point (the CLI arms `stop` from SIGTERM/SIGINT via
 /// [`stop_on_signals`]).
 pub fn serve_blocking(
     listener: TcpListener,
     cfg: ServeDaemonConfig,
     stop: Arc<AtomicBool>,
-) -> Result<ServeStats> {
+) -> Result<ServeReport> {
     let addr = listener.local_addr().context("resolving bound address")?;
     let shared = Arc::new(Shared::new(cfg));
     let sched_shared = Arc::clone(&shared);
@@ -720,12 +956,17 @@ pub fn serve_blocking(
             std::thread::sleep(Duration::from_millis(50));
         })
         .context("spawning serve stop watcher")?;
-    run_serve_accept_loop(listener, stop, shared);
+    run_serve_accept_loop(listener, stop, Arc::clone(&shared));
     let stats = sched
         .join()
         .map_err(|_| anyhow!("serve scheduler panicked"))?;
     let _ = watcher.join();
-    Ok(stats)
+    let (shard, endpoints) = shared.fleet_snapshot();
+    Ok(ServeReport {
+        stats,
+        shard,
+        endpoints,
+    })
 }
 
 /// An in-process `diamond serve` daemon on an ephemeral loopback port —
@@ -790,6 +1031,13 @@ impl ServeServer {
     /// this without a round trip).
     pub fn stats(&self) -> ServeStats {
         self.shared.stats_snapshot()
+    }
+
+    /// The execution fleet's cumulative [`ShardStats`] and per-endpoint
+    /// transport I/O, as last published by the scheduler (complete once
+    /// [`ServeServer::stop`] has drained).
+    pub fn fleet(&self) -> (ShardStats, Vec<EndpointIo>) {
+        self.shared.fleet_snapshot()
     }
 
     /// Drain and stop (idempotent): reject new submissions, finish every
@@ -1065,8 +1313,9 @@ impl ServeClient {
         }
     }
 
-    /// Fetch the daemon's live stats and resident-plane count.
-    pub fn stats(&mut self) -> Result<(ServeStats, u64)> {
+    /// Fetch the daemon's live stats, resident-plane count, and this
+    /// connection's own [`TenantCounters`] ledger.
+    pub fn stats(&mut self) -> Result<(ServeStats, u64, TenantCounters)> {
         write_frame(&mut self.stream, &[&encode_stats_req()]).context("sending stats request")?;
         let frame = read_frame_limited(&mut self.stream, self.max_frame_bytes)?
             .ok_or_else(|| anyhow!("serve daemon closed mid-stats"))?;
@@ -1081,6 +1330,87 @@ mod tests {
 
     fn tfim_packed(qubits: usize) -> PackedDiagMatrix {
         crate::ham::tfim::tfim(qubits, 1.0, 0.7).matrix.freeze()
+    }
+
+    /// A connected-but-inert [`Conn`] for queue-policy unit tests (the
+    /// loopback stream is never written).
+    fn fake_conn(id: u64) -> Arc<Conn> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let _ = listener.accept().unwrap();
+        Arc::new(Conn {
+            id,
+            writer: Mutex::new(stream),
+            inflight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            peer: format!("fake-{id}"),
+        })
+    }
+
+    fn fake_queued(conn: &Arc<Conn>, job_id: u64) -> Queued {
+        let m = Arc::new(PackedDiagMatrix::identity(2));
+        Queued {
+            job_id,
+            job: ResolvedJob::Spmspm {
+                fp_a: 0,
+                fp_b: 0,
+                a: Arc::clone(&m),
+                b: m,
+            },
+            dim: 2,
+            key_fp: 0,
+            enqueued: Instant::now(),
+            conn: Arc::clone(conn),
+        }
+    }
+
+    #[test]
+    fn drr_drain_bounds_a_bursting_tenant_to_its_quantum() {
+        let greedy = fake_conn(1);
+        let polite = fake_conn(2);
+        let mut q = TenantQueues::new();
+        for i in 0..6 {
+            q.push(fake_queued(&greedy, i));
+        }
+        q.push(fake_queued(&polite, 100));
+        assert_eq!(q.total, 7);
+        assert_eq!(q.len_for(1), 6);
+        assert_eq!(q.len_for(2), 1);
+
+        // Weight 1, budget 4: the greedy tenant arrived first with six
+        // queued jobs, but the polite tenant's lone job is served in
+        // the very first rotation — position 1, not position 6.
+        let round = q.drain_drr(1, 4);
+        let ids: Vec<(u64, u64)> = round.iter().map(|x| (x.conn.id, x.job_id)).collect();
+        assert_eq!(ids, vec![(1, 0), (2, 100), (1, 1), (1, 2)]);
+        assert_eq!(q.total, 3);
+        assert_eq!(q.len_for(2), 0, "emptied subqueue leaves the rotation");
+
+        // The remaining backlog drains in order; an over-budget drain
+        // just returns everything.
+        let rest = q.drain_drr(1, 100);
+        let ids: Vec<u64> = rest.iter().map(|x| x.job_id).collect();
+        assert_eq!(ids, vec![3, 4, 5]);
+        assert_eq!(q.total, 0);
+        assert!(q.drain_drr(1, 8).is_empty());
+    }
+
+    #[test]
+    fn drr_weight_scales_the_per_visit_quantum() {
+        let a = fake_conn(1);
+        let b = fake_conn(2);
+        let mut q = TenantQueues::new();
+        for i in 0..4 {
+            q.push(fake_queued(&a, i));
+            q.push(fake_queued(&b, 10 + i));
+        }
+        // Weight 2: each visit serves two of a tenant's jobs before
+        // rotating.
+        let round = q.drain_drr(2, 8);
+        let ids: Vec<u64> = round.iter().map(|x| x.job_id).collect();
+        assert_eq!(ids, vec![0, 1, 10, 11, 2, 3, 12, 13]);
     }
 
     #[test]
@@ -1099,13 +1429,20 @@ mod tests {
         // (optimistic Have, then full Put).
         assert_eq!(client.plane_resends, 1);
 
-        let (stats, resident) = client.stats().unwrap();
+        let (stats, resident, tenant) = client.stats().unwrap();
         assert_eq!(stats.jobs, 1);
         assert_eq!(stats.batches, 1);
         assert_eq!(stats.devices_instantiated, 1);
         assert!(stats.total_cycles > 0);
         assert!(stats.total_energy_j > 0.0);
         assert_eq!(resident, 1, "A == B == H: one resident plane");
+        // The per-tenant ledger rode the same frame: the optimistic
+        // first submit bounced off the reader thread (unknown plane —
+        // never admitted), the Put-recovery resubmit was admitted and
+        // answered.
+        assert_eq!(tenant.admitted, 1);
+        assert_eq!(tenant.served, 1);
+        assert_eq!(tenant.rejected, 0);
 
         // A second client referencing the same plane rides the shared
         // store: zero resends, and the dedup counter credits the bytes.
@@ -1113,8 +1450,12 @@ mod tests {
         let (c2, _) = second.spmspm(&h, &h).unwrap();
         assert!(c2.bit_eq(&want));
         assert_eq!(second.plane_resends, 0);
-        let (stats, _) = second.stats().unwrap();
+        let (stats, _, second_tenant) = second.stats().unwrap();
         assert_eq!(stats.jobs, 2);
+        // Tenant ledgers are per-connection, not global: the second
+        // tenant's shows only its own job.
+        assert_eq!(second_tenant.admitted, 1);
+        assert_eq!(second_tenant.served, 1);
         assert!(
             stats.dedup_bytes_avoided >= 2 * plane_wire_bytes(&h),
             "cross-tenant Have hits must credit dedup_bytes_avoided"
@@ -1153,6 +1494,33 @@ mod tests {
         assert_eq!(bits(&got_im), bits(&want.psi_im));
         assert_eq!(ssteps, want.steps);
         server.stop();
+    }
+
+    #[test]
+    fn fleet_backed_daemon_is_bitwise_identical_and_publishes_shard_stats() {
+        // The tentpole at its smallest: a daemon whose scheduler engine
+        // fans every multiply across 3 in-process shards must serve the
+        // exact bits the single-engine daemon would, and surface the
+        // fan-out through the fleet snapshot.
+        let mut server = ServeServer::spawn_with(
+            "127.0.0.1:0",
+            ServeDaemonConfig {
+                exec: ExecConfig::new().shards(3),
+                ..ServeDaemonConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client = ServeClient::connect(&server.endpoint()).unwrap();
+        let h = tfim_packed(4);
+        let (c, _) = client.spmspm(&h, &h).unwrap();
+        let (want, _) = packed_diag_mul_counted(&h, &h);
+        assert!(c.bit_eq(&want), "fleet-served product differs from local serial");
+        server.stop();
+        let (shard, endpoints) = server.fleet();
+        assert_eq!(shard.multiplies, 1);
+        assert_eq!(shard.sharded_multiplies, 1);
+        assert!(shard.shards_used >= 2, "{shard:?}");
+        assert!(endpoints.is_empty(), "inproc fleet has no TCP endpoints");
     }
 
     #[test]

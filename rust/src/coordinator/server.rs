@@ -78,6 +78,34 @@ impl ServeStats {
     }
 }
 
+/// Per-tenant admission ledger, carried on the stats wire frame so a
+/// client can reconcile its own observations (`Busy` rejections seen,
+/// results received) against the daemon's accounting. One tenant = one
+/// connection; the counters are for the *asking* connection, not a
+/// global sum. `admitted == served` at quiescence: every admitted job
+/// eventually yields exactly one final frame (result, job-level error,
+/// or queue-deadline expiry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Jobs accepted past admission control on this connection.
+    pub admitted: u64,
+    /// Submissions refused with `Busy` on this connection (inflight cap,
+    /// global queue full, or this tenant over its fair share).
+    pub rejected: u64,
+    /// Final frames sent for admitted jobs on this connection.
+    pub served: u64,
+}
+
+impl std::fmt::Display for TenantCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant: {} admitted, {} rejected, {} served",
+            self.admitted, self.rejected, self.served
+        )
+    }
+}
+
 impl std::fmt::Display for ServeStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(

@@ -1286,16 +1286,21 @@ pub fn decode_stats_req(bytes: &[u8]) -> Result<()> {
 /// Serialize a serve `Stats` response: `STATS_RESP_MAGIC | 0u8 | jobs |
 /// batches | shared_operand_hits | devices_instantiated |
 /// queue_depth_peak | rejected_jobs | dedup_bytes_avoided |
-/// planes_resident | total_cycles | total_energy_j (f64-bits)` — 85
-/// bytes. `planes_resident` rides alongside the
+/// planes_resident | total_cycles | total_energy_j (f64-bits) |
+/// tenant_admitted | tenant_rejected | tenant_served` — 109 bytes.
+/// `planes_resident` rides alongside the
 /// [`ServeStats`](crate::coordinator::server::ServeStats) fields: it is
 /// a property of the daemon's shared [`PlaneStore`], not of the batch
-/// scheduler.
+/// scheduler. The trailing
+/// [`TenantCounters`](crate::coordinator::server::TenantCounters) are
+/// scoped to the *asking* connection — what fairness admission admitted,
+/// rejected and served for this tenant specifically.
 pub fn encode_stats_resp(
     stats: &crate::coordinator::server::ServeStats,
     planes_resident: u64,
+    tenant: &crate::coordinator::server::TenantCounters,
 ) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(85);
+    let mut buf = Vec::with_capacity(109);
     buf.extend_from_slice(&STATS_RESP_MAGIC);
     buf.push(STATUS_OK);
     put_u64(&mut buf, stats.jobs);
@@ -1308,11 +1313,21 @@ pub fn encode_stats_resp(
     put_u64(&mut buf, planes_resident);
     put_u64(&mut buf, stats.total_cycles);
     put_u64(&mut buf, stats.total_energy_j.to_bits());
+    put_u64(&mut buf, tenant.admitted);
+    put_u64(&mut buf, tenant.rejected);
+    put_u64(&mut buf, tenant.served);
     buf
 }
 
-/// Decode a serve `Stats` response into `(stats, planes_resident)`.
-pub fn decode_stats_resp(bytes: &[u8]) -> Result<(crate::coordinator::server::ServeStats, u64)> {
+/// Decode a serve `Stats` response into
+/// `(stats, planes_resident, tenant)`.
+pub fn decode_stats_resp(
+    bytes: &[u8],
+) -> Result<(
+    crate::coordinator::server::ServeStats,
+    u64,
+    crate::coordinator::server::TenantCounters,
+)> {
     let mut c = Cursor::new(bytes);
     if c.take(4)? != &STATS_RESP_MAGIC[..] {
         bail!("not a serve stats response (bad magic)");
@@ -1331,6 +1346,9 @@ pub fn decode_stats_resp(bytes: &[u8]) -> Result<(crate::coordinator::server::Se
     let planes_resident = c.u64()?;
     let total_cycles = c.u64()?;
     let total_energy_j = c.f64()?;
+    let admitted = c.u64()?;
+    let rejected = c.u64()?;
+    let served = c.u64()?;
     c.done()?;
     Ok((
         crate::coordinator::server::ServeStats {
@@ -1345,6 +1363,11 @@ pub fn decode_stats_resp(bytes: &[u8]) -> Result<(crate::coordinator::server::Se
             total_energy_j,
         },
         planes_resident,
+        crate::coordinator::server::TenantCounters {
+            admitted,
+            rejected,
+            served,
+        },
     ))
 }
 
@@ -2338,53 +2361,84 @@ pub struct ShardCoordinator {
 }
 
 impl ShardCoordinator {
-    /// Coordinator with `shards` ranges on `backend` (shard count
-    /// clamped to ≥ 1). The process backend resolves its worker binary
-    /// — and the TCP backend its connections — lazily on first use.
-    pub fn new(cfg: EngineConfig, shards: usize, backend: ShardBackend) -> Self {
+    /// The one real constructor, reached only through
+    /// [`ExecConfig`](crate::coordinator::exec::ExecConfig) — every
+    /// public construction path (including the deprecated shims below)
+    /// funnels here. Shard count clamped to ≥ 1; the process backend
+    /// resolves its worker binary — and the TCP backend its connections
+    /// — lazily on first use unless an explicit executor is injected.
+    pub(crate) fn from_parts(
+        cfg: EngineConfig,
+        shards: usize,
+        backend: ShardBackend,
+        executor: Option<ProcessShardExecutor>,
+        tcp: Option<crate::coordinator::transport::TcpShardExecutor>,
+    ) -> Self {
         ShardCoordinator {
             engine: KernelEngine::new(cfg),
             shards: shards.max(1),
             backend,
-            executor: None,
-            tcp: None,
+            executor,
+            tcp,
             cache: HashMap::new(),
             last_plan: None,
             stats: ShardStats::default(),
         }
     }
 
-    /// The unsharded degenerate: one engine, default configuration —
-    /// behaviourally identical to [`KernelEngine::with_defaults`].
-    pub fn single() -> Self {
-        Self::new(EngineConfig::default(), 1, ShardBackend::InProc)
+    /// Coordinator with `shards` ranges on `backend`.
+    #[deprecated(
+        note = "construct through the ExecConfig builder: \
+                `ExecConfig::new().shards(n).backend(backend).build()` \
+                (see coordinator::exec)"
+    )]
+    pub fn new(cfg: EngineConfig, shards: usize, backend: ShardBackend) -> Self {
+        crate::coordinator::exec::ExecConfig::new()
+            .engine(cfg)
+            .shards(shards)
+            .backend(backend)
+            .build()
     }
 
-    /// Process-backed coordinator with an explicit executor (tests use
-    /// this to point at the built `diamond` binary).
+    /// The unsharded degenerate: one engine, default configuration —
+    /// behaviourally identical to [`KernelEngine::with_defaults`], and
+    /// shorthand for `ExecConfig::new().build()`.
+    pub fn single() -> Self {
+        crate::coordinator::exec::ExecConfig::new().build()
+    }
+
+    /// Process-backed coordinator with an explicit executor.
+    #[deprecated(
+        note = "construct through the ExecConfig builder: \
+                `ExecConfig::new().shards(n).build_with_process_executor(executor)` \
+                (see coordinator::exec)"
+    )]
     pub fn with_executor(
         cfg: EngineConfig,
         shards: usize,
         executor: ProcessShardExecutor,
     ) -> Self {
-        let mut sc = Self::new(cfg, shards, ShardBackend::Process);
-        sc.executor = Some(executor);
-        sc
+        crate::coordinator::exec::ExecConfig::new()
+            .engine(cfg)
+            .shards(shards)
+            .build_with_process_executor(executor)
     }
 
-    /// TCP-backed coordinator with an explicit executor (tests use this
-    /// to shorten the connect/response deadlines).
+    /// TCP-backed coordinator with an explicit executor.
+    #[deprecated(
+        note = "construct through the ExecConfig builder: \
+                `ExecConfig::new().shards(n).build_with_tcp_executor(executor)` \
+                (see coordinator::exec)"
+    )]
     pub fn with_tcp_executor(
         cfg: EngineConfig,
         shards: usize,
         executor: crate::coordinator::transport::TcpShardExecutor,
     ) -> Self {
-        let backend = ShardBackend::Tcp {
-            endpoints: executor.endpoints().to_vec(),
-        };
-        let mut sc = Self::new(cfg, shards, backend);
-        sc.tcp = Some(executor);
-        sc
+        crate::coordinator::exec::ExecConfig::new()
+            .engine(cfg)
+            .shards(shards)
+            .build_with_tcp_executor(executor)
     }
 
     /// Configured shard count.
@@ -2950,6 +3004,36 @@ mod tests {
         assert_eq!(err, want, "v5 result-error layout is pinned");
 
         assert_eq!(encode_stats_req(), b"DST1", "v5 stats request is the bare magic");
+
+        let stats = crate::coordinator::server::ServeStats {
+            jobs: 1,
+            batches: 2,
+            shared_operand_hits: 3,
+            devices_instantiated: 4,
+            queue_depth_peak: 5,
+            rejected_jobs: 6,
+            dedup_bytes_avoided: 7,
+            total_cycles: 9,
+            total_energy_j: 0.125,
+        };
+        let tenant = crate::coordinator::server::TenantCounters {
+            admitted: 10,
+            rejected: 11,
+            served: 12,
+        };
+        let resp = encode_stats_resp(&stats, 8, &tenant);
+        let mut want = Vec::new();
+        want.extend_from_slice(b"DTR1");
+        want.push(0); // STATUS_OK
+        for v in 1u64..=9 {
+            want.extend_from_slice(&v.to_le_bytes());
+        }
+        want.extend_from_slice(&0.125f64.to_le_bytes());
+        for v in 10u64..=12 {
+            want.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(resp, want, "v5 stats response layout is pinned");
+        assert_eq!(resp.len(), 109);
     }
 
     #[test]
@@ -3082,11 +3166,17 @@ mod tests {
             total_cycles: 123456,
             total_energy_j: 1.5e-6,
         };
-        let resp = encode_stats_resp(&stats, 7);
-        assert_eq!(resp.len(), 85, "v5 stats responses are fixed-size");
-        let (got, resident) = decode_stats_resp(&resp).unwrap();
+        let tenant = crate::coordinator::server::TenantCounters {
+            admitted: 30,
+            rejected: 2,
+            served: 29,
+        };
+        let resp = encode_stats_resp(&stats, 7, &tenant);
+        assert_eq!(resp.len(), 109, "v5 stats responses are fixed-size");
+        let (got, resident, got_tenant) = decode_stats_resp(&resp).unwrap();
         assert_eq!(got, stats);
         assert_eq!(resident, 7);
+        assert_eq!(got_tenant, tenant);
     }
 
     #[test]
@@ -3124,7 +3214,11 @@ mod tests {
             encode_result_ok(3, &ServeResult::Spmspm { c: a.clone(), mults: 9 }),
             encode_result_err(4, "boom"),
             encode_busy(5, 20),
-            encode_stats_resp(&crate::coordinator::server::ServeStats::default(), 0),
+            encode_stats_resp(
+                &crate::coordinator::server::ServeStats::default(),
+                0,
+                &crate::coordinator::server::TenantCounters::default(),
+            ),
         ];
         let decode_any = |bytes: &[u8]| {
             let _ = decode_plane_put(bytes);
@@ -3315,7 +3409,7 @@ mod tests {
             h.set_diag(d, vec![Complex::new(0.9, 0.15 * d as f64); len]);
         }
         let local = crate::taylor::expm_diag(&h, 0.4, 6);
-        let mut sc = ShardCoordinator::new(EngineConfig::default(), 3, ShardBackend::InProc);
+        let mut sc = crate::coordinator::exec::ExecConfig::new().shards(3).build();
         let r = sc.run_chain(&h, 0.4, 6).unwrap();
         assert_eq!(r.op, local.op);
         assert!(r.term.bit_eq(&local.term));
@@ -3473,14 +3567,10 @@ mod tests {
         let b = band(96, 2);
         let (want, want_stats) = packed_diag_mul_counted(&a, &b);
         for shards in [1usize, 2, 4, 8] {
-            let mut sc = ShardCoordinator::new(
-                EngineConfig {
-                    workers: 2,
-                    ..EngineConfig::default()
-                },
-                shards,
-                ShardBackend::InProc,
-            );
+            let mut sc = crate::coordinator::exec::ExecConfig::new()
+                .workers(2)
+                .shards(shards)
+                .build();
             let (c, stats) = sc.multiply(&a, &b).unwrap();
             assert!(c.bit_eq(&want), "shards={shards}");
             assert_eq!(stats, want_stats, "shards={shards}");
@@ -3509,8 +3599,7 @@ mod tests {
         // ranges empty, and the zero matrix shards to nothing at all.
         let id = PackedDiagMatrix::identity(32);
         let (want, _) = packed_diag_mul_counted(&id, &id);
-        let mut sc =
-            ShardCoordinator::new(EngineConfig::default(), 8, ShardBackend::InProc);
+        let mut sc = crate::coordinator::exec::ExecConfig::new().shards(8).build();
         let (c, _) = sc.multiply(&id, &id).unwrap();
         assert!(c.bit_eq(&want));
         let zero = PackedDiagMatrix::zeros(32);
@@ -3708,14 +3797,10 @@ mod tests {
         let (want, _) = crate::linalg::spmv_packed(&h, &psi);
         let (want_re, want_im) = crate::linalg::split_state(&want);
         for shards in [1usize, 2, 4, 8] {
-            let mut sc = ShardCoordinator::new(
-                EngineConfig {
-                    workers: 2,
-                    ..EngineConfig::default()
-                },
-                shards,
-                ShardBackend::InProc,
-            );
+            let mut sc = crate::coordinator::exec::ExecConfig::new()
+                .workers(2)
+                .shards(shards)
+                .build();
             let (re, im, mults) = sc.spmv(&h, &x_re, &x_im).unwrap();
             assert_eq!(mults, h.stored_elements(), "shards={shards}");
             assert!(

@@ -1,0 +1,297 @@
+//! **CountersV1** — the versioned counters schema every `--counters-json`
+//! emitter writes.
+//!
+//! Before this module, `kernel`, `evolve` and `serve` each hand-built
+//! their own ad-hoc JSON with top-level keys that drifted per
+//! subcommand, and the CI gates pinned themselves to whichever shape a
+//! given emitter happened to produce. CountersV1 fixes the contract:
+//!
+//! - a top-level `"schema_version": 1` field (bump on any breaking
+//!   key change);
+//! - a top-level `"mode"` naming the emitting path (`kernel`,
+//!   `per-iter`, `chain`, `state`, `state-chain`, `serve`);
+//! - optional top-level context fields (`family`, `qubits`, `iters`,
+//!   `batch`, `complex_mults`, …);
+//! - **stable stat subtrees**: `"engine"`
+//!   ([`EngineStats`](crate::runtime::engine::EngineStats)), `"shard"`
+//!   ([`ShardStats`](crate::coordinator::shard::ShardStats) plus its
+//!   per-endpoint I/O), `"serve"`
+//!   ([`ServeStats`](crate::coordinator::server::ServeStats)) — one
+//!   subtree per stats struct, field names matching the struct fields.
+//!
+//! The JSON is hand-built (the offline build has no serde); the golden
+//! files under `rust/tests/golden/` pin the exact bytes each emitter
+//! produces, and `python/tests/test_counters_schema.py` validates the
+//! same goldens against the schema from the other language.
+
+use crate::coordinator::server::ServeStats;
+use crate::coordinator::shard::ShardStats;
+use crate::coordinator::transport::EndpointIo;
+use crate::runtime::engine::EngineStats;
+
+/// Version stamped into every document; bump on any breaking key
+/// change.
+pub const COUNTERS_SCHEMA_VERSION: u64 = 1;
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One endpoint-I/O record as a single-line JSON object.
+fn endpoint_json(ep: &EndpointIo) -> String {
+    format!(
+        "{{\"endpoint\": \"{}\", \"round_trips\": {}, \"bytes_sent\": {}, \
+         \"bytes_received\": {}, \"connects\": {}, \"payload_bytes\": {}, \
+         \"dedup_bytes_avoided\": {}}}",
+        esc(&ep.endpoint),
+        ep.round_trips,
+        ep.bytes_sent,
+        ep.bytes_received,
+        ep.connects,
+        ep.payload_bytes,
+        ep.dedup_bytes_avoided,
+    )
+}
+
+fn endpoints_json(endpoints: &[EndpointIo]) -> String {
+    let items: Vec<String> = endpoints.iter().map(endpoint_json).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Builder for one CountersV1 document: context fields in insertion
+/// order, then the stat subtrees in insertion order.
+pub struct CountersV1 {
+    mode: String,
+    fields: Vec<(String, String)>,
+    sections: Vec<(&'static str, Vec<(String, String)>)>,
+}
+
+impl CountersV1 {
+    pub fn new(mode: &str) -> Self {
+        CountersV1 {
+            mode: mode.to_string(),
+            fields: Vec::new(),
+            sections: Vec::new(),
+        }
+    }
+
+    /// Add a top-level string context field.
+    pub fn str_field(mut self, key: &str, value: &str) -> Self {
+        self.fields
+            .push((key.to_string(), format!("\"{}\"", esc(value))));
+        self
+    }
+
+    /// Add a top-level unsigned context field.
+    pub fn u64_field(mut self, key: &str, value: u64) -> Self {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Attach the `"engine"` subtree
+    /// ([`EngineStats`](crate::runtime::engine::EngineStats)).
+    pub fn engine(mut self, e: &EngineStats) -> Self {
+        let kv = vec![
+            ("calls".into(), e.calls.to_string()),
+            ("bucket_n".into(), e.bucket_n.to_string()),
+            ("bucket_d".into(), e.bucket_d.to_string()),
+            ("exec_nanos".into(), e.exec_nanos.to_string()),
+            ("plan_cache_hits".into(), e.plan_cache_hits.to_string()),
+            ("operand_copies".into(), e.operand_copies.to_string()),
+            (
+                "operand_copies_avoided".into(),
+                e.operand_copies_avoided.to_string(),
+            ),
+            ("shards_used".into(), e.shards_used.to_string()),
+            ("shard_stitch_bytes".into(), e.shard_stitch_bytes.to_string()),
+            ("payload_bytes".into(), e.shard_payload_bytes.to_string()),
+            (
+                "dedup_bytes_avoided".into(),
+                e.shard_dedup_bytes_avoided.to_string(),
+            ),
+            ("endpoints".into(), endpoints_json(&e.shard_endpoints)),
+        ];
+        self.sections.push(("engine", kv));
+        self
+    }
+
+    /// Attach the `"shard"` subtree
+    /// ([`ShardStats`](crate::coordinator::shard::ShardStats) plus the
+    /// coordinator's per-endpoint I/O).
+    pub fn shard(mut self, s: &ShardStats, endpoints: &[EndpointIo]) -> Self {
+        let kv = vec![
+            ("multiplies".into(), s.multiplies.to_string()),
+            ("sharded_multiplies".into(), s.sharded_multiplies.to_string()),
+            ("shards_used".into(), s.shards_used.to_string()),
+            ("stitch_bytes".into(), s.stitch_bytes.to_string()),
+            ("shard_plans_built".into(), s.shard_plans_built.to_string()),
+            ("shard_plan_reuses".into(), s.shard_plan_reuses.to_string()),
+            ("payload_bytes".into(), s.payload_bytes.to_string()),
+            ("dedup_bytes_avoided".into(), s.dedup_bytes_avoided.to_string()),
+            ("remote_chain_jobs".into(), s.remote_chain_jobs.to_string()),
+            ("state_multiplies".into(), s.state_multiplies.to_string()),
+            ("remote_state_jobs".into(), s.remote_state_jobs.to_string()),
+            ("halo_bytes".into(), s.halo_bytes.to_string()),
+            ("endpoints".into(), endpoints_json(endpoints)),
+        ];
+        self.sections.push(("shard", kv));
+        self
+    }
+
+    /// Attach the `"serve"` subtree
+    /// ([`ServeStats`](crate::coordinator::server::ServeStats)).
+    pub fn serve(mut self, s: &ServeStats) -> Self {
+        let kv = vec![
+            ("jobs".into(), s.jobs.to_string()),
+            ("batches".into(), s.batches.to_string()),
+            (
+                "devices_instantiated".into(),
+                s.devices_instantiated.to_string(),
+            ),
+            ("shared_operand_hits".into(), s.shared_operand_hits.to_string()),
+            ("queue_depth_peak".into(), s.queue_depth_peak.to_string()),
+            ("rejected_jobs".into(), s.rejected_jobs.to_string()),
+            ("dedup_bytes_avoided".into(), s.dedup_bytes_avoided.to_string()),
+            ("total_cycles".into(), s.total_cycles.to_string()),
+            ("total_energy_j".into(), format!("{:e}", s.total_energy_j)),
+        ];
+        self.sections.push(("serve", kv));
+        self
+    }
+
+    /// Render the document: `schema_version` first, `mode` second,
+    /// context fields, then the stat subtrees. Trailing newline so the
+    /// file is POSIX-friendly.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"schema_version\": {COUNTERS_SCHEMA_VERSION},\n"
+        ));
+        out.push_str(&format!("  \"mode\": \"{}\"", esc(&self.mode)));
+        for (k, v) in &self.fields {
+            out.push_str(&format!(",\n  \"{k}\": {v}"));
+        }
+        for (name, kv) in &self.sections {
+            out.push_str(&format!(",\n  \"{name}\": {{\n"));
+            for (i, (k, v)) in kv.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&format!("    \"{k}\": {v}"));
+            }
+            out.push_str("\n  }");
+        }
+        out.push_str("\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn golden_shard_stats() -> ShardStats {
+        ShardStats {
+            multiplies: 5,
+            sharded_multiplies: 4,
+            shards_used: 8,
+            stitch_bytes: 2048,
+            shard_plans_built: 1,
+            shard_plan_reuses: 3,
+            payload_bytes: 80,
+            dedup_bytes_avoided: 800,
+            remote_chain_jobs: 0,
+            state_multiplies: 12,
+            remote_state_jobs: 6,
+            halo_bytes: 4096,
+        }
+    }
+
+    fn golden_endpoint() -> EndpointIo {
+        EndpointIo {
+            endpoint: "127.0.0.1:7401".into(),
+            round_trips: 9,
+            bytes_sent: 1111,
+            bytes_received: 2222,
+            connects: 1,
+            payload_bytes: 80,
+            dedup_bytes_avoided: 800,
+        }
+    }
+
+    #[test]
+    fn kernel_counters_match_golden() {
+        let doc = CountersV1::new("kernel")
+            .u64_field("shards", 2)
+            .str_field("backend", "tcp")
+            .shard(&golden_shard_stats(), &[golden_endpoint()])
+            .render();
+        assert_eq!(
+            doc,
+            include_str!("../tests/golden/counters_v1_kernel.json"),
+            "kernel CountersV1 drifted from the pinned golden — bump \
+             COUNTERS_SCHEMA_VERSION if the change is intentional"
+        );
+    }
+
+    #[test]
+    fn evolve_counters_match_golden() {
+        let doc = CountersV1::new("state-chain")
+            .str_field("family", "tfim")
+            .u64_field("qubits", 10)
+            .u64_field("iters", 6)
+            .u64_field("batch", 2)
+            .u64_field("complex_mults", 123456)
+            .shard(&golden_shard_stats(), &[golden_endpoint()])
+            .render();
+        assert_eq!(
+            doc,
+            include_str!("../tests/golden/counters_v1_evolve.json"),
+            "evolve CountersV1 drifted from the pinned golden — bump \
+             COUNTERS_SCHEMA_VERSION if the change is intentional"
+        );
+    }
+
+    #[test]
+    fn serve_counters_match_golden() {
+        let stats = ServeStats {
+            jobs: 32,
+            batches: 4,
+            devices_instantiated: 4,
+            shared_operand_hits: 28,
+            queue_depth_peak: 8,
+            rejected_jobs: 3,
+            dedup_bytes_avoided: 4096,
+            total_cycles: 1000,
+            total_energy_j: 1.5e-6,
+        };
+        let doc = CountersV1::new("serve")
+            .serve(&stats)
+            .shard(&golden_shard_stats(), &[golden_endpoint()])
+            .render();
+        assert_eq!(
+            doc,
+            include_str!("../tests/golden/counters_v1_serve.json"),
+            "serve CountersV1 drifted from the pinned golden — bump \
+             COUNTERS_SCHEMA_VERSION if the change is intentional"
+        );
+    }
+
+    #[test]
+    fn rendered_documents_are_structurally_sound() {
+        // Balanced braces/brackets, no trailing commas before a closer,
+        // schema_version leads — the invariants the Python-side schema
+        // test re-checks by parsing.
+        let doc = CountersV1::new("per-iter")
+            .str_field("family", "he\"is\\enberg")
+            .u64_field("qubits", 4)
+            .engine(&EngineStats::default())
+            .render();
+        assert!(doc.starts_with("{\n  \"schema_version\": 1,\n  \"mode\": \"per-iter\""));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+        assert!(!doc.contains(",]") && !doc.contains(",}"));
+        assert!(doc.contains("\\\"is\\\\enberg"), "escaping: {doc}");
+        assert!(doc.contains("\"engine\": {"));
+    }
+}

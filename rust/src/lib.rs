@@ -85,6 +85,7 @@ pub mod baselines;
 pub mod bench_harness;
 pub mod cli;
 pub mod coordinator;
+pub mod counters;
 pub mod energy;
 pub mod format;
 pub mod ham;

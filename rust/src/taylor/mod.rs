@@ -597,8 +597,7 @@ mod tests {
 
     #[test]
     fn sharded_chain_matches_unsharded_and_reuses_shard_plans() {
-        use crate::coordinator::shard::{ShardBackend, ShardCoordinator};
-        use crate::linalg::EngineConfig;
+        use crate::coordinator::exec::ExecConfig;
         let n = 12;
         let mut h = DiagMatrix::zeros(n);
         for d in -2i64..=2 {
@@ -607,8 +606,7 @@ mod tests {
         }
         let single = expm_diag(&h, 0.4, 8);
         assert_eq!(single.shard.sharded_multiplies, 0);
-        let mut sc =
-            ShardCoordinator::new(EngineConfig::default(), 3, ShardBackend::InProc);
+        let mut sc = ExecConfig::new().shards(3).build();
         let sharded = expm_diag_sharded(&h, 0.4, 8, &mut sc).unwrap();
         // Stitched chain reproduces the unsharded operator exactly
         // (every intermediate term was bitwise identical).
@@ -699,8 +697,7 @@ mod tests {
 
     #[test]
     fn sharded_state_chain_matches_unsharded_bitwise() {
-        use crate::coordinator::shard::{ShardBackend, ShardCoordinator};
-        use crate::linalg::EngineConfig;
+        use crate::coordinator::exec::ExecConfig;
         let h = crate::ham::tfim::tfim(5, 1.0, 0.7).matrix;
         let t = 0.05;
         let n = h.dim();
@@ -710,8 +707,7 @@ mod tests {
         let iters = iters_for(&h, t, 1e-8);
         let single = apply_expm(&h, t, &psi0, 1e-8);
         for shards in [2usize, 3, 5] {
-            let mut sc =
-                ShardCoordinator::new(EngineConfig::default(), shards, ShardBackend::InProc);
+            let mut sc = ExecConfig::new().shards(shards).build();
             let sharded = apply_expm_sharded(&h, t, iters, &psi0, &mut sc).unwrap();
             for (g, w) in sharded.psi.iter().zip(&single.psi) {
                 assert_eq!(g.re.to_bits(), w.re.to_bits(), "shards={shards}");

@@ -7,13 +7,15 @@
 //! in-flight-cap test plus a real-binary SIGTERM test pin the
 //! admission/drain state machine.
 
+use diamond::coordinator::exec::ExecConfig;
 use diamond::coordinator::serve::{ServeClient, ServeDaemonConfig, ServeServer};
 use diamond::coordinator::shard::{
-    decode_busy, decode_result, encode_plane_put, encode_submit, plane_fingerprint, ServeResult,
-    ShardCoordinator, SubmitBody,
+    decode_busy, decode_result, decode_stats_resp, encode_plane_put, encode_stats_req,
+    encode_submit, plane_fingerprint, ServeResult, ShardBackend, ShardCoordinator, SubmitBody,
 };
 use diamond::coordinator::transport::{
-    check_hello, encode_hello, read_frame_limited, write_frame, HELLO_LEN, MAX_FRAME_BYTES,
+    check_hello, encode_hello, read_frame_limited, write_frame, ShardServer, HELLO_LEN,
+    MAX_FRAME_BYTES,
 };
 use diamond::format::PackedDiagMatrix;
 use diamond::ham::tfim::tfim;
@@ -21,7 +23,7 @@ use diamond::taylor::{ChainDriver, StateDriver, StateOutcome, TaylorStep};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const QUBITS: usize = 4;
 const T: f64 = 0.37;
@@ -260,7 +262,12 @@ fn inflight_cap_busy_rejection_is_deterministic_and_recoverable() {
         .expect("busy frame");
     let (id, retry_after_ms) = decode_busy(&frame).expect("second submit must be Busy-refused");
     assert_eq!(id, 2);
-    assert_eq!(retry_after_ms, 25, "busy carries the configured retry hint");
+    // The hint reflects this tenant's own backlog (job 1 still queued
+    // inside the 300 ms batch window): base interval × (backlog + 1).
+    assert_eq!(
+        retry_after_ms, 50,
+        "busy retry hint must scale with the tenant's own backlog"
+    );
 
     let frame = read_frame_limited(&mut stream, MAX_FRAME_BYTES)
         .unwrap()
@@ -289,6 +296,226 @@ fn inflight_cap_busy_rejection_is_deterministic_and_recoverable() {
     let stats = server.stop();
     assert_eq!(stats.jobs, 2);
     assert_eq!(stats.rejected_jobs, 1);
+}
+
+#[test]
+fn fleet_backed_tcp_serve_is_bitwise_identical_and_logs_round_trips() {
+    // The tentpole wiring end-to-end: a serve daemon whose scheduler
+    // engine is a 2-shard TCP fleet fronting two real `shard-serve`
+    // daemons. Every served job kind must match serial local execution
+    // bitwise, and the fleet must actually have been used (nonzero
+    // per-endpoint round-trips published after drain).
+    let mut s1 = ShardServer::spawn("127.0.0.1:0").expect("shard daemon 1");
+    let mut s2 = ShardServer::spawn("127.0.0.1:0").expect("shard daemon 2");
+    let mut server = ServeServer::spawn_with(
+        "127.0.0.1:0",
+        ServeDaemonConfig {
+            exec: ExecConfig::new().shards(2).backend(ShardBackend::Tcp {
+                endpoints: vec![s1.endpoint(), s2.endpoint()],
+            }),
+            batch_window: Duration::from_millis(20),
+            ..ServeDaemonConfig::default()
+        },
+    )
+    .expect("fleet-backed daemon");
+
+    let h = Arc::new(shared_h());
+    let want = local_want(0, &h);
+    let mut cl = ServeClient::connect(&server.endpoint()).expect("tenant connect");
+    let a = tenant_a(0);
+    let (got, _) = cl.spmspm(&a, &h).expect("served spmspm over the fleet");
+    assert!(
+        got.bit_eq(&want.spmspm),
+        "fleet-served product differs from serial local"
+    );
+    let (term, sum, steps) = cl.chain(&h, T, ITERS).expect("served chain over the fleet");
+    assert!(term.bit_eq(&want.chain_term), "fleet chain term");
+    assert!(sum.bit_eq(&want.chain_sum), "fleet chain sum");
+    assert_taylor_steps_eq(&steps, &want.chain_steps, "fleet chain");
+    let (psi_re, psi_im) = tenant_psi(0, h.dim());
+    let (re, im, ssteps) = cl
+        .state_chain(&h, T, ITERS, &psi_re, &psi_im)
+        .expect("served state chain over the fleet");
+    assert_eq!(bits(&re), bits(&want.state.psi_re), "fleet ψ re");
+    assert_eq!(bits(&im), bits(&want.state.psi_im), "fleet ψ im");
+    assert_eq!(ssteps, want.state.steps, "fleet state steps");
+
+    let stats = server.stop();
+    assert_eq!(stats.jobs, 3);
+    let (shard, endpoints) = server.fleet();
+    assert!(
+        shard.sharded_multiplies >= 1,
+        "served multiplies must have fanned across the fleet: {shard:?}"
+    );
+    assert_eq!(endpoints.len(), 2, "both endpoints must be reported");
+    for io in &endpoints {
+        assert!(
+            io.round_trips > 0,
+            "every shard endpoint must have served round-trips: {io:?}"
+        );
+    }
+    s1.stop();
+    s2.stop();
+}
+
+#[test]
+fn greedy_tenant_is_throttled_while_polite_tenants_run_unimpeded() {
+    // Fairness soak: one greedy tenant floods pipelined bursts far past
+    // its fair share while two polite tenants submit sequentially. The
+    // DRR/fair-share admission must (a) reject the greedy overflow with
+    // backlog-scaled retry hints, (b) never reject a polite tenant,
+    // (c) keep polite latency bounded, and (d) keep every per-tenant
+    // ledger in exact agreement with what that client observed.
+    const POLITE: usize = 2;
+    const POLITE_JOBS: usize = 8;
+    const BURSTS: usize = 4;
+    const BURST_LEN: usize = 16;
+    const QUEUE_CAP: usize = 12;
+    const RETRY_MS: u64 = 5;
+
+    let mut server = ServeServer::spawn_with(
+        "127.0.0.1:0",
+        ServeDaemonConfig {
+            queue_cap: QUEUE_CAP,
+            inflight_cap: 64,
+            batch_window: Duration::from_millis(30),
+            retry_after_ms: RETRY_MS,
+            ..ServeDaemonConfig::default()
+        },
+    )
+    .expect("loopback daemon");
+    let h = Arc::new(shared_h());
+    let endpoint = server.endpoint();
+
+    // Connect every tenant BEFORE anyone submits so the fair-share
+    // denominator (connected tenants) is stable for the whole soak:
+    // share = queue_cap / 3 = 4 queued jobs per tenant.
+    let mut greedy = TcpStream::connect(server.addr()).expect("greedy connect");
+    let mut hello = [0u8; HELLO_LEN];
+    greedy.read_exact(&mut hello).unwrap();
+    check_hello(&hello).unwrap();
+    greedy.write_all(&encode_hello()).unwrap();
+    let fp = plane_fingerprint(&h);
+    write_frame(&mut greedy, &[&encode_plane_put(fp, &h)]).unwrap();
+
+    let mut polite_clients = Vec::new();
+    for c in 0..POLITE {
+        let mut cl = ServeClient::connect(&endpoint).expect("polite connect");
+        // Warmup ships each polite tenant's planes so soak-phase jobs
+        // are pure submits (one admitted+served job on the ledger).
+        let a = tenant_a(c + 1);
+        let (_got, _) = cl.spmspm(&a, &h).expect("polite warmup");
+        polite_clients.push(cl);
+    }
+
+    let barrier = Arc::new(Barrier::new(POLITE + 1));
+    let mut polite_handles = Vec::new();
+    for (c, mut cl) in polite_clients.into_iter().enumerate() {
+        let (h, barrier) = (Arc::clone(&h), Arc::clone(&barrier));
+        polite_handles.push(std::thread::spawn(
+            move || -> (ServeClient, Duration) {
+                let a = tenant_a(c + 1);
+                let mut sc = ShardCoordinator::single();
+                let (want, _) = sc.multiply(&a, &h).expect("local multiply");
+                barrier.wait();
+                let mut worst = Duration::ZERO;
+                for _ in 0..POLITE_JOBS {
+                    let t0 = Instant::now();
+                    let (got, _) = cl.spmspm(&a, &h).expect("polite job");
+                    worst = worst.max(t0.elapsed());
+                    assert!(got.bit_eq(&want), "polite tenant {c}: bitwise identity");
+                }
+                (cl, worst)
+            },
+        ));
+    }
+
+    // Greedy floods: BURST_LEN pipelined submits per burst, then reads
+    // exactly one reply (Busy or Result) per submit before the next
+    // burst. Every submit therefore gets exactly one answer.
+    barrier.wait();
+    let mut sc = ShardCoordinator::single();
+    let (greedy_want, _) = sc.multiply(&h, &h).expect("local multiply");
+    let (mut results, mut busys) = (0u64, 0u64);
+    let mut job_id = 0u64;
+    for _ in 0..BURSTS {
+        for _ in 0..BURST_LEN {
+            job_id += 1;
+            let body = encode_submit(
+                job_id,
+                &SubmitBody::Spmspm {
+                    n: h.dim(),
+                    fp_a: fp,
+                    fp_b: fp,
+                },
+            );
+            write_frame(&mut greedy, &[&body]).unwrap();
+        }
+        for _ in 0..BURST_LEN {
+            let frame = read_frame_limited(&mut greedy, MAX_FRAME_BYTES)
+                .unwrap()
+                .expect("greedy reply");
+            if let Ok((_id, hint)) = decode_busy(&frame) {
+                busys += 1;
+                assert!(
+                    hint > RETRY_MS,
+                    "greedy retry hint must reflect its own backlog, \
+                     not the base interval: {hint}"
+                );
+            } else {
+                let (_id, res) = decode_result(&frame).expect("result frame");
+                match res {
+                    ServeResult::Spmspm { c, .. } => {
+                        assert!(c.bit_eq(&greedy_want), "greedy bitwise identity")
+                    }
+                    other => panic!("expected a product, got {other:?}"),
+                }
+                results += 1;
+            }
+        }
+    }
+    assert!(
+        busys > 0,
+        "a {BURST_LEN}-deep burst against share {} must be rejected past its share",
+        QUEUE_CAP / (POLITE + 1)
+    );
+    assert!(results > 0, "the greedy tenant's fair share still executes");
+
+    // Greedy ledger reconciles exactly with what this client counted.
+    write_frame(&mut greedy, &[&encode_stats_req()]).unwrap();
+    let frame = read_frame_limited(&mut greedy, MAX_FRAME_BYTES)
+        .unwrap()
+        .expect("stats frame");
+    let (_stats, _resident, greedy_ledger) = decode_stats_resp(&frame).unwrap();
+    assert_eq!(greedy_ledger.admitted, results, "greedy admitted == results seen");
+    assert_eq!(greedy_ledger.served, results, "greedy served == results seen");
+    assert_eq!(greedy_ledger.rejected, busys, "greedy rejected == busys seen");
+
+    for hnd in polite_handles {
+        let (mut cl, worst) = hnd.join().expect("polite thread");
+        assert_eq!(cl.busy_retries, 0, "polite tenants must never be rejected");
+        assert!(
+            worst < Duration::from_secs(5),
+            "polite p100 wait must stay bounded under the flood: {worst:?}"
+        );
+        // Polite ledger: warmup + soak jobs, all admitted, all served,
+        // zero rejections — exactly what the client observed.
+        let (_stats, _resident, ledger) = cl.stats().expect("polite stats");
+        assert_eq!(ledger.admitted, (POLITE_JOBS + 1) as u64);
+        assert_eq!(ledger.served, (POLITE_JOBS + 1) as u64);
+        assert_eq!(ledger.rejected, 0);
+    }
+
+    let stats = server.stop();
+    assert_eq!(
+        stats.jobs,
+        results + (POLITE * (POLITE_JOBS + 1)) as u64,
+        "daemon-wide job count must equal the sum of per-tenant results"
+    );
+    assert_eq!(
+        stats.rejected_jobs, busys,
+        "daemon-wide rejections must all belong to the greedy tenant"
+    );
 }
 
 #[test]
@@ -335,9 +562,11 @@ fn real_serve_binary_drains_cleanly_on_sigterm() {
     let mut sc = ShardCoordinator::single();
     let (want, _) = sc.multiply(&h, &h).unwrap();
     assert!(got.bit_eq(&want));
-    let (stats, resident) = cl.stats().expect("stats over the wire");
+    let (stats, resident, tenant) = cl.stats().expect("stats over the wire");
     assert_eq!(stats.jobs, 1);
     assert_eq!(resident, 1);
+    assert_eq!(tenant.admitted, 1);
+    assert_eq!(tenant.served, 1);
 
     // Clean drain on SIGTERM: exit 0 and the drained line.
     let term = Command::new("kill")

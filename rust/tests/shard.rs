@@ -5,10 +5,11 @@
 //! empty shards), and fail fast — with the worker's stderr surfaced —
 //! when a process worker cannot answer.
 
-use diamond::coordinator::shard::{ProcessShardExecutor, ShardBackend, ShardCoordinator};
+use diamond::coordinator::exec::ExecConfig;
+use diamond::coordinator::shard::ProcessShardExecutor;
 use diamond::format::DiagMatrix;
 use diamond::linalg::engine::{shard_plan, tile_plan};
-use diamond::linalg::{packed_diag_mul_counted, plan_diag_mul, EngineConfig, TileMode};
+use diamond::linalg::{packed_diag_mul_counted, plan_diag_mul, TileMode};
 use diamond::num::Complex;
 use diamond::testutil::{
     prop_check, random_band_matrix as random_band, random_exp_offset_matrix,
@@ -40,15 +41,11 @@ fn inproc_sharded_is_bitwise_identical_across_shard_counts_1_to_8() {
         let bp = b.freeze();
         let (single, single_stats) = packed_diag_mul_counted(&ap, &bp);
         for shards in 1..=8usize {
-            let mut sc = ShardCoordinator::new(
-                EngineConfig {
-                    tile: TileMode::Fixed(rng.gen_range(1, 256)),
-                    workers: rng.gen_range(1, 5),
-                    ..EngineConfig::default()
-                },
-                shards,
-                ShardBackend::InProc,
-            );
+            let mut sc = ExecConfig::new()
+                .tile(TileMode::Fixed(rng.gen_range(1, 256)))
+                .workers(rng.gen_range(1, 5))
+                .shards(shards)
+                .build();
             let (c, stats) = sc.multiply(&ap, &bp).expect("inproc cannot fail");
             if !c.bit_eq(&single) {
                 return Err(format!("n={n} shards={shards}: output differs bitwise"));
@@ -67,15 +64,11 @@ fn uneven_ranges_and_empty_shards() {
     let id = DiagMatrix::identity(40).freeze();
     let (single, _) = packed_diag_mul_counted(&id, &id);
     for shards in [1usize, 2, 7, 8] {
-        let mut sc = ShardCoordinator::new(
-            EngineConfig {
-                tile: TileMode::Fixed(1 << 20), // 1 task per diagonal → 1 task total
-                workers: 1,
-                ..EngineConfig::default()
-            },
-            shards,
-            ShardBackend::InProc,
-        );
+        let mut sc = ExecConfig::new()
+            .tile(TileMode::Fixed(1 << 20)) // 1 task per diagonal → 1 task total
+            .workers(1)
+            .shards(shards)
+            .build();
         let (c, _) = sc.multiply(&id, &id).unwrap();
         assert!(c.bit_eq(&single), "shards={shards}");
     }
@@ -89,7 +82,7 @@ fn uneven_ranges_and_empty_shards() {
     assert_eq!(sp.ranges.last().unwrap().task_hi, 1);
     // All-zero operands: every range empty, product empty.
     let zero = DiagMatrix::zeros(16).freeze();
-    let mut sc = ShardCoordinator::new(EngineConfig::default(), 4, ShardBackend::InProc);
+    let mut sc = ExecConfig::new().shards(4).build();
     let (z, zs) = sc.multiply(&zero, &id).unwrap();
     assert_eq!(z.nnzd(), 0);
     assert_eq!(zs.mults, 0);
@@ -113,11 +106,9 @@ fn process_backend_is_bitwise_identical_to_single_engine() {
         let bp = b.freeze();
         let (single, single_stats) = packed_diag_mul_counted(&ap, &bp);
         for shards in [2usize, 4] {
-            let mut sc = ShardCoordinator::with_executor(
-                EngineConfig::default(),
-                shards,
-                ProcessShardExecutor::new(worker_exe()),
-            );
+            let mut sc = ExecConfig::new()
+                .shards(shards)
+                .build_with_process_executor(ProcessShardExecutor::new(worker_exe()));
             let (c, stats) = sc
                 .multiply(&ap, &bp)
                 .expect("process backend should succeed");
@@ -140,14 +131,10 @@ fn process_backend_with_empty_shards_skips_spawns() {
     // empty slices).
     let id = DiagMatrix::identity(64).freeze();
     let (single, _) = packed_diag_mul_counted(&id, &id);
-    let mut sc = ShardCoordinator::with_executor(
-        EngineConfig {
-            tile: TileMode::Fixed(1 << 20),
-            ..EngineConfig::default()
-        },
-        4,
-        ProcessShardExecutor::new(worker_exe()),
-    );
+    let mut sc = ExecConfig::new()
+        .tile(TileMode::Fixed(1 << 20))
+        .shards(4)
+        .build_with_process_executor(ProcessShardExecutor::new(worker_exe()));
     let (c, _) = sc.multiply(&id, &id).unwrap();
     assert!(c.bit_eq(&single));
 }
@@ -160,7 +147,7 @@ fn process_worker_failure_fails_fast_with_stderr() {
     let a = random_exp_offset_matrix(&mut XorShift64::new(7), 128, 5).freeze();
     let executor = ProcessShardExecutor::new(worker_exe())
         .with_args(vec!["definitely-not-a-subcommand".to_string()]);
-    let mut sc = ShardCoordinator::with_executor(EngineConfig::default(), 2, executor);
+    let mut sc = ExecConfig::new().shards(2).build_with_process_executor(executor);
     let t0 = Instant::now();
     let err = sc.multiply(&a, &a).expect_err("dead worker must error");
     let elapsed = t0.elapsed();
@@ -184,7 +171,7 @@ fn process_worker_nonsense_response_is_reported() {
     let a = random_exp_offset_matrix(&mut XorShift64::new(9), 96, 4).freeze();
     let executor =
         ProcessShardExecutor::new(worker_exe()).with_args(vec!["help".to_string()]);
-    let mut sc = ShardCoordinator::with_executor(EngineConfig::default(), 2, executor);
+    let mut sc = ExecConfig::new().shards(2).build_with_process_executor(executor);
     let err = sc.multiply(&a, &a).expect_err("prose is not a response");
     let msg = format!("{err:#}");
     assert!(msg.contains("shard worker"), "unhelpful error: {msg}");
@@ -195,11 +182,9 @@ fn process_backend_reuses_shard_plans_across_a_chain() {
     // Taylor-style replay: same offset structure twice → the plan cache
     // and the shard-plan memo both hit, and results stay identical.
     let a = random_exp_offset_matrix(&mut XorShift64::new(21), 256, 6).freeze();
-    let mut sc = ShardCoordinator::with_executor(
-        EngineConfig::default(),
-        3,
-        ProcessShardExecutor::new(worker_exe()),
-    );
+    let mut sc = ExecConfig::new()
+        .shards(3)
+        .build_with_process_executor(ProcessShardExecutor::new(worker_exe()));
     let (c1, _) = sc.multiply(&a, &a).unwrap();
     let (c2, _) = sc.multiply(&a, &a).unwrap();
     assert!(c1.bit_eq(&c2));
@@ -226,8 +211,7 @@ fn chain_final_term_is_bitwise_identical_across_local_inproc_process() {
         let t = 0.1 + rng.gen_f64() * 0.4;
         let iters = rng.gen_range(3, 7);
         let local = diamond::taylor::expm_diag(&h, t, iters);
-        let mut inproc =
-            ShardCoordinator::new(EngineConfig::default(), 3, ShardBackend::InProc);
+        let mut inproc = ExecConfig::new().shards(3).build();
         let r = inproc.run_chain(&h, t, iters).expect("inproc chain");
         if !r.term.bit_eq(&local.term) {
             return Err(format!("n={n}: inproc final term differs bitwise"));
@@ -235,11 +219,9 @@ fn chain_final_term_is_bitwise_identical_across_local_inproc_process() {
         if r.op != local.op {
             return Err(format!("n={n}: inproc summed operator differs"));
         }
-        let mut proc = ShardCoordinator::with_executor(
-            EngineConfig::default(),
-            2,
-            ProcessShardExecutor::new(worker_exe()),
-        );
+        let mut proc = ExecConfig::new()
+            .shards(2)
+            .build_with_process_executor(ProcessShardExecutor::new(worker_exe()));
         let r = proc.run_chain(&h, t, iters).expect("process chain");
         if !r.term.bit_eq(&local.term) {
             return Err(format!("n={n}: process final term differs bitwise"));
@@ -261,11 +243,9 @@ fn sharded_taylor_chain_on_process_backend_matches_unsharded() {
         h.set_diag(d, vec![Complex::new(0.8, 0.1 * d as f64); len]);
     }
     let single = diamond::taylor::expm_diag(&h, 0.3, 5);
-    let mut sc = ShardCoordinator::with_executor(
-        EngineConfig::default(),
-        2,
-        ProcessShardExecutor::new(worker_exe()),
-    );
+    let mut sc = ExecConfig::new()
+        .shards(2)
+        .build_with_process_executor(ProcessShardExecutor::new(worker_exe()));
     let sharded = diamond::taylor::expm_diag_sharded(&h, 0.3, 5, &mut sc).unwrap();
     assert_eq!(sharded.op, single.op);
     assert_eq!(sharded.shard.sharded_multiplies, 5);

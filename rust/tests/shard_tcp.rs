@@ -5,7 +5,8 @@
 //! in both directions, and the real `diamond shard-serve` binary
 //! serving a Taylor chain with warm caches.
 
-use diamond::coordinator::shard::{decode_resp, ShardBackend, ShardCoordinator};
+use diamond::coordinator::exec::ExecConfig;
+use diamond::coordinator::shard::{decode_resp, ShardBackend};
 use diamond::coordinator::transport::{
     self, encode_hello, read_frame, ShardServer, TcpShardExecutor, HELLO_LEN, WIRE_VERSION,
 };
@@ -55,9 +56,10 @@ fn tcp_is_bitwise_identical_to_inproc_and_single_for_s1_to_4() {
                 workers: rng.gen_range(1, 4),
                 ..EngineConfig::default()
             };
-            let mut inproc = ShardCoordinator::new(cfg, shards, ShardBackend::InProc);
+            let exec = ExecConfig::new().engine(cfg).shards(shards);
+            let mut inproc = exec.build();
             let (c_in, _) = inproc.multiply(&ap, &bp).expect("inproc cannot fail");
-            let mut tcp = ShardCoordinator::new(cfg, shards, tcp_backend(&servers));
+            let mut tcp = exec.backend(tcp_backend(&servers)).build();
             let (c_tcp, stats) = tcp
                 .multiply(&ap, &bp)
                 .map_err(|e| format!("n={n} shards={shards}: tcp failed: {e:#}"))?;
@@ -93,7 +95,10 @@ fn tcp_taylor_chain_matches_unsharded_and_reuses_caches() {
     }
     let iters = 6;
     let single = diamond::taylor::expm_diag(&h, 0.3, iters);
-    let mut sc = ShardCoordinator::new(EngineConfig::default(), 2, tcp_backend(&servers));
+    let mut sc = ExecConfig::new()
+        .shards(2)
+        .backend(tcp_backend(&servers))
+        .build();
     let sharded = diamond::taylor::expm_diag_sharded(&h, 0.3, iters, &mut sc).unwrap();
     assert_eq!(sharded.op, single.op);
     assert_eq!(sharded.shard.sharded_multiplies, iters as u64);
@@ -139,13 +144,11 @@ fn tcp_chain_job_is_bitwise_identical_and_ships_h_once() {
     }
     let iters = 6;
     let local = diamond::taylor::expm_diag(&h, 0.3, iters);
-    let mut sc = ShardCoordinator::new(
-        EngineConfig::default(),
-        1,
-        ShardBackend::Tcp {
+    let mut sc = ExecConfig::new()
+        .backend(ShardBackend::Tcp {
             endpoints: vec![server.endpoint()],
-        },
-    );
+        })
+        .build();
     let r1 = sc.run_chain(&h, 0.3, iters).expect("remote chain");
     assert!(
         r1.term.bit_eq(&local.term),
@@ -203,8 +206,10 @@ fn chain_term_bitwise_across_local_tcp_per_iter_and_chain_job() {
         let t = 0.1 + rng.gen_f64() * 0.3;
         let iters = rng.gen_range(3, 6);
         let local = diamond::taylor::expm_diag(&h, t, iters);
-        let mut per_iter =
-            ShardCoordinator::new(EngineConfig::default(), 2, tcp_backend(&servers));
+        let mut per_iter = ExecConfig::new()
+            .shards(2)
+            .backend(tcp_backend(&servers))
+            .build();
         let r = diamond::taylor::expm_diag_sharded(&h, t, iters, &mut per_iter)
             .map_err(|e| format!("per-iter tcp chain failed: {e:#}"))?;
         if !r.term.bit_eq(&local.term) {
@@ -213,8 +218,7 @@ fn chain_term_bitwise_across_local_tcp_per_iter_and_chain_job() {
         if r.op != local.op {
             return Err(format!("n={n}: per-iter tcp sum differs"));
         }
-        let mut chain =
-            ShardCoordinator::new(EngineConfig::default(), 1, tcp_backend(&servers));
+        let mut chain = ExecConfig::new().backend(tcp_backend(&servers)).build();
         let r = chain
             .run_chain(&h, t, iters)
             .map_err(|e| format!("ChainJob failed: {e:#}"))?;
@@ -238,13 +242,12 @@ fn dead_endpoint_fails_fast_with_named_endpoint() {
         l.local_addr().unwrap().to_string()
     };
     let a = random_exp_offset_matrix(&mut XorShift64::new(11), 128, 5).freeze();
-    let mut sc = ShardCoordinator::new(
-        EngineConfig::default(),
-        2,
-        ShardBackend::Tcp {
+    let mut sc = ExecConfig::new()
+        .shards(2)
+        .backend(ShardBackend::Tcp {
             endpoints: vec![dead.clone()],
-        },
-    );
+        })
+        .build();
     let t0 = Instant::now();
     let err = sc.multiply(&a, &a).expect_err("dead endpoint must error");
     let elapsed = t0.elapsed();
@@ -272,7 +275,7 @@ fn unresponsive_endpoint_hits_the_response_deadline() {
     });
     let mut ex = TcpShardExecutor::new(vec![addr]).unwrap();
     ex.timeout = Duration::from_secs(2);
-    let mut sc = ShardCoordinator::with_tcp_executor(EngineConfig::default(), 2, ex);
+    let mut sc = ExecConfig::new().shards(2).build_with_tcp_executor(ex);
     let a = random_exp_offset_matrix(&mut XorShift64::new(13), 128, 5).freeze();
     let t0 = Instant::now();
     let err = sc.multiply(&a, &a).expect_err("silent endpoint must time out");
@@ -303,13 +306,12 @@ fn version_skew_matrix_server_side_skew_is_rejected_by_the_client() {
                 let _ = c.read(&mut sink);
             }
         });
-        let mut sc = ShardCoordinator::new(
-            EngineConfig::default(),
-            2,
-            ShardBackend::Tcp {
+        let mut sc = ExecConfig::new()
+            .shards(2)
+            .backend(ShardBackend::Tcp {
                 endpoints: vec![addr],
-            },
-        );
+            })
+            .build();
         let a = random_exp_offset_matrix(&mut XorShift64::new(17), 96, 4).freeze();
         let t0 = Instant::now();
         let err = sc
@@ -399,13 +401,12 @@ fn real_shard_serve_binary_answers_a_chain_of_jobs() {
 
     let a = random_exp_offset_matrix(&mut XorShift64::new(23), 256, 6).freeze();
     let (single, _) = packed_diag_mul_counted(&a, &a);
-    let mut sc = ShardCoordinator::new(
-        EngineConfig::default(),
-        2,
-        ShardBackend::Tcp {
+    let mut sc = ExecConfig::new()
+        .shards(2)
+        .backend(ShardBackend::Tcp {
             endpoints: vec![addr],
-        },
-    );
+        })
+        .build();
     let (c1, _) = sc.multiply(&a, &a).expect("first multiply over the daemon");
     let (c2, _) = sc.multiply(&a, &a).expect("second multiply over the daemon");
     assert!(c1.bit_eq(&single));
@@ -429,16 +430,13 @@ fn tcp_with_empty_shards_touches_only_working_endpoints() {
     let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
     let id = DiagMatrix::identity(64).freeze();
     let (single, _) = packed_diag_mul_counted(&id, &id);
-    let mut sc = ShardCoordinator::new(
-        EngineConfig {
-            tile: TileMode::Fixed(1 << 20),
-            ..EngineConfig::default()
-        },
-        4,
-        ShardBackend::Tcp {
+    let mut sc = ExecConfig::new()
+        .tile(TileMode::Fixed(1 << 20))
+        .shards(4)
+        .backend(ShardBackend::Tcp {
             endpoints: vec![server.endpoint(), dead],
-        },
-    );
+        })
+        .build();
     let (c, _) = sc.multiply(&id, &id).expect("empty shards must not dial endpoints");
     assert!(c.bit_eq(&single));
     let io = sc.endpoint_io();

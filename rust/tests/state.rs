@@ -6,11 +6,11 @@
 //! workers and TCP endpoints — including the server-side state chain.
 
 use diamond::bench_harness::state::initial_states;
+use diamond::coordinator::exec::ExecConfig;
 use diamond::coordinator::shard::{ProcessShardExecutor, ShardBackend, ShardCoordinator};
 use diamond::coordinator::transport::ShardServer;
 use diamond::format::convert::diag_to_dense;
 use diamond::ham::{build, Family};
-use diamond::linalg::EngineConfig;
 use diamond::num::Complex;
 use diamond::taylor::{apply_expm, apply_expm_batch, apply_expm_sharded, expm_dense_oracle};
 
@@ -128,8 +128,7 @@ fn state_sharding_is_bitwise_identical_across_all_four_paths() {
             .expect("single-engine in-process execution is infallible");
 
         for shards in 2..=4 {
-            let mut sc =
-                ShardCoordinator::new(EngineConfig::default(), shards, ShardBackend::InProc);
+            let mut sc = ExecConfig::new().shards(shards).build();
             let r = apply_expm_sharded(h, t, iters, &psi, &mut sc).expect("inproc shards");
             assert!(
                 bitwise_eq(&r.psi, &local.psi),
@@ -141,11 +140,9 @@ fn state_sharding_is_bitwise_identical_across_all_four_paths() {
             assert!(sc.stats().state_multiplies > 0);
         }
 
-        let mut proc = ShardCoordinator::with_executor(
-            EngineConfig::default(),
-            3,
-            ProcessShardExecutor::new(worker_exe()),
-        );
+        let mut proc = ExecConfig::new()
+            .shards(3)
+            .build_with_process_executor(ProcessShardExecutor::new(worker_exe()));
         let r = apply_expm_sharded(h, t, iters, &psi, &mut proc).expect("process shards");
         assert!(
             bitwise_eq(&r.psi, &local.psi),
@@ -155,7 +152,10 @@ fn state_sharding_is_bitwise_identical_across_all_four_paths() {
         assert!(proc.stats().remote_state_jobs > 0, "no remote state jobs ran");
         assert!(proc.stats().halo_bytes > 0, "halo traffic not accounted");
 
-        let mut tcp = ShardCoordinator::new(EngineConfig::default(), 3, tcp_backend.clone());
+        let mut tcp = ExecConfig::new()
+            .shards(3)
+            .backend(tcp_backend.clone())
+            .build();
         let r = apply_expm_sharded(h, t, iters, &psi, &mut tcp).expect("tcp shards");
         assert!(
             bitwise_eq(&r.psi, &local.psi),
@@ -166,7 +166,7 @@ fn state_sharding_is_bitwise_identical_across_all_four_paths() {
 
         // Server-side chain: whole ψ-evolution on the endpoint, one
         // round trip per call — still bitwise identical.
-        let mut chain = ShardCoordinator::new(EngineConfig::default(), 1, tcp_backend.clone());
+        let mut chain = ExecConfig::new().backend(tcp_backend.clone()).build();
         let r = chain.run_state_chain(h, t, iters, &psi).expect("tcp state chain");
         assert!(
             bitwise_eq(&r.psi, &local.psi),
