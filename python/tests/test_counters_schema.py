@@ -75,7 +75,26 @@ SERVE_KEYS = [
     "total_energy_j",
 ]
 
-SECTION_KEYS = {"shard": SHARD_KEYS, "engine": ENGINE_KEYS, "serve": SERVE_KEYS}
+CHAIN_FLEET_KEYS = [
+    "sharded_chains",
+    "sharded_state_chains",
+    "fleet_shards",
+    "rounds",
+    "halo_bytes",
+    "collect_bytes",
+    "resend_model_bytes",
+    "compressed_frames",
+    "raw_frame_bytes",
+    "wire_frame_bytes",
+    "compression_ratio",
+]
+
+SECTION_KEYS = {
+    "shard": SHARD_KEYS,
+    "engine": ENGINE_KEYS,
+    "serve": SERVE_KEYS,
+    "chain_fleet": CHAIN_FLEET_KEYS,
+}
 
 MODES = {"kernel", "per-iter", "chain", "state", "state-chain", "serve"}
 
@@ -91,8 +110,12 @@ def _check_counters(keys, section, name):
                 assert isinstance(ep["endpoint"], str)
                 for k in ENDPOINT_KEYS[1:]:
                     assert isinstance(ep[k], int) and ep[k] >= 0
-        elif key == "total_energy_j":
-            assert isinstance(value, float), f"{name}.total_energy_j must be a float"
+        elif key in ("total_energy_j", "compression_ratio"):
+            assert isinstance(value, float), f"{name}.{key} must be a float"
+            if key == "compression_ratio":
+                # raw/wire, degrading to 1.0 when nothing was compressed
+                # — never zero, never negative.
+                assert value >= 1.0 or section["wire_frame_bytes"] > section["raw_frame_bytes"]
         else:
             assert isinstance(value, int) and value >= 0, f"{name}.{key} must be a u64"
     assert list(section.keys()) == keys, f"{name}: key order/extra keys drifted"
@@ -119,6 +142,22 @@ def test_golden_is_schema_valid_counters_v1(path):
     for k in keys[2:]:
         if k not in SECTION_KEYS:
             assert isinstance(doc[k], (str, int)), f"context field {k} must be scalar"
+
+
+def test_chain_fleet_golden_carries_fleet_subtree():
+    # The wire-v6 sharded-chain counters: CI's chain-fleet-smoke gates
+    # key into ["chain_fleet"] for the halo-vs-resend ratio and the CMP1
+    # compression split, so this subtree's key order is load-bearing.
+    doc = json.loads((GOLDEN_DIR / "counters_v1_chain_fleet.json").read_text())
+    assert list(doc.keys()) == ["schema_version", "mode", "iters", "shard", "chain_fleet"]
+    f = doc["chain_fleet"]
+    assert list(f.keys()) == CHAIN_FLEET_KEYS
+    assert f["sharded_chains"] > 0
+    assert f["halo_bytes"] < f["resend_model_bytes"]
+    # The golden pins the ratio float rendering: 20000 raw over 5000
+    # wire bytes is exactly 4.0, serialized in Rust's {:e} form.
+    assert f["compression_ratio"] == 4.0
+    assert (GOLDEN_DIR / "counters_v1_chain_fleet.json").read_text().count('"compression_ratio": 4e0') == 1
 
 
 def test_serve_golden_carries_both_subtrees():

@@ -312,14 +312,16 @@ def decode_stats_resp(buf):
 # --- the tests ------------------------------------------------------------
 
 
-def test_hello_v5_golden_bytes():
-    # The serving layer is the v5 semantic change; the handshake golden
-    # bytes pin the bump (mirrors `serve_wire_golden_bytes` in shard.rs).
-    assert WIRE_VERSION == 5
-    assert encode_hello() == b"DSHK\x05\x00\x00\x00"
+def test_hello_v6_golden_bytes():
+    # The serving frames rode in with v5; v6 widened the hello with a
+    # feature-flag word (wire compression) and added the sharded-chain
+    # frames. The handshake golden bytes pin the bump (mirrors
+    # `serve_wire_golden_bytes` in shard.rs).
+    assert WIRE_VERSION == 6
+    assert encode_hello() == b"DSHK\x06\x00\x00\x00" + b"\x00\x00\x00\x00"
     check_hello(encode_hello())  # no raise
-    with pytest.raises(ValueError, match="v4"):
-        check_hello(b"DSHK\x04\x00\x00\x00")  # a v4 peer is named in the error
+    with pytest.raises(ValueError, match="v5"):
+        check_hello(b"DSHK\x05\x00\x00\x00")  # a v5 peer is named in the error
 
 
 def test_submit_spmspm_golden_layout_is_37_bytes():

@@ -1,4 +1,4 @@
-"""Transliteration checks of the shard transport's wire encoding (v5).
+"""Transliteration checks of the shard transport's wire encoding (v6).
 
 The build container has no Rust toolchain, so the byte-exact encoding
 rules of ``rust/src/coordinator/transport.rs`` (handshake + framing) and
@@ -6,9 +6,11 @@ rules of ``rust/src/coordinator/transport.rs`` (handshake + framing) and
 here 1:1 — same magics, same field order, same little-endian widths —
 and property-checked:
 
-* the 8-byte ``DSHK | version u32`` hello round-trips, and version
-  skew / foreign magic / truncation are rejected exactly like
-  ``check_hello`` rejects them (both versions named in the error);
+* the 12-byte ``DSHK | version u32 | flags u32`` hello round-trips,
+  and version skew / foreign magic / truncation are rejected exactly
+  like ``check_hello`` rejects them (both versions named in the
+  error); the version word still lives in the first 8 bytes, so a v5
+  peer's short hello is diagnosed as skew, not as truncation;
 * the TCP envelope ``len u64 | payload`` round-trips, including
   multi-part writes, clean-EOF detection and the oversize-length guard;
 * the **plane fingerprint** (FNV-1a over dim, diagonal count, offsets
@@ -30,11 +32,20 @@ and property-checked:
   ``StateJob`` (``DSS1``, 60-byte header + 16 bytes per halo element),
   server-side ``StateChainJob`` (``DSE1``, 36-byte header + the ψ0
   planes) and its ``DER1`` response carrying the evolved planes plus the
-  per-step multiply trace.
+  per-step multiply trace;
+* the v6 **CMP1 compression envelope** (``CMP1 | mode u8 | raw_len u64``)
+  is mirrored byte-for-byte — same xor8 delta, same greedy byte-LZ token
+  stream, same store fallback — with golden envelopes pinned on both
+  sides (``golden_envelopes_match_python_mirror`` in
+  ``rust/src/coordinator/wire_compress.rs``) and every corrupt-envelope
+  rejection checked.
 
 The v5 serving frames (``DSB1``/``DRS1``/``DBY1``/``DST1``/``DTR1``)
 are mirrored in ``test_serve.py``; the hello golden bytes here pin the
-version bump itself.
+version bump itself. The v6 sharded-chain frames
+(``DCO1``/``DCA1``/``DCS1``/``DCF1``/``DCC1``/``DCD1`` and their state
+twins ``DVO1``/``DVS1``/``DVH1``/``DVC1``/``DVD1``) keep their magics
+pinned here so a Rust-side magic change fails loudly cross-language.
 """
 
 import math
@@ -45,9 +56,10 @@ import pytest
 
 # --- mirror of rust/src/coordinator/transport.rs --------------------------
 
-WIRE_VERSION = 5
+WIRE_VERSION = 6
 HELLO_MAGIC = b"DSHK"
-HELLO_LEN = 8
+HELLO_LEN = 12
+HELLO_FLAG_COMPRESS = 1
 MAX_FRAME_BYTES = 1 << 34
 
 JOB_MAGIC = b"DSJ1"
@@ -59,30 +71,189 @@ CHAIN_RESP_MAGIC = b"DCR1"
 STATE_JOB_MAGIC = b"DSS1"
 STATE_CHAIN_MAGIC = b"DSE1"
 STATE_CHAIN_RESP_MAGIC = b"DER1"
+# The wire-v6 sharded-chain frames (operator row then state row) —
+# magics pinned so a Rust-side rename fails cross-language.
+CHAIN_FLEET_MAGICS = [b"DCO1", b"DCA1", b"DCS1", b"DCF1", b"DCC1", b"DCD1"]
+STATE_FLEET_MAGICS = [b"DVO1", b"DVS1", b"DVH1", b"DVC1", b"DVD1"]
 STATUS_OK = 0
 STATUS_ERR = 1
 MAX_CHAIN_ITERS = 1024
 
 
-def encode_hello(version=WIRE_VERSION):
-    return HELLO_MAGIC + struct.pack("<I", version)
+def encode_hello(version=WIRE_VERSION, flags=0):
+    """v6 hello: magic | version u32 | feature flags u32, all LE."""
+    return HELLO_MAGIC + struct.pack("<II", version, flags)
 
 
 def decode_hello(buf):
-    if len(buf) < HELLO_LEN:
+    """Version from the first 8 bytes — the v2–v5 hello shape — so a
+    stale peer's short hello is diagnosed as skew, not truncation."""
+    if len(buf) < 8:
         raise ValueError(f"truncated shard handshake: got {len(buf)} of {HELLO_LEN} bytes")
     if buf[:4] != HELLO_MAGIC:
         raise ValueError("not a shard transport handshake")
-    return struct.unpack("<I", buf[4:HELLO_LEN])[0]
+    return struct.unpack("<I", buf[4:8])[0]
+
+
+def decode_hello_flags(buf):
+    """The full v6 hello: ``(version, flags)``."""
+    version = decode_hello(buf)
+    if len(buf) < HELLO_LEN:
+        raise ValueError(f"truncated shard handshake: got {len(buf)} of {HELLO_LEN} bytes")
+    return version, struct.unpack("<I", buf[8:HELLO_LEN])[0]
 
 
 def check_hello(buf):
+    check_hello_flags(buf)
+
+
+def check_hello_flags(buf):
     peer = decode_hello(buf)
     if peer != WIRE_VERSION:
         raise ValueError(
             f"shard wire version mismatch: peer speaks v{peer}, "
             f"this build speaks v{WIRE_VERSION}"
         )
+    return decode_hello_flags(buf)[1]
+
+
+# --- mirror of rust/src/coordinator/wire_compress.rs ----------------------
+
+CMP_MAGIC = b"CMP1"
+CMP_STORE = 0
+CMP_DELTA_LZ = 1
+CMP_HEADER_LEN = 13
+_MIN_COMPRESS = 16
+_HASH_BITS = 15
+_MAX_MATCH = 131
+_MAX_DIST = 65535
+
+
+def _xor8_forward(data):
+    out = bytearray(data)
+    for i in range(len(out) - 1, 7, -1):
+        out[i] ^= out[i - 8]
+    return bytes(out)
+
+
+def _xor8_inverse(data):
+    out = bytearray(data)
+    for i in range(8, len(out)):
+        out[i] ^= out[i - 8]
+    return bytes(out)
+
+
+def _lz_compress(data):
+    n = len(data)
+    out = bytearray()
+    table = [0] * (1 << _HASH_BITS)
+    lit_start = 0
+    pos = 0
+
+    def flush_literals(hi):
+        i = lit_start
+        while i < hi:
+            run = min(hi - i, 128)
+            out.append(run - 1)
+            out.extend(data[i : i + run])
+            i += run
+
+    while pos < n:
+        if pos + 4 <= n:
+            key = struct.unpack_from("<I", data, pos)[0]
+            h = ((key * 0x9E3779B1) & 0xFFFFFFFF) >> (32 - _HASH_BITS)
+            cand = table[h]
+            table[h] = pos + 1
+            if cand > 0:
+                cand -= 1
+                dist = pos - cand
+                if 1 <= dist <= _MAX_DIST and data[cand : cand + 4] == data[pos : pos + 4]:
+                    length = 4
+                    max_len = min(_MAX_MATCH, n - pos)
+                    while length < max_len and data[cand + length] == data[pos + length]:
+                        length += 1
+                    flush_literals(pos)
+                    out.append(0x80 | (length - 4))
+                    out.extend(struct.pack("<H", dist))
+                    end = pos + length
+                    p = pos + 1
+                    while p < end and p + 4 <= n:
+                        k2 = struct.unpack_from("<I", data, p)[0]
+                        h2 = ((k2 * 0x9E3779B1) & 0xFFFFFFFF) >> (32 - _HASH_BITS)
+                        table[h2] = p + 1
+                        p += 1
+                    pos = end
+                    lit_start = pos
+                    continue
+        pos += 1
+    flush_literals(n)
+    return bytes(out)
+
+
+def _lz_decompress(comp, raw_len):
+    out = bytearray()
+    n = len(comp)
+    i = 0
+    while i < n:
+        c = comp[i]
+        i += 1
+        if c < 0x80:
+            run = c + 1
+            if i + run > n:
+                raise ValueError("wire-compress: literal run past end of body")
+            out.extend(comp[i : i + run])
+            i += run
+        else:
+            length = (c & 0x7F) + 4
+            if i + 2 > n:
+                raise ValueError("wire-compress: match distance past end of body")
+            dist = struct.unpack_from("<H", comp, i)[0]
+            i += 2
+            if dist == 0 or dist > len(out):
+                raise ValueError(f"wire-compress: bad match distance {dist}")
+            start = len(out) - dist
+            for k in range(length):
+                out.append(out[start + k])  # byte-by-byte: overlap (RLE) works
+        if len(out) > raw_len:
+            raise ValueError("wire-compress: decompressed past declared raw_len")
+    if len(out) != raw_len:
+        raise ValueError(
+            f"wire-compress: decompressed {len(out)} bytes, envelope declared {raw_len}"
+        )
+    return bytes(out)
+
+
+def _envelope(mode, raw_len, body):
+    return CMP_MAGIC + bytes([mode]) + struct.pack("<Q", raw_len) + body
+
+
+def compress_payload(raw):
+    """Mirror of ``wire_compress::compress_payload``: the smaller of
+    store and delta+LZ, so the envelope never grows the body beyond its
+    constant 13-byte header."""
+    if len(raw) >= _MIN_COMPRESS:
+        lz = _lz_compress(_xor8_forward(raw))
+        if len(lz) < len(raw):
+            return _envelope(CMP_DELTA_LZ, len(raw), lz)
+    return _envelope(CMP_STORE, len(raw), raw)
+
+
+def decompress_payload(buf):
+    if len(buf) < CMP_HEADER_LEN or buf[:4] != CMP_MAGIC:
+        raise ValueError("wire-compress: frame is not a CMP1 envelope")
+    mode = buf[4]
+    raw_len = struct.unpack_from("<Q", buf, 5)[0]
+    body = buf[CMP_HEADER_LEN:]
+    if mode == CMP_STORE:
+        if len(body) != raw_len:
+            raise ValueError(
+                f"wire-compress: stored body is {len(body)} bytes, "
+                f"envelope declared {raw_len}"
+            )
+        return body
+    if mode == CMP_DELTA_LZ:
+        return _xor8_inverse(_lz_decompress(body, raw_len))
+    raise ValueError(f"wire-compress: unknown mode byte {mode}")
 
 
 def encode_frame(*parts):
@@ -507,11 +678,23 @@ def random_plane(rng, n):
 def test_hello_golden_bytes_and_roundtrip():
     h = encode_hello()
     assert len(h) == HELLO_LEN
-    # Golden layout: magic then the version as little-endian u32. A Rust
+    # Golden layout: magic, the version as little-endian u32, then the
+    # v6 feature-flag word (zero when nothing is advertised). A Rust
     # encoding change that forgets the version bump breaks this line.
-    assert h == b"DSHK\x05\x00\x00\x00"
+    assert h == b"DSHK\x06\x00\x00\x00\x00\x00\x00\x00"
     assert decode_hello(h) == WIRE_VERSION
+    assert decode_hello_flags(h) == (WIRE_VERSION, 0)
     check_hello(h)  # no raise
+    assert check_hello_flags(h) == 0
+    # Advertising compression sets bit 0 of the flag word.
+    hc = encode_hello(flags=HELLO_FLAG_COMPRESS)
+    assert hc == b"DSHK\x06\x00\x00\x00\x01\x00\x00\x00"
+    assert check_hello_flags(hc) == HELLO_FLAG_COMPRESS
+    # Compression is on only when BOTH sides advertise it — the
+    # negotiation rule the TCP executor and shard-serve both apply.
+    for ours, theirs, on in [(0, 0, False), (1, 0, False), (0, 1, False), (1, 1, True)]:
+        negotiated = bool(ours) and bool(check_hello_flags(encode_hello(flags=theirs)) & HELLO_FLAG_COMPRESS)
+        assert negotiated is on
 
 
 def test_hello_rejects_skew_magic_and_truncation():
@@ -529,6 +712,111 @@ def test_hello_rejects_skew_magic_and_truncation():
         decode_hello(encode_hello()[:5])
     with pytest.raises(ValueError):
         decode_hello(b"")
+    # A v5 peer sends only 8 bytes: the version word alone is enough to
+    # diagnose the skew (never a truncation error, never a stall
+    # waiting for the flag word).
+    v5_hello = b"DSHK\x05\x00\x00\x00"
+    assert decode_hello(v5_hello) == 5
+    with pytest.raises(ValueError, match="version mismatch"):
+        check_hello(v5_hello)
+    # But a same-version hello cut before its flag word IS truncation.
+    with pytest.raises(ValueError, match="truncated"):
+        decode_hello_flags(encode_hello()[:8])
+
+
+def test_cmp1_golden_envelopes_match_rust():
+    # Pinned byte-for-byte against wire_compress.rs
+    # (golden_envelopes_match_python_mirror) — a codec divergence
+    # between the mirrors breaks these first.
+    ones = struct.pack("<d", 1.0) * 24  # a constant diagonal's re-plane
+    assert compress_payload(ones).hex() == (
+        "434d503101c000000000000000000081010001f03f800600ff0100ad0100"
+    )
+    assert compress_payload(b"diam").hex() == "434d50310004000000000000006469616d"
+    ramp = b"".join(struct.pack("<d", float(k)) for k in range(8))
+    assert compress_payload(ramp).hex() == (
+        "434d5031014000000000000000000089010001f03f800600030000f07f8006000200000880050003"
+        "000000188005000300000004800500030000000c800500811000"
+    )
+    for raw in (ones, b"diam", ramp):
+        assert decompress_payload(compress_payload(raw)) == raw
+
+
+def test_cmp1_mode_selection_and_roundtrip_properties():
+    # Tiny payloads are stored: the transform cannot beat its overhead.
+    for raw in (b"", b"\x00", b"diam", b"0123456789abcde"):
+        enc = compress_payload(raw)
+        assert enc[4] == CMP_STORE
+        assert len(enc) == CMP_HEADER_LEN + len(raw)
+        assert decompress_payload(enc) == raw
+    # A xorshift stream has no 4-byte repeats: store fallback, and the
+    # envelope never inflates past its 13-byte header.
+    s = 0x9E3779B97F4A7C15
+    chunks = []
+    for _ in range(512):
+        s ^= (s << 13) & 0xFFFFFFFFFFFFFFFF
+        s ^= s >> 7
+        s ^= (s << 17) & 0xFFFFFFFFFFFFFFFF
+        chunks.append(struct.pack("<Q", s))
+    noise = b"".join(chunks)
+    enc = compress_payload(noise)
+    assert enc[4] == CMP_STORE
+    assert len(enc) == CMP_HEADER_LEN + len(noise)
+    assert decompress_payload(enc) == noise
+    # Adversarial planes: deterministic pseudo-random payloads across
+    # alphabet sizes, plus runs straddling the 128-literal / 131-match
+    # token limits and overlapping (RLE) matches — same sweep as the
+    # Rust adversarial_planes_roundtrip test.
+    s = 0xD1A60001
+
+    def nxt(m):
+        nonlocal s
+        s = (s * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return (s >> 33) % m
+
+    for case in range(64):
+        n = nxt(700)
+        alphabet = [2, 4, 17, 256][case % 4]
+        raw = bytes(nxt(alphabet) for _ in range(n))
+        assert decompress_payload(compress_payload(raw)) == raw
+    for raw in (b"\x00" * 127, b"\x00" * 128, b"\x00" * 129, b"\xab" * 139,
+                b"abcdefgh" * 512):
+        assert decompress_payload(compress_payload(raw)) == raw
+    ramp = b"".join(struct.pack("<d", 1.0 + 1e-9 * k) for k in range(256))
+    enc = compress_payload(ramp)
+    assert len(enc) < len(ramp)  # the xor8 delta's home turf
+    assert decompress_payload(enc) == ramp
+
+
+def test_cmp1_corrupt_envelopes_fail_loudly():
+    with pytest.raises(ValueError):
+        decompress_payload(b"")
+    with pytest.raises(ValueError):
+        decompress_payload(b"CMP0" + bytes(9))
+    # Unknown mode byte.
+    enc = bytearray(compress_payload(b"0123456789abcdef0123456789abcdef"))
+    enc[4] = 7
+    with pytest.raises(ValueError, match="unknown mode"):
+        decompress_payload(bytes(enc))
+    # Declared raw_len shorter than the stored body.
+    enc = bytearray(compress_payload(b"diam"))
+    enc[5] = 3
+    with pytest.raises(ValueError):
+        decompress_payload(bytes(enc))
+    # Truncated delta+LZ body.
+    enc = compress_payload(struct.pack("<d", 1.0) * 24)
+    assert enc[4] == CMP_DELTA_LZ
+    with pytest.raises(ValueError):
+        decompress_payload(enc[:-1])
+    # Match distance reaching before the start of the output.
+    with pytest.raises(ValueError, match="bad match distance"):
+        decompress_payload(_envelope(CMP_DELTA_LZ, 4, bytes([0x80, 0x05, 0x00])))
+    # Every truncated prefix of a valid envelope fails loudly.
+    for raw in (b"diam", struct.pack("<d", 1.0) * 24):
+        enc = compress_payload(raw)
+        for cut in range(len(enc)):
+            with pytest.raises(ValueError):
+                decompress_payload(enc[:cut])
 
 
 def test_frame_roundtrip_multipart_and_bounds():
@@ -920,3 +1208,33 @@ def test_composed_streams_parse_like_both_transports():
     skewed = encode_hello(WIRE_VERSION + 1) + encode_frame(job)
     with pytest.raises(ValueError, match="version mismatch"):
         check_hello(skewed[:HELLO_LEN])
+
+
+def test_compressed_stream_parses_after_negotiation():
+    """wire v6 with CMP1 negotiated: every post-handshake frame payload
+    is a CMP1 envelope; the envelope sits INSIDE the length-prefixed
+    frame, so the framing layer is untouched and a sniffer still walks
+    frame boundaries without the codec."""
+    rng = np.random.default_rng(11)
+    offsets, re, im = random_plane(rng, 2)
+    fp = plane_fingerprint(2, offsets, re, im)
+    put = encode_plane_put(fp, 2, encode_matrix(2, offsets, re, im))
+    job = encode_job(2, 16, 0, 1, fp, fp)
+    stream = (
+        encode_hello(flags=HELLO_FLAG_COMPRESS)
+        + encode_frame(compress_payload(put))
+        + encode_frame(compress_payload(job))
+    )
+    assert check_hello_flags(stream[:HELLO_LEN]) & HELLO_FLAG_COMPRESS
+    pos = HELLO_LEN
+    f1, pos = read_frame(stream, pos)
+    assert f1[:4] == CMP_MAGIC  # envelope, not a bare DSP1 frame
+    assert decode_plane_put(decompress_payload(f1))[0] == fp
+    f2, pos = read_frame(stream, pos)
+    assert decode_job(decompress_payload(f2))[0] == 2
+    assert read_frame(stream, pos)[0] is None
+    # The v6 sharded-chain magics stay pinned: a Rust-side rename must
+    # break the mirror loudly, same contract as the frame magics above.
+    assert CHAIN_FLEET_MAGICS == [b"DCO1", b"DCA1", b"DCS1", b"DCF1", b"DCC1", b"DCD1"]
+    assert STATE_FLEET_MAGICS == [b"DVO1", b"DVS1", b"DVH1", b"DVC1", b"DVD1"]
+    assert len(set(CHAIN_FLEET_MAGICS + STATE_FLEET_MAGICS)) == 11

@@ -7,21 +7,22 @@
 //!                [--shard-endpoints <host:port,...>]
 //! diamond evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]
 //!                [--shards <n>] [--shard-backend <inproc|process|tcp>]
-//!                [--shard-endpoints <host:port,...>] [--chain]
+//!                [--shard-endpoints <host:port,...>] [--chain] [--wire-compress]
 //!                [--state [--batch <n>] [--via-matrix] [--bench-json <path>]]
 //!                [--counters-json <path>]
 //! diamond shard-serve --listen <addr> [--max-frame-bytes <n>]
 //!                     [--plane-cache-cap <n>] [--plan-cache-cap <n>]
+//!                     [--wire-compress]
 //! diamond shard-worker        (internal: one shard job over stdin/stdout)
 //! diamond serve --listen <addr> [--max-batch <n>] [--queue-cap <n>]
 //!               [--inflight-cap <n>] [--batch-window-ms <n>]
 //!               [--retry-after-ms <n>] [--queue-deadline-ms <n>]
 //!               [--max-frame-bytes <n>] [--plane-cache-cap <n>]
-//!               [--counters-json <path>]
+//!               [--wire-compress] [--counters-json <path>]
 //! diamond serve-bench --endpoint <addr> [--baseline-endpoint <addr>]
 //!                     [--clients <n>] [--jobs <n>] [--family <name>]
 //!                     [--qubits <n>] [--json <path>]
-//! diamond bench-all
+//! diamond bench-all [--json <path>]
 //! ```
 
 use crate::bench_harness::experiments;
@@ -53,6 +54,24 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// FNV-1a over a state's exact bit pattern — the identity line the CI
+/// `chain-fleet-smoke` gate diffs between the fleet-sharded and serial
+/// runs of `evolve --state`.
+fn state_fingerprint(psi: &[crate::num::Complex]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for z in psi {
+        eat(z.re.to_bits());
+        eat(z.im.to_bits());
+    }
+    h
+}
+
 /// The one error message every subcommand emits for `--chain` off the
 /// TCP transport.
 const CHAIN_NEEDS_TCP: &str =
@@ -75,7 +94,10 @@ struct ExecFlags {
     backend: ShardBackend,
     tile: Option<TileMode>,
     chain: bool,
-    /// Whether any of the five flags was present — how a pure-client
+    /// Advertise wire-v6 `CMP1` frame compression on TCP connections
+    /// (`--wire-compress`; negotiated, so harmless against plain peers).
+    wire_compress: bool,
+    /// Whether any of the six flags was present — how a pure-client
     /// subcommand (`serve-bench`) rejects them wholesale.
     any_set: bool,
 }
@@ -96,11 +118,13 @@ impl ExecFlags {
             )),
         };
         let chain = args.iter().any(|a| a == "--chain");
+        let wire_compress = args.iter().any(|a| a == "--wire-compress");
         let endpoints = flag_value(args, "--shard-endpoints");
         let backend_flag = flag_value(args, "--shard-backend");
         let any_set = shards.is_some()
             || tile.is_some()
             || chain
+            || wire_compress
             || endpoints.is_some()
             || backend_flag.is_some();
         let backend = match backend_flag {
@@ -124,6 +148,7 @@ impl ExecFlags {
                     backend: ShardBackend::Tcp { endpoints: eps },
                     tile,
                     chain,
+                    wire_compress,
                     any_set,
                 });
             }
@@ -133,11 +158,15 @@ impl ExecFlags {
         if endpoints.is_some() {
             return Err("--shard-endpoints applies to --shard-backend tcp only".into());
         }
+        if wire_compress {
+            return Err("--wire-compress applies to --shard-backend tcp only".into());
+        }
         Ok(ExecFlags {
             shards,
             backend,
             tile,
             chain,
+            wire_compress,
             any_set,
         })
     }
@@ -155,7 +184,8 @@ impl ExecFlags {
     fn exec_config(&self) -> ExecConfig {
         let mut cfg = ExecConfig::new()
             .shards(self.shards.unwrap_or(1))
-            .backend(self.backend.clone());
+            .backend(self.backend.clone())
+            .wire_compress(self.wire_compress);
         if let Some(t) = self.tile {
             cfg = cfg.tile(t);
         }
@@ -187,8 +217,9 @@ fn cmd_shard_serve(args: &[String]) -> Result<(), String> {
         .local_addr()
         .map_err(|e| format!("resolving bound address: {e}"))?;
     println!(
-        "shard-serve: listening on {addr} (wire v{})",
-        transport::WIRE_VERSION
+        "shard-serve: listening on {addr} (wire v{}{})",
+        transport::WIRE_VERSION,
+        if cfg.wire_compress { ", compress" } else { "" },
     );
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
@@ -220,6 +251,7 @@ fn serve_config_flags(
             .parse::<usize>()
             .map_err(|e| format!("--plan-cache-cap: {e}"))?;
     }
+    cfg.wire_compress = args.iter().any(|a| a == "--wire-compress");
     Ok(cfg)
 }
 
@@ -370,10 +402,32 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             ep.connects,
         );
     }
+    if report.chain.sharded_chains > 0 || report.chain.sharded_state_chains > 0 {
+        println!(
+            "chain fleet: {} op + {} state chain(s) sharded across {} shard(s), \
+             {} halo round(s), {} B halo vs {} B resend model",
+            report.chain.sharded_chains,
+            report.chain.sharded_state_chains,
+            report.chain.fleet_shards,
+            report.chain.rounds,
+            report.chain.halo_bytes,
+            report.chain.resend_model_bytes,
+        );
+    }
+    if report.comp.frames > 0 {
+        println!(
+            "wire compression: {} frame(s), {} B raw -> {} B on the wire ({:.2}x)",
+            report.comp.frames,
+            report.comp.raw_bytes,
+            report.comp.wire_bytes,
+            report.comp.raw_bytes as f64 / report.comp.wire_bytes.max(1) as f64,
+        );
+    }
     if let Some(path) = counters_path {
         let doc = CountersV1::new("serve")
             .serve(&report.stats)
             .shard(&report.shard, &report.endpoints)
+            .chain_fleet(&report.chain, &report.comp)
             .render();
         std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
         println!("counters written to {path}");
@@ -643,12 +697,39 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
                 s.sum_storage_saving * 100.0
             );
         }
+        // The identity line the CI chain-fleet-smoke gate diffs between
+        // the sharded-fleet and single-daemon runs.
+        println!(
+            "op fingerprint: 0x{:016x}",
+            crate::coordinator::shard::plane_fingerprint(&r.op.freeze()),
+        );
         println!(
             "chain transport: {} remote chain job(s), {} KiB operand payload shipped, {} KiB avoided by plane dedup",
             r.shard.remote_chain_jobs,
             r.shard.payload_bytes / 1024,
             r.shard.dedup_bytes_avoided / 1024,
         );
+        let (fleet, comp) = sc.chain_fleet().unwrap_or_default();
+        if fleet.sharded_chains > 0 {
+            println!(
+                "chain fleet: sharded across {} daemon shard(s), {} halo round(s), \
+                 {} B halo + {} B collect vs {} B resend model",
+                fleet.fleet_shards,
+                fleet.rounds,
+                fleet.halo_bytes,
+                fleet.collect_bytes,
+                fleet.resend_model_bytes,
+            );
+        }
+        if comp.frames > 0 {
+            println!(
+                "wire compression: {} frame(s), {} B raw -> {} B on the wire ({:.2}x)",
+                comp.frames,
+                comp.raw_bytes,
+                comp.wire_bytes,
+                comp.raw_bytes as f64 / comp.wire_bytes.max(1) as f64,
+            );
+        }
         for ep in sc.endpoint_io() {
             println!(
                 "  endpoint {}: {} round-trips, {} KiB sent, {} KiB received, {} connect(s), payload {} B (+{} B deduped)",
@@ -667,6 +748,7 @@ fn cmd_evolve(args: &[String]) -> Result<(), String> {
                 .u64_field("qubits", qubits as u64)
                 .u64_field("iters", iters as u64)
                 .shard(&r.shard, sc.endpoint_io())
+                .chain_fleet(&fleet, &comp)
                 .render();
             std::fs::write(&path, doc).map_err(|e| format!("writing {path}: {e}"))?;
             println!("counters written to {path}");
@@ -844,6 +926,9 @@ fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
         crate::bench_harness::fmt_u64(mults),
         norm - 1.0,
     );
+    // The identity line the CI chain-fleet-smoke gate diffs between the
+    // fleet-sharded and serial runs.
+    println!("state fingerprint: 0x{:016x}", state_fingerprint(&last.psi));
     let ks = sc.kernel_stats();
     if ks.plan_cache_hits > 0 {
         println!(
@@ -880,6 +965,27 @@ fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
             ep.dedup_bytes_avoided,
         );
     }
+    let (fleet, comp) = sc.chain_fleet().unwrap_or_default();
+    if fleet.sharded_state_chains > 0 {
+        println!(
+            "chain fleet: {} state chain(s) sharded across {} daemon shard(s), \
+             {} halo round(s), {} B halo vs {} B resend model",
+            fleet.sharded_state_chains,
+            fleet.fleet_shards,
+            fleet.rounds,
+            fleet.halo_bytes,
+            fleet.resend_model_bytes,
+        );
+    }
+    if comp.frames > 0 {
+        println!(
+            "wire compression: {} frame(s), {} B raw -> {} B on the wire ({:.2}x)",
+            comp.frames,
+            comp.raw_bytes,
+            comp.wire_bytes,
+            comp.raw_bytes as f64 / comp.wire_bytes.max(1) as f64,
+        );
+    }
 
     if run.via_matrix || run.bench_json.is_some() {
         let bench = crate::bench_harness::state::run_state_bench(
@@ -905,6 +1011,7 @@ fn cmd_evolve_state(run: StateRun<'_>) -> Result<(), String> {
             .u64_field("batch", run.batch as u64)
             .u64_field("complex_mults", mults)
             .shard(sc.stats(), sc.endpoint_io())
+            .chain_fleet(&fleet, &comp)
             .render();
         std::fs::write(path, doc).map_err(|e| format!("writing {path}: {e}"))?;
         println!("counters written to {path}");
@@ -975,6 +1082,68 @@ fn cmd_kernel(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `bench-all --json <path>`: the `BENCH_paper.json` document the CI
+/// `paper-bench` job archives and gates on — per-workload DIAMOND
+/// cycles, energy, and speedups over each baseline (SIGMA, outer
+/// product, Gustavson), plus the paper's aggregate ratios (arithmetic
+/// mean, geometric mean, peak).
+fn write_paper_bench_json(
+    path: &str,
+    results: &[crate::bench_harness::workload::WorkloadResult],
+) -> Result<(), String> {
+    use crate::bench_harness::workload::{geomean_speedup, mean_speedup};
+    if results.is_empty() {
+        return Err("bench-all produced no workload results".into());
+    }
+    let mut rows = Vec::with_capacity(results.len());
+    for r in results {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"qubits\": {}, \"dim\": {}, \"iters\": {}, \
+             \"diamond_cycles\": {}, \"sigma_cycles\": {}, \"outer_cycles\": {}, \
+             \"gustavson_cycles\": {}, \"speedup_vs_sigma\": {:.4}, \
+             \"speedup_vs_outer\": {:.4}, \"speedup_vs_gustavson\": {:.4}, \
+             \"diamond_energy_j\": {:e}, \"sigma_energy_j\": {:e}}}",
+            r.spec.name(),
+            r.spec.qubits,
+            r.dim,
+            r.iters,
+            r.diamond.total_cycles(),
+            r.sigma.total.cycles,
+            r.outer.total.cycles,
+            r.gustavson.total.cycles,
+            r.speedup_vs(&r.sigma),
+            r.speedup_vs(&r.outer),
+            r.speedup_vs(&r.gustavson),
+            r.diamond.energy_joules(),
+            r.sigma.energy_joules(),
+        ));
+    }
+    let peak = |name: &str| -> f64 {
+        results
+            .iter()
+            .map(|r| r.speedup_vs(r.baseline_by_name(name)))
+            .fold(f64::MIN, f64::max)
+    };
+    let doc = format!(
+        "{{\n  \"schema_version\": 1,\n  \"suite\": \"fig10\",\n  \"workloads\": [\n{}\n  ],\n  \
+         \"mean_speedup_vs_sigma\": {:.4},\n  \"geomean_speedup_vs_sigma\": {:.4},\n  \
+         \"peak_speedup_vs_sigma\": {:.4},\n  \
+         \"mean_speedup_vs_outer\": {:.4},\n  \"geomean_speedup_vs_outer\": {:.4},\n  \
+         \"mean_speedup_vs_gustavson\": {:.4},\n  \"geomean_speedup_vs_gustavson\": {:.4}\n}}\n",
+        rows.join(",\n"),
+        mean_speedup(results, "SIGMA"),
+        geomean_speedup(results, "SIGMA"),
+        peak("SIGMA"),
+        mean_speedup(results, "OP"),
+        geomean_speedup(results, "OP"),
+        mean_speedup(results, "Gustavson"),
+        geomean_speedup(results, "Gustavson"),
+    );
+    std::fs::write(path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+    println!("paper bench written to {path}");
+    Ok(())
+}
+
 /// CLI entry point; returns the process exit code.
 pub fn run_with_args(args: Vec<String>) -> i32 {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -1031,43 +1200,53 @@ pub fn run_with_args(args: Vec<String>) -> i32 {
                 .map_err(|e| format!("shard-worker: {e:#}"))
         }
         "bench-all" => {
+            let json_path = flag_value(rest, "--json");
             println!("{}", experiments::table2());
             println!("{}", experiments::table3());
             println!("{}", experiments::fig6());
-            println!("{}", experiments::fig10().0);
+            let (fig10_txt, results) = experiments::fig10();
+            println!("{fig10_txt}");
             println!("{}", experiments::fig11().0);
             println!("{}", experiments::fig12());
             println!("{}", experiments::fig13().0);
             println!("{}", experiments::ablations());
-            Ok(())
+            match json_path {
+                Some(path) => write_paper_bench_json(&path, &results),
+                None => Ok(()),
+            }
         }
         "evolve" => cmd_evolve(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "diamond — diagonal-optimized SpMSpM accelerator (paper reproduction)\n\n\
-                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations bench-all\n  \
+                 commands:\n  table2 table3 fig6 fig10 fig11 fig12 fig13 ablations\n  \
+                 bench-all [--json <path>]  (--json writes BENCH_paper.json for the\n            \
+                 CI paper-bench gate)\n  \
                  kernel [--tile <elems|auto>] [--no-plan-cache] [--smoke] [--check-only]\n         \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
                  [--shard-endpoints <host:port,...>] [--counters-json <path>]\n  \
                  evolve --family <name> --qubits <n> [--t <f>] [--iters <k>] [--pjrt]\n         \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n         \
-                 [--shard-endpoints <host:port,...>] [--chain] [--counters-json <path>]\n         \
+                 [--shard-endpoints <host:port,...>] [--chain] [--wire-compress]\n         \
+                 [--counters-json <path>]\n         \
                  [--state [--batch <n>] [--via-matrix] [--bench-json <path>]]\n         \
-                 (--chain runs the whole Taylor chain server-side over tcp;\n          \
+                 (--chain runs the whole Taylor chain server-side over tcp —\n          \
+                 across ≥2 endpoints it shards the chain, wire v6;\n          \
+                 --wire-compress negotiates CMP1 frame compression;\n          \
                  --state evolves ψ matrix-free via the packed SpMV kernel,\n          \
                  --via-matrix adds the materialize-U comparison)\n  \
                  shard-serve --listen <host:port> [--max-frame-bytes <n>]\n              \
-                 [--plane-cache-cap <n>] [--plan-cache-cap <n>]\n              \
+                 [--plane-cache-cap <n>] [--plan-cache-cap <n>] [--wire-compress]\n              \
                  (TCP shard daemon; port 0 = ephemeral)\n  \
                  serve --listen <host:port> [--max-batch <n>] [--queue-cap <n>]\n        \
                  [--inflight-cap <n>] [--batch-window-ms <n>] [--retry-after-ms <n>]\n        \
                  [--queue-deadline-ms <n>] [--max-frame-bytes <n>]\n        \
-                 [--plane-cache-cap <n>] [--counters-json <path>]\n        \
+                 [--plane-cache-cap <n>] [--wire-compress] [--counters-json <path>]\n        \
                  [--shards <n>] [--shard-backend <inproc|process|tcp>]\n        \
                  [--shard-endpoints <host:port,...>] [--tenant-weight default:<n>]\n        \
                  (multi-tenant batch daemon, wire v5; batches execute on the\n         \
-                 shard fleet; tenants drain deficit-round-robin; SIGTERM drains\n         \
-                 cleanly)\n  \
+                 shard fleet — chains shard across ≥2 tcp endpoints, wire v6;\n         \
+                 tenants drain deficit-round-robin; SIGTERM drains cleanly)\n  \
                  serve-bench --endpoint <host:port> [--baseline-endpoint <host:port>]\n              \
                  [--clients <n>] [--jobs <n>] [--family <name>] [--qubits <n>]\n              \
                  [--json <path>]  (concurrent-tenant harness; verifies bitwise)\n  \

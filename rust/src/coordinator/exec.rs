@@ -55,6 +55,7 @@ pub struct ExecConfig {
     engine: EngineConfig,
     shards: usize,
     backend: ShardBackend,
+    wire_compress: bool,
 }
 
 impl Default for ExecConfig {
@@ -63,6 +64,7 @@ impl Default for ExecConfig {
             engine: EngineConfig::default(),
             shards: 1,
             backend: ShardBackend::InProc,
+            wire_compress: false,
         }
     }
 }
@@ -107,6 +109,15 @@ impl ExecConfig {
         self
     }
 
+    /// Advertise wire-v6 `CMP1` frame compression on TCP connections
+    /// (the `--wire-compress` flag; default off). Active only against
+    /// daemons that advertise it too — a compressing coordinator
+    /// against a plain daemon degrades to raw frames.
+    pub fn wire_compress(mut self, on: bool) -> Self {
+        self.wire_compress = on;
+        self
+    }
+
     /// Configured shard fan-out.
     pub fn shard_count(&self) -> usize {
         self.shards
@@ -127,7 +138,14 @@ impl ExecConfig {
     /// Process workers and TCP connections are resolved lazily on first
     /// use, so building is always cheap and infallible.
     pub fn build(&self) -> ShardCoordinator {
-        ShardCoordinator::from_parts(self.engine, self.shards, self.backend.clone(), None, None)
+        ShardCoordinator::from_parts(
+            self.engine,
+            self.shards,
+            self.backend.clone(),
+            None,
+            None,
+            self.wire_compress,
+        )
     }
 
     /// Build with an explicit process-backend executor (tests point this
@@ -140,17 +158,28 @@ impl ExecConfig {
             ShardBackend::Process,
             Some(executor),
             None,
+            self.wire_compress,
         )
     }
 
     /// Build with an explicit TCP executor (tests shorten its
     /// connect/response deadlines). The backend is derived from the
-    /// executor's endpoint list, overriding the configured one.
-    pub fn build_with_tcp_executor(&self, executor: TcpShardExecutor) -> ShardCoordinator {
+    /// executor's endpoint list, overriding the configured one; a
+    /// `wire_compress(true)` config also switches the injected
+    /// executor's compression advertisement on.
+    pub fn build_with_tcp_executor(&self, mut executor: TcpShardExecutor) -> ShardCoordinator {
         let backend = ShardBackend::Tcp {
             endpoints: executor.endpoints().to_vec(),
         };
-        ShardCoordinator::from_parts(self.engine, self.shards, backend, None, Some(executor))
+        executor.wire_compress |= self.wire_compress;
+        ShardCoordinator::from_parts(
+            self.engine,
+            self.shards,
+            backend,
+            None,
+            Some(executor),
+            self.wire_compress,
+        )
     }
 }
 

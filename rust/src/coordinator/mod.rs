@@ -20,6 +20,7 @@ pub mod serve;
 pub mod server;
 pub mod shard;
 pub mod transport;
+pub mod wire_compress;
 
 use crate::baselines::{Accelerator, BaselineReport};
 use crate::format::{DiagMatrix, PackedDiagMatrix};

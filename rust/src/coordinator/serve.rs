@@ -65,14 +65,15 @@ use crate::coordinator::shard::{
     decode_stats_resp, decode_submit, encode_busy, encode_err, encode_plane_have,
     encode_plane_put, encode_result_err, encode_result_ok, encode_stats_req, encode_stats_resp,
     encode_submit, plane_fingerprint, plane_wire_bytes, PlaneStore, ServeResult,
-    ShardCoordinator, ShardStats, SubmitBody, BUSY_MAGIC, DEFAULT_WORKER_TIMEOUT,
+    ShardBackend, ShardCoordinator, ShardStats, SubmitBody, BUSY_MAGIC, DEFAULT_WORKER_TIMEOUT,
     PLANE_HAVE_MAGIC, PLANE_PUT_MAGIC, RESULT_MAGIC, STATS_MAGIC, SUBMIT_MAGIC,
 };
 use crate::coordinator::transport::{
-    check_hello, encode_hello, read_frame_limited, write_frame, DEFAULT_CONNECT_TIMEOUT,
-    EndpointIo, HELLO_LEN, MAX_FRAME_BYTES,
+    check_hello, encode_hello, read_frame_limited, write_frame, ChainFleetStats,
+    CompressionIo, DEFAULT_CONNECT_TIMEOUT, EndpointIo, HELLO_LEN, MAX_FRAME_BYTES,
 };
 use crate::format::PackedDiagMatrix;
+use crate::linalg::{join_state, split_state};
 use crate::sim::device::MatrixId;
 use crate::sim::{DiamondDevice, SimConfig};
 use crate::taylor::{ChainDriver, StateDriver, StateStep, TaylorStep};
@@ -362,6 +363,19 @@ impl TenantQueues {
     }
 }
 
+/// One consistent picture of the scheduler engine's execution fleet:
+/// shard-layer counters, per-endpoint transport I/O, and (when chains
+/// run sharded over ≥ 2 TCP daemons) the wire-v6 chain-fleet and frame
+/// compression counters. Published between batch rounds; read by
+/// `--counters-json` and the fleet accessors.
+#[derive(Clone, Debug, Default)]
+pub struct FleetSnapshot {
+    pub shard: ShardStats,
+    pub endpoints: Vec<EndpointIo>,
+    pub chain: ChainFleetStats,
+    pub comp: CompressionIo,
+}
+
 /// Everything the connection threads and the scheduler share.
 struct Shared {
     cfg: ServeDaemonConfig,
@@ -374,9 +388,10 @@ struct Shared {
     stats: Mutex<ServeStats>,
     /// The scheduler's fleet counters, published after every batch round
     /// (and on exit): the one [`ShardCoordinator`]'s cumulative
-    /// [`ShardStats`] plus per-endpoint transport I/O. Read by
-    /// `--counters-json` and the fleet accessors.
-    fleet: Mutex<(ShardStats, Vec<EndpointIo>)>,
+    /// [`ShardStats`], per-endpoint transport I/O, and the wire-v6
+    /// chain-fleet / compression counters. Read by `--counters-json`
+    /// and the fleet accessors.
+    fleet: Mutex<FleetSnapshot>,
     /// Tenant-id allocator for accepted connections.
     next_conn: AtomicU64,
     /// Currently-connected tenants — the denominator of the fair-share
@@ -398,7 +413,7 @@ impl Shared {
             queue: Mutex::new(TenantQueues::new()),
             cv: Condvar::new(),
             stats: Mutex::new(ServeStats::default()),
-            fleet: Mutex::new((ShardStats::default(), Vec::new())),
+            fleet: Mutex::new(FleetSnapshot::default()),
             next_conn: AtomicU64::new(1),
             tenants: AtomicUsize::new(0),
             draining: AtomicBool::new(false),
@@ -409,7 +424,7 @@ impl Shared {
         *self.stats.lock().expect("serve stats lock poisoned")
     }
 
-    fn fleet_snapshot(&self) -> (ShardStats, Vec<EndpointIo>) {
+    fn fleet_snapshot(&self) -> FleetSnapshot {
         self.fleet.lock().expect("serve fleet lock poisoned").clone()
     }
 
@@ -720,6 +735,15 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
         }
     }
 
+    // A ≥ 2-endpoint TCP fleet runs whole chains sharded (wire v6):
+    // each daemon owns a contiguous tile range across every Taylor
+    // iteration and only halo traffic crosses the wire between
+    // iterations. Any other backend keeps the per-iteration drivers.
+    let fleet_chain = matches!(
+        engine.backend(),
+        ShardBackend::Tcp { endpoints } if endpoints.len() >= 2
+    );
+
     // The BatchServer schedule: stable sort by (dim, stationary fp),
     // cut batches at every key change and at max_batch — a batch never
     // mixes dimensions or stationary operands.
@@ -770,14 +794,19 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
                         }
                     }
                     ResolvedJob::Chain { t, iters, h, .. } => {
-                        match ChainDriver::from_packed(h, *t).run(*iters, engine) {
-                            Ok(out) => encode_result_ok(
+                        let run = if fleet_chain {
+                            engine
+                                .run_chain(&h.thaw(), *t, *iters)
+                                .map(|r| (r.term, r.op.freeze(), r.steps))
+                        } else {
+                            ChainDriver::from_packed(h, *t)
+                                .run(*iters, engine)
+                                .map(|out| (out.term, out.op.freeze(), out.steps))
+                        };
+                        match run {
+                            Ok((term, sum, steps)) => encode_result_ok(
                                 q.job_id,
-                                &ServeResult::Chain {
-                                    term: out.term,
-                                    sum: out.op.freeze(),
-                                    steps: out.steps,
-                                },
+                                &ServeResult::Chain { term, sum, steps },
                             ),
                             Err(e) => encode_result_err(q.job_id, &format!("{e:#}")),
                         }
@@ -790,16 +819,22 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
                         psi_im,
                         ..
                     } => {
-                        let driver =
-                            StateDriver::from_packed(h, *t, psi_re.clone(), psi_im.clone());
-                        match driver.run(*iters, engine) {
-                            Ok(out) => encode_result_ok(
+                        let run = if fleet_chain {
+                            engine
+                                .run_state_chain(&h.thaw(), *t, *iters, &join_state(psi_re, psi_im))
+                                .map(|r| {
+                                    let (re, im) = split_state(&r.psi);
+                                    (re, im, r.steps)
+                                })
+                        } else {
+                            StateDriver::from_packed(h, *t, psi_re.clone(), psi_im.clone())
+                                .run(*iters, engine)
+                                .map(|out| (out.psi_re, out.psi_im, out.steps))
+                        };
+                        match run {
+                            Ok((psi_re, psi_im, steps)) => encode_result_ok(
                                 q.job_id,
-                                &ServeResult::State {
-                                    psi_re: out.psi_re,
-                                    psi_im: out.psi_im,
-                                    steps: out.steps,
-                                },
+                                &ServeResult::State { psi_re, psi_im, steps },
                             ),
                             Err(e) => encode_result_err(q.job_id, &format!("{e:#}")),
                         }
@@ -840,8 +875,12 @@ fn run_batches(shared: &Shared, engine: &mut ShardCoordinator, mut jobs: Vec<Que
 /// consistent fleet picture without touching the engine.
 fn publish_fleet(shared: &Shared, engine: &ShardCoordinator) {
     let mut f = shared.fleet.lock().expect("serve fleet lock poisoned");
-    f.0 = *engine.stats();
-    f.1 = engine.endpoint_io().to_vec();
+    f.shard = *engine.stats();
+    f.endpoints = engine.endpoint_io().to_vec();
+    if let Some((chain, comp)) = engine.chain_fleet() {
+        f.chain = chain;
+        f.comp = comp;
+    }
 }
 
 /// The scheduler loop: wait for submissions (or drain), let one batch
@@ -920,6 +959,12 @@ pub struct ServeReport {
     pub stats: ServeStats,
     pub shard: ShardStats,
     pub endpoints: Vec<EndpointIo>,
+    /// Wire-v6 sharded-chain counters (all zero unless the daemon drove
+    /// chains across ≥ 2 TCP endpoints).
+    pub chain: ChainFleetStats,
+    /// `CMP1` frame-compression counters (all zero unless
+    /// `--wire-compress` was negotiated).
+    pub comp: CompressionIo,
 }
 
 /// Run the daemon on the calling thread until `stop` flips, then drain
@@ -961,11 +1006,13 @@ pub fn serve_blocking(
         .join()
         .map_err(|_| anyhow!("serve scheduler panicked"))?;
     let _ = watcher.join();
-    let (shard, endpoints) = shared.fleet_snapshot();
+    let fleet = shared.fleet_snapshot();
     Ok(ServeReport {
         stats,
-        shard,
-        endpoints,
+        shard: fleet.shard,
+        endpoints: fleet.endpoints,
+        chain: fleet.chain,
+        comp: fleet.comp,
     })
 }
 
@@ -1033,10 +1080,11 @@ impl ServeServer {
         self.shared.stats_snapshot()
     }
 
-    /// The execution fleet's cumulative [`ShardStats`] and per-endpoint
-    /// transport I/O, as last published by the scheduler (complete once
+    /// The execution fleet's cumulative counters — [`ShardStats`],
+    /// per-endpoint transport I/O, sharded-chain and compression
+    /// totals — as last published by the scheduler (complete once
     /// [`ServeServer::stop`] has drained).
-    pub fn fleet(&self) -> (ShardStats, Vec<EndpointIo>) {
+    pub fn fleet(&self) -> FleetSnapshot {
         self.shared.fleet_snapshot()
     }
 
@@ -1516,11 +1564,16 @@ mod tests {
         let (want, _) = packed_diag_mul_counted(&h, &h);
         assert!(c.bit_eq(&want), "fleet-served product differs from local serial");
         server.stop();
-        let (shard, endpoints) = server.fleet();
-        assert_eq!(shard.multiplies, 1);
-        assert_eq!(shard.sharded_multiplies, 1);
-        assert!(shard.shards_used >= 2, "{shard:?}");
-        assert!(endpoints.is_empty(), "inproc fleet has no TCP endpoints");
+        let fleet = server.fleet();
+        assert_eq!(fleet.shard.multiplies, 1);
+        assert_eq!(fleet.shard.sharded_multiplies, 1);
+        assert!(fleet.shard.shards_used >= 2, "{:?}", fleet.shard);
+        assert!(
+            fleet.endpoints.is_empty(),
+            "inproc fleet has no TCP endpoints"
+        );
+        assert_eq!(fleet.chain.sharded_chains, 0);
+        assert_eq!(fleet.comp.frames, 0);
     }
 
     #[test]

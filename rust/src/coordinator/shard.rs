@@ -54,7 +54,7 @@ use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Frame marker of a shard job (references operand planes by
@@ -85,6 +85,35 @@ pub const STATE_JOB_MAGIC: [u8; 4] = *b"DSS1";
 pub const STATE_CHAIN_MAGIC: [u8; 4] = *b"DSE1";
 /// Frame marker of a `StateChainJob` response.
 pub const STATE_CHAIN_RESP_MAGIC: [u8; 4] = *b"DER1";
+/// Frame marker of a sharded-chain *open* (wire v6): adopt one
+/// contiguous output-row range of an operator chain for all its
+/// iterations.
+pub const CHAIN_OPEN_MAGIC: [u8; 4] = *b"DCO1";
+/// Frame marker of the sharded-chain control acknowledgement (response
+/// to [`CHAIN_OPEN_MAGIC`] and [`STATE_OPEN_MAGIC`] — ok carries no
+/// body).
+pub const CHAIN_ACK_MAGIC: [u8; 4] = *b"DCA1";
+/// Frame marker of a sharded-chain *step*: the previous round's global
+/// prune verdict rides in, the worker's nonzero flags ride back.
+pub const CHAIN_STEP_MAGIC: [u8; 4] = *b"DCS1";
+/// Frame marker of a sharded-chain step response (flag bitmask).
+pub const CHAIN_FLAGS_MAGIC: [u8; 4] = *b"DCF1";
+/// Frame marker of a sharded-chain *collect*: the final verdict rides
+/// in, the worker's term/sum row windows ride back.
+pub const CHAIN_COLLECT_MAGIC: [u8; 4] = *b"DCC1";
+/// Frame marker of a sharded-chain collect response (value windows).
+pub const CHAIN_DONE_MAGIC: [u8; 4] = *b"DCD1";
+/// Frame marker of a sharded *state*-chain open (wire v6): adopt one
+/// contiguous tile-task range of a matrix-free state chain.
+pub const STATE_OPEN_MAGIC: [u8; 4] = *b"DVO1";
+/// Frame marker of a sharded state-chain *step* (halo imports ride in).
+pub const STATE_STEP_MAGIC: [u8; 4] = *b"DVS1";
+/// Frame marker of a sharded state-chain step response (halo exports).
+pub const STATE_HALO_MAGIC: [u8; 4] = *b"DVH1";
+/// Frame marker of a sharded state-chain *collect* (no body).
+pub const STATE_COLLECT_MAGIC: [u8; 4] = *b"DVC1";
+/// Frame marker of a sharded state-chain collect response (sum planes).
+pub const STATE_DONE_MAGIC: [u8; 4] = *b"DVD1";
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
 
@@ -845,6 +874,598 @@ pub fn decode_state_chain_resp(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>, Vec<
     }
 }
 
+// --- wire v6: the sharded-chain vocabulary --------------------------------
+//
+// A chain sharded across a fleet holds one open chain per daemon
+// connection: `open` adopts a contiguous range (output rows for the
+// operator chain, tile tasks for the state chain) for *all* Taylor
+// iterations, `step` exchanges only the per-iteration halo payload (a
+// prune-verdict bitmask for operator chains — the value halo is empty
+// by construction — and boundary ψ segments for state chains), and
+// `collect` ships the owned value windows exactly once. `H` still
+// travels as a content-addressed v3 `PutPlane`/`HavePlane`, at most
+// once per connection. The whole per-round protocol state lives in
+// [`crate::taylor::sharded`]; these frames are a thin transcription.
+
+/// Append a bool slice as `count | LSB-first bitmask`.
+fn put_flags(buf: &mut Vec<u8>, flags: &[bool]) {
+    put_usize(buf, flags.len());
+    let mut byte = 0u8;
+    for (i, &f) in flags.iter().enumerate() {
+        if f {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            buf.push(byte);
+            byte = 0;
+        }
+    }
+    if flags.len() % 8 != 0 {
+        buf.push(byte);
+    }
+}
+
+/// Read a `count | bitmask` flag set (inverse of [`put_flags`]). The
+/// count is validated against the frame *before* any allocation.
+fn take_flags(c: &mut Cursor<'_>) -> Result<Vec<bool>> {
+    let nflags = c.usize()?;
+    let bytes = c.take(nflags.div_ceil(8))?;
+    Ok((0..nflags).map(|i| bytes[i / 8] >> (i % 8) & 1 == 1).collect())
+}
+
+/// Append one collect window: `offset (i64) | w_lo | len | re | im`.
+fn put_window(buf: &mut Vec<u8>, w: &crate::taylor::ChainWindow) {
+    debug_assert_eq!(w.re.len(), w.im.len());
+    buf.extend_from_slice(&w.offset.to_le_bytes());
+    put_usize(buf, w.w_lo);
+    put_usize(buf, w.re.len());
+    for &v in &w.re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in &w.im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Read one collect window (inverse of [`put_window`]).
+fn take_window(c: &mut Cursor<'_>) -> Result<crate::taylor::ChainWindow> {
+    let offset = i64::from_le_bytes(c.take(8)?.try_into().unwrap());
+    let w_lo = c.usize()?;
+    let len = c.usize()?;
+    let re = c.f64s(len)?;
+    let im = c.f64s(len)?;
+    Ok(crate::taylor::ChainWindow { offset, w_lo, re, im })
+}
+
+/// One decoded sharded-chain open: adopt output rows `[r0, r1)` of an
+/// `exp(−iHt)` chain for all `iters` iterations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChainOpenRefs {
+    /// Matrix dimension (must match the referenced plane).
+    pub n: usize,
+    /// Evolution time.
+    pub t: f64,
+    /// Taylor truncation depth (1 ..= [`MAX_CHAIN_ITERS`]).
+    pub iters: usize,
+    /// First output row this daemon owns.
+    pub r0: usize,
+    /// One past the last owned output row.
+    pub r1: usize,
+    /// Fingerprint of the resident `H` plane.
+    pub fp_h: u64,
+}
+
+/// Serialize a sharded-chain open: `CHAIN_OPEN_MAGIC | n | t (f64-bits)
+/// | iters | r0 | r1 | fp_h` — 52 bytes.
+pub fn encode_chain_open(refs: &ChainOpenRefs) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(52);
+    buf.extend_from_slice(&CHAIN_OPEN_MAGIC);
+    put_usize(&mut buf, refs.n);
+    put_u64(&mut buf, refs.t.to_bits());
+    put_usize(&mut buf, refs.iters);
+    put_usize(&mut buf, refs.r0);
+    put_usize(&mut buf, refs.r1);
+    put_u64(&mut buf, refs.fp_h);
+    buf
+}
+
+/// Decode a sharded-chain open (the inverse of [`encode_chain_open`]).
+pub fn decode_chain_open(bytes: &[u8]) -> Result<ChainOpenRefs> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_OPEN_MAGIC[..] {
+        bail!("not a sharded-chain open (bad magic)");
+    }
+    let n = c.usize()?;
+    let t = c.f64()?;
+    let iters = c.u64()?;
+    let r0 = c.usize()?;
+    let r1 = c.usize()?;
+    let fp_h = c.u64()?;
+    if iters == 0 || iters > MAX_CHAIN_ITERS {
+        bail!("sharded chain claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})");
+    }
+    if r0 > r1 || r1 > n {
+        bail!("sharded chain row range [{r0}, {r1}) out of bounds for n={n}");
+    }
+    c.done()?;
+    Ok(ChainOpenRefs {
+        n,
+        t,
+        iters: iters as usize,
+        r0,
+        r1,
+        fp_h,
+    })
+}
+
+/// Serialize a successful chain-control acknowledgement (open ok):
+/// `CHAIN_ACK_MAGIC | 0u8`.
+pub fn encode_chain_ack_ok() -> Vec<u8> {
+    let mut buf = Vec::with_capacity(5);
+    buf.extend_from_slice(&CHAIN_ACK_MAGIC);
+    buf.push(STATUS_OK);
+    buf
+}
+
+/// Serialize a chain-control failure: `CHAIN_ACK_MAGIC | 1u8 | len |
+/// utf8`.
+pub fn encode_chain_ack_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&CHAIN_ACK_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a chain-control acknowledgement; a daemon-reported failure
+/// comes back as `Err`.
+pub fn decode_chain_ack(bytes: &[u8]) -> Result<()> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_ACK_MAGIC[..] {
+        bail!("not a chain acknowledgement (bad magic; got {} bytes)", bytes.len());
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            c.done()?;
+            Ok(())
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("sharded chain daemon reported: {msg}");
+        }
+        s => bail!("unknown chain acknowledgement status {s}"),
+    }
+}
+
+/// Serialize a sharded-chain step: `CHAIN_STEP_MAGIC | k | verdict
+/// flags` — the round index plus the previous round's global prune
+/// verdict (empty for `k == 1`).
+pub fn encode_chain_step(k: usize, verdict: &[bool]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(20 + verdict.len() / 8 + 1);
+    buf.extend_from_slice(&CHAIN_STEP_MAGIC);
+    put_usize(&mut buf, k);
+    put_flags(&mut buf, verdict);
+    buf
+}
+
+/// Decode a sharded-chain step (the inverse of [`encode_chain_step`]).
+pub fn decode_chain_step(bytes: &[u8]) -> Result<(usize, Vec<bool>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_STEP_MAGIC[..] {
+        bail!("not a sharded-chain step (bad magic)");
+    }
+    let k = c.usize()?;
+    let verdict = take_flags(&mut c)?;
+    c.done()?;
+    Ok((k, verdict))
+}
+
+/// Serialize a successful step response: `CHAIN_FLAGS_MAGIC | 0u8 |
+/// flags` — which pending output diagonals are nonzero in this daemon's
+/// row windows.
+pub fn encode_chain_flags_ok(flags: &[bool]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + flags.len() / 8 + 1);
+    buf.extend_from_slice(&CHAIN_FLAGS_MAGIC);
+    buf.push(STATUS_OK);
+    put_flags(&mut buf, flags);
+    buf
+}
+
+/// Serialize a step failure: `CHAIN_FLAGS_MAGIC | 1u8 | len | utf8`.
+pub fn encode_chain_flags_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&CHAIN_FLAGS_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a step response into the daemon's flag set; a daemon-reported
+/// failure comes back as `Err`.
+pub fn decode_chain_flags(bytes: &[u8]) -> Result<Vec<bool>> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_FLAGS_MAGIC[..] {
+        bail!("not a chain step response (bad magic; got {} bytes)", bytes.len());
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let flags = take_flags(&mut c)?;
+            c.done()?;
+            Ok(flags)
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("sharded chain daemon reported: {msg}");
+        }
+        s => bail!("unknown chain step response status {s}"),
+    }
+}
+
+/// Serialize a sharded-chain collect: `CHAIN_COLLECT_MAGIC | final
+/// verdict flags`.
+pub fn encode_chain_collect(verdict: &[bool]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12 + verdict.len() / 8 + 1);
+    buf.extend_from_slice(&CHAIN_COLLECT_MAGIC);
+    put_flags(&mut buf, verdict);
+    buf
+}
+
+/// Decode a sharded-chain collect (the inverse of
+/// [`encode_chain_collect`]).
+pub fn decode_chain_collect(bytes: &[u8]) -> Result<Vec<bool>> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_COLLECT_MAGIC[..] {
+        bail!("not a sharded-chain collect (bad magic)");
+    }
+    let verdict = take_flags(&mut c)?;
+    c.done()?;
+    Ok(verdict)
+}
+
+/// Serialize a successful collect response: `CHAIN_DONE_MAGIC | 0u8 |
+/// nterm | term windows | nsum | sum windows`.
+pub fn encode_chain_done_ok(out: &crate::taylor::ChainCollect) -> Vec<u8> {
+    let payload: usize = out
+        .term
+        .iter()
+        .chain(&out.sum)
+        .map(|w| 24 + 16 * w.re.len())
+        .sum();
+    let mut buf = Vec::with_capacity(21 + payload);
+    buf.extend_from_slice(&CHAIN_DONE_MAGIC);
+    buf.push(STATUS_OK);
+    put_usize(&mut buf, out.term.len());
+    for w in &out.term {
+        put_window(&mut buf, w);
+    }
+    put_usize(&mut buf, out.sum.len());
+    for w in &out.sum {
+        put_window(&mut buf, w);
+    }
+    buf
+}
+
+/// Serialize a collect failure: `CHAIN_DONE_MAGIC | 1u8 | len | utf8`.
+pub fn encode_chain_done_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&CHAIN_DONE_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a collect response into the daemon's value windows; a
+/// daemon-reported failure comes back as `Err`.
+pub fn decode_chain_done(bytes: &[u8]) -> Result<crate::taylor::ChainCollect> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &CHAIN_DONE_MAGIC[..] {
+        bail!("not a chain collect response (bad magic; got {} bytes)", bytes.len());
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let nterm = c.usize()?;
+            if nterm > bytes.len() {
+                bail!("chain collect claims {nterm} term windows in a {}-byte frame", bytes.len());
+            }
+            let mut out = crate::taylor::ChainCollect::default();
+            for _ in 0..nterm {
+                out.term.push(take_window(&mut c)?);
+            }
+            let nsum = c.usize()?;
+            if nsum > bytes.len() {
+                bail!("chain collect claims {nsum} sum windows in a {}-byte frame", bytes.len());
+            }
+            for _ in 0..nsum {
+                out.sum.push(take_window(&mut c)?);
+            }
+            c.done()?;
+            Ok(out)
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("sharded chain daemon reported: {msg}");
+        }
+        s => bail!("unknown chain collect response status {s}"),
+    }
+}
+
+/// One decoded sharded state-chain open: adopt tile tasks
+/// `[task_lo, task_hi)` of a matrix-free `exp(−iHt)·ψ0` chain, with the
+/// ψ0 hull and the per-round export geometry riding in the frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateOpenRefs {
+    /// State dimension (must match the referenced plane).
+    pub n: usize,
+    /// Evolution time.
+    pub t: f64,
+    /// Taylor truncation depth (1 ..= [`MAX_CHAIN_ITERS`]).
+    pub iters: usize,
+    /// Tile length the coordinator cut the SpMV plan with.
+    pub tile: usize,
+    /// First tile task this daemon owns.
+    pub task_lo: usize,
+    /// One past the last owned tile task.
+    pub task_hi: usize,
+    /// State index of the shipped ψ0 hull's first element.
+    pub x_lo: usize,
+    /// ψ0 real plane over the hull.
+    pub x_re: Vec<f64>,
+    /// ψ0 imaginary plane over the hull.
+    pub x_im: Vec<f64>,
+    /// Own-row segments whose fresh values this daemon exports each
+    /// round.
+    pub exports: Vec<(usize, usize)>,
+    /// Fingerprint of the resident `H` plane.
+    pub fp_h: u64,
+}
+
+/// Serialize a sharded state-chain open: `STATE_OPEN_MAGIC | n | t |
+/// iters | tile | task_lo | task_hi | x_lo | x_len | x_re | x_im |
+/// nexports | (lo | hi) × nexports | fp_h`.
+pub fn encode_state_open(refs: &StateOpenRefs) -> Vec<u8> {
+    debug_assert_eq!(refs.x_re.len(), refs.x_im.len());
+    let mut buf =
+        Vec::with_capacity(84 + 16 * refs.x_re.len() + 16 * refs.exports.len());
+    buf.extend_from_slice(&STATE_OPEN_MAGIC);
+    put_usize(&mut buf, refs.n);
+    put_u64(&mut buf, refs.t.to_bits());
+    put_usize(&mut buf, refs.iters);
+    put_usize(&mut buf, refs.tile);
+    put_usize(&mut buf, refs.task_lo);
+    put_usize(&mut buf, refs.task_hi);
+    put_usize(&mut buf, refs.x_lo);
+    put_usize(&mut buf, refs.x_re.len());
+    for &v in &refs.x_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in &refs.x_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    put_usize(&mut buf, refs.exports.len());
+    for &(lo, hi) in &refs.exports {
+        put_usize(&mut buf, lo);
+        put_usize(&mut buf, hi);
+    }
+    put_u64(&mut buf, refs.fp_h);
+    buf
+}
+
+/// Decode a sharded state-chain open (the inverse of
+/// [`encode_state_open`]).
+pub fn decode_state_open(bytes: &[u8]) -> Result<StateOpenRefs> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_OPEN_MAGIC[..] {
+        bail!("not a sharded state-chain open (bad magic)");
+    }
+    let n = c.usize()?;
+    let t = c.f64()?;
+    let iters = c.u64()?;
+    let tile = c.usize()?;
+    let task_lo = c.usize()?;
+    let task_hi = c.usize()?;
+    let x_lo = c.usize()?;
+    let x_len = c.usize()?;
+    if iters == 0 || iters > MAX_CHAIN_ITERS {
+        bail!("sharded state chain claims {iters} iterations (allowed 1..={MAX_CHAIN_ITERS})");
+    }
+    if task_lo > task_hi {
+        bail!("inverted sharded state-chain range [{task_lo}, {task_hi})");
+    }
+    if x_lo.checked_add(x_len).map_or(true, |hi| hi > n) {
+        bail!("state hull [{x_lo}, {x_lo}+{x_len}) exceeds dimension {n}");
+    }
+    let x_re = c.f64s(x_len)?;
+    let x_im = c.f64s(x_len)?;
+    let nexports = c.usize()?;
+    if nexports > bytes.len() {
+        bail!("state open claims {nexports} export segments in a {}-byte frame", bytes.len());
+    }
+    let mut exports = Vec::with_capacity(nexports);
+    for _ in 0..nexports {
+        let lo = c.usize()?;
+        let hi = c.usize()?;
+        if lo >= hi || hi > n {
+            bail!("export segment [{lo}, {hi}) out of bounds for n={n}");
+        }
+        exports.push((lo, hi));
+    }
+    let fp_h = c.u64()?;
+    c.done()?;
+    Ok(StateOpenRefs {
+        n,
+        t,
+        iters: iters as usize,
+        tile,
+        task_lo,
+        task_hi,
+        x_lo,
+        x_re,
+        x_im,
+        exports,
+        fp_h,
+    })
+}
+
+/// Serialize a sharded state-chain step: `STATE_STEP_MAGIC | k | len |
+/// imp_re | imp_im` — the round index plus the halo imports in segment
+/// order.
+pub fn encode_state_step(k: usize, imp_re: &[f64], imp_im: &[f64]) -> Vec<u8> {
+    debug_assert_eq!(imp_re.len(), imp_im.len());
+    let mut buf = Vec::with_capacity(20 + 16 * imp_re.len());
+    buf.extend_from_slice(&STATE_STEP_MAGIC);
+    put_usize(&mut buf, k);
+    put_usize(&mut buf, imp_re.len());
+    for &v in imp_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in imp_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Decode a sharded state-chain step (the inverse of
+/// [`encode_state_step`]).
+pub fn decode_state_step(bytes: &[u8]) -> Result<(usize, Vec<f64>, Vec<f64>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_STEP_MAGIC[..] {
+        bail!("not a sharded state-chain step (bad magic)");
+    }
+    let k = c.usize()?;
+    let len = c.usize()?;
+    let re = c.f64s(len)?;
+    let im = c.f64s(len)?;
+    c.done()?;
+    Ok((k, re, im))
+}
+
+/// Serialize a successful state-step response: `STATE_HALO_MAGIC | 0u8
+/// | len | ex_re | ex_im` — the export segment values in segment order.
+pub fn encode_state_halo_ok(ex_re: &[f64], ex_im: &[f64]) -> Vec<u8> {
+    debug_assert_eq!(ex_re.len(), ex_im.len());
+    let mut buf = Vec::with_capacity(13 + 16 * ex_re.len());
+    buf.extend_from_slice(&STATE_HALO_MAGIC);
+    buf.push(STATUS_OK);
+    put_usize(&mut buf, ex_re.len());
+    for &v in ex_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in ex_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Serialize a state-step failure: `STATE_HALO_MAGIC | 1u8 | len |
+/// utf8`.
+pub fn encode_state_halo_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&STATE_HALO_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a state-step response into the export planes; a
+/// daemon-reported failure comes back as `Err`.
+pub fn decode_state_halo(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_HALO_MAGIC[..] {
+        bail!("not a state step response (bad magic; got {} bytes)", bytes.len());
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let len = c.usize()?;
+            let re = c.f64s(len)?;
+            let im = c.f64s(len)?;
+            c.done()?;
+            Ok((re, im))
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("sharded state-chain daemon reported: {msg}");
+        }
+        s => bail!("unknown state step response status {s}"),
+    }
+}
+
+/// Serialize a sharded state-chain collect: `STATE_COLLECT_MAGIC` alone
+/// (the worker knows its own geometry).
+pub fn encode_state_collect() -> Vec<u8> {
+    STATE_COLLECT_MAGIC.to_vec()
+}
+
+/// Decode a sharded state-chain collect (the inverse of
+/// [`encode_state_collect`]).
+pub fn decode_state_collect(bytes: &[u8]) -> Result<()> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_COLLECT_MAGIC[..] {
+        bail!("not a sharded state-chain collect (bad magic)");
+    }
+    c.done()?;
+    Ok(())
+}
+
+/// Serialize a successful state-collect response: `STATE_DONE_MAGIC |
+/// 0u8 | len | sum_re | sum_im` — the daemon's own-row sum planes.
+pub fn encode_state_done_ok(sum_re: &[f64], sum_im: &[f64]) -> Vec<u8> {
+    debug_assert_eq!(sum_re.len(), sum_im.len());
+    let mut buf = Vec::with_capacity(13 + 16 * sum_re.len());
+    buf.extend_from_slice(&STATE_DONE_MAGIC);
+    buf.push(STATUS_OK);
+    put_usize(&mut buf, sum_re.len());
+    for &v in sum_re {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &v in sum_im {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf
+}
+
+/// Serialize a state-collect failure: `STATE_DONE_MAGIC | 1u8 | len |
+/// utf8`.
+pub fn encode_state_done_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(13 + msg.len());
+    buf.extend_from_slice(&STATE_DONE_MAGIC);
+    buf.push(STATUS_ERR);
+    put_usize(&mut buf, msg.len());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+/// Decode a state-collect response into the sum planes; a
+/// daemon-reported failure comes back as `Err`.
+pub fn decode_state_done(bytes: &[u8]) -> Result<(Vec<f64>, Vec<f64>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(4)? != &STATE_DONE_MAGIC[..] {
+        bail!("not a state collect response (bad magic; got {} bytes)", bytes.len());
+    }
+    match c.take(1)?[0] {
+        STATUS_OK => {
+            let len = c.usize()?;
+            let re = c.f64s(len)?;
+            let im = c.f64s(len)?;
+            c.done()?;
+            Ok((re, im))
+        }
+        STATUS_ERR => {
+            let len = c.usize()?;
+            let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+            bail!("sharded state-chain daemon reported: {msg}");
+        }
+        s => bail!("unknown state collect response status {s}"),
+    }
+}
+
 // --- wire v5: the multi-tenant serve vocabulary ---------------------------
 //
 // The frames `diamond serve` adds on top of the shard vocabulary: a
@@ -1551,11 +2172,13 @@ pub enum Routed {
 /// *next* job/chain frame, so the strict request→response rhythm of the
 /// wire is preserved.
 pub struct JobRouter {
-    planes: PlaneStore,
+    planes: Arc<Mutex<PlaneStore>>,
     plans: PlanCache,
     plan_cap: usize,
     chain_engine: ShardCoordinator,
     pending_err: Option<String>,
+    op_chain: Option<crate::taylor::ChainShardWorker>,
+    state_chain: Option<crate::taylor::StateChainShardWorker>,
     /// Jobs answered, SpMSpM and state alike (ok or err).
     pub jobs: u64,
     /// Chain jobs answered, operator and state alike (ok or err).
@@ -1565,14 +2188,29 @@ pub struct JobRouter {
 }
 
 impl JobRouter {
-    /// Router with the given plane-store and plan-memo bounds.
+    /// Router with the given plane-store and plan-memo bounds, owning a
+    /// private plane store (the process worker's shape — one router per
+    /// process, nothing to share).
     pub fn new(plane_cap: usize, plan_cap: usize) -> Self {
+        Self::with_store(
+            Arc::new(Mutex::new(PlaneStore::new(plane_cap))),
+            plan_cap,
+        )
+    }
+
+    /// Router over a **shared** plane store — `shard-serve` hands every
+    /// connection the same daemon-wide store (parity with `diamond
+    /// serve`), so a coordinator that reconnects finds its planes still
+    /// resident and its 20-byte `HavePlane` references keep hitting.
+    pub fn with_store(planes: Arc<Mutex<PlaneStore>>, plan_cap: usize) -> Self {
         JobRouter {
-            planes: PlaneStore::new(plane_cap),
+            planes,
             plans: HashMap::new(),
             plan_cap: plan_cap.max(1),
             chain_engine: ShardCoordinator::single(),
             pending_err: None,
+            op_chain: None,
+            state_chain: None,
             jobs: 0,
             chains: 0,
             plan_hits: 0,
@@ -1587,7 +2225,10 @@ impl JobRouter {
                     Ok((fp, plane)) => {
                         let actual = plane_fingerprint(&plane);
                         if actual == fp {
-                            self.planes.insert(fp, Arc::new(plane));
+                            self.planes
+                                .lock()
+                                .expect("plane store poisoned")
+                                .insert(fp, Arc::new(plane));
                         } else {
                             self.pending_err = Some(format!(
                                 "plane fingerprint mismatch: frame claims {fp:#018x}, \
@@ -1602,7 +2243,7 @@ impl JobRouter {
             Some(m) if m == PLANE_HAVE_MAGIC => {
                 match decode_plane_have(frame) {
                     Ok((fp, _n)) => {
-                        if !self.planes.contains(fp) {
+                        if !self.planes.lock().expect("plane store poisoned").contains(fp) {
                             self.pending_err = Some(format!(
                                 "unknown operand plane {fp:#018x} (evicted or never \
                                  shipped) — resend required"
@@ -1657,6 +2298,68 @@ impl JobRouter {
                     Err(msg) => Routed::Fail(encode_state_chain_err(&msg), msg),
                 }
             }
+            Some(m) if m == CHAIN_OPEN_MAGIC => {
+                self.chains += 1;
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_chain_open(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_chain_ack_err(&msg), msg),
+                }
+            }
+            Some(m) if m == CHAIN_STEP_MAGIC => {
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_chain_step(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_chain_flags_err(&msg), msg),
+                }
+            }
+            Some(m) if m == CHAIN_COLLECT_MAGIC => {
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_chain_collect(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_chain_done_err(&msg), msg),
+                }
+            }
+            Some(m) if m == STATE_OPEN_MAGIC => {
+                self.chains += 1;
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_state_open(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_chain_ack_err(&msg), msg),
+                }
+            }
+            Some(m) if m == STATE_STEP_MAGIC => {
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_state_step(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_state_halo_err(&msg), msg),
+                }
+            }
+            Some(m) if m == STATE_COLLECT_MAGIC => {
+                let res = match self.pending_err.take() {
+                    Some(msg) => Err(msg),
+                    None => self.run_state_collect(frame).map_err(|e| format!("{e:#}")),
+                };
+                match res {
+                    Ok(buf) => Routed::Reply(buf),
+                    Err(msg) => Routed::Fail(encode_state_done_err(&msg), msg),
+                }
+            }
             _ => {
                 let msg = format!(
                     "unknown shard frame ({} bytes; magic {:02x?})",
@@ -1671,6 +2374,8 @@ impl JobRouter {
     fn resolve(&self, fp: u64, n: usize, role: &str) -> Result<Arc<PackedDiagMatrix>> {
         let plane = self
             .planes
+            .lock()
+            .expect("plane store poisoned")
             .get(fp)
             .ok_or_else(|| anyhow!("job references unknown operand plane {fp:#018x} ({role}) — resend required"))?;
         if plane.dim() != n {
@@ -1777,6 +2482,82 @@ impl JobRouter {
         let out = crate::taylor::StateDriver::from_packed(&hp, refs.t, refs.psi_re, refs.psi_im)
             .run(refs.iters, &mut self.chain_engine)?;
         Ok(encode_state_chain_ok(&out.psi_re, &out.psi_im, &out.steps))
+    }
+
+    // --- wire v6: sharded chain residency -------------------------------
+    //
+    // One open operator chain and one open state chain may be resident
+    // per connection at a time; a new open replaces an abandoned one
+    // (coordinator crashed mid-chain and reconnected on the same
+    // connection) rather than wedging the daemon.
+
+    fn run_chain_open(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let refs = decode_chain_open(frame)?;
+        let hp = self.resolve(refs.fp_h, refs.n, "H")?;
+        self.op_chain = Some(crate::taylor::ChainShardWorker::open(
+            &hp, refs.t, refs.iters, refs.r0, refs.r1,
+        )?);
+        Ok(encode_chain_ack_ok())
+    }
+
+    fn run_chain_step(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let (k, verdict) = decode_chain_step(frame)?;
+        let w = self
+            .op_chain
+            .as_mut()
+            .ok_or_else(|| anyhow!("chain step without an open sharded chain"))?;
+        let flags = w.round(k, &verdict)?;
+        Ok(encode_chain_flags_ok(&flags))
+    }
+
+    fn run_chain_collect(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let verdict = decode_chain_collect(frame)?;
+        let w = self
+            .op_chain
+            .as_mut()
+            .ok_or_else(|| anyhow!("chain collect without an open sharded chain"))?;
+        let out = w.collect(&verdict)?;
+        self.op_chain = None;
+        Ok(encode_chain_done_ok(&out))
+    }
+
+    fn run_state_open(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let refs = decode_state_open(frame)?;
+        let hp = self.resolve(refs.fp_h, refs.n, "H")?;
+        self.state_chain = Some(crate::taylor::StateChainShardWorker::open(
+            &hp,
+            refs.t,
+            refs.iters,
+            refs.tile,
+            refs.task_lo,
+            refs.task_hi,
+            refs.x_lo,
+            refs.x_re,
+            refs.x_im,
+            refs.exports,
+        )?);
+        Ok(encode_chain_ack_ok())
+    }
+
+    fn run_state_step(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        let (k, imp_re, imp_im) = decode_state_step(frame)?;
+        let w = self
+            .state_chain
+            .as_mut()
+            .ok_or_else(|| anyhow!("state step without an open sharded state chain"))?;
+        let (ex_re, ex_im) = w.round(k, &imp_re, &imp_im)?;
+        Ok(encode_state_halo_ok(&ex_re, &ex_im))
+    }
+
+    fn run_state_collect(&mut self, frame: &[u8]) -> Result<Vec<u8>> {
+        decode_state_collect(frame)?;
+        let w = self
+            .state_chain
+            .as_ref()
+            .ok_or_else(|| anyhow!("state collect without an open sharded state chain"))?;
+        let (sum_re, sum_im) = w.collect()?;
+        self.state_chain = None;
+        Ok(encode_state_done_ok(&sum_re, &sum_im))
     }
 }
 
@@ -2357,6 +3138,14 @@ pub struct ShardCoordinator {
     tcp: Option<crate::coordinator::transport::TcpShardExecutor>,
     cache: HashMap<ShardKey, Arc<ShardPlan>>,
     last_plan: Option<Arc<ShardPlan>>,
+    /// Structural-plan memo of the wire-v6 sharded chain paths
+    /// ([`ShardedChainDriver`](crate::taylor::ShardedChainDriver)):
+    /// chains with a repeated offset structure replay their halo sets
+    /// instead of replanning.
+    chain_driver: crate::taylor::ShardedChainDriver,
+    /// Advertise `CMP1` frame compression when the lazy TCP executor
+    /// connects (the `--wire-compress` flag).
+    wire_compress: bool,
     stats: ShardStats,
 }
 
@@ -2373,6 +3162,7 @@ impl ShardCoordinator {
         backend: ShardBackend,
         executor: Option<ProcessShardExecutor>,
         tcp: Option<crate::coordinator::transport::TcpShardExecutor>,
+        wire_compress: bool,
     ) -> Self {
         ShardCoordinator {
             engine: KernelEngine::new(cfg),
@@ -2380,8 +3170,10 @@ impl ShardCoordinator {
             backend,
             executor,
             tcp,
+            wire_compress,
             cache: HashMap::new(),
             last_plan: None,
+            chain_driver: crate::taylor::ShardedChainDriver::new(),
             stats: ShardStats::default(),
         }
     }
@@ -2463,6 +3255,18 @@ impl ShardCoordinator {
         &self.stats
     }
 
+    /// The wire-v6 chain-fleet and `CMP1` compression counters of the
+    /// TCP executor, when one has been created (feeds the
+    /// `chain_fleet` subtree of `CountersV1`).
+    pub fn chain_fleet(
+        &self,
+    ) -> Option<(
+        crate::coordinator::transport::ChainFleetStats,
+        crate::coordinator::transport::CompressionIo,
+    )> {
+        self.tcp.as_ref().map(|t| (t.fleet, t.comp))
+    }
+
     /// The planning engine's counters (plan cache, tiles, units, skew).
     pub fn kernel_stats(&self) -> &KernelStats {
         self.engine.stats()
@@ -2519,8 +3323,10 @@ impl ShardCoordinator {
             }
             ShardBackend::Tcp { endpoints } => {
                 if self.tcp.is_none() {
-                    self.tcp =
-                        Some(crate::coordinator::transport::TcpShardExecutor::new(endpoints)?);
+                    let mut ex =
+                        crate::coordinator::transport::TcpShardExecutor::new(endpoints)?;
+                    ex.wire_compress = self.wire_compress;
+                    self.tcp = Some(ex);
                 }
                 let tcp = self.tcp.as_mut().expect("executor installed above");
                 let (p0, d0) = io_payload_totals(tcp.io());
@@ -2582,12 +3388,43 @@ impl ShardCoordinator {
         iters: usize,
     ) -> Result<crate::taylor::TaylorResult> {
         if let ShardBackend::Tcp { endpoints } = &self.backend {
+            let fleet_size = endpoints.len();
             if self.tcp.is_none() {
-                self.tcp = Some(crate::coordinator::transport::TcpShardExecutor::new(
+                let mut ex = crate::coordinator::transport::TcpShardExecutor::new(
                     endpoints.clone(),
-                )?);
+                )?;
+                ex.wire_compress = self.wire_compress;
+                self.tcp = Some(ex);
             }
             let hp = h.freeze();
+            if fleet_size >= 2 {
+                // wire v6: shard the chain itself — each daemon owns a
+                // contiguous row range for every iteration and only the
+                // prune verdicts cross the wire between rounds.
+                let tcp = self.tcp.as_mut().expect("executor installed above");
+                let (p0, d0) = io_payload_totals(tcp.io());
+                let (out, run) = self.chain_driver.run_op(tcp, &hp, t, iters)?;
+                let (p1, d1) = io_payload_totals(tcp.io());
+                tcp.fleet.resend_model_bytes = tcp
+                    .fleet
+                    .resend_model_bytes
+                    .saturating_add(run.resend_model_bytes);
+                self.stats.multiplies = self.stats.multiplies.saturating_add(iters as u64);
+                self.stats.remote_chain_jobs =
+                    self.stats.remote_chain_jobs.saturating_add(1);
+                self.stats.shards_used =
+                    self.stats.shards_used.saturating_add(run.shards as u64);
+                self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(p1 - p0);
+                self.stats.dedup_bytes_avoided =
+                    self.stats.dedup_bytes_avoided.saturating_add(d1 - d0);
+                return Ok(crate::taylor::TaylorResult {
+                    op: out.op,
+                    term: out.term,
+                    steps: out.steps,
+                    kernel: *self.engine.stats(),
+                    shard: self.stats,
+                });
+            }
             let tcp = self.tcp.as_mut().expect("executor installed above");
             let (p0, d0) = io_payload_totals(tcp.io());
             let (term, sum, steps) = tcp.execute_chain(&hp, t, iters)?;
@@ -2725,8 +3562,10 @@ impl ShardCoordinator {
             }
             ShardBackend::Tcp { endpoints } => {
                 if self.tcp.is_none() {
-                    self.tcp =
-                        Some(crate::coordinator::transport::TcpShardExecutor::new(endpoints)?);
+                    let mut ex =
+                        crate::coordinator::transport::TcpShardExecutor::new(endpoints)?;
+                    ex.wire_compress = self.wire_compress;
+                    self.tcp = Some(ex);
                 }
                 self.note_halo(&planned.tiles, &sp);
                 let tcp = self.tcp.as_mut().expect("executor installed above");
@@ -2796,13 +3635,54 @@ impl ShardCoordinator {
         psi0: &[crate::num::Complex],
     ) -> Result<crate::taylor::StateResult> {
         if let ShardBackend::Tcp { endpoints } = &self.backend {
+            let fleet_size = endpoints.len();
             if self.tcp.is_none() {
-                self.tcp = Some(crate::coordinator::transport::TcpShardExecutor::new(
+                let mut ex = crate::coordinator::transport::TcpShardExecutor::new(
                     endpoints.clone(),
-                )?);
+                )?;
+                ex.wire_compress = self.wire_compress;
+                self.tcp = Some(ex);
             }
             let hp = h.freeze();
             let (x_re, x_im) = crate::linalg::split_state(psi0);
+            if fleet_size >= 2 {
+                // wire v6: shard the state chain — each daemon owns a
+                // contiguous tile range for every iteration and only
+                // boundary ψ halos cross the wire between rounds. The
+                // tile length is the one the local engine would plan
+                // with, so the daemons rebuild the identical tiling.
+                let tile = self.engine.plan_spmv(&hp).tiles.tile;
+                let tcp = self.tcp.as_mut().expect("executor installed above");
+                let (p0, d0) = io_payload_totals(tcp.io());
+                let (out, run) =
+                    self.chain_driver
+                        .run_state(tcp, &hp, t, iters, tile, &x_re, &x_im)?;
+                let (p1, d1) = io_payload_totals(tcp.io());
+                tcp.fleet.resend_model_bytes = tcp
+                    .fleet
+                    .resend_model_bytes
+                    .saturating_add(run.resend_model_bytes);
+                self.stats.state_multiplies =
+                    self.stats.state_multiplies.saturating_add(iters as u64);
+                self.stats.remote_chain_jobs =
+                    self.stats.remote_chain_jobs.saturating_add(1);
+                self.stats.shards_used =
+                    self.stats.shards_used.saturating_add(run.shards as u64);
+                self.stats.halo_bytes = self
+                    .stats
+                    .halo_bytes
+                    .saturating_add(16u64.saturating_mul(run.halo_elems));
+                self.stats.payload_bytes = self.stats.payload_bytes.saturating_add(p1 - p0);
+                self.stats.dedup_bytes_avoided =
+                    self.stats.dedup_bytes_avoided.saturating_add(d1 - d0);
+                return Ok(crate::taylor::StateResult {
+                    psi: crate::linalg::join_state(&out.psi_re, &out.psi_im),
+                    iters,
+                    steps: out.steps,
+                    kernel: *self.engine.stats(),
+                    shard: self.stats,
+                });
+            }
             let tcp = self.tcp.as_mut().expect("executor installed above");
             let (p0, d0) = io_payload_totals(tcp.io());
             let (re, im, steps) = tcp.execute_state_chain(&hp, t, iters, &x_re, &x_im)?;
@@ -3547,7 +4427,7 @@ mod tests {
         let fp = plane_fingerprint(&a);
         for peer in [WIRE_VERSION + 1, WIRE_VERSION - 1] {
             let mut skewed = encode_hello();
-            skewed[4..].copy_from_slice(&peer.to_le_bytes());
+            skewed[4..8].copy_from_slice(&peer.to_le_bytes());
             let mut input = skewed.to_vec();
             input.extend_from_slice(&framed(&encode_plane_put(fp, &a)));
             input.extend_from_slice(&framed(&encode_job(24, 16, 0, 1, fp, fp)));
@@ -3787,6 +4667,331 @@ mod tests {
         }
         assert_eq!(steps, local.steps);
         assert_eq!(router.chains, 1);
+    }
+
+    #[test]
+    fn sharded_chain_wire_roundtrip() {
+        // Open.
+        let refs = ChainOpenRefs {
+            n: 24,
+            t: 0.5,
+            iters: 6,
+            r0: 8,
+            r1: 16,
+            fp_h: 0xFACE,
+        };
+        let open = encode_chain_open(&refs);
+        assert_eq!(open.len(), 52, "chain opens are fixed-size");
+        assert_eq!(decode_chain_open(&open).unwrap(), refs);
+        assert!(decode_chain_open(&open[..20]).is_err());
+        let bad = |f: fn(&mut ChainOpenRefs)| {
+            let mut r = refs;
+            f(&mut r);
+            decode_chain_open(&encode_chain_open(&r)).is_err()
+        };
+        assert!(bad(|r| r.iters = 0), "zero iterations rejected");
+        assert!(bad(|r| r.iters = MAX_CHAIN_ITERS as usize + 1));
+        assert!(bad(|r| (r.r0, r.r1) = (9, 3)), "inverted range rejected");
+        assert!(bad(|r| r.r1 = 25), "range past n rejected");
+        // Ack.
+        decode_chain_ack(&encode_chain_ack_ok()).unwrap();
+        let err = decode_chain_ack(&encode_chain_ack_err("no plane")).unwrap_err();
+        assert!(format!("{err:#}").contains("no plane"));
+        // Step: the verdict bitmask survives every length mod 8.
+        for nflags in [0usize, 1, 7, 8, 9, 17] {
+            let verdict: Vec<bool> = (0..nflags).map(|i| i % 3 == 0).collect();
+            let step = encode_chain_step(nflags + 1, &verdict);
+            let (k, got) = decode_chain_step(&step).unwrap();
+            assert_eq!(k, nflags + 1);
+            assert_eq!(got, verdict, "nflags={nflags}");
+        }
+        assert!(decode_chain_step(&encode_chain_step(1, &[])[..6]).is_err());
+        // Flags reply.
+        let flags = vec![true, false, true];
+        assert_eq!(decode_chain_flags(&encode_chain_flags_ok(&flags)).unwrap(), flags);
+        let err = decode_chain_flags(&encode_chain_flags_err("went sideways")).unwrap_err();
+        assert!(format!("{err:#}").contains("went sideways"));
+        // Collect request.
+        assert_eq!(decode_chain_collect(&encode_chain_collect(&flags)).unwrap(), flags);
+        // Done: term/sum windows survive bit-exactly, signed zero included.
+        let done = crate::taylor::ChainCollect {
+            term: vec![crate::taylor::ChainWindow {
+                offset: -1,
+                w_lo: 3,
+                re: vec![1.5, -0.0],
+                im: vec![0.25, 2.0],
+            }],
+            sum: vec![crate::taylor::ChainWindow {
+                offset: 0,
+                w_lo: 0,
+                re: vec![-3.5],
+                im: vec![0.0],
+            }],
+        };
+        let ok = encode_chain_done_ok(&done);
+        let got = decode_chain_done(&ok).unwrap();
+        assert_eq!(got, done);
+        assert_eq!(got.term[0].re[1].to_bits(), (-0.0f64).to_bits());
+        let err = decode_chain_done(&encode_chain_done_err("lost rows")).unwrap_err();
+        assert!(format!("{err:#}").contains("lost rows"));
+        assert!(decode_chain_done(&ok[..ok.len() - 3]).is_err());
+        // Magics must not cross.
+        assert!(decode_chain_ack(&open).is_err());
+        assert!(decode_chain_open(&encode_chain_collect(&flags)).is_err());
+    }
+
+    #[test]
+    fn sharded_state_wire_roundtrip() {
+        let refs = StateOpenRefs {
+            n: 16,
+            t: 0.25,
+            iters: 4,
+            tile: 8,
+            task_lo: 1,
+            task_hi: 3,
+            x_lo: 2,
+            x_re: vec![0.5, -0.0, 1.25],
+            x_im: vec![0.0, 2.5, -3.0],
+            exports: vec![(4, 6), (7, 8)],
+            fp_h: 0xABCD,
+        };
+        let open = encode_state_open(&refs);
+        let got = decode_state_open(&open).unwrap();
+        assert_eq!(got, refs);
+        assert_eq!(got.x_re[1].to_bits(), (-0.0f64).to_bits());
+        assert!(decode_state_open(&open[..30]).is_err());
+        let bad = |f: fn(&mut StateOpenRefs)| {
+            let mut r = refs.clone();
+            f(&mut r);
+            decode_state_open(&encode_state_open(&r)).is_err()
+        };
+        assert!(bad(|r| r.iters = 0), "zero iterations rejected");
+        assert!(bad(|r| (r.task_lo, r.task_hi) = (5, 2)), "inverted range rejected");
+        assert!(bad(|r| r.x_lo = 15), "hull past n rejected");
+        assert!(bad(|r| r.exports = vec![(6, 4)]), "inverted export segment rejected");
+        assert!(bad(|r| r.exports = vec![(10, 17)]), "export segment past n rejected");
+        // Step.
+        let step = encode_state_step(3, &[1.0, -0.0], &[0.5, 2.0]);
+        let (k, re, im) = decode_state_step(&step).unwrap();
+        assert_eq!(k, 3);
+        assert_eq!(re[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(im, vec![0.5, 2.0]);
+        assert!(decode_state_step(&step[..10]).is_err());
+        // Halo reply.
+        let (hre, him) = decode_state_halo(&encode_state_halo_ok(&[0.25], &[-1.0])).unwrap();
+        assert_eq!((hre, him), (vec![0.25], vec![-1.0]));
+        let err = decode_state_halo(&encode_state_halo_err("halo sideways")).unwrap_err();
+        assert!(format!("{err:#}").contains("halo sideways"));
+        // Collect / done.
+        decode_state_collect(&encode_state_collect()).unwrap();
+        let ok = encode_state_done_ok(&[1.5, 2.5], &[0.0, -0.0]);
+        let (dre, dim) = decode_state_done(&ok).unwrap();
+        assert_eq!(dre, vec![1.5, 2.5]);
+        assert_eq!(dim[1].to_bits(), (-0.0f64).to_bits());
+        let err = decode_state_done(&encode_state_done_err("rows lost")).unwrap_err();
+        assert!(format!("{err:#}").contains("rows lost"));
+        assert!(decode_state_done(&ok[..ok.len() - 3]).is_err());
+        // Magics must not cross (operator vs state vocabularies).
+        assert!(decode_state_open(&step).is_err());
+        assert!(decode_chain_open(&open).is_err());
+        assert!(decode_chain_step(&step).is_err());
+    }
+
+    /// An in-process fleet speaking the full wire-v6 frame vocabulary
+    /// to one [`JobRouter`] per shard — the transport the loopback TCP
+    /// tests use, minus the sockets, so the protocol handlers are
+    /// exercised in-crate.
+    struct RouterFleet {
+        routers: Vec<JobRouter>,
+    }
+
+    impl RouterFleet {
+        fn new(shards: usize) -> Self {
+            RouterFleet {
+                routers: (0..shards)
+                    .map(|_| JobRouter::new(DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP))
+                    .collect(),
+            }
+        }
+
+        fn ask(&mut self, slot: usize, frame: &[u8]) -> Vec<u8> {
+            match self.routers[slot].handle(frame) {
+                Routed::Reply(buf) | Routed::Fail(buf, _) => buf,
+                Routed::Silent => panic!("chain frame must be answered"),
+            }
+        }
+    }
+
+    impl crate::taylor::ChainFleetTransport for RouterFleet {
+        fn shards(&self) -> usize {
+            self.routers.len()
+        }
+
+        fn open_op(
+            &mut self,
+            hp: &PackedDiagMatrix,
+            t: f64,
+            iters: usize,
+            rows: &[(usize, usize)],
+        ) -> Result<()> {
+            let fp = plane_fingerprint(hp);
+            for (slot, &(r0, r1)) in rows.iter().enumerate() {
+                assert!(matches!(
+                    self.routers[slot].handle(&encode_plane_put(fp, hp)),
+                    Routed::Silent
+                ));
+                let resp = self.ask(
+                    slot,
+                    &encode_chain_open(&ChainOpenRefs {
+                        n: hp.dim(),
+                        t,
+                        iters,
+                        r0,
+                        r1,
+                        fp_h: fp,
+                    }),
+                );
+                decode_chain_ack(&resp)?;
+            }
+            Ok(())
+        }
+
+        fn round_op(&mut self, k: usize, verdict: &[bool]) -> Result<Vec<Vec<bool>>> {
+            (0..self.routers.len())
+                .map(|slot| {
+                    let resp = self.ask(slot, &encode_chain_step(k, verdict));
+                    decode_chain_flags(&resp)
+                })
+                .collect()
+        }
+
+        fn collect_op(&mut self, verdict: &[bool]) -> Result<Vec<crate::taylor::ChainCollect>> {
+            (0..self.routers.len())
+                .map(|slot| {
+                    let resp = self.ask(slot, &encode_chain_collect(verdict));
+                    decode_chain_done(&resp)
+                })
+                .collect()
+        }
+
+        fn open_state(
+            &mut self,
+            hp: &PackedDiagMatrix,
+            t: f64,
+            iters: usize,
+            tile: usize,
+            parts: Vec<crate::taylor::StateShardPart>,
+        ) -> Result<()> {
+            let fp = plane_fingerprint(hp);
+            for (slot, part) in parts.into_iter().enumerate() {
+                assert!(matches!(
+                    self.routers[slot].handle(&encode_plane_put(fp, hp)),
+                    Routed::Silent
+                ));
+                let resp = self.ask(
+                    slot,
+                    &encode_state_open(&StateOpenRefs {
+                        n: hp.dim(),
+                        t,
+                        iters,
+                        tile,
+                        task_lo: part.task_lo,
+                        task_hi: part.task_hi,
+                        x_lo: part.x_lo,
+                        x_re: part.x_re,
+                        x_im: part.x_im,
+                        exports: part.exports,
+                        fp_h: fp,
+                    }),
+                );
+                decode_chain_ack(&resp)?;
+            }
+            Ok(())
+        }
+
+        fn round_state(
+            &mut self,
+            k: usize,
+            imports: Vec<(Vec<f64>, Vec<f64>)>,
+        ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+            imports
+                .into_iter()
+                .enumerate()
+                .map(|(slot, (re, im))| {
+                    let resp = self.ask(slot, &encode_state_step(k, &re, &im));
+                    decode_state_halo(&resp)
+                })
+                .collect()
+        }
+
+        fn collect_state(&mut self) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+            (0..self.routers.len())
+                .map(|slot| {
+                    let resp = self.ask(slot, &encode_state_collect());
+                    decode_state_done(&resp)
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn router_fleet_runs_sharded_op_chain_bitwise_identical_to_local() {
+        let hp = band(20, 2);
+        let h = hp.thaw();
+        let (t, iters) = (0.3, 5);
+        let local = crate::taylor::expm_diag(&h, t, iters);
+        let mut fleet = RouterFleet::new(3);
+        let mut driver = crate::taylor::ShardedChainDriver::new();
+        let (out, run) = driver.run_op(&mut fleet, &hp, t, iters).unwrap();
+        assert_eq!(out.op, local.op);
+        assert!(out.term.bit_eq(&local.term));
+        assert_eq!(out.steps.len(), local.steps.len());
+        for (g, w) in out.steps.iter().zip(&local.steps) {
+            assert_eq!((g.k, g.term_nnzd, g.sum_nnzd), (w.k, w.term_nnzd, w.sum_nnzd));
+            assert_eq!(g.term_elements, w.term_elements);
+            assert_eq!(
+                g.sum_storage_saving.to_bits(),
+                w.sum_storage_saving.to_bits()
+            );
+            assert_eq!(g.mults, w.mults);
+        }
+        assert_eq!((run.rounds, run.shards), (iters, 3));
+        assert!(run.resend_model_bytes > 0);
+        for r in &fleet.routers {
+            assert_eq!(r.chains, 1, "each daemon admits one chain shard");
+        }
+    }
+
+    #[test]
+    fn router_fleet_runs_sharded_state_chain_bitwise_identical_to_local() {
+        let hp = band(20, 2);
+        let h = hp.thaw();
+        let (t, iters) = (0.3, 5);
+        let psi0 = test_state(20);
+        let mut sc = ShardCoordinator::single();
+        let local = crate::taylor::apply_expm_sharded(&h, t, iters, &psi0, &mut sc).unwrap();
+        let (x_re, x_im) = crate::linalg::split_state(&psi0);
+        let mut fleet = RouterFleet::new(2);
+        let mut driver = crate::taylor::ShardedChainDriver::new();
+        let (out, run) = driver
+            .run_state(&mut fleet, &hp, t, iters, 4, &x_re, &x_im)
+            .unwrap();
+        let got = crate::linalg::join_state(&out.psi_re, &out.psi_im);
+        assert_eq!(got.len(), local.psi.len());
+        for (g, w) in got.iter().zip(&local.psi) {
+            assert_eq!(g.re.to_bits(), w.re.to_bits());
+            assert_eq!(g.im.to_bits(), w.im.to_bits());
+        }
+        assert_eq!(out.steps, local.steps);
+        assert_eq!((run.rounds, run.shards), (iters, 2));
+        assert!(run.halo_elems > 0, "a banded H must exchange boundary halos");
+        assert!(
+            16 * run.halo_elems <= run.resend_model_bytes,
+            "halo traffic must undercut the resend-every-iteration model"
+        );
+        for r in &fleet.routers {
+            assert_eq!(r.chains, 1, "each daemon admits one state chain shard");
+        }
     }
 
     #[test]

@@ -7,11 +7,14 @@
 //! Three pieces (see `docs/ARCHITECTURE.md` §Shard layer for the wire
 //! spec and the connection-lifecycle contract):
 //!
-//! * the **handshake** — an 8-byte `HELLO_MAGIC | version` frame each
-//!   peer sends before anything else. Both sides require version
+//! * the **handshake** — a 12-byte `HELLO_MAGIC | version | flags`
+//!   frame each peer sends before anything else (8 bytes through v5;
+//!   v6 appended the feature-flag word). Both sides require version
 //!   *equality* ([`check_hello`]): a version-skewed peer is rejected
 //!   with a descriptive error instead of mis-parsing the job body.
-//!   The process backend prepends the same frame to its stdin pipe.
+//!   The flags negotiate optional `CMP1` frame compression
+//!   ([`HELLO_FLAG_COMPRESS`]), active only when both sides advertise
+//!   it. The process backend prepends the same frame to its stdin pipe.
 //! * **framing** — TCP is a byte stream with no EOF between jobs, so
 //!   every message after the handshake travels as
 //!   `len u64 (little-endian) | payload` ([`write_frame`] /
@@ -46,10 +49,14 @@
 //! `chain-smoke` job gates the dedup win).
 
 use crate::coordinator::shard::{
-    decode_chain_resp, decode_resp, decode_state_chain_resp, encode_chain_job, encode_err,
-    encode_job, encode_plane_have, encode_plane_put, encode_state_chain_job, encode_state_job,
-    matrix_wire_bytes, plane_fingerprint, plane_wire_bytes, JobRouter, PlaneMirror, Routed,
-    DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP, DEFAULT_WORKER_TIMEOUT,
+    decode_chain_ack, decode_chain_done, decode_chain_flags, decode_chain_resp, decode_resp,
+    decode_state_chain_resp, decode_state_done, decode_state_halo, encode_chain_collect,
+    encode_chain_job, encode_chain_open, encode_chain_step, encode_err, encode_job,
+    encode_plane_have, encode_plane_put, encode_state_chain_job, encode_state_collect,
+    encode_state_job, encode_state_open, encode_state_step, matrix_wire_bytes,
+    plane_fingerprint, plane_wire_bytes, ChainOpenRefs, JobRouter, PlaneMirror, PlaneStore,
+    Routed, StateOpenRefs, DEFAULT_PLANE_CACHE_CAP, DEFAULT_PLAN_CACHE_CAP,
+    DEFAULT_WORKER_TIMEOUT,
 };
 use crate::format::PackedDiagMatrix;
 use crate::linalg::engine::{ShardPlan, TilePlan};
@@ -59,7 +66,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -85,20 +92,37 @@ use std::time::{Duration, Instant};
 /// change the version gate must catch even though v3/v4 frames kept
 /// their shapes: a serve daemon's `PutPlane`/`HavePlane` land in a
 /// daemon-wide store shared by every tenant, not a per-connection one.
-pub const WIRE_VERSION: u32 = 5;
+/// v6 widened the hello to 12 bytes (magic | version | feature flags),
+/// added the sharded chain frames (`DCO1`…`DCD1` for operator chains,
+/// `DVO1`…`DVD1` for state chains: each daemon owns a contiguous row
+/// range across every Taylor iteration and only halo values cross the
+/// wire between rounds), and introduced optional `CMP1` plane
+/// compression ([`wire_compress`](crate::coordinator::wire_compress)),
+/// negotiated via [`HELLO_FLAG_COMPRESS`] — used only when *both*
+/// sides advertise it. `shard-serve` also promoted its plane store
+/// from per-connection to daemon-wide (parity with `diamond serve`),
+/// so a reconnecting coordinator's `HavePlane` now hits.
+pub const WIRE_VERSION: u32 = 6;
 
 /// Frame marker of the handshake (both directions, both transports).
 pub const HELLO_MAGIC: [u8; 4] = *b"DSHK";
 
-/// Byte length of the handshake frame: magic + `u32` version.
-pub const HELLO_LEN: usize = 8;
+/// Byte length of the handshake frame: magic + `u32` version + `u32`
+/// feature flags (v6; v5 and earlier sent only the first 8 bytes).
+pub const HELLO_LEN: usize = 12;
+
+/// Hello feature-flag bit: this side is willing to speak `CMP1`
+/// compressed frames. Compression activates only when both hellos
+/// carry the bit, so a `--wire-compress` client against a plain daemon
+/// (or vice versa) degrades to raw frames instead of failing.
+pub const HELLO_FLAG_COMPRESS: u32 = 1;
 
 /// Upper bound on a framed payload (16 GiB). A corrupt or hostile
 /// length prefix must never reach `Vec::with_capacity`; real shard
 /// jobs are orders of magnitude smaller.
 pub const MAX_FRAME_BYTES: u64 = 1 << 34;
 
-/// How long each side waits for the peer's 8 handshake bytes.
+/// How long each side waits for the peer's handshake bytes.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Server-side idle deadline between frames. A half-open peer (network
@@ -120,13 +144,19 @@ pub struct ServeConfig {
     /// Largest framed payload the server will read (default
     /// [`MAX_FRAME_BYTES`]).
     pub max_frame_bytes: u64,
-    /// Operand planes kept per connection (default
-    /// [`DEFAULT_PLANE_CACHE_CAP`]).
+    /// Operand planes kept in the **daemon-wide** store shared by
+    /// every connection (default [`DEFAULT_PLANE_CACHE_CAP`]): since
+    /// wire v6 a reconnecting coordinator's planes are still resident,
+    /// parity with `diamond serve`.
     pub plane_cache_cap: usize,
     /// `(plan, tiling)` memo entries kept per connection (default
     /// [`DEFAULT_PLAN_CACHE_CAP`], same bound as the coordinator-side
     /// shard-plan memo).
     pub plan_cache_cap: usize,
+    /// Advertise [`HELLO_FLAG_COMPRESS`] in the handshake and speak
+    /// `CMP1` frames to clients that advertise it too (the daemon's
+    /// `--wire-compress` flag; default off).
+    pub wire_compress: bool,
 }
 
 impl Default for ServeConfig {
@@ -135,25 +165,36 @@ impl Default for ServeConfig {
             max_frame_bytes: MAX_FRAME_BYTES,
             plane_cache_cap: DEFAULT_PLANE_CACHE_CAP,
             plan_cache_cap: DEFAULT_PLAN_CACHE_CAP,
+            wire_compress: false,
         }
     }
 }
 
 // --- handshake ------------------------------------------------------------
 
-/// The 8-byte hello frame this build sends: `HELLO_MAGIC | WIRE_VERSION`.
+/// The 12-byte hello frame this build sends with no feature flags:
+/// `HELLO_MAGIC | WIRE_VERSION | 0`.
 pub fn encode_hello() -> [u8; HELLO_LEN] {
+    encode_hello_with(0)
+}
+
+/// The 12-byte hello frame this build sends advertising `flags`:
+/// `HELLO_MAGIC | WIRE_VERSION | flags` (all little-endian).
+pub fn encode_hello_with(flags: u32) -> [u8; HELLO_LEN] {
     let mut buf = [0u8; HELLO_LEN];
     buf[..4].copy_from_slice(&HELLO_MAGIC);
-    buf[4..].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf[4..8].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf[8..].copy_from_slice(&flags.to_le_bytes());
     buf
 }
 
-/// Parse a peer's hello frame, returning its advertised version. Errors
-/// on truncation or a foreign magic (the peer is not a diamond shard
-/// transport at all).
+/// Parse a peer's hello frame, returning its advertised version. Needs
+/// only the first 8 bytes (the v2–v5 hello shape), so version skew is
+/// diagnosed *before* this build tries to read the v6 flag word a v5
+/// peer never sends. Errors on truncation or a foreign magic (the peer
+/// is not a diamond shard transport at all).
 pub fn decode_hello(bytes: &[u8]) -> Result<u32> {
-    if bytes.len() < HELLO_LEN {
+    if bytes.len() < 8 {
         bail!(
             "truncated shard handshake: got {} of {HELLO_LEN} bytes",
             bytes.len()
@@ -166,13 +207,33 @@ pub fn decode_hello(bytes: &[u8]) -> Result<u32> {
             HELLO_MAGIC
         );
     }
-    Ok(u32::from_le_bytes(bytes[4..HELLO_LEN].try_into().unwrap()))
+    Ok(u32::from_le_bytes(bytes[4..8].try_into().unwrap()))
+}
+
+/// Parse a full v6 hello, returning `(version, flags)`.
+pub fn decode_hello_flags(bytes: &[u8]) -> Result<(u32, u32)> {
+    let version = decode_hello(bytes)?;
+    if bytes.len() < HELLO_LEN {
+        bail!(
+            "truncated shard handshake: got {} of {HELLO_LEN} bytes",
+            bytes.len()
+        );
+    }
+    let flags = u32::from_le_bytes(bytes[8..HELLO_LEN].try_into().unwrap());
+    Ok((version, flags))
 }
 
 /// Validate a peer's hello against this build: same magic, same
 /// [`WIRE_VERSION`]. The error names both versions so a skewed
 /// deployment is diagnosable from either end.
 pub fn check_hello(bytes: &[u8]) -> Result<()> {
+    check_hello_flags(bytes).map(|_| ())
+}
+
+/// [`check_hello`] returning the peer's advertised feature flags, so
+/// the caller can intersect them with its own (e.g.
+/// [`HELLO_FLAG_COMPRESS`]).
+pub fn check_hello_flags(bytes: &[u8]) -> Result<u32> {
     let peer = decode_hello(bytes)?;
     if peer != WIRE_VERSION {
         bail!(
@@ -180,7 +241,29 @@ pub fn check_hello(bytes: &[u8]) -> Result<()> {
              v{WIRE_VERSION} — upgrade the older side"
         );
     }
-    Ok(())
+    let (_, flags) = decode_hello_flags(bytes)?;
+    Ok(flags)
+}
+
+/// Read a peer's hello from a stream in two stages — the 8 bytes every
+/// wire version sends first, then the v6 flag word — so a v5 peer's
+/// short hello produces the version-mismatch diagnosis instead of a
+/// read timeout waiting for flag bytes that never come. Returns the
+/// peer's feature flags.
+pub fn read_hello(r: &mut impl Read) -> Result<u32> {
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head).context("reading peer handshake")?;
+    let peer = decode_hello(&head)?;
+    if peer != WIRE_VERSION {
+        bail!(
+            "shard wire version mismatch: peer speaks v{peer}, this build speaks \
+             v{WIRE_VERSION} — upgrade the older side"
+        );
+    }
+    let mut flag_buf = [0u8; HELLO_LEN - 8];
+    r.read_exact(&mut flag_buf)
+        .context("reading peer handshake flags")?;
+    Ok(u32::from_le_bytes(flag_buf))
 }
 
 // --- framing --------------------------------------------------------------
@@ -230,6 +313,125 @@ pub fn read_frame_limited(r: &mut impl Read, max: u64) -> Result<Option<Vec<u8>>
     Ok(Some(payload))
 }
 
+// --- compressed framing ---------------------------------------------------
+
+/// Per-connection accounting of the `CMP1` envelope: how many frames
+/// were compressed, the bytes they held before compression, and the
+/// bytes that actually crossed the wire (envelope included). Feeds the
+/// `chain_fleet` subtree of `CountersV1`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompressionIo {
+    /// Frames wrapped in a `CMP1` envelope (either mode).
+    pub frames: u64,
+    /// Payload bytes before compression.
+    pub raw_bytes: u64,
+    /// Envelope bytes after compression (what the frame carried).
+    pub wire_bytes: u64,
+}
+
+impl CompressionIo {
+    /// Fold another connection's totals into this one.
+    pub fn absorb(&mut self, other: &CompressionIo) {
+        self.frames = self.frames.saturating_add(other.frames);
+        self.raw_bytes = self.raw_bytes.saturating_add(other.raw_bytes);
+        self.wire_bytes = self.wire_bytes.saturating_add(other.wire_bytes);
+    }
+}
+
+/// Cumulative counters of the wire-v6 **sharded chain** paths (operator
+/// and state), surfaced as the `chain_fleet` subtree of `CountersV1`:
+/// how many chains ran fleet-sharded, how many halo exchange rounds
+/// they took, the boundary bytes that actually crossed the wire between
+/// iterations, and the bytes a resend-every-iteration protocol would
+/// have moved instead (the denominator of the `chain-fleet-smoke`
+/// ratio gate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChainFleetStats {
+    /// Operator chains executed across ≥ 2 daemons.
+    pub sharded_chains: u64,
+    /// State chains executed across ≥ 2 daemons.
+    pub sharded_state_chains: u64,
+    /// Daemon shards those chains fanned out to (summed per chain).
+    pub fleet_shards: u64,
+    /// Halo exchange rounds driven (one per Taylor iteration).
+    pub rounds: u64,
+    /// Inter-iteration halo bytes shipped (verdict masks, flag
+    /// replies, boundary ψ values — everything between open and
+    /// collect).
+    pub halo_bytes: u64,
+    /// Bytes of the final per-shard collect responses.
+    pub collect_bytes: u64,
+    /// Bytes the pre-v6 protocol would have moved for the same chains:
+    /// full operands round-tripped to the coordinator every iteration.
+    pub resend_model_bytes: u64,
+}
+
+impl ChainFleetStats {
+    /// Fold another executor's totals into this one.
+    pub fn absorb(&mut self, other: &ChainFleetStats) {
+        self.sharded_chains = self.sharded_chains.saturating_add(other.sharded_chains);
+        self.sharded_state_chains = self
+            .sharded_state_chains
+            .saturating_add(other.sharded_state_chains);
+        self.fleet_shards = self.fleet_shards.saturating_add(other.fleet_shards);
+        self.rounds = self.rounds.saturating_add(other.rounds);
+        self.halo_bytes = self.halo_bytes.saturating_add(other.halo_bytes);
+        self.collect_bytes = self.collect_bytes.saturating_add(other.collect_bytes);
+        self.resend_model_bytes = self
+            .resend_model_bytes
+            .saturating_add(other.resend_model_bytes);
+    }
+}
+
+/// [`write_frame`] that wraps the concatenated parts in a `CMP1`
+/// envelope when `compress` is negotiated, crediting `acct`. Returns
+/// the payload bytes the frame carried (post-compression), so callers
+/// keep their wire accounting exact either way.
+pub fn write_wire_frame(
+    w: &mut impl Write,
+    parts: &[&[u8]],
+    compress: bool,
+    acct: &mut CompressionIo,
+) -> Result<u64> {
+    if !compress {
+        write_frame(w, parts).context("writing frame")?;
+        return Ok(parts.iter().map(|p| p.len() as u64).sum());
+    }
+    let mut raw = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+    for p in parts {
+        raw.extend_from_slice(p);
+    }
+    let enc = crate::coordinator::wire_compress::compress_payload(&raw);
+    acct.frames = acct.frames.saturating_add(1);
+    acct.raw_bytes = acct.raw_bytes.saturating_add(raw.len() as u64);
+    acct.wire_bytes = acct.wire_bytes.saturating_add(enc.len() as u64);
+    write_frame(w, &[&enc]).context("writing compressed frame")?;
+    Ok(enc.len() as u64)
+}
+
+/// [`read_frame_limited`] that unwraps the `CMP1` envelope when
+/// `compress` is negotiated, crediting `acct`. Returns the decoded
+/// payload plus the bytes that crossed the wire for it.
+pub fn read_wire_frame(
+    r: &mut impl Read,
+    max: u64,
+    compress: bool,
+    acct: &mut CompressionIo,
+) -> Result<Option<(Vec<u8>, u64)>> {
+    let Some(frame) = read_frame_limited(r, max)? else {
+        return Ok(None);
+    };
+    let wire = frame.len() as u64;
+    if !compress {
+        return Ok(Some((frame, wire)));
+    }
+    let raw = crate::coordinator::wire_compress::decompress_payload(&frame)?;
+    acct.frames = acct.frames.saturating_add(1);
+    acct.raw_bytes = acct.raw_bytes.saturating_add(raw.len() as u64);
+    acct.wire_bytes = acct.wire_bytes.saturating_add(wire);
+    Ok(Some((raw, wire)))
+}
+
 // --- the server side ------------------------------------------------------
 
 /// Serve one accepted connection to completion: exchange handshakes
@@ -240,42 +442,58 @@ pub fn read_frame_limited(r: &mut impl Read, max: u64) -> Result<Option<Vec<u8>>
 /// until the peer closes. Job-level failures are reported as framed
 /// error responses and the connection stays up; transport or handshake
 /// failures tear it down.
-fn handle_conn(mut stream: TcpStream, peer: &str, cfg: &ServeConfig) -> Result<()> {
+fn handle_conn(
+    mut stream: TcpStream,
+    peer: &str,
+    cfg: &ServeConfig,
+    store: Arc<Mutex<PlaneStore>>,
+) -> Result<()> {
     let _ = stream.set_nodelay(true);
+    let my_flags = if cfg.wire_compress {
+        HELLO_FLAG_COMPRESS
+    } else {
+        0
+    };
     stream
-        .write_all(&encode_hello())
+        .write_all(&encode_hello_with(my_flags))
         .and_then(|()| stream.flush())
         .context("sending handshake")?;
     stream
         .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
         .context("arming handshake deadline")?;
-    let mut hello = [0u8; HELLO_LEN];
-    stream
-        .read_exact(&mut hello)
-        .context("reading client handshake")?;
-    if let Err(e) = check_hello(&hello) {
-        // Reject in our own framing: a same-framing client decodes a
-        // structured error, anything else sees the connection close.
-        let _ = write_frame(&mut stream, &[&encode_err(&format!("{e:#}"))]);
-        return Err(e);
-    }
+    let peer_flags = match read_hello(&mut stream) {
+        Ok(flags) => flags,
+        Err(e) => {
+            // Reject in our own framing: a same-framing client decodes
+            // a structured error, anything else sees the connection
+            // close.
+            let _ = write_frame(&mut stream, &[&encode_err(&format!("{e:#}"))]);
+            return Err(e);
+        }
+    };
+    let compress = cfg.wire_compress && (peer_flags & HELLO_FLAG_COMPRESS) != 0;
     stream
         .set_read_timeout(Some(CONN_IDLE_TIMEOUT))
         .context("arming idle deadline")?;
 
-    let mut router = JobRouter::new(cfg.plane_cache_cap, cfg.plan_cache_cap);
-    while let Some(frame) = read_frame_limited(&mut stream, cfg.max_frame_bytes)? {
+    let mut comp = CompressionIo::default();
+    let mut router = JobRouter::with_store(store, cfg.plan_cache_cap);
+    while let Some((frame, _)) =
+        read_wire_frame(&mut stream, cfg.max_frame_bytes, compress, &mut comp)?
+    {
         match router.handle(&frame) {
             Routed::Silent => {}
             Routed::Reply(resp) => {
-                write_frame(&mut stream, &[&resp]).context("writing response")?;
+                write_wire_frame(&mut stream, &[&resp], compress, &mut comp)
+                    .context("writing response")?;
             }
             Routed::Fail(resp, msg) => {
                 // The client gets a decodable framed error and may
                 // retry (e.g. resend an evicted plane); the connection
                 // stays up.
                 eprintln!("shard-serve: {peer}: {msg}");
-                write_frame(&mut stream, &[&resp]).context("writing error response")?;
+                write_wire_frame(&mut stream, &[&resp], compress, &mut comp)
+                    .context("writing error response")?;
             }
         }
     }
@@ -283,6 +501,12 @@ fn handle_conn(mut stream: TcpStream, peer: &str, cfg: &ServeConfig) -> Result<(
         "shard-serve: {peer}: closed after {} job(s) + {} chain(s), {} plan-cache hit(s)",
         router.jobs, router.chains, router.plan_hits
     );
+    if comp.frames > 0 {
+        eprintln!(
+            "shard-serve: {peer}: compressed {} frame(s): {} raw -> {} wire bytes",
+            comp.frames, comp.raw_bytes, comp.wire_bytes
+        );
+    }
     Ok(())
 }
 
@@ -294,6 +518,11 @@ fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>, cfg: Se
     let stopped = |stop: &Option<Arc<AtomicBool>>| {
         stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst))
     };
+    // One daemon-wide plane store shared by every connection (parity
+    // with `diamond serve`): a coordinator that reconnects finds its
+    // content-addressed planes still resident instead of re-shipping
+    // them.
+    let store = Arc::new(Mutex::new(PlaneStore::new(cfg.plane_cache_cap)));
     loop {
         match listener.accept() {
             Ok((stream, peer)) => {
@@ -302,10 +531,11 @@ fn run_accept_loop(listener: TcpListener, stop: Option<Arc<AtomicBool>>, cfg: Se
                 }
                 let peer = peer.to_string();
                 let conn_cfg = cfg.clone();
+                let conn_store = Arc::clone(&store);
                 let _ = std::thread::Builder::new()
                     .name(format!("shard-conn-{peer}"))
                     .spawn(move || {
-                        if let Err(e) = handle_conn(stream, &peer, &conn_cfg) {
+                        if let Err(e) = handle_conn(stream, &peer, &conn_cfg, conn_store) {
                             eprintln!("shard-serve: {peer}: {e:#}");
                         }
                     });
@@ -468,6 +698,9 @@ struct Exchanged {
     /// recovered by resending full `PutPlane`s — the caller must reset
     /// its mirror to exactly the resent planes.
     retried: bool,
+    /// `CMP1` compression accounting for this exchange (all-zero on an
+    /// uncompressed connection).
+    comp: CompressionIo,
 }
 
 type ExchangeResult = Result<Exchanged>;
@@ -526,12 +759,27 @@ pub struct TcpShardExecutor {
     /// the exchange self-heals by resending — correctness never depends
     /// on the caps agreeing.
     pub plane_cache_cap: usize,
+    /// Advertise [`HELLO_FLAG_COMPRESS`] when connecting and speak
+    /// `CMP1` frames on connections whose daemon advertises it too
+    /// (the coordinator's `--wire-compress` flag; default off).
+    pub wire_compress: bool,
     conns: Vec<Option<TcpStream>>,
-    /// Per-slot mirror of the server connection's plane store — decides
-    /// Put vs Have without a round-trip. Index-aligned with `conns`
-    /// (each connection has its own server-side store).
+    /// Whether each slot's connection negotiated compression
+    /// (index-aligned with `conns`; meaningless while the slot is
+    /// disconnected).
+    comp_ok: Vec<bool>,
+    /// Per-slot mirror of the daemon's plane store — decides Put vs
+    /// Have without a round-trip. Since wire v6 the server store is
+    /// daemon-wide, so mirrors survive reconnects (a stale mirror
+    /// self-heals through the resend-once recovery).
     mirrors: Vec<PlaneMirror>,
     io: Vec<EndpointIo>,
+    /// Cumulative `CMP1` compression accounting across every
+    /// connection this executor opened.
+    pub comp: CompressionIo,
+    /// Cumulative sharded-chain fleet counters (rounds, halo bytes,
+    /// resend model) across every sharded chain this executor drove.
+    pub fleet: ChainFleetStats,
 }
 
 impl TcpShardExecutor {
@@ -553,9 +801,13 @@ impl TcpShardExecutor {
             connect_timeout: DEFAULT_CONNECT_TIMEOUT,
             timeout: DEFAULT_WORKER_TIMEOUT,
             plane_cache_cap: DEFAULT_PLANE_CACHE_CAP,
+            wire_compress: false,
             conns: Vec::new(),
+            comp_ok: Vec::new(),
             mirrors: Vec::new(),
             io,
+            comp: CompressionIo::default(),
+            fleet: ChainFleetStats::default(),
         })
     }
 
@@ -571,7 +823,9 @@ impl TcpShardExecutor {
     }
 
     /// Dial, deadline-arm and handshake the connection for `slot`.
-    fn connect(&mut self, slot: usize) -> Result<TcpStream> {
+    /// Returns the stream plus whether `CMP1` compression was
+    /// negotiated (both sides advertised [`HELLO_FLAG_COMPRESS`]).
+    fn connect(&mut self, slot: usize) -> Result<(TcpStream, bool)> {
         let ep_idx = slot % self.endpoints.len();
         let ep = &self.endpoints[ep_idx];
         let addr = ep
@@ -597,15 +851,19 @@ impl TcpShardExecutor {
         stream
             .set_read_timeout(Some(self.timeout.min(HANDSHAKE_TIMEOUT)))
             .context("arming handshake deadline")?;
+        let my_flags = if self.wire_compress {
+            HELLO_FLAG_COMPRESS
+        } else {
+            0
+        };
         stream
-            .write_all(&encode_hello())
+            .write_all(&encode_hello_with(my_flags))
             .and_then(|()| stream.flush())
             .with_context(|| format!("sending handshake to {ep}"))?;
-        let mut hello = [0u8; HELLO_LEN];
-        stream
-            .read_exact(&mut hello)
-            .with_context(|| format!("reading handshake from {ep} (is it `diamond shard-serve`?)"))?;
-        check_hello(&hello).with_context(|| format!("shard endpoint {ep} rejected"))?;
+        let peer_flags = read_hello(&mut stream).with_context(|| {
+            format!("reading handshake from {ep} (is it `diamond shard-serve`?)")
+        })?;
+        let compress = self.wire_compress && (peer_flags & HELLO_FLAG_COMPRESS) != 0;
         stream
             .set_read_timeout(Some(self.timeout))
             .context("arming read deadline")?;
@@ -613,7 +871,35 @@ impl TcpShardExecutor {
         rec.connects += 1;
         rec.bytes_sent += HELLO_LEN as u64;
         rec.bytes_received += HELLO_LEN as u64;
-        Ok(stream)
+        Ok((stream, compress))
+    }
+
+    /// Grow the slot-indexed pools (connections, negotiated-compression
+    /// flags, plane mirrors) to hold at least `n` slots.
+    fn reserve_slots(&mut self, n: usize) {
+        if self.conns.len() < n {
+            self.conns.resize_with(n, || None);
+        }
+        if self.comp_ok.len() < n {
+            self.comp_ok.resize(n, false);
+        }
+        let cap = self.plane_cache_cap;
+        if self.mirrors.len() < n {
+            self.mirrors.resize_with(n, || PlaneMirror::new(cap));
+        }
+    }
+
+    /// Connect `slot` if it is not already connected. The slot's plane
+    /// mirror is **kept** across reconnects: the daemon-wide store
+    /// (wire v6) likely still holds the planes, and a stale mirror
+    /// self-heals through the resend-once recovery.
+    fn ensure_conn(&mut self, slot: usize) -> Result<()> {
+        if self.conns[slot].is_none() {
+            let (s, compress) = self.connect(slot)?;
+            self.conns[slot] = Some(s);
+            self.comp_ok[slot] = compress;
+        }
+        Ok(())
     }
 
     /// Execute every range of `sp` on the remote endpoints and return
@@ -631,35 +917,22 @@ impl TcpShardExecutor {
         sp: &ShardPlan,
     ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
         let n_ranges = sp.ranges.len();
-        if self.conns.len() < n_ranges {
-            self.conns.resize_with(n_ranges, || None);
-        }
-        let cap = self.plane_cache_cap;
-        if self.mirrors.len() < n_ranges {
-            self.mirrors.resize_with(n_ranges, || PlaneMirror::new(cap));
-        }
+        self.reserve_slots(n_ranges);
         let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
             (0..n_ranges).map(|_| None).collect();
 
         // Connect every needed slot up front, before any job is sent:
         // a dead endpoint fails the multiply inside the connect
-        // deadline without leaving half the fleet mid-job.
+        // deadline without leaving half the fleet mid-job. A fresh
+        // connection keeps its mirror: the daemon-wide store (wire v6)
+        // likely still holds our planes, and a stale guess self-heals
+        // through the resend-once recovery.
         for (i, r) in sp.ranges.iter().enumerate() {
             if r.task_lo == r.task_hi {
                 slots[i] = Some((Vec::new(), Vec::new()));
-            } else if self.conns[i].is_none() {
-                match self.connect(i) {
-                    Ok(s) => {
-                        // A fresh connection means a fresh (empty)
-                        // server-side plane store.
-                        self.conns[i] = Some(s);
-                        self.mirrors[i].clear();
-                    }
-                    Err(e) => {
-                        self.poison();
-                        return Err(e);
-                    }
-                }
+            } else if let Err(e) = self.ensure_conn(i) {
+                self.poison();
+                return Err(e);
             }
         }
 
@@ -720,9 +993,10 @@ impl TcpShardExecutor {
                 }
             };
             let job = encode_job(a.dim(), tile, r.task_lo, r.task_hi, fa, fb);
+            let compress = self.comp_ok[i];
             let txc = tx.clone();
             std::thread::spawn(move || {
-                let _ = txc.send((i, exchange(&mut job_stream, &job, &ship)));
+                let _ = txc.send((i, exchange(&mut job_stream, &job, &ship, compress)));
             });
             cancel.push((i, cancel_stream));
             inflight += 1;
@@ -764,6 +1038,7 @@ impl TcpShardExecutor {
                         rec.bytes_received += x.received;
                         rec.payload_bytes += x.payload;
                         rec.dedup_bytes_avoided += x.dedup;
+                        self.comp.absorb(&x.comp);
                         slots[i] = Some((x.re, x.im));
                         done += 1;
                     }
@@ -813,30 +1088,16 @@ impl TcpShardExecutor {
         x_im: &[f64],
     ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
         let n_ranges = sp.ranges.len();
-        if self.conns.len() < n_ranges {
-            self.conns.resize_with(n_ranges, || None);
-        }
-        let cap = self.plane_cache_cap;
-        if self.mirrors.len() < n_ranges {
-            self.mirrors.resize_with(n_ranges, || PlaneMirror::new(cap));
-        }
+        self.reserve_slots(n_ranges);
         let mut slots: Vec<Option<(Vec<f64>, Vec<f64>)>> =
             (0..n_ranges).map(|_| None).collect();
 
         for (i, r) in sp.ranges.iter().enumerate() {
             if r.task_lo == r.task_hi {
                 slots[i] = Some((Vec::new(), Vec::new()));
-            } else if self.conns[i].is_none() {
-                match self.connect(i) {
-                    Ok(s) => {
-                        self.conns[i] = Some(s);
-                        self.mirrors[i].clear();
-                    }
-                    Err(e) => {
-                        self.poison();
-                        return Err(e);
-                    }
-                }
+            } else if let Err(e) = self.ensure_conn(i) {
+                self.poison();
+                return Err(e);
             }
         }
 
@@ -888,9 +1149,10 @@ impl TcpShardExecutor {
                 &x_re[x_lo..x_hi],
                 &x_im[x_lo..x_hi],
             );
+            let compress = self.comp_ok[i];
             let txc = tx.clone();
             std::thread::spawn(move || {
-                let _ = txc.send((i, exchange_state(&mut job_stream, &job, &ship)));
+                let _ = txc.send((i, exchange_state(&mut job_stream, &job, &ship, compress)));
             });
             cancel.push((i, cancel_stream));
             inflight += 1;
@@ -931,6 +1193,7 @@ impl TcpShardExecutor {
                         rec.bytes_received += x.received;
                         rec.payload_bytes += x.payload;
                         rec.dedup_bytes_avoided += x.dedup;
+                        self.comp.absorb(&x.comp);
                         slots[i] = Some((x.re, x.im));
                         done += 1;
                     }
@@ -977,25 +1240,12 @@ impl TcpShardExecutor {
         iters: usize,
     ) -> Result<(PackedDiagMatrix, PackedDiagMatrix, Vec<TaylorStep>)> {
         let n = hp.dim();
-        if self.conns.is_empty() {
-            self.conns.push(None);
+        self.reserve_slots(1);
+        if let Err(e) = self.ensure_conn(0) {
+            self.poison();
+            return Err(e);
         }
-        let cap = self.plane_cache_cap;
-        if self.mirrors.is_empty() {
-            self.mirrors.push(PlaneMirror::new(cap));
-        }
-        if self.conns[0].is_none() {
-            match self.connect(0) {
-                Ok(s) => {
-                    self.conns[0] = Some(s);
-                    self.mirrors[0].clear();
-                }
-                Err(e) => {
-                    self.poison();
-                    return Err(e);
-                }
-            }
-        }
+        let compress = self.comp_ok[0];
         let fh = plane_fingerprint(hp);
         let put_h = encode_plane_put(fh, hp);
         let have_h = encode_plane_have(fh, n);
@@ -1020,34 +1270,40 @@ impl TcpShardExecutor {
             u64,
             bool,
         );
-        let run = (|| -> Result<ChainRun> {
+        let mut comp = CompressionIo::default();
+        let run = (|comp: &mut CompressionIo| -> Result<ChainRun> {
             let first: &Vec<u8> = if resident { &have_h } else { &put_h };
             let first_shipped = if resident { 0 } else { h_bytes };
-            write_frame(stream, &[first]).context("sending chain operand plane")?;
-            write_frame(stream, &[&job]).context("sending chain job")?;
-            let mut sent = (16 + first.len() + job.len()) as u64;
-            let frame = read_frame(stream)
+            let w1 = write_wire_frame(stream, &[first], compress, comp)
+                .context("sending chain operand plane")?;
+            let w2 = write_wire_frame(stream, &[&job], compress, comp)
+                .context("sending chain job")?;
+            let mut sent = 16 + w1 + w2;
+            let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, comp)
                 .context("reading chain response")?
                 .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
-            let mut received = (8 + frame.len()) as u64;
+            let mut received = 8 + wr;
             match decode_chain_resp(&frame) {
                 Ok(out) => Ok((out, first_shipped, sent, received, false)),
                 Err(e) if format!("{e:#}").contains("unknown operand plane") => {
                     // The server evicted H (or our mirror over-assumed
                     // its cap): resend in full, once.
-                    write_frame(stream, &[&put_h]).context("resending chain operand plane")?;
-                    write_frame(stream, &[&job]).context("resending chain job")?;
-                    sent += (16 + put_h.len() + job.len()) as u64;
-                    let frame = read_frame(stream)
+                    let w1 = write_wire_frame(stream, &[&put_h], compress, comp)
+                        .context("resending chain operand plane")?;
+                    let w2 = write_wire_frame(stream, &[&job], compress, comp)
+                        .context("resending chain job")?;
+                    sent += 16 + w1 + w2;
+                    let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, comp)
                         .context("reading chain response after resend")?
                         .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
-                    received += (8 + frame.len()) as u64;
+                    received += 8 + wr;
                     let out = decode_chain_resp(&frame)?;
                     Ok((out, first_shipped + h_bytes, sent, received, true))
                 }
                 Err(e) => Err(e),
             }
-        })();
+        })(&mut comp);
+        self.comp.absorb(&comp);
         // Restore the per-multiply deadline for subsequent jobs on this
         // connection.
         if let Some(s) = self.conns[0].as_mut() {
@@ -1109,25 +1365,12 @@ impl TcpShardExecutor {
         x_im: &[f64],
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<StateStep>)> {
         let n = hp.dim();
-        if self.conns.is_empty() {
-            self.conns.push(None);
+        self.reserve_slots(1);
+        if let Err(e) = self.ensure_conn(0) {
+            self.poison();
+            return Err(e);
         }
-        let cap = self.plane_cache_cap;
-        if self.mirrors.is_empty() {
-            self.mirrors.push(PlaneMirror::new(cap));
-        }
-        if self.conns[0].is_none() {
-            match self.connect(0) {
-                Ok(s) => {
-                    self.conns[0] = Some(s);
-                    self.mirrors[0].clear();
-                }
-                Err(e) => {
-                    self.poison();
-                    return Err(e);
-                }
-            }
-        }
+        let compress = self.comp_ok[0];
         let fh = plane_fingerprint(hp);
         let put_h = encode_plane_put(fh, hp);
         let have_h = encode_plane_have(fh, n);
@@ -1149,35 +1392,40 @@ impl TcpShardExecutor {
 
         // (result, plane bytes shipped, wire bytes sent/received, retried)
         type StateChainRun = ((Vec<f64>, Vec<f64>, Vec<StateStep>), u64, u64, u64, bool);
-        let run = (|| -> Result<StateChainRun> {
+        let mut comp = CompressionIo::default();
+        let run = (|comp: &mut CompressionIo| -> Result<StateChainRun> {
             let first: &Vec<u8> = if resident { &have_h } else { &put_h };
             let first_shipped = if resident { 0 } else { h_bytes } + psi_bytes;
-            write_frame(stream, &[first]).context("sending state chain operand plane")?;
-            write_frame(stream, &[&job]).context("sending state chain job")?;
-            let mut sent = (16 + first.len() + job.len()) as u64;
-            let frame = read_frame(stream)
+            let w1 = write_wire_frame(stream, &[first], compress, comp)
+                .context("sending state chain operand plane")?;
+            let w2 = write_wire_frame(stream, &[&job], compress, comp)
+                .context("sending state chain job")?;
+            let mut sent = 16 + w1 + w2;
+            let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, comp)
                 .context("reading state chain response")?
                 .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
-            let mut received = (8 + frame.len()) as u64;
+            let mut received = 8 + wr;
             match decode_state_chain_resp(&frame) {
                 Ok(out) => Ok((out, first_shipped, sent, received, false)),
                 Err(e) if format!("{e:#}").contains("unknown operand plane") => {
                     // The server evicted H (or our mirror over-assumed
                     // its cap): resend in full, once.
-                    write_frame(stream, &[&put_h])
+                    let w1 = write_wire_frame(stream, &[&put_h], compress, comp)
                         .context("resending state chain operand plane")?;
-                    write_frame(stream, &[&job]).context("resending state chain job")?;
-                    sent += (16 + put_h.len() + job.len()) as u64;
-                    let frame = read_frame(stream)
+                    let w2 = write_wire_frame(stream, &[&job], compress, comp)
+                        .context("resending state chain job")?;
+                    sent += 16 + w1 + w2;
+                    let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, comp)
                         .context("reading state chain response after resend")?
                         .ok_or_else(|| anyhow!("server closed the connection mid-chain"))?;
-                    received += (8 + frame.len()) as u64;
+                    received += 8 + wr;
                     let out = decode_state_chain_resp(&frame)?;
                     Ok((out, first_shipped + h_bytes + psi_bytes, sent, received, true))
                 }
                 Err(e) => Err(e),
             }
-        })();
+        })(&mut comp);
+        self.comp.absorb(&comp);
         // Restore the per-multiply deadline for subsequent jobs on this
         // connection.
         if let Some(s) = self.conns[0].as_mut() {
@@ -1222,16 +1470,429 @@ impl TcpShardExecutor {
 
     /// Drop every pooled connection (after a failure): the next multiply
     /// reconnects from scratch instead of reusing a stream whose framing
-    /// state is unknown. The plane mirrors are cleared with them — a new
-    /// connection starts with an empty server-side store.
+    /// state is unknown. The plane mirrors are **kept** — the daemon's
+    /// store is daemon-wide since wire v6, so the planes likely survive
+    /// the reconnect, and an over-optimistic mirror self-heals through
+    /// the resend-once recovery.
     fn poison(&mut self) {
         for c in self.conns.iter_mut() {
             if let Some(c) = c.take() {
                 let _ = c.shutdown(Shutdown::Both);
             }
         }
-        for m in self.mirrors.iter_mut() {
-            m.clear();
+    }
+
+    // --- wire v6: the sharded-chain fleet transport -----------------------
+
+    /// Write one framed fleet message to `slot` (compressing when the
+    /// slot negotiated it) and account the wire bytes. Returns the
+    /// on-wire byte count, length prefix included.
+    fn fleet_send(&mut self, slot: usize, frame: &[u8]) -> Result<u64> {
+        let ep_idx = slot % self.endpoints.len();
+        let compress = *self.comp_ok.get(slot).unwrap_or(&false);
+        let mut comp = CompressionIo::default();
+        let res = {
+            let stream = self
+                .conns
+                .get_mut(slot)
+                .and_then(|c| c.as_mut())
+                .ok_or_else(|| anyhow!("shard slot {slot} is not connected"))?;
+            write_wire_frame(stream, &[frame], compress, &mut comp)
+        };
+        self.comp.absorb(&comp);
+        let w = res
+            .with_context(|| format!("sending fleet frame to {}", self.endpoints[ep_idx]))?;
+        self.io[ep_idx].bytes_sent += 8 + w;
+        Ok(8 + w)
+    }
+
+    /// Read one framed fleet message from `slot` (decompressing when
+    /// negotiated) and account the wire bytes. Returns the payload plus
+    /// the on-wire byte count, length prefix included.
+    fn fleet_recv(&mut self, slot: usize) -> Result<(Vec<u8>, u64)> {
+        let ep_idx = slot % self.endpoints.len();
+        let compress = *self.comp_ok.get(slot).unwrap_or(&false);
+        let mut comp = CompressionIo::default();
+        let res = {
+            let stream = self
+                .conns
+                .get_mut(slot)
+                .and_then(|c| c.as_mut())
+                .ok_or_else(|| anyhow!("shard slot {slot} is not connected"))?;
+            read_wire_frame(stream, MAX_FRAME_BYTES, compress, &mut comp)
+        };
+        self.comp.absorb(&comp);
+        let (frame, wr) = res
+            .with_context(|| format!("reading fleet frame from {}", self.endpoints[ep_idx]))?
+            .ok_or_else(|| {
+                anyhow!(
+                    "{} closed the connection mid-chain",
+                    self.endpoints[ep_idx]
+                )
+            })?;
+        self.io[ep_idx].bytes_received += 8 + wr;
+        Ok((frame, 8 + wr))
+    }
+
+    /// [`ChainFleetTransport::open_op`](crate::taylor::ChainFleetTransport::open_op)
+    /// body; the trait method poison-wraps it. One slot per endpoint:
+    /// ship `H` (Put once, Have after — the daemon-wide store makes the
+    /// mirror's prediction stick across chains), frame the open, gather
+    /// the acks. A daemon that evicted `H` triggers the same
+    /// resend-once recovery the job paths use.
+    fn fleet_open_op(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        rows: &[(usize, usize)],
+    ) -> Result<()> {
+        let s = self.endpoints.len();
+        if rows.len() != s {
+            bail!("row partition has {} ranges for {s} endpoints", rows.len());
+        }
+        let n = hp.dim();
+        let fh = plane_fingerprint(hp);
+        let put_h = encode_plane_put(fh, hp);
+        let have_h = encode_plane_have(fh, n);
+        let h_bytes = plane_wire_bytes(hp);
+        self.reserve_slots(s);
+        for slot in 0..s {
+            self.ensure_conn(slot)?;
+        }
+        // Write every slot's plane + open before reading any ack, so
+        // the daemons admit their chain shards concurrently.
+        let mut opens = Vec::with_capacity(s);
+        for (slot, &(r0, r1)) in rows.iter().enumerate() {
+            let resident = self.mirrors[slot].note(fh);
+            let first: &[u8] = if resident { &have_h } else { &put_h };
+            self.fleet_send(slot, first)?;
+            if resident {
+                self.io[slot].dedup_bytes_avoided += h_bytes;
+            } else {
+                self.io[slot].payload_bytes += h_bytes;
+            }
+            let open = encode_chain_open(&ChainOpenRefs {
+                n,
+                t,
+                iters,
+                r0,
+                r1,
+                fp_h: fh,
+            });
+            self.fleet_send(slot, &open)?;
+            opens.push(open);
+        }
+        for slot in 0..s {
+            let (ack, _) = self.fleet_recv(slot)?;
+            match decode_chain_ack(&ack) {
+                Ok(()) => {}
+                Err(e) if format!("{e:#}").contains("unknown operand plane") => {
+                    // The daemon evicted H (or the mirror over-assumed
+                    // its cap): resend in full, once.
+                    self.fleet_send(slot, &put_h)?;
+                    self.io[slot].payload_bytes += h_bytes;
+                    self.fleet_send(slot, &opens[slot])?;
+                    let (ack, _) = self.fleet_recv(slot)?;
+                    decode_chain_ack(&ack)
+                        .with_context(|| format!("chain open on {}", self.endpoint_of(slot)))?;
+                    self.mirrors[slot].reset_to(&[fh]);
+                }
+                Err(e) => {
+                    return Err(e.context(format!("chain open on {}", self.endpoint_of(slot))));
+                }
+            }
+            self.io[slot].round_trips += 1;
+        }
+        self.fleet.sharded_chains += 1;
+        self.fleet.fleet_shards += s as u64;
+        Ok(())
+    }
+
+    /// [`ChainFleetTransport::round_op`](crate::taylor::ChainFleetTransport::round_op)
+    /// body: broadcast the verdict mask, gather every daemon's nonzero
+    /// flags. Write-all-then-read-all, so the fleet multiplies
+    /// concurrently; the verdict + flag traffic is the operator chain's
+    /// entire inter-iteration wire cost and lands in `halo_bytes`.
+    fn fleet_round_op(&mut self, k: usize, verdict: &[bool]) -> Result<Vec<Vec<bool>>> {
+        let s = self.endpoints.len();
+        let step = encode_chain_step(k, verdict);
+        let mut halo = 0u64;
+        for slot in 0..s {
+            halo += self.fleet_send(slot, &step)?;
+        }
+        let mut flags = Vec::with_capacity(s);
+        for slot in 0..s {
+            let (frame, wire) = self.fleet_recv(slot)?;
+            halo += wire;
+            flags.push(
+                decode_chain_flags(&frame)
+                    .with_context(|| format!("chain round {k} on {}", self.endpoint_of(slot)))?,
+            );
+            self.io[slot].round_trips += 1;
+        }
+        self.fleet.rounds += 1;
+        self.fleet.halo_bytes += halo;
+        Ok(flags)
+    }
+
+    /// [`ChainFleetTransport::collect_op`](crate::taylor::ChainFleetTransport::collect_op)
+    /// body: broadcast the final verdict, gather every daemon's term and
+    /// sum row windows (the only time operand *values* cross the wire
+    /// coordinator-ward).
+    fn fleet_collect_op(
+        &mut self,
+        verdict: &[bool],
+    ) -> Result<Vec<crate::taylor::ChainCollect>> {
+        let s = self.endpoints.len();
+        let req = encode_chain_collect(verdict);
+        let mut sent = 0u64;
+        for slot in 0..s {
+            sent += self.fleet_send(slot, &req)?;
+        }
+        let mut out = Vec::with_capacity(s);
+        let mut recv = 0u64;
+        for slot in 0..s {
+            let (frame, wire) = self.fleet_recv(slot)?;
+            recv += wire;
+            out.push(
+                decode_chain_done(&frame)
+                    .with_context(|| format!("chain collect on {}", self.endpoint_of(slot)))?,
+            );
+            self.io[slot].round_trips += 1;
+        }
+        self.fleet.halo_bytes += sent;
+        self.fleet.collect_bytes += recv;
+        Ok(out)
+    }
+
+    /// [`ChainFleetTransport::open_state`](crate::taylor::ChainFleetTransport::open_state)
+    /// body: per daemon, ship `H` content-addressed plus the open frame
+    /// carrying its task range, ψ0 hull and export geometry.
+    fn fleet_open_state(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        tile: usize,
+        parts: Vec<crate::taylor::StateShardPart>,
+    ) -> Result<()> {
+        let s = self.endpoints.len();
+        if parts.len() != s {
+            bail!("state partition has {} parts for {s} endpoints", parts.len());
+        }
+        let n = hp.dim();
+        let fh = plane_fingerprint(hp);
+        let put_h = encode_plane_put(fh, hp);
+        let have_h = encode_plane_have(fh, n);
+        let h_bytes = plane_wire_bytes(hp);
+        self.reserve_slots(s);
+        for slot in 0..s {
+            self.ensure_conn(slot)?;
+        }
+        let mut opens = Vec::with_capacity(s);
+        for (slot, part) in parts.into_iter().enumerate() {
+            let resident = self.mirrors[slot].note(fh);
+            let first: &[u8] = if resident { &have_h } else { &put_h };
+            self.fleet_send(slot, first)?;
+            let hull_bytes = 16 * part.x_re.len() as u64;
+            if resident {
+                self.io[slot].dedup_bytes_avoided += h_bytes;
+            } else {
+                self.io[slot].payload_bytes += h_bytes;
+            }
+            self.io[slot].payload_bytes += hull_bytes;
+            let open = encode_state_open(&StateOpenRefs {
+                n,
+                t,
+                iters,
+                tile,
+                task_lo: part.task_lo,
+                task_hi: part.task_hi,
+                x_lo: part.x_lo,
+                x_re: part.x_re,
+                x_im: part.x_im,
+                exports: part.exports,
+                fp_h: fh,
+            });
+            self.fleet_send(slot, &open)?;
+            opens.push(open);
+        }
+        for slot in 0..s {
+            let (ack, _) = self.fleet_recv(slot)?;
+            match decode_chain_ack(&ack) {
+                Ok(()) => {}
+                Err(e) if format!("{e:#}").contains("unknown operand plane") => {
+                    self.fleet_send(slot, &put_h)?;
+                    self.io[slot].payload_bytes += h_bytes;
+                    self.fleet_send(slot, &opens[slot])?;
+                    let (ack, _) = self.fleet_recv(slot)?;
+                    decode_chain_ack(&ack).with_context(|| {
+                        format!("state chain open on {}", self.endpoint_of(slot))
+                    })?;
+                    self.mirrors[slot].reset_to(&[fh]);
+                }
+                Err(e) => {
+                    return Err(
+                        e.context(format!("state chain open on {}", self.endpoint_of(slot)))
+                    );
+                }
+            }
+            self.io[slot].round_trips += 1;
+        }
+        self.fleet.sharded_state_chains += 1;
+        self.fleet.fleet_shards += s as u64;
+        Ok(())
+    }
+
+    /// [`ChainFleetTransport::round_state`](crate::taylor::ChainFleetTransport::round_state)
+    /// body: deliver each daemon its boundary ψ imports, gather its
+    /// exports — the halo exchange that replaces resending the full
+    /// state every iteration.
+    fn fleet_round_state(
+        &mut self,
+        k: usize,
+        imports: Vec<(Vec<f64>, Vec<f64>)>,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        let s = self.endpoints.len();
+        if imports.len() != s {
+            bail!(
+                "halo import count {} does not match {s} endpoints",
+                imports.len()
+            );
+        }
+        let mut halo = 0u64;
+        for (slot, (re, im)) in imports.iter().enumerate() {
+            let step = encode_state_step(k, re, im);
+            halo += self.fleet_send(slot, &step)?;
+        }
+        let mut out = Vec::with_capacity(s);
+        for slot in 0..s {
+            let (frame, wire) = self.fleet_recv(slot)?;
+            halo += wire;
+            out.push(
+                decode_state_halo(&frame)
+                    .with_context(|| format!("state round {k} on {}", self.endpoint_of(slot)))?,
+            );
+            self.io[slot].round_trips += 1;
+        }
+        self.fleet.rounds += 1;
+        self.fleet.halo_bytes += halo;
+        Ok(out)
+    }
+
+    /// [`ChainFleetTransport::collect_state`](crate::taylor::ChainFleetTransport::collect_state)
+    /// body: gather every daemon's own-row sum planes.
+    fn fleet_collect_state(&mut self) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        let s = self.endpoints.len();
+        let req = encode_state_collect();
+        let mut sent = 0u64;
+        for slot in 0..s {
+            sent += self.fleet_send(slot, &req)?;
+        }
+        let mut out = Vec::with_capacity(s);
+        let mut recv = 0u64;
+        for slot in 0..s {
+            let (frame, wire) = self.fleet_recv(slot)?;
+            recv += wire;
+            out.push(
+                decode_state_done(&frame)
+                    .with_context(|| format!("state collect on {}", self.endpoint_of(slot)))?,
+            );
+            self.io[slot].round_trips += 1;
+        }
+        self.fleet.halo_bytes += sent;
+        self.fleet.collect_bytes += recv;
+        Ok(out)
+    }
+}
+
+/// The TCP fleet backend of the
+/// [`ShardedChainDriver`](crate::taylor::ShardedChainDriver): every
+/// transport call maps onto framed wire-v6 messages on the executor's
+/// persistent per-slot connections (slot `i` ↔ `endpoints[i]`, one
+/// chain shard per endpoint). Any failure poisons the whole pool —
+/// chain residency is per connection, so a half-opened fleet must not
+/// leak into the next chain — and the error names the endpoint.
+impl crate::taylor::ChainFleetTransport for TcpShardExecutor {
+    fn shards(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    fn open_op(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        rows: &[(usize, usize)],
+    ) -> Result<()> {
+        match self.fleet_open_op(hp, t, iters, rows) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison();
+                Err(e)
+            }
+        }
+    }
+
+    fn round_op(&mut self, k: usize, verdict: &[bool]) -> Result<Vec<Vec<bool>>> {
+        match self.fleet_round_op(k, verdict) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison();
+                Err(e)
+            }
+        }
+    }
+
+    fn collect_op(&mut self, verdict: &[bool]) -> Result<Vec<crate::taylor::ChainCollect>> {
+        match self.fleet_collect_op(verdict) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison();
+                Err(e)
+            }
+        }
+    }
+
+    fn open_state(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        tile: usize,
+        parts: Vec<crate::taylor::StateShardPart>,
+    ) -> Result<()> {
+        match self.fleet_open_state(hp, t, iters, tile, parts) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison();
+                Err(e)
+            }
+        }
+    }
+
+    fn round_state(
+        &mut self,
+        k: usize,
+        imports: Vec<(Vec<f64>, Vec<f64>)>,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        match self.fleet_round_state(k, imports) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison();
+                Err(e)
+            }
+        }
+    }
+
+    fn collect_state(&mut self) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        match self.fleet_collect_state() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison();
+                Err(e)
+            }
         }
     }
 }
@@ -1244,15 +1905,24 @@ impl TcpShardExecutor {
 /// replaying the job — so a client/server cache-cap mismatch degrades
 /// to extra bytes, never to a failed multiply. Returns the slice plus
 /// the bytes moved in each direction and the payload/dedup split.
-fn exchange(stream: &mut TcpStream, job: &[u8], ship: &PlaneShipment) -> ExchangeResult {
-    write_frame(stream, &[&ship.frame_a]).context("sending operand plane a")?;
-    write_frame(stream, &[&ship.frame_b]).context("sending operand plane b")?;
-    write_frame(stream, &[job]).context("sending shard job")?;
-    let mut sent = (24 + ship.frame_a.len() + ship.frame_b.len() + job.len()) as u64;
-    let frame = read_frame(stream)
+fn exchange(
+    stream: &mut TcpStream,
+    job: &[u8],
+    ship: &PlaneShipment,
+    compress: bool,
+) -> ExchangeResult {
+    let mut comp = CompressionIo::default();
+    let w1 = write_wire_frame(stream, &[&ship.frame_a], compress, &mut comp)
+        .context("sending operand plane a")?;
+    let w2 = write_wire_frame(stream, &[&ship.frame_b], compress, &mut comp)
+        .context("sending operand plane b")?;
+    let w3 =
+        write_wire_frame(stream, &[job], compress, &mut comp).context("sending shard job")?;
+    let mut sent = 24 + w1 + w2 + w3;
+    let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, &mut comp)
         .context("reading shard response")?
         .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
-    let mut received = (8 + frame.len()) as u64;
+    let mut received = 8 + wr;
     match decode_resp(&frame) {
         Ok((re, im, mults)) => Ok(Exchanged {
             re,
@@ -1263,16 +1933,20 @@ fn exchange(stream: &mut TcpStream, job: &[u8], ship: &PlaneShipment) -> Exchang
             payload: ship.payload,
             dedup: ship.dedup,
             retried: false,
+            comp,
         }),
         Err(e) if format!("{e:#}").contains("unknown operand plane") => {
-            write_frame(stream, &[&ship.put_a]).context("resending operand plane a")?;
-            write_frame(stream, &[&ship.put_b]).context("resending operand plane b")?;
-            write_frame(stream, &[job]).context("resending shard job")?;
-            sent += (24 + ship.put_a.len() + ship.put_b.len() + job.len()) as u64;
-            let frame = read_frame(stream)
+            let w1 = write_wire_frame(stream, &[&ship.put_a], compress, &mut comp)
+                .context("resending operand plane a")?;
+            let w2 = write_wire_frame(stream, &[&ship.put_b], compress, &mut comp)
+                .context("resending operand plane b")?;
+            let w3 = write_wire_frame(stream, &[job], compress, &mut comp)
+                .context("resending shard job")?;
+            sent += 24 + w1 + w2 + w3;
+            let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, &mut comp)
                 .context("reading shard response after resend")?
                 .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
-            received += (8 + frame.len()) as u64;
+            received += 8 + wr;
             let (re, im, mults) = decode_resp(&frame)?;
             Ok(Exchanged {
                 re,
@@ -1286,6 +1960,7 @@ fn exchange(stream: &mut TcpStream, job: &[u8], ship: &PlaneShipment) -> Exchang
                 payload: ship.payload + ship.full_payload,
                 dedup: 0,
                 retried: true,
+                comp,
             })
         }
         Err(e) => Err(e),
@@ -1296,14 +1971,22 @@ fn exchange(stream: &mut TcpStream, job: &[u8], ship: &PlaneShipment) -> Exchang
 /// (Put or Have), the halo-windowed job, framed response, decode. Same
 /// evicted-plane self-healing as [`exchange`], with a single operand:
 /// the ψ window is part of the job frame and needs no recovery logic.
-fn exchange_state(stream: &mut TcpStream, job: &[u8], ship: &StateShipment) -> ExchangeResult {
-    write_frame(stream, &[&ship.frame_h]).context("sending state operand plane")?;
-    write_frame(stream, &[job]).context("sending state job")?;
-    let mut sent = (16 + ship.frame_h.len() + job.len()) as u64;
-    let frame = read_frame(stream)
+fn exchange_state(
+    stream: &mut TcpStream,
+    job: &[u8],
+    ship: &StateShipment,
+    compress: bool,
+) -> ExchangeResult {
+    let mut comp = CompressionIo::default();
+    let w1 = write_wire_frame(stream, &[&ship.frame_h], compress, &mut comp)
+        .context("sending state operand plane")?;
+    let w2 =
+        write_wire_frame(stream, &[job], compress, &mut comp).context("sending state job")?;
+    let mut sent = 16 + w1 + w2;
+    let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, &mut comp)
         .context("reading state job response")?
         .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
-    let mut received = (8 + frame.len()) as u64;
+    let mut received = 8 + wr;
     match decode_resp(&frame) {
         Ok((re, im, mults)) => Ok(Exchanged {
             re,
@@ -1314,15 +1997,18 @@ fn exchange_state(stream: &mut TcpStream, job: &[u8], ship: &StateShipment) -> E
             payload: ship.payload,
             dedup: ship.dedup,
             retried: false,
+            comp,
         }),
         Err(e) if format!("{e:#}").contains("unknown operand plane") => {
-            write_frame(stream, &[&ship.put_h]).context("resending state operand plane")?;
-            write_frame(stream, &[job]).context("resending state job")?;
-            sent += (16 + ship.put_h.len() + job.len()) as u64;
-            let frame = read_frame(stream)
+            let w1 = write_wire_frame(stream, &[&ship.put_h], compress, &mut comp)
+                .context("resending state operand plane")?;
+            let w2 = write_wire_frame(stream, &[job], compress, &mut comp)
+                .context("resending state job")?;
+            sent += 16 + w1 + w2;
+            let (frame, wr) = read_wire_frame(stream, MAX_FRAME_BYTES, compress, &mut comp)
                 .context("reading state job response after resend")?
                 .ok_or_else(|| anyhow!("server closed the connection mid-job"))?;
-            received += (8 + frame.len()) as u64;
+            received += 8 + wr;
             let (re, im, mults) = decode_resp(&frame)?;
             Ok(Exchanged {
                 re,
@@ -1333,6 +2019,7 @@ fn exchange_state(stream: &mut TcpStream, job: &[u8], ship: &StateShipment) -> E
                 payload: ship.payload + ship.full_payload,
                 dedup: 0,
                 retried: true,
+                comp,
             })
         }
         Err(e) => Err(e),
@@ -1353,17 +2040,70 @@ mod tests {
         assert_eq!(h.len(), HELLO_LEN);
         assert_eq!(&h[..4], b"DSHK");
         assert_eq!(decode_hello(&h).unwrap(), WIRE_VERSION);
+        assert_eq!(decode_hello_flags(&h).unwrap(), (WIRE_VERSION, 0));
         check_hello(&h).unwrap();
+        assert_eq!(check_hello_flags(&h).unwrap(), 0);
+        // Feature flags ride the last word and round-trip.
+        let hc = encode_hello_with(HELLO_FLAG_COMPRESS);
+        assert_eq!(
+            decode_hello_flags(&hc).unwrap(),
+            (WIRE_VERSION, HELLO_FLAG_COMPRESS)
+        );
+        assert_eq!(check_hello_flags(&hc).unwrap(), HELLO_FLAG_COMPRESS);
         // Version skew: both versions named in the error.
         let mut skewed = h;
-        skewed[4..].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        skewed[4..8].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
         let err = format!("{:#}", check_hello(&skewed).unwrap_err());
         assert!(err.contains(&format!("v{}", WIRE_VERSION + 1)), "{err}");
         assert!(err.contains(&format!("v{WIRE_VERSION}")), "{err}");
+        // The version is decodable from a v5-style 8-byte prefix (so a
+        // skewed peer gets the mismatch diagnosis, not a flags-read
+        // timeout), but the flags word requires the full v6 hello.
+        assert_eq!(decode_hello(&h[..8]).unwrap(), WIRE_VERSION);
+        assert!(decode_hello_flags(&h[..8]).is_err());
+        // The staged stream reader negotiates flags end to end.
+        let mut r = &hc[..];
+        assert_eq!(read_hello(&mut r).unwrap(), HELLO_FLAG_COMPRESS);
         // Foreign magic and truncation fail loudly, never mis-parse.
         assert!(decode_hello(b"DSJ1\x02\x00\x00\x00").is_err());
         assert!(decode_hello(&h[..5]).is_err());
         assert!(decode_hello(&[]).is_err());
+    }
+
+    #[test]
+    fn compressed_frame_helpers_roundtrip_and_account() {
+        // A compressible payload: the CMP1 envelope must shrink it on
+        // the wire and restore it bit-for-bit, with both sides'
+        // accounting agreeing on raw vs wire bytes.
+        let payload = vec![0x41u8; 4096];
+        let mut buf = Vec::new();
+        let mut w_acct = CompressionIo::default();
+        let wrote = write_wire_frame(&mut buf, &[&payload[..1024], &payload[1024..]], true, &mut w_acct)
+            .unwrap();
+        assert!(wrote < payload.len() as u64, "did not compress: {wrote}");
+        assert_eq!(w_acct.frames, 1);
+        assert_eq!(w_acct.raw_bytes, 4096);
+        assert_eq!(w_acct.wire_bytes, wrote);
+        let mut r_acct = CompressionIo::default();
+        let (got, wire) = read_wire_frame(&mut &buf[..], MAX_FRAME_BYTES, true, &mut r_acct)
+            .unwrap()
+            .unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(wire, wrote);
+        assert_eq!(r_acct.raw_bytes, w_acct.raw_bytes);
+        assert_eq!(r_acct.wire_bytes, w_acct.wire_bytes);
+        // With compression off the helpers are exactly write_frame /
+        // read_frame_limited and never touch the accounting.
+        let mut plain = Vec::new();
+        let mut acct = CompressionIo::default();
+        let wrote = write_wire_frame(&mut plain, &[b"abc"], false, &mut acct).unwrap();
+        assert_eq!(wrote, 3);
+        let (got, wire) =
+            read_wire_frame(&mut &plain[..], MAX_FRAME_BYTES, false, &mut acct)
+                .unwrap()
+                .unwrap();
+        assert_eq!((got.as_slice(), wire), (&b"abc"[..], 3));
+        assert_eq!(acct.frames, 0);
     }
 
     #[test]
@@ -1505,6 +2245,40 @@ mod tests {
     }
 
     #[test]
+    fn daemon_wide_store_survives_reconnect() {
+        // Satellite bugfix gate: `shard-serve`'s plane store is
+        // daemon-wide since wire v6 (parity with `diamond serve`). A
+        // second connection referencing the first connection's planes
+        // by 20-byte Haves must get an answer — pre-v6 the store died
+        // with the connection and this failed with `unknown operand
+        // plane`.
+        let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
+        let a = band(32, 1);
+        let b = band(32, 2);
+        let (fa, fb) = (plane_fingerprint(&a), plane_fingerprint(&b));
+        let plan = plan_diag_mul(&a, &b);
+        let tiles = tile_plan(&plan, 1 << 13);
+        let job = encode_job(32, 1 << 13, 0, tiles.tasks.len(), fa, fb);
+
+        let mut first = dial(&server);
+        write_frame(&mut first, &[&encode_plane_put(fa, &a)]).unwrap();
+        write_frame(&mut first, &[&encode_plane_put(fb, &b)]).unwrap();
+        write_frame(&mut first, &[&job]).unwrap();
+        let resp = read_frame(&mut first).unwrap().expect("response frame");
+        let (want_re, want_im, _) = decode_resp(&resp).unwrap();
+        drop(first);
+
+        let mut second = dial(&server);
+        write_frame(&mut second, &[&encode_plane_have(fa, 32)]).unwrap();
+        write_frame(&mut second, &[&encode_plane_have(fb, 32)]).unwrap();
+        write_frame(&mut second, &[&job]).unwrap();
+        let resp = read_frame(&mut second).unwrap().expect("response frame");
+        let (re, im, _) = decode_resp(&resp).expect("planes survived the reconnect");
+        assert!(re.iter().zip(&want_re).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(im.iter().zip(&want_im).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
     fn server_rejects_version_skewed_client_with_framed_error() {
         let server = ShardServer::spawn("127.0.0.1:0").expect("loopback bind");
         let mut stream = TcpStream::connect(server.addr()).unwrap();
@@ -1515,7 +2289,7 @@ mod tests {
         // Now claim a future version: the reply is a framed, decodable
         // error naming both versions — not a mis-parsed job.
         let mut skewed = encode_hello();
-        skewed[4..].copy_from_slice(&(WIRE_VERSION + 7).to_le_bytes());
+        skewed[4..8].copy_from_slice(&(WIRE_VERSION + 7).to_le_bytes());
         stream.write_all(&skewed).unwrap();
         let frame = read_frame(&mut stream).unwrap().expect("rejection frame");
         let err = format!("{:#}", decode_resp(&frame).unwrap_err());

@@ -1,0 +1,357 @@
+//! Wire v6 transparent plane compression — the `CMP1` payload envelope.
+//!
+//! When both ends of a shard connection advertise the compress flag in
+//! the v6 handshake (`--wire-compress`), every post-handshake frame
+//! payload travels wrapped in a self-describing envelope:
+//!
+//! ```text
+//! "CMP1" | mode u8 | raw_len u64 LE | body
+//! ```
+//!
+//! * `mode 0` (**store**) — `body` is the raw payload verbatim. Used
+//!   for payloads under 16 bytes and whenever the transform does not
+//!   strictly shrink the body, so the envelope never inflates a frame
+//!   beyond its constant 13-byte header.
+//! * `mode 1` (**delta+LZ**) — `body` is the raw payload passed through
+//!   an 8-byte-stride XOR delta (`d[i] = b[i] ^ b[i-8]`, the stride of
+//!   one `f64` plane element, which turns the near-constant diagonal
+//!   planes this wire carries into long zero runs) and then a greedy
+//!   byte-LZ with a 32 KiB rolling window.
+//!
+//! The LZ token stream: a control byte `c < 0x80` starts a literal run
+//! of `c + 1` bytes (1..=128); `c >= 0x80` is a match of length
+//! `(c & 0x7f) + 4` (4..=131) followed by a `u16` LE distance
+//! (1..=65535), copied byte-by-byte so overlapping matches (RLE) work.
+//! The compressor hashes the 4 bytes at each position into a
+//! 2^15-entry table (`key * 0x9E3779B1 >> 17`, table stores `pos + 1`
+//! so 0 means empty) and takes the first candidate whose distance fits
+//! and whose 4 bytes match, extending greedily; the table is refreshed
+//! at **every** consumed position, including inside matches.
+//!
+//! Both directions are deterministic and mirrored byte-for-byte by
+//! `python/tests/test_transport.py`, with golden envelopes pinned on
+//! both sides. Decompression validates every token against the declared
+//! `raw_len`, so a corrupt or truncated envelope fails loudly instead
+//! of yielding a short plane.
+
+use anyhow::{bail, Result};
+
+/// Envelope magic for a compressed payload.
+pub const CMP_MAGIC: &[u8; 4] = b"CMP1";
+/// Mode byte: body stored verbatim.
+pub const CMP_STORE: u8 = 0;
+/// Mode byte: xor8 delta + greedy byte-LZ.
+pub const CMP_DELTA_LZ: u8 = 1;
+/// Envelope header length: magic + mode + raw_len.
+pub const CMP_HEADER_LEN: usize = 13;
+
+/// Payloads shorter than this are always stored — the transform cannot
+/// win against its own token overhead.
+const MIN_COMPRESS: usize = 16;
+const HASH_BITS: u32 = 15;
+const MAX_MATCH: usize = 131;
+const MAX_DIST: usize = 65535;
+
+fn xor8_forward(data: &[u8]) -> Vec<u8> {
+    let mut out = data.to_vec();
+    for i in (8..out.len()).rev() {
+        out[i] ^= out[i - 8];
+    }
+    out
+}
+
+fn xor8_inverse(mut data: Vec<u8>) -> Vec<u8> {
+    for i in 8..data.len() {
+        data[i] ^= data[i - 8];
+    }
+    data
+}
+
+fn key_at(data: &[u8], pos: usize) -> u32 {
+    u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]])
+}
+
+fn hash(key: u32) -> usize {
+    (key.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+fn flush_literals(out: &mut Vec<u8>, data: &[u8], lo: usize, hi: usize) {
+    let mut i = lo;
+    while i < hi {
+        let run = (hi - i).min(128);
+        out.push((run - 1) as u8);
+        out.extend_from_slice(&data[i..i + run]);
+        i += run;
+    }
+}
+
+fn lz_compress(data: &[u8]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    let mut table = vec![0u32; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut pos = 0usize;
+    while pos < n {
+        if pos + 4 <= n {
+            let h = hash(key_at(data, pos));
+            let cand = table[h] as usize;
+            table[h] = (pos + 1) as u32;
+            if cand > 0 {
+                let cand = cand - 1;
+                let dist = pos - cand;
+                if (1..=MAX_DIST).contains(&dist) && data[cand..cand + 4] == data[pos..pos + 4]
+                {
+                    let mut len = 4usize;
+                    let max_len = MAX_MATCH.min(n - pos);
+                    while len < max_len && data[cand + len] == data[pos + len] {
+                        len += 1;
+                    }
+                    flush_literals(&mut out, data, lit_start, pos);
+                    out.push(0x80 | (len - 4) as u8);
+                    out.extend_from_slice(&(dist as u16).to_le_bytes());
+                    let end = pos + len;
+                    let mut p = pos + 1;
+                    while p < end && p + 4 <= n {
+                        let h2 = hash(key_at(data, p));
+                        table[h2] = (p + 1) as u32;
+                        p += 1;
+                    }
+                    pos = end;
+                    lit_start = pos;
+                    continue;
+                }
+            }
+        }
+        pos += 1;
+    }
+    flush_literals(&mut out, data, lit_start, n);
+    out
+}
+
+fn lz_decompress(comp: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let n = comp.len();
+    let mut i = 0usize;
+    while i < n {
+        let c = comp[i];
+        i += 1;
+        if c < 0x80 {
+            let run = c as usize + 1;
+            if i + run > n {
+                bail!("wire-compress: literal run past end of body");
+            }
+            out.extend_from_slice(&comp[i..i + run]);
+            i += run;
+        } else {
+            let len = (c & 0x7f) as usize + 4;
+            if i + 2 > n {
+                bail!("wire-compress: match distance past end of body");
+            }
+            let dist = u16::from_le_bytes([comp[i], comp[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                bail!("wire-compress: bad match distance {dist}");
+            }
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+        if out.len() > raw_len {
+            bail!("wire-compress: decompressed past declared raw_len");
+        }
+    }
+    if out.len() != raw_len {
+        bail!(
+            "wire-compress: decompressed {} bytes, envelope declared {}",
+            out.len(),
+            raw_len
+        );
+    }
+    Ok(out)
+}
+
+fn envelope(mode: u8, raw_len: usize, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(CMP_HEADER_LEN + body.len());
+    out.extend_from_slice(CMP_MAGIC);
+    out.push(mode);
+    out.extend_from_slice(&(raw_len as u64).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Wrap one frame payload in a `CMP1` envelope, choosing the smaller of
+/// store and delta+LZ. Never errors; never grows the body.
+pub fn compress_payload(raw: &[u8]) -> Vec<u8> {
+    if raw.len() >= MIN_COMPRESS {
+        let lz = lz_compress(&xor8_forward(raw));
+        if lz.len() < raw.len() {
+            return envelope(CMP_DELTA_LZ, raw.len(), &lz);
+        }
+    }
+    envelope(CMP_STORE, raw.len(), raw)
+}
+
+/// Unwrap a `CMP1` envelope back to the raw frame payload.
+pub fn decompress_payload(buf: &[u8]) -> Result<Vec<u8>> {
+    if buf.len() < CMP_HEADER_LEN || &buf[..4] != CMP_MAGIC {
+        bail!("wire-compress: frame is not a CMP1 envelope");
+    }
+    let mode = buf[4];
+    let raw_len = u64::from_le_bytes(buf[5..13].try_into().unwrap()) as usize;
+    let body = &buf[CMP_HEADER_LEN..];
+    match mode {
+        CMP_STORE => {
+            if body.len() != raw_len {
+                bail!(
+                    "wire-compress: stored body is {} bytes, envelope declared {}",
+                    body.len(),
+                    raw_len
+                );
+            }
+            Ok(body.to_vec())
+        }
+        CMP_DELTA_LZ => Ok(xor8_inverse(lz_decompress(body, raw_len)?)),
+        other => bail!("wire-compress: unknown mode byte {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn roundtrip(raw: &[u8]) {
+        let enc = compress_payload(raw);
+        let dec = decompress_payload(&enc).unwrap();
+        assert_eq!(dec, raw, "round-trip failed for {} bytes", raw.len());
+    }
+
+    #[test]
+    fn zero_length_and_tiny_payloads_are_stored() {
+        roundtrip(b"");
+        roundtrip(b"\x00");
+        roundtrip(b"diam");
+        let enc = compress_payload(b"diam");
+        assert_eq!(enc[4], CMP_STORE);
+        assert_eq!(enc.len(), CMP_HEADER_LEN + 4);
+    }
+
+    #[test]
+    fn constant_diagonal_plane_compresses_hard() {
+        // An identity diagonal's re-plane: 24 × 1.0f64.
+        let raw: Vec<u8> = std::iter::repeat(1.0f64.to_le_bytes())
+            .take(24)
+            .flatten()
+            .collect();
+        let enc = compress_payload(&raw);
+        assert_eq!(enc[4], CMP_DELTA_LZ);
+        assert!(
+            enc.len() * 4 < raw.len(),
+            "constant plane must compress ≥ 4×: {} vs {}",
+            enc.len(),
+            raw.len()
+        );
+        roundtrip(&raw);
+    }
+
+    #[test]
+    fn incompressible_payload_falls_back_to_store() {
+        // A xorshift stream has no 4-byte repeats inside the window.
+        let mut s = 0x9e37_79b9_7f4a_7c15u64;
+        let mut raw = Vec::with_capacity(4096);
+        for _ in 0..512 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            raw.extend_from_slice(&s.to_le_bytes());
+        }
+        let enc = compress_payload(&raw);
+        assert_eq!(enc[4], CMP_STORE, "random bytes must not pick delta+LZ");
+        assert_eq!(enc.len(), CMP_HEADER_LEN + raw.len());
+        roundtrip(&raw);
+    }
+
+    #[test]
+    fn adversarial_planes_roundtrip() {
+        // Deterministic pseudo-random planes across alphabet sizes and
+        // lengths, including runs that straddle the 128-literal and
+        // 131-match limits and overlapping (RLE) matches.
+        let mut s = 0xd1a6_0001u64;
+        let mut next = move |m: u64| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (s >> 33) % m
+        };
+        for case in 0..64 {
+            let n = next(700) as usize;
+            let alphabet = [2u64, 4, 17, 256][case % 4];
+            let raw: Vec<u8> = (0..n).map(|_| next(alphabet) as u8).collect();
+            roundtrip(&raw);
+        }
+        roundtrip(&[0u8; 127]);
+        roundtrip(&[0u8; 128]);
+        roundtrip(&[0u8; 129]);
+        roundtrip(&vec![0xabu8; 131 + 8]);
+        roundtrip(&b"abcdefgh".repeat(512));
+        // Smooth f64 ramp — the xor8 delta's home turf.
+        let ramp: Vec<u8> = (0..256)
+            .flat_map(|k| (1.0 + 1e-9 * k as f64).to_le_bytes())
+            .collect();
+        let enc = compress_payload(&ramp);
+        assert!(enc.len() < ramp.len());
+        roundtrip(&ramp);
+    }
+
+    #[test]
+    fn golden_envelopes_match_python_mirror() {
+        // Pinned byte-for-byte against python/tests/test_transport.py —
+        // a codec divergence between the mirrors breaks these first.
+        let ones: Vec<u8> = std::iter::repeat(1.0f64.to_le_bytes())
+            .take(24)
+            .flatten()
+            .collect();
+        assert_eq!(
+            hex(&compress_payload(&ones)),
+            "434d503101c000000000000000000081010001f03f800600ff0100ad0100"
+        );
+        assert_eq!(
+            hex(&compress_payload(b"diam")),
+            "434d50310004000000000000006469616d"
+        );
+        let ramp: Vec<u8> = (0..8).flat_map(|k| (k as f64).to_le_bytes()).collect();
+        assert_eq!(
+            hex(&compress_payload(&ramp)),
+            "434d5031014000000000000000000089010001f03f800600030000f07f8006000200000880050003\
+             000000188005000300000004800500030000000c800500811000"
+        );
+    }
+
+    #[test]
+    fn corrupt_envelopes_fail_loudly() {
+        assert!(decompress_payload(b"").is_err());
+        assert!(decompress_payload(b"CMP0\x00\x00\x00\x00\x00\x00\x00\x00\x00").is_err());
+        // Unknown mode byte.
+        let mut enc = compress_payload(b"0123456789abcdef0123456789abcdef");
+        enc[4] = 7;
+        assert!(decompress_payload(&enc).is_err());
+        // Declared raw_len shorter than the stored body.
+        let mut enc = compress_payload(b"diam");
+        enc[5] = 3;
+        assert!(decompress_payload(&enc).is_err());
+        // Truncated delta+LZ body.
+        let raw: Vec<u8> = std::iter::repeat(1.0f64.to_le_bytes())
+            .take(24)
+            .flatten()
+            .collect();
+        let enc = compress_payload(&raw);
+        assert_eq!(enc[4], CMP_DELTA_LZ);
+        assert!(decompress_payload(&enc[..enc.len() - 1]).is_err());
+        // Match distance reaching before the start of the output.
+        let bogus = envelope(CMP_DELTA_LZ, 4, &[0x80, 0x05, 0x00]);
+        assert!(decompress_payload(&bogus).is_err());
+    }
+}

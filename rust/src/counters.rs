@@ -26,7 +26,7 @@
 
 use crate::coordinator::server::ServeStats;
 use crate::coordinator::shard::ShardStats;
-use crate::coordinator::transport::EndpointIo;
+use crate::coordinator::transport::{ChainFleetStats, CompressionIo, EndpointIo};
 use crate::runtime::engine::EngineStats;
 
 /// Version stamped into every document; bump on any breaking key
@@ -135,6 +135,42 @@ impl CountersV1 {
             ("endpoints".into(), endpoints_json(endpoints)),
         ];
         self.sections.push(("shard", kv));
+        self
+    }
+
+    /// Attach the `"chain_fleet"` subtree: the wire-v6 sharded-chain
+    /// counters
+    /// ([`ChainFleetStats`](crate::coordinator::transport::ChainFleetStats))
+    /// plus the `CMP1` frame-compression totals
+    /// ([`CompressionIo`](crate::coordinator::transport::CompressionIo)).
+    /// `compression_ratio` is raw/wire (1 when no frame was compressed)
+    /// — the numerator of the `chain-fleet-smoke` ratio gate.
+    pub fn chain_fleet(mut self, f: &ChainFleetStats, c: &CompressionIo) -> Self {
+        let ratio = if c.wire_bytes > 0 {
+            c.raw_bytes as f64 / c.wire_bytes as f64
+        } else {
+            1.0
+        };
+        let kv = vec![
+            ("sharded_chains".into(), f.sharded_chains.to_string()),
+            (
+                "sharded_state_chains".into(),
+                f.sharded_state_chains.to_string(),
+            ),
+            ("fleet_shards".into(), f.fleet_shards.to_string()),
+            ("rounds".into(), f.rounds.to_string()),
+            ("halo_bytes".into(), f.halo_bytes.to_string()),
+            ("collect_bytes".into(), f.collect_bytes.to_string()),
+            (
+                "resend_model_bytes".into(),
+                f.resend_model_bytes.to_string(),
+            ),
+            ("compressed_frames".into(), c.frames.to_string()),
+            ("raw_frame_bytes".into(), c.raw_bytes.to_string()),
+            ("wire_frame_bytes".into(), c.wire_bytes.to_string()),
+            ("compression_ratio".into(), format!("{ratio:e}")),
+        ];
+        self.sections.push(("chain_fleet", kv));
         self
     }
 
@@ -274,6 +310,46 @@ mod tests {
             include_str!("../tests/golden/counters_v1_serve.json"),
             "serve CountersV1 drifted from the pinned golden — bump \
              COUNTERS_SCHEMA_VERSION if the change is intentional"
+        );
+    }
+
+    #[test]
+    fn chain_fleet_counters_match_golden() {
+        let fleet = ChainFleetStats {
+            sharded_chains: 2,
+            sharded_state_chains: 1,
+            fleet_shards: 6,
+            rounds: 18,
+            halo_bytes: 1234,
+            collect_bytes: 5678,
+            resend_model_bytes: 99999,
+        };
+        let comp = CompressionIo {
+            frames: 40,
+            raw_bytes: 20000,
+            wire_bytes: 5000,
+        };
+        let doc = CountersV1::new("chain")
+            .u64_field("iters", 6)
+            .shard(&golden_shard_stats(), &[golden_endpoint()])
+            .chain_fleet(&fleet, &comp)
+            .render();
+        assert_eq!(
+            doc,
+            include_str!("../tests/golden/counters_v1_chain_fleet.json"),
+            "chain_fleet CountersV1 drifted from the pinned golden — bump \
+             COUNTERS_SCHEMA_VERSION if the change is intentional"
+        );
+    }
+
+    #[test]
+    fn chain_fleet_ratio_degrades_to_one_without_compression() {
+        let doc = CountersV1::new("chain")
+            .chain_fleet(&ChainFleetStats::default(), &CompressionIo::default())
+            .render();
+        assert!(
+            doc.contains("\"compression_ratio\": 1e0"),
+            "uncompressed runs must report ratio 1: {doc}"
         );
     }
 

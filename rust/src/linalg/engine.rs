@@ -355,8 +355,10 @@ pub fn schedule_work(tiles: &TilePlan, budget: usize) -> WorkSchedule {
 }
 
 /// Clip a contribution to the tile window `[lo, hi)` of its output
-/// diagonal, shifting all three storage-frame bases together.
-fn clip_contribution(c: &Contribution, lo: usize, hi: usize) -> Option<Contribution> {
+/// diagonal, shifting all three storage-frame bases together. Shared
+/// with the sharded chain driver ([`crate::taylor::sharded`]), which
+/// clips whole-plan contributions to each daemon's row window.
+pub(crate) fn clip_contribution(c: &Contribution, lo: usize, hi: usize) -> Option<Contribution> {
     let start = c.kc0.max(lo);
     let end = (c.kc0 + c.len).min(hi);
     if start >= end {

@@ -6,7 +6,13 @@
 //! accelerates. The truncation depth `K` is set by the matrix one-norm
 //! (Table II "Iter").
 
+pub mod sharded;
 pub mod trotter;
+
+pub use sharded::{
+    ChainCollect, ChainFleetTransport, ChainRunStats, ChainShardWorker, ChainWindow,
+    LocalChainFleet, ShardedChainDriver, StateChainShardWorker, StateShardPart,
+};
 
 use crate::coordinator::shard::ShardCoordinator;
 use crate::format::{DiagMatrix, PackedDiagMatrix};

@@ -1,0 +1,1426 @@
+//! WAN-sharded Taylor chains: every daemon owns a contiguous slice of
+//! the problem for **all** iterations, and only tiny halo payloads move
+//! between iterations (wire v6 — `docs/ARCHITECTURE.md` §Chain
+//! sharding).
+//!
+//! The PR-4 chain protocol shipped whole operands to one endpoint and
+//! ran the loop there; sharding a chain across a fleet meant
+//! round-tripping the full term every iteration. This module inverts
+//! the ownership: the coordinator partitions the **rows** once
+//! (multiply-balanced, through the same [`shard_plan`] greedy
+//! partitioner every other layer uses), each shard worker keeps its row
+//! slice of the running term and the accumulated sum resident across
+//! the whole chain, and the per-iteration exchange shrinks to
+//!
+//! * **operator chains** — a prune *verdict*: each worker flags which
+//!   output diagonals are nonzero in its row window, the coordinator
+//!   ORs the flags (a diagonal survives iff it is nonzero *somewhere*,
+//!   exactly [`PackedDiagMatrix::prune`]'s rule) and broadcasts the
+//!   verdict next round. No term values cross the wire until the final
+//!   collect. This works because the SpMSpM left operand is read at the
+//!   **output row**: a worker owning output rows `[r0, r1)` already
+//!   holds every term value the next product needs — the value halo is
+//!   empty by construction, only the prune decision is global.
+//! * **state chains** — the classic SpMV halo: a worker's tile range
+//!   reads `ψ` a band-width outside its own rows, so each round it
+//!   imports the boundary segments its neighbours computed and exports
+//!   the segments they import. Segment *geometry* is planned once at
+//!   open (it depends only on the offset structure) and only values
+//!   move per round.
+//!
+//! Bitwise identity with the serial [`ChainDriver`] /
+//! [`StateDriver`](crate::taylor::StateDriver) loops holds by
+//! construction, not by tolerance:
+//!
+//! * per output element, clipping a plan to a row window keeps exactly
+//!   the contributions covering that element, in plan order
+//!   ([`clip_contribution`] — the same helper the tiling layer uses);
+//! * workers reuse [`PackedDiagMatrix::scale`],
+//!   [`DiagMatrix::add_assign_scaled_packed`] and
+//!   [`fill_state_range`] verbatim, so every `f64` op sequence matches
+//!   the serial loop body statement for statement;
+//! * the OR-verdict reproduces the serial prune set: with the real
+//!   scale `1/k` (`|s| ≤ 1`), a scaled magnitude above
+//!   [`ZERO_TOL`] implies the unscaled one was too (rounding a product
+//!   by a factor ≤ 1 cannot grow past the representable operand), so
+//!   the post-scale flag equals "survives both serial prunes".
+//!
+//! The per-iteration *trace* ([`TaylorStep`] / [`StateStep`]) is
+//! reconstructed structurally on the coordinator: nnzd, element counts
+//! and storage savings are functions of the offset sets alone, and the
+//! multiply counts come from planning the same offset structures
+//! against zero-filled operands — the plan is a function of structure,
+//! not values.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::{ChainOutcome, StateOutcome, StateStep, TaylorStep};
+use crate::format::diag::ZERO_TOL;
+use crate::format::{DiagMatrix, PackedDiagMatrix};
+use crate::linalg::diag_mul::{fill_window, plan_diag_mul, plan_spmv, Contribution};
+use crate::linalg::engine::{clip_contribution, shard_plan, tile_plan, TilePlan, TileTask};
+use crate::linalg::spmv::{fill_state_range, state_window};
+use crate::num::{Complex, I, ONE};
+
+/// One contiguous value window of one diagonal, as shipped by the final
+/// collect: `re/im[j]` is storage index `w_lo + j` of diagonal `offset`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChainWindow {
+    /// Diagonal offset the window belongs to.
+    pub offset: i64,
+    /// Storage-frame index of the window's first element.
+    pub w_lo: usize,
+    /// Real parts of the window.
+    pub re: Vec<f64>,
+    /// Imaginary parts of the window.
+    pub im: Vec<f64>,
+}
+
+/// A worker's final collect payload: its row windows of the last power
+/// term and of the accumulated operator sum.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChainCollect {
+    /// Windows of `term_K = (−iHt)^K / K!` (kept diagonals only).
+    pub term: Vec<ChainWindow>,
+    /// Windows of the operator sum `Σ_k term_k` (identity included).
+    pub sum: Vec<ChainWindow>,
+}
+
+/// Per-daemon geometry + initial payload of a sharded state chain,
+/// prepared by the coordinator and consumed by the transport.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateShardPart {
+    /// First tile task of the daemon's range.
+    pub task_lo: usize,
+    /// One past the last tile task.
+    pub task_hi: usize,
+    /// State index of the first shipped ψ0 element (the hull start).
+    pub x_lo: usize,
+    /// ψ0 real plane over the hull `[x_lo, x_lo + len)`.
+    pub x_re: Vec<f64>,
+    /// ψ0 imaginary plane over the hull.
+    pub x_im: Vec<f64>,
+    /// Own-row segments (absolute state indices, ascending, disjoint)
+    /// whose fresh term values other daemons import each round.
+    pub exports: Vec<(usize, usize)>,
+}
+
+/// How a fleet of chain shards is reached: in-process workers
+/// ([`LocalChainFleet`] — the oracle the wire paths are tested
+/// against) or `shard-serve` daemons over TCP
+/// ([`TcpShardExecutor`](crate::coordinator::transport::TcpShardExecutor)).
+/// The driver ([`ShardedChainDriver`]) speaks only this trait, so the
+/// loop body — and therefore the bit pattern of every result — is one
+/// piece of code for every backend.
+pub trait ChainFleetTransport {
+    /// Number of shard endpoints in the fleet.
+    fn shards(&self) -> usize;
+    /// Open an operator chain: ship `H` (un-scaled; workers apply
+    /// `−i·t` exactly like [`ChainDriver::from_packed`]) and assign
+    /// each daemon its contiguous row range.
+    fn open_op(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        rows: &[(usize, usize)],
+    ) -> Result<()>;
+    /// Run operator round `k` everywhere: broadcast the previous
+    /// round's prune verdict (empty for `k == 1`) and gather every
+    /// daemon's nonzero flags for the new pending term.
+    fn round_op(&mut self, k: usize, verdict: &[bool]) -> Result<Vec<Vec<bool>>>;
+    /// Finish an operator chain: broadcast the final verdict and gather
+    /// every daemon's term/sum row windows.
+    fn collect_op(&mut self, verdict: &[bool]) -> Result<Vec<ChainCollect>>;
+    /// Open a state chain: ship `H`, the tiling parameter and each
+    /// daemon's geometry + ψ0 hull.
+    fn open_state(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        tile: usize,
+        parts: Vec<StateShardPart>,
+    ) -> Result<()>;
+    /// Run state round `k` everywhere: deliver each daemon its halo
+    /// imports (term values at its out-of-range window rows,
+    /// concatenated in segment order) and gather its exports.
+    fn round_state(
+        &mut self,
+        k: usize,
+        imports: Vec<(Vec<f64>, Vec<f64>)>,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>>;
+    /// Finish a state chain: gather every daemon's own-row sum planes.
+    fn collect_state(&mut self) -> Result<Vec<(Vec<f64>, Vec<f64>)>>;
+}
+
+/// Storage window of diagonal `d` restricted to rows `[r0, r1)`:
+/// storage-frame indices `[lo, hi)`, or `None` when the diagonal has no
+/// element in those rows. Element `k` of diagonal `d` lives in row
+/// `k + max(0, −d)`.
+fn diag_window(n: usize, d: i64, r0: usize, r1: usize) -> Option<(usize, usize)> {
+    let row0 = (-d).max(0) as usize;
+    let len = DiagMatrix::diag_len(n, d);
+    let lo = r0.max(row0);
+    let hi = r1.min(row0 + len);
+    if lo >= hi {
+        None
+    } else {
+        Some((lo - row0, hi - row0))
+    }
+}
+
+/// `8 + 8·nnzd + 16·elems` — the wire footprint of one packed matrix
+/// (mirrors `coordinator::shard::matrix_wire_bytes`), the unit of the
+/// resend-every-iteration baseline the halo protocol is gated against.
+fn wire_bytes_model(nnzd: usize, elems: usize) -> u64 {
+    8 + 8 * nnzd as u64 + 16 * elems as u64
+}
+
+/// The halo-clipped execution plan of one offset structure: the full
+/// Minkowski plan's output table plus, per output diagonal, the
+/// contributions clipped to this worker's row window. Built once per
+/// distinct term offset set and replayed across the chain (the "plan
+/// the halo sets once per offset structure" contract).
+struct ClippedPlan {
+    out_offsets: Vec<i64>,
+    out_lens: Vec<usize>,
+    clipped: Vec<Vec<Contribution>>,
+}
+
+/// Daemon-side state of one sharded **operator** chain: the worker owns
+/// output rows `[r0, r1)` and keeps its row slice of the running term
+/// (full-length planes, zero outside its windows — indices stay global)
+/// and of the accumulated sum resident across all iterations.
+pub struct ChainShardWorker {
+    /// `A = −iHt`, scaled exactly like [`ChainDriver::from_packed`].
+    a: PackedDiagMatrix,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    iters: usize,
+    k: usize,
+    /// Finalized `term_{k−1}` (kept diagonals only; values valid inside
+    /// this worker's row windows, zero outside).
+    term: PackedDiagMatrix,
+    /// Scaled `term_k` candidate awaiting the global prune verdict.
+    pending: Option<PackedDiagMatrix>,
+    /// Accumulated operator sum (identity + every finalized term).
+    sum: DiagMatrix,
+    plans: HashMap<Vec<i64>, Arc<ClippedPlan>>,
+    /// Distinct offset structures planned (and halo-clipped).
+    pub plans_built: u64,
+    /// Rounds served by a previously clipped plan.
+    pub plan_reuses: u64,
+}
+
+impl ChainShardWorker {
+    /// Open an operator chain shard for rows `[r0, r1)` of
+    /// `exp(−iHt)` truncated at `iters` terms.
+    pub fn open(
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        r0: usize,
+        r1: usize,
+    ) -> Result<Self> {
+        let n = hp.dim();
+        ensure!(r0 <= r1 && r1 <= n, "row range [{r0}, {r1}) out of bounds for n={n}");
+        let mut a = hp.clone();
+        a.scale(-I * t);
+        Ok(ChainShardWorker {
+            a,
+            n,
+            r0,
+            r1,
+            iters,
+            k: 0,
+            term: PackedDiagMatrix::identity(n),
+            pending: None,
+            sum: DiagMatrix::identity(n),
+            plans: HashMap::new(),
+            plans_built: 0,
+            plan_reuses: 0,
+        })
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_run(&self) -> usize {
+        self.k
+    }
+
+    fn clipped_for(&mut self, key: Vec<i64>) -> Arc<ClippedPlan> {
+        if let Some(hit) = self.plans.get(&key) {
+            self.plan_reuses += 1;
+            return Arc::clone(hit);
+        }
+        let plan = plan_diag_mul(&self.term, &self.a);
+        let mut out_offsets = Vec::with_capacity(plan.outs.len());
+        let mut out_lens = Vec::with_capacity(plan.outs.len());
+        let mut clipped = Vec::with_capacity(plan.outs.len());
+        for out in &plan.outs {
+            out_offsets.push(out.offset);
+            out_lens.push(out.len);
+            clipped.push(match diag_window(self.n, out.offset, self.r0, self.r1) {
+                Some((lo, hi)) => out
+                    .contribs
+                    .iter()
+                    .filter_map(|c| clip_contribution(c, lo, hi))
+                    .collect(),
+                None => Vec::new(),
+            });
+        }
+        let cp = Arc::new(ClippedPlan {
+            out_offsets,
+            out_lens,
+            clipped,
+        });
+        self.plans_built += 1;
+        self.plans.insert(key, Arc::clone(&cp));
+        cp
+    }
+
+    /// Finalize the pending term under the global verdict (drop the
+    /// globally all-zero diagonals — the serial prune decision) and
+    /// accumulate it into the sum with the serial accumulation
+    /// primitive.
+    fn apply_verdict(&mut self, verdict: &[bool]) -> Result<()> {
+        let pending = match self.pending.take() {
+            Some(p) => p,
+            None => bail!("no pending term to finalize"),
+        };
+        ensure!(
+            verdict.len() == pending.nnzd(),
+            "verdict length {} does not match {} pending diagonals",
+            verdict.len(),
+            pending.nnzd()
+        );
+        let mut offsets = Vec::new();
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        for i in 0..pending.nnzd() {
+            if verdict[i] {
+                offsets.push(pending.offset_at(i));
+                re.extend_from_slice(pending.re_at(i));
+                im.extend_from_slice(pending.im_at(i));
+            }
+        }
+        self.term = PackedDiagMatrix::from_planes(self.n, offsets, re, im);
+        self.sum.add_assign_scaled_packed(&self.term, ONE);
+        Ok(())
+    }
+
+    /// Run round `k`: finalize `term_{k−1}` under `verdict` (empty and
+    /// ignored for `k == 1`, where `term_0 = I` needs no pruning),
+    /// compute this worker's row windows of
+    /// `pending_k = term_{k−1} · A / k`, and report which output
+    /// diagonals are nonzero here.
+    pub fn round(&mut self, k: usize, verdict: &[bool]) -> Result<Vec<bool>> {
+        ensure!(
+            k == self.k + 1 && k <= self.iters,
+            "round {k} out of order (ran {}, chain has {})",
+            self.k,
+            self.iters
+        );
+        if k > 1 {
+            self.apply_verdict(verdict)?;
+        }
+        self.k = k;
+        let cp = self.clipped_for(self.term.offsets().to_vec());
+        let total: usize = cp.out_lens.iter().sum();
+        let mut re = vec![0f64; total];
+        let mut im = vec![0f64; total];
+        let mut base = 0usize;
+        for (i, contribs) in cp.clipped.iter().enumerate() {
+            let len = cp.out_lens[i];
+            if !contribs.is_empty() {
+                fill_window(
+                    contribs,
+                    0,
+                    &self.term,
+                    &self.a,
+                    &mut re[base..base + len],
+                    &mut im[base..base + len],
+                );
+            }
+            base += len;
+        }
+        let mut pending =
+            PackedDiagMatrix::from_planes(self.n, cp.out_offsets.clone(), re, im);
+        pending.scale(ONE / k as f64);
+        let flags = (0..pending.nnzd())
+            .map(|i| {
+                pending
+                    .re_at(i)
+                    .iter()
+                    .zip(pending.im_at(i))
+                    .any(|(&r, &m)| r.abs() > ZERO_TOL || m.abs() > ZERO_TOL)
+            })
+            .collect();
+        self.pending = Some(pending);
+        Ok(flags)
+    }
+
+    /// Finish the chain: finalize the last term under the final verdict
+    /// and hand back this worker's row windows of term and sum.
+    pub fn collect(&mut self, verdict: &[bool]) -> Result<ChainCollect> {
+        ensure!(
+            self.k == self.iters,
+            "collect after {} of {} rounds",
+            self.k,
+            self.iters
+        );
+        if self.iters > 0 {
+            self.apply_verdict(verdict)?;
+        }
+        let mut out = ChainCollect::default();
+        for i in 0..self.term.nnzd() {
+            let d = self.term.offset_at(i);
+            if let Some((lo, hi)) = diag_window(self.n, d, self.r0, self.r1) {
+                out.term.push(ChainWindow {
+                    offset: d,
+                    w_lo: lo,
+                    re: self.term.re_at(i)[lo..hi].to_vec(),
+                    im: self.term.im_at(i)[lo..hi].to_vec(),
+                });
+            }
+        }
+        for d in self.sum.offsets() {
+            if let Some((lo, hi)) = diag_window(self.n, d, self.r0, self.r1) {
+                let vals = self.sum.diag(d).expect("offset just listed");
+                out.sum.push(ChainWindow {
+                    offset: d,
+                    w_lo: lo,
+                    re: vals[lo..hi].iter().map(|z| z.re).collect(),
+                    im: vals[lo..hi].iter().map(|z| z.im).collect(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Subtract rows `[r0, r1)` from a window interval: the (at most two)
+/// segments a state worker must import from its neighbours.
+fn subtract_rows(
+    win: Option<(usize, usize)>,
+    r0: usize,
+    r1: usize,
+) -> Vec<(usize, usize)> {
+    let Some((lo, hi)) = win else {
+        return Vec::new();
+    };
+    let mut segs = Vec::new();
+    if lo < r0.min(hi) {
+        segs.push((lo, r0.min(hi)));
+    }
+    if hi > r1.max(lo) {
+        segs.push((r1.max(lo), hi));
+    }
+    segs
+}
+
+/// Merge ascending-sorted, possibly overlapping segments.
+fn merge_segs(mut segs: Vec<(usize, usize)>) -> Vec<(usize, usize)> {
+    segs.sort_unstable();
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for (lo, hi) in segs {
+        if let Some(last) = out.last_mut() {
+            if lo <= last.1 {
+                last.1 = last.1.max(hi);
+                continue;
+            }
+        }
+        out.push((lo, hi));
+    }
+    out
+}
+
+/// Daemon-side state of one sharded **state** chain: the worker owns
+/// output rows `[r0, r1)` (a contiguous tile-task range of the SpMV
+/// plan) and keeps the term over its halo hull and the sum over its own
+/// rows resident across all iterations. Per round it imports only the
+/// boundary window segments and exports only the segments its
+/// neighbours read.
+pub struct StateChainShardWorker {
+    a: PackedDiagMatrix,
+    iters: usize,
+    k: usize,
+    tiles: TilePlan,
+    task_lo: usize,
+    task_hi: usize,
+    r0: usize,
+    r1: usize,
+    /// Hull start: the term planes below cover state rows
+    /// `[base, base + win_re.len())` = window ∪ own rows.
+    base: usize,
+    /// Current term over the hull (`term_0 = ψ0`).
+    win_re: Vec<f64>,
+    win_im: Vec<f64>,
+    /// Accumulated sum over own rows (`sum_0 = ψ0`).
+    sum_re: Vec<f64>,
+    sum_im: Vec<f64>,
+    /// Window segments outside own rows, imported each round.
+    import_segs: Vec<(usize, usize)>,
+    /// Own-row segments other daemons import, exported each round.
+    export_segs: Vec<(usize, usize)>,
+}
+
+/// The geometry a state shard derives from `(plan, tile, task range)`:
+/// own rows, halo window and the shipped hull. Pure in its inputs, so
+/// coordinator and worker land on identical segments.
+fn state_geometry(
+    tiles: &TilePlan,
+    task_lo: usize,
+    task_hi: usize,
+) -> (usize, usize, Option<(usize, usize)>, usize, usize) {
+    if task_lo >= task_hi {
+        return (0, 0, None, 0, 0);
+    }
+    let r0 = tiles.tasks[task_lo].lo;
+    let r1 = tiles.tasks[task_hi - 1].hi;
+    let win = state_window(tiles, task_lo, task_hi);
+    let (wlo, whi) = win.unwrap_or((r0, r1));
+    (r0, r1, win, wlo.min(r0), whi.max(r1))
+}
+
+impl StateChainShardWorker {
+    /// Open a state chain shard: rebuild the SpMV plan locally (pure in
+    /// `H`'s offsets and `tile`), take ownership of the tile range and
+    /// seed term and sum from the shipped ψ0 hull.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        tile: usize,
+        task_lo: usize,
+        task_hi: usize,
+        x_lo: usize,
+        x_re: Vec<f64>,
+        x_im: Vec<f64>,
+        exports: Vec<(usize, usize)>,
+    ) -> Result<Self> {
+        let mut a = hp.clone();
+        a.scale(-I * t);
+        let plan = plan_spmv(&a);
+        let tiles = tile_plan(&plan, tile);
+        ensure!(
+            task_lo <= task_hi && task_hi <= tiles.tasks.len(),
+            "state chain range [{task_lo}, {task_hi}) out of bounds: plan has {} tile tasks",
+            tiles.tasks.len()
+        );
+        let (r0, r1, win, base, hull_hi) = state_geometry(&tiles, task_lo, task_hi);
+        ensure!(
+            x_lo == base && x_re.len() == hull_hi - base && x_im.len() == x_re.len(),
+            "state chain ships ψ0[{x_lo}, {}) but the range needs [{base}, {hull_hi})",
+            x_lo + x_re.len()
+        );
+        for &(lo, hi) in &exports {
+            ensure!(
+                r0 <= lo && lo < hi && hi <= r1,
+                "export segment [{lo}, {hi}) outside own rows [{r0}, {r1})"
+            );
+        }
+        let sum_re = x_re[r0 - base..r1 - base].to_vec();
+        let sum_im = x_im[r0 - base..r1 - base].to_vec();
+        Ok(StateChainShardWorker {
+            a,
+            iters,
+            k: 0,
+            tiles,
+            task_lo,
+            task_hi,
+            r0,
+            r1,
+            base,
+            win_re: x_re,
+            win_im: x_im,
+            sum_re,
+            sum_im,
+            import_segs: subtract_rows(win, r0, r1),
+            export_segs: exports,
+        })
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_run(&self) -> usize {
+        self.k
+    }
+
+    /// Total imported elements per round (the worker's halo in-degree).
+    pub fn import_elems(&self) -> usize {
+        self.import_segs.iter().map(|&(lo, hi)| hi - lo).sum()
+    }
+
+    /// Run round `k`: scatter the imported halo values into the hull,
+    /// compute `term_k = (A · term_{k−1}) / k` over own rows with the
+    /// serial SpMV kernel, accumulate the sum, refresh the hull's
+    /// own-row region and return the export segment values.
+    pub fn round(
+        &mut self,
+        k: usize,
+        imp_re: &[f64],
+        imp_im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        ensure!(
+            k == self.k + 1 && k <= self.iters,
+            "state round {k} out of order (ran {}, chain has {})",
+            self.k,
+            self.iters
+        );
+        let want = self.import_elems();
+        ensure!(
+            imp_re.len() == want && imp_im.len() == want,
+            "halo import ships {} elements, range needs {want}",
+            imp_re.len()
+        );
+        let mut off = 0usize;
+        for &(lo, hi) in &self.import_segs {
+            let len = hi - lo;
+            let w = lo - self.base;
+            self.win_re[w..w + len].copy_from_slice(&imp_re[off..off + len]);
+            self.win_im[w..w + len].copy_from_slice(&imp_im[off..off + len]);
+            off += len;
+        }
+        let own = self.r1 - self.r0;
+        let mut v_re = vec![0f64; own];
+        let mut v_im = vec![0f64; own];
+        if self.task_lo < self.task_hi && own > 0 {
+            fill_state_range(
+                &self.tiles,
+                self.task_lo,
+                self.task_hi,
+                &self.a,
+                &self.win_re,
+                &self.win_im,
+                self.base,
+                &mut v_re,
+                &mut v_im,
+            );
+        }
+        let inv_k = 1.0 / k as f64;
+        for v in v_re.iter_mut() {
+            *v *= inv_k;
+        }
+        for v in v_im.iter_mut() {
+            *v *= inv_k;
+        }
+        for (s, v) in self.sum_re.iter_mut().zip(&v_re) {
+            *s += v;
+        }
+        for (s, v) in self.sum_im.iter_mut().zip(&v_im) {
+            *s += v;
+        }
+        if own > 0 {
+            let w = self.r0 - self.base;
+            self.win_re[w..w + own].copy_from_slice(&v_re);
+            self.win_im[w..w + own].copy_from_slice(&v_im);
+        }
+        let mut ex_re = Vec::new();
+        let mut ex_im = Vec::new();
+        for &(lo, hi) in &self.export_segs {
+            ex_re.extend_from_slice(&v_re[lo - self.r0..hi - self.r0]);
+            ex_im.extend_from_slice(&v_im[lo - self.r0..hi - self.r0]);
+        }
+        self.k = k;
+        Ok((ex_re, ex_im))
+    }
+
+    /// Finish the chain: hand back this worker's own-row sum planes.
+    pub fn collect(&self) -> Result<(Vec<f64>, Vec<f64>)> {
+        ensure!(
+            self.k == self.iters,
+            "state collect after {} of {} rounds",
+            self.k,
+            self.iters
+        );
+        Ok((self.sum_re.clone(), self.sum_im.clone()))
+    }
+}
+
+/// In-process fleet: one worker per shard, same address space. The
+/// oracle every wire backend is property-tested against, and the
+/// execution backend when a "fleet" of one falls back to local
+/// execution.
+#[derive(Default)]
+pub struct LocalChainFleet {
+    shards: usize,
+    op: Vec<ChainShardWorker>,
+    state: Vec<StateChainShardWorker>,
+}
+
+impl LocalChainFleet {
+    /// A fleet of `shards` in-process workers (clamped to ≥ 1).
+    pub fn new(shards: usize) -> Self {
+        LocalChainFleet {
+            shards: shards.max(1),
+            op: Vec::new(),
+            state: Vec::new(),
+        }
+    }
+
+    /// The operator-chain workers (test introspection).
+    pub fn op_workers(&self) -> &[ChainShardWorker] {
+        &self.op
+    }
+
+    /// The state-chain workers (test introspection).
+    pub fn state_workers(&self) -> &[StateChainShardWorker] {
+        &self.state
+    }
+}
+
+impl ChainFleetTransport for LocalChainFleet {
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn open_op(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        rows: &[(usize, usize)],
+    ) -> Result<()> {
+        ensure!(rows.len() == self.shards, "row partition does not match fleet size");
+        self.op = rows
+            .iter()
+            .map(|&(r0, r1)| ChainShardWorker::open(hp, t, iters, r0, r1))
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    fn round_op(&mut self, k: usize, verdict: &[bool]) -> Result<Vec<Vec<bool>>> {
+        self.op.iter_mut().map(|w| w.round(k, verdict)).collect()
+    }
+
+    fn collect_op(&mut self, verdict: &[bool]) -> Result<Vec<ChainCollect>> {
+        self.op.iter_mut().map(|w| w.collect(verdict)).collect()
+    }
+
+    fn open_state(
+        &mut self,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        tile: usize,
+        parts: Vec<StateShardPart>,
+    ) -> Result<()> {
+        ensure!(parts.len() == self.shards, "state partition does not match fleet size");
+        self.state = parts
+            .into_iter()
+            .map(|p| {
+                StateChainShardWorker::open(
+                    hp, t, iters, tile, p.task_lo, p.task_hi, p.x_lo, p.x_re, p.x_im,
+                    p.exports,
+                )
+            })
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    fn round_state(
+        &mut self,
+        k: usize,
+        imports: Vec<(Vec<f64>, Vec<f64>)>,
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        ensure!(imports.len() == self.state.len(), "halo import count mismatch");
+        self.state
+            .iter_mut()
+            .zip(imports)
+            .map(|(w, (re, im))| w.round(k, &re, &im))
+            .collect()
+    }
+
+    fn collect_state(&mut self) -> Result<Vec<(Vec<f64>, Vec<f64>)>> {
+        self.state.iter().map(|w| w.collect()).collect()
+    }
+}
+
+/// What one sharded chain run cost and saved on the wire, at the
+/// protocol-model level (actual wire bytes are counted by the TCP
+/// transport; these structural numbers feed the `chain_fleet` counters
+/// and the CI ratio gates).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChainRunStats {
+    /// Taylor rounds run (= iterations).
+    pub rounds: usize,
+    /// Fleet size the chain was sharded across.
+    pub shards: usize,
+    /// Halo elements exchanged per whole chain (state chains: imported
+    /// + exported f64 pairs; operator chains: 0 — only verdict bits
+    /// move between iterations).
+    pub halo_elems: u64,
+    /// What the PR-4 protocol would have shipped: the full operands
+    /// re-sent to a remote endpoint every iteration.
+    pub resend_model_bytes: u64,
+}
+
+/// The structural mirror of one offset pair's multiply plan: output
+/// table + multiply count, derived from zero-filled operands (plans are
+/// functions of structure, not values).
+struct StructPlan {
+    out_offsets: Vec<i64>,
+    mults: usize,
+}
+
+/// A zero-valued packed matrix with the given offset structure — the
+/// operand the coordinator plans against without holding any values.
+fn zeros_with_offsets(n: usize, offsets: &[i64]) -> PackedDiagMatrix {
+    let total: usize = offsets.iter().map(|&d| DiagMatrix::diag_len(n, d)).sum();
+    PackedDiagMatrix::from_planes(n, offsets.to_vec(), vec![0.0; total], vec![0.0; total])
+}
+
+/// Multiply-balanced contiguous row partition for an operator chain:
+/// each row is weighted by the number of `H` diagonals covering it (its
+/// per-product multiply cost, invariant across iterations because the
+/// left operand is read at the output row) and handed to the same
+/// greedy partitioner the tile layer uses.
+pub fn partition_rows(hp: &PackedDiagMatrix, shards: usize) -> Vec<(usize, usize)> {
+    let n = hp.dim();
+    let mut weights = vec![0usize; n];
+    for &d in hp.offsets() {
+        let row0 = (-d).max(0) as usize;
+        for w in weights.iter_mut().skip(row0).take(DiagMatrix::diag_len(n, d)) {
+            *w += 1;
+        }
+    }
+    let tasks: Vec<TileTask> = weights
+        .iter()
+        .enumerate()
+        .map(|(r, &w)| TileTask {
+            out_idx: 0,
+            lo: r,
+            hi: r + 1,
+            contribs: Vec::new(),
+            mults: w,
+        })
+        .collect();
+    let tiles = TilePlan { tile: 1, tasks };
+    shard_plan(&tiles, shards)
+        .ranges
+        .iter()
+        .map(|r| (r.task_lo, r.task_hi))
+        .collect()
+}
+
+/// The coordinator side of a sharded chain: drives a
+/// [`ChainFleetTransport`] through open → rounds → collect, tracks the
+/// offset structure so the per-iteration trace is reconstructed without
+/// any values crossing the wire, and memoizes structural plans across
+/// rounds (and across chains, when the driver is kept alive).
+#[derive(Default)]
+pub struct ShardedChainDriver {
+    plans: HashMap<Vec<i64>, Arc<StructPlan>>,
+    /// Distinct offset structures planned.
+    pub plans_built: u64,
+    /// Rounds served from the structural-plan memo.
+    pub plan_reuses: u64,
+}
+
+impl ShardedChainDriver {
+    /// A fresh driver with an empty structural-plan memo.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn struct_plan_for(
+        &mut self,
+        n: usize,
+        term_offsets: &[i64],
+        a_offsets: &[i64],
+    ) -> Arc<StructPlan> {
+        if let Some(hit) = self.plans.get(term_offsets) {
+            self.plan_reuses += 1;
+            return Arc::clone(hit);
+        }
+        let plan = plan_diag_mul(
+            &zeros_with_offsets(n, term_offsets),
+            &zeros_with_offsets(n, a_offsets),
+        );
+        let sp = Arc::new(StructPlan {
+            out_offsets: plan.offsets().to_vec(),
+            mults: plan.mults,
+        });
+        self.plans_built += 1;
+        self.plans.insert(term_offsets.to_vec(), Arc::clone(&sp));
+        sp
+    }
+
+    /// Run a whole sharded **operator** chain: `exp(−iHt)` truncated at
+    /// `iters` terms, rows partitioned across the fleet for the chain's
+    /// lifetime, one verdict round-trip per iteration, one value
+    /// collect at the end. Bitwise identical to
+    /// [`ChainDriver`]`::run` on the same inputs.
+    pub fn run_op<F: ChainFleetTransport>(
+        &mut self,
+        fleet: &mut F,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+    ) -> Result<(ChainOutcome, ChainRunStats)> {
+        let n = hp.dim();
+        let shards = fleet.shards();
+        let rows = partition_rows(hp, shards);
+        fleet.open_op(hp, t, iters, &rows)?;
+
+        let h_bytes = wire_bytes_model(hp.nnzd(), hp.stored_elements());
+        let mut resend_model_bytes = 0u64;
+        let mut prev_term_bytes = wire_bytes_model(1, n);
+        let a_offsets = hp.offsets().to_vec();
+        let mut term_offsets = vec![0i64];
+        let mut sum_offsets: BTreeSet<i64> = std::iter::once(0i64).collect();
+        let mut steps = Vec::with_capacity(iters);
+        let mut verdict: Vec<bool> = Vec::new();
+        for k in 1..=iters {
+            let sp = self.struct_plan_for(n, &term_offsets, &a_offsets);
+            let flags = fleet.round_op(k, &verdict)?;
+            ensure!(flags.len() == shards, "fleet returned {} flag sets", flags.len());
+            let mut merged = vec![false; sp.out_offsets.len()];
+            for f in &flags {
+                ensure!(
+                    f.len() == merged.len(),
+                    "shard verdict length {} does not match {} planned diagonals",
+                    f.len(),
+                    merged.len()
+                );
+                for (dst, &b) in merged.iter_mut().zip(f) {
+                    *dst |= b;
+                }
+            }
+            verdict = merged;
+            term_offsets = sp
+                .out_offsets
+                .iter()
+                .zip(&verdict)
+                .filter(|&(_, &keep)| keep)
+                .map(|(&d, _)| d)
+                .collect();
+            sum_offsets.extend(term_offsets.iter().copied());
+            let term_elements: usize = term_offsets
+                .iter()
+                .map(|&d| DiagMatrix::diag_len(n, d))
+                .sum();
+            // Recompute the builder-side storage counters from structure
+            // alone, with the same integer→f64 expression as
+            // `DiagMatrix::storage_saving` so the recorded f64 is
+            // bit-identical to the serial trace.
+            let sum_bytes: usize = sum_offsets
+                .iter()
+                .map(|&d| 8 + DiagMatrix::diag_len(n, d) * 16)
+                .sum();
+            steps.push(TaylorStep {
+                k,
+                term_nnzd: term_offsets.len(),
+                sum_nnzd: sum_offsets.len(),
+                term_elements,
+                sum_storage_saving: 1.0 - sum_bytes as f64 / (n * n * 16) as f64,
+                mults: sp.mults,
+            });
+            resend_model_bytes += prev_term_bytes + h_bytes;
+            prev_term_bytes = wire_bytes_model(term_offsets.len(), term_elements);
+        }
+        let collects = fleet.collect_op(&verdict)?;
+        ensure!(collects.len() == shards, "fleet returned {} collects", collects.len());
+
+        // Assemble the final term: zero planes per kept diagonal,
+        // overwritten by each worker's row windows (disjoint, jointly
+        // covering every row — overwrite, never add, so there is no
+        // signed-zero hazard).
+        let mut bases = HashMap::new();
+        let mut total = 0usize;
+        for &d in &term_offsets {
+            bases.insert(d, total);
+            total += DiagMatrix::diag_len(n, d);
+        }
+        let mut term_re = vec![0f64; total];
+        let mut term_im = vec![0f64; total];
+        for c in &collects {
+            for w in &c.term {
+                let Some(&base) = bases.get(&w.offset) else {
+                    bail!("collect returned unplanned term diagonal {}", w.offset);
+                };
+                let len = DiagMatrix::diag_len(n, w.offset);
+                ensure!(
+                    w.re.len() == w.im.len() && w.w_lo + w.re.len() <= len,
+                    "term window [{}, {}) overruns diagonal {} (len {len})",
+                    w.w_lo,
+                    w.w_lo + w.re.len(),
+                    w.offset
+                );
+                term_re[base + w.w_lo..base + w.w_lo + w.re.len()].copy_from_slice(&w.re);
+                term_im[base + w.w_lo..base + w.w_lo + w.im.len()].copy_from_slice(&w.im);
+            }
+        }
+        let term = PackedDiagMatrix::from_planes(n, term_offsets.clone(), term_re, term_im);
+
+        // Assemble the operator sum the same way, over the identity.
+        let mut op = DiagMatrix::identity(n);
+        for &d in &sum_offsets {
+            op.diag_mut(d);
+        }
+        for c in &collects {
+            for w in &c.sum {
+                ensure!(
+                    sum_offsets.contains(&w.offset),
+                    "collect returned unplanned sum diagonal {}",
+                    w.offset
+                );
+                let dst = op.diag_mut(w.offset);
+                ensure!(
+                    w.re.len() == w.im.len() && w.w_lo + w.re.len() <= dst.len(),
+                    "sum window [{}, {}) overruns diagonal {} (len {})",
+                    w.w_lo,
+                    w.w_lo + w.re.len(),
+                    w.offset,
+                    dst.len()
+                );
+                for (j, dst_v) in dst[w.w_lo..w.w_lo + w.re.len()].iter_mut().enumerate() {
+                    *dst_v = Complex::new(w.re[j], w.im[j]);
+                }
+            }
+        }
+
+        Ok((
+            ChainOutcome { op, term, steps },
+            ChainRunStats {
+                rounds: iters,
+                shards,
+                halo_elems: 0,
+                resend_model_bytes,
+            },
+        ))
+    }
+
+    /// Run a whole sharded **state** chain:
+    /// `ψ(t) = Σ_k (−iHt)^k ψ0 / k!`, tile ranges partitioned across
+    /// the fleet for the chain's lifetime, boundary halo segments
+    /// exchanged per iteration. Bitwise identical to
+    /// [`StateDriver`](crate::taylor::StateDriver)`::run` on the same
+    /// inputs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_state<F: ChainFleetTransport>(
+        &mut self,
+        fleet: &mut F,
+        hp: &PackedDiagMatrix,
+        t: f64,
+        iters: usize,
+        tile: usize,
+        psi_re: &[f64],
+        psi_im: &[f64],
+    ) -> Result<(StateOutcome, ChainRunStats)> {
+        let n = hp.dim();
+        ensure!(
+            psi_re.len() == n && psi_im.len() == n,
+            "state length {} does not match n={n}",
+            psi_re.len()
+        );
+        let shards = fleet.shards();
+        let plan = plan_spmv(hp);
+        let tiles = tile_plan(&plan, tile);
+        let ranges = shard_plan(&tiles, shards).ranges;
+
+        // Per-daemon geometry, then cross-daemon export sets: daemon j
+        // exports the union of every other daemon's imports that fall
+        // inside j's rows.
+        struct Geo {
+            task_lo: usize,
+            task_hi: usize,
+            r0: usize,
+            r1: usize,
+            base: usize,
+            hull_hi: usize,
+            imports: Vec<(usize, usize)>,
+        }
+        let geos: Vec<Geo> = ranges
+            .iter()
+            .map(|r| {
+                let (r0, r1, win, base, hull_hi) = state_geometry(&tiles, r.task_lo, r.task_hi);
+                Geo {
+                    task_lo: r.task_lo,
+                    task_hi: r.task_hi,
+                    r0,
+                    r1,
+                    base,
+                    hull_hi,
+                    imports: subtract_rows(win, r0, r1),
+                }
+            })
+            .collect();
+        let exports: Vec<Vec<(usize, usize)>> = geos
+            .iter()
+            .map(|g| {
+                let mut segs = Vec::new();
+                for other in &geos {
+                    for &(lo, hi) in &other.imports {
+                        let (lo, hi) = (lo.max(g.r0), hi.min(g.r1));
+                        if lo < hi {
+                            segs.push((lo, hi));
+                        }
+                    }
+                }
+                merge_segs(segs)
+            })
+            .collect();
+        let parts: Vec<StateShardPart> = geos
+            .iter()
+            .zip(&exports)
+            .map(|(g, ex)| StateShardPart {
+                task_lo: g.task_lo,
+                task_hi: g.task_hi,
+                x_lo: g.base,
+                x_re: psi_re[g.base..g.hull_hi].to_vec(),
+                x_im: psi_im[g.base..g.hull_hi].to_vec(),
+                exports: ex.clone(),
+            })
+            .collect();
+        fleet.open_state(hp, t, iters, tile, parts)?;
+
+        let h_bytes = wire_bytes_model(hp.nnzd(), hp.stored_elements());
+        let mut halo_elems = 0u64;
+        let mut steps = Vec::with_capacity(iters);
+        // Full-length halo staging planes: exports scatter in, imports
+        // gather out. Seeded with ψ0 = term_0.
+        let mut halo_re = psi_re.to_vec();
+        let mut halo_im = psi_im.to_vec();
+        for k in 1..=iters {
+            let imports: Vec<(Vec<f64>, Vec<f64>)> = geos
+                .iter()
+                .map(|g| {
+                    let mut re = Vec::new();
+                    let mut im = Vec::new();
+                    for &(lo, hi) in &g.imports {
+                        re.extend_from_slice(&halo_re[lo..hi]);
+                        im.extend_from_slice(&halo_im[lo..hi]);
+                    }
+                    halo_elems += re.len() as u64;
+                    (re, im)
+                })
+                .collect();
+            let replies = fleet.round_state(k, imports)?;
+            ensure!(replies.len() == shards, "fleet returned {} halo exports", replies.len());
+            for (g, ex, (re, im)) in geos
+                .iter()
+                .zip(&exports)
+                .zip(replies)
+                .map(|((g, e), r)| (g, e, r))
+            {
+                let want: usize = ex.iter().map(|&(lo, hi)| hi - lo).sum();
+                ensure!(
+                    re.len() == want && im.len() == want,
+                    "daemon for rows [{}, {}) exported {} of {want} halo elements",
+                    g.r0,
+                    g.r1,
+                    re.len()
+                );
+                halo_elems += want as u64;
+                let mut off = 0usize;
+                for &(lo, hi) in ex {
+                    let len = hi - lo;
+                    halo_re[lo..hi].copy_from_slice(&re[off..off + len]);
+                    halo_im[lo..hi].copy_from_slice(&im[off..off + len]);
+                    off += len;
+                }
+            }
+            steps.push(StateStep { k, mults: plan.mults });
+        }
+        let sums = fleet.collect_state()?;
+        ensure!(sums.len() == shards, "fleet returned {} state collects", sums.len());
+        let mut psi_out_re = Vec::with_capacity(n);
+        let mut psi_out_im = Vec::with_capacity(n);
+        for (g, (re, im)) in geos.iter().zip(sums) {
+            ensure!(
+                re.len() == g.r1 - g.r0 && im.len() == re.len(),
+                "daemon for rows [{}, {}) returned {} sum elements",
+                g.r0,
+                g.r1,
+                re.len()
+            );
+            psi_out_re.extend_from_slice(&re);
+            psi_out_im.extend_from_slice(&im);
+        }
+        ensure!(
+            psi_out_re.len() == n,
+            "stitched state covers {} of {n} rows",
+            psi_out_re.len()
+        );
+        Ok((
+            StateOutcome {
+                psi_re: psi_out_re,
+                psi_im: psi_out_im,
+                steps,
+            },
+            ChainRunStats {
+                rounds: iters,
+                shards,
+                halo_elems,
+                resend_model_bytes: iters as u64 * (h_bytes + 16 * n as u64),
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::ZERO;
+    use crate::taylor::{apply_expm, expm_diag, iters_for};
+    use crate::testutil::XorShift64;
+
+    fn band(n: usize, hw: i64) -> DiagMatrix {
+        let mut h = DiagMatrix::zeros(n);
+        for d in -hw..=hw {
+            let len = DiagMatrix::diag_len(n, d);
+            h.set_diag(d, vec![Complex::new(1.0, 0.2 * d as f64); len]);
+        }
+        h
+    }
+
+    fn assert_steps_eq(got: &[TaylorStep], want: &[TaylorStep]) {
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.k, w.k);
+            assert_eq!(g.term_nnzd, w.term_nnzd, "k={}", g.k);
+            assert_eq!(g.sum_nnzd, w.sum_nnzd, "k={}", g.k);
+            assert_eq!(g.term_elements, w.term_elements, "k={}", g.k);
+            assert_eq!(g.mults, w.mults, "k={}", g.k);
+            assert_eq!(
+                g.sum_storage_saving.to_bits(),
+                w.sum_storage_saving.to_bits(),
+                "k={}",
+                g.k
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_op_chain_matches_serial_bitwise() {
+        let h = band(12, 2);
+        let serial = expm_diag(&h, 0.4, 8);
+        let hp = h.freeze();
+        for shards in [1usize, 2, 3, 5] {
+            let mut fleet = LocalChainFleet::new(shards);
+            let mut driver = ShardedChainDriver::new();
+            let (out, stats) = driver.run_op(&mut fleet, &hp, 0.4, 8).unwrap();
+            assert_eq!(out.op, serial.op, "shards={shards}");
+            assert!(out.term.bit_eq(&serial.term), "shards={shards}");
+            assert_steps_eq(&out.steps, &serial.steps);
+            assert_eq!(stats.rounds, 8);
+            assert_eq!(stats.shards, shards);
+            assert_eq!(stats.halo_elems, 0, "operator halos carry no values");
+            assert!(stats.resend_model_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn sharded_op_chain_plans_halo_sets_once_per_structure() {
+        // Band offsets saturate after a few products: both the
+        // coordinator's structural plans and every worker's clipped
+        // plans must be reused, not rebuilt, for the stabilized tail.
+        let h = band(12, 2).freeze();
+        let mut fleet = LocalChainFleet::new(3);
+        let mut driver = ShardedChainDriver::new();
+        driver.run_op(&mut fleet, &h, 0.4, 8).unwrap();
+        assert!(driver.plans_built < 8, "built {} structural plans", driver.plans_built);
+        assert!(driver.plan_reuses >= 1, "no structural plan reuse");
+        assert_eq!(driver.plans_built + driver.plan_reuses, 8);
+        for w in fleet.op_workers() {
+            assert!(w.plan_reuses >= 1, "worker rebuilt every clipped plan");
+            assert_eq!(w.plans_built + w.plan_reuses, 8);
+        }
+    }
+
+    #[test]
+    fn sharded_op_chain_random_property() {
+        let mut rng = XorShift64::new(0x5ead);
+        for case in 0..12 {
+            let n = rng.gen_range(4, 24);
+            let mut h = DiagMatrix::zeros(n);
+            let ndiags = rng.gen_range(1, 5);
+            for _ in 0..ndiags {
+                let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+                let len = DiagMatrix::diag_len(n, d);
+                let vals: Vec<Complex> = (0..len)
+                    .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                    .collect();
+                h.set_diag(d, vals);
+            }
+            let iters = rng.gen_range(1, 6);
+            let shards = rng.gen_range(1, 5);
+            let serial = expm_diag(&h, 0.3, iters);
+            let mut fleet = LocalChainFleet::new(shards);
+            let mut driver = ShardedChainDriver::new();
+            let (out, _) = driver.run_op(&mut fleet, &h.freeze(), 0.3, iters).unwrap();
+            assert_eq!(
+                out.op, serial.op,
+                "case {case}: n={n} iters={iters} shards={shards}"
+            );
+            assert!(
+                out.term.bit_eq(&serial.term),
+                "case {case}: n={n} iters={iters} shards={shards}"
+            );
+            assert_steps_eq(&out.steps, &serial.steps);
+        }
+    }
+
+    #[test]
+    fn sharded_op_chain_survives_more_shards_than_rows() {
+        // n = 4 rows across 7 shards: trailing daemons own empty row
+        // ranges and must stay protocol-silent without breaking the
+        // stitch.
+        let h = band(4, 1);
+        let serial = expm_diag(&h, 0.5, 4);
+        let mut fleet = LocalChainFleet::new(7);
+        let mut driver = ShardedChainDriver::new();
+        let (out, _) = driver.run_op(&mut fleet, &h.freeze(), 0.5, 4).unwrap();
+        assert_eq!(out.op, serial.op);
+        assert!(out.term.bit_eq(&serial.term));
+    }
+
+    #[test]
+    fn sharded_op_chain_zero_hamiltonian() {
+        // exp(0) = I: the degenerate structure (no diagonals at all)
+        // must flow through open/round/collect unharmed.
+        let h = DiagMatrix::zeros(6);
+        let serial = expm_diag(&h, 1.0, 3);
+        let mut fleet = LocalChainFleet::new(2);
+        let mut driver = ShardedChainDriver::new();
+        let (out, _) = driver.run_op(&mut fleet, &h.freeze(), 1.0, 3).unwrap();
+        assert_eq!(out.op, serial.op);
+        assert!(out.term.bit_eq(&serial.term));
+        assert_steps_eq(&out.steps, &serial.steps);
+    }
+
+    #[test]
+    fn sharded_state_chain_matches_serial_bitwise() {
+        let h = crate::ham::tfim::tfim(5, 1.0, 0.7).matrix;
+        let t = 0.05;
+        let n = h.dim();
+        let psi0: Vec<Complex> = (0..n)
+            .map(|k| Complex::new(((k + 1) as f64).recip(), 0.1 * k as f64 / n as f64))
+            .collect();
+        let iters = iters_for(&h, t, 1e-8);
+        let serial = apply_expm(&h, t, &psi0, 1e-8);
+        let (x_re, x_im) = crate::linalg::split_state(&psi0);
+        let hp = h.freeze();
+        for shards in [1usize, 2, 3, 5] {
+            for tile in [4usize, 16, 1 << 20] {
+                let mut fleet = LocalChainFleet::new(shards);
+                let mut driver = ShardedChainDriver::new();
+                let (out, stats) = driver
+                    .run_state(&mut fleet, &hp, t, iters, tile, &x_re, &x_im)
+                    .unwrap();
+                let got = crate::linalg::join_state(&out.psi_re, &out.psi_im);
+                for (g, w) in got.iter().zip(&serial.psi) {
+                    assert_eq!(g.re.to_bits(), w.re.to_bits(), "shards={shards} tile={tile}");
+                    assert_eq!(g.im.to_bits(), w.im.to_bits(), "shards={shards} tile={tile}");
+                }
+                assert_eq!(out.steps, serial.steps, "shards={shards} tile={tile}");
+                assert_eq!(stats.rounds, iters);
+                if shards > 1 && tile < n {
+                    assert!(stats.halo_elems > 0, "multi-shard chain exchanged no halos");
+                }
+                // The whole point: halo traffic a small fraction of
+                // re-sending the operands every iteration.
+                assert!(
+                    16 * stats.halo_elems <= stats.resend_model_bytes,
+                    "halo {} elems vs resend model {} bytes",
+                    stats.halo_elems,
+                    stats.resend_model_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_state_chain_random_property() {
+        let mut rng = XorShift64::new(0x57a7e);
+        for case in 0..12 {
+            let n = rng.gen_range(4, 40);
+            let mut h = DiagMatrix::zeros(n);
+            let ndiags = rng.gen_range(1, 6);
+            for _ in 0..ndiags {
+                let d = rng.gen_range_i64(-(n as i64 - 1), n as i64);
+                let len = DiagMatrix::diag_len(n, d);
+                let vals: Vec<Complex> = (0..len)
+                    .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                    .collect();
+                h.set_diag(d, vals);
+            }
+            let psi0: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.gen_f64() - 0.5, rng.gen_f64() - 0.5))
+                .collect();
+            let iters = rng.gen_range(1, 6);
+            let shards = rng.gen_range(1, 6);
+            let tile = rng.gen_range(1, n + 4);
+            // apply_expm derives its own iteration depth from `tol`;
+            // drive the serial loop at the test's depth instead.
+            let mut sc = crate::coordinator::shard::ShardCoordinator::single();
+            let serial =
+                crate::taylor::apply_expm_sharded(&h, 0.1, iters, &psi0, &mut sc).unwrap();
+            let (x_re, x_im) = crate::linalg::split_state(&psi0);
+            let mut fleet = LocalChainFleet::new(shards);
+            let mut driver = ShardedChainDriver::new();
+            let (out, _) = driver
+                .run_state(&mut fleet, &h.freeze(), 0.1, iters, tile, &x_re, &x_im)
+                .unwrap();
+            let got = crate::linalg::join_state(&out.psi_re, &out.psi_im);
+            for (j, (g, w)) in got.iter().zip(&serial.psi).enumerate() {
+                assert_eq!(
+                    g.re.to_bits(),
+                    w.re.to_bits(),
+                    "case {case}: n={n} iters={iters} shards={shards} tile={tile} row {j}"
+                );
+                assert_eq!(g.im.to_bits(), w.im.to_bits(), "case {case}");
+            }
+            assert_eq!(out.steps, serial.steps, "case {case}");
+        }
+    }
+
+    #[test]
+    fn sharded_state_chain_zero_state_and_zero_h() {
+        let h = DiagMatrix::zeros(5);
+        let psi0 = vec![ZERO; 5];
+        let (x_re, x_im) = crate::linalg::split_state(&psi0);
+        let mut fleet = LocalChainFleet::new(3);
+        let mut driver = ShardedChainDriver::new();
+        let (out, stats) = driver
+            .run_state(&mut fleet, &h.freeze(), 1.0, 2, 2, &x_re, &x_im)
+            .unwrap();
+        assert_eq!(out.psi_re, vec![0.0; 5]);
+        assert_eq!(out.psi_im, vec![0.0; 5]);
+        assert_eq!(stats.rounds, 2);
+    }
+
+    #[test]
+    fn partition_rows_is_contiguous_and_covering() {
+        let h = band(20, 3).freeze();
+        for shards in [1usize, 2, 3, 7, 25] {
+            let rows = partition_rows(&h, shards);
+            assert_eq!(rows.len(), shards.max(1));
+            assert_eq!(rows[0].0, 0);
+            assert_eq!(rows.last().unwrap().1, 20);
+            for w in rows.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_rejects_protocol_misuse() {
+        let h = band(8, 1).freeze();
+        let mut w = ChainShardWorker::open(&h, 0.3, 2, 0, 8).unwrap();
+        // Round 2 before round 1.
+        assert!(w.round(2, &[]).is_err());
+        let flags = w.round(1, &[]).unwrap();
+        assert_eq!(flags.len(), 3, "I · A has A's three diagonals");
+        // Collect before all rounds ran.
+        assert!(w.collect(&flags).is_err());
+        // Wrong verdict arity for the pending three-diagonal term.
+        assert!(w.round(2, &[true]).is_err());
+    }
+}

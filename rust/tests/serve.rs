@@ -342,18 +342,31 @@ fn fleet_backed_tcp_serve_is_bitwise_identical_and_logs_round_trips() {
 
     let stats = server.stop();
     assert_eq!(stats.jobs, 3);
-    let (shard, endpoints) = server.fleet();
+    let fleet = server.fleet();
     assert!(
-        shard.sharded_multiplies >= 1,
-        "served multiplies must have fanned across the fleet: {shard:?}"
+        fleet.shard.sharded_multiplies >= 1,
+        "served multiplies must have fanned across the fleet: {:?}",
+        fleet.shard
     );
-    assert_eq!(endpoints.len(), 2, "both endpoints must be reported");
-    for io in &endpoints {
+    assert_eq!(fleet.endpoints.len(), 2, "both endpoints must be reported");
+    for io in &fleet.endpoints {
         assert!(
             io.round_trips > 0,
             "every shard endpoint must have served round-trips: {io:?}"
         );
     }
+    // Both chain kinds must have gone down the wire-v6 sharded path —
+    // one shard per daemon, halo traffic between iterations.
+    assert_eq!(fleet.chain.sharded_chains, 1, "{:?}", fleet.chain);
+    assert_eq!(fleet.chain.sharded_state_chains, 1, "{:?}", fleet.chain);
+    assert_eq!(fleet.chain.fleet_shards, 4, "{:?}", fleet.chain);
+    assert!(fleet.chain.rounds >= 2 * ITERS as u64, "{:?}", fleet.chain);
+    assert!(fleet.chain.halo_bytes > 0, "{:?}", fleet.chain);
+    assert!(
+        fleet.chain.halo_bytes < fleet.chain.resend_model_bytes,
+        "halo traffic must beat the resend-every-iteration model: {:?}",
+        fleet.chain
+    );
     s1.stop();
     s2.stop();
 }
